@@ -1,0 +1,260 @@
+"""AOT compiler: lower every Layer-2 graph to HLO text + manifest.
+
+Runs ONCE at build time (``make artifacts``); the Rust coordinator is
+self-contained afterwards.  Emits into ``artifacts/``:
+
+  * ``<name>.hlo.txt``      — one HLO-text module per (graph, static shape)
+  * ``manifest.json``       — index the Rust runtime loads (name, kind,
+                              shapes, arch metadata)
+  * ``fixtures/*.json``     — oracle fixtures for Rust differential tests
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            [--scale tiny|paper|all] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Artifact plan
+# ---------------------------------------------------------------------------
+
+# (arch, train_batch, eval_n, local_steps variants)
+TINY_MODELS = [
+    ("mlp_tiny", 8, 64, (1,)),
+    ("mlp_mnistlike", 25, 512, (1,)),
+    ("mlp_cifarlike", 50, 512, (1, 3)),
+    ("mlp_femnistlike", 50, 512, (1, 3)),
+]
+
+PAPER_MODELS = [
+    ("mnist_cnn", 25, 512, (1,)),
+    ("cifar_cnn", 50, 512, (1, 3)),
+    ("femnist_cnn", 50, 512, (1, 3)),
+]
+
+# aggregation variants per arch: list of (m = s+1, bhat)
+TINY_AGG = {
+    "mlp_tiny": [(8, 2)],
+    "mlp_mnistlike": [(16, 4), (16, 5), (16, 6), (16, 7)],
+    "mlp_cifarlike": [(7, 0), (7, 1), (7, 2), (7, 3), (11, 2), (11, 3), (20, 2), (20, 3)],
+    "mlp_femnistlike": [(7, 0), (7, 3)],
+}
+
+PAPER_AGG = {
+    "mnist_cnn": [(16, 6), (16, 7)],
+    "cifar_cnn": [(7, 3), (20, 3)],
+    "femnist_cnn": [(7, 0), (7, 3)],
+}
+
+
+def plan(scale: str):
+    models, aggs = [], {}
+    if scale in ("tiny", "all"):
+        models += TINY_MODELS
+        aggs.update(TINY_AGG)
+    if scale in ("paper", "all"):
+        models += PAPER_MODELS
+        aggs.update(PAPER_AGG)
+    return models, aggs
+
+
+# ---------------------------------------------------------------------------
+# Emission
+# ---------------------------------------------------------------------------
+
+
+def emit(out_dir: str, name: str, text: str, entry: dict, manifest: list,
+         force: bool) -> None:
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    entry = dict(entry, name=name, file=f"{name}.hlo.txt",
+                 sha256=hashlib.sha256(text.encode()).hexdigest()[:16])
+    manifest.append(entry)
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                print(f"  = {name} (unchanged)")
+                return
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  + {name} ({len(text)} chars)")
+
+
+def build_models(out_dir: str, models, manifest: list, force: bool) -> None:
+    for arch, batch, eval_n, ls_variants in models:
+        spec = M.SPECS[arch]
+        d = M.param_count(spec)
+        ishape = list(spec.input_shape)
+        base = dict(arch=arch, d=d, input_shape=ishape, classes=spec.classes)
+
+        emit(out_dir, f"init_{arch}",
+             lower(M.make_init_fn(spec), i32()),
+             dict(base, kind="init"), manifest, force)
+
+        for ls in ls_variants:
+            if ls == 1:
+                xs = f32(batch, *ishape)
+                ys = i32(batch)
+            else:
+                xs = f32(ls, batch, *ishape)
+                ys = i32(ls, batch)
+            emit(out_dir, f"train_{arch}_b{batch}_k{ls}",
+                 lower(M.make_train_step_fn(spec, ls),
+                       f32(d), f32(d), xs, ys, f32(), f32(), f32()),
+                 dict(base, kind="train", batch=batch, local_steps=ls),
+                 manifest, force)
+
+        emit(out_dir, f"eval_{arch}_n{eval_n}",
+             lower(M.make_eval_fn(spec), f32(d), f32(eval_n, *ishape), i32(eval_n)),
+             dict(base, kind="eval", eval_n=eval_n), manifest, force)
+
+
+def build_aggregates(out_dir: str, models, aggs, manifest: list, force: bool) -> None:
+    arch_d = {arch: M.param_count(M.SPECS[arch]) for arch, *_ in models}
+    for arch, combos in aggs.items():
+        if arch not in arch_d:
+            continue
+        d = arch_d[arch]
+        for m, bhat in combos:
+            emit(out_dir, f"aggregate_{arch}_m{m}_b{bhat}",
+                 lower(M.make_aggregate_fn(bhat), f32(m, d)),
+                 dict(kind="aggregate", arch=arch, d=d, m=m, bhat=bhat),
+                 manifest, force)
+
+
+# ---------------------------------------------------------------------------
+# Fixtures (oracle outputs for Rust differential tests)
+# ---------------------------------------------------------------------------
+
+
+def agg_fixtures() -> dict:
+    """Aggregation-rule fixtures: random inputs + jnp-oracle outputs."""
+    rng = np.random.default_rng(2025)
+    cases = []
+    for (m, d, b) in [(5, 8, 1), (7, 16, 2), (7, 16, 3), (9, 33, 2),
+                      (16, 24, 7), (16, 24, 5), (20, 12, 3), (4, 6, 1),
+                      (8, 2048, 2), (3, 5, 1), (12, 40, 0)]:
+        x = rng.normal(scale=2.0, size=(m, d)).astype(np.float32)
+        xj = jnp.asarray(x)
+        case = {
+            "m": m, "d": d, "b": b,
+            "x": [float(v) for v in x.reshape(-1)],
+            "mean": [float(v) for v in np.asarray(ref.mean(xj)).reshape(-1)],
+            "cwmed": [float(v) for v in np.asarray(ref.cwmed(xj)).reshape(-1)],
+        }
+        if m - 2 * b >= 1:
+            case["cwtm"] = [float(v) for v in np.asarray(ref.cwtm(xj, b)).reshape(-1)]
+            case["nnm"] = [float(v) for v in np.asarray(ref.nnm(xj, b)).reshape(-1)]
+            case["nnm_cwtm"] = [float(v) for v in np.asarray(ref.nnm_cwtm(xj, b)).reshape(-1)]
+        if m - b - 2 >= 1:
+            case["krum"] = [float(v) for v in np.asarray(ref.krum(xj, b)).reshape(-1)]
+        case["geomedian"] = [float(v) for v in np.asarray(ref.geometric_median(xj)).reshape(-1)]
+        cases.append(case)
+    return {"cases": cases}
+
+
+def model_fixtures() -> dict:
+    """Native-MLP cross-check fixtures (Rust model::native vs jnp)."""
+    out = {"cases": []}
+    for arch in ("mlp_tiny", "mlp_mnistlike"):
+        spec = M.SPECS[arch]
+        d = M.param_count(spec)
+        (params,) = M.make_init_fn(spec)(jnp.int32(7))
+        rng = np.random.default_rng(11)
+        n = 4
+        x = rng.normal(size=(n, *spec.input_shape)).astype(np.float32)
+        y = rng.integers(0, spec.classes, size=(n,)).astype(np.int32)
+        logp = M.forward(spec, params, jnp.asarray(x))
+        correct, loss_sum = M.make_eval_fn(spec)(params, jnp.asarray(x), jnp.asarray(y))
+        out["cases"].append({
+            "arch": arch, "d": d, "n": n,
+            "din": int(spec.input_shape[0]), "classes": spec.classes,
+            "params": [float(v) for v in np.asarray(params).reshape(-1)],
+            "x": [float(v) for v in x.reshape(-1)],
+            "y": [int(v) for v in y],
+            "logp": [float(v) for v in np.asarray(logp).reshape(-1)],
+            "correct": float(correct), "loss_sum": float(loss_sum),
+        })
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--scale", default="tiny", choices=["tiny", "paper", "all"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "fixtures"), exist_ok=True)
+
+    models, aggs = plan(args.scale)
+    manifest: list[dict] = []
+
+    print(f"[aot] lowering models ({args.scale}) -> {out_dir}")
+    build_models(out_dir, models, manifest, args.force)
+    print("[aot] lowering aggregation (Pallas NNM∘CWTM)")
+    build_aggregates(out_dir, models, aggs, manifest, args.force)
+
+    print("[aot] writing fixtures")
+    with open(os.path.join(out_dir, "fixtures", "agg_fixtures.json"), "w") as f:
+        json.dump(agg_fixtures(), f)
+    with open(os.path.join(out_dir, "fixtures", "model_fixtures.json"), "w") as f:
+        json.dump(model_fixtures(), f)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "scale": args.scale, "artifacts": manifest}, f, indent=1)
+    print(f"[aot] manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,141 @@
+"""Pallas kernels for the RPEL aggregation hot path: R = CWTM ∘ NNM.
+
+Layer-1 of the stack.  Two kernels, both tiled over the model dimension
+``d`` (the only large axis — ``m = s + 1`` is at most a few dozen):
+
+  1. ``pairwise_sqdist_pallas`` — the [m, m] squared-distance matrix,
+     accumulated tile-by-tile over ``d``.
+  2. ``mix_trim_pallas`` — given the NNM row-stochastic mixing matrix W
+     ([m, m], produced from the distance matrix by plain-jnp top-k logic
+     that lowers into the same HLO), computes ``mixed = W @ X`` on each
+     tile and immediately applies the coordinate-wise trimmed mean,
+     writing a [d] output without materializing ``mixed`` in HBM.
+
+TPU thinking (see DESIGN.md §Hardware-Adaptation): the tile size is chosen
+so each block's working set (X tile [m, TILE_D] + W [m, m] + out [TILE_D])
+stays well inside a 16 MiB VMEM budget; the ``W @ X`` contraction is an
+(m×m)(m×TILE_D) matmul shaped for the MXU; the trim is a sort along the
+small replica axis.  On this testbed the kernels are lowered with
+``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic custom
+calls), which preserves the exact blocking structure and numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 2048 f32 lanes x m<=64 rows ≈ 512 KiB VMEM for the X tile — comfortably
+# double-bufferable inside 16 MiB.  Multiple of 128 for TPU lane tiling.
+DEFAULT_TILE_D = 2048
+
+
+def _sqdist_kernel(x_ref, out_ref):
+    """Accumulate partial pairwise squared distances for one d-tile."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]  # [m, tile_d]
+    diff = x[:, None, :] - x[None, :, :]  # [m, m, tile_d]
+    out_ref[...] += jnp.sum(diff * diff, axis=-1)
+
+
+def _mix_trim_kernel(w_ref, x_ref, out_ref, *, b: int):
+    """One d-tile of CWTM_b(W @ X): mix rows, sort the replica axis,
+    trim b from each end, average."""
+    mixed = jnp.dot(w_ref[...], x_ref[...])  # [m, tile_d] — MXU matmul
+    m = mixed.shape[0]
+    srt = jnp.sort(mixed, axis=0)
+    out_ref[...] = jnp.mean(srt[b : m - b, :], axis=0)
+
+
+def _pad_d(x: jax.Array, tile_d: int) -> tuple[jax.Array, int]:
+    """Zero-pad the trailing axis of [m, d] to a multiple of tile_d."""
+    d = x.shape[-1]
+    dp = ((d + tile_d - 1) // tile_d) * tile_d
+    if dp != d:
+        x = jnp.pad(x, ((0, 0), (0, dp - d)))
+    return x, dp
+
+
+def pairwise_sqdist_pallas(x: jax.Array, tile_d: int = DEFAULT_TILE_D) -> jax.Array:
+    """[m, d] -> [m, m] squared L2 distances, tiled over d.
+
+    Zero padding of the d axis is harmless: padded coordinates contribute
+    zero to every pairwise difference.
+    """
+    m, d = x.shape
+    tile_d = min(tile_d, max(d, 1))
+    xp, dp = _pad_d(x, tile_d)
+    grid = dp // tile_d
+    return pl.pallas_call(
+        _sqdist_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), x.dtype),
+        interpret=True,
+    )(xp)
+
+
+def mix_trim_pallas(
+    w: jax.Array, x: jax.Array, b: int, tile_d: int = DEFAULT_TILE_D
+) -> jax.Array:
+    """CWTM_b(W @ X): ([m, m], [m, d]) -> [d], tiled over d.
+
+    The trimmed mean of each padded coordinate is computed on garbage zeros
+    and sliced off afterwards, so padding never reaches the caller.
+    """
+    m, d = x.shape
+    if m - 2 * b < 1:
+        raise ValueError(f"CWTM needs m - 2b >= 1, got m={m}, b={b}")
+    tile_d = min(tile_d, max(d, 1))
+    xp, dp = _pad_d(x, tile_d)
+    grid = dp // tile_d
+    out = pl.pallas_call(
+        functools.partial(_mix_trim_kernel, b=b),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, tile_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), x.dtype),
+        interpret=True,
+    )(w, xp)
+    return out[:d]
+
+
+def nnm_weights_from_dist(dist: jax.Array, b: int, dtype=jnp.float32) -> jax.Array:
+    """Build the NNM row-stochastic mixing matrix from a distance matrix.
+
+    Runs in plain jnp — the matrix is [m, m] (tiny) and top-k selection is
+    control-flow-ish, so there is no benefit to a kernel.  Tie-breaking by
+    index order matches ``ref.nnm_weights`` (stable argsort).
+    """
+    m = dist.shape[0]
+    k = m - b
+    if k < 1:
+        raise ValueError(f"NNM needs m - b >= 1, got m={m}, b={b}")
+    order = jnp.argsort(dist, axis=1, stable=True)
+    sel = order[:, :k]
+    w = jnp.zeros((m, m), dtype=dtype)
+    rows = jnp.repeat(jnp.arange(m), k)
+    return w.at[rows, sel.reshape(-1)].set(jnp.asarray(1.0 / k, dtype=dtype))
+
+
+def nnm_cwtm_pallas(x: jax.Array, b: int, tile_d: int = DEFAULT_TILE_D) -> jax.Array:
+    """The full aggregation rule R(X) = CWTM_b(NNM_b(X)) : [m, d] -> [d].
+
+    This is the function ``aot.py`` lowers to HLO (one executable per
+    static (m, d, b) triple); the Rust coordinator calls it every round
+    for every honest node.
+    """
+    dist = pairwise_sqdist_pallas(x, tile_d=tile_d)
+    w = nnm_weights_from_dist(dist, b, dtype=x.dtype)
+    return mix_trim_pallas(w, x, b, tile_d=tile_d)

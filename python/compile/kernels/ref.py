@@ -1,0 +1,122 @@
+"""Pure-jnp reference oracle for the aggregation hot path.
+
+This module is the single source of truth for numerical correctness of:
+
+  * the Pallas kernels in ``nnm_cwtm.py`` (pytest + hypothesis sweeps), and
+  * the Rust-native aggregators (via JSON fixtures emitted by ``aot.py``).
+
+Everything here follows the paper's definitions:
+
+  * NNM (Nearest-Neighbor Mixing, Allouah et al. 2023): each input vector is
+    replaced by the average of its ``m - b`` nearest neighbors (L2 distance,
+    including itself).
+  * CWTM (coordinate-wise trimmed mean, Yin et al. 2018): per coordinate,
+    drop the ``b`` largest and ``b`` smallest values and average the rest.
+  * The paper's aggregation rule R = CWTM ∘ NNM (Section 6.1), which is
+    (s, b̂, κ)-robust with κ = O(b̂ / (s+1)) (Corollary 5.7 remark).
+
+All functions take ``X`` of shape ``[m, d]`` where ``m = s + 1`` (the
+pulling node's own half-step model first, then the ``s`` pulled models).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(x: jax.Array) -> jax.Array:
+    """Squared L2 distance matrix, shape [m, m].
+
+    Uses the explicit difference form (not the Gram trick) so it is exact
+    for float32 inputs — the oracle must not lose precision to cancellation.
+    """
+    diff = x[:, None, :] - x[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def nnm_weights(x: jax.Array, b: int) -> jax.Array:
+    """Row-stochastic mixing matrix W of the NNM pre-aggregation.
+
+    ``W[i, j] = 1/k`` if j is among the ``k = m - b`` nearest neighbors of i
+    (including i itself), else 0.  Ties are broken by index order (argsort is
+    stable), which the Pallas path and the Rust path replicate.
+    """
+    m = x.shape[0]
+    k = m - b
+    if k < 1:
+        raise ValueError(f"NNM needs m - b >= 1, got m={m}, b={b}")
+    dist = pairwise_sqdist(x)
+    order = jnp.argsort(dist, axis=1, stable=True)
+    sel = order[:, :k]  # [m, k] neighbor indices
+    w = jnp.zeros((m, m), dtype=x.dtype)
+    rows = jnp.repeat(jnp.arange(m), k)
+    w = w.at[rows, sel.reshape(-1)].set(1.0 / k)
+    return w
+
+
+def nnm(x: jax.Array, b: int) -> jax.Array:
+    """Nearest-Neighbor Mixing: [m, d] -> [m, d]."""
+    return nnm_weights(x, b) @ x
+
+
+def cwtm(x: jax.Array, b: int) -> jax.Array:
+    """Coordinate-wise trimmed mean: [m, d] -> [d].
+
+    Sorts each coordinate across the m inputs, removes the b smallest and b
+    largest, and averages the remaining m - 2b values.
+    """
+    m = x.shape[0]
+    if m - 2 * b < 1:
+        raise ValueError(f"CWTM needs m - 2b >= 1, got m={m}, b={b}")
+    s = jnp.sort(x, axis=0)
+    return jnp.mean(s[b : m - b, :], axis=0)
+
+
+def cwmed(x: jax.Array) -> jax.Array:
+    """Coordinate-wise median: [m, d] -> [d]."""
+    return jnp.median(x, axis=0)
+
+
+def nnm_cwtm(x: jax.Array, b: int) -> jax.Array:
+    """The paper's aggregation rule R = CWTM_b ∘ NNM_b : [m, d] -> [d]."""
+    return cwtm(nnm(x, b), b)
+
+
+def krum(x: jax.Array, b: int) -> jax.Array:
+    """Krum (Blanchard et al. 2017): returns the input with the smallest
+    sum of squared distances to its m - b - 2 nearest neighbors (excluding
+    itself)."""
+    m = x.shape[0]
+    k = m - b - 2
+    if k < 1:
+        raise ValueError(f"Krum needs m - b - 2 >= 1, got m={m}, b={b}")
+    dist = pairwise_sqdist(x)
+    # exclude self-distance by pushing the diagonal to +inf
+    dist = dist + jnp.diag(jnp.full((m,), jnp.inf, dtype=x.dtype))
+    nearest = jnp.sort(dist, axis=1)[:, :k]
+    scores = jnp.sum(nearest, axis=1)
+    return x[jnp.argmin(scores)]
+
+
+def geometric_median(x: jax.Array, iters: int = 100, eps: float = 1e-8) -> jax.Array:
+    """Geometric median via Weiszfeld iterations: [m, d] -> [d].
+
+    Matches the Rust implementation: fixed iteration count, epsilon-guarded
+    denominators, initialized at the coordinate mean.
+    """
+
+    def step(z, _):
+        norms = jnp.sqrt(jnp.sum((x - z[None, :]) ** 2, axis=1))
+        w = 1.0 / jnp.maximum(norms, eps)
+        z_new = jnp.sum(w[:, None] * x, axis=0) / jnp.sum(w)
+        return z_new, None
+
+    z0 = jnp.mean(x, axis=0)
+    z, _ = jax.lax.scan(step, z0, None, length=iters)
+    return z
+
+
+def mean(x: jax.Array) -> jax.Array:
+    """Plain (non-robust) average — the gossip baseline."""
+    return jnp.mean(x, axis=0)

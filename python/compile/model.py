@@ -1,0 +1,311 @@
+"""Layer-2: per-node compute graphs in JAX (build-time only).
+
+Defines the model zoo (paper CNN architectures + reduced MLPs for the
+1-core testbed), the flat-parameter codec, and the three graphs that
+``aot.py`` lowers to HLO text for the Rust coordinator:
+
+  * ``init_fn``       : (seed i32[])                       -> params f32[d]
+  * ``train_step_fn`` : (params, momentum, x, y, lr, beta, wd)
+                        -> (params', momentum', loss)
+  * ``eval_fn``       : (params, x, y) -> (correct f32[], loss_sum f32[])
+
+``train_step_fn`` implements exactly Algorithm 1 lines 3–6:
+
+    g  = ∇ℓ(x_i^t, ξ)  (+ weight decay)
+    m  = β m + (1 − β) g
+    x' = x − η m        (the half-step x^{t+1/2}; aggregation happens in
+                         Rust / in the Pallas aggregation executable)
+
+Interfaces use a single flat f32[d] parameter vector so the Rust side never
+needs to know the pytree structure.  ``lr``, ``beta``, ``wd`` are runtime
+scalars: LR schedules (the paper's CIFAR staircase) need no recompilation.
+
+Paper architectures (Appendix C, Tables 1–2), compact notation:
+  MNIST   : C(20)-R-M-C(20)-R-M-L(500)-R-L(10)-S          (5x5 convs)
+  CIFAR-10: C(64)-R-B-C(64)-R-B-M-D-C(128)-R-B-C(128)-R-B-M-D-
+            L(128)-R-D-L(10)-S                             (3x3 convs)
+  FEMNIST : C(64)-R-M-C(128)-R-M-L(1024)-R-L(62)-S         (5x5 convs)
+
+BatchNorm is replaced by static (non-learned) feature standardization and
+dropout is omitted in the AOT graphs — both are stateful/stochastic pieces
+that would force per-step RNG plumbing through the HLO interface; DESIGN.md
+§Substitutions records this (the robustness phenomena under study do not
+depend on them).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+# ---------------------------------------------------------------------------
+# Architecture specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Layer:
+    kind: str  # "dense" | "conv" | "relu" | "maxpool" | "flatten" | "norm"
+    out: int = 0  # dense units / conv channels
+    ksize: int = 0  # conv kernel size
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """A model architecture plus its input geometry."""
+
+    name: str
+    input_shape: tuple[int, ...]  # per-example shape, e.g. (64,) or (28, 28, 1)
+    classes: int
+    layers: tuple[Layer, ...] = field(default_factory=tuple)
+
+    @property
+    def is_conv(self) -> bool:
+        return len(self.input_shape) == 3
+
+
+def _mlp(name: str, din: int, hidden: list[int], classes: int) -> ModelSpec:
+    layers: list[Layer] = []
+    for h in hidden:
+        layers += [Layer("dense", out=h), Layer("relu")]
+    layers += [Layer("dense", out=classes)]
+    return ModelSpec(name, (din,), classes, tuple(layers))
+
+
+def _conv(out: int, k: int) -> Layer:
+    return Layer("conv", out=out, ksize=k)
+
+
+SPECS: dict[str, ModelSpec] = {
+    # --- reduced-scale models (default on the 1-core testbed) ------------
+    "mlp_mnistlike": _mlp("mlp_mnistlike", 64, [64], 10),
+    "mlp_cifarlike": _mlp("mlp_cifarlike", 96, [128, 64], 10),
+    "mlp_femnistlike": _mlp("mlp_femnistlike", 64, [128], 62),
+    # tiny model for quickstart/tests
+    "mlp_tiny": _mlp("mlp_tiny", 16, [16], 4),
+    # --- paper architectures ---------------------------------------------
+    "mnist_cnn": ModelSpec(
+        "mnist_cnn",
+        (28, 28, 1),
+        10,
+        (
+            _conv(20, 5), Layer("relu"), Layer("maxpool"),
+            _conv(20, 5), Layer("relu"), Layer("maxpool"),
+            Layer("flatten"),
+            Layer("dense", out=500), Layer("relu"),
+            Layer("dense", out=10),
+        ),
+    ),
+    "cifar_cnn": ModelSpec(
+        "cifar_cnn",
+        (32, 32, 3),
+        10,
+        (
+            _conv(64, 3), Layer("relu"), Layer("norm"),
+            _conv(64, 3), Layer("relu"), Layer("norm"), Layer("maxpool"),
+            _conv(128, 3), Layer("relu"), Layer("norm"),
+            _conv(128, 3), Layer("relu"), Layer("norm"), Layer("maxpool"),
+            Layer("flatten"),
+            Layer("dense", out=128), Layer("relu"),
+            Layer("dense", out=10),
+        ),
+    ),
+    "femnist_cnn": ModelSpec(
+        "femnist_cnn",
+        (28, 28, 1),
+        62,
+        (
+            _conv(64, 5), Layer("relu"), Layer("maxpool"),
+            _conv(128, 5), Layer("relu"), Layer("maxpool"),
+            Layer("flatten"),
+            Layer("dense", out=1024), Layer("relu"),
+            Layer("dense", out=62),
+        ),
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction / flat codec
+# ---------------------------------------------------------------------------
+
+
+def _conv_pad(spec: ModelSpec) -> str:
+    # Paper: padding 1 for CIFAR 3x3 convs ("SAME"), padding 0 for the 5x5
+    # MNIST/FEMNIST convs ("VALID").
+    return "SAME" if spec.layers and any(l.kind == "conv" and l.ksize == 3 for l in spec.layers) else "VALID"
+
+
+def init_pytree(spec: ModelSpec, key: jax.Array):
+    """He-initialized parameter pytree (list of {'w','b'} dicts)."""
+    params = []
+    shape = spec.input_shape
+    pad = _conv_pad(spec)
+    for layer in spec.layers:
+        if layer.kind == "dense":
+            fan_in = math.prod(shape)
+            key, sub = jax.random.split(key)
+            w = jax.random.normal(sub, (fan_in, layer.out), jnp.float32)
+            w = w * jnp.sqrt(2.0 / fan_in)
+            params.append({"w": w, "b": jnp.zeros((layer.out,), jnp.float32)})
+            shape = (layer.out,)
+        elif layer.kind == "conv":
+            h, w_, c = shape
+            k = layer.ksize
+            key, sub = jax.random.split(key)
+            fan_in = k * k * c
+            wt = jax.random.normal(sub, (k, k, c, layer.out), jnp.float32)
+            wt = wt * jnp.sqrt(2.0 / fan_in)
+            params.append({"w": wt, "b": jnp.zeros((layer.out,), jnp.float32)})
+            if pad == "VALID":
+                h, w_ = h - k + 1, w_ - k + 1
+            shape = (h, w_, layer.out)
+        elif layer.kind == "maxpool":
+            h, w_, c = shape
+            shape = (h // 2, w_ // 2, c)
+        elif layer.kind == "flatten":
+            shape = (math.prod(shape),)
+        # relu / norm: no params, no shape change
+    return params
+
+
+def param_count(spec: ModelSpec) -> int:
+    flat, _ = ravel_pytree(init_pytree(spec, jax.random.PRNGKey(0)))
+    return int(flat.shape[0])
+
+
+@functools.lru_cache(maxsize=None)
+def _unravel_fn(name: str):
+    spec = SPECS[name]
+    flat, unravel = ravel_pytree(init_pytree(spec, jax.random.PRNGKey(0)))
+    return int(flat.shape[0]), unravel
+
+
+def forward(spec: ModelSpec, flat_params: jax.Array, x: jax.Array) -> jax.Array:
+    """Log-softmax outputs, shape [B, classes]. x: [B, *input_shape]."""
+    _, unravel = _unravel_fn(spec.name)
+    params = unravel(flat_params)
+    pad = _conv_pad(spec)
+    idx = 0
+    h = x
+    for layer in spec.layers:
+        if layer.kind == "dense":
+            if h.ndim > 2:
+                h = h.reshape(h.shape[0], -1)
+            p = params[idx]
+            idx += 1
+            h = h @ p["w"] + p["b"]
+        elif layer.kind == "conv":
+            p = params[idx]
+            idx += 1
+            h = jax.lax.conv_general_dilated(
+                h, p["w"], window_strides=(1, 1), padding=pad,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + p["b"]
+        elif layer.kind == "relu":
+            h = jax.nn.relu(h)
+        elif layer.kind == "maxpool":
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max,
+                window_dimensions=(1, 2, 2, 1),
+                window_strides=(1, 2, 2, 1),
+                padding="VALID",
+            )
+        elif layer.kind == "flatten":
+            h = h.reshape(h.shape[0], -1)
+        elif layer.kind == "norm":
+            # static standardization over spatial dims (BatchNorm stand-in)
+            mu = jnp.mean(h, axis=(1, 2), keepdims=True)
+            var = jnp.var(h, axis=(1, 2), keepdims=True)
+            h = (h - mu) / jnp.sqrt(var + 1e-5)
+    return jax.nn.log_softmax(h, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# AOT graphs
+# ---------------------------------------------------------------------------
+
+
+def nll_loss(spec: ModelSpec, flat_params: jax.Array, x: jax.Array, y: jax.Array,
+             wd: jax.Array) -> jax.Array:
+    """Mean NLL + L2 weight decay (the paper's 'weight L2 regularization')."""
+    logp = forward(spec, flat_params, x)
+    nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return nll + 0.5 * wd * jnp.sum(flat_params * flat_params)
+
+
+def make_init_fn(spec: ModelSpec):
+    def init_fn(seed: jax.Array):
+        key = jax.random.PRNGKey(seed)
+        flat, _ = ravel_pytree(init_pytree(spec, key))
+        return (flat,)
+
+    return init_fn
+
+
+def make_train_step_fn(spec: ModelSpec, local_steps: int = 1):
+    """Momentum-SGD half-step (Algorithm 1 lines 3–6).
+
+    For ``local_steps > 1`` (paper §C.3), ``x``/``y`` carry a leading
+    [local_steps] axis and the graph scans over them, matching "3 local
+    steps at each iteration".
+    """
+
+    def one_step(carry, batch):
+        params, momentum, lr, beta, wd = carry
+        bx, by = batch
+        loss, grad = jax.value_and_grad(
+            lambda p: nll_loss(spec, p, bx, by, wd)
+        )(params)
+        momentum = beta * momentum + (1.0 - beta) * grad
+        params = params - lr * momentum
+        return (params, momentum, lr, beta, wd), loss
+
+    if local_steps == 1:
+
+        def train_step(params, momentum, x, y, lr, beta, wd):
+            (params, momentum, *_), loss = one_step(
+                (params, momentum, lr, beta, wd), (x, y)
+            )
+            return params, momentum, loss
+
+    else:
+
+        def train_step(params, momentum, x, y, lr, beta, wd):
+            (params, momentum, *_), losses = jax.lax.scan(
+                one_step, (params, momentum, lr, beta, wd), (x, y)
+            )
+            return params, momentum, jnp.mean(losses)
+
+    return train_step
+
+
+def make_eval_fn(spec: ModelSpec):
+    """Returns (#correct, summed NLL) over the eval batch — Rust divides."""
+
+    def eval_fn(params, x, y):
+        logp = forward(spec, params, x)
+        pred = jnp.argmax(logp, axis=-1)
+        correct = jnp.sum((pred == y).astype(jnp.float32))
+        loss_sum = -jnp.sum(jnp.take_along_axis(logp, y[:, None], axis=1))
+        return correct, loss_sum
+
+    return eval_fn
+
+
+def make_aggregate_fn(b: int, tile_d: int | None = None):
+    """The Pallas aggregation rule as an AOT graph: X [m, d] -> [d]."""
+    from compile.kernels.nnm_cwtm import DEFAULT_TILE_D, nnm_cwtm_pallas
+
+    td = tile_d or DEFAULT_TILE_D
+
+    def aggregate(x):
+        return (nnm_cwtm_pallas(x, b, tile_d=td),)
+
+    return aggregate

@@ -1,0 +1,102 @@
+"""AOT pipeline tests: HLO text emission, manifest integrity, fixtures."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_lower_emits_hlo_text():
+    spec = M.SPECS["mlp_tiny"]
+    txt = aot.lower(M.make_eval_fn(spec),
+                    aot.f32(M.param_count(spec)),
+                    aot.f32(4, *spec.input_shape), aot.i32(4))
+    assert "HloModule" in txt
+    assert "ENTRY" in txt
+
+
+def test_lower_aggregate_contains_sort():
+    # The CWTM trim lowers to an XLA sort over the replica axis.
+    txt = aot.lower(M.make_aggregate_fn(1), aot.f32(5, 32))
+    assert "sort" in txt.lower()
+
+
+def test_train_graph_is_pure_hlo():
+    """No custom-calls in the train step (Pallas interpret / plain jnp only
+    lower to standard HLO the CPU PJRT client can execute)."""
+    spec = M.SPECS["mlp_tiny"]
+    d = M.param_count(spec)
+    txt = aot.lower(M.make_train_step_fn(spec),
+                    aot.f32(d), aot.f32(d), aot.f32(8, *spec.input_shape),
+                    aot.i32(8), aot.f32(), aot.f32(), aot.f32())
+    assert "custom-call" not in txt
+
+
+def test_aggregate_graph_is_pure_hlo():
+    txt = aot.lower(M.make_aggregate_fn(2), aot.f32(8, 64))
+    assert "custom-call" not in txt
+
+
+def test_plan_scales():
+    tiny_models, tiny_aggs = aot.plan("tiny")
+    paper_models, _ = aot.plan("paper")
+    all_models, _ = aot.plan("all")
+    assert {m[0] for m in tiny_models} == {
+        "mlp_tiny", "mlp_mnistlike", "mlp_cifarlike", "mlp_femnistlike"}
+    assert {m[0] for m in paper_models} == {"mnist_cnn", "cifar_cnn", "femnist_cnn"}
+    assert len(all_models) == len(tiny_models) + len(paper_models)
+    for combos in tiny_aggs.values():
+        for m, b in combos:
+            assert m - 2 * b >= 1, "CWTM must keep at least one row"
+
+
+def test_agg_fixtures_consistency():
+    fx = aot.agg_fixtures()
+    assert len(fx["cases"]) >= 8
+    for case in fx["cases"]:
+        m, d = case["m"], case["d"]
+        assert len(case["x"]) == m * d
+        assert len(case["mean"]) == d
+        x = np.asarray(case["x"], np.float32).reshape(m, d)
+        np.testing.assert_allclose(
+            np.asarray(case["mean"]), x.mean(axis=0), rtol=1e-5, atol=1e-5
+        )
+        if "nnm_cwtm" in case:
+            assert len(case["nnm_cwtm"]) == d
+            assert len(case["nnm"]) == m * d
+
+
+def test_model_fixtures_consistency():
+    fx = aot.model_fixtures()
+    for case in fx["cases"]:
+        assert len(case["params"]) == case["d"]
+        assert len(case["logp"]) == case["n"] * case["classes"]
+        rows = np.asarray(case["logp"], np.float32).reshape(case["n"], -1)
+        np.testing.assert_allclose(np.exp(rows).sum(axis=1),
+                                   np.ones(case["n"]), rtol=1e-4)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_is_complete():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    kinds = {"init": 0, "train": 0, "eval": 0, "aggregate": 0}
+    for art in manifest["artifacts"]:
+        kinds[art["kind"]] += 1
+        path = os.path.join(root, art["file"])
+        assert os.path.exists(path), art["file"]
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head
+    assert all(v > 0 for v in kinds.values()), kinds

@@ -1,0 +1,177 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.nnm_cwtm import (
+    mix_trim_pallas,
+    nnm_cwtm_pallas,
+    nnm_weights_from_dist,
+    pairwise_sqdist_pallas,
+)
+
+
+def rand(m, d, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(scale=scale, size=(m, d)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# pairwise_sqdist
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,d", [(2, 1), (3, 7), (8, 128), (16, 1000), (5, 4097)])
+def test_sqdist_matches_ref(m, d):
+    x = rand(m, d, seed=m * 1000 + d)
+    got = pairwise_sqdist_pallas(x, tile_d=256)
+    want = ref.pairwise_sqdist(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_sqdist_diagonal_zero():
+    x = rand(6, 100, seed=3)
+    d = np.asarray(pairwise_sqdist_pallas(x))
+    np.testing.assert_allclose(np.diag(d), np.zeros(6), atol=1e-6)
+
+
+def test_sqdist_symmetry():
+    x = rand(9, 257, seed=4)
+    d = np.asarray(pairwise_sqdist_pallas(x, tile_d=64))
+    np.testing.assert_allclose(d, d.T, rtol=1e-6, atol=1e-6)
+
+
+def test_sqdist_identical_rows():
+    x = jnp.ones((4, 50), jnp.float32)
+    d = np.asarray(pairwise_sqdist_pallas(x))
+    np.testing.assert_allclose(d, np.zeros((4, 4)), atol=1e-7)
+
+
+def test_sqdist_tile_larger_than_d():
+    x = rand(5, 10, seed=5)
+    got = pairwise_sqdist_pallas(x, tile_d=4096)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.pairwise_sqdist(x)), rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# mix_trim
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,d,b", [(5, 17, 1), (7, 300, 3), (16, 2049, 7), (3, 1, 1)])
+def test_mix_trim_matches_ref(m, d, b):
+    x = rand(m, d, seed=m + d + b)
+    w = ref.nnm_weights(x, b)
+    got = mix_trim_pallas(w, x, b, tile_d=128)
+    want = ref.cwtm(np.asarray(w) @ np.asarray(x), b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_mix_trim_b0_is_mean_of_mixed():
+    x = rand(6, 40, seed=9)
+    w = jnp.eye(6, dtype=jnp.float32)
+    got = mix_trim_pallas(w, x, 0)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(jnp.mean(x, axis=0)), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_mix_trim_rejects_overtrim():
+    x = rand(4, 8)
+    w = jnp.eye(4, dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        mix_trim_pallas(w, x, 2)
+
+
+# ---------------------------------------------------------------------------
+# full rule
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,d,b",
+    [(4, 10, 1), (7, 64, 2), (7, 64, 3), (16, 500, 7), (16, 500, 4),
+     (20, 123, 3), (8, 4096, 2), (3, 2, 1), (12, 77, 0)],
+)
+def test_nnm_cwtm_matches_ref(m, d, b):
+    x = rand(m, d, seed=m * 31 + d * 7 + b, scale=3.0)
+    got = nnm_cwtm_pallas(x, b, tile_d=256)
+    want = ref.nnm_cwtm(x, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_nnm_cwtm_agreement_on_identical_inputs():
+    """R(x, x, ..., x) = x — unanimity (robustness sanity)."""
+    x0 = rand(1, 200, seed=42)
+    x = jnp.tile(x0, (9, 1))
+    got = nnm_cwtm_pallas(x, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x0[0]), rtol=1e-5, atol=1e-6)
+
+
+def test_nnm_cwtm_permutation_invariant():
+    x = rand(10, 90, seed=17)
+    perm = np.random.default_rng(0).permutation(10)
+    a = np.asarray(nnm_cwtm_pallas(x, 3))
+    b = np.asarray(nnm_cwtm_pallas(x[perm], 3))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_nnm_cwtm_outlier_resistance():
+    """b Byzantine rows at huge magnitude must not drag the output away
+    from the honest cluster — the qualitative robustness property."""
+    rng = np.random.default_rng(5)
+    honest = rng.normal(size=(12, 60)).astype(np.float32)
+    byz = np.full((4, 60), 1e6, np.float32)
+    x = jnp.asarray(np.concatenate([honest, byz]))
+    out = np.asarray(nnm_cwtm_pallas(x, 4))
+    hmean = honest.mean(axis=0)
+    assert np.linalg.norm(out - hmean) < 5 * np.linalg.norm(honest.std(axis=0))
+
+
+def test_nnm_weights_row_stochastic():
+    x = rand(11, 30, seed=23)
+    d = ref.pairwise_sqdist(x)
+    w = np.asarray(nnm_weights_from_dist(d, 4))
+    np.testing.assert_allclose(w.sum(axis=1), np.ones(11), rtol=1e-6)
+    assert (w >= 0).all()
+    # self is always the nearest neighbor -> diagonal is selected
+    assert (np.diag(w) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes, magnitudes, tile sizes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=3, max_value=24),
+    d=st.integers(min_value=1, max_value=600),
+    frac=st.floats(min_value=0.0, max_value=0.49),
+    tile=st.sampled_from([32, 128, 1024]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_nnm_cwtm(m, d, frac, tile, seed):
+    b = min(int(frac * m), (m - 1) // 2)
+    x = rand(m, d, seed=seed, scale=10.0)
+    got = nnm_cwtm_pallas(x, b, tile_d=tile)
+    want = ref.nnm_cwtm(x, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=2, max_value=32),
+    d=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_sqdist(m, d, seed):
+    x = rand(m, d, seed=seed, scale=5.0)
+    got = pairwise_sqdist_pallas(x, tile_d=128)
+    want = ref.pairwise_sqdist(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,119 @@
+"""Oracle self-consistency: the jnp reference rules satisfy the paper's
+algebraic properties (Definition 5.1 territory) on their own."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def rand(m, d, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(scale=scale, size=(m, d)).astype(np.float32))
+
+
+def test_cwtm_is_mean_when_b0():
+    x = rand(7, 13, seed=1)
+    np.testing.assert_allclose(
+        np.asarray(ref.cwtm(x, 0)), np.asarray(ref.mean(x)), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_cwtm_ignores_extremes():
+    x = jnp.asarray(
+        np.array([[0.0], [1.0], [2.0], [1e9], [-1e9]], dtype=np.float32)
+    )
+    out = np.asarray(ref.cwtm(x, 1))
+    # sorted: -1e9, 0, 1, 2, 1e9 -> trim 1 -> mean(0,1,2) = 1
+    np.testing.assert_allclose(out, [1.0], atol=1e-6)
+
+
+def test_cwmed_odd_is_middle():
+    x = jnp.asarray(np.array([[3.0], [1.0], [2.0]], dtype=np.float32))
+    np.testing.assert_allclose(np.asarray(ref.cwmed(x)), [2.0])
+
+
+def test_nnm_preserves_unanimity():
+    x0 = rand(1, 20, seed=2)
+    x = jnp.tile(x0, (6, 1))
+    out = np.asarray(ref.nnm(x, 2))
+    np.testing.assert_allclose(out, np.tile(np.asarray(x0), (6, 1)), rtol=1e-6)
+
+
+def test_nnm_rows_are_convex_combinations():
+    x = rand(9, 15, seed=3, scale=4.0)
+    out = np.asarray(ref.nnm(x, 3))
+    xs = np.asarray(x)
+    lo, hi = xs.min(axis=0), xs.max(axis=0)
+    assert (out >= lo - 1e-5).all() and (out <= hi + 1e-5).all()
+
+
+def test_krum_returns_an_input():
+    x = rand(8, 10, seed=4)
+    out = np.asarray(ref.krum(x, 2))
+    assert any(np.allclose(out, row) for row in np.asarray(x))
+
+
+def test_krum_rejects_outlier():
+    rng = np.random.default_rng(6)
+    honest = rng.normal(size=(7, 5)).astype(np.float32)
+    byz = np.full((1, 5), 100.0, np.float32)
+    x = jnp.asarray(np.concatenate([honest, byz]))
+    out = np.asarray(ref.krum(x, 1))
+    assert not np.allclose(out, byz[0])
+
+
+def test_geometric_median_translation_equivariance():
+    x = rand(6, 8, seed=7)
+    shift = np.float32(3.5)
+    a = np.asarray(ref.geometric_median(x + shift))
+    b = np.asarray(ref.geometric_median(x)) + shift
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_geometric_median_collinear():
+    # gm of {0, 0, 0, 10} on a line is ~0 (majority point)
+    x = jnp.asarray(np.array([[0.0], [0.0], [0.0], [10.0]], dtype=np.float32))
+    out = np.asarray(ref.geometric_median(x))
+    assert abs(out[0]) < 0.5
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(min_value=3, max_value=20),
+    d=st.integers(min_value=1, max_value=50),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_robustness_bound_cwtm(m, d, seed):
+    """Empirical check of Definition 5.1 for CWTM∘NNM with honest-only
+    inputs: the output must stay within the honest spread.
+
+    With U = all inputs (b=0 adversaries actually present), the bound
+    reduces to ||R(v) - v̄||² ≤ κ/m · Σ||v_i - v̄||² with κ = O(b/(m)).
+    We verify the conservative version κ <= 1 (any sane rule)."""
+    b = (m - 1) // 3
+    if m - 2 * b < 1:
+        b = 0
+    x = rand(m, d, seed=seed, scale=2.0)
+    out = np.asarray(ref.nnm_cwtm(x, b))
+    xs = np.asarray(x)
+    vbar = xs.mean(axis=0)
+    var = ((xs - vbar) ** 2).sum(axis=1).mean()
+    err = ((out - vbar) ** 2).sum()
+    assert err <= var + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=4, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_cwtm_between_min_max(m, seed):
+    x = rand(m, 12, seed=seed, scale=6.0)
+    b = (m - 1) // 2
+    out = np.asarray(ref.cwtm(x, b))
+    xs = np.asarray(x)
+    assert (out >= xs.min(axis=0) - 1e-6).all()
+    assert (out <= xs.max(axis=0) + 1e-6).all()

@@ -1,0 +1,94 @@
+//! Ablation benchmarks for the design choices DESIGN.md calls out:
+//!
+//!  A1  local momentum on/off (paper §5.3 credits momentum for removing
+//!      σ² from the non-vanishing term)
+//!  A2  NNM pre-aggregation on/off (Corollary 5.7's κ = O(b̂/(s+1)) needs
+//!      NNM; bare CWTM has a worse κ)
+//!  A3  pull vs push epidemic communication (§3.3 / Appendix D)
+//!  A4  Algorithm-2 simulated b̂ vs exact max-quantile b̂ (Appendix B
+//!      Remark 2)
+//!
+//! These are accuracy ablations (quality, not wall-clock). Run:
+//! cargo bench --bench bench_ablations
+
+use rpel::aggregation::RuleKind;
+use rpel::attacks::AttackKind;
+use rpel::benchkit::section;
+use rpel::config::{EngineKind, ExperimentConfig, RuleChoice, Topology};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+use rpel::sampling::selector::select_bhat_exact;
+use rpel::sampling::EafSimulator;
+use rpel::util::rng::Rng;
+
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::MnistLike);
+    cfg.n = 20;
+    cfg.b = 3;
+    cfg.topology = Topology::Epidemic { s: 8 };
+    cfg.bhat = Some(3);
+    cfg.attack = AttackKind::Alie;
+    cfg.rounds = 50;
+    cfg.batch = 16;
+    cfg.samples_per_node = 96;
+    cfg.test_samples = 256;
+    cfg.eval_every = 10;
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+fn final_acc(cfg: &ExperimentConfig) -> f64 {
+    Trainer::from_config(cfg).unwrap().run().unwrap().final_avg_accuracy()
+}
+
+fn main() {
+    section("A1: local momentum (β) under ALIE");
+    for beta in [0.0f32, 0.9] {
+        let mut cfg = base();
+        cfg.momentum = beta;
+        cfg.name = format!("momentum/beta{beta}");
+        println!("beta={beta:<4} final_acc={:.3}", final_acc(&cfg));
+    }
+
+    section("A2: NNM pre-aggregation under ALIE (κ quality)");
+    for (label, rule) in [
+        ("cwtm alone", RuleKind::CwTm),
+        ("nnm + cwtm", RuleKind::NnmCwtm),
+        ("cwmed alone", RuleKind::CwMed),
+        ("nnm + cwmed", RuleKind::NnmCwMed),
+    ] {
+        let mut cfg = base();
+        cfg.rule = RuleChoice::Epidemic(rule);
+        cfg.name = format!("nnm-ablation/{}", rule.name());
+        println!("{label:<12} final_acc={:.3}", final_acc(&cfg));
+    }
+
+    section("A3: pull vs push epidemic (SF attack, flooding adversary)");
+    for (label, topo) in [
+        ("pull s=8", Topology::Epidemic { s: 8 }),
+        ("push s=8", Topology::EpidemicPush { s: 8 }),
+    ] {
+        let mut cfg = base();
+        cfg.attack = AttackKind::SignFlip;
+        cfg.topology = topo;
+        cfg.bhat = None;
+        cfg.name = format!("pullpush/{label}");
+        let hist = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        println!(
+            "{label:<10} final_acc={:.3} observed_b̂={} msgs/round={}",
+            hist.final_avg_accuracy(),
+            hist.observed_bhat(),
+            hist.messages_per_round
+        );
+    }
+
+    section("A4: Algorithm-2 simulated b̂ vs exact max-quantile (n=100, b=10, T=200)");
+    let mut rng = Rng::new(3);
+    let sim = EafSimulator::new(100, 10, 200, 5);
+    println!("{:<6} {:>8} {:>8}", "s", "sim b̂", "exact b̂");
+    for s in [10u64, 15, 20, 30] {
+        let p = sim.point(s, &mut rng);
+        let exact = select_bhat_exact(100, 10, 200, s, 0.99);
+        println!("{s:<6} {:>8} {exact:>8}", p.bhat);
+    }
+}

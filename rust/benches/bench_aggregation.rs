@@ -1,0 +1,125 @@
+//! Aggregation-rule benchmarks: the L3 hot path (one aggregation per
+//! honest node per round) across rules, fan-ins and model sizes — plus the
+//! native-vs-Pallas/HLO comparison that the §Perf log in EXPERIMENTS.md
+//! tracks.
+//!
+//! Run: cargo bench --bench bench_aggregation
+
+use rpel::aggregation::{pairwise_sqdist, RuleKind};
+use rpel::benchkit::{black_box, section, Bencher};
+use rpel::runtime::{artifacts_available, Runtime};
+use rpel::util::rng::Rng;
+
+fn random_rows(rng: &mut Rng, m: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..m)
+        .map(|_| (0..d).map(|_| rng.gaussian32(0.0, 1.0)).collect())
+        .collect()
+}
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(42);
+
+    section("pairwise squared distances (m x m over d)");
+    for &(m, d) in &[(8usize, 4874usize), (16, 4874), (16, 21066), (32, 21066)] {
+        let rows = random_rows(&mut rng, m, d);
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let r = b.run_throughput(
+            &format!("pairwise_sqdist m={m} d={d}"),
+            (m * m * d) as f64,
+            || black_box(pairwise_sqdist(&refs)),
+        );
+        println!("{}", r.report());
+    }
+
+    section("Definition-5.1 rules (m=16, d=4874: fig1 geometry)");
+    let rows = random_rows(&mut rng, 16, 4874);
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let mut out = vec![0.0f32; 4874];
+    for kind in [
+        RuleKind::Mean,
+        RuleKind::CwTm,
+        RuleKind::CwMed,
+        RuleKind::Krum,
+        RuleKind::GeoMedian,
+        RuleKind::NnmCwtm,
+    ] {
+        let rule = kind.build(7);
+        let r = b.run_throughput(&format!("rule {}", kind.name()), (16 * 4874) as f64, || {
+            rule.aggregate(&refs, &mut out);
+            black_box(out[0])
+        });
+        println!("{}", r.report());
+    }
+
+    section("NNM∘CWTM across model sizes (m=16, b̂=7)");
+    for &d in &[340usize, 4874, 16318, 21066, 176_050] {
+        let rows = random_rows(&mut rng, 16, d);
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0.0f32; d];
+        let rule = RuleKind::NnmCwtm.build(7);
+        let r = b.run_throughput(&format!("nnm_cwtm d={d}"), (16 * d) as f64, || {
+            rule.aggregate(&refs, &mut out);
+            black_box(out[0])
+        });
+        println!("{}", r.report());
+    }
+
+    section("native vs Pallas/HLO executable (m=8, b̂=2, d=340)");
+    if artifacts_available("artifacts") {
+        let mut rt = Runtime::open("artifacts").unwrap();
+        let exec = rt.aggregate_exec("mlp_tiny", 8, 2).unwrap();
+        let rows = random_rows(&mut rng, 8, 340);
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0.0f32; 340];
+        let rule = RuleKind::NnmCwtm.build(2);
+        let r = b.run("native nnm_cwtm (m=8 d=340)", || {
+            rule.aggregate(&refs, &mut out);
+            black_box(out[0])
+        });
+        println!("{}", r.report());
+        let r = b.run("pallas/hlo nnm_cwtm (m=8 d=340)", || {
+            black_box(exec.run(&refs).unwrap()[0])
+        });
+        println!("{}", r.report());
+        if let Ok(exec) = rt.aggregate_exec("mlp_mnistlike", 16, 7) {
+            let d = exec.entry.d;
+            let rows = random_rows(&mut rng, 16, d);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let r = b.run(&format!("pallas/hlo nnm_cwtm (m=16 d={d})"), || {
+                black_box(exec.run(&refs).unwrap()[0])
+            });
+            println!("{}", r.report());
+            let rule = RuleKind::NnmCwtm.build(7);
+            let mut out = vec![0.0f32; d];
+            let r = b.run(&format!("native nnm_cwtm (m=16 d={d})"), || {
+                rule.aggregate(&refs, &mut out);
+                black_box(out[0])
+            });
+            println!("{}", r.report());
+        }
+    } else {
+        println!("(artifacts not built — HLO comparison skipped; run `make artifacts`)");
+    }
+
+    section("ablation: NNM pre-aggregation cost share");
+    let rows = random_rows(&mut rng, 16, 21066);
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let mut out = vec![0.0f32; 21066];
+    let cwtm_only = RuleKind::CwTm.build(7);
+    let nnm_cwtm = RuleKind::NnmCwtm.build(7);
+    let r1 = b.run("cwtm alone (d=21066)", || {
+        cwtm_only.aggregate(&refs, &mut out);
+        black_box(out[0])
+    });
+    let r2 = b.run("nnm+cwtm (d=21066)", || {
+        nnm_cwtm.aggregate(&refs, &mut out);
+        black_box(out[0])
+    });
+    println!("{}", r1.report());
+    println!("{}", r2.report());
+    println!(
+        "NNM overhead: {:.1}x over CWTM alone",
+        r2.mean_ns() / r1.mean_ns()
+    );
+}

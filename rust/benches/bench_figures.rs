@@ -1,0 +1,90 @@
+//! Figure-level benchmarks: time every paper figure's regeneration at tiny
+//! scale and assert the communication accounting each figure's caption
+//! relies on. The `make bench` roll-up that EXPERIMENTS.md references.
+//!
+//! Run: cargo bench --bench bench_figures
+//! (full training figures at bench scale — a few minutes on one core)
+
+use rpel::benchkit::section;
+use rpel::config::presets::{self, FigureSeries, Scale};
+use rpel::config::EngineKind;
+use rpel::coordinator::Trainer;
+use rpel::experiments;
+use std::time::Instant;
+
+fn main() {
+    // bench scale: headline figures in full, appendix figures truncated
+    let headline = ["fig1L", "fig1R", "fig2L", "fig2R", "fig3"];
+
+    section("headline figures (full tiny-scale regeneration)");
+    for id in headline {
+        let fig = presets::figure(id).unwrap();
+        let t0 = Instant::now();
+        match fig.series(Scale::Tiny) {
+            FigureSeries::Training(cfgs) => {
+                let mut final_accs = Vec::new();
+                let mut msgs = 0usize;
+                for cfg in &cfgs {
+                    let hist = Trainer::from_config(cfg).unwrap().run().unwrap();
+                    msgs = hist.messages_per_round;
+                    final_accs.push(format!(
+                        "{}={:.2}",
+                        cfg.attack.name(),
+                        hist.final_avg_accuracy()
+                    ));
+                }
+                println!(
+                    "{:<7} {:>8.2}s  msgs/round={:<6} [{}]",
+                    id,
+                    t0.elapsed().as_secs_f64(),
+                    msgs,
+                    final_accs.join(" ")
+                );
+            }
+            FigureSeries::Eaf(scens) => {
+                let rows = experiments::run_eaf(&scens, 1);
+                println!(
+                    "{:<7} {:>8.2}s  ({} grid points, max n=100k)",
+                    id,
+                    t0.elapsed().as_secs_f64(),
+                    rows.len()
+                );
+            }
+        }
+    }
+
+    section("appendix figures (first series, truncated rounds)");
+    for fig in presets::all_figures() {
+        if headline.contains(&fig.id) {
+            continue;
+        }
+        if let FigureSeries::Training(mut cfgs) = fig.series(Scale::Tiny) {
+            let cfg = &mut cfgs[0];
+            cfg.rounds = cfg.rounds.min(20);
+            cfg.engine = EngineKind::Native;
+            let t0 = Instant::now();
+            let hist = Trainer::from_config(cfg).unwrap().run().unwrap();
+            println!(
+                "{:<7} {:>8.2}s/20r  first-series acc={:.2}  msgs/round={}",
+                fig.id,
+                t0.elapsed().as_secs_f64(),
+                hist.final_avg_accuracy(),
+                hist.messages_per_round
+            );
+        }
+    }
+
+    section("budget table: every figure's messages/round (paper scale)");
+    for fig in presets::all_figures() {
+        if let FigureSeries::Training(cfgs) = fig.series(Scale::Paper) {
+            let budgets: std::collections::BTreeSet<usize> =
+                cfgs.iter().map(|c| c.messages_per_round()).collect();
+            println!(
+                "{:<7} series={:<3} msgs/round={:?}",
+                fig.id,
+                cfgs.len(),
+                budgets
+            );
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! End-to-end round benchmarks: full coordinator rounds per second across
+//! engines and component breakdown (train step / attack craft / aggregate /
+//! eval) — the L3 profile that drives the §Perf optimization loop.
+//!
+//! Run: cargo bench --bench bench_round
+
+use rpel::attacks::AttackKind;
+use rpel::benchkit::{black_box, section, Bencher};
+use rpel::config::presets;
+use rpel::config::{EngineKind, ExperimentConfig, Topology};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+use rpel::model::native::{MlpSpec, TrainHyper};
+use rpel::runtime::artifacts_available;
+use rpel::util::rng::Rng;
+
+fn fig1_tiny() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::MnistLike);
+    cfg.n = 30;
+    cfg.b = 3;
+    cfg.topology = Topology::Epidemic { s: 15 };
+    cfg.bhat = Some(5);
+    cfg.attack = AttackKind::Alie;
+    cfg.batch = 16;
+    cfg.samples_per_node = 96;
+    cfg.test_samples = 256;
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+fn main() {
+    let b = Bencher {
+        warmup_iters: 2,
+        samples: 8,
+        iters_per_sample: 1,
+    };
+
+    section("full coordinator round (fig1 geometry: n=30 b=3 s=15)");
+    {
+        let cfg = fig1_tiny();
+        let mut trainer = Trainer::from_config(&cfg).unwrap();
+        let mut round = 0usize;
+        let r = b.run("round native engine", || {
+            round += 1;
+            black_box(trainer.round(round).unwrap())
+        });
+        println!("{}", r.report());
+        println!(
+            "  => {:.1} rounds/s, {:.0} model-pulls/s",
+            1e9 / r.mean_ns(),
+            cfg.messages_per_round() as f64 * 1e9 / r.mean_ns()
+        );
+        let r = b.run("evaluate all honest nodes (256-sample test set)", || {
+            black_box(trainer.evaluate(0).unwrap().avg_acc)
+        });
+        println!("{}", r.report());
+    }
+
+    if artifacts_available("artifacts") {
+        let mut cfg = presets::quickstart_config();
+        cfg.engine = EngineKind::Hlo;
+        let mut trainer = Trainer::from_config(&cfg).unwrap();
+        let mut round = 0usize;
+        let r = b.run("round HLO engine (quickstart: n=8 s=7)", || {
+            round += 1;
+            black_box(trainer.round(round).unwrap())
+        });
+        println!("{}", r.report());
+        let mut cfg = presets::quickstart_config();
+        cfg.engine = EngineKind::Native;
+        let mut trainer = Trainer::from_config(&cfg).unwrap();
+        let mut round = 0usize;
+        let r = b.run("round native engine (quickstart: n=8 s=7)", || {
+            round += 1;
+            black_box(trainer.round(round).unwrap())
+        });
+        println!("{}", r.report());
+    } else {
+        println!("(artifacts not built — HLO round skipped)");
+    }
+
+    section("component breakdown (mnistlike arch, batch 16)");
+    {
+        let spec = MlpSpec::by_name("mlp_mnistlike").unwrap();
+        let mut params = spec.init_native(0);
+        let mut momentum = vec![0.0f32; params.len()];
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..16 * 64).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+        let y: Vec<i32> = (0..16).map(|_| rng.index(10) as i32).collect();
+        let hp = TrainHyper {
+            lr: 0.1,
+            beta: 0.9,
+            weight_decay: 1e-4,
+        };
+        let mut scratch = Vec::new();
+        let r = b.run_throughput("train_step (one node)", (16 * 4874) as f64, || {
+            black_box(spec.train_step(&mut params, &mut momentum, &x, &y, hp, &mut scratch))
+        });
+        println!("{}", r.report());
+
+        let ex: Vec<f32> = (0..256 * 64).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+        let ey: Vec<i32> = (0..256).map(|_| rng.index(10) as i32).collect();
+        let r = b.run_throughput("eval forward (256 samples)", 256.0, || {
+            black_box(spec.evaluate(&params, &ex, &ey))
+        });
+        println!("{}", r.report());
+    }
+
+    section("communication accounting: O(n log n) vs O(n^2)");
+    for &n in &[100usize, 1_000, 10_000, 100_000] {
+        // Lemma 4.1 log-scaling fan-in at 10% Byzantine, T=200, p=0.99
+        let s = rpel::sampling::selector::lemma41_min_s(n as u64, n as u64 / 10, 200, 0.99);
+        let rpel_msgs = n as u64 * s;
+        let all2all = n as u64 * (n as u64 - 1);
+        println!(
+            "n={n:<7} s={s:<4} RPEL msgs/round={rpel_msgs:<12} all-to-all={all2all:<14} saving {:.0}x",
+            all2all as f64 / rpel_msgs as f64
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! Sampling-substrate benchmarks: hypergeometric draws (the Figure-3
+//! engine pulls tens of millions), the EAF/Algorithm-2 selection, and the
+//! per-round epidemic pull sampler.
+//!
+//! Run: cargo bench --bench bench_sampling
+
+use rpel::benchkit::{black_box, section, Bencher};
+use rpel::coordinator::PullSampler;
+use rpel::sampling::{simulate_bhat_max, EafSimulator, Hypergeometric};
+use rpel::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(7);
+
+    section("hypergeometric sampling");
+    let hg_small = Hypergeometric::new(99, 10, 15);
+    let r = b.run_throughput("HG(99,10,15) table-inversion x10k", 10_000.0, || {
+        let mut acc = 0u64;
+        for _ in 0..10_000 {
+            acc += hg_small.sample(&mut rng);
+        }
+        black_box(acc)
+    });
+    println!("{}", r.report());
+    let r = b.run_throughput("HG(99,10,15) sequential-urn x10k", 10_000.0, || {
+        let mut acc = 0u64;
+        for _ in 0..10_000 {
+            acc += rng.hypergeometric(99, 10, 15);
+        }
+        black_box(acc)
+    });
+    println!("{}", r.report());
+    let hg_big = Hypergeometric::new(99_999, 10_000, 30);
+    let r = b.run_throughput("HG(99999,10000,30) table-inversion x10k", 10_000.0, || {
+        let mut acc = 0u64;
+        for _ in 0..10_000 {
+            acc += hg_big.sample(&mut rng);
+        }
+        black_box(acc)
+    });
+    println!("{}", r.report());
+
+    section("distribution construction (log-gamma CDF table)");
+    let r = b.run("Hypergeometric::new(99999,10000,30)", || {
+        black_box(Hypergeometric::new(99_999, 10_000, 30))
+    });
+    println!("{}", r.report());
+
+    section("Algorithm 2 / Figure 3 grid points");
+    let r = b.run("b̂-max draw: |H|·T = 18k (n=100 setting)", || {
+        black_box(simulate_bhat_max(&hg_small, 90 * 200, &mut rng))
+    });
+    println!("{}", r.report());
+    let quick = Bencher::quick();
+    let sim = EafSimulator::new(100_000, 10_000, 200, 5);
+    let r = quick.run("fig3 point: n=100k b=10k s=30 (5 sims)", || {
+        black_box(sim.point(30, &mut rng).bhat)
+    });
+    println!("{}", r.report());
+
+    section("epidemic pull sampler (per-round cost is n samples)");
+    for &(n, s) in &[(100usize, 15usize), (1_000, 30), (100_000, 30)] {
+        let sampler = PullSampler::new(n, s);
+        let r = b.run_throughput(&format!("pull n={n} s={s} x1k victims"), 1_000.0, || {
+            let mut acc = 0usize;
+            for v in 0..1_000 {
+                acc += sampler.sample(v % n, &mut rng).len();
+            }
+            black_box(acc)
+        });
+        println!("{}", r.report());
+    }
+}

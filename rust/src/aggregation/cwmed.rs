@@ -1,0 +1,61 @@
+//! Coordinate-wise median (Yin et al. 2018).
+
+use super::Aggregator;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CwMed;
+
+impl Aggregator for CwMed {
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        let m = inputs.len();
+        assert!(m > 0);
+        let mut buf: Vec<f32> = vec![0.0; m];
+        for (j, o) in out.iter_mut().enumerate() {
+            for (slot, row) in buf.iter_mut().zip(inputs) {
+                *slot = row[j];
+            }
+            super::cwtm::insertion_sort(&mut buf);
+            *o = if m % 2 == 1 {
+                buf[m / 2]
+            } else {
+                0.5 * (buf[m / 2 - 1] + buf[m / 2])
+            };
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "cwmed"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn odd_median() {
+        let rows = [vec![3.0f32], vec![1.0f32], vec![2.0f32]];
+        let inputs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0.0f32; 1];
+        CwMed.aggregate(&inputs, &mut out);
+        assert_eq!(out[0], 2.0);
+    }
+
+    #[test]
+    fn even_median_interpolates() {
+        let rows = [vec![1.0f32], vec![2.0f32], vec![10.0f32], vec![20.0f32]];
+        let inputs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0.0f32; 1];
+        CwMed.aggregate(&inputs, &mut out);
+        assert_eq!(out[0], 6.0);
+    }
+
+    #[test]
+    fn immune_to_minority_outliers() {
+        let rows = [vec![0.0f32], vec![0.5f32], vec![1.0f32], vec![1e9f32], vec![1e9f32]];
+        let inputs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0.0f32; 1];
+        CwMed.aggregate(&inputs, &mut out);
+        assert_eq!(out[0], 1.0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Geometric median via Weiszfeld iterations (Chen et al. 2017 use it as a
+//! robust aggregation primitive). Matches `python/compile/kernels/ref.py`
+//! exactly: fixed iteration count, epsilon-guarded denominators,
+//! initialized at the coordinate mean.
+
+use super::Aggregator;
+use crate::util::vecmath;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GeoMedian {
+    pub iters: usize,
+    pub eps: f64,
+}
+
+impl Default for GeoMedian {
+    fn default() -> Self {
+        GeoMedian {
+            iters: 100,
+            eps: 1e-8,
+        }
+    }
+}
+
+impl Aggregator for GeoMedian {
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        assert!(!inputs.is_empty());
+        let d = out.len();
+        // init: coordinate mean
+        vecmath::mean_of(inputs, out);
+        let mut next = vec![0.0f64; d];
+        for _ in 0..self.iters {
+            next.fill(0.0);
+            let mut wsum = 0.0f64;
+            for row in inputs {
+                let w = 1.0 / vecmath::dist(row, out).max(self.eps);
+                wsum += w;
+                for (nj, &xj) in next.iter_mut().zip(row.iter()) {
+                    *nj += w * xj as f64;
+                }
+            }
+            for (o, nj) in out.iter_mut().zip(next.iter()) {
+                *o = (*nj / wsum) as f32;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "geomedian"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn as_rows(data: &[Vec<f32>]) -> Vec<&[f32]> {
+        data.iter().map(|v| v.as_slice()).collect()
+    }
+
+    #[test]
+    fn majority_point_wins_on_line() {
+        let data = vec![vec![0.0f32], vec![0.0], vec![0.0], vec![10.0]];
+        let mut out = vec![0.0f32; 1];
+        GeoMedian::default().aggregate(&as_rows(&data), &mut out);
+        assert!(out[0].abs() < 0.5, "gm={}", out[0]);
+    }
+
+    #[test]
+    fn translation_equivariance() {
+        let base = vec![
+            vec![1.0f32, 2.0],
+            vec![3.0, -1.0],
+            vec![0.0, 0.5],
+            vec![2.0, 2.0],
+        ];
+        let shifted: Vec<Vec<f32>> = base
+            .iter()
+            .map(|r| r.iter().map(|x| x + 5.0).collect())
+            .collect();
+        let gm = GeoMedian::default();
+        let mut a = vec![0.0f32; 2];
+        let mut b = vec![0.0f32; 2];
+        gm.aggregate(&as_rows(&base), &mut a);
+        gm.aggregate(&as_rows(&shifted), &mut b);
+        for j in 0..2 {
+            assert!((a[j] + 5.0 - b[j]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn resists_large_outlier_better_than_mean() {
+        let data = vec![
+            vec![0.0f32, 0.0],
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+            vec![1e6, 1e6],
+        ];
+        let mut gm = vec![0.0f32; 2];
+        GeoMedian::default().aggregate(&as_rows(&data), &mut gm);
+        assert!(vecmath::norm(&gm) < 10.0, "gm={gm:?}");
+    }
+}

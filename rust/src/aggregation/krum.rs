@@ -1,0 +1,112 @@
+//! Krum (Blanchard et al. 2017): select the input whose summed squared
+//! distance to its m − b − 2 nearest peers (excluding itself) is smallest.
+
+use super::{pairwise_sqdist, Aggregator};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Krum {
+    pub b: usize,
+}
+
+impl Krum {
+    pub fn new(b: usize) -> Self {
+        Krum { b }
+    }
+
+    /// Index of the Krum-selected input.
+    pub fn select(&self, inputs: &[&[f32]]) -> usize {
+        let m = inputs.len();
+        let k = m
+            .checked_sub(self.b + 2)
+            .filter(|&k| k >= 1)
+            .unwrap_or_else(|| panic!("Krum needs m - b - 2 >= 1 (m={m}, b={})", self.b));
+        let dist = pairwise_sqdist(inputs);
+        let mut best = (f64::INFINITY, 0usize);
+        let mut neigh: Vec<f64> = Vec::with_capacity(m - 1);
+        for i in 0..m {
+            neigh.clear();
+            for j in 0..m {
+                if j != i {
+                    neigh.push(dist[i * m + j]);
+                }
+            }
+            neigh.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            let score: f64 = neigh[..k].iter().sum();
+            if score < best.0 {
+                best = (score, i);
+            }
+        }
+        best.1
+    }
+}
+
+impl Aggregator for Krum {
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        let idx = self.select(inputs);
+        out.copy_from_slice(inputs[idx]);
+    }
+
+    fn name(&self) -> &'static str {
+        "krum"
+    }
+
+    fn min_inputs(&self) -> usize {
+        self.b + 3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn as_rows(data: &[Vec<f32>]) -> Vec<&[f32]> {
+        data.iter().map(|v| v.as_slice()).collect()
+    }
+
+    #[test]
+    fn returns_an_input() {
+        let data = vec![
+            vec![0.0f32, 0.0],
+            vec![0.1, 0.1],
+            vec![0.2, -0.1],
+            vec![-0.1, 0.2],
+            vec![9.0, 9.0],
+        ];
+        let mut out = vec![0.0f32; 2];
+        Krum::new(1).aggregate(&as_rows(&data), &mut out);
+        assert!(data.iter().any(|r| r.as_slice() == out.as_slice()));
+    }
+
+    #[test]
+    fn rejects_isolated_outlier() {
+        let data = vec![
+            vec![0.0f32],
+            vec![0.1f32],
+            vec![0.2f32],
+            vec![0.15f32],
+            vec![1000.0f32],
+        ];
+        let idx = Krum::new(1).select(&as_rows(&data));
+        assert_ne!(idx, 4);
+    }
+
+    #[test]
+    fn picks_densest_point() {
+        let data = vec![
+            vec![0.0f32],
+            vec![0.01f32],
+            vec![0.02f32],
+            vec![5.0f32],
+            vec![6.0f32],
+        ];
+        let idx = Krum::new(1).select(&as_rows(&data));
+        assert!(idx <= 2, "selected {idx}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn panics_when_too_few_inputs() {
+        let data = vec![vec![0.0f32], vec![1.0f32]];
+        Krum::new(1).select(&as_rows(&data));
+    }
+}

@@ -1,0 +1,57 @@
+//! Plain averaging — the non-robust gossip baseline every robust figure
+//! compares against (it collapses under any of the paper's attacks).
+
+use super::Aggregator;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Mean;
+
+impl Aggregator for Mean {
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        assert!(!inputs.is_empty());
+        let inv = 1.0f64 / inputs.len() as f64;
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for row in inputs {
+                acc += row[j] as f64;
+            }
+            *o = (acc * inv) as f32;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "mean"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages() {
+        let a = vec![0.0f32, 2.0];
+        let b = vec![2.0f32, 4.0];
+        let mut out = vec![0.0f32; 2];
+        Mean.aggregate(&[&a, &b], &mut out);
+        assert_eq!(out, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn single_input_identity() {
+        let a = vec![5.0f32, -1.0];
+        let mut out = vec![0.0f32; 2];
+        Mean.aggregate(&[&a], &mut out);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn outlier_drags_mean() {
+        // documents WHY mean is the non-robust baseline
+        let honest = vec![0.0f32];
+        let byz = vec![1e9f32];
+        let mut out = vec![0.0f32; 1];
+        Mean.aggregate(&[&honest, &honest, &byz], &mut out);
+        assert!(out[0] > 1e8);
+    }
+}

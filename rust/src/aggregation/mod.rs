@@ -1,0 +1,213 @@
+//! Robust aggregation rules — Layer-3-native implementations of every rule
+//! the paper uses or compares against, plus the HLO/Pallas-backed path
+//! (see [`crate::runtime`]) for the headline RPEL rule.
+//!
+//! Two families:
+//!
+//! * **Epidemic (pull) rules** implement [`Aggregator`]: given the node's
+//!   own half-step model (first row) and the s pulled models, produce the
+//!   new model. These are `(s, b̂, κ)`-robust rules in the sense of
+//!   Definition 5.1: Mean (non-robust baseline), CWTM, CWMed, Krum,
+//!   Geometric Median, NNM∘{any of the above} — the paper's choice is
+//!   NNM∘CWTM (§6.1).
+//!
+//! * **Fixed-graph gossip rules** implement [`GossipAggregator`]: given the
+//!   node's model, its neighbors' models and gossip weights, produce the
+//!   new model. ClippedGossip (He et al. 2022), CS+ (Gaucher et al. 2025),
+//!   GTS (NNA adapted to sparse graphs) and RTC (Yang & Ghaderi 2024).
+
+pub mod cwmed;
+pub mod cwtm;
+pub mod geomedian;
+pub mod gossip;
+pub mod krum;
+pub mod mean;
+pub mod nnm;
+
+pub use cwmed::CwMed;
+pub use cwtm::CwTm;
+pub use geomedian::GeoMedian;
+pub use gossip::{ClippedGossip, CsPlus, GossipAggregator, Gts, NaiveGossip, Rtc};
+pub use krum::Krum;
+pub use mean::Mean;
+pub use nnm::Nnm;
+
+use crate::util::vecmath;
+
+/// A robust aggregation rule over m = s+1 vectors (Definition 5.1 family).
+pub trait Aggregator: Send {
+    /// Aggregate `inputs` (row 0 = own half-step model) into `out`.
+    /// All rows have equal length d = out.len().
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]);
+
+    /// Human-readable rule name (figures/benches).
+    fn name(&self) -> &'static str;
+
+    /// Smallest input count the rule is defined for (CWTM needs 2b+1,
+    /// Krum b+3, …). The coordinator keeps the node's own model when a
+    /// round delivers fewer rows (possible in push mode / under DoS).
+    fn min_inputs(&self) -> usize {
+        1
+    }
+}
+
+/// Named rule selection for configs / CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RuleKind {
+    /// Plain average — the non-robust gossip baseline.
+    Mean,
+    /// Coordinate-wise trimmed mean with trim radius b̂.
+    CwTm,
+    /// Coordinate-wise median.
+    CwMed,
+    /// Krum selection.
+    Krum,
+    /// Geometric median (Weiszfeld).
+    GeoMedian,
+    /// NNM pre-aggregation, then CWTM — the paper's rule.
+    NnmCwtm,
+    /// NNM then coordinate-wise median.
+    NnmCwMed,
+    /// NNM then Krum.
+    NnmKrum,
+}
+
+impl RuleKind {
+    pub fn parse(s: &str) -> Option<RuleKind> {
+        Some(match s {
+            "mean" => RuleKind::Mean,
+            "cwtm" => RuleKind::CwTm,
+            "cwmed" => RuleKind::CwMed,
+            "krum" => RuleKind::Krum,
+            "geomedian" | "gm" => RuleKind::GeoMedian,
+            "nnm_cwtm" | "nnm-cwtm" => RuleKind::NnmCwtm,
+            "nnm_cwmed" | "nnm-cwmed" => RuleKind::NnmCwMed,
+            "nnm_krum" | "nnm-krum" => RuleKind::NnmKrum,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleKind::Mean => "mean",
+            RuleKind::CwTm => "cwtm",
+            RuleKind::CwMed => "cwmed",
+            RuleKind::Krum => "krum",
+            RuleKind::GeoMedian => "geomedian",
+            RuleKind::NnmCwtm => "nnm_cwtm",
+            RuleKind::NnmCwMed => "nnm_cwmed",
+            RuleKind::NnmKrum => "nnm_krum",
+        }
+    }
+
+    /// Build the rule for trim/selection radius `bhat`.
+    pub fn build(&self, bhat: usize) -> Box<dyn Aggregator> {
+        match self {
+            RuleKind::Mean => Box::new(Mean),
+            RuleKind::CwTm => Box::new(CwTm::new(bhat)),
+            RuleKind::CwMed => Box::new(CwMed),
+            RuleKind::Krum => Box::new(Krum::new(bhat)),
+            RuleKind::GeoMedian => Box::new(GeoMedian::default()),
+            RuleKind::NnmCwtm => Box::new(Nnm::new(bhat, CwTm::new(bhat))),
+            RuleKind::NnmCwMed => Box::new(Nnm::new(bhat, CwMed)),
+            RuleKind::NnmKrum => Box::new(Nnm::new(bhat, Krum::new(bhat))),
+        }
+    }
+}
+
+/// Pairwise squared-distance matrix of the input rows (f64, exactness
+/// matters for neighbor rankings under adversarial magnitudes).
+pub fn pairwise_sqdist(inputs: &[&[f32]]) -> Vec<f64> {
+    let m = inputs.len();
+    let mut d = vec![0.0f64; m * m];
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let v = vecmath::dist_sq(inputs[i], inputs[j]);
+            d[i * m + j] = v;
+            d[j * m + i] = v;
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(data: &[Vec<f32>]) -> Vec<&[f32]> {
+        data.iter().map(|v| v.as_slice()).collect()
+    }
+
+    #[test]
+    fn rulekind_parse_roundtrip() {
+        for kind in [
+            RuleKind::Mean,
+            RuleKind::CwTm,
+            RuleKind::CwMed,
+            RuleKind::Krum,
+            RuleKind::GeoMedian,
+            RuleKind::NnmCwtm,
+            RuleKind::NnmCwMed,
+            RuleKind::NnmKrum,
+        ] {
+            assert_eq!(RuleKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(RuleKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn pairwise_matrix_properties() {
+        let data = vec![vec![0.0, 0.0], vec![3.0, 4.0], vec![0.0, 1.0]];
+        let d = pairwise_sqdist(&rows(&data));
+        assert_eq!(d[0 * 3 + 1], 25.0);
+        assert_eq!(d[1 * 3 + 0], 25.0);
+        assert_eq!(d[0 * 3 + 0], 0.0);
+        assert_eq!(d[0 * 3 + 2], 1.0);
+    }
+
+    #[test]
+    fn all_rules_unanimity() {
+        // R(x, x, ..., x) = x for every rule (agreement property)
+        let x = vec![1.5f32, -2.0, 0.25, 7.0];
+        let data: Vec<Vec<f32>> = (0..7).map(|_| x.clone()).collect();
+        let inputs = rows(&data);
+        for kind in [
+            RuleKind::Mean,
+            RuleKind::CwTm,
+            RuleKind::CwMed,
+            RuleKind::Krum,
+            RuleKind::GeoMedian,
+            RuleKind::NnmCwtm,
+            RuleKind::NnmCwMed,
+            RuleKind::NnmKrum,
+        ] {
+            let rule = kind.build(2);
+            let mut out = vec![0.0f32; 4];
+            rule.aggregate(&inputs, &mut out);
+            for (a, b) in out.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-5, "{} failed unanimity", rule.name());
+            }
+        }
+    }
+
+    #[test]
+    fn robust_rules_bounded_by_input_range() {
+        // output coordinates stay within [min, max] of inputs for the
+        // coordinate-wise and NNM rules
+        let data = vec![
+            vec![0.0f32, 10.0],
+            vec![1.0, 11.0],
+            vec![2.0, 12.0],
+            vec![100.0, -100.0], // outlier
+            vec![1.5, 10.5],
+        ];
+        let inputs = rows(&data);
+        for kind in [RuleKind::CwTm, RuleKind::CwMed, RuleKind::NnmCwtm] {
+            let rule = kind.build(1);
+            let mut out = vec![0.0f32; 2];
+            rule.aggregate(&inputs, &mut out);
+            assert!(out[0] >= 0.0 && out[0] <= 100.0, "{}", rule.name());
+            assert!(out[1] >= -100.0 && out[1] <= 12.0, "{}", rule.name());
+        }
+    }
+}

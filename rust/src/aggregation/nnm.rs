@@ -1,0 +1,151 @@
+//! NNM — Nearest-Neighbor Mixing pre-aggregation (Allouah et al. 2023).
+//!
+//! Each input vector is replaced by the average of its `m − b` nearest
+//! inputs (L2, including itself); a base rule is then applied to the mixed
+//! vectors. Allouah et al. show NNM∘{CWTM, Krum, CWMed, GM} achieves
+//! κ = O(b/m), which the paper leans on for Corollary 5.7.
+//!
+//! Tie-breaking matches the Pallas/jnp stable argsort: equal distances
+//! resolve by index order. The mixing loop reuses a flat scratch matrix —
+//! no per-round allocation when driven through [`NnmScratch`].
+
+use super::{pairwise_sqdist, Aggregator};
+
+#[derive(Debug)]
+pub struct Nnm<A: Aggregator> {
+    pub b: usize,
+    pub base: A,
+    /// reusable mixing buffer — the m·d matrix would otherwise be a fresh
+    /// megabyte-scale allocation on every aggregation (once per honest
+    /// node per round, the coordinator's hottest call)
+    scratch: std::cell::RefCell<Vec<f32>>,
+}
+
+impl<A: Aggregator> Nnm<A> {
+    pub fn new(b: usize, base: A) -> Self {
+        Nnm {
+            b,
+            base,
+            scratch: std::cell::RefCell::new(Vec::new()),
+        }
+    }
+
+    /// Compute the mixed matrix into `mixed` (m rows of d, row-major).
+    pub fn mix_into(&self, inputs: &[&[f32]], mixed: &mut Vec<f32>) {
+        let m = inputs.len();
+        let d = inputs[0].len();
+        let k = m - self.b;
+        assert!(k >= 1, "NNM needs m - b >= 1 (m={m}, b={})", self.b);
+        let dist = pairwise_sqdist(inputs);
+        mixed.clear();
+        mixed.resize(m * d, 0.0);
+        let mut order: Vec<usize> = Vec::with_capacity(m);
+        let inv = 1.0 / k as f32;
+        for i in 0..m {
+            order.clear();
+            order.extend(0..m);
+            // stable sort by distance, ties by index (order is already
+            // index-ascending, and sort_by is stable)
+            order.sort_by(|&a, &b| dist[i * m + a].partial_cmp(&dist[i * m + b]).unwrap());
+            let row = &mut mixed[i * d..(i + 1) * d];
+            for &j in &order[..k] {
+                crate::util::vecmath::axpy(row, 1.0, inputs[j]);
+            }
+            crate::util::vecmath::scale(row, inv);
+        }
+    }
+}
+
+impl<A: Aggregator> Aggregator for Nnm<A> {
+    fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        let m = inputs.len();
+        let d = out.len();
+        let mut mixed = self.scratch.borrow_mut();
+        self.mix_into(inputs, &mut mixed);
+        let rows: Vec<&[f32]> = (0..m).map(|i| &mixed[i * d..(i + 1) * d]).collect();
+        self.base.aggregate(&rows, out);
+    }
+
+    fn name(&self) -> &'static str {
+        // static str limitation: report the composite family name
+        "nnm"
+    }
+
+    fn min_inputs(&self) -> usize {
+        (self.b + 1).max(self.base.min_inputs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{CwTm, Mean};
+    use super::*;
+
+    fn as_rows(data: &[Vec<f32>]) -> Vec<&[f32]> {
+        data.iter().map(|v| v.as_slice()).collect()
+    }
+
+    #[test]
+    fn b0_mix_is_global_mean_everywhere() {
+        let data = vec![vec![0.0f32, 2.0], vec![2.0, 4.0], vec![4.0, 0.0]];
+        let nnm = Nnm::new(0, Mean);
+        let mut mixed = Vec::new();
+        nnm.mix_into(&as_rows(&data), &mut mixed);
+        for i in 0..3 {
+            assert_eq!(&mixed[i * 2..i * 2 + 2], &[2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn mixing_shrinks_spread() {
+        // Lemma-5.2 flavor: NNM reduces the variance among honest vectors
+        let data = vec![
+            vec![0.0f32],
+            vec![1.0],
+            vec![2.0],
+            vec![3.0],
+            vec![50.0], // outlier
+        ];
+        let nnm = Nnm::new(1, Mean);
+        let mut mixed = Vec::new();
+        nnm.mix_into(&as_rows(&data), &mut mixed);
+        // honest rows (first 4) mixed values stay near the honest cluster
+        for i in 0..4 {
+            assert!(mixed[i] < 10.0, "row {i} = {}", mixed[i]);
+        }
+    }
+
+    #[test]
+    fn self_always_included() {
+        // the nearest neighbor of any vector is itself (distance 0)
+        let data = vec![vec![0.0f32], vec![100.0], vec![200.0]];
+        let nnm = Nnm::new(2, Mean); // k = 1: each row mixes only itself
+        let mut mixed = Vec::new();
+        nnm.mix_into(&as_rows(&data), &mut mixed);
+        assert_eq!(mixed, vec![0.0, 100.0, 200.0]);
+    }
+
+    #[test]
+    fn composite_with_cwtm_resists_attack() {
+        // 2 Byzantine at huge magnitude among 7: NNM∘CWTM output must stay
+        // within the honest hull
+        let mut data: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32 * 0.1]).collect();
+        data.push(vec![1e8]);
+        data.push(vec![-1e8]);
+        let rule = Nnm::new(2, CwTm::new(2));
+        let mut out = vec![0.0f32; 1];
+        rule.aggregate(&as_rows(&data), &mut out);
+        assert!((0.0..=0.4).contains(&out[0]), "out={}", out[0]);
+    }
+
+    #[test]
+    fn tie_break_by_index_matches_oracle_contract() {
+        // two equidistant neighbors: lower index wins
+        let data = vec![vec![0.0f32], vec![1.0], vec![-1.0], vec![5.0]];
+        let nnm = Nnm::new(2, Mean); // k = 2: self + one of {1, 2} for row 0
+        let mut mixed = Vec::new();
+        nnm.mix_into(&as_rows(&data), &mut mixed);
+        // row 0 mixes self(0.0) and index-1 (1.0) -> 0.5
+        assert!((mixed[0] - 0.5).abs() < 1e-6, "mixed0={}", mixed[0]);
+    }
+}

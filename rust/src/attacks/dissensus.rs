@@ -1,0 +1,131 @@
+//! Dissensus attack (He et al. 2022) — built for gossip/graph updates.
+//!
+//! Each Byzantine participant seen by victim i reports a model on the
+//! *opposite side* of i from its honest neighborhood:
+//! `mal = x_i − ε (x̄_received − x_i)`, so the victim's aggregation of
+//! {honest pull, malicious pull} cancels toward zero progress and the
+//! honest population is pushed apart (no consensus). Per-victim crafting —
+//! each honest node receives a different malicious vector — exercises the
+//! paper's "distinct updates to different honest nodes in the same
+//! iteration" capability.
+
+use super::{Attack, AttackContext};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Dissensus {
+    /// repulsion strength ε (He et al. tune per topology; 1.0 default)
+    pub epsilon: f32,
+}
+
+impl Default for Dissensus {
+    fn default() -> Self {
+        Dissensus { epsilon: 1.0 }
+    }
+}
+
+impl Attack for Dissensus {
+    fn craft(&self, ctx: &AttackContext<'_>, out: &mut [Vec<f32>]) {
+        let d = ctx.victim_half.len();
+        // consensus direction: mean of what the victim received from honest
+        // peers (fall back to global honest mean when it pulled none)
+        let mut dir = vec![0.0f32; d];
+        if ctx.honest_received.is_empty() {
+            for j in 0..d {
+                dir[j] = ctx.honest_mean[j] - ctx.victim_half[j];
+            }
+        } else {
+            let inv = 1.0 / ctx.honest_received.len() as f32;
+            for h in ctx.honest_received {
+                for j in 0..d {
+                    dir[j] += (h[j] - ctx.victim_half[j]) * inv;
+                }
+            }
+        }
+        for row in out.iter_mut() {
+            for j in 0..d {
+                row[j] = ctx.victim_half[j] - self.epsilon * dir[j];
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "dissensus"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::Fixture;
+    use super::*;
+
+    #[test]
+    fn opposes_consensus_direction() {
+        let f = Fixture::new(4);
+        let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
+        let ctx = AttackContext {
+            victim_half: &f.honest[0],
+            victim_prev: &f.prev[0],
+            honest_received: &refs[1..4],
+            honest_all: &refs,
+            honest_mean: &f.mean,
+            honest_prev_mean: &f.prev_mean,
+            n: 7,
+            b: 2,
+        };
+        let mut out = vec![vec![0.0f32; 4]];
+        Dissensus::default().craft(&ctx, &mut out);
+        // (mal - victim) · (consensus - victim) < 0
+        let mut ip = 0.0f64;
+        for j in 0..4 {
+            let cons: f32 =
+                refs[1..4].iter().map(|h| h[j]).sum::<f32>() / 3.0 - f.honest[0][j];
+            ip += ((out[0][j] - f.honest[0][j]) * cons) as f64;
+        }
+        assert!(ip < 0.0, "ip={ip}");
+    }
+
+    #[test]
+    fn per_victim_distinct_updates() {
+        // two different victims receive different malicious vectors
+        let f = Fixture::new(4);
+        let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
+        let mk = |victim: usize| {
+            let ctx = AttackContext {
+                victim_half: &f.honest[victim],
+                victim_prev: &f.prev[victim],
+                honest_received: &refs[1..3],
+                honest_all: &refs,
+                honest_mean: &f.mean,
+                honest_prev_mean: &f.prev_mean,
+                n: 7,
+                b: 2,
+            };
+            let mut out = vec![vec![0.0f32; 4]];
+            Dissensus::default().craft(&ctx, &mut out);
+            out.remove(0)
+        };
+        assert_ne!(mk(0), mk(4));
+    }
+
+    #[test]
+    fn empty_received_falls_back_to_global_mean() {
+        let f = Fixture::new(3);
+        let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
+        let ctx = AttackContext {
+            victim_half: &f.honest[0],
+            victim_prev: &f.prev[0],
+            honest_received: &[],
+            honest_all: &refs,
+            honest_mean: &f.mean,
+            honest_prev_mean: &f.prev_mean,
+            n: 7,
+            b: 2,
+        };
+        let mut out = vec![vec![0.0f32; 3]];
+        Dissensus::default().craft(&ctx, &mut out);
+        for j in 0..3 {
+            let dir = f.mean[j] - f.honest[0][j];
+            assert!((out[0][j] - (f.honest[0][j] - dir)).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! The omniscient Byzantine adversary engine (paper §3.2, §6.1).
+//!
+//! The threat model is maximal: the adversary controls b nodes, knows every
+//! honest update, knows which of its nodes each victim sampled this round,
+//! and may send **different** malicious vectors to different victims within
+//! the same iteration. Accordingly, [`Attack::craft`] is invoked once per
+//! (victim, round) with full visibility into the honest state, after the
+//! honest half-steps are computed and the pull sets are drawn — exactly the
+//! information an omniscient attacker has in the paper.
+//!
+//! Implemented state-of-the-art attacks (§6.1 + Appendix C.2):
+//!
+//! * [`SignFlip`]  — flip the direction of the mean honest update
+//!   (Li et al. 2020).
+//! * [`Foe`]       — Fall of Empires: inner-product manipulation, sends a
+//!   small negative multiple of the honest update (Xie et al. 2020).
+//! * [`Alie`]      — A Little Is Enough: stays z_max standard deviations
+//!   from the coordinate-wise honest mean, inside the variance envelope
+//!   (Baruch et al. 2019).
+//! * [`Dissensus`] — pushes each victim *away* from its neighborhood
+//!   consensus direction (He et al. 2022, tailored to gossip updates).
+
+pub mod alie;
+pub mod dissensus;
+pub mod foe;
+pub mod sign_flip;
+
+pub use alie::Alie;
+pub use dissensus::Dissensus;
+pub use foe::Foe;
+pub use sign_flip::SignFlip;
+
+/// Everything the omniscient adversary sees when attacking one victim in
+/// one round.
+pub struct AttackContext<'a> {
+    /// The victim's own half-step model x_i^{t+1/2}.
+    pub victim_half: &'a [f32],
+    /// The victim's model at the start of the round, x_i^t.
+    pub victim_prev: &'a [f32],
+    /// Honest half-step models the victim actually pulled this round.
+    pub honest_received: &'a [&'a [f32]],
+    /// All honest half-step models in the system (omniscience).
+    pub honest_all: &'a [&'a [f32]],
+    /// Coordinate-wise mean of all honest half-steps (precomputed once per
+    /// round by the coordinator — every attack uses it).
+    pub honest_mean: &'a [f32],
+    /// Coordinate-wise mean of the honest models at round start.
+    pub honest_prev_mean: &'a [f32],
+    /// Total nodes / Byzantine nodes (for ALIE's z_max).
+    pub n: usize,
+    pub b: usize,
+}
+
+/// A Byzantine attack: craft `count` malicious models for this victim.
+///
+/// `out` arrives as `count` preallocated rows of length d; the attack
+/// overwrites them (no allocation on the round path).
+pub trait Attack: Send {
+    fn craft(&self, ctx: &AttackContext<'_>, out: &mut [Vec<f32>]);
+    fn name(&self) -> &'static str;
+}
+
+/// Named attack selection for configs / CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AttackKind {
+    None,
+    SignFlip,
+    Foe,
+    Alie,
+    Dissensus,
+    /// Denial of service (paper Appendix D): Byzantine nodes withhold
+    /// their model when pulled. Under the synchronous model the
+    /// coordinator simply proceeds with the honest responses — the
+    /// appendix's argument that pull + synchrony neutralizes DoS.
+    Dos,
+}
+
+impl AttackKind {
+    pub fn parse(s: &str) -> Option<AttackKind> {
+        Some(match s {
+            "none" | "no_attack" => AttackKind::None,
+            "sf" | "sign_flip" | "signflip" => AttackKind::SignFlip,
+            "foe" | "fall_of_empires" => AttackKind::Foe,
+            "alie" | "a_little_is_enough" => AttackKind::Alie,
+            "dissensus" => AttackKind::Dissensus,
+            "dos" | "denial_of_service" => AttackKind::Dos,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttackKind::None => "none",
+            AttackKind::SignFlip => "sf",
+            AttackKind::Foe => "foe",
+            AttackKind::Alie => "alie",
+            AttackKind::Dissensus => "dissensus",
+            AttackKind::Dos => "dos",
+        }
+    }
+
+    /// Build the attack with paper-default strengths. Returns None for
+    /// `AttackKind::None` and `AttackKind::Dos` (nothing to craft — DoS is
+    /// a withholding behavior the coordinator models by dropping rows).
+    pub fn build(&self) -> Option<Box<dyn Attack>> {
+        match self {
+            AttackKind::None | AttackKind::Dos => None,
+            AttackKind::SignFlip => Some(Box::new(SignFlip::default())),
+            AttackKind::Foe => Some(Box::new(Foe::default())),
+            AttackKind::Alie => Some(Box::new(Alie::default())),
+            AttackKind::Dissensus => Some(Box::new(Dissensus::default())),
+        }
+    }
+
+    /// All attacks a figure sweeps over (the paper's standard panel).
+    pub fn panel() -> [AttackKind; 4] {
+        [
+            AttackKind::SignFlip,
+            AttackKind::Foe,
+            AttackKind::Alie,
+            AttackKind::Dissensus,
+        ]
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    /// Build a small honest population + context views for attack tests.
+    pub struct Fixture {
+        pub honest: Vec<Vec<f32>>,
+        pub prev: Vec<Vec<f32>>,
+        pub mean: Vec<f32>,
+        pub prev_mean: Vec<f32>,
+    }
+
+    impl Fixture {
+        pub fn new(d: usize) -> Self {
+            let honest: Vec<Vec<f32>> = (0..5)
+                .map(|i| (0..d).map(|j| (i as f32) * 0.1 + j as f32).collect())
+                .collect();
+            let prev: Vec<Vec<f32>> = (0..5)
+                .map(|i| (0..d).map(|j| (i as f32) * 0.1 + j as f32 + 1.0).collect())
+                .collect();
+            let mut mean = vec![0.0f32; d];
+            let mut prev_mean = vec![0.0f32; d];
+            for j in 0..d {
+                mean[j] = honest.iter().map(|h| h[j]).sum::<f32>() / 5.0;
+                prev_mean[j] = prev.iter().map(|h| h[j]).sum::<f32>() / 5.0;
+            }
+            Fixture {
+                honest,
+                prev,
+                mean,
+                prev_mean,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [
+            AttackKind::None,
+            AttackKind::SignFlip,
+            AttackKind::Foe,
+            AttackKind::Alie,
+            AttackKind::Dissensus,
+        ] {
+            assert_eq!(AttackKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(AttackKind::parse("zzz"), None);
+    }
+
+    #[test]
+    fn none_builds_nothing() {
+        assert!(AttackKind::None.build().is_none());
+        assert!(AttackKind::Alie.build().is_some());
+    }
+
+    #[test]
+    fn panel_has_all_four() {
+        assert_eq!(AttackKind::panel().len(), 4);
+    }
+}

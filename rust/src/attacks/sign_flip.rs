@@ -1,0 +1,95 @@
+//! Sign-Flipping attack (Li et al. 2020).
+//!
+//! The honest population moves by u = x̄_H^{t+1/2} − x̄_H^t this round; the
+//! attacker reports the model that moves by −γ·u instead, i.e.
+//! `mal = x̄_H^t − γ (x̄_H^{t+1/2} − x̄_H^t)`. With γ = 1 this is the exact
+//! mirrored update; the published attack scales the flip (γ > 1) so that a
+//! Byzantine *minority* can stall or reverse a plain average — with γ = 1
+//! and b/m < 1/2 the poisoned mean still moves forward by
+//! (h − b)/m · u and the attack is toothless. Default γ = 4 (the
+//! magnitude range used by Li et al. 2020 / Karimireddy et al. 2020).
+
+use super::{Attack, AttackContext};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SignFlip {
+    /// flip magnitude γ
+    pub gamma: f32,
+}
+
+impl Default for SignFlip {
+    fn default() -> Self {
+        SignFlip { gamma: 4.0 }
+    }
+}
+
+impl Attack for SignFlip {
+    fn craft(&self, ctx: &AttackContext<'_>, out: &mut [Vec<f32>]) {
+        for row in out.iter_mut() {
+            for (j, o) in row.iter_mut().enumerate() {
+                let update = ctx.honest_mean[j] - ctx.honest_prev_mean[j];
+                *o = ctx.honest_prev_mean[j] - self.gamma * update;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sf"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::Fixture;
+    use super::*;
+
+    #[test]
+    fn mirrors_the_honest_update() {
+        let f = Fixture::new(4);
+        let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
+        let ctx = AttackContext {
+            victim_half: &f.honest[0],
+            victim_prev: &f.prev[0],
+            honest_received: &refs[..2],
+            honest_all: &refs,
+            honest_mean: &f.mean,
+            honest_prev_mean: &f.prev_mean,
+            n: 7,
+            b: 2,
+        };
+        let mut out = vec![vec![0.0f32; 4]; 2];
+        SignFlip { gamma: 1.0 }.craft(&ctx, &mut out);
+        for row in &out {
+            for j in 0..4 {
+                let u = f.mean[j] - f.prev_mean[j];
+                assert!((row[j] - (f.prev_mean[j] - u)).abs() < 1e-6);
+            }
+        }
+        // both malicious copies identical for SF (direction attack)
+        assert_eq!(out[0], out[1]);
+    }
+
+    #[test]
+    fn opposes_honest_direction() {
+        let f = Fixture::new(3);
+        let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
+        let ctx = AttackContext {
+            victim_half: &f.honest[0],
+            victim_prev: &f.prev[0],
+            honest_received: &refs,
+            honest_all: &refs,
+            honest_mean: &f.mean,
+            honest_prev_mean: &f.prev_mean,
+            n: 6,
+            b: 1,
+        };
+        let mut out = vec![vec![0.0f32; 3]];
+        SignFlip::default().craft(&ctx, &mut out);
+        // inner product of (mal - prev_mean) with (mean - prev_mean) < 0
+        let mut ip = 0.0f64;
+        for j in 0..3 {
+            ip += ((out[0][j] - f.prev_mean[j]) * (f.mean[j] - f.prev_mean[j])) as f64;
+        }
+        assert!(ip < 0.0);
+    }
+}

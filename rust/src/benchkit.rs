@@ -1,0 +1,176 @@
+//! Micro/throughput benchmark harness (criterion is not in the offline
+//! crate set). Warmup + timed iterations, robust summary statistics, and
+//! criterion-style one-line reports. Used by every target in
+//! `rust/benches/`.
+
+use crate::util::stats::{self, Summary};
+use std::time::Instant;
+
+/// One benchmark's timing results.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// nanoseconds per iteration, one entry per timed sample
+    pub samples_ns: Vec<f64>,
+    pub summary: Summary,
+    /// optional throughput denominator (items per iteration)
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.summary.mean
+    }
+
+    /// Human units.
+    fn fmt_ns(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "{:<44} {:>12}/iter  (p50 {:>10}, p95 {:>10}, n={})",
+            self.name,
+            Self::fmt_ns(self.summary.mean),
+            Self::fmt_ns(self.summary.p50),
+            Self::fmt_ns(self.summary.p95),
+            self.summary.n,
+        );
+        if let Some(items) = self.items_per_iter {
+            let per_sec = items / (self.summary.mean / 1e9);
+            line.push_str(&format!("  [{:.2e} items/s]", per_sec));
+        }
+        line
+    }
+}
+
+/// Bench runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// iterations batched per sample (amortizes clock overhead)
+    pub iters_per_sample: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            samples: 12,
+            iters_per_sample: 1,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            samples: 5,
+            iters_per_sample: 1,
+        }
+    }
+
+    /// Time `f`, returning per-iteration stats. The closure should return
+    /// something observable to defeat dead-code elimination; its value is
+    /// black-boxed.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                black_box(f());
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / self.iters_per_sample as f64;
+            samples.push(ns);
+        }
+        let summary = stats::summarize(&samples);
+        BenchResult {
+            name: name.to_string(),
+            samples_ns: samples,
+            summary,
+            items_per_iter: None,
+        }
+    }
+
+    /// Like [`run`], annotating throughput (`items` processed per iter).
+    pub fn run_throughput<T>(
+        &self,
+        name: &str,
+        items: f64,
+        f: impl FnMut() -> T,
+    ) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.items_per_iter = Some(items);
+        r
+    }
+}
+
+/// Identity function the optimizer cannot see through.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header the way the bench binaries format output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sanity() {
+        let b = Bencher::quick();
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns() > 0.0);
+        assert_eq!(r.samples_ns.len(), 5);
+    }
+
+    #[test]
+    fn longer_work_times_longer() {
+        let b = Bencher {
+            warmup_iters: 1,
+            samples: 8,
+            iters_per_sample: 4,
+        };
+        // bounds go through black_box so release builds cannot
+        // constant-fold the loops away
+        let short = b.run("short", || {
+            (0..black_box(100u64)).fold(0u64, |a, x| a ^ x.wrapping_mul(31))
+        });
+        let long = b.run("long", || {
+            (0..black_box(1_000_000u64)).fold(0u64, |a, x| a ^ x.wrapping_mul(31))
+        });
+        assert!(long.mean_ns() > short.mean_ns());
+    }
+
+    #[test]
+    fn report_formats() {
+        let b = Bencher::quick();
+        let r = b.run_throughput("fmt", 1000.0, || black_box(1 + 1));
+        let line = r.report();
+        assert!(line.contains("fmt"));
+        assert!(line.contains("items/s"));
+    }
+}

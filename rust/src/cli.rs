@@ -1,0 +1,169 @@
+//! Command-line argument parsing (clap is not in the offline crate set).
+//!
+//! Grammar: `rpel <command> [--flag value | --flag=value | --switch] ...`.
+//! Typed accessors return errors naming the flag, and unknown-flag
+//! detection is driven by a per-command allowlist in `main.rs`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated integer list: `--grid 5,10,15`.
+    pub fn get_u64_list(&self, key: &str) -> Result<Option<Vec<u64>>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<u64>()
+                        .map_err(|_| format!("--{key} expects integers, got '{p}'"))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+
+    /// Reject flags/switches not in the allowlist (typo detection).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys().chain(self.switches.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k}; known: {}",
+                    known
+                        .iter()
+                        .map(|k| format!("--{k}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_flags_switches() {
+        let a = parse(&["figure", "--id", "fig1L", "--scale=paper", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("figure"));
+        assert_eq!(a.get("id"), Some("fig1L"));
+        assert_eq!(a.get("scale"), Some("paper"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["eaf", "--n", "100", "--frac", "0.1", "--grid", "5,10,15"]);
+        assert_eq!(a.get_usize("n").unwrap(), Some(100));
+        assert_eq!(a.get_f64("frac").unwrap(), Some(0.1));
+        assert_eq!(a.get_u64_list("grid").unwrap(), Some(vec![5, 10, 15]));
+        assert_eq!(a.get_usize("missing").unwrap(), None);
+        assert!(a.get_usize("frac").is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["list", "--presets"]);
+        assert!(a.has("presets"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["train", "config.toml", "--engine", "native"]);
+        assert_eq!(a.positional, vec!["config.toml"]);
+        assert_eq!(a.get("engine"), Some("native"));
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse(&["train", "--engin", "native"]);
+        let err = a.check_known(&["engine", "config"]).unwrap_err();
+        assert!(err.contains("engin"));
+        parse(&["train", "--engine", "native"])
+            .check_known(&["engine"])
+            .unwrap();
+    }
+}

@@ -1,0 +1,339 @@
+//! TOML → [`ExperimentConfig`] schema mapping.
+//!
+//! Config files look like:
+//!
+//! ```toml
+//! name = "my_run"
+//! task = "mnistlike"          # mnistlike | cifarlike | femnistlike | tiny
+//! engine = "hlo"              # hlo | native
+//!
+//! [nodes]
+//! n = 100
+//! byzantine = 10
+//!
+//! [topology]
+//! kind = "epidemic"           # epidemic | fixed_graph
+//! s = 15                      # epidemic fan-in (or edges = ... for graphs)
+//!
+//! [robustness]
+//! rule = "nnm_cwtm"
+//! attack = "alie"
+//! bhat = 7                    # omit to run Algorithm 2
+//!
+//! [training]
+//! rounds = 200
+//! batch = 25
+//! local_steps = 1
+//! lr = [[0, 0.5], [500, 0.1]] # piecewise-constant (round, lr)
+//! momentum = 0.9
+//! weight_decay = 1e-4
+//!
+//! [data]
+//! alpha = 1.0
+//! samples_per_node = 128
+//! test_samples = 512
+//! ```
+
+use std::collections::BTreeMap;
+
+use super::toml::{parse, TomlValue};
+use super::{EngineKind, ExperimentConfig, RuleChoice, Topology};
+use crate::aggregation::gossip::GossipRuleKind;
+use crate::aggregation::RuleKind;
+use crate::attacks::AttackKind;
+use crate::data::TaskKind;
+
+fn task_from_name(s: &str) -> Option<TaskKind> {
+    Some(match s {
+        "mnistlike" | "mnist" => TaskKind::MnistLike,
+        "cifarlike" | "cifar" => TaskKind::CifarLike,
+        "femnistlike" | "femnist" => TaskKind::FemnistLike,
+        "tiny" => TaskKind::Tiny,
+        _ => return None,
+    })
+}
+
+type Doc = BTreeMap<String, TomlValue>;
+
+fn get_usize(doc: &Doc, key: &str) -> Result<Option<usize>, String> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_i64()
+            .filter(|&i| i >= 0)
+            .map(|i| Some(i as usize))
+            .ok_or_else(|| format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn get_f64(doc: &Doc, key: &str) -> Result<Option<f64>, String> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| format!("'{key}' must be a number")),
+    }
+}
+
+fn get_str<'a>(doc: &'a Doc, key: &str) -> Result<Option<&'a str>, String> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| format!("'{key}' must be a string")),
+    }
+}
+
+/// Parse a TOML document into a config (missing keys fall back to the
+/// task's defaults).
+pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
+    let doc = parse(text).map_err(|e| e.to_string())?;
+
+    let task = match get_str(&doc, "task")? {
+        Some(name) => task_from_name(name).ok_or_else(|| format!("unknown task '{name}'"))?,
+        None => TaskKind::Tiny,
+    };
+    let mut cfg = ExperimentConfig::default_for(task);
+
+    if let Some(name) = get_str(&doc, "name")? {
+        cfg.name = name.to_string();
+    }
+    if let Some(arch) = get_str(&doc, "arch")? {
+        cfg.arch = arch.to_string();
+    }
+    if let Some(engine) = get_str(&doc, "engine")? {
+        cfg.engine =
+            EngineKind::parse(engine).ok_or_else(|| format!("unknown engine '{engine}'"))?;
+    }
+    if let Some(dir) = get_str(&doc, "artifacts_dir")? {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    if let Some(seed) = get_usize(&doc, "seed")? {
+        cfg.seed = seed as u64;
+    }
+
+    if let Some(n) = get_usize(&doc, "nodes.n")? {
+        cfg.n = n;
+    }
+    if let Some(b) = get_usize(&doc, "nodes.byzantine")? {
+        cfg.b = b;
+    }
+
+    let topo_kind = get_str(&doc, "topology.kind")?.unwrap_or("epidemic");
+    match topo_kind {
+        "epidemic" => {
+            let s = get_usize(&doc, "topology.s")?.unwrap_or(match cfg.topology {
+                Topology::Epidemic { s } => s,
+                _ => 6,
+            });
+            cfg.topology = Topology::Epidemic { s };
+        }
+        "epidemic_push" | "push" => {
+            let s = get_usize(&doc, "topology.s")?.unwrap_or(6);
+            cfg.topology = Topology::EpidemicPush { s };
+        }
+        "fixed_graph" | "graph" => {
+            let edges = match get_usize(&doc, "topology.edges")? {
+                Some(e) => e,
+                None => {
+                    // paper default: same budget as epidemic, K = n*s/2
+                    let s = get_usize(&doc, "topology.s")?
+                        .ok_or("fixed_graph topology needs 'edges' or 's'")?;
+                    cfg.n * s / 2
+                }
+            };
+            cfg.topology = Topology::FixedGraph { edges };
+            // default rule family must match
+            cfg.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
+        }
+        other => return Err(format!("unknown topology '{other}'")),
+    }
+
+    if let Some(rule) = get_str(&doc, "robustness.rule")? {
+        cfg.rule = if matches!(cfg.topology, Topology::Epidemic { .. }) {
+            RuleChoice::Epidemic(
+                RuleKind::parse(rule).ok_or_else(|| format!("unknown rule '{rule}'"))?,
+            )
+        } else {
+            RuleChoice::Gossip(
+                GossipRuleKind::parse(rule)
+                    .ok_or_else(|| format!("unknown gossip rule '{rule}'"))?,
+            )
+        };
+    }
+    if let Some(attack) = get_str(&doc, "robustness.attack")? {
+        cfg.attack =
+            AttackKind::parse(attack).ok_or_else(|| format!("unknown attack '{attack}'"))?;
+    }
+    cfg.bhat = get_usize(&doc, "robustness.bhat")?;
+
+    if let Some(v) = get_usize(&doc, "training.rounds")? {
+        cfg.rounds = v;
+    }
+    if let Some(v) = get_usize(&doc, "training.batch")? {
+        cfg.batch = v;
+    }
+    if let Some(v) = get_usize(&doc, "training.local_steps")? {
+        cfg.local_steps = v.max(1);
+    }
+    if let Some(v) = get_f64(&doc, "training.momentum")? {
+        cfg.momentum = v as f32;
+    }
+    if let Some(v) = get_f64(&doc, "training.weight_decay")? {
+        cfg.weight_decay = v as f32;
+    }
+    if let Some(v) = doc.get("training.lr") {
+        cfg.lr_schedule = parse_lr(v)?;
+    }
+
+    if let Some(v) = get_f64(&doc, "data.alpha")? {
+        cfg.alpha = v;
+    }
+    if let Some(v) = get_usize(&doc, "data.samples_per_node")? {
+        cfg.samples_per_node = v;
+    }
+    if let Some(v) = get_usize(&doc, "data.test_samples")? {
+        cfg.test_samples = v;
+    }
+    if let Some(v) = get_usize(&doc, "data.eval_every")? {
+        cfg.eval_every = v.max(1);
+    }
+
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// `lr = 0.5` or `lr = [[0, 0.5], [500, 0.1]]`.
+fn parse_lr(v: &TomlValue) -> Result<Vec<(usize, f32)>, String> {
+    if let Some(x) = v.as_f64() {
+        return Ok(vec![(0, x as f32)]);
+    }
+    let arr = v.as_array().ok_or("'training.lr' must be number or array")?;
+    let mut out = Vec::new();
+    for item in arr {
+        let pair = item
+            .as_array()
+            .filter(|p| p.len() == 2)
+            .ok_or("lr schedule entries must be [round, lr] pairs")?;
+        let round = pair[0]
+            .as_i64()
+            .filter(|&r| r >= 0)
+            .ok_or("lr schedule round must be a non-negative integer")? as usize;
+        let lr = pair[1].as_f64().ok_or("lr value must be a number")? as f32;
+        out.push((round, lr));
+    }
+    if out.is_empty() {
+        return Err("empty lr schedule".into());
+    }
+    Ok(out)
+}
+
+/// Load a config from a file path.
+pub fn load(path: &str) -> Result<ExperimentConfig, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read '{path}': {e}"))?;
+    from_toml_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"
+        name = "fig1L"
+        task = "mnistlike"
+        engine = "native"
+        seed = 3
+        [nodes]
+        n = 100
+        byzantine = 10
+        [topology]
+        kind = "epidemic"
+        s = 15
+        [robustness]
+        rule = "nnm_cwtm"
+        attack = "alie"
+        bhat = 7
+        [training]
+        rounds = 200
+        batch = 25
+        lr = [[0, 0.5]]
+        momentum = 0.9
+        weight_decay = 1e-4
+        [data]
+        alpha = 1.0
+        samples_per_node = 100
+    "#;
+
+    #[test]
+    fn full_document_parses() {
+        let cfg = from_toml_str(FULL).unwrap();
+        assert_eq!(cfg.name, "fig1L");
+        assert_eq!(cfg.n, 100);
+        assert_eq!(cfg.b, 10);
+        assert_eq!(cfg.topology, Topology::Epidemic { s: 15 });
+        assert_eq!(cfg.bhat, Some(7));
+        assert_eq!(cfg.attack, AttackKind::Alie);
+        assert_eq!(cfg.rounds, 200);
+        assert_eq!(cfg.seed, 3);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn minimal_document_uses_defaults() {
+        let cfg = from_toml_str("task = \"tiny\"").unwrap();
+        assert_eq!(cfg.task, TaskKind::Tiny);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn fixed_graph_via_s_budget() {
+        let cfg = from_toml_str(
+            r#"
+            task = "mnistlike"
+            [nodes]
+            n = 30
+            byzantine = 6
+            [topology]
+            kind = "fixed_graph"
+            s = 10
+            [robustness]
+            rule = "cs_plus"
+            bhat = 4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.topology, Topology::FixedGraph { edges: 150 });
+        assert!(matches!(
+            cfg.rule,
+            RuleChoice::Gossip(GossipRuleKind::CsPlus)
+        ));
+    }
+
+    #[test]
+    fn scalar_lr_accepted() {
+        let cfg = from_toml_str("task = \"tiny\"\n[training]\nlr = 0.25").unwrap();
+        assert_eq!(cfg.lr_schedule, vec![(0, 0.25)]);
+    }
+
+    #[test]
+    fn staircase_lr_parsed() {
+        let cfg = from_toml_str(
+            "task = \"tiny\"\n[training]\nlr = [[0, 0.5], [500, 0.1], [1000, 0.02]]",
+        )
+        .unwrap();
+        assert_eq!(cfg.lr_schedule.len(), 3);
+        assert_eq!(cfg.lr_at(700), 0.1);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(from_toml_str("task = \"nope\"").is_err());
+        assert!(from_toml_str("task = \"tiny\"\n[robustness]\nattack = \"x\"").is_err());
+        assert!(from_toml_str("task = \"tiny\"\n[topology]\nkind = \"ring\"").is_err());
+        // validation: byzantine majority
+        assert!(from_toml_str("task = \"tiny\"\n[nodes]\nn = 4\nbyzantine = 2").is_err());
+    }
+}

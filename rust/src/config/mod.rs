@@ -1,0 +1,304 @@
+//! Experiment configuration: schema, TOML loading, per-figure presets.
+
+pub mod file;
+pub mod presets;
+pub mod toml;
+
+use crate::aggregation::gossip::GossipRuleKind;
+use crate::aggregation::RuleKind;
+use crate::attacks::AttackKind;
+use crate::data::TaskKind;
+
+/// How nodes exchange models.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Topology {
+    /// RPEL: every round, every honest node pulls from `s` uniformly
+    /// random peers (paper §3.3).
+    Epidemic { s: usize },
+    /// Push-based Epidemic Learning (De Vos et al. 2024) — the variant
+    /// the paper argues is *not* Byzantine-safe (§3.3, Appendix D):
+    /// honest nodes push to `s` random recipients, but attackers are not
+    /// bound by `s` and flood every honest node each round. Included as
+    /// the pull-vs-push ablation.
+    EpidemicPush { s: usize },
+    /// Fixed-graph baseline: a random connected graph with `edges` edges
+    /// is drawn once; nodes gossip with their graph neighbors
+    /// (paper Appendix C.2).
+    FixedGraph { edges: usize },
+}
+
+/// Which aggregation family runs on top of the topology.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RuleChoice {
+    /// Definition-5.1 rule over the pulled set (epidemic topology).
+    Epidemic(RuleKind),
+    /// Gossip rule over graph neighborhoods (fixed-graph topology).
+    Gossip(GossipRuleKind),
+}
+
+impl RuleChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleChoice::Epidemic(k) => k.name(),
+            RuleChoice::Gossip(k) => k.name(),
+        }
+    }
+}
+
+/// Which compute engine executes train/eval/aggregate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT HLO executables via the PJRT CPU client — the production path
+    /// (L2 model + L1 Pallas aggregation).
+    Hlo,
+    /// Native Rust MLP engine (differential-testing twin / fast path for
+    /// wide baseline sweeps; see `model::native`).
+    Native,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        Some(match s {
+            "hlo" | "pjrt" => EngineKind::Hlo,
+            "native" | "rust" => EngineKind::Native,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Hlo => "hlo",
+            EngineKind::Native => "native",
+        }
+    }
+}
+
+/// Complete specification of one training run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub task: TaskKind,
+    /// Architecture name in the artifact manifest (e.g. "mlp_mnistlike").
+    pub arch: String,
+    /// Total nodes n, Byzantine count b.
+    pub n: usize,
+    pub b: usize,
+    pub topology: Topology,
+    /// Effective adversaries b̂. None = run Algorithm 2 at startup.
+    pub bhat: Option<usize>,
+    pub rule: RuleChoice,
+    pub attack: AttackKind,
+    /// Rounds T, batch size, local steps per round (paper §C.3).
+    pub rounds: usize,
+    pub batch: usize,
+    pub local_steps: usize,
+    /// Piecewise-constant LR schedule: (from_round, lr), ascending.
+    pub lr_schedule: Vec<(usize, f32)>,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Dirichlet heterogeneity α (paper §6.1).
+    pub alpha: f64,
+    pub samples_per_node: usize,
+    pub test_samples: usize,
+    /// Evaluate every k rounds (and always at the last round).
+    pub eval_every: usize,
+    pub seed: u64,
+    pub engine: EngineKind,
+    pub artifacts_dir: String,
+}
+
+impl ExperimentConfig {
+    /// Sensible defaults for a small epidemic run; presets/TOML override.
+    pub fn default_for(task: TaskKind) -> ExperimentConfig {
+        ExperimentConfig {
+            name: format!("default_{}", task.name()),
+            task,
+            arch: task.default_arch().to_string(),
+            n: 20,
+            b: 3,
+            topology: Topology::Epidemic { s: 6 },
+            bhat: None,
+            rule: RuleChoice::Epidemic(RuleKind::NnmCwtm),
+            attack: AttackKind::Alie,
+            rounds: 100,
+            batch: 16,
+            local_steps: 1,
+            lr_schedule: vec![(0, 0.5)],
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            alpha: 1.0,
+            samples_per_node: 128,
+            test_samples: 512,
+            eval_every: 10,
+            seed: 1,
+            engine: EngineKind::Native,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+
+    /// LR at a given round (piecewise-constant schedule).
+    pub fn lr_at(&self, round: usize) -> f32 {
+        let mut lr = self.lr_schedule.first().map(|&(_, v)| v).unwrap_or(0.1);
+        for &(from, v) in &self.lr_schedule {
+            if round >= from {
+                lr = v;
+            }
+        }
+        lr
+    }
+
+    /// Honest node count |H| = n − b.
+    pub fn honest(&self) -> usize {
+        self.n - self.b
+    }
+
+    /// Messages exchanged per round: n·s for epidemic pulls, 2·|E| for a
+    /// gossip round (each edge carries one model in each direction) —
+    /// the communication-budget bookkeeping behind figures 4–7. In push
+    /// mode the Byzantine nodes flood (b·|H| extra messages): exactly the
+    /// cost asymmetry the pull design removes.
+    pub fn messages_per_round(&self) -> usize {
+        match self.topology {
+            Topology::Epidemic { s } => self.n * s,
+            Topology::EpidemicPush { s } => (self.n - self.b) * s + self.b * (self.n - self.b),
+            Topology::FixedGraph { edges } => 2 * edges,
+        }
+    }
+
+    /// Validate internal consistency; returns a descriptive error string.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n < 2 {
+            return Err("need at least 2 nodes".into());
+        }
+        if self.b >= self.n.div_ceil(2) {
+            return Err(format!(
+                "Byzantine majority: b={} must be < n/2 = {}",
+                self.b,
+                self.n / 2
+            ));
+        }
+        match self.topology {
+            Topology::Epidemic { s } => {
+                if s == 0 || s > self.n - 1 {
+                    return Err(format!("s={s} must be in [1, n-1]"));
+                }
+                if let Some(bh) = self.bhat {
+                    if 2 * bh >= s + 1 {
+                        return Err(format!(
+                            "effective adversarial fraction {bh}/{} ≥ 1/2: \
+                             no (s, b̂, κ)-robust rule exists (Def. 5.1)",
+                            s + 1
+                        ));
+                    }
+                }
+                if matches!(self.rule, RuleChoice::Gossip(_)) {
+                    return Err("gossip rules need a fixed-graph topology".into());
+                }
+            }
+            Topology::EpidemicPush { s } => {
+                if s == 0 || s > self.n - 1 {
+                    return Err(format!("s={s} must be in [1, n-1]"));
+                }
+                if matches!(self.rule, RuleChoice::Gossip(_)) {
+                    return Err("gossip rules need a fixed-graph topology".into());
+                }
+                if self.engine == EngineKind::Hlo {
+                    return Err(
+                        "push mode has variable receive-set sizes; the fixed-shape \
+                         HLO aggregate cannot apply — use engine = \"native\""
+                            .into(),
+                    );
+                }
+            }
+            Topology::FixedGraph { edges } => {
+                if edges < self.n - 1 {
+                    return Err(format!(
+                        "edges={edges} below spanning-tree minimum {}",
+                        self.n - 1
+                    ));
+                }
+                if matches!(self.rule, RuleChoice::Epidemic(_)) {
+                    return Err("epidemic rules need the epidemic topology".into());
+                }
+            }
+        }
+        if self.rounds == 0 || self.batch == 0 || self.samples_per_node == 0 {
+            return Err("rounds, batch, samples_per_node must be positive".into());
+        }
+        if self.lr_schedule.is_empty() {
+            return Err("empty lr schedule".into());
+        }
+        if !(0.0..1.0).contains(&(self.momentum as f64)) {
+            return Err(format!("momentum {} outside [0,1)", self.momentum));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        for task in [
+            TaskKind::Tiny,
+            TaskKind::MnistLike,
+            TaskKind::CifarLike,
+            TaskKind::FemnistLike,
+        ] {
+            ExperimentConfig::default_for(task).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn lr_schedule_staircase() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::CifarLike);
+        // the paper's CIFAR staircase
+        cfg.lr_schedule = vec![(0, 0.5), (500, 0.1), (1000, 0.02), (1500, 0.004)];
+        assert_eq!(cfg.lr_at(0), 0.5);
+        assert_eq!(cfg.lr_at(499), 0.5);
+        assert_eq!(cfg.lr_at(500), 0.1);
+        assert_eq!(cfg.lr_at(1200), 0.02);
+        assert_eq!(cfg.lr_at(9999), 0.004);
+    }
+
+    #[test]
+    fn validation_rejects_byzantine_majority() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.n = 10;
+        cfg.b = 5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_eaf_breakdown() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.topology = Topology::Epidemic { s: 5 };
+        cfg.bhat = Some(3); // 3/6 = 1/2
+        assert!(cfg.validate().unwrap_err().contains("1/2"));
+    }
+
+    #[test]
+    fn validation_rejects_rule_topology_mismatch() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
+        assert!(cfg.validate().is_err());
+        cfg.topology = Topology::FixedGraph { edges: 60 };
+        assert!(cfg.validate().is_ok());
+        cfg.rule = RuleChoice::Epidemic(RuleKind::NnmCwtm);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn message_budget_matches_paper_accounting() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::MnistLike);
+        cfg.n = 100;
+        cfg.topology = Topology::Epidemic { s: 15 };
+        assert_eq!(cfg.messages_per_round(), 1500);
+        // the paper matches fixed graphs by K = n*s/2 edges = same messages
+        cfg.topology = Topology::FixedGraph { edges: 750 };
+        cfg.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
+        assert_eq!(cfg.messages_per_round(), 1500);
+    }
+}

@@ -1,0 +1,245 @@
+//! Minimal TOML parser (serde/toml crates are not in the offline set).
+//!
+//! Supports the subset a config system needs: `[table]` and
+//! `[table.subtable]` headers, `key = value` with strings, integers,
+//! floats, booleans, and homogeneous inline arrays, plus `#` comments.
+//! Values land in a flat `BTreeMap<String, TomlValue>` keyed by dotted
+//! path (`"training.lr"`), which keeps lookups trivial for the schema
+//! layer in [`super::file`].
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML document into dotted-path → value.
+pub fn parse(input: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut prefix = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError {
+            line: lineno + 1,
+            msg: msg.to_string(),
+        };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated table header"))?
+                .trim();
+            if name.is_empty() || name.contains('[') {
+                return Err(err("bad table name"));
+            }
+            prefix = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+        let full = if prefix.is_empty() {
+            key.to_string()
+        } else {
+            format!("{prefix}.{key}")
+        };
+        if out.insert(full.clone(), value).is_some() {
+            return Err(err(&format!("duplicate key '{full}'")));
+        }
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside a quoted string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote (escapes unsupported)".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Split an inline-array body on commas not nested in brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_tables() {
+        let doc = r#"
+            # experiment
+            name = "fig1L"
+            [topology]
+            n = 100
+            frac = 0.1
+            pull = true
+        "#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["name"].as_str().unwrap(), "fig1L");
+        assert_eq!(m["topology.n"].as_i64().unwrap(), 100);
+        assert_eq!(m["topology.frac"].as_f64().unwrap(), 0.1);
+        assert!(m["topology.pull"].as_bool().unwrap());
+    }
+
+    #[test]
+    fn arrays() {
+        let m = parse("grid = [5, 10, 15]\nnested = [[0, 0.5], [500, 0.1]]").unwrap();
+        let g = m["grid"].as_array().unwrap();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g[2].as_i64().unwrap(), 15);
+        let n = m["nested"].as_array().unwrap();
+        assert_eq!(n[1].as_array().unwrap()[1].as_f64().unwrap(), 0.1);
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let m = parse("x = 1_000 # one thousand\ns = \"a # b\"").unwrap();
+        assert_eq!(m["x"].as_i64().unwrap(), 1000);
+        assert_eq!(m["s"].as_str().unwrap(), "a # b");
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let m = parse("lr = 1").unwrap();
+        assert_eq!(m["lr"].as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("good = 1\nbad bad").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("x = ").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("dup = 1\ndup = 2").is_err());
+    }
+
+    #[test]
+    fn empty_array_and_strings() {
+        let m = parse("a = []\nb = \"\"").unwrap();
+        assert_eq!(m["a"].as_array().unwrap().len(), 0);
+        assert_eq!(m["b"].as_str().unwrap(), "");
+    }
+}

@@ -1,0 +1,262 @@
+//! Compute-engine abstraction: the HLO/PJRT production path and its
+//! native differential twin behind one interface, so the round loop is
+//! engine-agnostic.
+
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::model::native::{MlpSpec, TrainHyper};
+use crate::runtime::{EvalExec, InitExec, Runtime, TrainExec};
+use anyhow::{anyhow, ensure, Context, Result};
+
+/// What the round loop needs from a compute backend.
+pub trait ComputeEngine {
+    /// Flat parameter count d.
+    fn d(&self) -> usize;
+    /// Effective batch size per local step (HLO artifacts have it baked).
+    fn batch(&self) -> usize;
+    /// Local steps per round this engine executes.
+    fn local_steps(&self) -> usize;
+    /// Eval-set size the engine expects (0 = any).
+    fn eval_n(&self) -> usize;
+    /// Deterministic parameter init.
+    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>>;
+    /// One training round's local computation (Algorithm 1 lines 3–6),
+    /// updating params/momentum in place; returns the (mean) loss.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        momentum: &mut Vec<f32>,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        beta: f32,
+        wd: f32,
+    ) -> Result<f32>;
+    /// (#correct, loss_sum) over the eval set.
+    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)>;
+    fn name(&self) -> &'static str;
+}
+
+/// Native Rust MLP engine.
+pub struct NativeEngine {
+    spec: MlpSpec,
+    batch: usize,
+    local_steps: usize,
+    scratch: Vec<f32>,
+}
+
+impl NativeEngine {
+    pub fn new(arch: &str, batch: usize, local_steps: usize) -> Result<Self> {
+        let spec = MlpSpec::by_name(arch)
+            .ok_or_else(|| anyhow!("native engine has no arch '{arch}'"))?;
+        Ok(NativeEngine {
+            spec,
+            batch,
+            local_steps,
+            scratch: Vec::new(),
+        })
+    }
+}
+
+impl ComputeEngine for NativeEngine {
+    fn d(&self) -> usize {
+        self.spec.param_count()
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn local_steps(&self) -> usize {
+        self.local_steps
+    }
+
+    fn eval_n(&self) -> usize {
+        0
+    }
+
+    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>> {
+        Ok(self.spec.init_native(seed as u64))
+    }
+
+    fn train_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        momentum: &mut Vec<f32>,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        beta: f32,
+        wd: f32,
+    ) -> Result<f32> {
+        let hp = TrainHyper {
+            lr,
+            beta,
+            weight_decay: wd,
+        };
+        let din = self.spec.din;
+        let per = self.batch * din;
+        ensure!(
+            x.len() == self.local_steps * per && y.len() == self.local_steps * self.batch,
+            "batch shape mismatch"
+        );
+        let mut total = 0.0f32;
+        for k in 0..self.local_steps {
+            let xs = &x[k * per..(k + 1) * per];
+            let ys = &y[k * self.batch..(k + 1) * self.batch];
+            total += self
+                .spec
+                .train_step(params, momentum, xs, ys, hp, &mut self.scratch);
+        }
+        Ok(total / self.local_steps as f32)
+    }
+
+    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        Ok(self.spec.evaluate(params, x, y))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// HLO/PJRT engine: executes the AOT-compiled L2 graphs.
+pub struct HloEngine {
+    init: InitExec,
+    train: TrainExec,
+    eval: EvalExec,
+}
+
+impl HloEngine {
+    pub fn new(rt: &mut Runtime, arch: &str, local_steps: usize) -> Result<Self> {
+        let init = rt.init_exec(arch).context("loading init artifact")?;
+        let train = rt
+            .train_exec(arch, local_steps)
+            .context("loading train artifact")?;
+        let eval = rt.eval_exec(arch).context("loading eval artifact")?;
+        Ok(HloEngine { init, train, eval })
+    }
+}
+
+impl ComputeEngine for HloEngine {
+    fn d(&self) -> usize {
+        self.train.entry.d
+    }
+
+    fn batch(&self) -> usize {
+        self.train.entry.batch
+    }
+
+    fn local_steps(&self) -> usize {
+        self.train.entry.local_steps
+    }
+
+    fn eval_n(&self) -> usize {
+        self.eval.eval_n()
+    }
+
+    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>> {
+        self.init.run(seed)
+    }
+
+    fn train_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        momentum: &mut Vec<f32>,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        beta: f32,
+        wd: f32,
+    ) -> Result<f32> {
+        let out = self.train.run(params, momentum, x, y, lr, beta, wd)?;
+        *params = out.params;
+        *momentum = out.momentum;
+        Ok(out.loss)
+    }
+
+    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        self.eval.run(params, x, y)
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo"
+    }
+}
+
+/// Build the configured engine; `rt` must be Some for the HLO path.
+pub fn build_engine(
+    cfg: &ExperimentConfig,
+    rt: Option<&mut Runtime>,
+) -> Result<Box<dyn ComputeEngine>> {
+    match cfg.engine {
+        EngineKind::Native => Ok(Box::new(NativeEngine::new(
+            &cfg.arch,
+            cfg.batch,
+            cfg.local_steps,
+        )?)),
+        EngineKind::Hlo => {
+            let rt = rt.ok_or_else(|| anyhow!("HLO engine needs a runtime"))?;
+            Ok(Box::new(HloEngine::new(rt, &cfg.arch, cfg.local_steps)?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_basics() {
+        let mut e = NativeEngine::new("mlp_tiny", 8, 1).unwrap();
+        assert_eq!(e.d(), 340);
+        assert_eq!(e.batch(), 8);
+        let p = e.init_params(3).unwrap();
+        assert_eq!(p.len(), 340);
+        // deterministic per seed
+        assert_eq!(e.init_params(3).unwrap(), p);
+        assert_ne!(e.init_params(4).unwrap(), p);
+    }
+
+    #[test]
+    fn native_engine_trains() {
+        let mut e = NativeEngine::new("mlp_tiny", 16, 1).unwrap();
+        let mut params = e.init_params(0).unwrap();
+        let mut momentum = vec![0.0f32; params.len()];
+        let task = crate::data::TaskKind::Tiny.spec().instantiate(1);
+        let mut rng = crate::util::rng::Rng::new(1);
+        let data = task.sample_uniform(16, &mut rng);
+        let mut losses = Vec::new();
+        for _ in 0..30 {
+            losses.push(
+                e.train_step(&mut params, &mut momentum, &data.x, &data.y, 0.3, 0.9, 0.0)
+                    .unwrap(),
+            );
+        }
+        assert!(losses.last().unwrap() < &(losses[0] * 0.5));
+    }
+
+    #[test]
+    fn native_local_steps_consume_stacked_batches() {
+        let mut e = NativeEngine::new("mlp_tiny", 4, 3).unwrap();
+        let mut params = e.init_params(0).unwrap();
+        let mut momentum = vec![0.0f32; params.len()];
+        let task = crate::data::TaskKind::Tiny.spec().instantiate(2);
+        let mut rng = crate::util::rng::Rng::new(2);
+        let data = task.sample_uniform(12, &mut rng);
+        // 3 local steps * batch 4 = 12 samples stacked
+        let loss = e
+            .train_step(&mut params, &mut momentum, &data.x, &data.y, 0.1, 0.9, 0.0)
+            .unwrap();
+        assert!(loss.is_finite());
+        // wrong size rejected
+        assert!(e
+            .train_step(&mut params, &mut momentum, &data.x[..16], &data.y[..1], 0.1, 0.9, 0.0)
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_arch_rejected() {
+        assert!(NativeEngine::new("resnet152", 8, 1).is_err());
+    }
+}

@@ -1,0 +1,679 @@
+//! The RPEL coordinator: Algorithm 1 as a synchronous round engine.
+//!
+//! Per round t, for every honest node i (paper Algorithm 1):
+//!
+//! 1. local stochastic gradient + Polyak momentum + half-step
+//!    `x_i^{t+1/2} = x_i^t − η m_i^t` (delegated to the compute engine —
+//!    the AOT HLO graph or its native twin);
+//! 2. pull sampling: `S_i^t` = s uniform peers (epidemic topology) or the
+//!    fixed graph neighborhood (baseline topology);
+//! 3. the omniscient adversary crafts per-victim malicious models for the
+//!    Byzantine members of `S_i^t` (it sees every honest half-step);
+//! 4. robust aggregation `x_i^{t+1} = R(x_i^{t+1/2}; received)` — the
+//!    Pallas NNM∘CWTM executable on the HLO path, or a native rule.
+//!
+//! All honest updates within a round are computed against the same
+//! snapshot (synchronous model, §3.3) — nodes never see intra-round
+//! updates of their peers.
+
+pub mod engine;
+pub mod sampler;
+
+pub use engine::{build_engine, ComputeEngine, HloEngine, NativeEngine};
+pub use sampler::PullSampler;
+
+use crate::aggregation::gossip::GossipAggregator;
+use crate::aggregation::Aggregator;
+use crate::attacks::{Attack, AttackContext};
+use crate::config::{EngineKind, ExperimentConfig, RuleChoice, Topology};
+use crate::data::{partition_dirichlet, Shard};
+use crate::graph::Graph;
+use crate::metrics::{EvalPoint, History};
+use crate::runtime::{AggregateExec, Runtime};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::time::Instant;
+
+/// State owned by one honest node.
+struct NodeState {
+    /// global node id in [0, n)
+    id: usize,
+    params: Vec<f32>,
+    momentum: Vec<f32>,
+    shard: Shard,
+}
+
+/// Which aggregation backend executes step 4.
+enum AggBackend {
+    /// Native Definition-5.1 rule over the pulled set.
+    Native(Box<dyn Aggregator>),
+    /// The AOT Pallas NNM∘CWTM executable (production path).
+    Hlo(AggregateExec),
+    /// Fixed-graph gossip rule over the node's neighborhood.
+    Gossip(Box<dyn GossipAggregator>),
+}
+
+impl AggBackend {
+    fn name(&self) -> &'static str {
+        match self {
+            AggBackend::Native(r) => r.name(),
+            AggBackend::Hlo(_) => "nnm_cwtm[pallas]",
+            AggBackend::Gossip(r) => r.name(),
+        }
+    }
+}
+
+/// A fully constructed training run.
+pub struct Trainer {
+    cfg: ExperimentConfig,
+    engine: Box<dyn ComputeEngine>,
+    agg: AggBackend,
+    attack: Option<Box<dyn Attack>>,
+    /// resolved effective adversaries b̂ (Algorithm 2 output when the
+    /// config left it unset)
+    pub bhat: usize,
+    /// per-id Byzantine flag and id → honest-index map
+    byz: Vec<bool>,
+    node_of: Vec<usize>,
+    nodes: Vec<NodeState>,
+    sampler: Option<PullSampler>,
+    /// push mode (pull-vs-push ablation): fan-out per honest sender
+    push_s: Option<usize>,
+    /// fixed-graph topology: metropolis rows per node id
+    gossip_rows: Option<Vec<Vec<(usize, f64)>>>,
+    test_x: Vec<f32>,
+    test_y: Vec<i32>,
+    rng: Rng,
+    /// §4.2 telemetry: max Byzantine rows any honest node received in the
+    /// last round (the *observed* b̂)
+    last_round_byz_max: usize,
+    // reusable round buffers
+    halves: Vec<Vec<f32>>,
+    next_params: Vec<Vec<f32>>,
+    byz_buf: Vec<Vec<f32>>,
+    mean_buf: Vec<f32>,
+    prev_mean_buf: Vec<f32>,
+}
+
+impl Trainer {
+    /// Build everything: engine, adversary placement, shards, topology,
+    /// b̂ resolution (Algorithm 2 when unset).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
+        cfg.validate().map_err(|e| anyhow!("invalid config: {e}"))?;
+        let mut cfg = cfg.clone();
+        let mut rng = Rng::new(cfg.seed);
+
+        // --- compute engine -------------------------------------------------
+        let mut runtime = match cfg.engine {
+            EngineKind::Hlo => Some(
+                Runtime::open(&cfg.artifacts_dir)
+                    .context("HLO engine requires built artifacts")?,
+            ),
+            EngineKind::Native => None,
+        };
+        let mut engine = build_engine(&cfg, runtime.as_mut())?;
+        if engine.batch() != cfg.batch {
+            log::info!(
+                "batch {} overridden to {} (baked into HLO artifact)",
+                cfg.batch,
+                engine.batch()
+            );
+            cfg.batch = engine.batch();
+        }
+        let d = engine.d();
+
+        // --- resolve b̂ (Algorithm 2 / §6.1) --------------------------------
+        // b̂ resolution uses Appendix B Remark 2's "more precise" method:
+        // the exact 90%-quantile of max_{i,t} b_i^t from the closed-form
+        // hypergeometric CDF (deterministic; Algorithm 2's simulation is
+        // available via `rpel select` / sampling::select_params).
+        const BHAT_CONFIDENCE: f64 = 0.9;
+        let bhat = match (cfg.bhat, &cfg.topology) {
+            (Some(bh), _) => bh,
+            (None, _) if cfg.b == 0 => 0,
+            // push mode deliberately reuses the pull-mode b̂ (Appendix D:
+            // flooding voids the hypergeometric bound — that mismatch IS
+            // the ablation)
+            (None, Topology::Epidemic { s }) | (None, Topology::EpidemicPush { s }) => {
+                crate::sampling::selector::select_bhat_exact(
+                    cfg.n as u64,
+                    cfg.b as u64,
+                    cfg.rounds as u64,
+                    *s as u64,
+                    BHAT_CONFIDENCE,
+                ) as usize
+            }
+            (None, Topology::FixedGraph { .. }) => {
+                // Remark C.2: under random placement use the same b̂ an
+                // epidemic run of equal budget would use
+                let s_equiv = (2 * cfg.messages_per_round() / cfg.n).clamp(1, cfg.n - 1);
+                crate::sampling::selector::select_bhat_exact(
+                    cfg.n as u64,
+                    cfg.b as u64,
+                    cfg.rounds as u64,
+                    s_equiv as u64,
+                    BHAT_CONFIDENCE,
+                ) as usize
+            }
+        };
+        if let Topology::Epidemic { s } = cfg.topology {
+            if cfg.b > 0 && 2 * bhat >= s + 1 {
+                bail!(
+                    "effective adversarial fraction {bhat}/{} ≥ 1/2 — robust \
+                     aggregation breaks down (paper §6.2); increase s or reduce b",
+                    s + 1
+                );
+            }
+        }
+
+        // --- aggregation backend -------------------------------------------
+        let agg = match (&cfg.topology, cfg.rule) {
+            (Topology::Epidemic { s }, RuleChoice::Epidemic(kind)) => {
+                // DoS shrinks receive sets; the fixed-shape Pallas
+                // executable cannot apply, so fall back to the native rule
+                let want_hlo = cfg.engine == EngineKind::Hlo
+                    && kind == crate::aggregation::RuleKind::NnmCwtm
+                    && cfg.attack != crate::attacks::AttackKind::Dos;
+                if want_hlo {
+                    let rt = runtime.as_mut().unwrap();
+                    match rt.aggregate_exec(&cfg.arch, s + 1, bhat) {
+                        Ok(exec) => AggBackend::Hlo(exec),
+                        Err(e) => {
+                            log::warn!(
+                                "no Pallas aggregate artifact (m={}, b̂={bhat}): {e}; \
+                                 falling back to native rule",
+                                s + 1
+                            );
+                            AggBackend::Native(kind.build(bhat))
+                        }
+                    }
+                } else {
+                    AggBackend::Native(kind.build(bhat))
+                }
+            }
+            (Topology::EpidemicPush { .. }, RuleChoice::Epidemic(kind)) => {
+                AggBackend::Native(kind.build(bhat))
+            }
+            (Topology::FixedGraph { .. }, RuleChoice::Gossip(kind)) => {
+                AggBackend::Gossip(kind.build(bhat))
+            }
+            _ => bail!("rule/topology mismatch (config validation bug)"),
+        };
+
+        // --- adversary placement (uniform random, Remark C.1) ---------------
+        let mut byz = vec![false; cfg.n];
+        for id in rng.fork(0xB12).sample_distinct(cfg.n, cfg.b) {
+            byz[id] = true;
+        }
+        let attack = if cfg.b > 0 { cfg.attack.build() } else { None };
+
+        // --- data ------------------------------------------------------------
+        let task = cfg.task.spec().instantiate(cfg.seed);
+        let mut data_rng = rng.fork(0xDA7A);
+        let shard_labels = partition_dirichlet(
+            cfg.n,
+            task.spec.classes,
+            cfg.samples_per_node,
+            cfg.alpha,
+            &mut data_rng,
+        );
+        let test_n = if engine.eval_n() > 0 {
+            if engine.eval_n() != cfg.test_samples {
+                log::info!(
+                    "test_samples {} overridden to {} (baked into HLO eval artifact)",
+                    cfg.test_samples,
+                    engine.eval_n()
+                );
+            }
+            engine.eval_n()
+        } else {
+            cfg.test_samples
+        };
+        let test = task.sample_uniform(test_n, &mut data_rng);
+
+        // --- honest node states ----------------------------------------------
+        let mut nodes = Vec::with_capacity(cfg.honest());
+        let mut node_of = vec![usize::MAX; cfg.n];
+        for id in 0..cfg.n {
+            if byz[id] {
+                continue;
+            }
+            let labels = &shard_labels[id];
+            let data = task.sample_labels(labels, &mut data_rng);
+            let shard = Shard::new(data, rng.fork(0x5AD + id as u64));
+            node_of[id] = nodes.len();
+            let params = engine.init_params(cfg.seed as i32)?;
+            nodes.push(NodeState {
+                id,
+                params,
+                momentum: vec![0.0f32; d],
+                shard,
+            });
+        }
+
+        // --- topology ----------------------------------------------------------
+        let (sampler, push_s, gossip_rows) = match cfg.topology {
+            Topology::Epidemic { s } => (Some(PullSampler::new(cfg.n, s)), None, None),
+            Topology::EpidemicPush { s } => (None, Some(s), None),
+            Topology::FixedGraph { edges } => {
+                let g = Graph::random_connected(cfg.n, edges, &mut rng.fork(0x6AF));
+                (None, None, Some(g.metropolis_weights()))
+            }
+        };
+
+        let h = nodes.len();
+        // worst-case malicious rows per victim: s for pulls, b for a
+        // flooding push round, degree ≤ n−1 for graphs
+        let s_max = cfg.n - 1;
+        log::info!(
+            "trainer '{}': n={} b={} b̂={bhat} rule={} engine={} d={d}",
+            cfg.name,
+            cfg.n,
+            cfg.b,
+            agg.name(),
+            engine.name()
+        );
+        Ok(Trainer {
+            bhat,
+            byz,
+            node_of,
+            sampler,
+            push_s,
+            gossip_rows,
+            test_x: test.x,
+            test_y: test.y,
+            rng,
+            last_round_byz_max: 0,
+            halves: vec![vec![0.0f32; d]; h],
+            next_params: vec![vec![0.0f32; d]; h],
+            byz_buf: vec![vec![0.0f32; d]; s_max],
+            mean_buf: vec![0.0f32; d],
+            prev_mean_buf: vec![0.0f32; d],
+            nodes,
+            engine,
+            agg,
+            attack,
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Which aggregation backend actually runs (for logs/tests).
+    pub fn aggregation_name(&self) -> &'static str {
+        self.agg.name()
+    }
+
+    /// Number of honest nodes.
+    pub fn honest_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Run the full training; returns the metric history.
+    pub fn run(&mut self) -> Result<History> {
+        let t0 = Instant::now();
+        let mut hist = History::new(&self.cfg.name, self.cfg.messages_per_round());
+        for round in 0..self.cfg.rounds {
+            let loss = self.round(round)?;
+            hist.train_loss.push(loss);
+            hist.observed_byz_max.push(self.last_round_byz_max);
+            hist.total_messages += self.cfg.messages_per_round();
+            let last = round + 1 == self.cfg.rounds;
+            if last || (round + 1) % self.cfg.eval_every == 0 {
+                hist.evals.push(self.evaluate(round + 1)?);
+            }
+        }
+        hist.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(hist)
+    }
+
+    /// Execute one synchronous round; returns the mean honest train loss.
+    pub fn round(&mut self, round: usize) -> Result<f64> {
+        let lr = self.cfg.lr_at(round);
+        let beta = self.cfg.momentum;
+        let wd = self.cfg.weight_decay;
+        let k = self.engine.local_steps();
+        let batch = self.engine.batch();
+        let h = self.nodes.len();
+
+        // 1. local half-steps (Algorithm 1 lines 3–6)
+        let mut loss_sum = 0.0f64;
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            self.halves[i].copy_from_slice(&node.params);
+            let b = node.shard.next_batches(k, batch);
+            loss_sum += self.engine.train_step(
+                &mut self.halves[i],
+                &mut node.momentum,
+                &b.x,
+                &b.y,
+                lr,
+                beta,
+                wd,
+            )? as f64;
+        }
+
+        // 2. omniscient-adversary context: honest means
+        column_mean(&self.halves, &mut self.mean_buf);
+        {
+            let prev: Vec<&[f32]> = self.nodes.iter().map(|n| n.params.as_slice()).collect();
+            crate::util::vecmath::mean_of(&prev, &mut self.prev_mean_buf);
+        }
+
+        // push mode: honest senders scatter to s recipients; Byzantine
+        // senders flood every honest node (the Appendix-D failure mode)
+        let push_received: Option<Vec<Vec<usize>>> = self.push_s.map(|s| {
+            let mut recv: Vec<Vec<usize>> = vec![Vec::new(); h];
+            for sender in 0..h {
+                let id = self.nodes[sender].id;
+                for dest in self.rng.sample_distinct_excluding(self.cfg.n, s, id) {
+                    if !self.byz[dest] {
+                        recv[self.node_of[dest]].push(id);
+                    }
+                    // pushes to Byzantine recipients are wasted messages
+                }
+            }
+            recv
+        });
+
+        // DoS (Appendix D): Byzantine nodes withhold their models; the
+        // synchronous round proceeds with whatever honest peers sent
+        let dos = self.cfg.attack == crate::attacks::AttackKind::Dos;
+
+        // 3.+4. pull, attack, aggregate — against the immutable half-step
+        // snapshot (synchronous model)
+        self.last_round_byz_max = 0;
+        for i in 0..h {
+            let peers: Vec<usize> = match (&self.sampler, &push_received, &self.gossip_rows)
+            {
+                (Some(sampler), _, _) => sampler.sample(self.nodes[i].id, &mut self.rng),
+                (None, Some(recv), _) => recv[i].clone(),
+                (None, None, Some(rows)) => rows[self.nodes[i].id]
+                    .iter()
+                    .map(|&(j, _)| j)
+                    .filter(|&j| j != self.nodes[i].id)
+                    .collect(),
+                _ => unreachable!(),
+            };
+
+            // split into honest refs and byzantine slots
+            let mut honest_rows: Vec<&[f32]> = Vec::with_capacity(peers.len());
+            let mut byz_count = 0usize;
+            for &p in &peers {
+                if self.byz[p] {
+                    byz_count += 1;
+                } else {
+                    honest_rows.push(&self.halves[self.node_of[p]]);
+                }
+            }
+            if push_received.is_some() && self.cfg.b > 0 && !dos {
+                // flooding: every Byzantine node reaches every honest node
+                byz_count = self.cfg.b;
+            }
+            if dos {
+                byz_count = 0; // withheld responses simply never arrive
+            }
+            self.last_round_byz_max = self.last_round_byz_max.max(byz_count);
+
+            // craft per-victim malicious models
+            if byz_count > 0 {
+                if let Some(attack) = &self.attack {
+                    let all: Vec<&[f32]> = self.halves.iter().map(|v| v.as_slice()).collect();
+                    let ctx = AttackContext {
+                        victim_half: &self.halves[i],
+                        victim_prev: &self.nodes[i].params,
+                        honest_received: &honest_rows,
+                        honest_all: &all,
+                        honest_mean: &self.mean_buf,
+                        honest_prev_mean: &self.prev_mean_buf,
+                        n: self.cfg.n,
+                        b: self.cfg.b,
+                    };
+                    attack.craft(&ctx, &mut self.byz_buf[..byz_count]);
+                } else {
+                    // b > 0 but attack "none": byzantine nodes behave as
+                    // silent crashers sending their init... treat as the
+                    // honest mean (benign)
+                    for row in &mut self.byz_buf[..byz_count] {
+                        row.copy_from_slice(&self.mean_buf);
+                    }
+                }
+            }
+
+            match &self.agg {
+                AggBackend::Native(rule) => {
+                    let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
+                    rows.push(&self.halves[i]);
+                    rows.extend_from_slice(&honest_rows);
+                    for rbuf in &self.byz_buf[..byz_count] {
+                        rows.push(rbuf);
+                    }
+                    if rows.len() < rule.min_inputs() {
+                        // too few responses to aggregate robustly (push /
+                        // DoS rounds): keep the local half-step
+                        self.next_params[i].copy_from_slice(&self.halves[i]);
+                    } else {
+                        rule.aggregate(&rows, &mut self.next_params[i]);
+                    }
+                }
+                AggBackend::Hlo(exec) => {
+                    let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
+                    rows.push(&self.halves[i]);
+                    rows.extend_from_slice(&honest_rows);
+                    for rbuf in &self.byz_buf[..byz_count] {
+                        rows.push(rbuf);
+                    }
+                    let out = exec.run(&rows)?;
+                    self.next_params[i].copy_from_slice(&out);
+                }
+                AggBackend::Gossip(rule) => {
+                    // gossip needs (model, weight) pairs in graph order
+                    let rows = self.gossip_rows.as_ref().unwrap();
+                    let id = self.nodes[i].id;
+                    let mut neigh: Vec<(&[f32], f64)> = Vec::with_capacity(peers.len());
+                    let mut byz_used = 0usize;
+                    for &(j, w) in &rows[id] {
+                        if j == id {
+                            continue;
+                        }
+                        if self.byz[j] {
+                            neigh.push((&self.byz_buf[byz_used], w));
+                            byz_used += 1;
+                        } else {
+                            neigh.push((&self.halves[self.node_of[j]], w));
+                        }
+                    }
+                    rule.aggregate(&self.halves[i], &neigh, &mut self.next_params[i]);
+                }
+            }
+        }
+
+        // 5. synchronous swap
+        for (node, next) in self.nodes.iter_mut().zip(&self.next_params) {
+            node.params.copy_from_slice(next);
+        }
+        Ok(loss_sum / h as f64)
+    }
+
+    /// Evaluate every honest node on the shared test set.
+    pub fn evaluate(&mut self, round: usize) -> Result<EvalPoint> {
+        let n_test = self.test_y.len() as f64;
+        let mut accs = Vec::with_capacity(self.nodes.len());
+        let mut losses = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let (correct, loss_sum) =
+                self.engine
+                    .evaluate(&node.params, &self.test_x, &self.test_y)?;
+            accs.push(correct / n_test);
+            losses.push(loss_sum / n_test);
+        }
+        Ok(EvalPoint {
+            round,
+            avg_acc: crate::util::stats::mean(&accs),
+            worst_acc: crate::util::stats::min(&accs),
+            avg_loss: crate::util::stats::mean(&losses),
+        })
+    }
+
+    /// Immutable view of one honest node's parameters (tests).
+    pub fn params_of(&self, honest_idx: usize) -> &[f32] {
+        &self.nodes[honest_idx].params
+    }
+
+    /// Global ids of the Byzantine nodes (tests/diagnostics).
+    pub fn byzantine_ids(&self) -> Vec<usize> {
+        (0..self.cfg.n).filter(|&i| self.byz[i]).collect()
+    }
+}
+
+/// Column mean over equal-length rows.
+fn column_mean(rows: &[Vec<f32>], out: &mut [f32]) {
+    out.fill(0.0);
+    for r in rows {
+        crate::util::vecmath::axpy(out, 1.0, r);
+    }
+    crate::util::vecmath::scale(out, 1.0 / rows.len() as f32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::RuleKind;
+    use crate::attacks::AttackKind;
+    use crate::config::presets;
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut cfg = presets::quickstart_config();
+        cfg.rounds = 12;
+        cfg.eval_every = 6;
+        cfg
+    }
+
+    #[test]
+    fn builds_and_places_adversaries() {
+        let cfg = quick_cfg();
+        let t = Trainer::from_config(&cfg).unwrap();
+        assert_eq!(t.honest_count(), cfg.n - cfg.b);
+        assert_eq!(t.byzantine_ids().len(), cfg.b);
+        assert_eq!(t.bhat, 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quick_cfg();
+        let h1 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let h2 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(h1.train_loss, h2.train_loss);
+        assert_eq!(h1.final_avg_accuracy(), h2.final_avg_accuracy());
+        let mut cfg3 = cfg;
+        cfg3.seed = 99;
+        let h3 = Trainer::from_config(&cfg3).unwrap().run().unwrap();
+        assert_ne!(h1.train_loss, h3.train_loss);
+    }
+
+    #[test]
+    fn no_attack_training_learns() {
+        let mut cfg = quick_cfg();
+        cfg.b = 0;
+        cfg.attack = AttackKind::None;
+        cfg.rounds = 40;
+        let hist = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert!(
+            hist.final_avg_accuracy() > 0.7,
+            "acc={}",
+            hist.final_avg_accuracy()
+        );
+        // loss decreased
+        assert!(hist.final_train_loss() < hist.train_loss[0] * 0.8);
+    }
+
+    #[test]
+    fn robust_rule_survives_sign_flip() {
+        let mut cfg = quick_cfg();
+        cfg.rounds = 40;
+        cfg.b = 2; // 25% Byzantine: scaled SF reverses a plain average
+        cfg.attack = AttackKind::SignFlip;
+        let robust = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let mut mean_cfg = cfg.clone();
+        mean_cfg.rule = RuleChoice::Epidemic(RuleKind::Mean);
+        mean_cfg.name = "quickstart/mean".into();
+        let mean = Trainer::from_config(&mean_cfg).unwrap().run().unwrap();
+        assert!(
+            robust.final_avg_accuracy() > mean.final_avg_accuracy() + 0.15,
+            "robust={} mean={}",
+            robust.final_avg_accuracy(),
+            mean.final_avg_accuracy()
+        );
+    }
+
+    #[test]
+    fn message_accounting() {
+        let cfg = quick_cfg();
+        let hist = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(hist.messages_per_round, cfg.n * 7);
+        assert_eq!(hist.total_messages, cfg.n * 7 * cfg.rounds);
+    }
+
+    #[test]
+    fn eval_cadence_includes_final_round() {
+        let mut cfg = quick_cfg();
+        cfg.rounds = 13; // not divisible by eval_every=6
+        let hist = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let rounds: Vec<usize> = hist.evals.iter().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![6, 12, 13]);
+    }
+
+    #[test]
+    fn fixed_graph_topology_runs() {
+        let mut cfg = quick_cfg();
+        cfg.topology = Topology::FixedGraph { edges: 16 };
+        cfg.rule = RuleChoice::Gossip(crate::aggregation::gossip::GossipRuleKind::CsPlus);
+        cfg.rounds = 10;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let hist = t.run().unwrap();
+        assert_eq!(hist.train_loss.len(), 10);
+        assert_eq!(hist.messages_per_round, 32);
+    }
+
+    #[test]
+    fn breakdown_detected_at_construction() {
+        let mut cfg = quick_cfg();
+        cfg.bhat = None;
+        cfg.n = 10;
+        cfg.b = 4; // 40% byzantine, s=7: b̂ will hit 4 of 8 = 1/2
+        cfg.topology = Topology::Epidemic { s: 7 };
+        let err = match Trainer::from_config(&cfg) {
+            Ok(_) => panic!("breakdown setting should fail construction"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("1/2"), "{err}");
+    }
+
+    #[test]
+    fn algorithm2_resolves_bhat_when_unset() {
+        let mut cfg = quick_cfg();
+        cfg.bhat = None;
+        let t = Trainer::from_config(&cfg).unwrap();
+        // 1 byzantine among 8, s=7 all-to-all: b̂ must be exactly 1
+        assert_eq!(t.bhat, 1);
+    }
+
+    #[test]
+    fn params_stay_finite_under_attacks() {
+        for attack in AttackKind::panel() {
+            let mut cfg = quick_cfg();
+            cfg.attack = attack;
+            cfg.rounds = 15;
+            let mut t = Trainer::from_config(&cfg).unwrap();
+            t.run().unwrap();
+            for i in 0..t.honest_count() {
+                assert!(
+                    crate::util::vecmath::all_finite(t.params_of(i)),
+                    "{:?} produced non-finite params",
+                    attack
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Pull-based epidemic peer sampling (paper §3.3): every round, every
+//! honest node independently samples `s` peers uniformly at random from
+//! the other n−1 nodes — the independence of per-node samples is what
+//! Lemma 5.2's T₂ variance computation relies on.
+
+use crate::util::rng::Rng;
+
+/// Uniform without-replacement pull sampler.
+#[derive(Clone, Copy, Debug)]
+pub struct PullSampler {
+    pub n: usize,
+    pub s: usize,
+}
+
+impl PullSampler {
+    pub fn new(n: usize, s: usize) -> Self {
+        assert!(s >= 1 && s <= n - 1, "need 1 <= s <= n-1");
+        PullSampler { n, s }
+    }
+
+    /// Sample the pull set S_i^t for `victim` (never includes the victim).
+    pub fn sample(&self, victim: usize, rng: &mut Rng) -> Vec<usize> {
+        rng.sample_distinct_excluding(self.n, self.s, victim)
+    }
+
+    /// Sample into a reusable buffer (hot-path variant).
+    pub fn sample_into(&self, victim: usize, rng: &mut Rng, buf: &mut Vec<usize>) {
+        buf.clear();
+        buf.extend(self.sample(victim, rng));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_self_never_dup() {
+        let sampler = PullSampler::new(20, 6);
+        let mut rng = Rng::new(1);
+        for victim in 0..20 {
+            for _ in 0..50 {
+                let s = sampler.sample(victim, &mut rng);
+                assert_eq!(s.len(), 6);
+                assert!(!s.contains(&victim));
+                let mut d = s.clone();
+                d.sort_unstable();
+                d.dedup();
+                assert_eq!(d.len(), 6);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_over_peers() {
+        let sampler = PullSampler::new(10, 3);
+        let mut rng = Rng::new(2);
+        let mut counts = vec![0u32; 10];
+        let trials = 30_000;
+        for _ in 0..trials {
+            for j in sampler.sample(0, &mut rng) {
+                counts[j] += 1;
+            }
+        }
+        assert_eq!(counts[0], 0);
+        let expect = trials as f64 * 3.0 / 9.0;
+        for &c in &counts[1..] {
+            assert!((c as f64 - expect).abs() < 0.05 * expect, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn byzantine_hits_follow_hypergeometric_mean() {
+        // with b byzantine among the other n-1, mean hits = s*b/(n-1)
+        let (n, b, s) = (30usize, 6usize, 15usize);
+        let sampler = PullSampler::new(n, s);
+        let mut rng = Rng::new(3);
+        let byz: std::collections::HashSet<usize> = (0..b).collect();
+        let trials = 20_000;
+        let mut hits = 0usize;
+        for _ in 0..trials {
+            hits += sampler
+                .sample(n - 1, &mut rng)
+                .iter()
+                .filter(|j| byz.contains(j))
+                .count();
+        }
+        let mean = hits as f64 / trials as f64;
+        let expect = s as f64 * b as f64 / (n - 1) as f64;
+        assert!((mean - expect).abs() < 0.1, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn all_to_all_sampling() {
+        let sampler = PullSampler::new(8, 7);
+        let mut rng = Rng::new(4);
+        let mut s = sampler.sample(3, &mut rng);
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1, 2, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_s_equal_n() {
+        PullSampler::new(5, 5);
+    }
+}

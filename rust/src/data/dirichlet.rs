@@ -1,0 +1,155 @@
+//! Dirichlet non-IID partitioning (Hsu et al. 2019) — the paper's
+//! heterogeneity model (§6.1): for each class, draw node proportions
+//! `p ~ Dir(α · 1_n)` and scatter that class's samples accordingly.
+//! Larger α → more homogeneous shards; smaller α → highly skewed.
+
+use crate::util::rng::Rng;
+
+/// Assign per-class sample labels to `nodes` shards with Dirichlet(alpha)
+/// proportions. Returns `labels[node] = Vec<class-label>` with
+/// `samples_per_node` entries each (exact sizes, resolved by largest-
+/// remainder rounding so every node trains on the same batch count).
+pub fn partition_dirichlet(
+    nodes: usize,
+    classes: usize,
+    samples_per_node: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<i32>> {
+    assert!(nodes > 0 && classes > 0 && samples_per_node > 0);
+    let total = nodes * samples_per_node;
+
+    // per-class Dirichlet proportions over nodes: weight[c][i]
+    let weights: Vec<Vec<f64>> = (0..classes)
+        .map(|_| rng.dirichlet_sym(alpha, nodes))
+        .collect();
+
+    // target count of class c on node i (real-valued), assuming the global
+    // class marginal is uniform (total/classes per class)
+    let per_class = total as f64 / classes as f64;
+    let mut shards: Vec<Vec<i32>> = vec![Vec::with_capacity(samples_per_node + classes); nodes];
+
+    // Fill node-by-node using each node's class profile:
+    // node i's class distribution q_i(c) ∝ weights[c][i].
+    for i in 0..nodes {
+        let mut q: Vec<f64> = (0..classes).map(|c| weights[c][i] * per_class).collect();
+        let qsum: f64 = q.iter().sum();
+        if qsum <= 0.0 {
+            q = vec![1.0; classes];
+        }
+        let qsum: f64 = q.iter().sum();
+        // largest-remainder apportionment of samples_per_node among classes
+        let mut counts: Vec<usize> = q
+            .iter()
+            .map(|&w| ((w / qsum) * samples_per_node as f64).floor() as usize)
+            .collect();
+        let assigned: usize = counts.iter().sum();
+        let mut rema: Vec<(f64, usize)> = q
+            .iter()
+            .enumerate()
+            .map(|(c, &w)| {
+                let exact = (w / qsum) * samples_per_node as f64;
+                (exact - exact.floor(), c)
+            })
+            .collect();
+        rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for k in 0..(samples_per_node - assigned) {
+            counts[rema[k % classes].1] += 1;
+        }
+        for (c, &cnt) in counts.iter().enumerate() {
+            for _ in 0..cnt {
+                shards[i].push(c as i32);
+            }
+        }
+        debug_assert_eq!(shards[i].len(), samples_per_node);
+        rng.shuffle(&mut shards[i]);
+    }
+    shards
+}
+
+/// Heterogeneity diagnostic: mean total-variation distance between each
+/// node's empirical label distribution and the global uniform marginal.
+/// 0 = IID, → (classes−1)/classes as shards become one-class.
+pub fn label_skew(shards: &[Vec<i32>], classes: usize) -> f64 {
+    let uniform = 1.0 / classes as f64;
+    let mut acc = 0.0;
+    for shard in shards {
+        let mut counts = vec![0usize; classes];
+        for &y in shard {
+            counts[y as usize] += 1;
+        }
+        let n = shard.len() as f64;
+        let tv: f64 = counts
+            .iter()
+            .map(|&c| (c as f64 / n - uniform).abs())
+            .sum::<f64>()
+            / 2.0;
+        acc += tv;
+    }
+    acc / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_shard_sizes() {
+        let mut rng = Rng::new(1);
+        let shards = partition_dirichlet(10, 10, 57, 1.0, &mut rng);
+        assert_eq!(shards.len(), 10);
+        for s in &shards {
+            assert_eq!(s.len(), 57);
+        }
+    }
+
+    #[test]
+    fn labels_in_range() {
+        let mut rng = Rng::new(2);
+        let shards = partition_dirichlet(5, 62, 100, 10.0, &mut rng);
+        for s in &shards {
+            assert!(s.iter().all(|&y| (0..62).contains(&y)));
+        }
+    }
+
+    #[test]
+    fn alpha_controls_skew() {
+        let mut rng = Rng::new(3);
+        let skew_lo_alpha = label_skew(&partition_dirichlet(20, 10, 200, 0.1, &mut rng), 10);
+        let skew_hi_alpha = label_skew(&partition_dirichlet(20, 10, 200, 100.0, &mut rng), 10);
+        assert!(
+            skew_lo_alpha > skew_hi_alpha + 0.2,
+            "alpha=0.1 skew {skew_lo_alpha} should far exceed alpha=100 skew {skew_hi_alpha}"
+        );
+    }
+
+    #[test]
+    fn high_alpha_near_iid() {
+        let mut rng = Rng::new(4);
+        let shards = partition_dirichlet(10, 10, 500, 1000.0, &mut rng);
+        assert!(label_skew(&shards, 10) < 0.1);
+    }
+
+    #[test]
+    fn deterministic_given_rng_state() {
+        let a = partition_dirichlet(6, 4, 30, 1.0, &mut Rng::new(9));
+        let b = partition_dirichlet(6, 4, 30, 1.0, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_node_gets_everything() {
+        let mut rng = Rng::new(5);
+        let shards = partition_dirichlet(1, 10, 100, 1.0, &mut rng);
+        assert_eq!(shards[0].len(), 100);
+    }
+
+    #[test]
+    fn skew_bounds() {
+        let mut rng = Rng::new(6);
+        for alpha in [0.1, 1.0, 10.0] {
+            let s = label_skew(&partition_dirichlet(8, 10, 100, alpha, &mut rng), 10);
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+}

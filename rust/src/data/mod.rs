@@ -1,0 +1,12 @@
+//! Data substrate: synthetic classification tasks (the offline stand-ins
+//! for MNIST / CIFAR-10 / FEMNIST — DESIGN.md §Substitutions), Dirichlet
+//! non-IID partitioning (§6.1 "Heterogeneity"), and per-node shards with
+//! infinite batch iterators.
+
+pub mod dirichlet;
+pub mod shard;
+pub mod synth;
+
+pub use dirichlet::partition_dirichlet;
+pub use shard::{Batch, Shard};
+pub use synth::{Dataset, TaskInstance, TaskKind, TaskSpec};

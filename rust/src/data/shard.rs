@@ -1,0 +1,169 @@
+//! Per-node data shards and batch iteration.
+//!
+//! Each honest node owns a [`Shard`]: a local dataset plus a cursor that
+//! yields mini-batches forever (reshuffling at epoch boundaries with the
+//! node's own RNG stream), matching "Randomly sample a data point ξ from
+//! D_i" in Algorithm 1 line 3.
+
+use crate::data::synth::Dataset;
+use crate::util::rng::Rng;
+
+/// A borrowed mini-batch view (row-major features).
+#[derive(Debug)]
+pub struct Batch {
+    pub x: Vec<f32>, // batch * dim
+    pub y: Vec<i32>, // batch
+    pub dim: usize,
+}
+
+/// A node-local dataset with epoch shuffling.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    data: Dataset,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl Shard {
+    pub fn new(data: Dataset, rng: Rng) -> Self {
+        let order: Vec<usize> = (0..data.len()).collect();
+        let mut s = Shard {
+            data,
+            order,
+            cursor: 0,
+            rng,
+        };
+        s.reshuffle();
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.dim
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next mini-batch of exactly `batch` samples (wraps with reshuffle —
+    /// sampling with per-epoch permutation, the standard SGD regime).
+    pub fn next_batch(&mut self, batch: usize) -> Batch {
+        assert!(!self.is_empty(), "empty shard");
+        let dim = self.data.dim;
+        let mut x = Vec::with_capacity(batch * dim);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            if self.cursor >= self.order.len() {
+                self.reshuffle();
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            x.extend_from_slice(self.data.row(idx));
+            y.push(self.data.y[idx]);
+        }
+        Batch { x, y, dim }
+    }
+
+    /// `k` consecutive batches stacked (for local-steps artifacts whose
+    /// input carries a leading [k] axis).
+    pub fn next_batches(&mut self, k: usize, batch: usize) -> Batch {
+        let dim = self.data.dim;
+        let mut x = Vec::with_capacity(k * batch * dim);
+        let mut y = Vec::with_capacity(k * batch);
+        for _ in 0..k {
+            let b = self.next_batch(batch);
+            x.extend_from_slice(&b.x);
+            y.extend_from_slice(&b.y);
+        }
+        Batch { x, y, dim }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::TaskKind;
+
+    fn shard(n: usize, seed: u64) -> Shard {
+        let data = TaskKind::Tiny
+            .spec()
+            .instantiate(seed)
+            .sample_uniform(n, &mut Rng::new(seed));
+        Shard::new(data, Rng::new(seed))
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut s = shard(30, 0);
+        let b = s.next_batch(8);
+        assert_eq!(b.x.len(), 8 * s.dim());
+        assert_eq!(b.y.len(), 8);
+    }
+
+    #[test]
+    fn wraps_past_epoch() {
+        let mut s = shard(10, 1);
+        for _ in 0..10 {
+            let b = s.next_batch(7); // crosses epoch boundaries repeatedly
+            assert_eq!(b.y.len(), 7);
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_samples() {
+        let mut s = shard(12, 2);
+        let mut seen = std::collections::HashSet::new();
+        let b = s.next_batch(12);
+        for i in 0..12 {
+            seen.insert(
+                b.x[i * s.dim()..(i + 1) * s.dim()]
+                    .iter()
+                    .map(|f| f.to_bits())
+                    .collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(seen.len(), 12, "one epoch must touch every sample once");
+    }
+
+    #[test]
+    fn batches_stacked_for_local_steps() {
+        let mut s = shard(40, 3);
+        let b = s.next_batches(3, 5);
+        assert_eq!(b.x.len(), 3 * 5 * s.dim());
+        assert_eq!(b.y.len(), 15);
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = shard(20, 4);
+        let mut b = shard(20, 4);
+        for _ in 0..5 {
+            let ba = a.next_batch(6);
+            let bb = b.next_batch(6);
+            assert_eq!(ba.x, bb.x);
+            assert_eq!(ba.y, bb.y);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_shard_panics() {
+        let data = Dataset {
+            dim: 4,
+            classes: 2,
+            x: vec![],
+            y: vec![],
+        };
+        Shard::new(data, Rng::new(0)).next_batch(1);
+    }
+}

@@ -1,0 +1,286 @@
+//! Synthetic Gaussian-mixture classification tasks.
+//!
+//! The environment has no network access, so the paper's MNIST / CIFAR-10 /
+//! FEMNIST datasets are replaced by deterministic synthetic tasks with the
+//! same class counts and a controllable difficulty knob (DESIGN.md
+//! §Substitutions documents why this preserves the phenomena under study).
+//!
+//! Class `c` has a mean vector `μ_c` drawn uniformly on a sphere of radius
+//! `sep`; samples are `x = μ_c + noise · N(0, I)`. Lowering `sep/noise`
+//! makes the task harder (CIFAR-like); raising it makes it MNIST-like.
+
+use crate::util::rng::Rng;
+
+/// Which paper dataset a task stands in for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    MnistLike,
+    CifarLike,
+    FemnistLike,
+    Tiny,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::MnistLike => "mnistlike",
+            TaskKind::CifarLike => "cifarlike",
+            TaskKind::FemnistLike => "femnistlike",
+            TaskKind::Tiny => "tiny",
+        }
+    }
+
+    /// Default arch name in the artifact manifest for this task.
+    pub fn default_arch(&self) -> &'static str {
+        match self {
+            TaskKind::MnistLike => "mlp_mnistlike",
+            TaskKind::CifarLike => "mlp_cifarlike",
+            TaskKind::FemnistLike => "mlp_femnistlike",
+            TaskKind::Tiny => "mlp_tiny",
+        }
+    }
+
+    pub fn spec(&self) -> TaskSpec {
+        match self {
+            // MNIST: easy, well-separated classes (paper reaches >90% fast)
+            TaskKind::MnistLike => TaskSpec {
+                kind: *self,
+                dim: 64,
+                classes: 10,
+                sep: 3.0,
+                noise: 1.0,
+            },
+            // CIFAR: harder — closer means, more noise (paper tops ~75%)
+            TaskKind::CifarLike => TaskSpec {
+                kind: *self,
+                dim: 96,
+                classes: 10,
+                sep: 1.7,
+                noise: 1.2,
+            },
+            // FEMNIST: many classes
+            TaskKind::FemnistLike => TaskSpec {
+                kind: *self,
+                dim: 64,
+                classes: 62,
+                sep: 3.2,
+                noise: 1.0,
+            },
+            TaskKind::Tiny => TaskSpec {
+                kind: *self,
+                dim: 16,
+                classes: 4,
+                sep: 3.0,
+                noise: 0.8,
+            },
+        }
+    }
+}
+
+/// Generative parameters of a synthetic task.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskSpec {
+    pub kind: TaskKind,
+    pub dim: usize,
+    pub classes: usize,
+    /// radius of the class-mean sphere
+    pub sep: f32,
+    /// per-coordinate sample noise std
+    pub noise: f32,
+}
+
+/// A fully materialized dataset (row-major features + labels).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub dim: usize,
+    pub classes: usize,
+    pub x: Vec<f32>, // n * dim, row-major
+    pub y: Vec<i32>, // n
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+impl TaskSpec {
+    /// Fix the class means for one experiment. All of an experiment's data
+    /// (training shards AND the global test set) must come from the same
+    /// instance — means are part of the task identity.
+    pub fn instantiate(&self, seed: u64) -> TaskInstance {
+        let mut rng = Rng::new(seed ^ 0xDA7A_5EED);
+        let means = (0..self.classes)
+            .map(|_| {
+                // uniform direction via normalized gaussian, scaled to sep
+                let mut v: Vec<f32> = (0..self.dim).map(|_| rng.gaussian() as f32).collect();
+                let norm = crate::util::vecmath::norm(&v).max(1e-9) as f32;
+                for x in &mut v {
+                    *x *= self.sep / norm;
+                }
+                v
+            })
+            .collect();
+        TaskInstance { spec: *self, means }
+    }
+}
+
+/// A concrete task: spec + frozen class means.
+#[derive(Clone, Debug)]
+pub struct TaskInstance {
+    pub spec: TaskSpec,
+    means: Vec<Vec<f32>>,
+}
+
+impl TaskInstance {
+    pub fn means(&self) -> &[Vec<f32>] {
+        &self.means
+    }
+
+    /// Generate samples for a given label sequence (Dirichlet-skewed
+    /// shards pass their assigned labels here).
+    pub fn sample_labels(&self, labels: &[i32], rng: &mut Rng) -> Dataset {
+        let spec = &self.spec;
+        let mut x = Vec::with_capacity(labels.len() * spec.dim);
+        for &c in labels {
+            let mu = &self.means[c as usize];
+            for j in 0..spec.dim {
+                x.push(rng.gaussian32(mu[j], spec.noise));
+            }
+        }
+        Dataset {
+            dim: spec.dim,
+            classes: spec.classes,
+            x,
+            y: labels.to_vec(),
+        }
+    }
+
+    /// Generate `n` samples with uniform class marginals (the global
+    /// test set in the paper's evaluation is class-balanced).
+    pub fn sample_uniform(&self, n: usize, rng: &mut Rng) -> Dataset {
+        let mut labels: Vec<i32> = (0..n).map(|i| (i % self.spec.classes) as i32).collect();
+        rng.shuffle(&mut labels);
+        self.sample_labels(&labels, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::vecmath;
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = TaskKind::MnistLike.spec();
+        let a = spec.instantiate(3).sample_uniform(100, &mut Rng::new(5));
+        let b = spec.instantiate(3).sample_uniform(100, &mut Rng::new(5));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = spec.instantiate(4).sample_uniform(100, &mut Rng::new(5));
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn shapes_and_label_range() {
+        let spec = TaskKind::FemnistLike.spec();
+        let d = spec.instantiate(0).sample_uniform(200, &mut Rng::new(0));
+        assert_eq!(d.x.len(), 200 * spec.dim);
+        assert_eq!(d.y.len(), 200);
+        assert!(d.y.iter().all(|&y| (0..spec.classes as i32).contains(&y)));
+    }
+
+    #[test]
+    fn uniform_marginals_balanced() {
+        let spec = TaskKind::MnistLike.spec();
+        let d = spec.instantiate(1).sample_uniform(1000, &mut Rng::new(1));
+        let mut counts = vec![0usize; spec.classes];
+        for &y in &d.y {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100), "{counts:?}");
+    }
+
+    #[test]
+    fn class_means_have_requested_radius() {
+        let spec = TaskKind::CifarLike.spec();
+        for mu in spec.instantiate(5).means() {
+            let r = vecmath::norm(mu);
+            assert!((r - spec.sep as f64).abs() < 1e-4, "r={r}");
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_by_nearest_mean() {
+        // sanity: with sep >> noise, nearest-mean classification should be
+        // far above chance — the synthetic task is actually learnable
+        let spec = TaskKind::MnistLike.spec();
+        let inst = spec.instantiate(7);
+        let d = inst.sample_uniform(500, &mut Rng::new(7));
+        let means = inst.means();
+        let mut correct = 0;
+        for i in 0..d.len() {
+            let xi = d.row(i);
+            let pred = (0..spec.classes)
+                .min_by(|&a, &b| {
+                    vecmath::dist_sq(xi, &means[a])
+                        .partial_cmp(&vecmath::dist_sq(xi, &means[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if pred as i32 == d.y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.len() as f64;
+        assert!(acc > 0.6, "nearest-mean acc {acc}");
+    }
+
+    #[test]
+    fn train_and_test_share_means() {
+        // regression: the task identity (class means) must be frozen per
+        // instance, not redrawn per sample call
+        let inst = TaskKind::Tiny.spec().instantiate(9);
+        let train = inst.sample_uniform(50, &mut Rng::new(1));
+        let test = inst.sample_uniform(50, &mut Rng::new(2));
+        // same-class samples across the two sets must be closer on average
+        // than different-class ones
+        let (mut same, mut diff, mut ns, mut nd) = (0.0f64, 0.0f64, 0, 0);
+        for i in 0..train.len() {
+            for j in 0..test.len() {
+                let d = vecmath::dist_sq(train.row(i), test.row(j));
+                if train.y[i] == test.y[j] {
+                    same += d;
+                    ns += 1;
+                } else {
+                    diff += d;
+                    nd += 1;
+                }
+            }
+        }
+        assert!(same / ns as f64 + 1.0 < diff / nd as f64);
+    }
+
+    #[test]
+    fn cifarlike_harder_than_mnistlike() {
+        let m = TaskKind::MnistLike.spec();
+        let c = TaskKind::CifarLike.spec();
+        assert!(c.sep / c.noise < m.sep / m.noise);
+    }
+
+    #[test]
+    fn row_accessor() {
+        let spec = TaskKind::Tiny.spec();
+        let d = spec.instantiate(2).sample_uniform(10, &mut Rng::new(2));
+        assert_eq!(d.row(3).len(), spec.dim);
+        assert_eq!(d.row(0), &d.x[0..spec.dim]);
+    }
+}

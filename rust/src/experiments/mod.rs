@@ -1,0 +1,233 @@
+//! Figure harnesses: regenerate every table/figure of the paper's
+//! evaluation section (`rpel figure --id <ID>` / `make figures`).
+//!
+//! Output per figure: paper-style printed series + CSV files under
+//! `results/<figure>/`.
+
+use crate::config::presets::{EafScenario, Figure, FigureSeries, Scale};
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::coordinator::Trainer;
+use crate::metrics::{write_histories, History};
+use crate::sampling::EafSimulator;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+/// Outcome of running one figure.
+pub struct FigureOutcome {
+    pub id: String,
+    pub histories: Vec<History>,
+    pub eaf_rows: Vec<EafRow>,
+    pub csv_paths: Vec<String>,
+}
+
+/// One (scenario, s) grid point of Figure 3.
+#[derive(Clone, Debug)]
+pub struct EafRow {
+    pub label: String,
+    pub n: u64,
+    pub b: u64,
+    pub s: u64,
+    pub bhat: u64,
+    pub eaf: f64,
+    pub eaf_mean: f64,
+    pub eaf_ci95: f64,
+}
+
+/// Run one training config and report progress.
+pub fn run_training(cfg: &ExperimentConfig) -> Result<History> {
+    let mut trainer =
+        Trainer::from_config(cfg).with_context(|| format!("building '{}'", cfg.name))?;
+    let hist = trainer
+        .run()
+        .with_context(|| format!("running '{}'", cfg.name))?;
+    println!("  {}", hist.report_line());
+    Ok(hist)
+}
+
+/// Run the Figure-3 scenarios.
+pub fn run_eaf(scenarios: &[EafScenario], seed: u64) -> Vec<EafRow> {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    for sc in scenarios {
+        println!("  scenario {} (T={})", sc.label, sc.t);
+        let sim = EafSimulator::new(sc.n, sc.b, sc.t, sc.sims);
+        for p in sim.sweep(&sc.grid, &mut rng) {
+            println!(
+                "    s={:<4} b̂={:<3} EAF={:.3} (mean {:.3} ± {:.3})",
+                p.s, p.bhat, p.eaf, p.eaf_mean, p.eaf_ci95
+            );
+            rows.push(EafRow {
+                label: sc.label.clone(),
+                n: sc.n,
+                b: sc.b,
+                s: p.s,
+                bhat: p.bhat,
+                eaf: p.eaf,
+                eaf_mean: p.eaf_mean,
+                eaf_ci95: p.eaf_ci95,
+            });
+        }
+    }
+    rows
+}
+
+fn eaf_csv(rows: &[EafRow]) -> String {
+    let mut out = String::from("scenario,n,b,s,bhat,eaf,eaf_mean,eaf_ci95\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.6},{:.6},{:.6}\n",
+            r.label, r.n, r.b, r.s, r.bhat, r.eaf, r.eaf_mean, r.eaf_ci95
+        ));
+    }
+    out
+}
+
+/// Run one figure end to end.
+pub fn run_figure(
+    fig: &Figure,
+    scale: Scale,
+    engine_override: Option<EngineKind>,
+    out_dir: &str,
+) -> Result<FigureOutcome> {
+    println!("figure {} — {}", fig.id, fig.title);
+    println!("paper expectation: {}", fig.expectation);
+    let dir = format!("{out_dir}/{}", fig.id);
+    match fig.series(scale) {
+        FigureSeries::Training(mut cfgs) => {
+            let mut histories = Vec::new();
+            for cfg in &mut cfgs {
+                if let Some(engine) = engine_override {
+                    cfg.engine = engine;
+                }
+                histories.push(run_training(cfg)?);
+            }
+            let csv_paths = write_histories(&dir, &histories)?;
+            Ok(FigureOutcome {
+                id: fig.id.to_string(),
+                histories,
+                eaf_rows: Vec::new(),
+                csv_paths,
+            })
+        }
+        FigureSeries::Eaf(scenarios) => {
+            let rows = run_eaf(&scenarios, 2025);
+            std::fs::create_dir_all(&dir)?;
+            let path = format!("{dir}/eaf.csv");
+            std::fs::write(&path, eaf_csv(&rows))?;
+            Ok(FigureOutcome {
+                id: fig.id.to_string(),
+                histories: Vec::new(),
+                eaf_rows: rows,
+                csv_paths: vec![path],
+            })
+        }
+    }
+}
+
+/// Summary table printed after a figure run (and captured into
+/// EXPERIMENTS.md).
+pub fn summary_table(outcome: &FigureOutcome) -> String {
+    let mut out = String::new();
+    if !outcome.histories.is_empty() {
+        out.push_str(&format!(
+            "{:<36} {:>9} {:>9} {:>10} {:>12}\n",
+            "series", "final", "worst", "loss", "msgs/round"
+        ));
+        for h in &outcome.histories {
+            out.push_str(&format!(
+                "{:<36} {:>9.3} {:>9.3} {:>10.4} {:>12}\n",
+                h.name,
+                h.final_avg_accuracy(),
+                h.final_worst_accuracy(),
+                h.final_train_loss(),
+                h.messages_per_round
+            ));
+        }
+    }
+    if !outcome.eaf_rows.is_empty() {
+        out.push_str(&format!(
+            "{:<24} {:>8} {:>6} {:>6} {:>8}\n",
+            "scenario", "s", "b̂", "EAF", "±CI"
+        ));
+        for r in &outcome.eaf_rows {
+            out.push_str(&format!(
+                "{:<24} {:>8} {:>6} {:>6.3} {:>8.3}\n",
+                r.label, r.s, r.bhat, r.eaf, r.eaf_ci95
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn eaf_figure_runs_quickly() {
+        let scens = vec![EafScenario {
+            label: "test".into(),
+            n: 100,
+            b: 10,
+            t: 20,
+            grid: vec![5, 15],
+            sims: 2,
+        }];
+        let rows = run_eaf(&scens, 7);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].eaf >= rows[1].eaf - 0.05, "EAF should shrink with s");
+    }
+
+    #[test]
+    fn training_run_produces_history() {
+        let mut cfg = presets::quickstart_config();
+        cfg.rounds = 6;
+        cfg.eval_every = 3;
+        let h = run_training(&cfg).unwrap();
+        assert_eq!(h.train_loss.len(), 6);
+        assert_eq!(h.evals.len(), 2);
+    }
+
+    #[test]
+    fn figure_outcome_to_disk() {
+        let fig = presets::figure("fig3").unwrap();
+        let tmp = std::env::temp_dir().join("rpel_fig_test");
+        let tmp = tmp.to_str().unwrap();
+        // shrink fig3 by running only the first scenario at tiny T
+        let scens = vec![EafScenario {
+            label: "mini".into(),
+            n: 50,
+            b: 5,
+            t: 10,
+            grid: vec![5, 10],
+            sims: 2,
+        }];
+        let rows = run_eaf(&scens, 1);
+        std::fs::create_dir_all(format!("{tmp}/{}", fig.id)).unwrap();
+        let csv = super::eaf_csv(&rows);
+        assert!(csv.lines().count() == 3);
+        std::fs::remove_dir_all(tmp).ok();
+    }
+
+    #[test]
+    fn summary_table_formats() {
+        let outcome = FigureOutcome {
+            id: "figX".into(),
+            histories: vec![],
+            eaf_rows: vec![EafRow {
+                label: "l".into(),
+                n: 10,
+                b: 1,
+                s: 3,
+                bhat: 1,
+                eaf: 0.25,
+                eaf_mean: 0.2,
+                eaf_ci95: 0.01,
+            }],
+            csv_paths: vec![],
+        };
+        let t = summary_table(&outcome);
+        assert!(t.contains("0.250"));
+    }
+}

@@ -1,0 +1,263 @@
+//! Communication-graph substrate for the fixed-graph baselines
+//! (ClippedGossip, CS+, GTS — paper Appendix C.2).
+//!
+//! The paper's comparison protocol: for RPEL parameters (n, s), generate a
+//! **random connected graph with the same number of edges** K = n·s/2 —
+//! a uniform random spanning tree (random Prüfer sequence) plus uniformly
+//! random extra edges — then run the baseline's gossip update on it with
+//! Metropolis–Hastings weights. Remark C.1: adversarial positions are
+//! random on the graph (no honest-subgraph pre-construction).
+
+use crate::util::rng::Rng;
+
+/// An undirected simple graph on nodes 0..n.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    adj: Vec<Vec<usize>>, // sorted neighbor lists
+    pub edges: usize,
+}
+
+impl Graph {
+    pub fn empty(n: usize) -> Self {
+        Graph {
+            n,
+            adj: vec![Vec::new(); n],
+            edges: 0,
+        }
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.adj[a].binary_search(&b).is_ok()
+    }
+
+    /// Insert an undirected edge, ignoring self-loops and duplicates.
+    /// Returns true if the edge was new.
+    pub fn add_edge(&mut self, a: usize, b: usize) -> bool {
+        if a == b || a >= self.n || b >= self.n || self.has_edge(a, b) {
+            return false;
+        }
+        let pa = self.adj[a].binary_search(&b).unwrap_err();
+        self.adj[a].insert(pa, b);
+        let pb = self.adj[b].binary_search(&a).unwrap_err();
+        self.adj[b].insert(pb, a);
+        self.edges += 1;
+        true
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Uniform random labeled spanning tree via a random Prüfer sequence
+    /// (every labeled tree equally likely — the distribution family behind
+    /// networkx's `random_spanning_tree` usage in the paper's Appendix C.2).
+    pub fn random_tree(n: usize, rng: &mut Rng) -> Graph {
+        let mut g = Graph::empty(n);
+        if n <= 1 {
+            return g;
+        }
+        if n == 2 {
+            g.add_edge(0, 1);
+            return g;
+        }
+        let prufer: Vec<usize> = (0..n - 2).map(|_| rng.index(n)).collect();
+        let mut degree = vec![1usize; n];
+        for &p in &prufer {
+            degree[p] += 1;
+        }
+        // standard Prüfer decoding with a min-heap replaced by a scan-free
+        // "pointer + leaf set" approach (n is small; BTreeSet is fine)
+        let mut leaves: std::collections::BTreeSet<usize> = (0..n)
+            .filter(|&i| degree[i] == 1)
+            .collect();
+        for &p in &prufer {
+            let leaf = *leaves.iter().next().unwrap();
+            leaves.remove(&leaf);
+            g.add_edge(leaf, p);
+            degree[p] -= 1;
+            if degree[p] == 1 {
+                leaves.insert(p);
+            }
+        }
+        let mut it = leaves.iter();
+        let (a, b) = (*it.next().unwrap(), *it.next().unwrap());
+        g.add_edge(a, b);
+        g
+    }
+
+    /// The paper's random connected graph: spanning tree + uniformly random
+    /// extra edges until reaching `target_edges` (≥ n−1). Saturates at the
+    /// complete graph.
+    pub fn random_connected(n: usize, target_edges: usize, rng: &mut Rng) -> Graph {
+        let max_edges = n * (n - 1) / 2;
+        let target = target_edges.clamp(n.saturating_sub(1), max_edges);
+        let mut g = Graph::random_tree(n, rng);
+        while g.edges < target {
+            let a = rng.index(n);
+            let b = rng.index(n);
+            g.add_edge(a, b);
+        }
+        g
+    }
+
+    /// Metropolis–Hastings gossip weights: W[i][j] = 1/(1+max(deg_i,deg_j))
+    /// for edges, W[i][i] = 1 − Σ_j W[i][j]. Symmetric, doubly stochastic —
+    /// the standard gossip matrix for decentralized SGD baselines.
+    pub fn metropolis_weights(&self) -> Vec<Vec<(usize, f64)>> {
+        (0..self.n)
+            .map(|i| {
+                let mut row: Vec<(usize, f64)> = self.adj[i]
+                    .iter()
+                    .map(|&j| {
+                        (
+                            j,
+                            1.0 / (1.0 + self.degree(i).max(self.degree(j)) as f64),
+                        )
+                    })
+                    .collect();
+                let off: f64 = row.iter().map(|(_, w)| w).sum();
+                row.push((i, 1.0 - off));
+                row.sort_unstable_by_key(|&(j, _)| j);
+                row
+            })
+            .collect()
+    }
+
+    /// Max degree (bench/diagnostic).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_properties() {
+        let mut rng = Rng::new(1);
+        for n in [2usize, 3, 10, 50] {
+            let g = Graph::random_tree(n, &mut rng);
+            assert_eq!(g.edges, n - 1, "n={n}");
+            assert!(g.is_connected(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_distribution_hits_different_shapes() {
+        // over many draws of a 4-node tree, both stars and paths must occur
+        let mut rng = Rng::new(2);
+        let (mut stars, mut paths) = (0, 0);
+        for _ in 0..200 {
+            let g = Graph::random_tree(4, &mut rng);
+            match g.max_degree() {
+                3 => stars += 1,
+                2 => paths += 1,
+                _ => {}
+            }
+        }
+        assert!(stars > 0 && paths > 0, "stars={stars} paths={paths}");
+    }
+
+    #[test]
+    fn connected_graph_edge_budget() {
+        let mut rng = Rng::new(3);
+        let g = Graph::random_connected(30, 30 * 15 / 2, &mut rng);
+        assert_eq!(g.edges, 225);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn connected_graph_saturates_at_complete() {
+        let mut rng = Rng::new(4);
+        let g = Graph::random_connected(6, 1000, &mut rng);
+        assert_eq!(g.edges, 15);
+        for i in 0..6 {
+            assert_eq!(g.degree(i), 5);
+        }
+    }
+
+    #[test]
+    fn edge_budget_below_tree_clamps() {
+        let mut rng = Rng::new(5);
+        let g = Graph::random_connected(10, 3, &mut rng);
+        assert_eq!(g.edges, 9); // spanning tree minimum
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn no_self_loops_or_duplicates() {
+        let mut g = Graph::empty(4);
+        assert!(!g.add_edge(1, 1));
+        assert!(g.add_edge(0, 1));
+        assert!(!g.add_edge(1, 0));
+        assert_eq!(g.edges, 1);
+    }
+
+    #[test]
+    fn metropolis_rows_are_stochastic_and_symmetric() {
+        let mut rng = Rng::new(6);
+        let g = Graph::random_connected(12, 30, &mut rng);
+        let w = g.metropolis_weights();
+        for i in 0..12 {
+            let sum: f64 = w[i].iter().map(|(_, v)| v).sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+            for &(j, wij) in &w[i] {
+                if j != i {
+                    let wji = w[j]
+                        .iter()
+                        .find(|&&(k, _)| k == i)
+                        .map(|&(_, v)| v)
+                        .unwrap();
+                    assert!((wij - wji).abs() < 1e-12);
+                    assert!(wij > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn metropolis_self_weight_nonnegative() {
+        let mut rng = Rng::new(7);
+        let g = Graph::random_connected(20, 40, &mut rng);
+        for (i, row) in g.metropolis_weights().iter().enumerate() {
+            let self_w = row.iter().find(|&&(j, _)| j == i).map(|&(_, v)| v).unwrap();
+            assert!(self_w >= 0.0, "node {i} self weight {self_w}");
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Graph::random_connected(15, 40, &mut Rng::new(8));
+        let b = Graph::random_connected(15, 40, &mut Rng::new(8));
+        for i in 0..15 {
+            assert_eq!(a.neighbors(i), b.neighbors(i));
+        }
+    }
+}

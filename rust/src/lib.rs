@@ -1,0 +1,51 @@
+//! # RPEL — Robust Pull-based Epidemic Learning
+//!
+//! A production-grade reproduction of *"Robust and Efficient Collaborative
+//! Learning"* (El Mrini, Farhadkhani, Guerraoui — EPFL, 2025) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer 3 (this crate) is the decentralized-learning coordinator: the
+//! synchronous round scheduler, the pull-based epidemic sampler, the
+//! omniscient Byzantine adversary engine, robust aggregation (native and
+//! AOT/Pallas-backed), the fixed-graph baseline runtimes, and the
+//! hypergeometric "effective adversarial fraction" machinery that drives
+//! hyper-parameter selection (paper §4.2, Lemma 4.1, Algorithm 2).
+//!
+//! Layers 2/1 (JAX model graphs and Pallas aggregation kernels) are
+//! compiled **once** at build time (`make artifacts`) to HLO text; the
+//! [`runtime`] module loads and executes them through the PJRT CPU client
+//! (`xla` crate). Python never runs on the training path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use rpel::config::presets;
+//! use rpel::coordinator::Trainer;
+//!
+//! let cfg = presets::quickstart_config();
+//! let mut trainer = Trainer::from_config(&cfg).unwrap();
+//! let history = trainer.run().unwrap();
+//! println!("final avg accuracy: {:.3}", history.final_avg_accuracy());
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and DESIGN.md for the
+//! full system inventory and per-figure experiment index.
+
+pub mod aggregation;
+pub mod attacks;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sampling;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result alias (all fallible public APIs use `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

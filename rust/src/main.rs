@@ -1,0 +1,297 @@
+//! `rpel` — the RPEL coordinator CLI (leader entrypoint).
+//!
+//! Commands:
+//!   train   — run one training config (TOML file or built-in preset)
+//!   figure  — regenerate a paper figure (fig1L..fig21, fig3 = EAF sim)
+//!   eaf     — Effective-adversarial-fraction simulation (Algorithm 2 core)
+//!   select  — Algorithm 2 hyper-parameter selection for (s, b̂)
+//!   list    — figures, presets (Tables 1–2), and artifact inventory
+//!   check   — verify the AOT artifact directory loads and executes
+
+use rpel::cli::Args;
+use rpel::config::presets::{self, Scale};
+use rpel::config::{file as config_file, EngineKind};
+use rpel::experiments;
+use rpel::metrics::write_histories;
+use rpel::sampling::select_params;
+use rpel::util::rng::Rng;
+
+const USAGE: &str = "\
+rpel — Robust Pull-based Epidemic Learning (paper reproduction CLI)
+
+USAGE:
+  rpel train  (--config <file.toml> | --preset <figure-id[:idx]>)
+              [--engine hlo|native] [--out results] [--seed N] [--rounds N]
+  rpel figure --id <fig1L|fig1R|...|fig21|all> [--scale tiny|paper]
+              [--engine hlo|native] [--out results]
+  rpel eaf    --n <N> --b <B> [--t 200] [--sims 5] --grid 5,10,15,...
+  rpel select --n <N> --b <B> [--t 200] [--q 0.49] [--sims 5]
+              [--grid 2,...,n-1] [--exact] [--p 0.99]
+  rpel list   [--presets] [--artifacts <dir>]
+  rpel check  [--artifacts <dir>]
+
+Run `make artifacts` before using --engine hlo (the default for check).
+";
+
+fn main() {
+    env_logger_lite();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("eaf") => cmd_eaf(&args),
+        Some("select") => cmd_select(&args),
+        Some("list") => cmd_list(&args),
+        Some("check") => cmd_check(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command '{other}'").into()),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e: Box<dyn std::error::Error>| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+type CmdResult = Result<(), Box<dyn std::error::Error>>;
+
+fn engine_override(args: &Args) -> Result<Option<EngineKind>, String> {
+    match args.get("engine") {
+        None => Ok(None),
+        Some(e) => EngineKind::parse(e)
+            .map(Some)
+            .ok_or_else(|| format!("unknown engine '{e}'")),
+    }
+}
+
+fn cmd_train(args: &Args) -> CmdResult {
+    args.check_known(&["config", "preset", "engine", "out", "seed", "rounds"])?;
+    let mut cfg = if let Some(path) = args.get("config") {
+        config_file::load(path)?
+    } else if let Some(preset) = args.get("preset") {
+        let (id, idx) = match preset.split_once(':') {
+            Some((id, idx)) => (id, idx.parse::<usize>().map_err(|_| "bad preset index")?),
+            None => (preset, 0),
+        };
+        if id == "quickstart" {
+            presets::quickstart_config()
+        } else {
+            let fig = presets::figure(id).ok_or(format!("unknown preset '{id}'"))?;
+            match fig.series(Scale::Tiny) {
+                presets::FigureSeries::Training(cfgs) => cfgs
+                    .into_iter()
+                    .nth(idx)
+                    .ok_or(format!("preset index {idx} out of range"))?,
+                presets::FigureSeries::Eaf(_) => {
+                    return Err("fig3 is a simulation; use `rpel figure --id fig3`".into())
+                }
+            }
+        }
+    } else {
+        return Err("train needs --config or --preset".into());
+    };
+    if let Some(engine) = engine_override(args)? {
+        cfg.engine = engine;
+    }
+    if let Some(seed) = args.get_usize("seed")? {
+        cfg.seed = seed as u64;
+    }
+    if let Some(rounds) = args.get_usize("rounds")? {
+        cfg.rounds = rounds;
+    }
+    let hist = experiments::run_training(&cfg)?;
+    let out = args.get_or("out", "results");
+    let paths = write_histories(&format!("{out}/train"), &[hist])?;
+    println!("wrote {}", paths.join(", "));
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> CmdResult {
+    args.check_known(&["id", "scale", "engine", "out"])?;
+    let id = args.get("id").ok_or("figure needs --id")?;
+    let scale =
+        Scale::parse(args.get_or("scale", "tiny")).ok_or("scale must be tiny|paper")?;
+    let engine = engine_override(args)?;
+    let out = args.get_or("out", "results");
+    let figs: Vec<_> = if id == "all" {
+        presets::all_figures().to_vec()
+    } else {
+        vec![presets::figure(id)
+            .ok_or_else(|| format!("unknown figure '{id}' (try `rpel list`)"))?]
+    };
+    for fig in figs {
+        let outcome = experiments::run_figure(&fig, scale, engine, out)?;
+        println!("\n{}", experiments::summary_table(&outcome));
+        println!("csv: {}\n", outcome.csv_paths.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_eaf(args: &Args) -> CmdResult {
+    args.check_known(&["n", "b", "t", "sims", "grid", "seed"])?;
+    let n = args.get_usize("n")?.ok_or("--n required")? as u64;
+    let b = args.get_usize("b")?.ok_or("--b required")? as u64;
+    let t = args.get_usize("t")?.unwrap_or(200) as u64;
+    let sims = args.get_usize("sims")?.unwrap_or(5);
+    let grid = args
+        .get_u64_list("grid")?
+        .ok_or("--grid required (e.g. 5,10,15)")?;
+    experiments::run_eaf(
+        &[presets::EafScenario {
+            label: format!("n={n}, b={b}"),
+            n,
+            b,
+            t,
+            grid,
+            sims,
+        }],
+        args.get_usize("seed")?.unwrap_or(2025) as u64,
+    );
+    Ok(())
+}
+
+fn cmd_select(args: &Args) -> CmdResult {
+    args.check_known(&["n", "b", "t", "q", "sims", "grid", "exact", "p"])?;
+    let n = args.get_usize("n")?.ok_or("--n required")? as u64;
+    let b = args.get_usize("b")?.ok_or("--b required")? as u64;
+    let t = args.get_usize("t")?.unwrap_or(200) as u64;
+    let q = args.get_f64("q")?.unwrap_or(0.49);
+    let sims = args.get_usize("sims")?.unwrap_or(5);
+    let grid = args
+        .get_u64_list("grid")?
+        .unwrap_or_else(|| (1..n).collect());
+    if args.has("exact") {
+        let p = args.get_f64("p")?.unwrap_or(0.99);
+        for &s in &grid {
+            if s == 0 || s >= n {
+                continue;
+            }
+            let bhat = rpel::sampling::selector::select_bhat_exact(n, b, t, s, p);
+            let eaf = bhat as f64 / (s + 1) as f64;
+            let mark = if eaf <= q { "  <= q ✓" } else { "" };
+            println!("s={s:<5} b̂={bhat:<4} EAF={eaf:.3}{mark}");
+            if eaf <= q {
+                return Ok(());
+            }
+        }
+        return Err(format!("no s in grid reaches EAF <= {q}").into());
+    }
+    let mut rng = Rng::new(2025);
+    match select_params(n, b, t, &grid, sims, q, &mut rng) {
+        Some(sel) => {
+            println!(
+                "Algorithm 2 selection: s={} b̂={} EAF={:.3} (target q={q})",
+                sel.s, sel.bhat, sel.eaf
+            );
+            if b > 0 && b < n / 2 {
+                let s41 = rpel::sampling::selector::lemma41_min_s(n, b, t, 0.99);
+                println!("Lemma 4.1 sufficient bound (p=0.99): s >= {s41}");
+            }
+            Ok(())
+        }
+        None => Err(format!("no s in grid reaches EAF <= {q}").into()),
+    }
+}
+
+fn cmd_list(args: &Args) -> CmdResult {
+    args.check_known(&["presets", "artifacts"])?;
+    println!("figures:");
+    for f in presets::all_figures() {
+        println!("  {:<7} {}", f.id, f.title);
+    }
+    if args.has("presets") {
+        println!("\npreset hyper-parameters (paper Tables 1–2, paper scale):");
+        for id in ["fig1L", "fig2L", "fig20"] {
+            let fig = presets::figure(id).unwrap();
+            if let presets::FigureSeries::Training(cfgs) = fig.series(Scale::Paper) {
+                let c = &cfgs[0];
+                println!(
+                    "  {:<7} task={:<12} n={:<4} b={:<3} {:?} rounds={} batch={} lr={:?} β={} wd={} α={}",
+                    id,
+                    c.task.name(),
+                    c.n,
+                    c.b,
+                    c.topology,
+                    c.rounds,
+                    c.batch,
+                    c.lr_schedule,
+                    c.momentum,
+                    c.weight_decay,
+                    c.alpha
+                );
+            }
+        }
+    }
+    if let Some(dir) = args.get("artifacts") {
+        let manifest = rpel::runtime::Manifest::load(format!("{dir}/manifest.json"))?;
+        println!(
+            "\nartifacts ({} entries, scale={}):",
+            manifest.len(),
+            manifest.scale
+        );
+        for e in manifest.iter() {
+            println!(
+                "  {:<40} kind={:<10} arch={} d={}",
+                e.name, e.kind, e.arch, e.d
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> CmdResult {
+    args.check_known(&["artifacts"])?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let mut rt = rpel::runtime::Runtime::open(dir)?;
+    println!(
+        "manifest: {} artifacts (scale={})",
+        rt.manifest().len(),
+        rt.manifest().scale
+    );
+    // smoke-execute the mlp_tiny path end to end
+    let init = rt.init_exec("mlp_tiny")?;
+    let params = init.run(0)?;
+    println!("init_mlp_tiny: d={} ✓", params.len());
+    let agg = rt.aggregate_exec("mlp_tiny", 8, 2)?;
+    let rows: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; params.len()]).collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let out = agg.run(&refs)?;
+    println!("aggregate_mlp_tiny_m8_b2: out[0]={} ✓", out[0]);
+    println!("artifact check OK");
+    Ok(())
+}
+
+/// Minimal env_logger replacement: RUST_LOG=debug|info|warn enables stderr
+/// logging through the `log` facade.
+fn env_logger_lite() {
+    struct L(log::LevelFilter);
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= self.0
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("info") => log::LevelFilter::Info,
+        Ok("warn") => log::LevelFilter::Warn,
+        _ => log::LevelFilter::Error,
+    };
+    let _ = log::set_boxed_logger(Box::new(L(level)));
+    log::set_max_level(level);
+}

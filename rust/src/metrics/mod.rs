@@ -1,0 +1,224 @@
+//! Training metrics: per-round history, average/worst-client accuracy
+//! (figures 4–7 report both), CSV export, and paper-style series printing.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One evaluation snapshot.
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    pub round: usize,
+    /// mean test accuracy over honest nodes
+    pub avg_acc: f64,
+    /// worst honest node's accuracy (fairness metric, figs 5/7)
+    pub worst_acc: f64,
+    /// mean test loss over honest nodes
+    pub avg_loss: f64,
+}
+
+/// Full history of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub name: String,
+    /// mean honest training loss per round
+    pub train_loss: Vec<f64>,
+    /// §4.2 telemetry: max Byzantine rows any honest node received, per
+    /// round — the *observed* b̂ (must stay ≤ the Algorithm-2 b̂ whp)
+    pub observed_byz_max: Vec<usize>,
+    pub evals: Vec<EvalPoint>,
+    /// communication accounting (paper's headline axis)
+    pub messages_per_round: usize,
+    pub total_messages: usize,
+    /// wall-clock seconds of the run (perf bookkeeping)
+    pub wall_secs: f64,
+}
+
+impl History {
+    pub fn new(name: &str, messages_per_round: usize) -> Self {
+        History {
+            name: name.to_string(),
+            messages_per_round,
+            ..Default::default()
+        }
+    }
+
+    pub fn final_avg_accuracy(&self) -> f64 {
+        self.evals.last().map(|e| e.avg_acc).unwrap_or(0.0)
+    }
+
+    pub fn final_worst_accuracy(&self) -> f64 {
+        self.evals.last().map(|e| e.worst_acc).unwrap_or(0.0)
+    }
+
+    pub fn best_avg_accuracy(&self) -> f64 {
+        self.evals.iter().map(|e| e.avg_acc).fold(0.0, f64::max)
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        self.train_loss.last().copied().unwrap_or(f64::NAN)
+    }
+
+    /// Observed b̂ over the whole run (max Byzantine rows any honest node
+    /// ever received) — comparable against the Algorithm-2 prediction.
+    pub fn observed_bhat(&self) -> usize {
+        self.observed_byz_max.iter().copied().max().unwrap_or(0)
+    }
+
+    /// CSV rows: round,avg_acc,worst_acc,avg_loss.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("round,avg_acc,worst_acc,avg_loss\n");
+        for e in &self.evals {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6}\n",
+                e.round, e.avg_acc, e.worst_acc, e.avg_loss
+            ));
+        }
+        out
+    }
+
+    /// JSON export (results/ directory artifacts).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Json::Str(self.name.clone()));
+        obj.insert(
+            "messages_per_round".into(),
+            Json::Num(self.messages_per_round as f64),
+        );
+        obj.insert(
+            "total_messages".into(),
+            Json::Num(self.total_messages as f64),
+        );
+        obj.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        obj.insert(
+            "train_loss".into(),
+            Json::Arr(self.train_loss.iter().map(|&x| Json::Num(x)).collect()),
+        );
+        obj.insert(
+            "evals".into(),
+            Json::Arr(
+                self.evals
+                    .iter()
+                    .map(|e| {
+                        let mut m = BTreeMap::new();
+                        m.insert("round".into(), Json::Num(e.round as f64));
+                        m.insert("avg_acc".into(), Json::Num(e.avg_acc));
+                        m.insert("worst_acc".into(), Json::Num(e.worst_acc));
+                        m.insert("avg_loss".into(), Json::Num(e.avg_loss));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+
+    /// One line in the paper-style series report.
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<36} final_acc={:>6.3} worst={:>6.3} best={:>6.3} loss={:>7.4} msgs/round={} ({:.1}s)",
+            self.name,
+            self.final_avg_accuracy(),
+            self.final_worst_accuracy(),
+            self.best_avg_accuracy(),
+            self.final_train_loss(),
+            self.messages_per_round,
+            self.wall_secs,
+        )
+    }
+}
+
+/// Write a set of histories as one CSV per series under `dir`.
+pub fn write_histories(dir: &str, histories: &[History]) -> std::io::Result<Vec<String>> {
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::new();
+    for h in histories {
+        let safe: String = h
+            .name
+            .chars()
+            .map(|c| if c.is_alphanumeric() || c == '.' || c == '-' { c } else { '_' })
+            .collect();
+        let path = format!("{dir}/{safe}.csv");
+        std::fs::write(&path, h.to_csv())?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> History {
+        let mut h = History::new("test/alie", 120);
+        h.train_loss = vec![2.3, 1.1, 0.6];
+        h.evals = vec![
+            EvalPoint {
+                round: 0,
+                avg_acc: 0.1,
+                worst_acc: 0.05,
+                avg_loss: 2.3,
+            },
+            EvalPoint {
+                round: 10,
+                avg_acc: 0.8,
+                worst_acc: 0.7,
+                avg_loss: 0.5,
+            },
+        ];
+        h.total_messages = 1200;
+        h
+    }
+
+    #[test]
+    fn accessors() {
+        let h = sample();
+        assert_eq!(h.final_avg_accuracy(), 0.8);
+        assert_eq!(h.final_worst_accuracy(), 0.7);
+        assert_eq!(h.best_avg_accuracy(), 0.8);
+        assert_eq!(h.final_train_loss(), 0.6);
+    }
+
+    #[test]
+    fn empty_history_is_safe() {
+        let h = History::new("empty", 0);
+        assert_eq!(h.final_avg_accuracy(), 0.0);
+        assert!(h.final_train_loss().is_nan());
+    }
+
+    #[test]
+    fn csv_format() {
+        let csv = sample().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("round,"));
+        assert!(lines[2].starts_with("10,0.8"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = sample().to_json();
+        let parsed = crate::util::json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str().unwrap(), "test/alie");
+        assert_eq!(
+            parsed.get("evals").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn write_histories_sanitizes_names() {
+        let dir = std::env::temp_dir().join("rpel_metrics_test");
+        let dir = dir.to_str().unwrap();
+        let paths = write_histories(dir, &[sample()]).unwrap();
+        assert!(paths[0].ends_with("test_alie.csv"));
+        assert!(std::path::Path::new(&paths[0]).exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn report_line_contains_key_numbers() {
+        let line = sample().report_line();
+        assert!(line.contains("0.800"));
+        assert!(line.contains("msgs/round=120"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Native (Rust) MLP engine.
+//!
+//! The production training path executes the AOT-compiled JAX graphs via
+//! [`crate::runtime`]; this module provides a bit-compatible *native*
+//! implementation of the MLP architectures for three purposes:
+//!
+//! 1. **Differential testing** — native forward/eval must match the HLO
+//!    executables and the `model_fixtures.json` oracle within tolerance.
+//! 2. **Fast engine** for the baseline s-grid figures (figs 4–7 sweep many
+//!    (s, rule, attack) cells; the native path avoids per-cell PJRT
+//!    dispatch overhead on this 1-core testbed).
+//! 3. Running without artifacts (e.g. `cargo test` before `make artifacts`).
+//!
+//! The flat parameter layout matches `jax.flatten_util.ravel_pytree` over
+//! the Python-side pytree `[{"b": b, "w": w}, ...]`: **per layer, bias
+//! first, then the (fan_in × out) weight matrix in row-major order** (JAX
+//! flattens dict keys in sorted order).
+
+pub mod native;
+
+pub use native::{MlpSpec, TrainHyper};

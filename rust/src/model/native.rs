@@ -1,0 +1,491 @@
+//! Forward / backward / momentum-SGD for the reduced-scale MLPs, matching
+//! `python/compile/model.py` semantics exactly (He init is jax-side; the
+//! native engine consumes flat params produced either by the HLO `init_*`
+//! executable or by [`MlpSpec::init_native`]).
+
+use crate::util::rng::Rng;
+
+/// An MLP architecture: dense layers with ReLU, log-softmax head.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MlpSpec {
+    pub name: String,
+    pub din: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+}
+
+/// Hyper-parameters of one momentum-SGD half-step (Algorithm 1 lines 3–6).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainHyper {
+    pub lr: f32,
+    pub beta: f32,
+    pub weight_decay: f32,
+}
+
+impl MlpSpec {
+    pub fn new(name: &str, din: usize, hidden: &[usize], classes: usize) -> Self {
+        MlpSpec {
+            name: name.to_string(),
+            din,
+            hidden: hidden.to_vec(),
+            classes,
+        }
+    }
+
+    /// The reduced-scale model zoo (mirrors `model.SPECS` in Python).
+    pub fn by_name(name: &str) -> Option<MlpSpec> {
+        Some(match name {
+            "mlp_tiny" => MlpSpec::new("mlp_tiny", 16, &[16], 4),
+            "mlp_mnistlike" => MlpSpec::new("mlp_mnistlike", 64, &[64], 10),
+            "mlp_cifarlike" => MlpSpec::new("mlp_cifarlike", 96, &[128, 64], 10),
+            "mlp_femnistlike" => MlpSpec::new("mlp_femnistlike", 64, &[128], 62),
+            _ => return None,
+        })
+    }
+
+    /// Layer dims as (fan_in, fan_out) pairs.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::with_capacity(self.hidden.len() + 1);
+        let mut prev = self.din;
+        for &h in &self.hidden {
+            dims.push((prev, h));
+            prev = h;
+        }
+        dims.push((prev, self.classes));
+        dims
+    }
+
+    /// Total flat parameter count d.
+    pub fn param_count(&self) -> usize {
+        self.layer_dims()
+            .iter()
+            .map(|&(i, o)| i * o + o)
+            .sum()
+    }
+
+    /// Per-layer (bias_offset, weight_offset) in the flat vector — the
+    /// ravel_pytree layout: [b₀, w₀, b₁, w₁, ...].
+    fn offsets(&self) -> Vec<(usize, usize)> {
+        let mut offs = Vec::new();
+        let mut pos = 0;
+        for (fan_in, fan_out) in self.layer_dims() {
+            offs.push((pos, pos + fan_out));
+            pos += fan_out + fan_in * fan_out;
+        }
+        offs
+    }
+
+    /// He-initialized flat params (native RNG; *not* bit-identical to the
+    /// jax `init_*` executable, which exists for that purpose — this is the
+    /// artifact-free fallback).
+    pub fn init_native(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0x1217);
+        let mut params = vec![0.0f32; self.param_count()];
+        let offs = self.offsets();
+        for ((fan_in, fan_out), (_, woff)) in self.layer_dims().into_iter().zip(offs) {
+            let std = (2.0 / fan_in as f64).sqrt() as f32;
+            for k in 0..fan_in * fan_out {
+                params[woff + k] = rng.gaussian32(0.0, std);
+            }
+        }
+        params
+    }
+
+    /// Log-softmax forward pass. `x`: batch-major [n, din]; output [n,
+    /// classes] log-probabilities written into `logp`.
+    pub fn forward(&self, params: &[f32], x: &[f32], n: usize, logp: &mut Vec<f32>) {
+        assert_eq!(params.len(), self.param_count(), "param size mismatch");
+        assert_eq!(x.len(), n * self.din, "input size mismatch");
+        let dims = self.layer_dims();
+        let offs = self.offsets();
+        let mut h: Vec<f32> = x.to_vec();
+        let mut width = self.din;
+        for (li, (&(fan_in, fan_out), &(boff, woff))) in
+            dims.iter().zip(offs.iter()).enumerate()
+        {
+            debug_assert_eq!(width, fan_in);
+            let w = &params[woff..woff + fan_in * fan_out];
+            let b = &params[boff..boff + fan_out];
+            let mut out = vec![0.0f32; n * fan_out];
+            for r in 0..n {
+                let hi = &h[r * fan_in..(r + 1) * fan_in];
+                let oi = &mut out[r * fan_out..(r + 1) * fan_out];
+                oi.copy_from_slice(b);
+                // row-major (fan_in, fan_out) weight: accumulate rank-1 rows
+                for (k, &hv) in hi.iter().enumerate() {
+                    if hv != 0.0 {
+                        let wrow = &w[k * fan_out..(k + 1) * fan_out];
+                        for (o, &wv) in oi.iter_mut().zip(wrow) {
+                            *o += hv * wv;
+                        }
+                    }
+                }
+            }
+            let last = li == dims.len() - 1;
+            if !last {
+                for v in &mut out {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            h = out;
+            width = fan_out;
+        }
+        // log-softmax rows
+        logp.clear();
+        logp.extend_from_slice(&h);
+        for r in 0..n {
+            let row = &mut logp[r * self.classes..(r + 1) * self.classes];
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse = row
+                .iter()
+                .map(|&v| ((v - max) as f64).exp())
+                .sum::<f64>()
+                .ln() as f32
+                + max;
+            for v in row {
+                *v -= lse;
+            }
+        }
+    }
+
+    /// Mean NLL + L2 regularization, plus the gradient, via explicit
+    /// backprop. Returns loss; writes gradient into `grad`.
+    pub fn loss_grad(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        weight_decay: f32,
+        grad: &mut [f32],
+    ) -> f32 {
+        let n = y.len();
+        assert_eq!(x.len(), n * self.din);
+        assert_eq!(grad.len(), params.len());
+        let dims = self.layer_dims();
+        let offs = self.offsets();
+
+        // forward with cached activations
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(dims.len() + 1);
+        acts.push(x.to_vec());
+        let mut width = self.din;
+        for (li, (&(fan_in, fan_out), &(boff, woff))) in
+            dims.iter().zip(offs.iter()).enumerate()
+        {
+            debug_assert_eq!(width, fan_in);
+            let w = &params[woff..woff + fan_in * fan_out];
+            let b = &params[boff..boff + fan_out];
+            let h = &acts[li];
+            let mut out = vec![0.0f32; n * fan_out];
+            for r in 0..n {
+                let hi = &h[r * fan_in..(r + 1) * fan_in];
+                let oi = &mut out[r * fan_out..(r + 1) * fan_out];
+                oi.copy_from_slice(b);
+                for (k, &hv) in hi.iter().enumerate() {
+                    if hv != 0.0 {
+                        let wrow = &w[k * fan_out..(k + 1) * fan_out];
+                        for (o, &wv) in oi.iter_mut().zip(wrow) {
+                            *o += hv * wv;
+                        }
+                    }
+                }
+            }
+            if li != dims.len() - 1 {
+                for v in &mut out {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(out);
+            width = fan_out;
+        }
+
+        // softmax + NLL on the last activation (pre-log-softmax logits)
+        let logits = acts.last().unwrap();
+        let c = self.classes;
+        let mut delta = vec![0.0f32; n * c]; // dL/dlogits
+        let mut loss = 0.0f64;
+        for r in 0..n {
+            let row = &logits[r * c..(r + 1) * c];
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut den = 0.0f64;
+            for &v in row {
+                den += ((v - max) as f64).exp();
+            }
+            let lse = den.ln() as f32 + max;
+            let yi = y[r] as usize;
+            loss += (lse - row[yi]) as f64;
+            let drow = &mut delta[r * c..(r + 1) * c];
+            for (j, dv) in drow.iter_mut().enumerate() {
+                let p = (((row[j] - max) as f64).exp() / den) as f32;
+                *dv = (p - if j == yi { 1.0 } else { 0.0 }) / n as f32;
+            }
+        }
+        loss /= n as f64;
+
+        // backprop
+        grad.fill(0.0);
+        let mut dl = delta;
+        for li in (0..dims.len()).rev() {
+            let (fan_in, fan_out) = dims[li];
+            let (boff, woff) = offs[li];
+            let h = &acts[li];
+            // bias grad
+            for r in 0..n {
+                for j in 0..fan_out {
+                    grad[boff + j] += dl[r * fan_out + j];
+                }
+            }
+            // weight grad: dW[k,j] += h[r,k] * dl[r,j]
+            for r in 0..n {
+                let hi = &h[r * fan_in..(r + 1) * fan_in];
+                let di = &dl[r * fan_out..(r + 1) * fan_out];
+                for (k, &hv) in hi.iter().enumerate() {
+                    if hv != 0.0 {
+                        let grow = &mut grad[woff + k * fan_out..woff + (k + 1) * fan_out];
+                        for (g, &dv) in grow.iter_mut().zip(di) {
+                            *g += hv * dv;
+                        }
+                    }
+                }
+            }
+            if li > 0 {
+                // propagate: dh[r,k] = Σ_j W[k,j] dl[r,j], masked by ReLU
+                let w = &params[woff..woff + fan_in * fan_out];
+                let mut dh = vec![0.0f32; n * fan_in];
+                for r in 0..n {
+                    let di = &dl[r * fan_out..(r + 1) * fan_out];
+                    let hi = &acts[li][r * fan_in..(r + 1) * fan_in];
+                    let dhi = &mut dh[r * fan_in..(r + 1) * fan_in];
+                    for k in 0..fan_in {
+                        if hi[k] > 0.0 {
+                            let wrow = &w[k * fan_out..(k + 1) * fan_out];
+                            let mut acc = 0.0f32;
+                            for (wv, dv) in wrow.iter().zip(di) {
+                                acc += wv * dv;
+                            }
+                            dhi[k] = acc;
+                        }
+                    }
+                }
+                dl = dh;
+            }
+        }
+
+        // weight decay on all params: L += 0.5*wd*||p||², g += wd*p
+        if weight_decay != 0.0 {
+            let mut reg = 0.0f64;
+            for (g, &p) in grad.iter_mut().zip(params) {
+                *g += weight_decay * p;
+                reg += (p as f64) * (p as f64);
+            }
+            loss += 0.5 * weight_decay as f64 * reg;
+        }
+        loss as f32
+    }
+
+    /// One momentum-SGD half-step in place (params, momentum updated).
+    pub fn train_step(
+        &self,
+        params: &mut [f32],
+        momentum: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        hp: TrainHyper,
+        grad_scratch: &mut Vec<f32>,
+    ) -> f32 {
+        grad_scratch.resize(params.len(), 0.0);
+        let loss = self.loss_grad(params, x, y, hp.weight_decay, grad_scratch);
+        for ((p, m), &g) in params.iter_mut().zip(momentum.iter_mut()).zip(grad_scratch.iter()) {
+            *m = hp.beta * *m + (1.0 - hp.beta) * g;
+            *p -= hp.lr * *m;
+        }
+        loss
+    }
+
+    /// (#correct, summed NLL) over an eval set.
+    pub fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> (f64, f64) {
+        let n = y.len();
+        let mut logp = Vec::new();
+        self.forward(params, x, n, &mut logp);
+        let c = self.classes;
+        let mut correct = 0.0;
+        let mut loss = 0.0;
+        for r in 0..n {
+            let row = &logp[r * c..(r + 1) * c];
+            let mut best = 0usize;
+            for j in 1..c {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            if best as i32 == y[r] {
+                correct += 1.0;
+            }
+            loss -= row[y[r] as usize] as f64;
+        }
+        (correct, loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> MlpSpec {
+        MlpSpec::by_name("mlp_tiny").unwrap()
+    }
+
+    #[test]
+    fn param_counts_match_python() {
+        // values asserted against model.param_count in the pytest suite
+        assert_eq!(tiny().param_count(), 16 * 16 + 16 + 16 * 4 + 4);
+        assert_eq!(
+            MlpSpec::by_name("mlp_mnistlike").unwrap().param_count(),
+            64 * 64 + 64 + 64 * 10 + 10
+        );
+        assert_eq!(
+            MlpSpec::by_name("mlp_cifarlike").unwrap().param_count(),
+            96 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10
+        );
+        assert_eq!(
+            MlpSpec::by_name("mlp_femnistlike").unwrap().param_count(),
+            64 * 128 + 128 + 128 * 62 + 62
+        );
+    }
+
+    #[test]
+    fn forward_rows_are_log_probs() {
+        let spec = tiny();
+        let params = spec.init_native(0);
+        let mut rng = Rng::new(1);
+        let n = 5;
+        let x: Vec<f32> = (0..n * spec.din).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+        let mut logp = Vec::new();
+        spec.forward(&params, &x, n, &mut logp);
+        assert_eq!(logp.len(), n * spec.classes);
+        for r in 0..n {
+            let s: f64 = logp[r * spec.classes..(r + 1) * spec.classes]
+                .iter()
+                .map(|&v| (v as f64).exp())
+                .sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let spec = tiny();
+        let mut params = spec.init_native(2);
+        let mut rng = Rng::new(3);
+        let n = 4;
+        let x: Vec<f32> = (0..n * spec.din).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+        let y: Vec<i32> = (0..n).map(|_| rng.index(spec.classes) as i32).collect();
+        let wd = 1e-3f32;
+        let mut grad = vec![0.0f32; params.len()];
+        spec.loss_grad(&params, &x, &y, wd, &mut grad);
+        let mut scratch = vec![0.0f32; params.len()];
+        for probe in 0..10 {
+            let idx = (probe * 37) % params.len();
+            let eps = 1e-3f32;
+            let orig = params[idx];
+            params[idx] = orig + eps;
+            let f1 = spec.loss_grad(&params, &x, &y, wd, &mut scratch);
+            params[idx] = orig - eps;
+            let f0 = spec.loss_grad(&params, &x, &y, wd, &mut scratch);
+            params[idx] = orig;
+            let fd = (f1 - f0) / (2.0 * eps);
+            assert!(
+                (fd - grad[idx]).abs() < 2e-2,
+                "idx={idx} fd={fd} grad={}",
+                grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let spec = tiny();
+        let mut params = spec.init_native(4);
+        let mut momentum = vec![0.0f32; params.len()];
+        let task = crate::data::synth::TaskKind::Tiny.spec().instantiate(5);
+        let data = task.sample_uniform(64, &mut Rng::new(5));
+        let hp = TrainHyper {
+            lr: 0.2,
+            beta: 0.9,
+            weight_decay: 0.0,
+        };
+        let mut scratch = Vec::new();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..80 {
+            let loss = spec.train_step(&mut params, &mut momentum, &data.x, &data.y, hp, &mut scratch);
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < first * 0.6, "first={first} last={last}");
+    }
+
+    #[test]
+    fn momentum_semantics_match_paper() {
+        // m1 = (1-beta) g when m0 = 0; x1 = x0 - lr m1
+        let spec = tiny();
+        let params0 = spec.init_native(6);
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..2 * spec.din).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+        let y = vec![0i32, 1];
+        let mut grad = vec![0.0f32; params0.len()];
+        spec.loss_grad(&params0, &x, &y, 0.0, &mut grad);
+        let mut params = params0.clone();
+        let mut momentum = vec![0.0f32; params.len()];
+        let hp = TrainHyper {
+            lr: 0.1,
+            beta: 0.9,
+            weight_decay: 0.0,
+        };
+        let mut scratch = Vec::new();
+        spec.train_step(&mut params, &mut momentum, &x, &y, hp, &mut scratch);
+        for i in 0..params.len() {
+            let m1 = 0.1 * grad[i];
+            assert!((momentum[i] - m1).abs() < 1e-6);
+            assert!((params[i] - (params0[i] - 0.1 * m1)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn evaluate_counts_correct() {
+        let spec = tiny();
+        let params = spec.init_native(8);
+        let task = crate::data::synth::TaskKind::Tiny.spec().instantiate(9);
+        let data = task.sample_uniform(40, &mut Rng::new(9));
+        let (correct, loss) = spec.evaluate(&params, &data.x, &data.y);
+        assert!((0.0..=40.0).contains(&correct));
+        assert!(loss > 0.0);
+    }
+
+    #[test]
+    fn training_reaches_high_accuracy_on_separable_task() {
+        let spec = tiny();
+        let mut params = spec.init_native(10);
+        let mut momentum = vec![0.0f32; params.len()];
+        let task = crate::data::synth::TaskKind::Tiny.spec().instantiate(11);
+        let train = task.sample_uniform(256, &mut Rng::new(11));
+        let test = task.sample_uniform(128, &mut Rng::new(12));
+        let hp = TrainHyper {
+            lr: 0.3,
+            beta: 0.9,
+            weight_decay: 1e-4,
+        };
+        let mut scratch = Vec::new();
+        for _ in 0..150 {
+            spec.train_step(&mut params, &mut momentum, &train.x, &train.y, hp, &mut scratch);
+        }
+        let (correct, _) = spec.evaluate(&params, &test.x, &test.y);
+        let acc = correct / 128.0;
+        assert!(acc > 0.8, "acc={acc}");
+    }
+}

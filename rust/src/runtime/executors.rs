@@ -1,0 +1,208 @@
+//! Typed executors over the AOT artifacts: shape-checked wrappers around
+//! `PjRtLoadedExecutable::execute` with Literal marshalling.
+//!
+//! All graphs were lowered with `return_tuple=True`, so every output is a
+//! tuple literal (1-, 2- or 3-ary).
+
+use super::manifest::ArtifactEntry;
+use anyhow::{anyhow, ensure, Result};
+use std::rc::Rc;
+use xla::{Literal, PjRtLoadedExecutable};
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    ensure!(n as usize == data.len(), "literal shape mismatch");
+    Ok(Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("{e:?}"))?)
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    ensure!(n as usize == data.len(), "literal shape mismatch");
+    Ok(Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("{e:?}"))?)
+}
+
+fn run(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Literal> {
+    let result = exe.execute::<Literal>(args).map_err(|e| anyhow!("{e:?}"))?;
+    result[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))
+}
+
+fn scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("{e:?}"))?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty scalar literal"))
+}
+
+/// `init_<arch>`: seed → flat params.
+pub struct InitExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub entry: ArtifactEntry,
+}
+
+impl InitExec {
+    pub(super) fn new(exe: Rc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+        InitExec { exe, entry }
+    }
+
+    pub fn run(&self, seed: i32) -> Result<Vec<f32>> {
+        let out = run(&self.exe, &[Literal::scalar(seed)])?;
+        let flat = out.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        let v = flat.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        ensure!(v.len() == self.entry.d, "init returned wrong size");
+        Ok(v)
+    }
+}
+
+/// `train_<arch>_b<B>_k<K>`: momentum-SGD half-step (Algorithm 1 l.3–6).
+pub struct TrainExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub entry: ArtifactEntry,
+}
+
+/// Result of one train step.
+pub struct StepOut {
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    pub loss: f32,
+}
+
+impl TrainExec {
+    pub(super) fn new(exe: Rc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+        TrainExec { exe, entry }
+    }
+
+    /// Expected x length = local_steps * batch * prod(input_shape).
+    pub fn x_len(&self) -> usize {
+        let per: usize = self.entry.input_shape.iter().product();
+        self.entry.local_steps * self.entry.batch * per
+    }
+
+    pub fn y_len(&self) -> usize {
+        self.entry.local_steps * self.entry.batch
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        params: &[f32],
+        momentum: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        beta: f32,
+        wd: f32,
+    ) -> Result<StepOut> {
+        let e = &self.entry;
+        ensure!(params.len() == e.d && momentum.len() == e.d, "param size");
+        ensure!(x.len() == self.x_len() && y.len() == self.y_len(), "batch size");
+        let mut xdims: Vec<i64> = Vec::new();
+        let mut ydims: Vec<i64> = Vec::new();
+        if e.local_steps > 1 {
+            xdims.push(e.local_steps as i64);
+            ydims.push(e.local_steps as i64);
+        }
+        xdims.push(e.batch as i64);
+        ydims.push(e.batch as i64);
+        xdims.extend(e.input_shape.iter().map(|&v| v as i64));
+        let args = [
+            lit_f32(params, &[e.d as i64])?,
+            lit_f32(momentum, &[e.d as i64])?,
+            lit_f32(x, &xdims)?,
+            lit_i32(y, &ydims)?,
+            Literal::scalar(lr),
+            Literal::scalar(beta),
+            Literal::scalar(wd),
+        ];
+        let out = run(&self.exe, &args)?;
+        let (p, m, l) = out.to_tuple3().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(StepOut {
+            params: p.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            momentum: m.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            loss: scalar_f32(&l)?,
+        })
+    }
+}
+
+/// `eval_<arch>_n<E>`: (params, x, y) → (#correct, loss_sum).
+pub struct EvalExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub entry: ArtifactEntry,
+}
+
+impl EvalExec {
+    pub(super) fn new(exe: Rc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+        EvalExec { exe, entry }
+    }
+
+    pub fn eval_n(&self) -> usize {
+        self.entry.eval_n
+    }
+
+    pub fn run(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        let e = &self.entry;
+        ensure!(params.len() == e.d, "param size");
+        let per: usize = e.input_shape.iter().product();
+        ensure!(x.len() == e.eval_n * per && y.len() == e.eval_n, "eval size");
+        let mut xdims = vec![e.eval_n as i64];
+        xdims.extend(e.input_shape.iter().map(|&v| v as i64));
+        let args = [
+            lit_f32(params, &[e.d as i64])?,
+            lit_f32(x, &xdims)?,
+            lit_i32(y, &[e.eval_n as i64])?,
+        ];
+        let out = run(&self.exe, &args)?;
+        let (c, l) = out.to_tuple2().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((scalar_f32(&c)? as f64, scalar_f32(&l)? as f64))
+    }
+}
+
+/// `aggregate_<arch>_m<m>_b<b̂>`: the Pallas NNM∘CWTM rule, X[m,d] → [d].
+pub struct AggregateExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub entry: ArtifactEntry,
+    /// row-major staging buffer reused across calls
+    staging: std::cell::RefCell<Vec<f32>>,
+}
+
+impl AggregateExec {
+    pub(super) fn new(exe: Rc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+        let cap = entry.m * entry.d;
+        AggregateExec {
+            exe,
+            entry,
+            staging: std::cell::RefCell::new(Vec::with_capacity(cap)),
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.entry.m
+    }
+
+    pub fn bhat(&self) -> usize {
+        self.entry.bhat
+    }
+
+    /// Aggregate `rows` (must be exactly m rows of d) into a fresh vector.
+    pub fn run(&self, rows: &[&[f32]]) -> Result<Vec<f32>> {
+        let e = &self.entry;
+        ensure!(
+            rows.len() == e.m,
+            "aggregate expects m={} rows, got {}",
+            e.m,
+            rows.len()
+        );
+        let mut staging = self.staging.borrow_mut();
+        staging.clear();
+        for r in rows {
+            ensure!(r.len() == e.d, "row length {} != d={}", r.len(), e.d);
+            staging.extend_from_slice(r);
+        }
+        let x = lit_f32(&staging, &[e.m as i64, e.d as i64])?;
+        let out = run(&self.exe, &[x])?;
+        let flat = out.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        let v = flat.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        ensure!(v.len() == e.d, "aggregate returned wrong size");
+        Ok(v)
+    }
+}

@@ -1,0 +1,184 @@
+//! `artifacts/manifest.json` parsing — the index of every AOT artifact
+//! emitted by `python/compile/aot.py`.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// One artifact record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// "init" | "train" | "eval" | "aggregate"
+    pub kind: String,
+    pub arch: String,
+    /// flat parameter count
+    pub d: usize,
+    /// per-example input shape (empty for aggregate)
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    /// train: batch size; 0 otherwise
+    pub batch: usize,
+    /// train: local steps (1 = plain step); 0 otherwise
+    pub local_steps: usize,
+    /// eval: eval-set size; 0 otherwise
+    pub eval_n: usize,
+    /// aggregate: m = s+1 and b̂; 0 otherwise
+    pub m: usize,
+    pub bhat: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub scale: String,
+    entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1.0 {
+            return Err(anyhow!("unsupported manifest version {version}"));
+        }
+        let scale = doc
+            .get("scale")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let arts = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+        let mut entries = Vec::with_capacity(arts.len());
+        for a in arts {
+            let req_str = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            let opt_usize = |k: &str| a.get(k).and_then(Json::as_usize).unwrap_or(0);
+            entries.push(ArtifactEntry {
+                name: req_str("name")?,
+                file: req_str("file")?,
+                kind: req_str("kind")?,
+                arch: req_str("arch")?,
+                d: opt_usize("d"),
+                input_shape: a
+                    .get("input_shape")
+                    .and_then(Json::as_i64_vec)
+                    .unwrap_or_default()
+                    .into_iter()
+                    .map(|x| x as usize)
+                    .collect(),
+                classes: opt_usize("classes"),
+                batch: opt_usize("batch"),
+                local_steps: opt_usize("local_steps"),
+                eval_n: opt_usize("eval_n"),
+                m: opt_usize("m"),
+                bhat: opt_usize("bhat"),
+            });
+        }
+        Ok(Manifest { scale, entries })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Manifest::parse(&text)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.iter()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn find(&self, pred: impl Fn(&ArtifactEntry) -> bool) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| pred(e))
+    }
+
+    /// Flat parameter count for an architecture (from any of its entries).
+    pub fn param_count(&self, arch: &str) -> Option<usize> {
+        self.find(|e| e.arch == arch && e.d > 0).map(|e| e.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "scale": "tiny",
+      "artifacts": [
+        {"name": "init_mlp_tiny", "file": "init_mlp_tiny.hlo.txt",
+         "kind": "init", "arch": "mlp_tiny", "d": 340,
+         "input_shape": [16], "classes": 4},
+        {"name": "train_mlp_tiny_b8_k1", "file": "train_mlp_tiny_b8_k1.hlo.txt",
+         "kind": "train", "arch": "mlp_tiny", "d": 340,
+         "input_shape": [16], "classes": 4, "batch": 8, "local_steps": 1},
+        {"name": "aggregate_mlp_tiny_m8_b2", "file": "aggregate_mlp_tiny_m8_b2.hlo.txt",
+         "kind": "aggregate", "arch": "mlp_tiny", "d": 340, "m": 8, "bhat": 2}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.scale, "tiny");
+        let init = m.get("init_mlp_tiny").unwrap();
+        assert_eq!(init.kind, "init");
+        assert_eq!(init.d, 340);
+        assert_eq!(init.input_shape, vec![16]);
+    }
+
+    #[test]
+    fn typed_lookups() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m
+            .find(|e| e.kind == "train" && e.arch == "mlp_tiny" && e.local_steps == 1)
+            .is_some());
+        assert!(m
+            .find(|e| e.kind == "aggregate" && e.m == 8 && e.bhat == 2)
+            .is_some());
+        assert!(m.find(|e| e.kind == "eval").is_none());
+        assert_eq!(m.param_count("mlp_tiny"), Some(340));
+        assert_eq!(m.param_count("nope"), None);
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"version": 2, "artifacts": []}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(
+            Manifest::parse(r#"{"version": 1, "artifacts": [{"name": "x"}]}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if std::path::Path::new(path).exists() {
+            let m = Manifest::load(path).unwrap();
+            assert!(m.len() >= 10);
+            assert!(m.find(|e| e.kind == "aggregate").is_some());
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched. The interchange
+//! format is **HLO text** (not serialized protos — jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids). See /opt/xla-example/README.md and DESIGN.md §3.
+
+pub mod executors;
+pub mod manifest;
+
+pub use executors::{AggregateExec, EvalExec, InitExec, TrainExec};
+pub use manifest::{ArtifactEntry, Manifest};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded PJRT engine over one artifacts directory: lazily compiles and
+/// caches executables by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Manifest::load(&manifest_path).with_context(|| {
+            format!(
+                "cannot load {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn executable(&mut self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Typed init executor for an architecture.
+    pub fn init_exec(&mut self, arch: &str) -> Result<InitExec> {
+        let entry = self
+            .manifest
+            .find(|e| e.kind == "init" && e.arch == arch)
+            .ok_or_else(|| anyhow!("no init artifact for arch '{arch}'"))?
+            .clone();
+        let exe = self.executable(&entry.name)?;
+        Ok(InitExec::new(exe, entry))
+    }
+
+    /// Typed train-step executor (arch + local_steps must match an
+    /// emitted artifact).
+    pub fn train_exec(&mut self, arch: &str, local_steps: usize) -> Result<TrainExec> {
+        let entry = self
+            .manifest
+            .find(|e| e.kind == "train" && e.arch == arch && e.local_steps == local_steps)
+            .ok_or_else(|| {
+                anyhow!("no train artifact for arch '{arch}' with local_steps={local_steps}")
+            })?
+            .clone();
+        let exe = self.executable(&entry.name)?;
+        Ok(TrainExec::new(exe, entry))
+    }
+
+    /// Typed eval executor.
+    pub fn eval_exec(&mut self, arch: &str) -> Result<EvalExec> {
+        let entry = self
+            .manifest
+            .find(|e| e.kind == "eval" && e.arch == arch)
+            .ok_or_else(|| anyhow!("no eval artifact for arch '{arch}'"))?
+            .clone();
+        let exe = self.executable(&entry.name)?;
+        Ok(EvalExec::new(exe, entry))
+    }
+
+    /// Typed Pallas-aggregation executor for (arch, m = s+1, b̂).
+    pub fn aggregate_exec(&mut self, arch: &str, m: usize, bhat: usize) -> Result<AggregateExec> {
+        let entry = self
+            .manifest
+            .find(|e| e.kind == "aggregate" && e.arch == arch && e.m == m && e.bhat == bhat)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no aggregate artifact for arch '{arch}' m={m} b̂={bhat}; \
+                     available: {:?}",
+                    self.manifest
+                        .iter()
+                        .filter(|e| e.kind == "aggregate" && e.arch == arch)
+                        .map(|e| (e.m, e.bhat))
+                        .collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        let exe = self.executable(&entry.name)?;
+        Ok(AggregateExec::new(exe, entry))
+    }
+}
+
+/// True when a usable artifacts directory exists (integration tests skip
+/// HLO paths otherwise).
+pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.json").exists()
+}

@@ -1,0 +1,180 @@
+//! Effective-adversarial-fraction simulation — the paper's Algorithm 2 and
+//! the engine behind Figure 3 (§6.3 scalability study).
+//!
+//! For each candidate `s`, draw `|H| · T` variates `b_i^t ~ HG(n−1, b, s)`,
+//! take `b̂_s = max` over `m` independent simulations, and report the
+//! Effective adversarial fraction `κ_s = b̂_s / (s+1)`.
+
+use crate::sampling::hypergeometric::Hypergeometric;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One simulated grid point of Figure 3.
+#[derive(Clone, Debug)]
+pub struct EafPoint {
+    pub n: u64,
+    pub b: u64,
+    pub s: u64,
+    pub t: u64,
+    /// max-selected attackers per simulation run
+    pub bhat_runs: Vec<u64>,
+    /// b̂ = max over runs (Algorithm 2 line 7)
+    pub bhat: u64,
+    /// κ_s = b̂ / (s+1) (Algorithm 2 line 8)
+    pub eaf: f64,
+    /// mean EAF across runs and its 95% CI half-width (the paper's bands)
+    pub eaf_mean: f64,
+    pub eaf_ci95: f64,
+}
+
+/// Algorithm 2 driver.
+#[derive(Clone, Debug)]
+pub struct EafSimulator {
+    pub n: u64,
+    pub b: u64,
+    pub t: u64,
+    /// number of independent simulations m (paper: 5)
+    pub sims: usize,
+}
+
+/// Simulate `b̂ = max_{i∈H, t≤T} b_i^t` once (Algorithm 2 lines 4–5).
+///
+/// Instead of materializing `|H|·T` draws, walks them with the CDF-table
+/// sampler; early-exits when the max hits the distribution's upper support
+/// bound (nothing can exceed it).
+pub fn simulate_bhat_max(hg: &Hypergeometric, count: u64, rng: &mut Rng) -> u64 {
+    let hard_max = hg.marked.min(hg.draws);
+    let mut best = 0u64;
+    for _ in 0..count {
+        let x = hg.sample(rng);
+        if x > best {
+            best = x;
+            if best == hard_max {
+                break;
+            }
+        }
+    }
+    best
+}
+
+impl EafSimulator {
+    pub fn new(n: u64, b: u64, t: u64, sims: usize) -> Self {
+        assert!(b < n, "need b < n");
+        EafSimulator { n, b, t, sims }
+    }
+
+    /// Simulate one grid point for neighbor count `s`.
+    pub fn point(&self, s: u64, rng: &mut Rng) -> EafPoint {
+        assert!(s <= self.n - 1);
+        let hg = Hypergeometric::new(self.n - 1, self.b, s);
+        let honest = self.n - self.b;
+        let count = honest * self.t;
+        let bhat_runs: Vec<u64> = (0..self.sims)
+            .map(|_| simulate_bhat_max(&hg, count, rng))
+            .collect();
+        let bhat = bhat_runs.iter().copied().max().unwrap_or(0);
+        let fracs: Vec<f64> = bhat_runs
+            .iter()
+            .map(|&x| x as f64 / (s + 1) as f64)
+            .collect();
+        EafPoint {
+            n: self.n,
+            b: self.b,
+            s,
+            t: self.t,
+            bhat,
+            eaf: bhat as f64 / (s + 1) as f64,
+            eaf_mean: stats::mean(&fracs),
+            eaf_ci95: stats::ci95_half_width(&fracs),
+            bhat_runs,
+        }
+    }
+
+    /// Sweep a grid of s values (Figure 3's x-axis).
+    pub fn sweep(&self, grid: &[u64], rng: &mut Rng) -> Vec<EafPoint> {
+        grid.iter().map(|&s| self.point(s, rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bhat_max_bounded_by_support() {
+        let hg = Hypergeometric::new(29, 6, 15);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let m = simulate_bhat_max(&hg, 1000, &mut rng);
+            assert!(m <= 6);
+        }
+    }
+
+    #[test]
+    fn bhat_max_increases_with_count() {
+        let hg = Hypergeometric::new(999, 100, 20);
+        let mut rng = Rng::new(2);
+        let avg = |count: u64, rng: &mut Rng| -> f64 {
+            (0..30)
+                .map(|_| simulate_bhat_max(&hg, count, rng) as f64)
+                .sum::<f64>()
+                / 30.0
+        };
+        let small = avg(10, &mut rng);
+        let large = avg(10_000, &mut rng);
+        assert!(large > small, "small={small} large={large}");
+    }
+
+    #[test]
+    fn eaf_decreases_with_s() {
+        // the paper's headline monotonicity: larger s -> smaller EAF
+        let sim = EafSimulator::new(1_000, 100, 50, 3);
+        let mut rng = Rng::new(3);
+        let pts = sim.sweep(&[20, 60, 200, 600], &mut rng);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].eaf <= w[0].eaf + 0.02,
+                "EAF should not grow: {} (s={}) -> {} (s={})",
+                w[0].eaf,
+                w[0].s,
+                w[1].eaf,
+                w[1].s
+            );
+        }
+    }
+
+    #[test]
+    fn all_to_all_eaf_is_exact_fraction() {
+        // s = n-1 pulls everyone: b̂ = b exactly, EAF = b/n
+        let sim = EafSimulator::new(30, 6, 10, 2);
+        let mut rng = Rng::new(4);
+        let p = sim.point(29, &mut rng);
+        assert_eq!(p.bhat, 6);
+        assert!((p.eaf - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_fig1_left_setting() {
+        // n=100, b=10, s=15, T=200: the paper reports b̂=7 (EAF ≈ 0.44)
+        let sim = EafSimulator::new(100, 10, 200, 5);
+        let mut rng = Rng::new(5);
+        let p = sim.point(15, &mut rng);
+        assert!(
+            (6..=9).contains(&p.bhat),
+            "paper found b̂=7 for this setting; got {}",
+            p.bhat
+        );
+        assert!(p.eaf < 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn ci_fields_populated() {
+        let sim = EafSimulator::new(200, 20, 20, 5);
+        let mut rng = Rng::new(6);
+        let p = sim.point(12, &mut rng);
+        assert_eq!(p.bhat_runs.len(), 5);
+        assert!(p.eaf_mean > 0.0);
+        assert!(p.eaf_ci95 >= 0.0);
+        assert!(p.eaf >= p.eaf_mean); // max >= mean
+    }
+}

@@ -1,0 +1,270 @@
+//! Hypergeometric distribution HG(total, marked, draws): the law of the
+//! number of Byzantine nodes an honest node pulls in one round
+//! (`b_i^t ~ HG(n−1, b, s)`, paper §4.2).
+//!
+//! Provides exact log-space PMF/CDF (stable up to the paper's Figure 3
+//! scale of n = 100 000), a table-inversion sampler (O(log s) per draw —
+//! the EAF simulator draws tens of millions of variates), quantiles, and
+//! the KL tail bound of Lemma A.4.
+
+use crate::util::rng::Rng;
+use crate::util::special::{kl_bernoulli, ln_binom};
+
+/// An immutable hypergeometric distribution with precomputed CDF table.
+#[derive(Clone, Debug)]
+pub struct Hypergeometric {
+    pub total: u64,  // n − 1 in the paper (peers available to pull from)
+    pub marked: u64, // b: Byzantine nodes
+    pub draws: u64,  // s: sampled peers
+    /// support is [lo, hi]
+    lo: u64,
+    hi: u64,
+    /// cdf[k - lo] = P(X <= k)
+    cdf: Vec<f64>,
+}
+
+impl Hypergeometric {
+    pub fn new(total: u64, marked: u64, draws: u64) -> Self {
+        assert!(marked <= total, "marked {marked} > total {total}");
+        assert!(draws <= total, "draws {draws} > total {total}");
+        let lo = draws.saturating_sub(total - marked);
+        let hi = marked.min(draws);
+        let denom = ln_binom(total, draws);
+        let mut cdf = Vec::with_capacity((hi - lo + 1) as usize);
+        let mut acc = 0.0f64;
+        for k in lo..=hi {
+            let lp = ln_binom(marked, k) + ln_binom(total - marked, draws - k) - denom;
+            acc += lp.exp();
+            cdf.push(acc.min(1.0));
+        }
+        // normalize tail rounding: force the last entry to exactly 1
+        if let Some(last) = cdf.last_mut() {
+            *last = 1.0;
+        }
+        Hypergeometric {
+            total,
+            marked,
+            draws,
+            lo,
+            hi,
+            cdf,
+        }
+    }
+
+    /// P(X = k).
+    pub fn pmf(&self, k: u64) -> f64 {
+        if k < self.lo || k > self.hi {
+            return 0.0;
+        }
+        let lp = ln_binom(self.marked, k)
+            + ln_binom(self.total - self.marked, self.draws - k)
+            - ln_binom(self.total, self.draws);
+        lp.exp()
+    }
+
+    /// P(X <= k).
+    pub fn cdf(&self, k: u64) -> f64 {
+        if k < self.lo {
+            0.0
+        } else if k >= self.hi {
+            1.0
+        } else {
+            self.cdf[(k - self.lo) as usize]
+        }
+    }
+
+    /// P(X >= k).
+    pub fn sf_ge(&self, k: u64) -> f64 {
+        if k <= self.lo {
+            1.0
+        } else if k > self.hi {
+            0.0
+        } else {
+            (1.0 - self.cdf(k - 1)).max(0.0)
+        }
+    }
+
+    /// Mean = draws * marked / total.
+    pub fn mean(&self) -> f64 {
+        self.draws as f64 * self.marked as f64 / self.total as f64
+    }
+
+    /// Smallest k with P(X <= k) >= q.
+    pub fn quantile(&self, q: f64) -> u64 {
+        debug_assert!((0.0..=1.0).contains(&q));
+        match self
+            .cdf
+            .binary_search_by(|p| p.partial_cmp(&q).unwrap())
+        {
+            Ok(i) => self.lo + i as u64,
+            Err(i) => self.lo + (i as u64).min(self.hi - self.lo),
+        }
+    }
+
+    /// One draw via CDF-table inversion — O(log(support)).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64();
+        match self
+            .cdf
+            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => self.lo + i as u64 + 1, // u exactly on boundary: next value
+            Err(i) => self.lo + (i as u64).min(self.hi - self.lo),
+        }
+    }
+
+    /// Quantile of the **maximum** of `count` i.i.d. draws: smallest k with
+    /// `P(X <= k)^count >= q`. The exact-analytic alternative to the
+    /// paper's Algorithm 2 simulation (`count = |H| · T`).
+    pub fn max_of_quantile(&self, count: u64, q: f64) -> u64 {
+        debug_assert!(count > 0 && (0.0..=1.0).contains(&q));
+        let target = q.powf(1.0 / count as f64);
+        self.quantile(target)
+    }
+
+    /// Lemma A.4 / Lemma 13 (Allouah et al. 2024a) KL upper bound:
+    /// `P(X >= bhat) <= exp(−s · D(bhat/s, b/(n−1)))`, valid for
+    /// `bhat/s > b/(n−1)`.
+    pub fn tail_bound_kl(&self, bhat: u64) -> f64 {
+        let s = self.draws as f64;
+        if s == 0.0 {
+            return 1.0;
+        }
+        let alpha = bhat as f64 / s;
+        let beta = self.marked as f64 / self.total as f64;
+        if alpha <= beta {
+            return 1.0; // bound not applicable below the mean
+        }
+        (-s * kl_bernoulli(alpha.min(1.0), beta)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        for &(n, b, s) in &[(29u64, 6u64, 15u64), (99, 10, 15), (19, 3, 6), (7, 7, 3)] {
+            let hg = Hypergeometric::new(n, b, s);
+            let total: f64 = (0..=s.min(b)).map(|k| hg.pmf(k)).sum();
+            assert!((total - 1.0).abs() < 1e-9, "n={n} b={b} s={s} sum={total}");
+        }
+    }
+
+    #[test]
+    fn pmf_known_value() {
+        // HG(total=10, marked=4, draws=3), P(X=2) = C(4,2)C(6,1)/C(10,3) = 36/120
+        let hg = Hypergeometric::new(10, 4, 3);
+        assert!((hg.pmf(2) - 0.3).abs() < 1e-12);
+        assert!((hg.pmf(0) - 20.0 / 120.0).abs() < 1e-12);
+        assert_eq!(hg.pmf(5), 0.0);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let hg = Hypergeometric::new(99, 10, 15);
+        let mut prev = -1.0;
+        for k in 0..=10 {
+            let c = hg.cdf(k);
+            assert!(c >= prev && (0.0..=1.0).contains(&c));
+            prev = c;
+        }
+        assert_eq!(hg.cdf(10), 1.0);
+    }
+
+    #[test]
+    fn support_truncation() {
+        // draws > total - marked forces a minimum number of marked draws
+        let hg = Hypergeometric::new(10, 8, 5);
+        assert_eq!(hg.cdf(2), 0.0); // lo = 5 - 2 = 3
+        assert!(hg.pmf(3) > 0.0);
+        assert_eq!(hg.pmf(2), 0.0);
+    }
+
+    #[test]
+    fn mean_formula() {
+        let hg = Hypergeometric::new(99, 10, 15);
+        assert!((hg.mean() - 15.0 * 10.0 / 99.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let hg = Hypergeometric::new(99, 10, 15);
+        for q in [0.01, 0.5, 0.9, 0.999] {
+            let k = hg.quantile(q);
+            assert!(hg.cdf(k) >= q);
+            if k > 0 {
+                assert!(hg.cdf(k - 1) < q);
+            }
+        }
+    }
+
+    #[test]
+    fn sampler_matches_pmf() {
+        let hg = Hypergeometric::new(29, 6, 15);
+        let mut rng = Rng::new(42);
+        let n = 200_000;
+        let mut counts = vec![0u32; 8];
+        for _ in 0..n {
+            counts[hg.sample(&mut rng) as usize] += 1;
+        }
+        for k in 0..=6u64 {
+            let got = counts[k as usize] as f64 / n as f64;
+            let want = hg.pmf(k);
+            assert!(
+                (got - want).abs() < 0.01,
+                "k={k} got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn sampler_agrees_with_sequential_rng_method() {
+        let hg = Hypergeometric::new(99, 10, 15);
+        let mut rng = Rng::new(7);
+        let n = 100_000;
+        let mean_inv: f64 =
+            (0..n).map(|_| hg.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        let mean_seq: f64 = (0..n)
+            .map(|_| rng.hypergeometric(99, 10, 15) as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean_inv - mean_seq).abs() < 0.03, "{mean_inv} vs {mean_seq}");
+    }
+
+    #[test]
+    fn kl_tail_bound_dominates_true_tail() {
+        let hg = Hypergeometric::new(99, 10, 15);
+        for bhat in 3..=10u64 {
+            let bound = hg.tail_bound_kl(bhat);
+            let true_tail = hg.sf_ge(bhat);
+            assert!(
+                bound + 1e-12 >= true_tail,
+                "bhat={bhat} bound={bound} tail={true_tail}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_of_quantile_grows_with_count() {
+        let hg = Hypergeometric::new(999, 100, 30);
+        let q1 = hg.max_of_quantile(1, 0.99);
+        let q2 = hg.max_of_quantile(100_000, 0.99);
+        assert!(q2 >= q1);
+        assert!(q2 <= 30);
+    }
+
+    #[test]
+    fn large_scale_figure3_regime() {
+        // n = 100 000, b = 10 000 (10%), s = 30: the paper's §6.3 claim is
+        // that 30 neighbors suffice to keep an honest majority whp.
+        let hg = Hypergeometric::new(99_999, 10_000, 30);
+        // P(more than 15 of 30 sampled are Byzantine) must be astronomically small
+        let p_no_majority = hg.sf_ge(16);
+        assert!(p_no_majority < 1e-8, "p={p_no_majority}");
+        // union over 80k honest nodes * 200 rounds: honest majority holds
+        // for the whole training with high probability (paper §6.3)
+        assert!(p_no_majority * 80_000.0 * 200.0 < 0.1);
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's §4.2 machinery: hypergeometric distribution substrate,
+//! Effective-adversarial-fraction simulation (Algorithm 2), and the
+//! theoretical sampling thresholds (Lemma 4.1 / Lemma A.4).
+
+pub mod eaf;
+pub mod hypergeometric;
+pub mod selector;
+
+pub use eaf::{simulate_bhat_max, EafPoint, EafSimulator};
+pub use hypergeometric::Hypergeometric;
+pub use selector::{lemma41_min_s, lemma_a4_threshold, select_params, Selection};

@@ -1,0 +1,232 @@
+//! Property-testing mini-harness (the offline crate set lacks proptest).
+//!
+//! A [`forall`] runner drives a generator against a property over many
+//! seeded cases; on failure it performs greedy shrinking (halving vectors,
+//! bisecting integers, zeroing floats) and reports the minimal
+//! counterexample together with the seed that reproduces it.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries bypass the crate's rpath on this image —
+//! //  the same snippet executes in `tests::passing_property_completes`)
+//! use rpel::testkit::{forall, Gen};
+//! forall(100, 42, Gen::vec_f32(1..=8, -10.0..10.0), |v| {
+//!     v.iter().all(|x| x.abs() <= 10.0)
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A seeded generator of test inputs, plus a shrinking strategy.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + std::fmt::Debug + 'static> Gen<T> {
+    pub fn new(
+        gen: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Gen {
+            gen: Box::new(gen),
+            shrink: Box::new(shrink),
+        }
+    }
+
+    /// Generator with no shrinking.
+    pub fn plain(gen: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen::new(gen, |_| Vec::new())
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, value: &T) -> Vec<T> {
+        (self.shrink)(value)
+    }
+
+    /// Map the generated value (shrinks are lost — use for derived views).
+    pub fn map<U: Clone + std::fmt::Debug + 'static>(
+        self,
+        f: impl Fn(T) -> U + 'static,
+    ) -> Gen<U> {
+        Gen::plain(move |rng| f(self.sample(rng)))
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize in [lo, hi], shrinking toward lo.
+    pub fn usize_in(range: std::ops::RangeInclusive<usize>) -> Gen<usize> {
+        let (lo, hi) = (*range.start(), *range.end());
+        Gen::new(
+            move |rng| lo + rng.index(hi - lo + 1),
+            move |&v| {
+                let mut out = Vec::new();
+                if v > lo {
+                    // geometric ladder of midpoints for fast bisection,
+                    // then the immediate predecessor
+                    out.push(lo);
+                    for k in 1..8usize {
+                        out.push(lo + (v - lo) * k / 8);
+                    }
+                    out.push(v - 1);
+                    out.dedup();
+                    out.retain(|&c| c < v);
+                }
+                out
+            },
+        )
+    }
+}
+
+impl Gen<f32> {
+    /// Uniform f32 in [lo, hi), shrinking toward 0 (clamped into range).
+    pub fn f32_in(range: std::ops::Range<f32>) -> Gen<f32> {
+        let (lo, hi) = (range.start, range.end);
+        Gen::new(
+            move |rng| lo + (hi - lo) * rng.f32(),
+            move |&v| {
+                let zero = 0.0f32.clamp(lo, hi);
+                if v != zero {
+                    vec![zero, v / 2.0]
+                } else {
+                    vec![]
+                }
+            },
+        )
+    }
+}
+
+impl Gen<Vec<f32>> {
+    /// Vector of uniform f32s with random length, shrinking by halving
+    /// length and zeroing entries.
+    pub fn vec_f32(
+        len: std::ops::RangeInclusive<usize>,
+        range: std::ops::Range<f32>,
+    ) -> Gen<Vec<f32>> {
+        let (llo, lhi) = (*len.start(), *len.end());
+        let (lo, hi) = (range.start, range.end);
+        Gen::new(
+            move |rng| {
+                let n = llo + rng.index(lhi - llo + 1);
+                (0..n).map(|_| lo + (hi - lo) * rng.f32()).collect()
+            },
+            move |v: &Vec<f32>| {
+                let mut out = Vec::new();
+                if v.len() > llo {
+                    out.push(v[..v.len() / 2.max(llo)].to_vec());
+                    out.push(v[..v.len() - 1].to_vec());
+                }
+                if v.iter().any(|&x| x != 0.0) {
+                    out.push(vec![0.0f32.clamp(lo, hi); v.len()]);
+                }
+                out
+            },
+        )
+    }
+}
+
+/// Pair two independent generators.
+pub fn zip<A, B>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)>
+where
+    A: Clone + std::fmt::Debug + 'static,
+    B: Clone + std::fmt::Debug + 'static,
+{
+    Gen::new(
+        move |rng| (a.sample(rng), b.sample(rng)),
+        |_| Vec::new(),
+    )
+}
+
+/// Run `prop` over `cases` generated inputs. Panics with a shrunk, seeded
+/// counterexample on failure.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    cases: usize,
+    seed: u64,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(&gen, input, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case})\nminimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Clone + std::fmt::Debug + 'static>(
+    gen: &Gen<T>,
+    mut failing: T,
+    prop: &impl Fn(&T) -> bool,
+) -> T {
+    // greedy: accept any shrink that still fails, cap total attempts
+    let mut budget = 200usize;
+    'outer: while budget > 0 {
+        for cand in gen.shrinks(&failing) {
+            budget -= 1;
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(200, 1, Gen::vec_f32(0..=16, -5.0..5.0), |v| {
+            v.iter().all(|x| x.abs() <= 5.0)
+        });
+    }
+
+    #[test]
+    fn usize_gen_respects_range() {
+        forall(500, 2, Gen::usize_in(3..=9), |&n| (3..=9).contains(&n));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(100, 3, Gen::usize_in(0..=100), |&n| n < 90);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // capture the panic message and check the counterexample is minimal
+        let result = std::panic::catch_unwind(|| {
+            forall(100, 4, Gen::usize_in(0..=1000), |&n| n < 8);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // geometric bisection must land on the boundary value 8
+        assert!(
+            msg.contains("counterexample: 8"),
+            "msg: {msg}"
+        );
+    }
+
+    #[test]
+    fn map_transforms() {
+        let g = Gen::usize_in(1..=4).map(|n| vec![0u8; n]);
+        forall(100, 5, g, |v| (1..=4).contains(&v.len()));
+    }
+
+    #[test]
+    fn zip_pairs() {
+        let g = zip(Gen::usize_in(0..=3), Gen::f32_in(0.0..1.0));
+        forall(100, 6, g, |&(n, x)| n <= 3 && (0.0..1.0).contains(&x));
+    }
+}

@@ -1,0 +1,12 @@
+//! Low-level substrates: PRNG, vector math, statistics, special functions,
+//! JSON codec.
+//!
+//! The offline crate set contains neither `rand` nor `serde`, so these are
+//! first-class, fully tested implementations rather than shims (DESIGN.md
+//! §10).
+
+pub mod json;
+pub mod rng;
+pub mod special;
+pub mod stats;
+pub mod vecmath;

@@ -1,0 +1,432 @@
+//! Deterministic PRNG substrate: SplitMix64 seeding + Xoshiro256++ stream,
+//! with the distribution samplers the coordinator needs (uniform ranges,
+//! Gaussian, Gamma/Dirichlet, shuffles, subset sampling).
+//!
+//! Every stochastic component in the system (data generation, Dirichlet
+//! partitioning, epidemic peer sampling, attack noise, graph generation)
+//! derives its stream from a single experiment seed via [`Rng::fork`], so
+//! entire training runs are bit-reproducible — a requirement for the
+//! paper's multi-seed confidence intervals.
+
+/// Xoshiro256++ PRNG (Blackman & Vigna), seeded through SplitMix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent child stream tagged by `tag`.
+    ///
+    /// Uses the SplitMix64 avalanche over (next_u64, tag) so forked streams
+    /// are decorrelated from the parent and from each other.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mut sm = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, bound) — Lemire's nearly-divisionless method.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, bound).
+    #[inline]
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller (cached second draw discarded for
+    /// simplicity; the coordinator is not gaussian-throughput-bound).
+    pub fn gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Gaussian with given mean and standard deviation, as f32.
+    #[inline]
+    pub fn gaussian32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.gaussian() as f32
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (with Johnk boost for shape < 1).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        debug_assert!(shape > 0.0);
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = self.f64().max(1e-300);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.gaussian();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u.max(1e-300).ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha, ..., alpha) over `k` categories.
+    pub fn dirichlet_sym(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = v.iter().sum();
+        if sum <= 0.0 {
+            // pathological underflow: fall back to a one-hot draw
+            let mut out = vec![0.0; k];
+            out[self.index(k)] = 1.0;
+            return out;
+        }
+        for x in &mut v {
+            *x /= sum;
+        }
+        v
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices uniformly from [0, n) — Floyd's
+    /// algorithm, O(k) expected. Result order is randomized.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        if k > n / 2 {
+            // dense case: partial Fisher–Yates over the full index range
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.index(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            return idx;
+        }
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.index(j + 1);
+            if chosen.contains(&t) {
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        self.shuffle(&mut chosen);
+        chosen
+    }
+
+    /// Sample `k` distinct indices from [0, n) excluding `skip`.
+    pub fn sample_distinct_excluding(&mut self, n: usize, k: usize, skip: usize) -> Vec<usize> {
+        assert!(skip < n && k <= n - 1);
+        let mut v = self.sample_distinct(n - 1, k);
+        for x in &mut v {
+            if *x >= skip {
+                *x += 1;
+            }
+        }
+        v
+    }
+
+    /// One hypergeometric draw HG(total, marked, draws): the number of
+    /// marked items in a uniform sample of `draws` items without
+    /// replacement. Exact sequential method, O(draws).
+    pub fn hypergeometric(&mut self, total: u64, marked: u64, draws: u64) -> u64 {
+        debug_assert!(marked <= total && draws <= total);
+        let mut rem_total = total;
+        let mut rem_marked = marked;
+        let mut hits = 0;
+        for _ in 0..draws {
+            if rem_marked == 0 {
+                break;
+            }
+            if self.f64() * rem_total as f64 > (rem_total - rem_marked) as f64 {
+                hits += 1;
+                rem_marked -= 1;
+            }
+            rem_total -= 1;
+        }
+        hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(Rng::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn fork_streams_decorrelated() {
+        let mut root = Rng::new(1);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let xs: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(2);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_respects_bound_and_is_roughly_uniform() {
+        let mut r = Rng::new(3);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(4);
+        let n = 200_000;
+        let (mut sum, mut sum2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gaussian();
+            sum += x;
+            sum2 += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(5);
+        for &shape in &[0.3, 1.0, 2.5, 10.0] {
+            let n = 50_000;
+            let mean: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(0.5),
+                "shape={shape} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(6);
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let v = r.dirichlet_sym(alpha, 12);
+            assert_eq!(v.len(), 12);
+            let s: f64 = v.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_effect() {
+        // low alpha -> concentrated (high max); high alpha -> flat
+        let mut r = Rng::new(7);
+        let trials = 300;
+        let avg_max = |r: &mut Rng, alpha: f64| -> f64 {
+            (0..trials)
+                .map(|_| {
+                    r.dirichlet_sym(alpha, 10)
+                        .into_iter()
+                        .fold(0.0f64, f64::max)
+                })
+                .sum::<f64>()
+                / trials as f64
+        };
+        let lo = avg_max(&mut r, 0.1);
+        let hi = avg_max(&mut r, 100.0);
+        assert!(lo > 0.5 && hi < 0.2, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = Rng::new(8);
+        for &(n, k) in &[(10usize, 3usize), (100, 99), (5, 5), (1000, 1), (16, 8)] {
+            let v = r.sample_distinct(n, k);
+            assert_eq!(v.len(), k);
+            let mut sorted = v.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates in {v:?}");
+            assert!(v.iter().all(|&x| x < n));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_uniform_inclusion() {
+        // each index should appear with probability k/n
+        let mut r = Rng::new(9);
+        let (n, k, trials) = (20usize, 5usize, 40_000usize);
+        let mut counts = vec![0u32; n];
+        for _ in 0..trials {
+            for i in r.sample_distinct(n, k) {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64;
+        for &c in &counts {
+            assert!(
+                (c as f64 - expect).abs() < 0.08 * expect,
+                "counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_excluding_never_returns_skip() {
+        let mut r = Rng::new(10);
+        for _ in 0..500 {
+            let v = r.sample_distinct_excluding(12, 6, 4);
+            assert!(!v.contains(&4));
+            assert!(v.iter().all(|&x| x < 12));
+            let mut s = v.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 6);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(11);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn hypergeometric_support_and_mean() {
+        let mut r = Rng::new(12);
+        let (total, marked, draws) = (99u64, 10u64, 15u64);
+        let n = 30_000;
+        let mut sum = 0u64;
+        for _ in 0..n {
+            let x = r.hypergeometric(total, marked, draws);
+            assert!(x <= marked.min(draws));
+            sum += x;
+        }
+        let mean = sum as f64 / n as f64;
+        let expect = draws as f64 * marked as f64 / total as f64; // ≈ 1.515
+        assert!((mean - expect).abs() < 0.05, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn hypergeometric_edge_cases() {
+        let mut r = Rng::new(13);
+        assert_eq!(r.hypergeometric(10, 0, 5), 0);
+        assert_eq!(r.hypergeometric(10, 10, 5), 5);
+        assert_eq!(r.hypergeometric(10, 4, 10), 4);
+        assert_eq!(r.hypergeometric(10, 4, 0), 0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Special functions: log-gamma, log-binomial, KL divergence of Bernoulli
+//! pairs — the analytic substrate behind the hypergeometric machinery
+//! (paper §4.2, Lemma A.4: tail bound `P(b_i^t ≥ b̂) ≤ exp(−s·D(b̂/s, b/(n−1)))`).
+
+/// Natural log of the Gamma function (Lanczos approximation, g=7, n=9).
+/// Accurate to ~1e-13 relative error for x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection formula
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// ln(n choose k) via log-gamma; exact-ish for huge n (n = 100 000 in the
+/// paper's Figure 3 scalability simulations).
+pub fn ln_binom(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_gamma(n as f64 + 1.0) - ln_gamma(k as f64 + 1.0) - ln_gamma((n - k) as f64 + 1.0)
+}
+
+/// Bernoulli KL divergence D(α ‖ β) = α ln(α/β) + (1−α) ln((1−α)/(1−β)),
+/// the exponent in the paper's Equation (7).
+pub fn kl_bernoulli(alpha: f64, beta: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&alpha) && (0.0..=1.0).contains(&beta));
+    let term = |p: f64, q: f64| -> f64 {
+        if p == 0.0 {
+            0.0
+        } else if q == 0.0 {
+            f64::INFINITY
+        } else {
+            p * (p / q).ln()
+        }
+    };
+    term(alpha, beta) + term(1.0 - alpha, 1.0 - beta)
+}
+
+/// Inverse standard-normal CDF Φ⁻¹ (Acklam's rational approximation,
+/// |ε| < 1.15e-9) — used by the ALIE attack's z_max computation.
+pub fn inverse_normal_cdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "p must be in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_integer_factorials() {
+        // Gamma(n) = (n-1)!
+        let facts = [1.0, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0];
+        for (n, &f) in facts.iter().enumerate() {
+            let got = ln_gamma(n as f64 + 1.0);
+            assert!((got - (f as f64).ln()).abs() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ln_gamma_half() {
+        // Gamma(1/2) = sqrt(pi)
+        let want = std::f64::consts::PI.sqrt().ln();
+        assert!((ln_gamma(0.5) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_large_stirling() {
+        // compare to Stirling series at x = 1e6
+        let x: f64 = 1e6;
+        let stirling = (x - 0.5) * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI).ln()
+            + 1.0 / (12.0 * x);
+        assert!((ln_gamma(x) - stirling).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ln_binom_small_exact() {
+        assert!((ln_binom(5, 2) - 10f64.ln()).abs() < 1e-10);
+        assert!((ln_binom(10, 5) - 252f64.ln()).abs() < 1e-10);
+        assert_eq!(ln_binom(3, 5), f64::NEG_INFINITY);
+        assert!((ln_binom(7, 0)).abs() < 1e-12);
+        assert!((ln_binom(7, 7)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_binom_symmetry() {
+        for k in 0..=20 {
+            assert!((ln_binom(20, k) - ln_binom(20, 20 - k)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn kl_properties() {
+        assert_eq!(kl_bernoulli(0.3, 0.3), 0.0);
+        assert!(kl_bernoulli(0.5, 0.1) > 0.0);
+        assert_eq!(kl_bernoulli(0.5, 0.0), f64::INFINITY);
+        // known value: D(0.5||0.25) = 0.5 ln2 + 0.5 ln(2/3)
+        let want = 0.5 * 2f64.ln() + 0.5 * (2.0f64 / 3.0).ln();
+        assert!((kl_bernoulli(0.5, 0.25) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_monotone_in_gap() {
+        let mut prev = 0.0;
+        for i in 1..9 {
+            let beta = 0.5 - 0.05 * i as f64;
+            let d = kl_bernoulli(0.5, beta);
+            assert!(d > prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn inverse_normal_known_values() {
+        assert!(inverse_normal_cdf(0.5).abs() < 1e-9);
+        assert!((inverse_normal_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inverse_normal_cdf(0.025) + 1.959964).abs() < 1e-4);
+        assert!((inverse_normal_cdf(0.8413447) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn inverse_normal_symmetry_and_tails() {
+        for p in [0.001, 0.01, 0.2, 0.4] {
+            let a = inverse_normal_cdf(p);
+            let b = inverse_normal_cdf(1.0 - p);
+            assert!((a + b).abs() < 1e-7, "p={p}");
+            assert!(a < 0.0);
+        }
+        assert!(inverse_normal_cdf(1e-10) < -6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn inverse_normal_rejects_boundary() {
+        inverse_normal_cdf(0.0);
+    }
+}

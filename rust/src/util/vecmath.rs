@@ -1,0 +1,200 @@
+//! Flat-vector math over `&[f32]` — the model-parameter workhorse.
+//!
+//! Every honest node's model is a flat `Vec<f32>` of length `d` (the same
+//! layout the AOT artifacts use), so the coordinator's hot loop is built
+//! from these primitives. Reductions accumulate in f64: with d up to ~10⁶
+//! and adversarial magnitudes in play, f32 accumulation loses digits that
+//! the robustness logic (distance rankings!) actually needs.
+
+/// y += a * x
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = x (copy)
+#[inline]
+pub fn assign(y: &mut [f32], x: &[f32]) {
+    y.copy_from_slice(x);
+}
+
+/// Element-wise in-place scale: x *= a
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+/// Dot product with f64 accumulation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        acc += (*x as f64) * (*y as f64);
+    }
+    acc
+}
+
+/// Squared L2 norm (f64 accumulation).
+#[inline]
+pub fn norm_sq(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for v in x {
+        acc += (*v as f64) * (*v as f64);
+    }
+    acc
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm(x: &[f32]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// Squared L2 distance ||a - b||² (f64 accumulation).
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x as f64) - (*y as f64);
+        acc += d * d;
+    }
+    acc
+}
+
+/// L2 distance.
+#[inline]
+pub fn dist(a: &[f32], b: &[f32]) -> f64 {
+    dist_sq(a, b).sqrt()
+}
+
+/// out = mean of rows (each row a &[f32] of equal length).
+pub fn mean_of(rows: &[&[f32]], out: &mut [f32]) {
+    assert!(!rows.is_empty());
+    out.fill(0.0);
+    for r in rows {
+        axpy(out, 1.0, r);
+    }
+    scale(out, 1.0 / rows.len() as f32);
+}
+
+/// out = a - b
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// out = a + b
+#[inline]
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
+    }
+}
+
+/// Clip `x` to L2 ball of radius `tau` around `center`:
+/// x <- center + min(1, tau/||x-center||) * (x - center).
+/// This is the clipping primitive of ClippedGossip / CS+ / RTC.
+pub fn clip_to_ball(x: &mut [f32], center: &[f32], tau: f64) {
+    let d = dist(x, center);
+    if d > tau && d > 0.0 {
+        let f = (tau / d) as f32;
+        for (xi, ci) in x.iter_mut().zip(center) {
+            *xi = ci + f * (*xi - ci);
+        }
+    }
+}
+
+/// True iff every element is finite.
+#[inline]
+pub fn all_finite(x: &[f32]) -> bool {
+    x.iter().all(|v| v.is_finite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        let a = [3.0f32, 4.0];
+        assert_eq!(dot(&a, &a), 25.0);
+        assert_eq!(norm_sq(&a), 25.0);
+        assert_eq!(norm(&a), 5.0);
+    }
+
+    #[test]
+    fn dist_symmetry_and_zero() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 6.0, 3.0];
+        assert_eq!(dist_sq(&a, &b), dist_sq(&b, &a));
+        assert_eq!(dist_sq(&a, &a), 0.0);
+        assert_eq!(dist(&a, &b), 5.0);
+    }
+
+    #[test]
+    fn mean_of_rows() {
+        let r1 = [0.0f32, 2.0];
+        let r2 = [2.0f32, 4.0];
+        let mut out = [0.0f32; 2];
+        mean_of(&[&r1, &r2], &mut out);
+        assert_eq!(out, [1.0, 3.0]);
+    }
+
+    #[test]
+    fn clip_inside_ball_is_noop() {
+        let mut x = vec![1.0f32, 1.0];
+        let c = [0.0f32, 0.0];
+        clip_to_ball(&mut x, &c, 10.0);
+        assert_eq!(x, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn clip_outside_ball_projects() {
+        let mut x = vec![3.0f32, 4.0];
+        let c = [0.0f32, 0.0];
+        clip_to_ball(&mut x, &c, 2.5);
+        assert!((norm(&x) - 2.5).abs() < 1e-6);
+        // direction preserved
+        assert!((x[0] / x[1] - 3.0 / 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clip_respects_center() {
+        let mut x = vec![10.0f32, 0.0];
+        let c = [8.0f32, 0.0];
+        clip_to_ball(&mut x, &c, 1.0);
+        assert!((x[0] - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn f64_accumulation_beats_f32() {
+        // large-magnitude cancellation case that f32 accumulation fails
+        let n = 1_000_000;
+        let x = vec![1e4f32; n];
+        let ns = norm_sq(&x);
+        assert!((ns - 1e8 * n as f64).abs() / (1e8 * n as f64) < 1e-12);
+    }
+
+    #[test]
+    fn finite_detection() {
+        assert!(all_finite(&[1.0, -2.0]));
+        assert!(!all_finite(&[1.0, f32::NAN]));
+        assert!(!all_finite(&[f32::INFINITY]));
+    }
+}

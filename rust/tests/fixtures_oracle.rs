@@ -1,0 +1,132 @@
+//! Differential tests: Rust-native aggregators and the native MLP engine
+//! vs the Python/jnp oracle fixtures emitted by `python/compile/aot.py`.
+//!
+//! Skipped (with a notice) when artifacts have not been built.
+
+use rpel::aggregation::{CwMed, CwTm, GeoMedian, Krum, Mean, Nnm};
+use rpel::aggregation::Aggregator;
+use rpel::model::MlpSpec;
+use rpel::util::json::{self, Json};
+
+fn fixtures_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/fixtures");
+    dir.exists().then_some(dir)
+}
+
+fn load(name: &str) -> Option<Json> {
+    let path = fixtures_dir()?.join(name);
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(json::parse(&text).expect("fixture must be valid JSON"))
+}
+
+fn rows(x: &[f32], m: usize, d: usize) -> Vec<&[f32]> {
+    (0..m).map(|i| &x[i * d..(i + 1) * d]).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let denom = w.abs().max(1.0) as f64;
+        assert!(
+            ((g - w).abs() as f64) / denom < tol,
+            "{what}[{i}]: got {g}, oracle {w}"
+        );
+    }
+}
+
+#[test]
+fn aggregation_rules_match_jnp_oracle() {
+    let Some(fx) = load("agg_fixtures.json") else {
+        eprintln!("skipping: run `make artifacts` to emit fixtures");
+        return;
+    };
+    let cases = fx.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 8);
+    let mut checked = 0;
+    for case in cases {
+        let m = case.get("m").unwrap().as_usize().unwrap();
+        let d = case.get("d").unwrap().as_usize().unwrap();
+        let b = case.get("b").unwrap().as_usize().unwrap();
+        let x = case.get("x").unwrap().as_f32_vec().unwrap();
+        let inputs = rows(&x, m, d);
+        let mut out = vec![0.0f32; d];
+        let tag = format!("m={m} d={d} b={b}");
+
+        let want = case.get("mean").unwrap().as_f32_vec().unwrap();
+        Mean.aggregate(&inputs, &mut out);
+        assert_close(&out, &want, 1e-4, &format!("mean {tag}"));
+
+        let want = case.get("cwmed").unwrap().as_f32_vec().unwrap();
+        CwMed.aggregate(&inputs, &mut out);
+        assert_close(&out, &want, 1e-4, &format!("cwmed {tag}"));
+
+        if let Some(want) = case.get("cwtm").map(|v| v.as_f32_vec().unwrap()) {
+            CwTm::new(b).aggregate(&inputs, &mut out);
+            assert_close(&out, &want, 1e-4, &format!("cwtm {tag}"));
+        }
+        if let Some(want) = case.get("nnm").map(|v| v.as_f32_vec().unwrap()) {
+            let mut mixed = Vec::new();
+            Nnm::new(b, Mean).mix_into(&inputs, &mut mixed);
+            assert_close(&mixed, &want, 1e-4, &format!("nnm-mix {tag}"));
+        }
+        if let Some(want) = case.get("nnm_cwtm").map(|v| v.as_f32_vec().unwrap()) {
+            Nnm::new(b, CwTm::new(b)).aggregate(&inputs, &mut out);
+            assert_close(&out, &want, 1e-4, &format!("nnm_cwtm {tag}"));
+        }
+        if let Some(want) = case.get("krum").map(|v| v.as_f32_vec().unwrap()) {
+            Krum::new(b).aggregate(&inputs, &mut out);
+            assert_close(&out, &want, 1e-4, &format!("krum {tag}"));
+        }
+        if let Some(want) = case.get("geomedian").map(|v| v.as_f32_vec().unwrap()) {
+            GeoMedian::default().aggregate(&inputs, &mut out);
+            assert_close(&out, &want, 5e-3, &format!("geomedian {tag}"));
+        }
+        checked += 1;
+    }
+    assert!(checked >= 8, "checked only {checked} fixture cases");
+}
+
+#[test]
+fn native_mlp_matches_jax_forward() {
+    let Some(fx) = load("model_fixtures.json") else {
+        eprintln!("skipping: run `make artifacts` to emit fixtures");
+        return;
+    };
+    for case in fx.get("cases").unwrap().as_arr().unwrap() {
+        let arch = case.get("arch").unwrap().as_str().unwrap();
+        let spec = MlpSpec::by_name(arch).expect("fixture arch must exist natively");
+        let d = case.get("d").unwrap().as_usize().unwrap();
+        assert_eq!(
+            spec.param_count(),
+            d,
+            "{arch}: native param layout disagrees with ravel_pytree"
+        );
+        let params = case.get("params").unwrap().as_f32_vec().unwrap();
+        let x = case.get("x").unwrap().as_f32_vec().unwrap();
+        let y: Vec<i32> = case
+            .get("y")
+            .unwrap()
+            .as_i64_vec()
+            .unwrap()
+            .into_iter()
+            .map(|v| v as i32)
+            .collect();
+        let n = case.get("n").unwrap().as_usize().unwrap();
+
+        // forward log-probs must match jax within f32 tolerance
+        let want_logp = case.get("logp").unwrap().as_f32_vec().unwrap();
+        let mut logp = Vec::new();
+        spec.forward(&params, &x, n, &mut logp);
+        assert_close(&logp, &want_logp, 1e-4, &format!("{arch} logp"));
+
+        // eval counters
+        let want_correct = case.get("correct").unwrap().as_f64().unwrap();
+        let want_loss = case.get("loss_sum").unwrap().as_f64().unwrap();
+        let (correct, loss) = spec.evaluate(&params, &x, &y);
+        assert_eq!(correct, want_correct, "{arch} correct-count");
+        assert!(
+            (loss - want_loss).abs() / want_loss.abs().max(1.0) < 1e-4,
+            "{arch} loss: got {loss}, oracle {want_loss}"
+        );
+    }
+}

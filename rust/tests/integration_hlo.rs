@@ -1,0 +1,228 @@
+//! Integration tests over the PJRT runtime: the HLO executables must agree
+//! with the native twin and satisfy their interface contracts.
+//!
+//! These tests skip (with a notice) when `make artifacts` has not run.
+
+use rpel::aggregation::{Aggregator, CwTm, Nnm};
+use rpel::model::native::{MlpSpec, TrainHyper};
+use rpel::runtime::{artifacts_available, Runtime};
+use rpel::util::rng::Rng;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+macro_rules! require_artifacts {
+    () => {{
+        let dir = artifacts_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        Runtime::open(&dir).expect("artifacts dir must load")
+    }};
+}
+
+#[test]
+fn manifest_inventory_complete() {
+    let rt = require_artifacts!();
+    let m = rt.manifest();
+    for arch in ["mlp_tiny", "mlp_mnistlike", "mlp_cifarlike", "mlp_femnistlike"] {
+        assert!(m.find(|e| e.kind == "init" && e.arch == arch).is_some(), "{arch} init");
+        assert!(m.find(|e| e.kind == "train" && e.arch == arch).is_some(), "{arch} train");
+        assert!(m.find(|e| e.kind == "eval" && e.arch == arch).is_some(), "{arch} eval");
+        assert!(
+            m.find(|e| e.kind == "aggregate" && e.arch == arch).is_some(),
+            "{arch} aggregate"
+        );
+        // native layout must agree with the jax flat codec
+        let native = MlpSpec::by_name(arch).unwrap().param_count();
+        assert_eq!(m.param_count(arch), Some(native), "{arch} d");
+    }
+    // local-steps variants for the figures that need them
+    assert!(m
+        .find(|e| e.kind == "train" && e.arch == "mlp_cifarlike" && e.local_steps == 3)
+        .is_some());
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let mut rt = require_artifacts!();
+    let init = rt.init_exec("mlp_tiny").unwrap();
+    let a = init.run(7).unwrap();
+    let b = init.run(7).unwrap();
+    let c = init.run(8).unwrap();
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert!(a.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn hlo_train_step_matches_native_engine() {
+    let mut rt = require_artifacts!();
+    let init = rt.init_exec("mlp_tiny").unwrap();
+    let train = rt.train_exec("mlp_tiny", 1).unwrap();
+    let spec = MlpSpec::by_name("mlp_tiny").unwrap();
+
+    let params0 = init.run(3).unwrap();
+    let momentum0 = vec![0.01f32; params0.len()];
+    let mut rng = Rng::new(11);
+    let batch = train.entry.batch;
+    let din = 16;
+    let x: Vec<f32> = (0..batch * din).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.index(4) as i32).collect();
+    let (lr, beta, wd) = (0.1f32, 0.9f32, 1e-3f32);
+
+    let out = train.run(&params0, &momentum0, &x, &y, lr, beta, wd).unwrap();
+
+    let mut np = params0.clone();
+    let mut nm = momentum0.clone();
+    let mut scratch = Vec::new();
+    let nloss = spec.train_step(
+        &mut np,
+        &mut nm,
+        &x,
+        &y,
+        TrainHyper { lr, beta, weight_decay: wd },
+        &mut scratch,
+    );
+
+    assert!(
+        (out.loss - nloss).abs() < 1e-4,
+        "loss: hlo={} native={nloss}",
+        out.loss
+    );
+    for i in 0..np.len() {
+        assert!(
+            (out.params[i] - np[i]).abs() < 1e-4,
+            "params[{i}]: hlo={} native={}",
+            out.params[i],
+            np[i]
+        );
+        assert!(
+            (out.momentum[i] - nm[i]).abs() < 1e-4,
+            "momentum[{i}]: hlo={} native={}",
+            out.momentum[i],
+            nm[i]
+        );
+    }
+}
+
+#[test]
+fn hlo_eval_matches_native() {
+    let mut rt = require_artifacts!();
+    let init = rt.init_exec("mlp_tiny").unwrap();
+    let eval = rt.eval_exec("mlp_tiny").unwrap();
+    let spec = MlpSpec::by_name("mlp_tiny").unwrap();
+
+    let params = init.run(0).unwrap();
+    let n = eval.eval_n();
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..n * 16).map(|_| rng.gaussian32(0.0, 2.0)).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.index(4) as i32).collect();
+
+    let (hc, hl) = eval.run(&params, &x, &y).unwrap();
+    let (nc, nl) = spec.evaluate(&params, &x, &y);
+    assert_eq!(hc, nc, "correct-count must match exactly");
+    assert!((hl - nl).abs() / nl.max(1.0) < 1e-4, "loss: hlo={hl} native={nl}");
+}
+
+#[test]
+fn pallas_aggregate_matches_native_rule() {
+    let mut rt = require_artifacts!();
+    let agg = rt.aggregate_exec("mlp_tiny", 8, 2).unwrap();
+    let d = agg.entry.d;
+    let mut rng = Rng::new(9);
+    // mixed-magnitude inputs including adversarial-scale rows
+    let rows: Vec<Vec<f32>> = (0..8)
+        .map(|i| {
+            let scale = if i >= 6 { 1e4 } else { 1.0 };
+            (0..d).map(|_| rng.gaussian32(0.0, 1.0) * scale).collect()
+        })
+        .collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+
+    let hlo_out = agg.run(&refs).unwrap();
+    let mut native_out = vec![0.0f32; d];
+    Nnm::new(2, CwTm::new(2)).aggregate(&refs, &mut native_out);
+
+    for i in 0..d {
+        assert!(
+            (hlo_out[i] - native_out[i]).abs() < 1e-3,
+            "agg[{i}]: pallas={} native={}",
+            hlo_out[i],
+            native_out[i]
+        );
+    }
+}
+
+#[test]
+fn aggregate_shape_contract_enforced() {
+    let mut rt = require_artifacts!();
+    let agg = rt.aggregate_exec("mlp_tiny", 8, 2).unwrap();
+    let d = agg.entry.d;
+    let rows: Vec<Vec<f32>> = (0..7).map(|_| vec![0.0f32; d]).collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    // 7 rows into an m=8 executable must fail loudly, not truncate
+    assert!(agg.run(&refs).is_err());
+    let bad: Vec<Vec<f32>> = (0..8).map(|_| vec![0.0f32; d - 1]).collect();
+    let refs: Vec<&[f32]> = bad.iter().map(|r| r.as_slice()).collect();
+    assert!(agg.run(&refs).is_err());
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let mut rt = require_artifacts!();
+    let err = match rt.aggregate_exec("mlp_tiny", 31, 15) {
+        Ok(_) => panic!("expected missing-artifact error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("no aggregate artifact"), "{err}");
+    let err = match rt.train_exec("resnet", 1) {
+        Ok(_) => panic!("expected missing-artifact error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("no train artifact"), "{err}");
+}
+
+#[test]
+fn local_steps_hlo_equals_sequential_native() {
+    let mut rt = require_artifacts!();
+    let Ok(train3) = rt.train_exec("mlp_cifarlike", 3) else {
+        eprintln!("skipping: no k=3 artifact");
+        return;
+    };
+    let init = rt.init_exec("mlp_cifarlike").unwrap();
+    let spec = MlpSpec::by_name("mlp_cifarlike").unwrap();
+    let params0 = init.run(1).unwrap();
+    let momentum0 = vec![0.0f32; params0.len()];
+    let batch = train3.entry.batch;
+    let din = 96;
+    let mut rng = Rng::new(13);
+    let x: Vec<f32> = (0..3 * batch * din).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..3 * batch).map(|_| rng.index(10) as i32).collect();
+    let (lr, beta, wd) = (0.05f32, 0.99f32, 1e-2f32);
+
+    let out = train3.run(&params0, &momentum0, &x, &y, lr, beta, wd).unwrap();
+
+    let mut np = params0.clone();
+    let mut nm = momentum0.clone();
+    let mut scratch = Vec::new();
+    for k in 0..3 {
+        spec.train_step(
+            &mut np,
+            &mut nm,
+            &x[k * batch * din..(k + 1) * batch * din],
+            &y[k * batch..(k + 1) * batch],
+            TrainHyper { lr, beta, weight_decay: wd },
+            &mut scratch,
+        );
+    }
+    let max_err = out
+        .params
+        .iter()
+        .zip(&np)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 5e-4, "3-local-step drift {max_err}");
+}

