@@ -56,6 +56,51 @@ fn main() {
         println!("{}", r.report());
     }
 
+    section("parallel round engine: threads sweep (n=64 b=6 s=12, mnistlike)");
+    {
+        let avail = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut cfg = ExperimentConfig::default_for(TaskKind::MnistLike);
+        cfg.n = 64;
+        cfg.b = 6;
+        cfg.topology = Topology::Epidemic { s: 12 };
+        cfg.bhat = Some(4);
+        cfg.attack = AttackKind::Alie;
+        cfg.batch = 16;
+        cfg.samples_per_node = 64;
+        cfg.test_samples = 128;
+        cfg.engine = EngineKind::Native;
+        let mut sweep: Vec<usize> = [1usize, 2, 4, 8]
+            .into_iter()
+            .filter(|&t| t <= avail)
+            .collect();
+        if !sweep.contains(&avail) {
+            sweep.push(avail);
+        }
+        let mut baseline_ns = 0.0f64;
+        for &threads in &sweep {
+            cfg.threads = threads;
+            let mut trainer = Trainer::from_config(&cfg).unwrap();
+            let mut round = 0usize;
+            let r = b.run(&format!("round n=64 threads={threads}"), || {
+                round += 1;
+                black_box(trainer.round(round).unwrap())
+            });
+            if threads == 1 {
+                baseline_ns = r.mean_ns();
+            }
+            println!(
+                "{}  [speedup vs serial: {:.2}x]",
+                r.report(),
+                baseline_ns / r.mean_ns()
+            );
+        }
+        if avail == 1 {
+            println!("(single-core host — speedup column is trivially 1.0x)");
+        }
+    }
+
     if artifacts_available("artifacts") {
         let mut cfg = presets::quickstart_config();
         cfg.engine = EngineKind::Hlo;

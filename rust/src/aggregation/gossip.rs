@@ -27,7 +27,10 @@ use crate::util::vecmath;
 ///
 /// `neighbors` carries `(model, W_ij)` pairs with Metropolis weights; the
 /// self-weight is `1 − Σ W_ij` (guaranteed ≥ 0 by construction).
-pub trait GossipAggregator: Send {
+///
+/// `Send + Sync`: one rule instance is shared across the parallel round
+/// engine's workers (all implementations here are stateless).
+pub trait GossipAggregator: Send + Sync {
     fn aggregate(&self, own: &[f32], neighbors: &[(&[f32], f64)], out: &mut [f32]);
     fn name(&self) -> &'static str;
 }
@@ -233,9 +236,83 @@ impl GossipAggregator for Rtc {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit::{forall, Gen};
+    use crate::util::rng::Rng;
 
     fn nb<'a>(rows: &'a [Vec<f32>], w: f64) -> Vec<(&'a [f32], f64)> {
         rows.iter().map(|r| (r.as_slice(), w)).collect()
+    }
+
+    const ALL_KINDS: [GossipRuleKind; 5] = [
+        GossipRuleKind::Naive,
+        GossipRuleKind::ClippedGossip,
+        GossipRuleKind::CsPlus,
+        GossipRuleKind::Gts,
+        GossipRuleKind::Rtc,
+    ];
+
+    /// Random neighborhood with valid Metropolis-style weights
+    /// (uniform w = 1/(deg+1), so Σw ≤ 1 and the self-weight is ≥ 0).
+    fn random_neighborhood(rng: &mut Rng) -> (Vec<f32>, Vec<Vec<f32>>, f64) {
+        let deg = 2 + rng.index(6);
+        let d = 1 + rng.index(8);
+        let own: Vec<f32> = (0..d).map(|_| rng.gaussian32(0.0, 3.0)).collect();
+        let rows: Vec<Vec<f32>> = (0..deg)
+            .map(|_| (0..d).map(|_| rng.gaussian32(0.0, 3.0)).collect())
+            .collect();
+        let w = 1.0 / (deg as f64 + 1.0);
+        (own, rows, w)
+    }
+
+    /// Every gossip rule's output is invariant under a permutation of the
+    /// neighbor list (up to f32 summation-order noise): nothing may depend
+    /// on the order models arrive in.
+    #[test]
+    fn prop_all_rules_invariant_under_neighbor_permutation() {
+        for (idx, kind) in ALL_KINDS.into_iter().enumerate() {
+            let tag = idx as u64;
+            forall(60, 0x6055 + tag, Gen::usize_in(0..=100_000), |&seed| {
+                let mut rng = Rng::new(seed as u64);
+                let (own, rows, w) = random_neighborhood(&mut rng);
+                let neigh = nb(&rows, w);
+                let mut perm: Vec<usize> = (0..rows.len()).collect();
+                rng.shuffle(&mut perm);
+                let permuted: Vec<(&[f32], f64)> =
+                    perm.iter().map(|&i| neigh[i]).collect();
+                let rule = kind.build(1);
+                let mut a = vec![0.0f32; own.len()];
+                let mut p = vec![0.0f32; own.len()];
+                rule.aggregate(&own, &neigh, &mut a);
+                rule.aggregate(&own, &permuted, &mut p);
+                a.iter().zip(&p).all(|(x, y)| (x - y).abs() <= 1e-4)
+            });
+        }
+    }
+
+    /// With `b_local = 0` and honest-only inputs, every rule degenerates
+    /// to a convex combination: each output coordinate stays inside the
+    /// min/max envelope of {self} ∪ neighbors.
+    #[test]
+    fn prop_b0_output_inside_coordinate_envelope() {
+        for (idx, kind) in ALL_KINDS.into_iter().enumerate() {
+            let tag = idx as u64;
+            forall(60, 0xE47 + tag, Gen::usize_in(0..=100_000), |&seed| {
+                let mut rng = Rng::new(seed as u64);
+                let (own, rows, w) = random_neighborhood(&mut rng);
+                let rule = kind.build(0);
+                let mut out = vec![0.0f32; own.len()];
+                rule.aggregate(&own, &nb(&rows, w), &mut out);
+                (0..own.len()).all(|j| {
+                    let mut lo = own[j];
+                    let mut hi = own[j];
+                    for r in &rows {
+                        lo = lo.min(r[j]);
+                        hi = hi.max(r[j]);
+                    }
+                    out[j] >= lo - 1e-3 && out[j] <= hi + 1e-3
+                })
+            });
+        }
     }
 
     #[test]

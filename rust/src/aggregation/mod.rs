@@ -35,7 +35,11 @@ pub use nnm::Nnm;
 use crate::util::vecmath;
 
 /// A robust aggregation rule over m = s+1 vectors (Definition 5.1 family).
-pub trait Aggregator: Send {
+///
+/// `Send + Sync` with `&self` aggregation is a hard requirement: one rule
+/// instance is shared by every worker of the parallel round engine, so
+/// implementations keep per-call state on the stack (or behind a lock).
+pub trait Aggregator: Send + Sync {
     /// Aggregate `inputs` (row 0 = own half-step model) into `out`.
     /// All rows have equal length d = out.len().
     fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]);

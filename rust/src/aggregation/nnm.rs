@@ -15,19 +15,11 @@ use super::{pairwise_sqdist, Aggregator};
 pub struct Nnm<A: Aggregator> {
     pub b: usize,
     pub base: A,
-    /// reusable mixing buffer — the m·d matrix would otherwise be a fresh
-    /// megabyte-scale allocation on every aggregation (once per honest
-    /// node per round, the coordinator's hottest call)
-    scratch: std::cell::RefCell<Vec<f32>>,
 }
 
 impl<A: Aggregator> Nnm<A> {
     pub fn new(b: usize, base: A) -> Self {
-        Nnm {
-            b,
-            base,
-            scratch: std::cell::RefCell::new(Vec::new()),
-        }
+        Nnm { b, base }
     }
 
     /// Compute the mixed matrix into `mixed` (m rows of d, row-major).
@@ -58,12 +50,25 @@ impl<A: Aggregator> Nnm<A> {
 
 impl<A: Aggregator> Aggregator for Nnm<A> {
     fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
+        // per-thread mixing buffer: the m·d matrix would otherwise be a
+        // fresh megabyte-scale allocation on every aggregation (once per
+        // honest node per round, the coordinator's hottest call), and a
+        // shared `&self` buffer would either lock or contend under the
+        // parallel round engine. The buffer is moved out of the cell for
+        // the duration of the call, so a (hypothetical) nested NNM would
+        // degrade to an allocation instead of a borrow panic.
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<Vec<f32>> =
+                std::cell::RefCell::new(Vec::new());
+        }
         let m = inputs.len();
         let d = out.len();
-        let mut mixed = self.scratch.borrow_mut();
+        let mut mixed = SCRATCH.with(|cell| cell.take());
         self.mix_into(inputs, &mut mixed);
         let rows: Vec<&[f32]> = (0..m).map(|i| &mixed[i * d..(i + 1) * d]).collect();
         self.base.aggregate(&rows, out);
+        drop(rows);
+        SCRATCH.with(|cell| cell.replace(mixed));
     }
 
     fn name(&self) -> &'static str {

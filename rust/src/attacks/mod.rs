@@ -54,8 +54,10 @@ pub struct AttackContext<'a> {
 /// A Byzantine attack: craft `count` malicious models for this victim.
 ///
 /// `out` arrives as `count` preallocated rows of length d; the attack
-/// overwrites them (no allocation on the round path).
-pub trait Attack: Send {
+/// overwrites them (no allocation on the round path). `Send + Sync`: the
+/// parallel round engine crafts per-victim payloads from worker threads
+/// against one shared attack instance.
+pub trait Attack: Send + Sync {
     fn craft(&self, ctx: &AttackContext<'_>, out: &mut [Vec<f32>]);
     fn name(&self) -> &'static str;
 }

@@ -6,6 +6,7 @@
 //! name = "my_run"
 //! task = "mnistlike"          # mnistlike | cifarlike | femnistlike | tiny
 //! engine = "hlo"              # hlo | native
+//! threads = 4                 # round-engine workers (0 = all cores)
 //!
 //! [nodes]
 //! n = 100
@@ -112,6 +113,9 @@ pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
     }
     if let Some(seed) = get_usize(&doc, "seed")? {
         cfg.seed = seed as u64;
+    }
+    if let Some(threads) = get_usize(&doc, "threads")? {
+        cfg.threads = threads;
     }
 
     if let Some(n) = get_usize(&doc, "nodes.n")? {
@@ -310,6 +314,14 @@ mod tests {
             cfg.rule,
             RuleChoice::Gossip(GossipRuleKind::CsPlus)
         ));
+    }
+
+    #[test]
+    fn threads_parsed_with_auto_default() {
+        let cfg = from_toml_str("task = \"tiny\"\nthreads = 4").unwrap();
+        assert_eq!(cfg.threads, 4);
+        let cfg = from_toml_str("task = \"tiny\"").unwrap();
+        assert_eq!(cfg.threads, 0, "default must be auto (all cores)");
     }
 
     #[test]

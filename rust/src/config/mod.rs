@@ -105,6 +105,11 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub engine: EngineKind,
     pub artifacts_dir: String,
+    /// Worker threads for the per-node round phases: `0` = all available
+    /// cores, `1` = the legacy serial path. Results are bit-identical for
+    /// every value (the round engine's randomness is counter-keyed per
+    /// node, never drawn from a shared sequential stream).
+    pub threads: usize,
 }
 
 impl ExperimentConfig {
@@ -133,6 +138,7 @@ impl ExperimentConfig {
             seed: 1,
             engine: EngineKind::Native,
             artifacts_dir: "artifacts".to_string(),
+            threads: 0,
         }
     }
 

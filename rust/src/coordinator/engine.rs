@@ -8,7 +8,14 @@ use crate::runtime::{EvalExec, InitExec, Runtime, TrainExec};
 use anyhow::{anyhow, ensure, Context, Result};
 
 /// What the round loop needs from a compute backend.
-pub trait ComputeEngine {
+///
+/// All methods take `&self` and every implementation is `Send + Sync`:
+/// one engine instance is shared by the parallel round engine's worker
+/// threads, which call [`ComputeEngine::train_step`] and
+/// [`ComputeEngine::evaluate`] concurrently for disjoint nodes. State that
+/// varies per call (gradient scratch, staging buffers) lives on the call
+/// stack or behind a lock, never in `&mut self`.
+pub trait ComputeEngine: Send + Sync {
     /// Flat parameter count d.
     fn d(&self) -> usize;
     /// Effective batch size per local step (HLO artifacts have it baked).
@@ -18,12 +25,12 @@ pub trait ComputeEngine {
     /// Eval-set size the engine expects (0 = any).
     fn eval_n(&self) -> usize;
     /// Deterministic parameter init.
-    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>>;
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>>;
     /// One training round's local computation (Algorithm 1 lines 3–6),
     /// updating params/momentum in place; returns the (mean) loss.
     #[allow(clippy::too_many_arguments)]
     fn train_step(
-        &mut self,
+        &self,
         params: &mut Vec<f32>,
         momentum: &mut Vec<f32>,
         x: &[f32],
@@ -33,7 +40,7 @@ pub trait ComputeEngine {
         wd: f32,
     ) -> Result<f32>;
     /// (#correct, loss_sum) over the eval set.
-    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)>;
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)>;
     fn name(&self) -> &'static str;
 }
 
@@ -42,7 +49,6 @@ pub struct NativeEngine {
     spec: MlpSpec,
     batch: usize,
     local_steps: usize,
-    scratch: Vec<f32>,
 }
 
 impl NativeEngine {
@@ -53,7 +59,6 @@ impl NativeEngine {
             spec,
             batch,
             local_steps,
-            scratch: Vec::new(),
         })
     }
 }
@@ -75,12 +80,12 @@ impl ComputeEngine for NativeEngine {
         0
     }
 
-    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>> {
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
         Ok(self.spec.init_native(seed as u64))
     }
 
     fn train_step(
-        &mut self,
+        &self,
         params: &mut Vec<f32>,
         momentum: &mut Vec<f32>,
         x: &[f32],
@@ -100,18 +105,27 @@ impl ComputeEngine for NativeEngine {
             x.len() == self.local_steps * per && y.len() == self.local_steps * self.batch,
             "batch shape mismatch"
         );
+        // per-thread gradient scratch: keeping it off `self` lets worker
+        // threads share the engine without locking, and the thread-local
+        // avoids re-allocating a d-sized buffer for every node every round
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<Vec<f32>> =
+                std::cell::RefCell::new(Vec::new());
+        }
+        let mut scratch = SCRATCH.with(|cell| cell.take());
         let mut total = 0.0f32;
         for k in 0..self.local_steps {
             let xs = &x[k * per..(k + 1) * per];
             let ys = &y[k * self.batch..(k + 1) * self.batch];
             total += self
                 .spec
-                .train_step(params, momentum, xs, ys, hp, &mut self.scratch);
+                .train_step(params, momentum, xs, ys, hp, &mut scratch);
         }
+        SCRATCH.with(|cell| cell.replace(scratch));
         Ok(total / self.local_steps as f32)
     }
 
-    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
         Ok(self.spec.evaluate(params, x, y))
     }
 
@@ -155,12 +169,12 @@ impl ComputeEngine for HloEngine {
         self.eval.eval_n()
     }
 
-    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>> {
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
         self.init.run(seed)
     }
 
     fn train_step(
-        &mut self,
+        &self,
         params: &mut Vec<f32>,
         momentum: &mut Vec<f32>,
         x: &[f32],
@@ -175,7 +189,7 @@ impl ComputeEngine for HloEngine {
         Ok(out.loss)
     }
 
-    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
         self.eval.run(params, x, y)
     }
 
@@ -208,7 +222,7 @@ mod tests {
 
     #[test]
     fn native_engine_basics() {
-        let mut e = NativeEngine::new("mlp_tiny", 8, 1).unwrap();
+        let e = NativeEngine::new("mlp_tiny", 8, 1).unwrap();
         assert_eq!(e.d(), 340);
         assert_eq!(e.batch(), 8);
         let p = e.init_params(3).unwrap();
@@ -220,7 +234,7 @@ mod tests {
 
     #[test]
     fn native_engine_trains() {
-        let mut e = NativeEngine::new("mlp_tiny", 16, 1).unwrap();
+        let e = NativeEngine::new("mlp_tiny", 16, 1).unwrap();
         let mut params = e.init_params(0).unwrap();
         let mut momentum = vec![0.0f32; params.len()];
         let task = crate::data::TaskKind::Tiny.spec().instantiate(1);
@@ -238,7 +252,7 @@ mod tests {
 
     #[test]
     fn native_local_steps_consume_stacked_batches() {
-        let mut e = NativeEngine::new("mlp_tiny", 4, 3).unwrap();
+        let e = NativeEngine::new("mlp_tiny", 4, 3).unwrap();
         let mut params = e.init_params(0).unwrap();
         let mut momentum = vec![0.0f32; params.len()];
         let task = crate::data::TaskKind::Tiny.spec().instantiate(2);

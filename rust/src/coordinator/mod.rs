@@ -15,6 +15,33 @@
 //! All honest updates within a round are computed against the same
 //! snapshot (synchronous model, §3.3) — nodes never see intra-round
 //! updates of their peers.
+//!
+//! # Parallel round engine
+//!
+//! Because the synchronous model freezes the inter-node inputs for the
+//! whole round, each round executes as explicit **phases**, and the
+//! per-node phases are data-parallel over honest nodes
+//! ([`crate::util::pool`], scoped threads, no extra crates):
+//!
+//! 1. **half-step** — every node's local train step (reads its own state
+//!    plus the shared engine, writes its own half-step row);
+//! 2. **attack context** — honest means for the omniscient adversary
+//!    (serial; O(h·d) reduction in fixed index order);
+//! 3. **push routes** (push-mode ablation only) — sender → recipient
+//!    scatter (serial; cheap index shuffling);
+//! 4. **pull + craft + aggregate** — per victim: draw `S_i^t`, craft the
+//!    malicious rows, aggregate into the node's next model (each worker
+//!    carries its own crafting scratch);
+//! 5. **swap** — commit the synchronous update.
+//!
+//! The number of workers comes from [`ExperimentConfig::threads`]
+//! (`--threads` on the CLI; `0` = all available cores, `1` = the legacy
+//! serial path). Results are **bit-identical for every thread count**:
+//! all round-path randomness is drawn from counter-based streams keyed by
+//! `(seed, round, node, purpose)` ([`crate::util::rng::Rng::stream`]),
+//! never from a shared sequential generator, so no draw depends on
+//! scheduling order; reductions (loss mean, observed-b̂ max) collect
+//! per-node values and fold them serially in index order.
 
 pub mod engine;
 pub mod sampler;
@@ -30,7 +57,8 @@ use crate::data::{partition_dirichlet, Shard};
 use crate::graph::Graph;
 use crate::metrics::{EvalPoint, History};
 use crate::runtime::{AggregateExec, Runtime};
-use crate::util::rng::Rng;
+use crate::util::pool;
+use crate::util::rng::{stream_tag, Rng};
 use anyhow::{anyhow, bail, Context, Result};
 use std::time::Instant;
 
@@ -63,6 +91,19 @@ impl AggBackend {
     }
 }
 
+/// One node's slot in the parallel half-step phase.
+struct HalfStepJob<'a> {
+    node: &'a mut NodeState,
+    half: &'a mut Vec<f32>,
+    loss: &'a mut f64,
+}
+
+/// One victim's slot in the parallel pull/craft/aggregate phase.
+struct AggJob<'a> {
+    out: &'a mut Vec<f32>,
+    byz_seen: &'a mut usize,
+}
+
 /// A fully constructed training run.
 pub struct Trainer {
     cfg: ExperimentConfig,
@@ -83,14 +124,14 @@ pub struct Trainer {
     gossip_rows: Option<Vec<Vec<(usize, f64)>>>,
     test_x: Vec<f32>,
     test_y: Vec<i32>,
-    rng: Rng,
+    /// resolved worker count for the per-node phases (≥ 1)
+    threads: usize,
     /// §4.2 telemetry: max Byzantine rows any honest node received in the
     /// last round (the *observed* b̂)
     last_round_byz_max: usize,
     // reusable round buffers
     halves: Vec<Vec<f32>>,
     next_params: Vec<Vec<f32>>,
-    byz_buf: Vec<Vec<f32>>,
     mean_buf: Vec<f32>,
     prev_mean_buf: Vec<f32>,
 }
@@ -111,7 +152,7 @@ impl Trainer {
             ),
             EngineKind::Native => None,
         };
-        let mut engine = build_engine(&cfg, runtime.as_mut())?;
+        let engine = build_engine(&cfg, runtime.as_mut())?;
         if engine.batch() != cfg.batch {
             log::info!(
                 "batch {} overridden to {} (baked into HLO artifact)",
@@ -262,11 +303,9 @@ impl Trainer {
         };
 
         let h = nodes.len();
-        // worst-case malicious rows per victim: s for pulls, b for a
-        // flooding push round, degree ≤ n−1 for graphs
-        let s_max = cfg.n - 1;
+        let threads = pool::resolve_threads(cfg.threads);
         log::info!(
-            "trainer '{}': n={} b={} b̂={bhat} rule={} engine={} d={d}",
+            "trainer '{}': n={} b={} b̂={bhat} rule={} engine={} d={d} threads={threads}",
             cfg.name,
             cfg.n,
             cfg.b,
@@ -282,11 +321,10 @@ impl Trainer {
             gossip_rows,
             test_x: test.x,
             test_y: test.y,
-            rng,
+            threads,
             last_round_byz_max: 0,
             halves: vec![vec![0.0f32; d]; h],
             next_params: vec![vec![0.0f32; d]; h],
-            byz_buf: vec![vec![0.0f32; d]; s_max],
             mean_buf: vec![0.0f32; d],
             prev_mean_buf: vec![0.0f32; d],
             nodes,
@@ -311,6 +349,11 @@ impl Trainer {
         self.nodes.len()
     }
 
+    /// Resolved worker count for the per-node phases.
+    pub fn thread_count(&self) -> usize {
+        self.threads
+    }
+
     /// Run the full training; returns the metric history.
     pub fn run(&mut self) -> Result<History> {
         let t0 = Instant::now();
@@ -330,184 +373,275 @@ impl Trainer {
     }
 
     /// Execute one synchronous round; returns the mean honest train loss.
+    ///
+    /// Phases 1 and 4 run data-parallel over honest nodes (see the module
+    /// docs); every phase is bit-deterministic for any thread count.
     pub fn round(&mut self, round: usize) -> Result<f64> {
+        // 1. local half-steps (Algorithm 1 lines 3–6)
+        let loss = self.phase_half_steps(round)?;
+        // 2. omniscient-adversary context: honest means
+        self.phase_attack_context();
+        // push mode: honest senders scatter to s recipients; Byzantine
+        // senders flood every honest node (the Appendix-D failure mode)
+        let push_received = self.phase_push_routes(round);
+        // 3.+4. pull, attack, aggregate — against the immutable half-step
+        // snapshot (synchronous model)
+        self.phase_pull_craft_aggregate(round, push_received.as_ref())?;
+        // 5. synchronous swap
+        for (node, next) in self.nodes.iter_mut().zip(&self.next_params) {
+            node.params.copy_from_slice(next);
+        }
+        Ok(loss)
+    }
+
+    /// Phase 1: every honest node's local train step, in parallel.
+    fn phase_half_steps(&mut self, round: usize) -> Result<f64> {
         let lr = self.cfg.lr_at(round);
         let beta = self.cfg.momentum;
         let wd = self.cfg.weight_decay;
         let k = self.engine.local_steps();
         let batch = self.engine.batch();
         let h = self.nodes.len();
+        let engine: &dyn ComputeEngine = self.engine.as_ref();
 
-        // 1. local half-steps (Algorithm 1 lines 3–6)
-        let mut loss_sum = 0.0f64;
-        for (i, node) in self.nodes.iter_mut().enumerate() {
-            self.halves[i].copy_from_slice(&node.params);
-            let b = node.shard.next_batches(k, batch);
-            loss_sum += self.engine.train_step(
-                &mut self.halves[i],
-                &mut node.momentum,
+        let mut losses = vec![0.0f64; h];
+        let mut jobs: Vec<HalfStepJob<'_>> = self
+            .nodes
+            .iter_mut()
+            .zip(self.halves.iter_mut())
+            .zip(losses.iter_mut())
+            .map(|((node, half), loss)| HalfStepJob { node, half, loss })
+            .collect();
+        pool::try_for_each(&mut jobs, self.threads, |_, job| {
+            job.half.copy_from_slice(&job.node.params);
+            // batch draws come from the node's own shard stream — already
+            // independent of scheduling order
+            let b = job.node.shard.next_batches(k, batch);
+            *job.loss = engine.train_step(
+                job.half,
+                &mut job.node.momentum,
                 &b.x,
                 &b.y,
                 lr,
                 beta,
                 wd,
             )? as f64;
-        }
-
-        // 2. omniscient-adversary context: honest means
-        column_mean(&self.halves, &mut self.mean_buf);
-        {
-            let prev: Vec<&[f32]> = self.nodes.iter().map(|n| n.params.as_slice()).collect();
-            crate::util::vecmath::mean_of(&prev, &mut self.prev_mean_buf);
-        }
-
-        // push mode: honest senders scatter to s recipients; Byzantine
-        // senders flood every honest node (the Appendix-D failure mode)
-        let push_received: Option<Vec<Vec<usize>>> = self.push_s.map(|s| {
-            let mut recv: Vec<Vec<usize>> = vec![Vec::new(); h];
-            for sender in 0..h {
-                let id = self.nodes[sender].id;
-                for dest in self.rng.sample_distinct_excluding(self.cfg.n, s, id) {
-                    if !self.byz[dest] {
-                        recv[self.node_of[dest]].push(id);
-                    }
-                    // pushes to Byzantine recipients are wasted messages
-                }
-            }
-            recv
-        });
-
-        // DoS (Appendix D): Byzantine nodes withhold their models; the
-        // synchronous round proceeds with whatever honest peers sent
-        let dos = self.cfg.attack == crate::attacks::AttackKind::Dos;
-
-        // 3.+4. pull, attack, aggregate — against the immutable half-step
-        // snapshot (synchronous model)
-        self.last_round_byz_max = 0;
-        for i in 0..h {
-            let peers: Vec<usize> = match (&self.sampler, &push_received, &self.gossip_rows)
-            {
-                (Some(sampler), _, _) => sampler.sample(self.nodes[i].id, &mut self.rng),
-                (None, Some(recv), _) => recv[i].clone(),
-                (None, None, Some(rows)) => rows[self.nodes[i].id]
-                    .iter()
-                    .map(|&(j, _)| j)
-                    .filter(|&j| j != self.nodes[i].id)
-                    .collect(),
-                _ => unreachable!(),
-            };
-
-            // split into honest refs and byzantine slots
-            let mut honest_rows: Vec<&[f32]> = Vec::with_capacity(peers.len());
-            let mut byz_count = 0usize;
-            for &p in &peers {
-                if self.byz[p] {
-                    byz_count += 1;
-                } else {
-                    honest_rows.push(&self.halves[self.node_of[p]]);
-                }
-            }
-            if push_received.is_some() && self.cfg.b > 0 && !dos {
-                // flooding: every Byzantine node reaches every honest node
-                byz_count = self.cfg.b;
-            }
-            if dos {
-                byz_count = 0; // withheld responses simply never arrive
-            }
-            self.last_round_byz_max = self.last_round_byz_max.max(byz_count);
-
-            // craft per-victim malicious models
-            if byz_count > 0 {
-                if let Some(attack) = &self.attack {
-                    let all: Vec<&[f32]> = self.halves.iter().map(|v| v.as_slice()).collect();
-                    let ctx = AttackContext {
-                        victim_half: &self.halves[i],
-                        victim_prev: &self.nodes[i].params,
-                        honest_received: &honest_rows,
-                        honest_all: &all,
-                        honest_mean: &self.mean_buf,
-                        honest_prev_mean: &self.prev_mean_buf,
-                        n: self.cfg.n,
-                        b: self.cfg.b,
-                    };
-                    attack.craft(&ctx, &mut self.byz_buf[..byz_count]);
-                } else {
-                    // b > 0 but attack "none": byzantine nodes behave as
-                    // silent crashers sending their init... treat as the
-                    // honest mean (benign)
-                    for row in &mut self.byz_buf[..byz_count] {
-                        row.copy_from_slice(&self.mean_buf);
-                    }
-                }
-            }
-
-            match &self.agg {
-                AggBackend::Native(rule) => {
-                    let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
-                    rows.push(&self.halves[i]);
-                    rows.extend_from_slice(&honest_rows);
-                    for rbuf in &self.byz_buf[..byz_count] {
-                        rows.push(rbuf);
-                    }
-                    if rows.len() < rule.min_inputs() {
-                        // too few responses to aggregate robustly (push /
-                        // DoS rounds): keep the local half-step
-                        self.next_params[i].copy_from_slice(&self.halves[i]);
-                    } else {
-                        rule.aggregate(&rows, &mut self.next_params[i]);
-                    }
-                }
-                AggBackend::Hlo(exec) => {
-                    let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
-                    rows.push(&self.halves[i]);
-                    rows.extend_from_slice(&honest_rows);
-                    for rbuf in &self.byz_buf[..byz_count] {
-                        rows.push(rbuf);
-                    }
-                    let out = exec.run(&rows)?;
-                    self.next_params[i].copy_from_slice(&out);
-                }
-                AggBackend::Gossip(rule) => {
-                    // gossip needs (model, weight) pairs in graph order
-                    let rows = self.gossip_rows.as_ref().unwrap();
-                    let id = self.nodes[i].id;
-                    let mut neigh: Vec<(&[f32], f64)> = Vec::with_capacity(peers.len());
-                    let mut byz_used = 0usize;
-                    for &(j, w) in &rows[id] {
-                        if j == id {
-                            continue;
-                        }
-                        if self.byz[j] {
-                            neigh.push((&self.byz_buf[byz_used], w));
-                            byz_used += 1;
-                        } else {
-                            neigh.push((&self.halves[self.node_of[j]], w));
-                        }
-                    }
-                    rule.aggregate(&self.halves[i], &neigh, &mut self.next_params[i]);
-                }
-            }
-        }
-
-        // 5. synchronous swap
-        for (node, next) in self.nodes.iter_mut().zip(&self.next_params) {
-            node.params.copy_from_slice(next);
-        }
-        Ok(loss_sum / h as f64)
+            Ok(())
+        })?;
+        drop(jobs);
+        // serial index-order fold: identical for every thread count
+        Ok(losses.iter().sum::<f64>() / h as f64)
     }
 
-    /// Evaluate every honest node on the shared test set.
-    pub fn evaluate(&mut self, round: usize) -> Result<EvalPoint> {
-        let n_test = self.test_y.len() as f64;
-        let mut accs = Vec::with_capacity(self.nodes.len());
-        let mut losses = Vec::with_capacity(self.nodes.len());
+    /// Phase 2: honest means the omniscient adversary conditions on.
+    fn phase_attack_context(&mut self) {
+        column_mean(&self.halves, &mut self.mean_buf);
+        let prev: Vec<&[f32]> = self.nodes.iter().map(|n| n.params.as_slice()).collect();
+        crate::util::vecmath::mean_of(&prev, &mut self.prev_mean_buf);
+    }
+
+    /// Phase 3 (push-mode ablation only): sender → recipient routes. The
+    /// scatter for sender `id` comes from the `(seed, round, id, PUSH)`
+    /// stream, so routes are reproducible regardless of iteration order.
+    fn phase_push_routes(&self, round: usize) -> Option<Vec<Vec<usize>>> {
+        let s = self.push_s?;
+        let mut recv: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
         for node in &self.nodes {
-            let (correct, loss_sum) =
-                self.engine
-                    .evaluate(&node.params, &self.test_x, &self.test_y)?;
-            accs.push(correct / n_test);
-            losses.push(loss_sum / n_test);
+            let id = node.id;
+            let mut rng =
+                Rng::stream(self.cfg.seed, round as u64, id as u64, stream_tag::PUSH);
+            for dest in rng.sample_distinct_excluding(self.cfg.n, s, id) {
+                if !self.byz[dest] {
+                    recv[self.node_of[dest]].push(id);
+                }
+                // pushes to Byzantine recipients are wasted messages
+            }
         }
+        Some(recv)
+    }
+
+    /// Phase 4: per victim — pull `S_i^t`, craft the malicious rows,
+    /// robustly aggregate. Parallel over victims; each worker keeps its
+    /// own crafting scratch.
+    fn phase_pull_craft_aggregate(
+        &mut self,
+        round: usize,
+        push_received: Option<&Vec<Vec<usize>>>,
+    ) -> Result<()> {
+        let h = self.nodes.len();
+        let d = self.mean_buf.len();
+        let dos = self.cfg.attack == crate::attacks::AttackKind::Dos;
+        let seed = self.cfg.seed;
+        let n = self.cfg.n;
+        let b = self.cfg.b;
+        // worst-case malicious rows per victim is b in every topology
+        // (pull sets and graph neighborhoods are duplicate-free, and a
+        // flooding push round delivers each Byzantine node once)
+        let byz_rows_cap = b;
+
+        // immutable round snapshot shared by all workers
+        let halves = &self.halves;
+        let nodes = &self.nodes;
+        let byz = &self.byz;
+        let node_of = &self.node_of;
+        let sampler = &self.sampler;
+        let gossip_rows = &self.gossip_rows;
+        let attack = &self.attack;
+        let agg = &self.agg;
+        let mean_buf = &self.mean_buf;
+        let prev_mean_buf = &self.prev_mean_buf;
+        let all_halves: Vec<&[f32]> = halves.iter().map(|v| v.as_slice()).collect();
+        let all_halves = &all_halves;
+
+        let mut byz_seen = vec![0usize; h];
+        let mut jobs: Vec<AggJob<'_>> = self
+            .next_params
+            .iter_mut()
+            .zip(byz_seen.iter_mut())
+            .map(|(out, byz_seen)| AggJob { out, byz_seen })
+            .collect();
+
+        pool::try_for_each_with(
+            &mut jobs,
+            self.threads,
+            || vec![vec![0.0f32; d]; byz_rows_cap],
+            |i, job, byz_buf| {
+                let id = nodes[i].id;
+                // pull set from the (seed, round, id, PULL) stream
+                let peers: Vec<usize> = match (sampler, push_received, gossip_rows) {
+                    (Some(sampler), _, _) => sampler.sample_at(seed, round, id),
+                    (None, Some(recv), _) => recv[i].clone(),
+                    (None, None, Some(rows)) => rows[id]
+                        .iter()
+                        .map(|&(j, _)| j)
+                        .filter(|&j| j != id)
+                        .collect(),
+                    _ => unreachable!(),
+                };
+
+                // split into honest refs and byzantine slots
+                let mut honest_rows: Vec<&[f32]> = Vec::with_capacity(peers.len());
+                let mut byz_count = 0usize;
+                for &p in &peers {
+                    if byz[p] {
+                        byz_count += 1;
+                    } else {
+                        honest_rows.push(&halves[node_of[p]]);
+                    }
+                }
+                if push_received.is_some() && b > 0 && !dos {
+                    // flooding: every Byzantine node reaches every honest node
+                    byz_count = b;
+                }
+                if dos {
+                    byz_count = 0; // withheld responses simply never arrive
+                }
+                *job.byz_seen = byz_count;
+
+                // craft per-victim malicious models
+                if byz_count > 0 {
+                    if let Some(attack) = attack {
+                        let ctx = AttackContext {
+                            victim_half: &halves[i],
+                            victim_prev: &nodes[i].params,
+                            honest_received: &honest_rows,
+                            honest_all: all_halves,
+                            honest_mean: mean_buf,
+                            honest_prev_mean: prev_mean_buf,
+                            n,
+                            b,
+                        };
+                        attack.craft(&ctx, &mut byz_buf[..byz_count]);
+                    } else {
+                        // b > 0 but attack "none": byzantine nodes behave as
+                        // silent crashers sending their init... treat as the
+                        // honest mean (benign)
+                        for row in &mut byz_buf[..byz_count] {
+                            row.copy_from_slice(mean_buf);
+                        }
+                    }
+                }
+
+                match agg {
+                    AggBackend::Native(rule) => {
+                        let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
+                        rows.push(&halves[i]);
+                        rows.extend_from_slice(&honest_rows);
+                        for rbuf in &byz_buf[..byz_count] {
+                            rows.push(rbuf);
+                        }
+                        if rows.len() < rule.min_inputs() {
+                            // too few responses to aggregate robustly (push /
+                            // DoS rounds): keep the local half-step
+                            job.out.copy_from_slice(&halves[i]);
+                        } else {
+                            rule.aggregate(&rows, job.out);
+                        }
+                    }
+                    AggBackend::Hlo(exec) => {
+                        let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
+                        rows.push(&halves[i]);
+                        rows.extend_from_slice(&honest_rows);
+                        for rbuf in &byz_buf[..byz_count] {
+                            rows.push(rbuf);
+                        }
+                        let out = exec.run(&rows)?;
+                        job.out.copy_from_slice(&out);
+                    }
+                    AggBackend::Gossip(rule) => {
+                        // gossip needs (model, weight) pairs in graph order
+                        let rows = gossip_rows.as_ref().unwrap();
+                        let mut neigh: Vec<(&[f32], f64)> =
+                            Vec::with_capacity(peers.len());
+                        let mut byz_used = 0usize;
+                        for &(j, w) in &rows[id] {
+                            if j == id {
+                                continue;
+                            }
+                            if byz[j] {
+                                // DoS: the withheld model simply never
+                                // arrives — drop the edge this round
+                                if dos {
+                                    continue;
+                                }
+                                neigh.push((&byz_buf[byz_used], w));
+                                byz_used += 1;
+                            } else {
+                                neigh.push((&halves[node_of[j]], w));
+                            }
+                        }
+                        rule.aggregate(&halves[i], &neigh, job.out);
+                    }
+                }
+                Ok(())
+            },
+        )?;
+        drop(jobs);
+        // serial index-order max: identical for every thread count
+        self.last_round_byz_max = byz_seen.iter().copied().max().unwrap_or(0);
+        Ok(())
+    }
+
+    /// Evaluate every honest node on the shared test set (parallel over
+    /// nodes; read-only against the committed models).
+    pub fn evaluate(&self, round: usize) -> Result<EvalPoint> {
+        let n_test = self.test_y.len() as f64;
+        let h = self.nodes.len();
+        let engine: &dyn ComputeEngine = self.engine.as_ref();
+        let nodes = &self.nodes;
+        let test_x = &self.test_x;
+        let test_y = &self.test_y;
+        let mut accs = vec![0.0f64; h];
+        let mut losses = vec![0.0f64; h];
+        let mut jobs: Vec<(&mut f64, &mut f64)> =
+            accs.iter_mut().zip(losses.iter_mut()).collect();
+        pool::try_for_each(&mut jobs, self.threads, |i, job| {
+            let (correct, loss_sum) = engine.evaluate(&nodes[i].params, test_x, test_y)?;
+            *job.0 = correct / n_test;
+            *job.1 = loss_sum / n_test;
+            Ok(())
+        })?;
+        drop(jobs);
         Ok(EvalPoint {
             round,
             avg_acc: crate::util::stats::mean(&accs),
@@ -557,6 +691,7 @@ mod tests {
         assert_eq!(t.honest_count(), cfg.n - cfg.b);
         assert_eq!(t.byzantine_ids().len(), cfg.b);
         assert_eq!(t.bhat, 2);
+        assert!(t.thread_count() >= 1);
     }
 
     #[test]
@@ -570,6 +705,23 @@ mod tests {
         cfg3.seed = 99;
         let h3 = Trainer::from_config(&cfg3).unwrap().run().unwrap();
         assert_ne!(h1.train_loss, h3.train_loss);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut serial_cfg = quick_cfg();
+        serial_cfg.threads = 1;
+        let serial = Trainer::from_config(&serial_cfg).unwrap().run().unwrap();
+        for threads in [2usize, 3, 8] {
+            let mut cfg = quick_cfg();
+            cfg.threads = threads;
+            let hist = Trainer::from_config(&cfg).unwrap().run().unwrap();
+            assert_eq!(serial.train_loss, hist.train_loss, "threads={threads}");
+            assert_eq!(
+                serial.observed_byz_max, hist.observed_byz_max,
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]

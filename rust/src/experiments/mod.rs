@@ -82,11 +82,13 @@ fn eaf_csv(rows: &[EafRow]) -> String {
     out
 }
 
-/// Run one figure end to end.
+/// Run one figure end to end. `threads_override` forces the round-engine
+/// worker count on every series config (None = keep the preset's value).
 pub fn run_figure(
     fig: &Figure,
     scale: Scale,
     engine_override: Option<EngineKind>,
+    threads_override: Option<usize>,
     out_dir: &str,
 ) -> Result<FigureOutcome> {
     println!("figure {} — {}", fig.id, fig.title);
@@ -98,6 +100,9 @@ pub fn run_figure(
             for cfg in &mut cfgs {
                 if let Some(engine) = engine_override {
                     cfg.engine = engine;
+                }
+                if let Some(threads) = threads_override {
+                    cfg.threads = threads;
                 }
                 histories.push(run_training(cfg)?);
             }

@@ -6,7 +6,7 @@
 
 use super::manifest::ArtifactEntry;
 use anyhow::{anyhow, ensure, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 use xla::{Literal, PjRtLoadedExecutable};
 
 fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
@@ -36,12 +36,12 @@ fn scalar_f32(lit: &Literal) -> Result<f32> {
 
 /// `init_<arch>`: seed → flat params.
 pub struct InitExec {
-    exe: Rc<PjRtLoadedExecutable>,
+    exe: Arc<PjRtLoadedExecutable>,
     pub entry: ArtifactEntry,
 }
 
 impl InitExec {
-    pub(super) fn new(exe: Rc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+    pub(super) fn new(exe: Arc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
         InitExec { exe, entry }
     }
 
@@ -56,7 +56,7 @@ impl InitExec {
 
 /// `train_<arch>_b<B>_k<K>`: momentum-SGD half-step (Algorithm 1 l.3–6).
 pub struct TrainExec {
-    exe: Rc<PjRtLoadedExecutable>,
+    exe: Arc<PjRtLoadedExecutable>,
     pub entry: ArtifactEntry,
 }
 
@@ -68,7 +68,7 @@ pub struct StepOut {
 }
 
 impl TrainExec {
-    pub(super) fn new(exe: Rc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+    pub(super) fn new(exe: Arc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
         TrainExec { exe, entry }
     }
 
@@ -126,12 +126,12 @@ impl TrainExec {
 
 /// `eval_<arch>_n<E>`: (params, x, y) → (#correct, loss_sum).
 pub struct EvalExec {
-    exe: Rc<PjRtLoadedExecutable>,
+    exe: Arc<PjRtLoadedExecutable>,
     pub entry: ArtifactEntry,
 }
 
 impl EvalExec {
-    pub(super) fn new(exe: Rc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+    pub(super) fn new(exe: Arc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
         EvalExec { exe, entry }
     }
 
@@ -159,19 +159,21 @@ impl EvalExec {
 
 /// `aggregate_<arch>_m<m>_b<b̂>`: the Pallas NNM∘CWTM rule, X[m,d] → [d].
 pub struct AggregateExec {
-    exe: Rc<PjRtLoadedExecutable>,
+    exe: Arc<PjRtLoadedExecutable>,
     pub entry: ArtifactEntry,
-    /// row-major staging buffer reused across calls
-    staging: std::cell::RefCell<Vec<f32>>,
+    /// row-major staging buffer reused across calls; a Mutex (not RefCell)
+    /// so the executor stays `Sync` for the parallel round engine —
+    /// uncontended locking is noise next to a PJRT dispatch
+    staging: std::sync::Mutex<Vec<f32>>,
 }
 
 impl AggregateExec {
-    pub(super) fn new(exe: Rc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+    pub(super) fn new(exe: Arc<PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
         let cap = entry.m * entry.d;
         AggregateExec {
             exe,
             entry,
-            staging: std::cell::RefCell::new(Vec::with_capacity(cap)),
+            staging: std::sync::Mutex::new(Vec::with_capacity(cap)),
         }
     }
 
@@ -192,7 +194,7 @@ impl AggregateExec {
             e.m,
             rows.len()
         );
-        let mut staging = self.staging.borrow_mut();
+        let mut staging = self.staging.lock().unwrap();
         staging.clear();
         for r in rows {
             ensure!(r.len() == e.d, "row length {} != d={}", r.len(), e.d);

@@ -22,7 +22,7 @@ pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    cache: HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>,
 }
 
 impl Runtime {
@@ -50,7 +50,10 @@ impl Runtime {
     }
 
     /// Compile (or fetch from cache) an artifact by name.
-    pub fn executable(&mut self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+    pub fn executable(
+        &mut self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.cache.get(name) {
             return Ok(exe.clone());
         }
@@ -66,7 +69,7 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let exe = std::rc::Rc::new(exe);
+        let exe = std::sync::Arc::new(exe);
         self.cache.insert(name.to_string(), exe.clone());
         Ok(exe)
     }

@@ -6,6 +6,7 @@
 //! §10).
 
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod special;
 pub mod stats;

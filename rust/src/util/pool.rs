@@ -1,0 +1,191 @@
+//! Scoped-thread data-parallel execution for the round engine (no crate
+//! dependencies — the offline crate set has neither rayon nor crossbeam).
+//!
+//! Work items are split into contiguous chunks, one per worker, and driven
+//! by `std::thread::scope`. Because every per-item closure receives the
+//! item's **global index**, and all round-path randomness is counter-keyed
+//! by node id ([`crate::util::rng::Rng::stream`]), results are bit-identical
+//! for every thread count — `threads = 1` runs inline with zero scheduling
+//! overhead (the exact legacy serial path).
+
+use anyhow::Result;
+
+/// Resolve a configured thread count: `0` means "use all available
+/// parallelism", anything else is taken literally.
+pub fn resolve_threads(configured: usize) -> usize {
+    if configured > 0 {
+        configured
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Run `f(index, item)` over every item, on up to `threads` workers.
+///
+/// Returns the first error produced (by ascending chunk, not by time).
+/// Worker panics propagate to the caller.
+pub fn try_for_each<T, F>(items: &mut [T], threads: usize, f: F) -> Result<()>
+where
+    T: Send,
+    F: Fn(usize, &mut T) -> Result<()> + Sync,
+{
+    try_for_each_with(items, threads, || (), |i, item, _| f(i, item))
+}
+
+/// Like [`try_for_each`], with one `init()`-produced scratch value per
+/// worker — the pattern for reusable per-thread buffers on the hot path.
+pub fn try_for_each_with<T, S, I, F>(
+    items: &mut [T],
+    threads: usize,
+    init: I,
+    f: F,
+) -> Result<()>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut T, &mut S) -> Result<()> + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        let mut scratch = init();
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item, &mut scratch)?;
+        }
+        return Ok(());
+    }
+    let chunk = n.div_ceil(threads);
+    let f = &f;
+    let init = &init;
+    let mut first_err = None;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for (c, chunk_items) in items.chunks_mut(chunk).enumerate() {
+            let base = c * chunk;
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut scratch = init();
+                for (off, item) in chunk_items.iter_mut().enumerate() {
+                    f(base + off, item, &mut scratch)?;
+                }
+                Ok(())
+            }));
+        }
+        for handle in handles {
+            match handle.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(panic) => std::panic::resume_unwind(panic),
+            }
+        }
+    });
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn resolve_threads_passthrough_and_auto() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn indices_are_global_for_every_thread_count() {
+        for threads in [1usize, 2, 3, 7, 64] {
+            let mut items = vec![0usize; 37];
+            try_for_each(&mut items, threads, |i, slot| {
+                *slot = i * i;
+                Ok(())
+            })
+            .unwrap();
+            for (i, &v) in items.iter().enumerate() {
+                assert_eq!(v, i * i, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_oversubscribed_inputs_are_fine() {
+        let mut empty: Vec<usize> = Vec::new();
+        try_for_each(&mut empty, 8, |_, _| Ok(())).unwrap();
+        let mut one = vec![0usize];
+        try_for_each(&mut one, 8, |_, slot| {
+            *slot = 9;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(one[0], 9);
+    }
+
+    #[test]
+    fn first_error_by_index_wins() {
+        let mut items = vec![0u8; 20];
+        let err = try_for_each(&mut items, 4, |i, _| {
+            if i >= 5 {
+                Err(anyhow!("boom at {i}"))
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        assert_eq!(err.to_string(), "boom at 5");
+    }
+
+    #[test]
+    fn per_worker_scratch_is_isolated() {
+        // each worker's scratch counts only its own chunk
+        let inits = AtomicUsize::new(0);
+        let mut items = vec![0usize; 16];
+        try_for_each_with(
+            &mut items,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                0usize
+            },
+            |_, slot, local| {
+                *local += 1;
+                *slot = *local;
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(inits.load(Ordering::SeqCst), 4);
+        // chunks of 4: within each chunk the scratch counter restarts
+        assert_eq!(items, vec![1, 2, 3, 4, 1, 2, 3, 4, 1, 2, 3, 4, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let data: Vec<usize> = (0..1000).collect();
+        let run = |threads: usize| -> usize {
+            let mut out = vec![0usize; data.len()];
+            let data = &data;
+            let mut jobs: Vec<&mut usize> = out.iter_mut().collect();
+            try_for_each(&mut jobs, threads, |i, slot| {
+                **slot = data[i] * 3 + 1;
+                Ok(())
+            })
+            .unwrap();
+            out.iter().sum()
+        };
+        assert_eq!(run(1), run(4));
+        assert_eq!(run(1), run(13));
+    }
+}

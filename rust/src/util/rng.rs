@@ -4,9 +4,33 @@
 //!
 //! Every stochastic component in the system (data generation, Dirichlet
 //! partitioning, epidemic peer sampling, attack noise, graph generation)
-//! derives its stream from a single experiment seed via [`Rng::fork`], so
-//! entire training runs are bit-reproducible — a requirement for the
-//! paper's multi-seed confidence intervals.
+//! derives its stream from a single experiment seed, so entire training
+//! runs are bit-reproducible — a requirement for the paper's multi-seed
+//! confidence intervals.
+//!
+//! Two derivation mechanisms coexist:
+//!
+//! * [`Rng::fork`] — sequential child streams for one-shot construction
+//!   work (adversary placement, data partitioning, graph generation),
+//!   where a fixed derivation order is natural.
+//! * [`Rng::stream`] — **counter-based** streams keyed by
+//!   `(seed, round, node, tag)` for everything on the round path. A
+//!   stream's draws depend only on its key, never on how many draws any
+//!   other stream made, so per-node work can be scheduled in any order —
+//!   or on any number of worker threads — and still produce bit-identical
+//!   results. Tags live in [`stream_tag`].
+
+/// Purpose tags for [`Rng::stream`] keys, so different uses of randomness
+/// for the same `(seed, round, node)` never alias.
+pub mod stream_tag {
+    /// Epidemic pull sampling: the round's `S_i^t` draw.
+    pub const PULL: u64 = 0x50;
+    /// Push-mode recipient scatter for one honest sender.
+    pub const PUSH: u64 = 0x51;
+    /// Per-victim attack randomness (reserved; current attacks are
+    /// deterministic functions of the honest state).
+    pub const ATTACK: u64 = 0x52;
+}
 
 /// Xoshiro256++ PRNG (Blackman & Vigna), seeded through SplitMix64.
 #[derive(Clone, Debug)]
@@ -42,6 +66,28 @@ impl Rng {
     /// are decorrelated from the parent and from each other.
     pub fn fork(&mut self, tag: u64) -> Rng {
         let mut sm = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Counter-based stream keyed by `(seed, round, node, tag)`.
+    ///
+    /// Unlike [`Rng::fork`], this is a pure function of its key: it holds
+    /// no relationship to any other stream's position, which is what makes
+    /// the round engine's randomness independent of execution order and
+    /// thread count. Every key component is absorbed through a full
+    /// SplitMix64 avalanche before the state words are drawn, so all four
+    /// state words depend on all four key components.
+    pub fn stream(seed: u64, round: u64, node: u64, tag: u64) -> Rng {
+        let mut sm = seed;
+        sm = splitmix64(&mut sm) ^ round.wrapping_mul(0xA076_1D64_78BD_642F);
+        sm = splitmix64(&mut sm) ^ node.wrapping_mul(0xE703_7ED1_A0B4_28DB);
+        sm = splitmix64(&mut sm) ^ tag.wrapping_mul(0x8EBC_6AF0_9C88_C6E3);
         let s = [
             splitmix64(&mut sm),
             splitmix64(&mut sm),
@@ -263,6 +309,42 @@ mod tests {
         let xs: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
         let ys: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
         assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn stream_is_pure_function_of_key() {
+        let a: Vec<u64> = {
+            let mut r = Rng::stream(7, 3, 11, stream_tag::PULL);
+            (0..32).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng::stream(7, 3, 11, stream_tag::PULL);
+            (0..32).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stream_distinguishes_every_key_component() {
+        let base = Rng::stream(1, 2, 3, 4).next_u64();
+        assert_ne!(base, Rng::stream(9, 2, 3, 4).next_u64());
+        assert_ne!(base, Rng::stream(1, 9, 3, 4).next_u64());
+        assert_ne!(base, Rng::stream(1, 2, 9, 4).next_u64());
+        assert_ne!(base, Rng::stream(1, 2, 3, 9).next_u64());
+    }
+
+    #[test]
+    fn stream_outputs_roughly_uniform_across_nodes() {
+        // first draw of each per-node stream within one round must look
+        // uniform — the property the parallel engine's sampling rests on
+        let mut counts = [0u32; 8];
+        for node in 0..80_000u64 {
+            let x = Rng::stream(42, 17, node, stream_tag::PULL).next_u64();
+            counts[(x >> 61) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "{counts:?}");
+        }
     }
 
     #[test]

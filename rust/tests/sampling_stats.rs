@@ -1,0 +1,109 @@
+//! Statistical validation of the pull sampler and the hypergeometric
+//! sampler. All draws come from fixed seeds / fixed counter-based stream
+//! keys, so each assertion is deterministic; the bounds are set many
+//! standard deviations beyond what a correct sampler can produce, so a
+//! failure means a real distributional bug, not noise.
+
+use rpel::coordinator::PullSampler;
+use rpel::sampling::Hypergeometric;
+use rpel::util::rng::Rng;
+
+/// Pearson chi-square statistic against per-cell expected counts.
+fn chi_square(observed: &[u64], expected: &[f64]) -> f64 {
+    observed
+        .iter()
+        .zip(expected)
+        .map(|(&o, &e)| {
+            let d = o as f64 - e;
+            d * d / e
+        })
+        .sum()
+}
+
+#[test]
+fn pull_frequencies_uniform_over_peers() {
+    // over many stream-keyed rounds, every peer of every victim must be
+    // pulled with frequency s/(n-1): chi-square per victim, df = n-2 = 10.
+    // E[chi2] = 10, sd ≈ 4.5; 60 is ~11 sigma.
+    let (n, s, rounds, seed) = (12usize, 4usize, 20_000usize, 2026u64);
+    let sampler = PullSampler::new(n, s);
+    for victim in 0..n {
+        let mut counts = vec![0u64; n];
+        for round in 0..rounds {
+            let set = sampler.sample_at(seed, round, victim);
+            assert_eq!(set.len(), s);
+            let mut dedup = set.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), s, "duplicate peer in round {round}");
+            for p in set {
+                counts[p] += 1;
+            }
+        }
+        assert_eq!(counts[victim], 0, "victim {victim} sampled itself");
+        let observed: Vec<u64> = (0..n).filter(|&p| p != victim).map(|p| counts[p]).collect();
+        let expect = rounds as f64 * s as f64 / (n - 1) as f64;
+        let expected = vec![expect; n - 1];
+        let chi2 = chi_square(&observed, &expected);
+        assert!(
+            chi2 < 60.0,
+            "victim {victim}: chi2 = {chi2:.1} over {observed:?}"
+        );
+    }
+}
+
+#[test]
+fn byzantine_exposure_matches_hypergeometric_law() {
+    // with b Byzantine among the other n-1 peers, the number of malicious
+    // rows a victim pulls is HG(n-1, b, s) — the distribution Lemma 4.1
+    // and Algorithm 2 are built on. Chi-square over the full support.
+    let (n, b, s, rounds, seed) = (20usize, 4usize, 8usize, 15_000usize, 7u64);
+    let sampler = PullSampler::new(n, s);
+    let victim = n - 1; // Byzantine ids: 0..b (victim is honest)
+    let mut hits = vec![0u64; b + 1];
+    for round in 0..rounds {
+        let k = sampler
+            .sample_at(seed, round, victim)
+            .into_iter()
+            .filter(|&p| p < b)
+            .count();
+        hits[k] += 1;
+    }
+    let hg = Hypergeometric::new((n - 1) as u64, b as u64, s as u64);
+    let expected: Vec<f64> = (0..=b).map(|k| rounds as f64 * hg.pmf(k as u64)).collect();
+    assert!(expected.iter().all(|&e| e > 5.0), "degenerate test setup");
+    let chi2 = chi_square(&hits, &expected);
+    // df = 4: E[chi2] = 4, sd ≈ 2.8; 40 is ~13 sigma
+    assert!(chi2 < 40.0, "chi2 = {chi2:.1}, hits {hits:?} vs {expected:?}");
+}
+
+#[test]
+fn hypergeometric_sampler_matches_exact_cdf() {
+    // the Rng's sequential-draw sampler against the closed-form CDF:
+    // sup-distance of the empirical CDF (KS ~ 0.008 expected at this N;
+    // 0.02 is far outside what a correct sampler can reach)
+    let (total, marked, draws) = (30u64, 10u64, 8u64);
+    let n_samples = 40_000usize;
+    let mut rng = Rng::new(99);
+    let mut counts = vec![0u64; (draws + 1) as usize];
+    for _ in 0..n_samples {
+        let k = rng.hypergeometric(total, marked, draws);
+        counts[k as usize] += 1;
+    }
+    let hg = Hypergeometric::new(total, marked, draws);
+    let mut cum = 0u64;
+    let mut worst = 0.0f64;
+    let mut mean_emp = 0.0f64;
+    for k in 0..=draws {
+        cum += counts[k as usize];
+        mean_emp += k as f64 * counts[k as usize] as f64 / n_samples as f64;
+        let emp = cum as f64 / n_samples as f64;
+        worst = worst.max((emp - hg.cdf(k)).abs());
+    }
+    assert!(worst < 0.02, "KS distance {worst:.4}");
+    assert!(
+        (mean_emp - hg.mean()).abs() < 0.05,
+        "empirical mean {mean_emp:.3} vs exact {:.3}",
+        hg.mean()
+    );
+}

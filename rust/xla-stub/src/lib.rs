@@ -1,0 +1,254 @@
+//! API-compatible stub of the `xla` PJRT bindings used by `rpel::runtime`.
+//!
+//! The offline crate set does not carry the real `xla` crate (it links the
+//! `xla_extension` C++ library). This stub reproduces exactly the API
+//! surface the runtime touches so the crate builds and tests everywhere:
+//! the client constructs (artifact directories still open and list their
+//! manifests), while HLO parsing/compilation/execution fail with an
+//! actionable "stubbed" message, so every HLO-engine path degrades to a
+//! clear runtime error instead of failing to link. The Literal plumbing is
+//! real enough that shape bookkeeping and marshalling stay exercised.
+//!
+//! To enable the production HLO path, point the `xla` dependency in the
+//! workspace `Cargo.toml` at the real bindings; no `rpel` source changes
+//! are needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the bindings' debug-formatted errors.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: the xla/PJRT bindings are stubbed in this build \
+         (offline crate set); use the native engine or link the real \
+         `xla` crate"
+    )))
+}
+
+/// Element types the literal marshalling supports.
+pub trait NativeType: Copy {
+    fn into_elements(data: &[Self]) -> Elements;
+    fn from_elements(e: &Elements) -> Option<Vec<Self>>;
+}
+
+/// Typed storage behind a [`Literal`].
+#[derive(Clone, Debug)]
+pub enum Elements {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl NativeType for f32 {
+    fn into_elements(data: &[Self]) -> Elements {
+        Elements::F32(data.to_vec())
+    }
+
+    fn from_elements(e: &Elements) -> Option<Vec<Self>> {
+        match e {
+            Elements::F32(v) => Some(v.clone()),
+            Elements::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn into_elements(data: &[Self]) -> Elements {
+        Elements::I32(data.to_vec())
+    }
+
+    fn from_elements(e: &Elements) -> Option<Vec<Self>> {
+        match e {
+            Elements::I32(v) => Some(v.clone()),
+            Elements::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side tensor value (flat storage + dims, or a tuple of literals).
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Array { data: Elements, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal over a typed slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal::Array {
+            data: T::into_elements(data),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        Literal::Array {
+            data: T::into_elements(&[value]),
+            dims: Vec::new(),
+        }
+    }
+
+    /// Reshape; the element count must match the new dims.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, dims: old } => {
+                let count: i64 = dims.iter().product();
+                let old_count: i64 = old.iter().product();
+                if count != old_count {
+                    return Err(Error(format!(
+                        "reshape {old:?} -> {dims:?}: element count mismatch"
+                    )));
+                }
+                Ok(Literal::Array {
+                    data: data.clone(),
+                    dims: dims.to_vec(),
+                })
+            }
+            Literal::Tuple(_) => Err(Error("cannot reshape a tuple literal".into())),
+        }
+    }
+
+    /// Flat element vector, typed.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => T::from_elements(data)
+                .ok_or_else(|| Error("literal element type mismatch".into())),
+            Literal::Tuple(_) => Err(Error("cannot read elements of a tuple".into())),
+        }
+    }
+
+    fn tuple_n(&self, n: usize) -> Result<&[Literal]> {
+        match self {
+            Literal::Tuple(items) if items.len() == n => Ok(items),
+            Literal::Tuple(items) => Err(Error(format!(
+                "expected {n}-tuple, got {}-tuple",
+                items.len()
+            ))),
+            Literal::Array { .. } => Err(Error(format!(
+                "expected {n}-tuple, got array literal"
+            ))),
+        }
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        let items = self.tuple_n(1)?;
+        Ok(items[0].clone())
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        let items = self.tuple_n(2)?;
+        Ok((items[0].clone(), items[1].clone()))
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        let items = self.tuple_n(3)?;
+        Ok((items[0].clone(), items[1].clone(), items[2].clone()))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable(&format!("cannot parse {}", path.as_ref().display()))
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle.
+///
+/// Construction succeeds (so artifact directories can be opened and their
+/// manifests inspected); compiling or parsing HLO fails with the stub
+/// message — the first point where the real bindings would be needed.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_accessors_check_arity() {
+        let t = Literal::Tuple(vec![Literal::scalar(1i32), Literal::scalar(2i32)]);
+        assert!(t.to_tuple2().is_ok());
+        assert!(t.to_tuple1().is_err());
+        assert!(t.to_tuple3().is_err());
+        assert!(Literal::scalar(0i32).to_tuple1().is_err());
+    }
+
+    #[test]
+    fn client_constructs_but_cannot_compile() {
+        let client = PjRtClient::cpu().unwrap();
+        let err = match client.compile(&XlaComputation) {
+            Ok(_) => panic!("stub client must not compile"),
+            Err(e) => format!("{e:?}"),
+        };
+        assert!(err.contains("stubbed"), "{err}");
+        let err = format!("{:?}", HloModuleProto::from_text_file("x.hlo.txt").err());
+        assert!(err.contains("stubbed"), "{err}");
+    }
+}
