@@ -1,6 +1,12 @@
 //! End-to-end round benchmarks: full coordinator rounds per second across
-//! engines and component breakdown (train step / attack craft / aggregate /
-//! eval) — the L3 profile that drives the §Perf optimization loop.
+//! engines, the persistent-pool vs scoped-spawn dispatch comparison, a
+//! (serial | pool | sharded) round sweep over n, and component breakdown
+//! (train step / eval) — the L3 profile that drives the §Perf loop.
+//!
+//! Emits `BENCH_round.json` (ns/round for serial vs pool vs sharded at
+//! n ∈ {64, 256, 1024}) so the perf trajectory is machine-readable across
+//! PRs. Set `BENCH_SMOKE=1` for a short CI iteration (fewer samples,
+//! n = 64 only).
 //!
 //! Run: cargo bench --bench bench_round
 
@@ -12,7 +18,10 @@ use rpel::coordinator::Trainer;
 use rpel::data::TaskKind;
 use rpel::model::native::{MlpSpec, TrainHyper};
 use rpel::runtime::artifacts_available;
+use rpel::util::json::Json;
+use rpel::util::pool::{scoped_try_for_each, WorkerPool};
 use rpel::util::rng::Rng;
+use std::collections::BTreeMap;
 
 fn fig1_tiny() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default_for(TaskKind::MnistLike);
@@ -28,12 +37,167 @@ fn fig1_tiny() -> ExperimentConfig {
     cfg
 }
 
+/// Tiny-task round geometry for the n sweep (small d: the spawn-bound
+/// regime where dispatch overhead matters most).
+fn sweep_cfg(n: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = format!("bench_n{n}");
+    cfg.n = n;
+    cfg.b = n / 10;
+    cfg.topology = Topology::Epidemic { s: 8 };
+    cfg.bhat = Some(3);
+    cfg.attack = AttackKind::Alie;
+    cfg.batch = 8;
+    cfg.samples_per_node = 32;
+    cfg.test_samples = 64;
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+/// Small per-item workload for the dispatch-overhead comparison: enough
+/// work to be a realistic "one node's phase slice", little enough that
+/// spawn overhead dominates a scoped dispatch.
+fn phase_slice(i: usize) -> f32 {
+    let mut acc = i as f32;
+    for k in 0..256 {
+        acc = acc * 1.0001 + k as f32 * 1e-3;
+    }
+    acc
+}
+
+fn round_mean_ns(b: &Bencher, label: &str, cfg: &ExperimentConfig) -> f64 {
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    let mut round = 0usize;
+    let r = b.run(label, || {
+        round += 1;
+        black_box(trainer.round(round).unwrap())
+    });
+    println!("{}", r.report());
+    r.mean_ns()
+}
+
 fn main() {
-    let b = Bencher {
-        warmup_iters: 2,
-        samples: 8,
-        iters_per_sample: 1,
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let b = if smoke {
+        Bencher {
+            warmup_iters: 1,
+            samples: 2,
+            iters_per_sample: 1,
+        }
+    } else {
+        Bencher {
+            warmup_iters: 2,
+            samples: 8,
+            iters_per_sample: 1,
+        }
     };
+    let avail = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads = avail.min(8);
+
+    let mut json_root: BTreeMap<String, Json> = BTreeMap::new();
+    json_root.insert("bench".into(), Json::Str("bench_round".into()));
+    json_root.insert("units".into(), Json::Str("ns_per_round".into()));
+    json_root.insert("smoke".into(), Json::Bool(smoke));
+    json_root.insert("threads".into(), Json::Num(threads as f64));
+
+    section(&format!(
+        "dispatch overhead: persistent pool vs scoped spawns (64 jobs, 3 dispatches/iter, threads={threads})"
+    ));
+    {
+        // the spawn-bound regime the persistent pool exists for: per-item
+        // work is small, so a scoped dispatch pays thread spawn + join on
+        // every phase while the pool pays two channel ops per worker
+        let pool = WorkerPool::new(threads);
+        let mut items = vec![0.0f32; 64];
+        let r_pool = b.run("persistent pool dispatch", || {
+            for _ in 0..3 {
+                pool.try_for_each(&mut items, |i, slot| {
+                    *slot = phase_slice(i);
+                    Ok(())
+                })
+                .unwrap();
+            }
+            black_box(items[0])
+        });
+        println!("{}", r_pool.report());
+        let mut items2 = vec![0.0f32; 64];
+        let r_scoped = b.run("scoped spawn dispatch (legacy)", || {
+            for _ in 0..3 {
+                scoped_try_for_each(&mut items2, threads, |i, slot| {
+                    *slot = phase_slice(i);
+                    Ok(())
+                })
+                .unwrap();
+            }
+            black_box(items2[0])
+        });
+        println!("{}", r_scoped.report());
+        println!(
+            "  => persistent pool speedup vs scoped spawns: {:.2}x",
+            r_scoped.mean_ns() / r_pool.mean_ns()
+        );
+        let mut obj = BTreeMap::new();
+        obj.insert("jobs".into(), Json::Num(64.0));
+        obj.insert("dispatches_per_iter".into(), Json::Num(3.0));
+        obj.insert("pool_ns".into(), Json::Num(r_pool.mean_ns()));
+        obj.insert("scoped_ns".into(), Json::Num(r_scoped.mean_ns()));
+        obj.insert(
+            "pool_speedup".into(),
+            Json::Num(r_scoped.mean_ns() / r_pool.mean_ns()),
+        );
+        json_root.insert("dispatch_overhead".into(), Json::Obj(obj));
+    }
+
+    section("round sweep: serial vs pool vs sharded (tiny task, s=8, alie)");
+    let sweep_ns: &[usize] = if smoke { &[64] } else { &[64, 256, 1024] };
+    {
+        let mut rows = Vec::new();
+        for &n in sweep_ns {
+            let mut cfg = sweep_cfg(n);
+            cfg.threads = 1;
+            cfg.shards = 1;
+            let serial = round_mean_ns(&b, &format!("round n={n} serial"), &cfg);
+            cfg.threads = threads;
+            cfg.shards = 1;
+            let pool =
+                round_mean_ns(&b, &format!("round n={n} pool threads={threads}"), &cfg);
+            cfg.threads = threads;
+            cfg.shards = 4;
+            let sharded = round_mean_ns(
+                &b,
+                &format!("round n={n} sharded shards=4 threads={threads}"),
+                &cfg,
+            );
+            println!(
+                "  => n={n}: pool {:.2}x, sharded {:.2}x vs serial",
+                serial / pool,
+                serial / sharded
+            );
+            let mut obj = BTreeMap::new();
+            obj.insert("n".into(), Json::Num(n as f64));
+            obj.insert("serial_ns".into(), Json::Num(serial));
+            obj.insert("pool_ns".into(), Json::Num(pool));
+            obj.insert("sharded_ns".into(), Json::Num(sharded));
+            obj.insert("shards".into(), Json::Num(4.0));
+            rows.push(Json::Obj(obj));
+        }
+        json_root.insert("rounds".into(), Json::Arr(rows));
+    }
+
+    match std::fs::write(
+        "BENCH_round.json",
+        Json::Obj(json_root).to_string_compact(),
+    ) {
+        Ok(()) => println!("\nwrote BENCH_round.json"),
+        Err(e) => println!("\ncould not write BENCH_round.json: {e}"),
+    }
+
+    if smoke {
+        println!("(BENCH_SMOKE set — skipping the deep-dive sections)");
+        return;
+    }
 
     section("full coordinator round (fig1 geometry: n=30 b=3 s=15)");
     {
@@ -54,51 +218,6 @@ fn main() {
             black_box(trainer.evaluate(0).unwrap().avg_acc)
         });
         println!("{}", r.report());
-    }
-
-    section("parallel round engine: threads sweep (n=64 b=6 s=12, mnistlike)");
-    {
-        let avail = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        let mut cfg = ExperimentConfig::default_for(TaskKind::MnistLike);
-        cfg.n = 64;
-        cfg.b = 6;
-        cfg.topology = Topology::Epidemic { s: 12 };
-        cfg.bhat = Some(4);
-        cfg.attack = AttackKind::Alie;
-        cfg.batch = 16;
-        cfg.samples_per_node = 64;
-        cfg.test_samples = 128;
-        cfg.engine = EngineKind::Native;
-        let mut sweep: Vec<usize> = [1usize, 2, 4, 8]
-            .into_iter()
-            .filter(|&t| t <= avail)
-            .collect();
-        if !sweep.contains(&avail) {
-            sweep.push(avail);
-        }
-        let mut baseline_ns = 0.0f64;
-        for &threads in &sweep {
-            cfg.threads = threads;
-            let mut trainer = Trainer::from_config(&cfg).unwrap();
-            let mut round = 0usize;
-            let r = b.run(&format!("round n=64 threads={threads}"), || {
-                round += 1;
-                black_box(trainer.round(round).unwrap())
-            });
-            if threads == 1 {
-                baseline_ns = r.mean_ns();
-            }
-            println!(
-                "{}  [speedup vs serial: {:.2}x]",
-                r.report(),
-                baseline_ns / r.mean_ns()
-            );
-        }
-        if avail == 1 {
-            println!("(single-core host — speedup column is trivially 1.0x)");
-        }
     }
 
     if artifacts_available("artifacts") {

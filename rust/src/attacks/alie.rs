@@ -10,20 +10,19 @@
 //!
 //! Small, coordinated perturbations beat distance-based defenses that
 //! huge outliers (SF) cannot.
+//!
+//! μ and σ come from the per-round [`HonestDigest`], so crafting is O(d)
+//! per victim. The engine used to hand each victim a borrow of *all*
+//! honest half-steps and this attack rescanned them per coordinate — an
+//! O(h²·d) round cost that dominated large-n runs.
 
 use super::{Attack, AttackContext};
 use crate::util::special::inverse_normal_cdf;
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct Alie {
     /// Optional manual z override (None = Baruch formula).
     pub z: Option<f32>,
-}
-
-impl Default for Alie {
-    fn default() -> Self {
-        Alie { z: None }
-    }
 }
 
 impl Alie {
@@ -43,20 +42,20 @@ impl Alie {
 
 impl Attack for Alie {
     fn craft(&self, ctx: &AttackContext<'_>, out: &mut [Vec<f32>]) {
-        let d = ctx.honest_mean.len();
-        let z = self.z.unwrap_or_else(|| Self::z_max(ctx.n, ctx.b)).max(0.05);
-        let m = ctx.honest_all.len().max(1) as f64;
-        for row in out.iter_mut() {
-            for j in 0..d {
-                let mu = ctx.honest_mean[j] as f64;
-                let mut var = 0.0f64;
-                for h in ctx.honest_all {
-                    let dlt = h[j] as f64 - mu;
-                    var += dlt * dlt;
-                }
-                let sigma = (var / m).sqrt();
-                row[j] = (mu - z as f64 * sigma) as f32;
-            }
+        let z = self.z.unwrap_or_else(|| Self::z_max(ctx.n, ctx.b)).max(0.05) as f64;
+        let Some((first, rest)) = out.split_first_mut() else {
+            return;
+        };
+        for ((o, &mu), &sigma) in first
+            .iter_mut()
+            .zip(ctx.digest.mean.iter())
+            .zip(ctx.digest.std.iter())
+        {
+            *o = (mu - z * sigma) as f32;
+        }
+        // every Byzantine identity reports the same envelope point
+        for row in rest {
+            row.copy_from_slice(first);
         }
     }
 
@@ -88,58 +87,34 @@ mod tests {
     fn stays_within_envelope() {
         let f = Fixture::new(6);
         let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
-        let ctx = AttackContext {
-            victim_half: &f.honest[0],
-            victim_prev: &f.prev[0],
-            honest_received: &refs[..3],
-            honest_all: &refs,
-            honest_mean: &f.mean,
-            honest_prev_mean: &f.prev_mean,
-            n: 7,
-            b: 2,
-        };
-        let mut out = vec![vec![0.0f32; 6]];
+        let ctx = f.ctx(0, &refs[..3], 7, 2);
+        let mut out = vec![vec![0.0f32; 6]; 2];
         Alie::default().craft(&ctx, &mut out);
         // per coordinate the malicious value is within ~4 sigma of the mean
         for j in 0..6 {
-            let mu = f.mean[j] as f64;
-            let sigma = {
-                let var: f64 = f
-                    .honest
-                    .iter()
-                    .map(|h| (h[j] as f64 - mu).powi(2))
-                    .sum::<f64>()
-                    / 5.0;
-                var.sqrt()
-            };
+            let mu = f.digest.mean[j];
+            let sigma = f.digest.std[j];
             let dev = (out[0][j] as f64 - mu).abs();
             assert!(dev <= 4.0 * sigma + 1e-9, "j={j} dev={dev} sigma={sigma}");
             // and it actually deviates (non-trivial attack)
             assert!(dev > 0.0);
         }
+        // all Byzantine rows identical (coordinated attack)
+        assert_eq!(out[0], out[1]);
     }
 
     #[test]
     fn manual_z_override() {
         let f = Fixture::new(2);
         let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
-        let ctx = AttackContext {
-            victim_half: &f.honest[0],
-            victim_prev: &f.prev[0],
-            honest_received: &refs,
-            honest_all: &refs,
-            honest_mean: &f.mean,
-            honest_prev_mean: &f.prev_mean,
-            n: 7,
-            b: 2,
-        };
+        let ctx = f.ctx(0, &refs, 7, 2);
         let mut small = vec![vec![0.0f32; 2]];
         let mut large = vec![vec![0.0f32; 2]];
         Alie { z: Some(0.1) }.craft(&ctx, &mut small);
         Alie { z: Some(3.0) }.craft(&ctx, &mut large);
         for j in 0..2 {
             assert!(
-                (small[0][j] - f.mean[j]).abs() < (large[0][j] - f.mean[j]).abs() + 1e-9
+                (small[0][j] - f.mean32(j)).abs() < (large[0][j] - f.mean32(j)).abs() + 1e-9
             );
         }
     }

@@ -7,7 +7,9 @@
 //! honest population is pushed apart (no consensus). Per-victim crafting —
 //! each honest node receives a different malicious vector — exercises the
 //! paper's "distinct updates to different honest nodes in the same
-//! iteration" capability.
+//! iteration" capability. The neighborhood direction comes from the rows
+//! the victim actually pulled (falling back to the digest mean when it
+//! pulled none), so the cost is O(|received|·d) per victim.
 
 use super::{Attack, AttackContext};
 
@@ -30,21 +32,33 @@ impl Attack for Dissensus {
         // peers (fall back to global honest mean when it pulled none)
         let mut dir = vec![0.0f32; d];
         if ctx.honest_received.is_empty() {
-            for j in 0..d {
-                dir[j] = ctx.honest_mean[j] - ctx.victim_half[j];
+            for ((o, &mu), &v) in dir
+                .iter_mut()
+                .zip(ctx.digest.mean.iter())
+                .zip(ctx.victim_half.iter())
+            {
+                *o = mu as f32 - v;
             }
         } else {
             let inv = 1.0 / ctx.honest_received.len() as f32;
             for h in ctx.honest_received {
-                for j in 0..d {
-                    dir[j] += (h[j] - ctx.victim_half[j]) * inv;
+                for ((o, &hj), &v) in dir.iter_mut().zip(h.iter()).zip(ctx.victim_half.iter()) {
+                    *o += (hj - v) * inv;
                 }
             }
         }
-        for row in out.iter_mut() {
-            for j in 0..d {
-                row[j] = ctx.victim_half[j] - self.epsilon * dir[j];
-            }
+        let Some((first, rest)) = out.split_first_mut() else {
+            return;
+        };
+        for ((o, &v), &dj) in first
+            .iter_mut()
+            .zip(ctx.victim_half.iter())
+            .zip(dir.iter())
+        {
+            *o = v - self.epsilon * dj;
+        }
+        for row in rest {
+            row.copy_from_slice(first);
         }
     }
 
@@ -62,16 +76,7 @@ mod tests {
     fn opposes_consensus_direction() {
         let f = Fixture::new(4);
         let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
-        let ctx = AttackContext {
-            victim_half: &f.honest[0],
-            victim_prev: &f.prev[0],
-            honest_received: &refs[1..4],
-            honest_all: &refs,
-            honest_mean: &f.mean,
-            honest_prev_mean: &f.prev_mean,
-            n: 7,
-            b: 2,
-        };
+        let ctx = f.ctx(0, &refs[1..4], 7, 2);
         let mut out = vec![vec![0.0f32; 4]];
         Dissensus::default().craft(&ctx, &mut out);
         // (mal - victim) · (consensus - victim) < 0
@@ -90,16 +95,7 @@ mod tests {
         let f = Fixture::new(4);
         let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
         let mk = |victim: usize| {
-            let ctx = AttackContext {
-                victim_half: &f.honest[victim],
-                victim_prev: &f.prev[victim],
-                honest_received: &refs[1..3],
-                honest_all: &refs,
-                honest_mean: &f.mean,
-                honest_prev_mean: &f.prev_mean,
-                n: 7,
-                b: 2,
-            };
+            let ctx = f.ctx(victim, &refs[1..3], 7, 2);
             let mut out = vec![vec![0.0f32; 4]];
             Dissensus::default().craft(&ctx, &mut out);
             out.remove(0)
@@ -110,22 +106,12 @@ mod tests {
     #[test]
     fn empty_received_falls_back_to_global_mean() {
         let f = Fixture::new(3);
-        let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
-        let ctx = AttackContext {
-            victim_half: &f.honest[0],
-            victim_prev: &f.prev[0],
-            honest_received: &[],
-            honest_all: &refs,
-            honest_mean: &f.mean,
-            honest_prev_mean: &f.prev_mean,
-            n: 7,
-            b: 2,
-        };
+        let ctx = f.ctx(0, &[], 7, 2);
         let mut out = vec![vec![0.0f32; 3]];
         Dissensus::default().craft(&ctx, &mut out);
         for j in 0..3 {
-            let dir = f.mean[j] - f.honest[0][j];
-            assert!((out[0][j] - (f.honest[0][j] - dir)).abs() < 1e-6);
+            let dir = f.mean32(j) - f.honest[0][j];
+            assert!((out[0][j] - (f.honest[0][j] - dir)).abs() < 1e-5);
         }
     }
 }

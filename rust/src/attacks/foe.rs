@@ -3,7 +3,8 @@
 //! Instead of a full flip, FOE reports `mal = x̄_H^t − ε (x̄_H^{t+1/2} −
 //! x̄_H^t)` with a *small* ε, so the malicious update has negative inner
 //! product with the honest direction while keeping a small norm —
-//! defeating norm-based filters that SF trips.
+//! defeating norm-based filters that SF trips. Means come from the
+//! per-round [`HonestDigest`] (O(d) per victim).
 
 use super::{Attack, AttackContext};
 
@@ -21,11 +22,20 @@ impl Default for Foe {
 
 impl Attack for Foe {
     fn craft(&self, ctx: &AttackContext<'_>, out: &mut [Vec<f32>]) {
-        for row in out.iter_mut() {
-            for (j, o) in row.iter_mut().enumerate() {
-                let update = ctx.honest_mean[j] - ctx.honest_prev_mean[j];
-                *o = ctx.honest_prev_mean[j] - self.epsilon * update;
-            }
+        let eps = self.epsilon as f64;
+        let Some((first, rest)) = out.split_first_mut() else {
+            return;
+        };
+        for ((o, &mu), &prev) in first
+            .iter_mut()
+            .zip(ctx.digest.mean.iter())
+            .zip(ctx.digest.prev_mean.iter())
+        {
+            let update = mu - prev;
+            *o = (prev - eps * update) as f32;
+        }
+        for row in rest {
+            row.copy_from_slice(first);
         }
     }
 
@@ -40,30 +50,18 @@ mod tests {
     use super::*;
     use crate::util::vecmath;
 
-    fn ctx<'a>(f: &'a Fixture, refs: &'a [&'a [f32]]) -> AttackContext<'a> {
-        AttackContext {
-            victim_half: &f.honest[0],
-            victim_prev: &f.prev[0],
-            honest_received: refs,
-            honest_all: refs,
-            honest_mean: &f.mean,
-            honest_prev_mean: &f.prev_mean,
-            n: 7,
-            b: 2,
-        }
-    }
-
     #[test]
     fn smaller_deviation_than_sign_flip() {
         let f = Fixture::new(5);
         let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
-        let c = ctx(&f, &refs);
+        let c = f.ctx(0, &refs, 7, 2);
         let mut foe_out = vec![vec![0.0f32; 5]];
         let mut sf_out = vec![vec![0.0f32; 5]];
         Foe::default().craft(&c, &mut foe_out);
         super::super::SignFlip::default().craft(&c, &mut sf_out);
-        let d_foe = vecmath::dist(&foe_out[0], &f.mean);
-        let d_sf = vecmath::dist(&sf_out[0], &f.mean);
+        let mean32: Vec<f32> = (0..5).map(|j| f.mean32(j)).collect();
+        let d_foe = vecmath::dist(&foe_out[0], &mean32);
+        let d_sf = vecmath::dist(&sf_out[0], &mean32);
         assert!(d_foe < d_sf, "FOE should hide closer to the honest mean");
     }
 
@@ -71,12 +69,13 @@ mod tests {
     fn still_opposes_update_direction() {
         let f = Fixture::new(5);
         let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
-        let c = ctx(&f, &refs);
+        let c = f.ctx(0, &refs, 7, 2);
         let mut out = vec![vec![0.0f32; 5]];
         Foe::default().craft(&c, &mut out);
         let mut ip = 0.0f64;
         for j in 0..5 {
-            ip += ((out[0][j] - f.prev_mean[j]) * (f.mean[j] - f.prev_mean[j])) as f64;
+            ip += (out[0][j] as f64 - f.digest.prev_mean[j])
+                * (f.digest.mean[j] - f.digest.prev_mean[j]);
         }
         assert!(ip < 0.0);
     }

@@ -30,6 +30,97 @@ pub use dissensus::Dissensus;
 pub use foe::Foe;
 pub use sign_flip::SignFlip;
 
+/// Per-round digest of the honest population — everything the implemented
+/// attacks need from omniscience, reduced to O(d) state.
+///
+/// The coordinator computes this **once per round** (phase 2) by folding
+/// every honest half-step in ascending honest-node order with f64
+/// accumulators, so the digest — and therefore every crafted vector — is
+/// bit-identical for any shard partitioning and any worker count. Crafting
+/// against the digest costs O(d) per victim; the engine never hands an
+/// attack a borrow of all honest rows (the removed `honest_all`), which is
+/// what used to make ALIE an O(h²·d) round and capped n near 10³.
+#[derive(Clone, Debug, Default)]
+pub struct HonestDigest {
+    /// Number of honest half-steps folded in.
+    pub count: usize,
+    /// Coordinate-wise mean of all honest half-steps x̄_H^{t+1/2}.
+    pub mean: Vec<f64>,
+    /// Coordinate-wise population standard deviation of the half-steps
+    /// (σ_j = √(Σ(x−μ)²/count), the normalization ALIE's envelope uses).
+    pub std: Vec<f64>,
+    /// Coordinate-wise mean of the honest round-start models x̄_H^t.
+    pub prev_mean: Vec<f64>,
+}
+
+impl HonestDigest {
+    /// Empty digest with zeroed d-length buffers (reused across rounds).
+    pub fn new(d: usize) -> HonestDigest {
+        HonestDigest {
+            count: 0,
+            mean: vec![0.0; d],
+            std: vec![0.0; d],
+            prev_mean: vec![0.0; d],
+        }
+    }
+
+    /// Recompute in place from the round's honest half-steps and the
+    /// corresponding round-start params, folding rows in the order given
+    /// (the coordinator passes ascending honest-node order). Two-pass
+    /// moments in f64: exact enough that shard boundaries are invisible.
+    ///
+    /// `with_std = false` skips the second O(h·d) variance pass and leaves
+    /// `std` zeroed — ALIE is the only consumer of σ, so the coordinator
+    /// requests it only for that attack.
+    pub fn recompute(&mut self, halves: &[&[f32]], prevs: &[&[f32]], with_std: bool) {
+        debug_assert_eq!(halves.len(), prevs.len());
+        self.count = halves.len();
+        self.mean.fill(0.0);
+        self.prev_mean.fill(0.0);
+        self.std.fill(0.0);
+        if self.count == 0 {
+            return;
+        }
+        for row in halves {
+            for (acc, &x) in self.mean.iter_mut().zip(row.iter()) {
+                *acc += x as f64;
+            }
+        }
+        for row in prevs {
+            for (acc, &x) in self.prev_mean.iter_mut().zip(row.iter()) {
+                *acc += x as f64;
+            }
+        }
+        let inv = 1.0 / self.count as f64;
+        for acc in self.mean.iter_mut() {
+            *acc *= inv;
+        }
+        for acc in self.prev_mean.iter_mut() {
+            *acc *= inv;
+        }
+        if !with_std {
+            return;
+        }
+        for row in halves {
+            for ((acc, &mu), &x) in self.std.iter_mut().zip(self.mean.iter()).zip(row.iter()) {
+                let dlt = x as f64 - mu;
+                *acc += dlt * dlt;
+            }
+        }
+        for acc in self.std.iter_mut() {
+            *acc = (*acc * inv).sqrt();
+        }
+    }
+
+    /// One-shot construction with all moments (tests/fixtures).
+    pub fn compute(halves: &[&[f32]], prevs: &[&[f32]]) -> HonestDigest {
+        let d = halves.first().map_or(0, |r| r.len());
+        let mut digest = HonestDigest::new(d);
+        digest.recompute(halves, prevs, true);
+        digest
+    }
+}
+
 /// Everything the omniscient adversary sees when attacking one victim in
 /// one round.
 pub struct AttackContext<'a> {
@@ -37,15 +128,12 @@ pub struct AttackContext<'a> {
     pub victim_half: &'a [f32],
     /// The victim's model at the start of the round, x_i^t.
     pub victim_prev: &'a [f32],
-    /// Honest half-step models the victim actually pulled this round.
+    /// Honest half-step models the victim actually pulled this round —
+    /// the only raw rows an attack ever sees.
     pub honest_received: &'a [&'a [f32]],
-    /// All honest half-step models in the system (omniscience).
-    pub honest_all: &'a [&'a [f32]],
-    /// Coordinate-wise mean of all honest half-steps (precomputed once per
-    /// round by the coordinator — every attack uses it).
-    pub honest_mean: &'a [f32],
-    /// Coordinate-wise mean of the honest models at round start.
-    pub honest_prev_mean: &'a [f32],
+    /// O(d) digest of the whole honest population (omniscience, without
+    /// materializing it per victim).
+    pub digest: &'a HonestDigest,
     /// Total nodes / Byzantine nodes (for ALIE's z_max).
     pub n: usize,
     pub b: usize,
@@ -127,12 +215,13 @@ impl AttackKind {
 
 #[cfg(test)]
 pub(crate) mod testutil {
-    /// Build a small honest population + context views for attack tests.
+    use super::{AttackContext, HonestDigest};
+
+    /// Build a small honest population + digest for attack tests.
     pub struct Fixture {
         pub honest: Vec<Vec<f32>>,
         pub prev: Vec<Vec<f32>>,
-        pub mean: Vec<f32>,
-        pub prev_mean: Vec<f32>,
+        pub digest: HonestDigest,
     }
 
     impl Fixture {
@@ -143,17 +232,40 @@ pub(crate) mod testutil {
             let prev: Vec<Vec<f32>> = (0..5)
                 .map(|i| (0..d).map(|j| (i as f32) * 0.1 + j as f32 + 1.0).collect())
                 .collect();
-            let mut mean = vec![0.0f32; d];
-            let mut prev_mean = vec![0.0f32; d];
-            for j in 0..d {
-                mean[j] = honest.iter().map(|h| h[j]).sum::<f32>() / 5.0;
-                prev_mean[j] = prev.iter().map(|h| h[j]).sum::<f32>() / 5.0;
-            }
+            let halves: Vec<&[f32]> = honest.iter().map(|v| v.as_slice()).collect();
+            let prevs: Vec<&[f32]> = prev.iter().map(|v| v.as_slice()).collect();
+            let digest = HonestDigest::compute(&halves, &prevs);
             Fixture {
                 honest,
                 prev,
-                mean,
-                prev_mean,
+                digest,
+            }
+        }
+
+        /// f32 view of the digest mean (what tests compare rows against).
+        pub fn mean32(&self, j: usize) -> f32 {
+            self.digest.mean[j] as f32
+        }
+
+        pub fn prev_mean32(&self, j: usize) -> f32 {
+            self.digest.prev_mean[j] as f32
+        }
+
+        /// Context for one victim that received `received` honest rows.
+        pub fn ctx<'a>(
+            &'a self,
+            victim: usize,
+            received: &'a [&'a [f32]],
+            n: usize,
+            b: usize,
+        ) -> AttackContext<'a> {
+            AttackContext {
+                victim_half: &self.honest[victim],
+                victim_prev: &self.prev[victim],
+                honest_received: received,
+                digest: &self.digest,
+                n,
+                b,
             }
         }
     }
@@ -186,5 +298,46 @@ mod tests {
     #[test]
     fn panel_has_all_four() {
         assert_eq!(AttackKind::panel().len(), 4);
+    }
+
+    #[test]
+    fn digest_moments_match_direct_computation() {
+        let rows: Vec<Vec<f32>> = (0..7)
+            .map(|i| (0..5).map(|j| (i * 5 + j) as f32 * 0.25 - 3.0).collect())
+            .collect();
+        let prevs: Vec<Vec<f32>> = rows
+            .iter()
+            .map(|r| r.iter().map(|x| x + 1.0).collect())
+            .collect();
+        let hr: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        let pr: Vec<&[f32]> = prevs.iter().map(|v| v.as_slice()).collect();
+        let digest = HonestDigest::compute(&hr, &pr);
+        assert_eq!(digest.count, 7);
+        for j in 0..5 {
+            let mu: f64 = hr.iter().map(|r| r[j] as f64).sum::<f64>() / 7.0;
+            let var: f64 = hr.iter().map(|r| (r[j] as f64 - mu).powi(2)).sum::<f64>() / 7.0;
+            let pm: f64 = pr.iter().map(|r| r[j] as f64).sum::<f64>() / 7.0;
+            assert!((digest.mean[j] - mu).abs() < 1e-12, "j={j}");
+            assert!((digest.std[j] - var.sqrt()).abs() < 1e-12, "j={j}");
+            assert!((digest.prev_mean[j] - pm).abs() < 1e-12, "j={j}");
+        }
+    }
+
+    #[test]
+    fn digest_recompute_reuses_buffers_and_handles_empty() {
+        let mut digest = HonestDigest::new(3);
+        digest.recompute(&[], &[], true);
+        assert_eq!(digest.count, 0);
+        assert!(digest.mean.iter().all(|&x| x == 0.0));
+        let r1 = [1.0f32, 2.0, 3.0];
+        let r2 = [3.0f32, 2.0, 1.0];
+        digest.recompute(&[&r1, &r2], &[&r1, &r2], true);
+        assert_eq!(digest.count, 2);
+        assert_eq!(digest.mean, vec![2.0, 2.0, 2.0]);
+        assert_eq!(digest.std, vec![1.0, 0.0, 1.0]);
+        // skipping the variance pass still refreshes the means and zeroes σ
+        digest.recompute(&[&r1, &r2], &[&r1, &r2], false);
+        assert_eq!(digest.mean, vec![2.0, 2.0, 2.0]);
+        assert_eq!(digest.std, vec![0.0, 0.0, 0.0]);
     }
 }

@@ -8,6 +8,9 @@
 //! and b/m < 1/2 the poisoned mean still moves forward by
 //! (h − b)/m · u and the attack is toothless. Default γ = 4 (the
 //! magnitude range used by Li et al. 2020 / Karimireddy et al. 2020).
+//!
+//! Both means come from the per-round [`HonestDigest`]; crafting is O(d)
+//! per victim and identical for every Byzantine identity.
 
 use super::{Attack, AttackContext};
 
@@ -25,11 +28,20 @@ impl Default for SignFlip {
 
 impl Attack for SignFlip {
     fn craft(&self, ctx: &AttackContext<'_>, out: &mut [Vec<f32>]) {
-        for row in out.iter_mut() {
-            for (j, o) in row.iter_mut().enumerate() {
-                let update = ctx.honest_mean[j] - ctx.honest_prev_mean[j];
-                *o = ctx.honest_prev_mean[j] - self.gamma * update;
-            }
+        let gamma = self.gamma as f64;
+        let Some((first, rest)) = out.split_first_mut() else {
+            return;
+        };
+        for ((o, &mu), &prev) in first
+            .iter_mut()
+            .zip(ctx.digest.mean.iter())
+            .zip(ctx.digest.prev_mean.iter())
+        {
+            let update = mu - prev;
+            *o = (prev - gamma * update) as f32;
+        }
+        for row in rest {
+            row.copy_from_slice(first);
         }
     }
 
@@ -47,22 +59,13 @@ mod tests {
     fn mirrors_the_honest_update() {
         let f = Fixture::new(4);
         let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
-        let ctx = AttackContext {
-            victim_half: &f.honest[0],
-            victim_prev: &f.prev[0],
-            honest_received: &refs[..2],
-            honest_all: &refs,
-            honest_mean: &f.mean,
-            honest_prev_mean: &f.prev_mean,
-            n: 7,
-            b: 2,
-        };
+        let ctx = f.ctx(0, &refs[..2], 7, 2);
         let mut out = vec![vec![0.0f32; 4]; 2];
         SignFlip { gamma: 1.0 }.craft(&ctx, &mut out);
         for row in &out {
             for j in 0..4 {
-                let u = f.mean[j] - f.prev_mean[j];
-                assert!((row[j] - (f.prev_mean[j] - u)).abs() < 1e-6);
+                let u = f.mean32(j) - f.prev_mean32(j);
+                assert!((row[j] - (f.prev_mean32(j) - u)).abs() < 1e-5);
             }
         }
         // both malicious copies identical for SF (direction attack)
@@ -73,22 +76,14 @@ mod tests {
     fn opposes_honest_direction() {
         let f = Fixture::new(3);
         let refs: Vec<&[f32]> = f.honest.iter().map(|v| v.as_slice()).collect();
-        let ctx = AttackContext {
-            victim_half: &f.honest[0],
-            victim_prev: &f.prev[0],
-            honest_received: &refs,
-            honest_all: &refs,
-            honest_mean: &f.mean,
-            honest_prev_mean: &f.prev_mean,
-            n: 6,
-            b: 1,
-        };
+        let ctx = f.ctx(0, &refs, 6, 1);
         let mut out = vec![vec![0.0f32; 3]];
         SignFlip::default().craft(&ctx, &mut out);
         // inner product of (mal - prev_mean) with (mean - prev_mean) < 0
         let mut ip = 0.0f64;
         for j in 0..3 {
-            ip += ((out[0][j] - f.prev_mean[j]) * (f.mean[j] - f.prev_mean[j])) as f64;
+            ip += (out[0][j] as f64 - f.digest.prev_mean[j])
+                * (f.digest.mean[j] - f.digest.prev_mean[j]);
         }
         assert!(ip < 0.0);
     }

@@ -7,6 +7,7 @@
 //! task = "mnistlike"          # mnistlike | cifarlike | femnistlike | tiny
 //! engine = "hlo"              # hlo | native
 //! threads = 4                 # round-engine workers (0 = all cores)
+//! shards = 2                  # node-shard partitions (default 1)
 //!
 //! [nodes]
 //! n = 100
@@ -116,6 +117,9 @@ pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
     }
     if let Some(threads) = get_usize(&doc, "threads")? {
         cfg.threads = threads;
+    }
+    if let Some(shards) = get_usize(&doc, "shards")? {
+        cfg.shards = shards;
     }
 
     if let Some(n) = get_usize(&doc, "nodes.n")? {
@@ -322,6 +326,14 @@ mod tests {
         assert_eq!(cfg.threads, 4);
         let cfg = from_toml_str("task = \"tiny\"").unwrap();
         assert_eq!(cfg.threads, 0, "default must be auto (all cores)");
+    }
+
+    #[test]
+    fn shards_parsed_with_serial_default() {
+        let cfg = from_toml_str("task = \"tiny\"\nshards = 3").unwrap();
+        assert_eq!(cfg.shards, 3);
+        let cfg = from_toml_str("task = \"tiny\"").unwrap();
+        assert_eq!(cfg.shards, 1, "default must be the single-shard engine");
     }
 
     #[test]

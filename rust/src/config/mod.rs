@@ -110,6 +110,12 @@ pub struct ExperimentConfig {
     /// every value (the round engine's randomness is counter-keyed per
     /// node, never drawn from a shared sequential stream).
     pub threads: usize,
+    /// Shard count for the round engine: honest nodes are partitioned
+    /// into this many contiguous shard-owned ranges (clamped to the
+    /// honest count at construction). `1` = the single-shard engine.
+    /// Results are bit-identical for every value — the determinism suite
+    /// enforces the full (shards × threads) grid.
+    pub shards: usize,
 }
 
 impl ExperimentConfig {
@@ -139,6 +145,7 @@ impl ExperimentConfig {
             engine: EngineKind::Native,
             artifacts_dir: "artifacts".to_string(),
             threads: 0,
+            shards: 1,
         }
     }
 
@@ -231,6 +238,9 @@ impl ExperimentConfig {
         if self.rounds == 0 || self.batch == 0 || self.samples_per_node == 0 {
             return Err("rounds, batch, samples_per_node must be positive".into());
         }
+        if self.shards == 0 {
+            return Err("shards must be >= 1 (it partitions the honest nodes)".into());
+        }
         if self.lr_schedule.is_empty() {
             return Err("empty lr schedule".into());
         }
@@ -294,6 +304,15 @@ mod tests {
         assert!(cfg.validate().is_ok());
         cfg.rule = RuleChoice::Epidemic(RuleKind::NnmCwtm);
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_shards() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.shards = 0;
+        assert!(cfg.validate().unwrap_err().contains("shards"));
+        cfg.shards = 5;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

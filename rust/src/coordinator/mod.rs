@@ -8,7 +8,7 @@
 //! 2. pull sampling: `S_i^t` = s uniform peers (epidemic topology) or the
 //!    fixed graph neighborhood (baseline topology);
 //! 3. the omniscient adversary crafts per-victim malicious models for the
-//!    Byzantine members of `S_i^t` (it sees every honest half-step);
+//!    Byzantine members of `S_i^t`;
 //! 4. robust aggregation `x_i^{t+1} = R(x_i^{t+1/2}; received)` — the
 //!    Pallas NNM∘CWTM executable on the HLO path, or a native rule.
 //!
@@ -16,60 +16,78 @@
 //! snapshot (synchronous model, §3.3) — nodes never see intra-round
 //! updates of their peers.
 //!
-//! # Parallel round engine
+//! # Shard-partitioned round engine
 //!
-//! Because the synchronous model freezes the inter-node inputs for the
-//! whole round, each round executes as explicit **phases**, and the
-//! per-node phases are data-parallel over honest nodes
-//! ([`crate::util::pool`], scoped threads, no extra crates):
+//! Honest-node state is partitioned into [`shard::NodeShard`]s, each
+//! owning a **contiguous range of honest nodes** (params, momentum, data
+//! shards, half/next buffers). [`Trainer`] is an orchestrator over
+//! `Vec<NodeShard>`; every round runs the explicit shard protocol:
 //!
-//! 1. **half-step** — every node's local train step (reads its own state
-//!    plus the shared engine, writes its own half-step row);
-//! 2. **attack context** — honest means for the omniscient adversary
-//!    (serial; O(h·d) reduction in fixed index order);
+//! 1. **half-step** — every owned node's local train step, data-parallel
+//!    over all shards' nodes;
+//! 2. **publish + digest** — each shard publishes a read-only
+//!    [`shard::RoundDigest`] of its half-steps; the coordinator folds
+//!    them, in ascending honest-node order, into one
+//!    [`crate::attacks::HonestDigest`] (count, coordinate-wise mean/std,
+//!    prev-mean — all f64). This is the only all-nodes reduction in the
+//!    round, and it is what the omniscient adversary conditions on:
+//!    crafting is O(d) per victim, and no victim ever borrows the full
+//!    honest population (the former `honest_all`, an O(h²·d) round cost
+//!    under ALIE);
 //! 3. **push routes** (push-mode ablation only) — sender → recipient
 //!    scatter (serial; cheap index shuffling);
-//! 4. **pull + craft + aggregate** — per victim: draw `S_i^t`, craft the
-//!    malicious rows, aggregate into the node's next model (each worker
-//!    carries its own crafting scratch);
-//! 5. **swap** — commit the synchronous update.
+//! 4. **pull + craft + aggregate** — per victim: draw `S_i^t`, pull
+//!    exactly those rows from the published shard snapshots, craft the
+//!    malicious rows against the digest, aggregate into the victim
+//!    shard's next buffer;
+//! 5. **commit** — each shard's synchronous swap.
 //!
-//! The number of workers comes from [`ExperimentConfig::threads`]
-//! (`--threads` on the CLI; `0` = all available cores, `1` = the legacy
-//! serial path). Results are **bit-identical for every thread count**:
-//! all round-path randomness is drawn from counter-based streams keyed by
-//! `(seed, round, node, purpose)` ([`crate::util::rng::Rng::stream`]),
-//! never from a shared sequential generator, so no draw depends on
-//! scheduling order; reductions (loss mean, observed-b̂ max) collect
-//! per-node values and fold them serially in index order.
+//! # Persistent worker pool
+//!
+//! The per-node phases (1, 4, eval) are data-parallel on a
+//! [`crate::util::pool::WorkerPool`]: `threads − 1` long-lived workers
+//! plus the coordinator thread, fed via channels — no scoped-thread
+//! respawn per phase, and per-worker scratch (gradient buffers, attack
+//! crafting rows) lives in thread-locals that survive across rounds.
+//! `threads` comes from [`ExperimentConfig::threads`] (`--threads`; `0` =
+//! all cores, `1` = inline serial); the shard count from
+//! [`ExperimentConfig::shards`] (`--shards`, default 1).
+//!
+//! # Determinism
+//!
+//! Results are **bit-identical for every (shards × threads)
+//! combination**: all round-path randomness comes from counter-based
+//! streams keyed `(seed, round, node, purpose)`
+//! ([`crate::util::rng::Rng::stream`]) so no draw depends on scheduling
+//! or partitioning; the digest is folded serially in ascending
+//! honest-node order regardless of shard boundaries; and scalar
+//! reductions (loss mean, observed-b̂ max) collect per-node values and
+//! fold them serially in index order. `rust/tests/determinism.rs`
+//! enforces the grid. This is the stepping stone to multi-process
+//! shards: a remote shard ships the same `RoundDigest` payload its
+//! in-process twin publishes by borrow.
 
 pub mod engine;
 pub mod sampler;
+pub(crate) mod shard;
 
 pub use engine::{build_engine, ComputeEngine, HloEngine, NativeEngine};
 pub use sampler::PullSampler;
 
 use crate::aggregation::gossip::GossipAggregator;
 use crate::aggregation::Aggregator;
-use crate::attacks::{Attack, AttackContext};
+use crate::attacks::{Attack, AttackContext, HonestDigest};
 use crate::config::{EngineKind, ExperimentConfig, RuleChoice, Topology};
-use crate::data::{partition_dirichlet, Shard};
+use crate::data::partition_dirichlet;
 use crate::graph::Graph;
 use crate::metrics::{EvalPoint, History};
 use crate::runtime::{AggregateExec, Runtime};
-use crate::util::pool;
+use crate::util::pool::WorkerPool;
 use crate::util::rng::{stream_tag, Rng};
 use anyhow::{anyhow, bail, Context, Result};
+use shard::{NodeShard, NodeState};
+use std::cell::RefCell;
 use std::time::Instant;
-
-/// State owned by one honest node.
-struct NodeState {
-    /// global node id in [0, n)
-    id: usize,
-    params: Vec<f32>,
-    momentum: Vec<f32>,
-    shard: Shard,
-}
 
 /// Which aggregation backend executes step 4.
 enum AggBackend {
@@ -104,6 +122,13 @@ struct AggJob<'a> {
     byz_seen: &'a mut usize,
 }
 
+thread_local! {
+    /// Per-worker crafting scratch (`b` rows of length d). Thread-local so
+    /// the persistent pool's workers retain it across rounds instead of
+    /// reallocating per dispatch.
+    static CRAFT_ROWS: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+}
+
 /// A fully constructed training run.
 pub struct Trainer {
     cfg: ExperimentConfig,
@@ -116,7 +141,10 @@ pub struct Trainer {
     /// per-id Byzantine flag and id → honest-index map
     byz: Vec<bool>,
     node_of: Vec<usize>,
-    nodes: Vec<NodeState>,
+    /// shard-owned honest node state (contiguous honest-index ranges)
+    shards: Vec<NodeShard>,
+    /// honest count |H| (sum of shard lengths)
+    h: usize,
     sampler: Option<PullSampler>,
     /// push mode (pull-vs-push ablation): fan-out per honest sender
     push_s: Option<usize>,
@@ -124,16 +152,13 @@ pub struct Trainer {
     gossip_rows: Option<Vec<Vec<(usize, f64)>>>,
     test_x: Vec<f32>,
     test_y: Vec<i32>,
-    /// resolved worker count for the per-node phases (≥ 1)
-    threads: usize,
+    /// persistent worker pool for the per-node phases
+    pool: WorkerPool,
     /// §4.2 telemetry: max Byzantine rows any honest node received in the
     /// last round (the *observed* b̂)
     last_round_byz_max: usize,
-    // reusable round buffers
-    halves: Vec<Vec<f32>>,
-    next_params: Vec<Vec<f32>>,
-    mean_buf: Vec<f32>,
-    prev_mean_buf: Vec<f32>,
+    /// per-round digest of the honest population (phase 2 output)
+    digest: HonestDigest,
 }
 
 impl Trainer {
@@ -281,14 +306,14 @@ impl Trainer {
             }
             let labels = &shard_labels[id];
             let data = task.sample_labels(labels, &mut data_rng);
-            let shard = Shard::new(data, rng.fork(0x5AD + id as u64));
+            let data_shard = crate::data::Shard::new(data, rng.fork(0x5AD + id as u64));
             node_of[id] = nodes.len();
             let params = engine.init_params(cfg.seed as i32)?;
             nodes.push(NodeState {
                 id,
                 params,
                 momentum: vec![0.0f32; d],
-                shard,
+                shard: data_shard,
             });
         }
 
@@ -302,15 +327,31 @@ impl Trainer {
             }
         };
 
+        // --- shard partition: contiguous honest-index ranges -----------------
         let h = nodes.len();
-        let threads = pool::resolve_threads(cfg.threads);
+        let shard_count = cfg.shards.clamp(1, h.max(1));
+        let mut shards = Vec::with_capacity(shard_count);
+        let base = h / shard_count;
+        let extra = h % shard_count;
+        let mut node_iter = nodes.into_iter();
+        let mut start = 0usize;
+        for k in 0..shard_count {
+            let len = base + usize::from(k < extra);
+            let shard_nodes: Vec<NodeState> = node_iter.by_ref().take(len).collect();
+            shards.push(NodeShard::new(start, shard_nodes, d));
+            start += len;
+        }
+
+        let pool = WorkerPool::new(cfg.threads);
         log::info!(
-            "trainer '{}': n={} b={} b̂={bhat} rule={} engine={} d={d} threads={threads}",
+            "trainer '{}': n={} b={} b̂={bhat} rule={} engine={} d={d} shards={} threads={}",
             cfg.name,
             cfg.n,
             cfg.b,
             agg.name(),
-            engine.name()
+            engine.name(),
+            shards.len(),
+            pool.threads()
         );
         Ok(Trainer {
             bhat,
@@ -321,13 +362,11 @@ impl Trainer {
             gossip_rows,
             test_x: test.x,
             test_y: test.y,
-            threads,
+            pool,
             last_round_byz_max: 0,
-            halves: vec![vec![0.0f32; d]; h],
-            next_params: vec![vec![0.0f32; d]; h],
-            mean_buf: vec![0.0f32; d],
-            prev_mean_buf: vec![0.0f32; d],
-            nodes,
+            digest: HonestDigest::new(d),
+            shards,
+            h,
             engine,
             agg,
             attack,
@@ -346,12 +385,17 @@ impl Trainer {
 
     /// Number of honest nodes.
     pub fn honest_count(&self) -> usize {
-        self.nodes.len()
+        self.h
     }
 
     /// Resolved worker count for the per-node phases.
     pub fn thread_count(&self) -> usize {
-        self.threads
+        self.pool.threads()
+    }
+
+    /// Resolved shard count (≥ 1, ≤ honest count).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
     /// Run the full training; returns the metric history.
@@ -374,45 +418,52 @@ impl Trainer {
 
     /// Execute one synchronous round; returns the mean honest train loss.
     ///
-    /// Phases 1 and 4 run data-parallel over honest nodes (see the module
-    /// docs); every phase is bit-deterministic for any thread count.
+    /// Phases 1 and 4 run data-parallel over all shards' nodes (see the
+    /// module docs); every phase is bit-deterministic for any
+    /// (shards × threads) grid point.
     pub fn round(&mut self, round: usize) -> Result<f64> {
         // 1. local half-steps (Algorithm 1 lines 3–6)
         let loss = self.phase_half_steps(round)?;
-        // 2. omniscient-adversary context: honest means
+        // 2. shards publish their round digests; fold into the global
+        // honest digest the omniscient adversary conditions on
         self.phase_attack_context();
         // push mode: honest senders scatter to s recipients; Byzantine
         // senders flood every honest node (the Appendix-D failure mode)
         let push_received = self.phase_push_routes(round);
-        // 3.+4. pull, attack, aggregate — against the immutable half-step
-        // snapshot (synchronous model)
+        // 3.+4. pull, attack, aggregate — against the immutable published
+        // snapshots (synchronous model)
         self.phase_pull_craft_aggregate(round, push_received.as_ref())?;
-        // 5. synchronous swap
-        for (node, next) in self.nodes.iter_mut().zip(&self.next_params) {
-            node.params.copy_from_slice(next);
+        // 5. synchronous swap, shard by shard
+        for shard in self.shards.iter_mut() {
+            shard.commit();
         }
         Ok(loss)
     }
 
-    /// Phase 1: every honest node's local train step, in parallel.
+    /// Phase 1: every honest node's local train step, in parallel across
+    /// all shards.
     fn phase_half_steps(&mut self, round: usize) -> Result<f64> {
         let lr = self.cfg.lr_at(round);
         let beta = self.cfg.momentum;
         let wd = self.cfg.weight_decay;
         let k = self.engine.local_steps();
         let batch = self.engine.batch();
-        let h = self.nodes.len();
+        let h = self.h;
         let engine: &dyn ComputeEngine = self.engine.as_ref();
+        let pool = &self.pool;
 
-        let mut losses = vec![0.0f64; h];
-        let mut jobs: Vec<HalfStepJob<'_>> = self
-            .nodes
-            .iter_mut()
-            .zip(self.halves.iter_mut())
-            .zip(losses.iter_mut())
-            .map(|((node, half), loss)| HalfStepJob { node, half, loss })
-            .collect();
-        pool::try_for_each(&mut jobs, self.threads, |_, job| {
+        let mut jobs: Vec<HalfStepJob<'_>> = Vec::with_capacity(h);
+        for shard in self.shards.iter_mut() {
+            for ((node, half), loss) in shard
+                .nodes
+                .iter_mut()
+                .zip(shard.halves.iter_mut())
+                .zip(shard.losses.iter_mut())
+            {
+                jobs.push(HalfStepJob { node, half, loss });
+            }
+        }
+        pool.try_for_each(&mut jobs, |_, job| {
             job.half.copy_from_slice(&job.node.params);
             // batch draws come from the node's own shard stream — already
             // independent of scheduling order
@@ -429,15 +480,37 @@ impl Trainer {
             Ok(())
         })?;
         drop(jobs);
-        // serial index-order fold: identical for every thread count
-        Ok(losses.iter().sum::<f64>() / h as f64)
+        // serial fold in ascending honest order: identical for every
+        // (shards × threads) grid point
+        let sum: f64 = self.shards.iter().flat_map(|s| s.losses.iter()).sum();
+        Ok(sum / h as f64)
     }
 
-    /// Phase 2: honest means the omniscient adversary conditions on.
+    /// Phase 2: fold every shard's published [`shard::RoundDigest`] into
+    /// the global honest digest, in ascending honest-node order (per-shard
+    /// f64 partial sums would make the result depend on the shard
+    /// grouping — see `shard.rs`). Skipped entirely when nothing will read
+    /// it (no Byzantine nodes, or DoS where nothing is crafted); the
+    /// O(h·d) variance pass runs only for ALIE, its sole consumer.
     fn phase_attack_context(&mut self) {
-        column_mean(&self.halves, &mut self.mean_buf);
-        let prev: Vec<&[f32]> = self.nodes.iter().map(|n| n.params.as_slice()).collect();
-        crate::util::vecmath::mean_of(&prev, &mut self.prev_mean_buf);
+        use crate::attacks::AttackKind;
+        if self.cfg.b == 0 || self.cfg.attack == AttackKind::Dos {
+            return;
+        }
+        let mut halves: Vec<&[f32]> = Vec::with_capacity(self.h);
+        let mut prevs: Vec<&[f32]> = Vec::with_capacity(self.h);
+        for shard in &self.shards {
+            let published = shard.publish();
+            debug_assert_eq!(published.start, halves.len());
+            for row in published.halves {
+                halves.push(row);
+            }
+            for node in published.nodes {
+                prevs.push(&node.params);
+            }
+        }
+        let with_std = self.cfg.attack == AttackKind::Alie;
+        self.digest.recompute(&halves, &prevs, with_std);
     }
 
     /// Phase 3 (push-mode ablation only): sender → recipient routes. The
@@ -445,31 +518,34 @@ impl Trainer {
     /// stream, so routes are reproducible regardless of iteration order.
     fn phase_push_routes(&self, round: usize) -> Option<Vec<Vec<usize>>> {
         let s = self.push_s?;
-        let mut recv: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
-        for node in &self.nodes {
-            let id = node.id;
-            let mut rng =
-                Rng::stream(self.cfg.seed, round as u64, id as u64, stream_tag::PUSH);
-            for dest in rng.sample_distinct_excluding(self.cfg.n, s, id) {
-                if !self.byz[dest] {
-                    recv[self.node_of[dest]].push(id);
+        let mut recv: Vec<Vec<usize>> = vec![Vec::new(); self.h];
+        for shard in &self.shards {
+            for node in &shard.nodes {
+                let id = node.id;
+                let mut rng =
+                    Rng::stream(self.cfg.seed, round as u64, id as u64, stream_tag::PUSH);
+                for dest in rng.sample_distinct_excluding(self.cfg.n, s, id) {
+                    if !self.byz[dest] {
+                        recv[self.node_of[dest]].push(id);
+                    }
+                    // pushes to Byzantine recipients are wasted messages
                 }
-                // pushes to Byzantine recipients are wasted messages
             }
         }
         Some(recv)
     }
 
-    /// Phase 4: per victim — pull `S_i^t`, craft the malicious rows,
-    /// robustly aggregate. Parallel over victims; each worker keeps its
-    /// own crafting scratch.
+    /// Phase 4: per victim — pull `S_i^t`, craft the malicious rows
+    /// against the digest, robustly aggregate. Parallel over victims
+    /// across all shards; crafting scratch lives in per-worker
+    /// thread-locals that the persistent pool retains across rounds.
     fn phase_pull_craft_aggregate(
         &mut self,
         round: usize,
         push_received: Option<&Vec<Vec<usize>>>,
     ) -> Result<()> {
-        let h = self.nodes.len();
-        let d = self.mean_buf.len();
+        let h = self.h;
+        let d = self.digest.mean.len();
         let dos = self.cfg.attack == crate::attacks::AttackKind::Dos;
         let seed = self.cfg.seed;
         let n = self.cfg.n;
@@ -479,146 +555,175 @@ impl Trainer {
         // flooding push round delivers each Byzantine node once)
         let byz_rows_cap = b;
 
-        // immutable round snapshot shared by all workers
-        let halves = &self.halves;
-        let nodes = &self.nodes;
+        // immutable round snapshot shared by all workers, assembled from
+        // the shards' published views in ascending honest order — plus the
+        // per-victim output slots (disjoint mutable borrows)
+        let mut jobs: Vec<AggJob<'_>> = Vec::with_capacity(h);
+        let mut all_halves: Vec<&[f32]> = Vec::with_capacity(h);
+        let mut all_prevs: Vec<&[f32]> = Vec::with_capacity(h);
+        let mut ids: Vec<usize> = Vec::with_capacity(h);
+        for shard in self.shards.iter_mut() {
+            let (nodes, halves, next, byz_seen) = shard.split_aggregate();
+            for node in nodes {
+                ids.push(node.id);
+                all_prevs.push(&node.params);
+            }
+            for row in halves {
+                all_halves.push(row);
+            }
+            for (out, seen) in next.iter_mut().zip(byz_seen.iter_mut()) {
+                jobs.push(AggJob {
+                    out,
+                    byz_seen: seen,
+                });
+            }
+        }
+        let all_halves = &all_halves;
+        let all_prevs = &all_prevs;
+        let ids = &ids;
+
         let byz = &self.byz;
         let node_of = &self.node_of;
         let sampler = &self.sampler;
         let gossip_rows = &self.gossip_rows;
         let attack = &self.attack;
         let agg = &self.agg;
-        let mean_buf = &self.mean_buf;
-        let prev_mean_buf = &self.prev_mean_buf;
-        let all_halves: Vec<&[f32]> = halves.iter().map(|v| v.as_slice()).collect();
-        let all_halves = &all_halves;
+        let digest = &self.digest;
+        let pool = &self.pool;
 
-        let mut byz_seen = vec![0usize; h];
-        let mut jobs: Vec<AggJob<'_>> = self
-            .next_params
-            .iter_mut()
-            .zip(byz_seen.iter_mut())
-            .map(|(out, byz_seen)| AggJob { out, byz_seen })
-            .collect();
-
-        pool::try_for_each_with(
-            &mut jobs,
-            self.threads,
-            || vec![vec![0.0f32; d]; byz_rows_cap],
-            |i, job, byz_buf| {
-                let id = nodes[i].id;
-                // pull set from the (seed, round, id, PULL) stream
-                let peers: Vec<usize> = match (sampler, push_received, gossip_rows) {
-                    (Some(sampler), _, _) => sampler.sample_at(seed, round, id),
-                    (None, Some(recv), _) => recv[i].clone(),
-                    (None, None, Some(rows)) => rows[id]
+        pool.try_for_each(&mut jobs, |i, job| {
+            let id = ids[i];
+            // pull set from the (seed, round, id, PULL) stream; in push
+            // mode, borrow the precomputed receive row (no clone)
+            let pulled: Vec<usize>;
+            let peers: &[usize] = match (sampler, push_received, gossip_rows) {
+                (Some(sampler), _, _) => {
+                    pulled = sampler.sample_at(seed, round, id);
+                    &pulled
+                }
+                (None, Some(recv), _) => &recv[i],
+                (None, None, Some(rows)) => {
+                    pulled = rows[id]
                         .iter()
                         .map(|&(j, _)| j)
                         .filter(|&j| j != id)
-                        .collect(),
-                    _ => unreachable!(),
-                };
+                        .collect();
+                    &pulled
+                }
+                _ => unreachable!(),
+            };
 
-                // split into honest refs and byzantine slots
-                let mut honest_rows: Vec<&[f32]> = Vec::with_capacity(peers.len());
-                let mut byz_count = 0usize;
-                for &p in &peers {
-                    if byz[p] {
-                        byz_count += 1;
+            // split into honest refs and byzantine slots
+            let mut honest_rows: Vec<&[f32]> = Vec::with_capacity(peers.len());
+            let mut byz_count = 0usize;
+            for &p in peers {
+                if byz[p] {
+                    byz_count += 1;
+                } else {
+                    honest_rows.push(all_halves[node_of[p]]);
+                }
+            }
+            if push_received.is_some() && b > 0 && !dos {
+                // flooding: every Byzantine node reaches every honest node
+                byz_count = b;
+            }
+            if dos {
+                byz_count = 0; // withheld responses simply never arrive
+            }
+            *job.byz_seen = byz_count;
+
+            // craft per-victim malicious models into the worker's retained
+            // scratch rows
+            let mut byz_buf = CRAFT_ROWS.with(|cell| cell.take());
+            if byz_rows_cap > 0
+                && (byz_buf.len() < byz_rows_cap || byz_buf[0].len() != d)
+            {
+                byz_buf = vec![vec![0.0f32; d]; byz_rows_cap];
+            }
+            if byz_count > 0 {
+                if let Some(attack) = attack {
+                    let ctx = AttackContext {
+                        victim_half: all_halves[i],
+                        victim_prev: all_prevs[i],
+                        honest_received: &honest_rows,
+                        digest,
+                        n,
+                        b,
+                    };
+                    attack.craft(&ctx, &mut byz_buf[..byz_count]);
+                } else {
+                    // b > 0 but attack "none": byzantine nodes behave as
+                    // silent crashers; model them as sending the honest
+                    // mean (benign)
+                    for row in &mut byz_buf[..byz_count] {
+                        for (o, &mu) in row.iter_mut().zip(digest.mean.iter()) {
+                            *o = mu as f32;
+                        }
+                    }
+                }
+            }
+
+            match agg {
+                AggBackend::Native(rule) => {
+                    let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
+                    rows.push(all_halves[i]);
+                    rows.extend_from_slice(&honest_rows);
+                    for rbuf in &byz_buf[..byz_count] {
+                        rows.push(rbuf);
+                    }
+                    if rows.len() < rule.min_inputs() {
+                        // too few responses to aggregate robustly (push /
+                        // DoS rounds): keep the local half-step
+                        job.out.copy_from_slice(all_halves[i]);
                     } else {
-                        honest_rows.push(&halves[node_of[p]]);
+                        rule.aggregate(&rows, job.out);
                     }
                 }
-                if push_received.is_some() && b > 0 && !dos {
-                    // flooding: every Byzantine node reaches every honest node
-                    byz_count = b;
-                }
-                if dos {
-                    byz_count = 0; // withheld responses simply never arrive
-                }
-                *job.byz_seen = byz_count;
-
-                // craft per-victim malicious models
-                if byz_count > 0 {
-                    if let Some(attack) = attack {
-                        let ctx = AttackContext {
-                            victim_half: &halves[i],
-                            victim_prev: &nodes[i].params,
-                            honest_received: &honest_rows,
-                            honest_all: all_halves,
-                            honest_mean: mean_buf,
-                            honest_prev_mean: prev_mean_buf,
-                            n,
-                            b,
-                        };
-                        attack.craft(&ctx, &mut byz_buf[..byz_count]);
-                    } else {
-                        // b > 0 but attack "none": byzantine nodes behave as
-                        // silent crashers sending their init... treat as the
-                        // honest mean (benign)
-                        for row in &mut byz_buf[..byz_count] {
-                            row.copy_from_slice(mean_buf);
-                        }
+                AggBackend::Hlo(exec) => {
+                    let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
+                    rows.push(all_halves[i]);
+                    rows.extend_from_slice(&honest_rows);
+                    for rbuf in &byz_buf[..byz_count] {
+                        rows.push(rbuf);
                     }
+                    let out = exec.run(&rows);
+                    job.out.copy_from_slice(&out?);
                 }
-
-                match agg {
-                    AggBackend::Native(rule) => {
-                        let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
-                        rows.push(&halves[i]);
-                        rows.extend_from_slice(&honest_rows);
-                        for rbuf in &byz_buf[..byz_count] {
-                            rows.push(rbuf);
+                AggBackend::Gossip(rule) => {
+                    // gossip needs (model, weight) pairs in graph order
+                    let rows = gossip_rows.as_ref().unwrap();
+                    let mut neigh: Vec<(&[f32], f64)> = Vec::with_capacity(peers.len());
+                    let mut byz_used = 0usize;
+                    for &(j, w) in &rows[id] {
+                        if j == id {
+                            continue;
                         }
-                        if rows.len() < rule.min_inputs() {
-                            // too few responses to aggregate robustly (push /
-                            // DoS rounds): keep the local half-step
-                            job.out.copy_from_slice(&halves[i]);
-                        } else {
-                            rule.aggregate(&rows, job.out);
-                        }
-                    }
-                    AggBackend::Hlo(exec) => {
-                        let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
-                        rows.push(&halves[i]);
-                        rows.extend_from_slice(&honest_rows);
-                        for rbuf in &byz_buf[..byz_count] {
-                            rows.push(rbuf);
-                        }
-                        let out = exec.run(&rows)?;
-                        job.out.copy_from_slice(&out);
-                    }
-                    AggBackend::Gossip(rule) => {
-                        // gossip needs (model, weight) pairs in graph order
-                        let rows = gossip_rows.as_ref().unwrap();
-                        let mut neigh: Vec<(&[f32], f64)> =
-                            Vec::with_capacity(peers.len());
-                        let mut byz_used = 0usize;
-                        for &(j, w) in &rows[id] {
-                            if j == id {
+                        if byz[j] {
+                            // DoS: the withheld model simply never
+                            // arrives — drop the edge this round
+                            if dos {
                                 continue;
                             }
-                            if byz[j] {
-                                // DoS: the withheld model simply never
-                                // arrives — drop the edge this round
-                                if dos {
-                                    continue;
-                                }
-                                neigh.push((&byz_buf[byz_used], w));
-                                byz_used += 1;
-                            } else {
-                                neigh.push((&halves[node_of[j]], w));
-                            }
+                            neigh.push((&byz_buf[byz_used], w));
+                            byz_used += 1;
+                        } else {
+                            neigh.push((all_halves[node_of[j]], w));
                         }
-                        rule.aggregate(&halves[i], &neigh, job.out);
                     }
+                    rule.aggregate(all_halves[i], &neigh, job.out);
                 }
-                Ok(())
-            },
-        )?;
+            }
+            CRAFT_ROWS.with(|cell| cell.replace(byz_buf));
+            Ok(())
+        })?;
         drop(jobs);
-        // serial index-order max: identical for every thread count
-        self.last_round_byz_max = byz_seen.iter().copied().max().unwrap_or(0);
+        // serial index-order max: identical for every grid point
+        self.last_round_byz_max = self
+            .shards
+            .iter()
+            .flat_map(|s| s.byz_seen.iter().copied())
+            .max()
+            .unwrap_or(0);
         Ok(())
     }
 
@@ -626,17 +731,22 @@ impl Trainer {
     /// nodes; read-only against the committed models).
     pub fn evaluate(&self, round: usize) -> Result<EvalPoint> {
         let n_test = self.test_y.len() as f64;
-        let h = self.nodes.len();
+        let h = self.h;
         let engine: &dyn ComputeEngine = self.engine.as_ref();
-        let nodes = &self.nodes;
+        let params: Vec<&[f32]> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.nodes.iter().map(|node| node.params.as_slice()))
+            .collect();
+        let params = &params;
         let test_x = &self.test_x;
         let test_y = &self.test_y;
         let mut accs = vec![0.0f64; h];
         let mut losses = vec![0.0f64; h];
         let mut jobs: Vec<(&mut f64, &mut f64)> =
             accs.iter_mut().zip(losses.iter_mut()).collect();
-        pool::try_for_each(&mut jobs, self.threads, |i, job| {
-            let (correct, loss_sum) = engine.evaluate(&nodes[i].params, test_x, test_y)?;
+        self.pool.try_for_each(&mut jobs, |i, job| {
+            let (correct, loss_sum) = engine.evaluate(params[i], test_x, test_y)?;
             *job.0 = correct / n_test;
             *job.1 = loss_sum / n_test;
             Ok(())
@@ -652,22 +762,18 @@ impl Trainer {
 
     /// Immutable view of one honest node's parameters (tests).
     pub fn params_of(&self, honest_idx: usize) -> &[f32] {
-        &self.nodes[honest_idx].params
+        for shard in &self.shards {
+            if honest_idx < shard.start + shard.len() {
+                return &shard.nodes[honest_idx - shard.start].params;
+            }
+        }
+        panic!("honest index {honest_idx} out of range ({})", self.h);
     }
 
     /// Global ids of the Byzantine nodes (tests/diagnostics).
     pub fn byzantine_ids(&self) -> Vec<usize> {
         (0..self.cfg.n).filter(|&i| self.byz[i]).collect()
     }
-}
-
-/// Column mean over equal-length rows.
-fn column_mean(rows: &[Vec<f32>], out: &mut [f32]) {
-    out.fill(0.0);
-    for r in rows {
-        crate::util::vecmath::axpy(out, 1.0, r);
-    }
-    crate::util::vecmath::scale(out, 1.0 / rows.len() as f32);
 }
 
 #[cfg(test)]
@@ -692,6 +798,35 @@ mod tests {
         assert_eq!(t.byzantine_ids().len(), cfg.b);
         assert_eq!(t.bhat, 2);
         assert!(t.thread_count() >= 1);
+        assert_eq!(t.shard_count(), 1);
+    }
+
+    #[test]
+    fn shard_partition_is_contiguous_and_covers_all_nodes() {
+        let mut cfg = quick_cfg();
+        cfg.shards = 3;
+        let t = Trainer::from_config(&cfg).unwrap();
+        assert_eq!(t.shard_count(), 3);
+        let mut covered = 0usize;
+        let mut next_start = 0usize;
+        for shard in &t.shards {
+            assert_eq!(shard.start, next_start, "contiguous ranges");
+            next_start += shard.len();
+            covered += shard.len();
+        }
+        assert_eq!(covered, t.honest_count());
+        // every honest index resolves to some shard-owned params
+        for i in 0..t.honest_count() {
+            assert!(!t.params_of(i).is_empty());
+        }
+    }
+
+    #[test]
+    fn oversubscribed_shards_clamp_to_honest_count() {
+        let mut cfg = quick_cfg();
+        cfg.shards = 1000;
+        let t = Trainer::from_config(&cfg).unwrap();
+        assert_eq!(t.shard_count(), t.honest_count());
     }
 
     #[test]

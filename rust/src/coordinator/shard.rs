@@ -1,0 +1,120 @@
+//! Shard-owned node state for the round engine.
+//!
+//! A [`NodeShard`] owns a **contiguous range of honest nodes** — their
+//! params, momentum, data shards, and the per-round half-step / next-model
+//! buffers — and steps through the explicit round protocol driven by the
+//! coordinator ([`crate::coordinator::Trainer`]):
+//!
+//! 1. `half_step` — every owned node's local train step writes into the
+//!    shard's half buffers;
+//! 2. `publish` — the shard exposes a read-only [`RoundDigest`] of its
+//!    half-steps and round-start params; the coordinator folds all shard
+//!    digests (in ascending shard order = ascending honest-node order)
+//!    into the global [`crate::attacks::HonestDigest`];
+//! 3. `pull/craft/aggregate` — victims in any shard pull exactly the rows
+//!    they sampled from the published snapshots and write into the
+//!    shard's next buffers;
+//! 4. `commit` — the synchronous swap of next into params.
+//!
+//! # Why the digest fold is centralized
+//!
+//! Per-shard f64 partial sums combined across shards would make the mean
+//! depend on the shard grouping (f64 addition is not associative), so the
+//! coordinator instead folds the published rows in ascending honest-node
+//! order regardless of shard boundaries — that single O(h·d) serial pass
+//! is what makes results **bit-identical for every (shards × threads)
+//! combination**, and it is the same fold a future multi-process engine
+//! can reproduce from shipped shard snapshots.
+
+use crate::data::Shard;
+
+/// State owned by one honest node.
+pub(crate) struct NodeState {
+    /// global node id in [0, n)
+    pub id: usize,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    /// the node's local data shard
+    pub shard: Shard,
+}
+
+/// A contiguous range of honest nodes plus their round buffers. All
+/// honest-node state lives in exactly one shard; the coordinator is an
+/// orchestrator over `Vec<NodeShard>` and owns no node state itself.
+pub(crate) struct NodeShard {
+    /// first honest index owned by this shard (honest indices are global:
+    /// shard k owns `[start, start + len)`)
+    pub start: usize,
+    pub nodes: Vec<NodeState>,
+    /// half-step models x^{t+1/2}, one row per owned node
+    pub halves: Vec<Vec<f32>>,
+    /// aggregated next models x^{t+1}, committed at the end of the round
+    pub next: Vec<Vec<f32>>,
+    /// per-node train loss of the last half-step phase
+    pub losses: Vec<f64>,
+    /// per-node count of Byzantine rows received in the last round
+    pub byz_seen: Vec<usize>,
+}
+
+/// What a shard publishes after its half-step phase: read-only views of
+/// its half-steps and round-start params, tagged with the global range.
+/// Within one process this is a borrow; a multi-process engine would ship
+/// the same payload as the shard's round snapshot.
+pub(crate) struct RoundDigest<'a> {
+    pub start: usize,
+    pub halves: &'a [Vec<f32>],
+    pub nodes: &'a [NodeState],
+}
+
+impl NodeShard {
+    pub fn new(start: usize, nodes: Vec<NodeState>, d: usize) -> NodeShard {
+        let len = nodes.len();
+        NodeShard {
+            start,
+            nodes,
+            halves: vec![vec![0.0f32; d]; len],
+            next: vec![vec![0.0f32; d]; len],
+            losses: vec![0.0f64; len],
+            byz_seen: vec![0usize; len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    #[allow(dead_code)]
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Read-only round snapshot for the digest fold and peer pulls.
+    pub fn publish(&self) -> RoundDigest<'_> {
+        RoundDigest {
+            start: self.start,
+            halves: &self.halves,
+            nodes: &self.nodes,
+        }
+    }
+
+    /// Split borrows for the pull/craft/aggregate phase: immutable node
+    /// state + published halves alongside the mutable output slots.
+    #[allow(clippy::type_complexity)]
+    pub fn split_aggregate(
+        &mut self,
+    ) -> (&[NodeState], &[Vec<f32>], &mut [Vec<f32>], &mut [usize]) {
+        (
+            &self.nodes,
+            &self.halves,
+            &mut self.next,
+            &mut self.byz_seen,
+        )
+    }
+
+    /// Synchronous swap: commit the aggregated next models.
+    pub fn commit(&mut self) {
+        for (node, next) in self.nodes.iter_mut().zip(&self.next) {
+            node.params.copy_from_slice(next);
+        }
+    }
+}

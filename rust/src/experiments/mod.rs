@@ -82,13 +82,15 @@ fn eaf_csv(rows: &[EafRow]) -> String {
     out
 }
 
-/// Run one figure end to end. `threads_override` forces the round-engine
-/// worker count on every series config (None = keep the preset's value).
+/// Run one figure end to end. `threads_override` / `shards_override`
+/// force the round-engine worker and shard counts on every series config
+/// (None = keep the preset's value; results are identical either way).
 pub fn run_figure(
     fig: &Figure,
     scale: Scale,
     engine_override: Option<EngineKind>,
     threads_override: Option<usize>,
+    shards_override: Option<usize>,
     out_dir: &str,
 ) -> Result<FigureOutcome> {
     println!("figure {} — {}", fig.id, fig.title);
@@ -103,6 +105,9 @@ pub fn run_figure(
                 }
                 if let Some(threads) = threads_override {
                     cfg.threads = threads;
+                }
+                if let Some(shards) = shards_override {
+                    cfg.shards = shards;
                 }
                 histories.push(run_training(cfg)?);
             }

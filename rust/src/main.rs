@@ -23,8 +23,9 @@ USAGE:
   rpel train  (--config <file.toml> | --preset <figure-id[:idx]>)
               [--engine hlo|native] [--out results] [--seed N] [--rounds N]
               [--threads N]   (0 = all cores, 1 = serial; same results)
+              [--shards N]    (node-shard partitions, default 1; same results)
   rpel figure --id <fig1L|fig1R|...|fig21|all> [--scale tiny|paper]
-              [--engine hlo|native] [--out results] [--threads N]
+              [--engine hlo|native] [--out results] [--threads N] [--shards N]
   rpel eaf    --n <N> --b <B> [--t 200] [--sims 5] --grid 5,10,15,...
   rpel select --n <N> --b <B> [--t 200] [--q 0.49] [--sims 5]
               [--grid 2,...,n-1] [--exact] [--p 0.99]
@@ -76,7 +77,9 @@ fn engine_override(args: &Args) -> Result<Option<EngineKind>, String> {
 }
 
 fn cmd_train(args: &Args) -> CmdResult {
-    args.check_known(&["config", "preset", "engine", "out", "seed", "rounds", "threads"])?;
+    args.check_known(&[
+        "config", "preset", "engine", "out", "seed", "rounds", "threads", "shards",
+    ])?;
     let mut cfg = if let Some(path) = args.get("config") {
         config_file::load(path)?
     } else if let Some(preset) = args.get("preset") {
@@ -113,6 +116,9 @@ fn cmd_train(args: &Args) -> CmdResult {
     if let Some(threads) = args.get_usize("threads")? {
         cfg.threads = threads;
     }
+    if let Some(shards) = args.get_usize("shards")? {
+        cfg.shards = shards;
+    }
     let hist = experiments::run_training(&cfg)?;
     let out = args.get_or("out", "results");
     let paths = write_histories(&format!("{out}/train"), &[hist])?;
@@ -121,12 +127,13 @@ fn cmd_train(args: &Args) -> CmdResult {
 }
 
 fn cmd_figure(args: &Args) -> CmdResult {
-    args.check_known(&["id", "scale", "engine", "out", "threads"])?;
+    args.check_known(&["id", "scale", "engine", "out", "threads", "shards"])?;
     let id = args.get("id").ok_or("figure needs --id")?;
     let scale =
         Scale::parse(args.get_or("scale", "tiny")).ok_or("scale must be tiny|paper")?;
     let engine = engine_override(args)?;
     let threads = args.get_usize("threads")?;
+    let shards = args.get_usize("shards")?;
     let out = args.get_or("out", "results");
     let figs: Vec<_> = if id == "all" {
         presets::all_figures().to_vec()
@@ -135,7 +142,7 @@ fn cmd_figure(args: &Args) -> CmdResult {
             .ok_or_else(|| format!("unknown figure '{id}' (try `rpel list`)"))?]
     };
     for fig in figs {
-        let outcome = experiments::run_figure(&fig, scale, engine, threads, out)?;
+        let outcome = experiments::run_figure(&fig, scale, engine, threads, shards, out)?;
         println!("\n{}", experiments::summary_table(&outcome));
         println!("csv: {}\n", outcome.csv_paths.join(", "));
     }

@@ -1,14 +1,35 @@
-//! Scoped-thread data-parallel execution for the round engine (no crate
+//! Persistent worker-pool execution for the round engine (no crate
 //! dependencies — the offline crate set has neither rayon nor crossbeam).
 //!
-//! Work items are split into contiguous chunks, one per worker, and driven
-//! by `std::thread::scope`. Because every per-item closure receives the
-//! item's **global index**, and all round-path randomness is counter-keyed
-//! by node id ([`crate::util::rng::Rng::stream`]), results are bit-identical
-//! for every thread count — `threads = 1` runs inline with zero scheduling
-//! overhead (the exact legacy serial path).
+//! [`WorkerPool`] owns `threads − 1` long-lived worker threads, each fed
+//! through its own channel; the dispatching thread acts as worker 0, so a
+//! pool of `threads` delivers `threads`-way parallelism without ever
+//! blocking idle. The previous engine re-spawned scoped threads for every
+//! phase of every round (2–3 × threads spawns per round), and per-thread
+//! scratch — gradient buffers, attack crafting rows — died with them;
+//! with long-lived workers, `thread_local!` scratch survives across
+//! rounds, which is exactly how the compute engine and the crafting path
+//! reuse their buffers. `threads = 1` spawns nothing and runs inline (the
+//! exact legacy serial path).
+//!
+//! Work items are split into contiguous chunks, one per worker. Because
+//! every per-item closure receives the item's **global index**, and all
+//! round-path randomness is counter-keyed by node id
+//! ([`crate::util::rng::Rng::stream`]), results are bit-identical for
+//! every thread count.
+//!
+//! Dispatch hands each worker a *lifetime-erased* pointer to a chunk
+//! runner that lives on the dispatcher's stack. This is sound because the
+//! dispatcher never returns (or unwinds) past the frame that owns the
+//! runners until every worker has acknowledged completion — a drop guard
+//! drains the acknowledgement channel even if the dispatcher's own chunk
+//! panics.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
 
 /// Resolve a configured thread count: `0` means "use all available
 /// parallelism", anything else is taken literally.
@@ -22,30 +43,262 @@ pub fn resolve_threads(configured: usize) -> usize {
     }
 }
 
-/// Run `f(index, item)` over every item, on up to `threads` workers.
-///
-/// Returns the first error produced (by ascending chunk, not by time).
-/// Worker panics propagate to the caller.
-pub fn try_for_each<T, F>(items: &mut [T], threads: usize, f: F) -> Result<()>
+/// One chunk of work shipped to a worker: a type-erased pointer to a
+/// `FnMut() -> Result<()>` chunk runner on the dispatcher's stack, plus
+/// the shim that knows its concrete type.
+struct Job {
+    data: *mut (),
+    call: unsafe fn(*mut ()) -> Result<()>,
+    /// chunk index, echoed back on the completion channel (chunk 0 runs
+    /// on the dispatcher itself and never becomes a `Job`)
+    idx: usize,
+}
+
+// SAFETY: `data` points to a closure whose type was `Send` when the job
+// was built (see `make_job`), and the dispatcher keeps that closure alive
+// and unaliased until this job's completion message has been received.
+unsafe impl Send for Job {}
+
+unsafe fn call_shim<G: FnMut() -> Result<()>>(data: *mut ()) -> Result<()> {
+    (*(data as *mut G))()
+}
+
+fn make_job<G: FnMut() -> Result<()> + Send>(task: &mut G, idx: usize) -> Job {
+    Job {
+        data: task as *mut G as *mut (),
+        call: call_shim::<G>,
+        idx,
+    }
+}
+
+/// Completion message from a worker.
+enum Done {
+    Ok,
+    Err(usize, anyhow::Error),
+    Panic(Box<dyn std::any::Any + Send>),
+}
+
+struct WorkerHandle {
+    tx: Sender<Job>,
+    join: JoinHandle<()>,
+}
+
+fn worker_loop(jobs: Receiver<Job>, done: Sender<Done>) {
+    while let Ok(job) = jobs.recv() {
+        // catch_unwind keeps the worker alive (and the completion protocol
+        // intact) when a chunk runner panics; the payload is re-thrown on
+        // the dispatcher.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: the dispatcher guarantees the pointee outlives this
+            // call (it blocks on our completion message).
+            unsafe { (job.call)(job.data) }
+        }));
+        let msg = match result {
+            Ok(Ok(())) => Done::Ok,
+            Ok(Err(e)) => Done::Err(job.idx, e),
+            Err(payload) => Done::Panic(payload),
+        };
+        if done.send(msg).is_err() {
+            break;
+        }
+    }
+}
+
+/// Drains outstanding completion acknowledgements. Runs in `Drop` so the
+/// dispatcher can never unwind past the chunk runners while a worker
+/// still holds a pointer into them.
+struct Drain<'a> {
+    rx: &'a Receiver<Done>,
+    pending: usize,
+    first_err: Option<(usize, anyhow::Error)>,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    disconnected: bool,
+}
+
+impl Drain<'_> {
+    fn recv_all(&mut self) {
+        while self.pending > 0 {
+            match self.rx.recv() {
+                Ok(Done::Ok) => {}
+                Ok(Done::Err(idx, e)) => {
+                    let lower = match &self.first_err {
+                        None => true,
+                        Some((i, _)) => idx < *i,
+                    };
+                    if lower {
+                        self.first_err = Some((idx, e));
+                    }
+                }
+                Ok(Done::Panic(p)) => {
+                    if self.panic.is_none() {
+                        self.panic = Some(p);
+                    }
+                }
+                Err(_) => {
+                    // all workers gone mid-dispatch: nothing left to wait
+                    // for, and no pointers can still be in use
+                    self.disconnected = true;
+                    break;
+                }
+            }
+            self.pending -= 1;
+        }
+    }
+}
+
+impl Drop for Drain<'_> {
+    fn drop(&mut self) {
+        self.recv_all();
+    }
+}
+
+/// A persistent, std-only thread pool: `threads − 1` long-lived workers
+/// plus the dispatching thread itself. Construction is the only time
+/// threads are spawned; every [`WorkerPool::try_for_each`] after that is
+/// two channel operations per worker.
+pub struct WorkerPool {
+    threads: usize,
+    workers: Vec<WorkerHandle>,
+    /// exclusive access for a dispatch in progress (`&self` dispatch API;
+    /// the pool is driven from one coordinator thread, the lock is a
+    /// correctness backstop, never contended)
+    done_rx: Mutex<Receiver<Done>>,
+}
+
+impl WorkerPool {
+    /// Build a pool for a configured thread count (`0` = all cores).
+    pub fn new(configured: usize) -> WorkerPool {
+        let threads = resolve_threads(configured);
+        let (done_tx, done_rx) = channel();
+        let mut workers = Vec::with_capacity(threads.saturating_sub(1));
+        for _ in 1..threads {
+            let (tx, rx) = channel::<Job>();
+            let done = done_tx.clone();
+            let join = std::thread::spawn(move || worker_loop(rx, done));
+            workers.push(WorkerHandle { tx, join });
+        }
+        drop(done_tx); // workers hold clones; the channel closes when they exit
+        WorkerPool {
+            threads,
+            workers,
+            done_rx: Mutex::new(done_rx),
+        }
+    }
+
+    /// Resolved worker count (dispatcher included), ≥ 1.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(index, item)` over every item, on up to `threads` workers
+    /// (the calling thread runs the first chunk itself).
+    ///
+    /// Returns the first error produced (by ascending chunk, not by
+    /// time). Worker panics propagate to the caller.
+    pub fn try_for_each<T, F>(&self, items: &mut [T], f: F) -> Result<()>
+    where
+        T: Send,
+        F: Fn(usize, &mut T) -> Result<()> + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let parts = (self.workers.len() + 1).min(n);
+        if parts == 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item)?;
+            }
+            return Ok(());
+        }
+        let chunk = n.div_ceil(parts);
+        let f = &f;
+        // one chunk runner per part — all the same concrete closure type,
+        // so no boxing is needed and addresses are stable in the Vec
+        let mut tasks: Vec<_> = items
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(c, chunk_items)| {
+                let base = c * chunk;
+                move || -> Result<()> {
+                    for (off, item) in chunk_items.iter_mut().enumerate() {
+                        f(base + off, item)?;
+                    }
+                    Ok(())
+                }
+            })
+            .collect();
+
+        let done_rx = self
+            .done_rx
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner());
+        // declared after `tasks`: drops (and therefore drains) before the
+        // chunk runners are torn down, even on unwind
+        let mut drain = Drain {
+            rx: &done_rx,
+            pending: 0,
+            first_err: None,
+            panic: None,
+            disconnected: false,
+        };
+
+        let mut task_iter = tasks.iter_mut();
+        let own_chunk = task_iter.next().expect("parts >= 2 implies >= 1 chunk");
+        for (w, task) in task_iter.enumerate() {
+            if self.workers[w].tx.send(make_job(task, w + 1)).is_err() {
+                // worker thread is gone (it can only exit by panicking
+                // outside a job, which cannot happen, or at shutdown);
+                // run the chunk inline rather than losing it
+                task()?;
+                continue;
+            }
+            drain.pending += 1;
+        }
+        let own_result = own_chunk();
+        drain.recv_all();
+        // fully drained: pending == 0, so dropping the guard is a no-op
+        let first_err = drain.first_err.take();
+        let panic = drain.panic.take();
+        let disconnected = drain.disconnected;
+        drop(drain);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+        if disconnected {
+            return Err(anyhow!("worker pool: completion channel disconnected"));
+        }
+        match (own_result, first_err) {
+            (Err(e), _) => Err(e), // chunk 0 is the lowest index
+            (Ok(()), Some((_, e))) => Err(e),
+            (Ok(()), None) => Ok(()),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        let workers = std::mem::take(&mut self.workers);
+        let mut joins = Vec::with_capacity(workers.len());
+        for w in workers {
+            drop(w.tx); // closes the job channel; the worker's recv() errors and it exits
+            joins.push(w.join);
+        }
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The pre-pool dispatch strategy: spawn scoped threads for this one call
+/// and join them before returning. Retained **only** as the baseline for
+/// `bench_round`'s dispatch-overhead comparison (persistent pool vs
+/// spawn-per-phase) — the round engine itself always goes through
+/// [`WorkerPool`].
+pub fn scoped_try_for_each<T, F>(items: &mut [T], threads: usize, f: F) -> Result<()>
 where
     T: Send,
     F: Fn(usize, &mut T) -> Result<()> + Sync,
-{
-    try_for_each_with(items, threads, || (), |i, item, _| f(i, item))
-}
-
-/// Like [`try_for_each`], with one `init()`-produced scratch value per
-/// worker — the pattern for reusable per-thread buffers on the hot path.
-pub fn try_for_each_with<T, S, I, F>(
-    items: &mut [T],
-    threads: usize,
-    init: I,
-    f: F,
-) -> Result<()>
-where
-    T: Send,
-    I: Fn() -> S + Sync,
-    F: Fn(usize, &mut T, &mut S) -> Result<()> + Sync,
 {
     let n = items.len();
     if n == 0 {
@@ -53,24 +306,21 @@ where
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
-        let mut scratch = init();
         for (i, item) in items.iter_mut().enumerate() {
-            f(i, item, &mut scratch)?;
+            f(i, item)?;
         }
         return Ok(());
     }
     let chunk = n.div_ceil(threads);
     let f = &f;
-    let init = &init;
     let mut first_err = None;
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(threads);
         for (c, chunk_items) in items.chunks_mut(chunk).enumerate() {
             let base = c * chunk;
             handles.push(scope.spawn(move || -> Result<()> {
-                let mut scratch = init();
                 for (off, item) in chunk_items.iter_mut().enumerate() {
-                    f(base + off, item, &mut scratch)?;
+                    f(base + off, item)?;
                 }
                 Ok(())
             }));
@@ -97,7 +347,7 @@ where
 mod tests {
     use super::*;
     use anyhow::anyhow;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::cell::Cell;
 
     #[test]
     fn resolve_threads_passthrough_and_auto() {
@@ -108,8 +358,9 @@ mod tests {
     #[test]
     fn indices_are_global_for_every_thread_count() {
         for threads in [1usize, 2, 3, 7, 64] {
+            let pool = WorkerPool::new(threads);
             let mut items = vec![0usize; 37];
-            try_for_each(&mut items, threads, |i, slot| {
+            pool.try_for_each(&mut items, |i, slot| {
                 *slot = i * i;
                 Ok(())
             })
@@ -122,10 +373,11 @@ mod tests {
 
     #[test]
     fn empty_and_oversubscribed_inputs_are_fine() {
+        let pool = WorkerPool::new(8);
         let mut empty: Vec<usize> = Vec::new();
-        try_for_each(&mut empty, 8, |_, _| Ok(())).unwrap();
+        pool.try_for_each(&mut empty, |_, _| Ok(())).unwrap();
         let mut one = vec![0usize];
-        try_for_each(&mut one, 8, |_, slot| {
+        pool.try_for_each(&mut one, |_, slot| {
             *slot = 9;
             Ok(())
         })
@@ -135,50 +387,90 @@ mod tests {
 
     #[test]
     fn first_error_by_index_wins() {
+        let pool = WorkerPool::new(4);
         let mut items = vec![0u8; 20];
-        let err = try_for_each(&mut items, 4, |i, _| {
-            if i >= 5 {
-                Err(anyhow!("boom at {i}"))
-            } else {
-                Ok(())
-            }
-        })
-        .unwrap_err();
+        let err = pool
+            .try_for_each(&mut items, |i, _| {
+                if i >= 5 {
+                    Err(anyhow!("boom at {i}"))
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap_err();
         assert_eq!(err.to_string(), "boom at 5");
     }
 
     #[test]
-    fn per_worker_scratch_is_isolated() {
-        // each worker's scratch counts only its own chunk
-        let inits = AtomicUsize::new(0);
-        let mut items = vec![0usize; 16];
-        try_for_each_with(
-            &mut items,
-            4,
-            || {
-                inits.fetch_add(1, Ordering::SeqCst);
-                0usize
-            },
-            |_, slot, local| {
-                *local += 1;
-                *slot = *local;
+    fn pool_survives_repeated_dispatches() {
+        // the property the persistent design exists for: many rounds of
+        // dispatch against the same threads, no respawn, no leaks
+        let pool = WorkerPool::new(4);
+        let mut items = vec![0u64; 64];
+        for round in 0..200u64 {
+            pool.try_for_each(&mut items, |i, slot| {
+                *slot += round + i as u64;
                 Ok(())
-            },
-        )
+            })
+            .unwrap();
+        }
+        let expect0: u64 = (0..200).sum();
+        assert_eq!(items[0], expect0);
+        assert_eq!(items[1], expect0 + 200);
+    }
+
+    #[test]
+    fn thread_local_scratch_survives_across_dispatches() {
+        thread_local! {
+            static CALLS: Cell<usize> = const { Cell::new(0) };
+        }
+        let pool = WorkerPool::new(3);
+        let mut items = vec![0usize; 12];
+        for _ in 0..5 {
+            pool.try_for_each(&mut items, |_, slot| {
+                CALLS.with(|c| c.set(c.get() + 1));
+                *slot = CALLS.with(|c| c.get());
+                Ok(())
+            })
+            .unwrap();
+        }
+        // with persistent workers, per-thread counters keep growing across
+        // dispatches instead of restarting at 0 each time
+        assert!(items.iter().any(|&v| v > 12), "{items:?}");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_stays_usable() {
+        let pool = WorkerPool::new(4);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut items = vec![0usize; 16];
+            let _ = pool.try_for_each(&mut items, |i, _| {
+                if i == 13 {
+                    panic!("boom");
+                }
+                Ok(())
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate");
+        // workers caught the panic and kept running: the pool still works
+        let mut items = vec![0usize; 16];
+        pool.try_for_each(&mut items, |i, slot| {
+            *slot = i + 1;
+            Ok(())
+        })
         .unwrap();
-        assert_eq!(inits.load(Ordering::SeqCst), 4);
-        // chunks of 4: within each chunk the scratch counter restarts
-        assert_eq!(items, vec![1, 2, 3, 4, 1, 2, 3, 4, 1, 2, 3, 4, 1, 2, 3, 4]);
+        assert_eq!(items[15], 16);
     }
 
     #[test]
     fn parallel_sum_matches_serial() {
         let data: Vec<usize> = (0..1000).collect();
         let run = |threads: usize| -> usize {
+            let pool = WorkerPool::new(threads);
             let mut out = vec![0usize; data.len()];
             let data = &data;
             let mut jobs: Vec<&mut usize> = out.iter_mut().collect();
-            try_for_each(&mut jobs, threads, |i, slot| {
+            pool.try_for_each(&mut jobs, |i, slot| {
                 **slot = data[i] * 3 + 1;
                 Ok(())
             })
@@ -187,5 +479,23 @@ mod tests {
         };
         assert_eq!(run(1), run(4));
         assert_eq!(run(1), run(13));
+    }
+
+    #[test]
+    fn scoped_baseline_matches_pool() {
+        let mut a = vec![0usize; 37];
+        let mut b = vec![0usize; 37];
+        scoped_try_for_each(&mut a, 4, |i, slot| {
+            *slot = i * 7;
+            Ok(())
+        })
+        .unwrap();
+        WorkerPool::new(4)
+            .try_for_each(&mut b, |i, slot| {
+                *slot = i * 7;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(a, b);
     }
 }

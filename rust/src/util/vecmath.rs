@@ -74,14 +74,28 @@ pub fn dist(a: &[f32], b: &[f32]) -> f64 {
     dist_sq(a, b).sqrt()
 }
 
-/// out = mean of rows (each row a &[f32] of equal length).
-pub fn mean_of(rows: &[&[f32]], out: &mut [f32]) {
+/// out = mean of rows (each row of equal length), accumulated in f64.
+///
+/// One generic helper serves both `&[Vec<f32>]` and `&[&[f32]]` callers
+/// (the coordinator's column means and the aggregation rules), so the
+/// accumulation policy lives in exactly one place. f32 accumulation loses
+/// low-order digits once the running sum dwarfs a single row's magnitude
+/// (h ≳ 10³ rows of large values shift the mean by orders of magnitude
+/// more than one f32 ulp — see `mean_of_f64_accumulation_fixes_drift`).
+pub fn mean_of<R: AsRef<[f32]>>(rows: &[R], out: &mut [f32]) {
     assert!(!rows.is_empty());
-    out.fill(0.0);
+    let mut acc = vec![0.0f64; out.len()];
     for r in rows {
-        axpy(out, 1.0, r);
+        let r = r.as_ref();
+        debug_assert_eq!(r.len(), out.len());
+        for (a, &x) in acc.iter_mut().zip(r) {
+            *a += x as f64;
+        }
     }
-    scale(out, 1.0 / rows.len() as f32);
+    let inv = 1.0 / rows.len() as f64;
+    for (o, a) in out.iter_mut().zip(acc) {
+        *o = (a * inv) as f32;
+    }
 }
 
 /// out = a - b
@@ -180,6 +194,39 @@ mod tests {
         let c = [8.0f32, 0.0];
         clip_to_ball(&mut x, &c, 1.0);
         assert!((x[0] - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_of_f64_accumulation_fixes_drift() {
+        // property: for h ≥ 10³ rows mixing large and small magnitudes,
+        // the old f32-accumulation path (reproduced inline) drifts from
+        // the exact mean by ≫ one f32 ulp, while the f64 path lands
+        // within one ulp of the f32-rounded exact value. Constants chosen
+        // so the drift is deterministic and large: alternating 3e8 / 1.0
+        // rows make the f32 running sum (~2.25e11, ulp ≈ 16384) eat the
+        // small addends and round every large one.
+        let h = 1500usize;
+        let d = 4usize;
+        let rows: Vec<Vec<f32>> = (0..h)
+            .map(|i| vec![if i % 2 == 0 { 3.0e8f32 } else { 1.0f32 }; d])
+            .collect();
+        let exact = (750.0f64 * 3.0e8 + 750.0) / h as f64; // 150 000 000.5
+        // old path: f32 accumulate (axpy) then f32 scale
+        let mut old = vec![0.0f32; d];
+        for r in &rows {
+            axpy(&mut old, 1.0, r);
+        }
+        scale(&mut old, 1.0 / h as f32);
+        // new path
+        let mut new = vec![0.0f32; d];
+        mean_of(&rows, &mut new);
+        let ulp = 16.0f64; // f32 spacing at 1.5e8
+        for j in 0..d {
+            let old_err = (old[j] as f64 - exact).abs();
+            let new_err = (new[j] as f64 - exact).abs();
+            assert!(old_err > 10.0 * ulp, "j={j}: old path only off by {old_err}");
+            assert!(new_err <= ulp, "j={j}: f64 path off by {new_err}");
+        }
     }
 
     #[test]

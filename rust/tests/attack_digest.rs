@@ -1,0 +1,146 @@
+//! Regression: digest-based attack crafting must reproduce the removed
+//! full-scan implementations.
+//!
+//! ALIE used to receive a borrow of *all* honest half-steps
+//! (`AttackContext::honest_all`) and recompute the per-coordinate variance
+//! for every victim — an O(h²·d) round cost. The context now carries a
+//! per-round `HonestDigest` (f64 mean/std/prev-mean) instead. This test
+//! pins the old full-scan behavior as an oracle (reimplemented here
+//! exactly as it was: f32-accumulated mean, f64 variance around it) and
+//! checks the digest path lands within 1e-5 on a fixed fixture.
+
+use rpel::attacks::{Alie, Attack, AttackContext, HonestDigest, SignFlip};
+use rpel::util::rng::Rng;
+
+struct FixtureData {
+    halves: Vec<Vec<f32>>,
+    prevs: Vec<Vec<f32>>,
+}
+
+/// Deterministic honest population: h rows of dimension d, magnitudes ~1.
+fn fixture(h: usize, d: usize, seed: u64) -> FixtureData {
+    let mut rng = Rng::new(seed);
+    let halves: Vec<Vec<f32>> = (0..h)
+        .map(|_| (0..d).map(|_| rng.gaussian32(0.0, 1.0)).collect())
+        .collect();
+    let prevs: Vec<Vec<f32>> = halves
+        .iter()
+        .map(|r| r.iter().map(|x| x + 0.1 * rng.gaussian32(0.0, 1.0)).collect())
+        .collect();
+    FixtureData { halves, prevs }
+}
+
+/// The removed `honest_all` full-scan ALIE, verbatim: μ_j from the
+/// engine's old f32-accumulated column mean, σ_j rescanned per victim in
+/// f64 around that μ.
+fn full_scan_alie(halves: &[&[f32]], z: f32, out: &mut [Vec<f32>]) {
+    let d = halves[0].len();
+    let m = halves.len() as f64;
+    // old column_mean: f32 accumulate, f32 scale
+    let mut mean32 = vec![0.0f32; d];
+    for row in halves {
+        for (acc, &x) in mean32.iter_mut().zip(row.iter()) {
+            *acc += x;
+        }
+    }
+    let inv = 1.0f32 / m as f32;
+    for acc in mean32.iter_mut() {
+        *acc *= inv;
+    }
+    for row in out.iter_mut() {
+        for j in 0..d {
+            let mu = mean32[j] as f64;
+            let mut var = 0.0f64;
+            for h in halves {
+                let dlt = h[j] as f64 - mu;
+                var += dlt * dlt;
+            }
+            let sigma = (var / m).sqrt();
+            row[j] = (mu - z as f64 * sigma) as f32;
+        }
+    }
+}
+
+#[test]
+fn digest_alie_matches_removed_full_scan_within_1e5() {
+    let (h, d, n, b) = (40usize, 64usize, 45usize, 5usize);
+    let fx = fixture(h, d, 7);
+    let halves: Vec<&[f32]> = fx.halves.iter().map(|v| v.as_slice()).collect();
+    let prevs: Vec<&[f32]> = fx.prevs.iter().map(|v| v.as_slice()).collect();
+    let digest = HonestDigest::compute(&halves, &prevs);
+    assert_eq!(digest.count, h);
+
+    let z = Alie::z_max(n, b);
+    let mut want = vec![vec![0.0f32; d]; b];
+    full_scan_alie(&halves, z, &mut want);
+
+    let ctx = AttackContext {
+        victim_half: halves[0],
+        victim_prev: prevs[0],
+        honest_received: &halves[1..4],
+        digest: &digest,
+        n,
+        b,
+    };
+    let mut got = vec![vec![0.0f32; d]; b];
+    Alie::default().craft(&ctx, &mut got);
+
+    for (row_got, row_want) in got.iter().zip(&want) {
+        for (j, (g, w)) in row_got.iter().zip(row_want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-5,
+                "coordinate {j}: digest={g} full-scan={w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn digest_alie_is_independent_of_received_rows() {
+    // omniscience comes from the digest, not from what the victim pulled:
+    // the crafted envelope point must not depend on the received subset
+    let fx = fixture(20, 16, 3);
+    let halves: Vec<&[f32]> = fx.halves.iter().map(|v| v.as_slice()).collect();
+    let prevs: Vec<&[f32]> = fx.prevs.iter().map(|v| v.as_slice()).collect();
+    let digest = HonestDigest::compute(&halves, &prevs);
+    let craft = |received: &[&[f32]]| {
+        let ctx = AttackContext {
+            victim_half: halves[0],
+            victim_prev: prevs[0],
+            honest_received: received,
+            digest: &digest,
+            n: 23,
+            b: 3,
+        };
+        let mut out = vec![vec![0.0f32; 16]];
+        Alie::default().craft(&ctx, &mut out);
+        out.remove(0)
+    };
+    assert_eq!(craft(&halves[1..3]), craft(&halves[5..11]));
+}
+
+#[test]
+fn digest_sign_flip_matches_mean_formula_within_1e5() {
+    // SF's formula is a pure function of the two means; the digest path
+    // must agree with computing it from f32 column means directly
+    let fx = fixture(30, 32, 11);
+    let halves: Vec<&[f32]> = fx.halves.iter().map(|v| v.as_slice()).collect();
+    let prevs: Vec<&[f32]> = fx.prevs.iter().map(|v| v.as_slice()).collect();
+    let digest = HonestDigest::compute(&halves, &prevs);
+    let ctx = AttackContext {
+        victim_half: halves[0],
+        victim_prev: prevs[0],
+        honest_received: &halves[1..5],
+        digest: &digest,
+        n: 33,
+        b: 3,
+    };
+    let mut got = vec![vec![0.0f32; 32]];
+    SignFlip { gamma: 4.0 }.craft(&ctx, &mut got);
+    for j in 0..32 {
+        let mu: f64 = halves.iter().map(|r| r[j] as f64).sum::<f64>() / 30.0;
+        let pm: f64 = prevs.iter().map(|r| r[j] as f64).sum::<f64>() / 30.0;
+        let want = (pm - 4.0 * (mu - pm)) as f32;
+        assert!((got[0][j] - want).abs() < 1e-5, "j={j}");
+    }
+}

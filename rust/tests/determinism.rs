@@ -1,7 +1,8 @@
 //! Bit-level reproducibility of the round engine: the same config must
 //! produce an identical `History` (and identical final models) on every
 //! run — and, because all round-path randomness is counter-keyed per
-//! `(seed, round, node)`, for **every thread count**. These are exact
+//! `(seed, round, node)` and the attack digest is folded in global honest
+//! order, for **every (shards × threads) combination**. These are exact
 //! comparisons, not tolerances: the per-node RNG streams make this a hard
 //! guarantee, not a flake.
 
@@ -118,6 +119,97 @@ fn thread_count_is_invisible_in_the_results() {
                 &got,
             );
         }
+    }
+}
+
+#[test]
+fn shards_times_threads_grid_is_invisible_in_the_results() {
+    // the tentpole guarantee: partitioning the honest nodes into shards
+    // changes nothing, for any worker count layered on top
+    let mut reference_cfg = base_cfg();
+    reference_cfg.shards = 1;
+    reference_cfg.threads = 1;
+    let reference = run_collect(&reference_cfg);
+    for shards in [1usize, 2, 3, 5] {
+        for threads in [1usize, 4] {
+            if shards == 1 && threads == 1 {
+                continue;
+            }
+            let mut cfg = base_cfg();
+            cfg.shards = shards;
+            cfg.threads = threads;
+            let got = run_collect(&cfg);
+            assert_bit_identical(
+                &format!("epidemic shards={shards} threads={threads} vs serial"),
+                &reference,
+                &got,
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_grid_holds_under_every_attack() {
+    for attack in [
+        AttackKind::SignFlip,
+        AttackKind::Foe,
+        AttackKind::Dissensus,
+        AttackKind::Dos,
+    ] {
+        let mut serial = base_cfg();
+        serial.attack = attack;
+        serial.shards = 1;
+        serial.threads = 1;
+        let reference = run_collect(&serial);
+        let mut cfg = serial.clone();
+        cfg.shards = 5;
+        cfg.threads = 4;
+        assert_bit_identical(
+            &format!("{attack:?} shards=5 threads=4 vs serial"),
+            &reference,
+            &run_collect(&cfg),
+        );
+    }
+}
+
+#[test]
+fn push_topology_shard_grid_is_invariant() {
+    use rpel::config::Topology;
+    let mut serial = base_cfg();
+    serial.topology = Topology::EpidemicPush { s: 6 };
+    serial.attack = AttackKind::SignFlip;
+    serial.shards = 1;
+    serial.threads = 1;
+    let reference = run_collect(&serial);
+    for (shards, threads) in [(2usize, 1usize), (2, 4), (5, 1), (5, 4)] {
+        let mut cfg = serial.clone();
+        cfg.shards = shards;
+        cfg.threads = threads;
+        assert_bit_identical(
+            &format!("push shards={shards} threads={threads} vs serial"),
+            &reference,
+            &run_collect(&cfg),
+        );
+    }
+}
+
+#[test]
+fn fixed_graph_shard_grid_is_invariant() {
+    let mut serial = base_cfg();
+    serial.topology = rpel::config::Topology::FixedGraph { edges: 24 };
+    serial.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
+    serial.shards = 1;
+    serial.threads = 1;
+    let reference = run_collect(&serial);
+    for (shards, threads) in [(2usize, 1usize), (2, 4), (5, 1), (5, 4)] {
+        let mut cfg = serial.clone();
+        cfg.shards = shards;
+        cfg.threads = threads;
+        assert_bit_identical(
+            &format!("graph shards={shards} threads={threads} vs serial"),
+            &reference,
+            &run_collect(&cfg),
+        );
     }
 }
 

@@ -1,0 +1,41 @@
+//! Large-n memory-diet smoke: the digest-based attack context must let a
+//! 2048-node round run without materializing per-victim full scans
+//! (ALIE is O(d) per victim; peak round state is the O(h·d) shard
+//! buffers plus one O(d) digest — no O(h²) anything).
+//!
+//! Ignored by default (it is a CI smoke, not a unit test): run with
+//! `cargo test --release --test large_n -- --ignored`.
+
+use rpel::attacks::AttackKind;
+use rpel::config::{EngineKind, ExperimentConfig, Topology};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+
+#[test]
+#[ignore = "large-n CI smoke (seconds in release, slow in debug)"]
+fn n2048_two_rounds_native_alie() {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = "large_n_smoke".into();
+    cfg.n = 2048;
+    cfg.b = 204; // ~10% Byzantine
+    cfg.topology = Topology::Epidemic { s: 8 };
+    cfg.bhat = Some(3);
+    cfg.attack = AttackKind::Alie;
+    cfg.rounds = 2;
+    cfg.batch = 8;
+    cfg.samples_per_node = 16;
+    cfg.test_samples = 64;
+    cfg.eval_every = 1000; // final-round eval only
+    cfg.engine = EngineKind::Native;
+    cfg.threads = 0; // all cores
+    cfg.shards = 4;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    assert_eq!(t.honest_count(), 2048 - 204);
+    assert_eq!(t.shard_count(), 4);
+    let hist = t.run().unwrap();
+    assert_eq!(hist.train_loss.len(), 2);
+    assert!(hist.train_loss.iter().all(|l| l.is_finite()));
+    // every honest node saw at most b Byzantine rows
+    assert!(hist.observed_byz_max.iter().all(|&m| m <= cfg.b));
+    assert_eq!(hist.evals.len(), 1, "final-round eval only");
+}
