@@ -121,6 +121,9 @@ pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
     if let Some(shards) = get_usize(&doc, "shards")? {
         cfg.shards = shards;
     }
+    if let Some(procs) = get_usize(&doc, "procs")? {
+        cfg.procs = procs;
+    }
 
     if let Some(n) = get_usize(&doc, "nodes.n")? {
         cfg.n = n;
@@ -160,7 +163,10 @@ pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
     }
 
     if let Some(rule) = get_str(&doc, "robustness.rule")? {
-        cfg.rule = if matches!(cfg.topology, Topology::Epidemic { .. }) {
+        cfg.rule = if matches!(
+            cfg.topology,
+            Topology::Epidemic { .. } | Topology::EpidemicPush { .. }
+        ) {
             RuleChoice::Epidemic(
                 RuleKind::parse(rule).ok_or_else(|| format!("unknown rule '{rule}'"))?,
             )
@@ -243,6 +249,122 @@ pub fn load(path: &str) -> Result<ExperimentConfig, String> {
     let text =
         std::fs::read_to_string(path).map_err(|e| format!("cannot read '{path}': {e}"))?;
     from_toml_str(&text)
+}
+
+// ---------------------------------------------------------------------------
+// Serialization (the coordinator ships the exact config to every
+// `rpel shard-worker` over the wire; `from_toml_str(to_toml_str(cfg))`
+// must reproduce `cfg` field-for-field)
+// ---------------------------------------------------------------------------
+
+/// Escape a string for a double-quoted TOML value.
+fn toml_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Shortest decimal that round-trips (Rust's float `Display` guarantees
+/// this per type; for f32 the reparse-via-f64 double rounding is exact
+/// because the shortest decimal uniquely identifies the f32 and f64 has
+/// surplus precision); a trailing `.0` is appended for integral values
+/// so the TOML parser yields a float, though `as_f64` accepts integers
+/// anyway.
+fn fmt_num<T: std::fmt::Display>(v: T) -> String {
+    let s = format!("{v}");
+    // non-finite values ("inf"/"-inf"/"NaN") must not grow a ".0" — the
+    // parser accepts the bare spellings (config validation rejects them
+    // anyway, so they never reach a shard worker)
+    if s.contains('.') || s.contains('e') || s.contains('E') || s.contains("inf") || s.contains("NaN")
+    {
+        s
+    } else {
+        format!("{s}.0")
+    }
+}
+
+fn fmt_float(v: f64) -> String {
+    fmt_num(v)
+}
+
+fn fmt_f32(v: f32) -> String {
+    fmt_num(v)
+}
+
+/// Serialize a config to the TOML schema [`from_toml_str`] reads. Every
+/// semantics-bearing field is emitted, so parsing the output reproduces
+/// the config exactly (floats round-trip through shortest-decimal
+/// printing, which uniquely identifies the original f32/f64 value).
+pub fn to_toml_str(cfg: &ExperimentConfig) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("name = \"{}\"\n", toml_escape(&cfg.name)));
+    out.push_str(&format!("task = \"{}\"\n", cfg.task.name()));
+    out.push_str(&format!("arch = \"{}\"\n", toml_escape(&cfg.arch)));
+    out.push_str(&format!("engine = \"{}\"\n", cfg.engine.name()));
+    out.push_str(&format!(
+        "artifacts_dir = \"{}\"\n",
+        toml_escape(&cfg.artifacts_dir)
+    ));
+    out.push_str(&format!("seed = {}\n", cfg.seed));
+    out.push_str(&format!("threads = {}\n", cfg.threads));
+    out.push_str(&format!("shards = {}\n", cfg.shards));
+    out.push_str(&format!("procs = {}\n", cfg.procs));
+
+    out.push_str("\n[nodes]\n");
+    out.push_str(&format!("n = {}\n", cfg.n));
+    out.push_str(&format!("byzantine = {}\n", cfg.b));
+
+    out.push_str("\n[topology]\n");
+    match cfg.topology {
+        Topology::Epidemic { s } => {
+            out.push_str("kind = \"epidemic\"\n");
+            out.push_str(&format!("s = {s}\n"));
+        }
+        Topology::EpidemicPush { s } => {
+            out.push_str("kind = \"epidemic_push\"\n");
+            out.push_str(&format!("s = {s}\n"));
+        }
+        Topology::FixedGraph { edges } => {
+            out.push_str("kind = \"fixed_graph\"\n");
+            out.push_str(&format!("edges = {edges}\n"));
+        }
+    }
+
+    out.push_str("\n[robustness]\n");
+    out.push_str(&format!("rule = \"{}\"\n", cfg.rule.name()));
+    out.push_str(&format!("attack = \"{}\"\n", cfg.attack.name()));
+    if let Some(bhat) = cfg.bhat {
+        out.push_str(&format!("bhat = {bhat}\n"));
+    }
+
+    out.push_str("\n[training]\n");
+    out.push_str(&format!("rounds = {}\n", cfg.rounds));
+    out.push_str(&format!("batch = {}\n", cfg.batch));
+    out.push_str(&format!("local_steps = {}\n", cfg.local_steps));
+    let lr: Vec<String> = cfg
+        .lr_schedule
+        .iter()
+        .map(|&(round, v)| format!("[{round}, {}]", fmt_f32(v)))
+        .collect();
+    out.push_str(&format!("lr = [{}]\n", lr.join(", ")));
+    out.push_str(&format!("momentum = {}\n", fmt_f32(cfg.momentum)));
+    out.push_str(&format!("weight_decay = {}\n", fmt_f32(cfg.weight_decay)));
+
+    out.push_str("\n[data]\n");
+    out.push_str(&format!("alpha = {}\n", fmt_float(cfg.alpha)));
+    out.push_str(&format!("samples_per_node = {}\n", cfg.samples_per_node));
+    out.push_str(&format!("test_samples = {}\n", cfg.test_samples));
+    out.push_str(&format!("eval_every = {}\n", cfg.eval_every));
+    out
 }
 
 #[cfg(test)]
@@ -350,6 +472,67 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.lr_schedule.len(), 3);
         assert_eq!(cfg.lr_at(700), 0.1);
+    }
+
+    #[test]
+    fn procs_parsed_with_in_process_default() {
+        let cfg = from_toml_str("task = \"tiny\"\nprocs = 2").unwrap();
+        assert_eq!(cfg.procs, 2);
+        let cfg = from_toml_str("task = \"tiny\"").unwrap();
+        assert_eq!(cfg.procs, 1, "default must be the in-process engine");
+    }
+
+    /// `to_toml_str` is what the coordinator ships to every shard-worker
+    /// process: a parse of the output must reproduce the config
+    /// field-for-field, or workers would silently build a different world.
+    #[test]
+    fn toml_serialization_round_trips_exactly() {
+        use crate::config::presets;
+
+        let mut push_cfg = crate::config::ExperimentConfig::default_for(TaskKind::Tiny);
+        push_cfg.name = "push \"quoted\"/weird".into();
+        push_cfg.topology = Topology::EpidemicPush { s: 4 };
+        push_cfg.b = 2;
+        push_cfg.n = 11;
+        push_cfg.bhat = None;
+        push_cfg.attack = AttackKind::Dos;
+        push_cfg.lr_schedule = vec![(0, 0.5), (500, 0.1), (1000, 0.02)];
+        push_cfg.weight_decay = 1e-4;
+        push_cfg.threads = 3;
+        push_cfg.shards = 2;
+        push_cfg.procs = 2;
+
+        let mut graph_cfg = crate::config::ExperimentConfig::default_for(TaskKind::MnistLike);
+        graph_cfg.topology = Topology::FixedGraph { edges: 60 };
+        graph_cfg.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
+        graph_cfg.alpha = 0.3;
+        graph_cfg.seed = 12345;
+
+        for cfg in [
+            presets::quickstart_config(),
+            from_toml_str(FULL).unwrap(),
+            push_cfg,
+            graph_cfg,
+        ] {
+            let text = to_toml_str(&cfg);
+            let back = from_toml_str(&text)
+                .unwrap_or_else(|e| panic!("reparse failed: {e}\n---\n{text}"));
+            assert_eq!(back, cfg, "round-trip mismatch for:\n{text}");
+        }
+    }
+
+    #[test]
+    fn float_formatting_keeps_integral_values_parseable() {
+        assert_eq!(fmt_float(1.0), "1.0");
+        assert_eq!(fmt_float(0.3), "0.3");
+        assert_eq!(fmt_f32(0.9), "0.9");
+        assert_eq!(fmt_f32(1e-4), "0.0001");
+        assert_eq!(fmt_f32(2.0), "2.0");
+        // non-finite values must not grow a ".0" suffix ("inf.0" would
+        // not parse); validation keeps them out of real configs
+        assert_eq!(fmt_f32(f32::INFINITY), "inf");
+        assert_eq!(fmt_float(f64::NEG_INFINITY), "-inf");
+        assert_eq!(fmt_float(f64::NAN), "NaN");
     }
 
     #[test]

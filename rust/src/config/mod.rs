@@ -74,7 +74,7 @@ impl EngineKind {
 }
 
 /// Complete specification of one training run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
     pub name: String,
     pub task: TaskKind,
@@ -116,6 +116,13 @@ pub struct ExperimentConfig {
     /// Results are bit-identical for every value — the determinism suite
     /// enforces the full (shards × threads) grid.
     pub shards: usize,
+    /// Shard **processes** for the round engine (`--procs`, default 1).
+    /// With `procs > 1` the honest nodes are partitioned into that many
+    /// contiguous ranges, each owned by a spawned `rpel shard-worker`
+    /// process that ships its round digest over the wire; `1` keeps every
+    /// shard in-process. Results are bit-identical for every value — the
+    /// determinism suite pins `--procs 2` against the in-process engine.
+    pub procs: usize,
 }
 
 impl ExperimentConfig {
@@ -146,6 +153,7 @@ impl ExperimentConfig {
             artifacts_dir: "artifacts".to_string(),
             threads: 0,
             shards: 1,
+            procs: 1,
         }
     }
 
@@ -165,11 +173,17 @@ impl ExperimentConfig {
         self.n - self.b
     }
 
-    /// Messages exchanged per round: n·s for epidemic pulls, 2·|E| for a
-    /// gossip round (each edge carries one model in each direction) —
-    /// the communication-budget bookkeeping behind figures 4–7. In push
-    /// mode the Byzantine nodes flood (b·|H| extra messages): exactly the
-    /// cost asymmetry the pull design removes.
+    /// **Nominal** messages exchanged per round: n·s for epidemic pulls,
+    /// 2·|E| for a gossip round (each edge carries one model in each
+    /// direction) — the communication-budget bookkeeping behind figures
+    /// 4–7. In push mode the Byzantine nodes flood (b·|H| extra
+    /// messages): exactly the cost asymmetry the pull design removes.
+    ///
+    /// This is the protocol's *budget*, not what actually arrives: DoS
+    /// rounds withhold every Byzantine response and push mode wastes
+    /// pushes addressed to Byzantine recipients. The per-round *delivered*
+    /// count (models honest nodes actually received) is recorded by the
+    /// trainer in [`crate::metrics::History::delivered_per_round`].
     pub fn messages_per_round(&self) -> usize {
         match self.topology {
             Topology::Epidemic { s } => self.n * s,
@@ -241,11 +255,20 @@ impl ExperimentConfig {
         if self.shards == 0 {
             return Err("shards must be >= 1 (it partitions the honest nodes)".into());
         }
+        if self.procs == 0 {
+            return Err("procs must be >= 1 (shard processes; 1 = in-process)".into());
+        }
         if self.lr_schedule.is_empty() {
             return Err("empty lr schedule".into());
         }
         if !(0.0..1.0).contains(&(self.momentum as f64)) {
             return Err(format!("momentum {} outside [0,1)", self.momentum));
+        }
+        if !self.alpha.is_finite()
+            || !self.weight_decay.is_finite()
+            || self.lr_schedule.iter().any(|&(_, lr)| !lr.is_finite())
+        {
+            return Err("alpha, weight_decay, and lr values must be finite".into());
         }
         Ok(())
     }
@@ -312,6 +335,28 @@ mod tests {
         cfg.shards = 0;
         assert!(cfg.validate().unwrap_err().contains("shards"));
         cfg.shards = 5;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_non_finite_floats() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.weight_decay = f32::INFINITY;
+        assert!(cfg.validate().unwrap_err().contains("finite"));
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.alpha = f64::NAN;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.lr_schedule = vec![(0, f32::NAN)];
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_procs() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.procs = 0;
+        assert!(cfg.validate().unwrap_err().contains("procs"));
+        cfg.procs = 2;
         assert!(cfg.validate().is_ok());
     }
 

@@ -56,12 +56,21 @@ impl TomlValue {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {msg}")]
+/// Parse error with line number. (Manual `Display`/`Error` impls —
+/// `thiserror` is not in the offline crate set.)
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// Parse a TOML document into dotted-path → value.
 pub fn parse(input: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
@@ -106,10 +115,17 @@ pub fn parse(input: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
 }
 
 fn strip_comment(line: &str) -> &str {
-    // a '#' outside a quoted string starts a comment
+    // a '#' outside a quoted string starts a comment; backslash escapes
+    // inside strings (\" \\ …) never toggle the string state
     let mut in_str = false;
+    let mut escaped = false;
     for (i, c) in line.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
         match c {
+            '\\' if in_str => escaped = true,
             '"' => in_str = !in_str,
             '#' if !in_str => return &line[..i],
             _ => {}
@@ -126,10 +142,7 @@ fn parse_value(s: &str) -> Result<TomlValue, String> {
         let inner = rest
             .strip_suffix('"')
             .ok_or_else(|| "unterminated string".to_string())?;
-        if inner.contains('"') {
-            return Err("embedded quote (escapes unsupported)".into());
-        }
-        return Ok(TomlValue::Str(inner.to_string()));
+        return Ok(TomlValue::Str(unescape(inner)?));
     }
     if let Some(rest) = s.strip_prefix('[') {
         let inner = rest
@@ -160,14 +173,54 @@ fn parse_value(s: &str) -> Result<TomlValue, String> {
     Err(format!("cannot parse value '{s}'"))
 }
 
+/// Decode the basic-string escapes the writer in [`super::file`] emits
+/// (`\"`, `\\`, `\n`, `\r`, `\t`); a bare `"` cannot reach here (the
+/// escape-aware tokenizers treat it as the string terminator), and an
+/// unknown or dangling escape is an error.
+fn unescape(s: &str) -> Result<String, String> {
+    if !s.contains('\\') {
+        if s.contains('"') {
+            return Err("unescaped quote inside string".into());
+        }
+        return Ok(s.to_string());
+    }
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            if c == '"' {
+                return Err("unescaped quote inside string".into());
+            }
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some(other) => return Err(format!("unsupported escape '\\{other}'")),
+            None => return Err("dangling escape at end of string".into()),
+        }
+    }
+    Ok(out)
+}
+
 /// Split an inline-array body on commas not nested in brackets/strings.
 fn split_top_level(s: &str) -> Vec<&str> {
     let mut parts = Vec::new();
     let mut depth = 0usize;
     let mut in_str = false;
+    let mut escaped = false;
     let mut start = 0usize;
     for (i, c) in s.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
         match c {
+            '\\' if in_str => escaped = true,
             '"' => in_str = !in_str,
             '[' if !in_str => depth += 1,
             ']' if !in_str => depth = depth.saturating_sub(1),
@@ -241,5 +294,23 @@ mod tests {
         let m = parse("a = []\nb = \"\"").unwrap();
         assert_eq!(m["a"].as_array().unwrap().len(), 0);
         assert_eq!(m["b"].as_str().unwrap(), "");
+    }
+
+    #[test]
+    fn escaped_strings_round_trip() {
+        // the escapes config::file::to_toml_str emits must parse back
+        let m = parse(r#"name = "push \"quoted\"/weird\\end""#).unwrap();
+        assert_eq!(m["name"].as_str().unwrap(), "push \"quoted\"/weird\\end");
+        let m = parse(r#"s = "tab\there # not a comment""#).unwrap();
+        assert_eq!(m["s"].as_str().unwrap(), "tab\there # not a comment");
+        // an escaped quote must not end the string for the comment scanner
+        let m = parse("x = \"a\\\"# still string\" # real comment").unwrap();
+        assert_eq!(m["x"].as_str().unwrap(), "a\"# still string");
+    }
+
+    #[test]
+    fn bad_escapes_rejected() {
+        assert!(parse(r#"s = "bad \q escape""#).is_err());
+        assert!(parse("s = \"dangling\\\"").is_err());
     }
 }

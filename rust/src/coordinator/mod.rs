@@ -16,58 +16,73 @@
 //! snapshot (synchronous model, §3.3) — nodes never see intra-round
 //! updates of their peers.
 //!
-//! # Shard-partitioned round engine
+//! # Two shard backends, one round protocol
 //!
-//! Honest-node state is partitioned into [`shard::NodeShard`]s, each
-//! owning a **contiguous range of honest nodes** (params, momentum, data
-//! shards, half/next buffers). [`Trainer`] is an orchestrator over
-//! `Vec<NodeShard>`; every round runs the explicit shard protocol:
+//! Honest-node state is partitioned into contiguous shards, each hosted
+//! by a [`shard::ShardBackend`]:
 //!
-//! 1. **half-step** — every owned node's local train step, data-parallel
-//!    over all shards' nodes;
-//! 2. **publish + digest** — each shard publishes a read-only
-//!    [`shard::RoundDigest`] of its half-steps; the coordinator folds
-//!    them, in ascending honest-node order, into one
-//!    [`crate::attacks::HonestDigest`] (count, coordinate-wise mean/std,
-//!    prev-mean — all f64). This is the only all-nodes reduction in the
-//!    round, and it is what the omniscient adversary conditions on:
-//!    crafting is O(d) per victim, and no victim ever borrows the full
-//!    honest population (the former `honest_all`, an O(h²·d) round cost
-//!    under ALIE);
+//! * [`shard::NodeShard`] — **in-process**: the shard's nodes live in the
+//!   coordinator's address space and every phase runs data-parallel on
+//!   the persistent [`crate::util::pool::WorkerPool`];
+//! * [`proc::ProcessShard`] — **multi-process** (`--procs N`): the shard
+//!   lives in a spawned `rpel shard-worker` process that rebuilds the
+//!   identical world from the shipped config and speaks the
+//!   length-prefixed round protocol of [`crate::wire`] over pipes.
+//!
+//! [`Trainer`] is an orchestrator over `Vec<Box<dyn ShardBackend>>` and
+//! owns the **round tables** — half-step rows, the committed-params
+//! mirror, and the per-node loss / byz-seen / delivered counters, all in
+//! ascending honest order. Every round:
+//!
+//! 1. **half-step** — `half_step_begin` to every backend (remote shards
+//!    start computing), then `half_step_end` collects each shard's rows
+//!    into the half-step table (remote shards ship their [`RoundDigest
+//!    payload`](crate::wire::proto::FromWorker::Snapshot) — the same rows
+//!    an in-process shard writes by reference);
+//! 2. **digest** — the coordinator folds the table rows, in ascending
+//!    honest-node order, into one [`HonestDigest`] (count, f64
+//!    coordinate-wise mean/std, prev-mean). This is the only all-nodes
+//!    reduction in the round and the only thing the omniscient adversary
+//!    conditions on: crafting is O(d) per victim;
 //! 3. **push routes** (push-mode ablation only) — sender → recipient
-//!    scatter (serial; cheap index shuffling);
-//! 4. **pull + craft + aggregate** — per victim: draw `S_i^t`, pull
-//!    exactly those rows from the published shard snapshots, craft the
-//!    malicious rows against the digest, aggregate into the victim
-//!    shard's next buffer;
-//! 5. **commit** — each shard's synchronous swap.
+//!    scatter, reproducible from counter-keyed streams;
+//! 4. **pull + craft + aggregate** — `aggregate_begin` broadcasts the
+//!    digest + half-step table (a borrow in-process, a wire payload
+//!    cross-process); each victim pulls exactly its sampled rows, the
+//!    adversary crafts against the digest, and the rule aggregates into
+//!    the shard's next buffers; `aggregate_end` collects per-node
+//!    byz-seen and **delivered-message** counts;
+//! 5. **commit** — the synchronous swap; every backend refreshes its
+//!    slice of the committed-params mirror, which is what keeps
+//!    evaluation and [`Trainer::params_of`] local and O(1) for both
+//!    engines.
 //!
-//! # Persistent worker pool
+//! # Message accounting
 //!
-//! The per-node phases (1, 4, eval) are data-parallel on a
-//! [`crate::util::pool::WorkerPool`]: `threads − 1` long-lived workers
-//! plus the coordinator thread, fed via channels — no scoped-thread
-//! respawn per phase, and per-worker scratch (gradient buffers, attack
-//! crafting rows) lives in thread-locals that survive across rounds.
-//! `threads` comes from [`ExperimentConfig::threads`] (`--threads`; `0` =
-//! all cores, `1` = inline serial); the shard count from
-//! [`ExperimentConfig::shards`] (`--shards`, default 1).
+//! [`crate::config::ExperimentConfig::messages_per_round`] is the
+//! protocol's *nominal* budget (the paper's communication axis). What
+//! actually arrives differs exactly in the adversarial regimes the paper
+//! characterizes: DoS withholds every Byzantine response, and push mode
+//! wastes pushes addressed to Byzantine recipients while Byzantine
+//! senders flood. The engine therefore counts, per victim per round, the
+//! model rows actually received (phase 4) and records the sum in
+//! [`History::delivered_per_round`] alongside the nominal budget.
 //!
 //! # Determinism
 //!
-//! Results are **bit-identical for every (shards × threads)
+//! Results are **bit-identical for every (procs × shards × threads)
 //! combination**: all round-path randomness comes from counter-based
 //! streams keyed `(seed, round, node, purpose)`
-//! ([`crate::util::rng::Rng::stream`]) so no draw depends on scheduling
-//! or partitioning; the digest is folded serially in ascending
-//! honest-node order regardless of shard boundaries; and scalar
-//! reductions (loss mean, observed-b̂ max) collect per-node values and
-//! fold them serially in index order. `rust/tests/determinism.rs`
-//! enforces the grid. This is the stepping stone to multi-process
-//! shards: a remote shard ships the same `RoundDigest` payload its
-//! in-process twin publishes by borrow.
+//! ([`crate::util::rng::Rng::stream`]) so no draw depends on scheduling,
+//! partitioning, or process placement; the digest is folded serially in
+//! ascending honest-node order regardless of shard boundaries; scalar
+//! reductions collect per-node values and fold them serially in index
+//! order; and the wire codec ships IEEE-754 bit patterns, never text.
+//! `rust/tests/determinism.rs` enforces the grid, including `--procs 2`
+//! against the in-process engine.
 
 pub mod engine;
+pub mod proc;
 pub mod sampler;
 pub(crate) mod shard;
 
@@ -76,21 +91,20 @@ pub use sampler::PullSampler;
 
 use crate::aggregation::gossip::GossipAggregator;
 use crate::aggregation::Aggregator;
-use crate::attacks::{Attack, AttackContext, HonestDigest};
+use crate::attacks::{Attack, HonestDigest};
 use crate::config::{EngineKind, ExperimentConfig, RuleChoice, Topology};
 use crate::data::partition_dirichlet;
 use crate::graph::Graph;
 use crate::metrics::{EvalPoint, History};
 use crate::runtime::{AggregateExec, Runtime};
 use crate::util::pool::WorkerPool;
-use crate::util::rng::{stream_tag, Rng};
+use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
-use shard::{NodeShard, NodeState};
-use std::cell::RefCell;
+use shard::{AggCtx, NodeShard, NodeState, ShardBackend, StepCtx};
 use std::time::Instant;
 
 /// Which aggregation backend executes step 4.
-enum AggBackend {
+pub(crate) enum AggBackend {
     /// Native Definition-5.1 rule over the pulled set.
     Native(Box<dyn Aggregator>),
     /// The AOT Pallas NNM∘CWTM executable (production path).
@@ -109,24 +123,235 @@ impl AggBackend {
     }
 }
 
-/// One node's slot in the parallel half-step phase.
-struct HalfStepJob<'a> {
-    node: &'a mut NodeState,
-    half: &'a mut Vec<f32>,
-    loss: &'a mut f64,
+/// Everything one address space needs to host (part of) a run: the
+/// compute engine, the resolved adversary, per-node state for **all**
+/// honest nodes, and the topology. Both the coordinator and every
+/// `rpel shard-worker` process build this from the same config — all
+/// construction randomness forks off the experiment seed, so two worlds
+/// built from equal configs are bit-identical.
+pub(crate) struct World {
+    pub cfg: ExperimentConfig,
+    pub engine: Box<dyn ComputeEngine>,
+    pub agg: AggBackend,
+    pub attack: Option<Box<dyn Attack>>,
+    pub bhat: usize,
+    pub byz: Vec<bool>,
+    pub node_of: Vec<usize>,
+    pub nodes: Vec<NodeState>,
+    pub sampler: Option<PullSampler>,
+    pub push_s: Option<usize>,
+    pub gossip_rows: Option<Vec<Vec<(usize, f64)>>>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+    pub d: usize,
 }
 
-/// One victim's slot in the parallel pull/craft/aggregate phase.
-struct AggJob<'a> {
-    out: &'a mut Vec<f32>,
-    byz_seen: &'a mut usize,
+/// Build the full world from a config: engine, adversary placement, b̂
+/// resolution (Algorithm 2 when unset), node states, topology.
+pub(crate) fn build_world(cfg: &ExperimentConfig) -> Result<World> {
+    build_world_impl(cfg, true)
 }
 
-thread_local! {
-    /// Per-worker crafting scratch (`b` rows of length d). Thread-local so
-    /// the persistent pool's workers retain it across rounds instead of
-    /// reallocating per dispatch.
-    static CRAFT_ROWS: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+/// [`build_world`] without materializing per-node state (`nodes` comes
+/// back empty): what a multi-process coordinator needs — every worker
+/// rebuilds its own nodes anyway, and sampling h nodes' data and params
+/// here would only be dropped. The RNG **fork sequence is kept
+/// identical** (each skipped node still consumes its `0x5AD + id` fork),
+/// so the graph topology and everything after the node loop match the
+/// full build bit-for-bit; the test set is drawn before the node loop,
+/// so skipping the per-node data draws cannot shift it.
+pub(crate) fn build_world_lite(cfg: &ExperimentConfig) -> Result<World> {
+    build_world_impl(cfg, false)
+}
+
+fn build_world_impl(cfg: &ExperimentConfig, materialize_nodes: bool) -> Result<World> {
+    cfg.validate().map_err(|e| anyhow!("invalid config: {e}"))?;
+    let mut cfg = cfg.clone();
+    let mut rng = Rng::new(cfg.seed);
+
+    // --- compute engine -------------------------------------------------
+    let mut runtime = match cfg.engine {
+        EngineKind::Hlo => Some(
+            Runtime::open(&cfg.artifacts_dir)
+                .context("HLO engine requires built artifacts")?,
+        ),
+        EngineKind::Native => None,
+    };
+    let engine = build_engine(&cfg, runtime.as_mut())?;
+    if engine.batch() != cfg.batch {
+        log::info!(
+            "batch {} overridden to {} (baked into HLO artifact)",
+            cfg.batch,
+            engine.batch()
+        );
+        cfg.batch = engine.batch();
+    }
+    let d = engine.d();
+
+    // --- resolve b̂ (Algorithm 2 / §6.1) --------------------------------
+    // b̂ resolution uses Appendix B Remark 2's "more precise" method:
+    // the exact 90%-quantile of max_{i,t} b_i^t from the closed-form
+    // hypergeometric CDF (deterministic; Algorithm 2's simulation is
+    // available via `rpel select` / sampling::select_params).
+    const BHAT_CONFIDENCE: f64 = 0.9;
+    let bhat = match (cfg.bhat, &cfg.topology) {
+        (Some(bh), _) => bh,
+        (None, _) if cfg.b == 0 => 0,
+        // push mode deliberately reuses the pull-mode b̂ (Appendix D:
+        // flooding voids the hypergeometric bound — that mismatch IS
+        // the ablation)
+        (None, Topology::Epidemic { s }) | (None, Topology::EpidemicPush { s }) => {
+            crate::sampling::selector::select_bhat_exact(
+                cfg.n as u64,
+                cfg.b as u64,
+                cfg.rounds as u64,
+                *s as u64,
+                BHAT_CONFIDENCE,
+            ) as usize
+        }
+        (None, Topology::FixedGraph { .. }) => {
+            // Remark C.2: under random placement use the same b̂ an
+            // epidemic run of equal budget would use
+            let s_equiv = (2 * cfg.messages_per_round() / cfg.n).clamp(1, cfg.n - 1);
+            crate::sampling::selector::select_bhat_exact(
+                cfg.n as u64,
+                cfg.b as u64,
+                cfg.rounds as u64,
+                s_equiv as u64,
+                BHAT_CONFIDENCE,
+            ) as usize
+        }
+    };
+    if let Topology::Epidemic { s } = cfg.topology {
+        if cfg.b > 0 && 2 * bhat >= s + 1 {
+            bail!(
+                "effective adversarial fraction {bhat}/{} ≥ 1/2 — robust \
+                 aggregation breaks down (paper §6.2); increase s or reduce b",
+                s + 1
+            );
+        }
+    }
+
+    // --- aggregation backend -------------------------------------------
+    let agg = match (&cfg.topology, cfg.rule) {
+        (Topology::Epidemic { s }, RuleChoice::Epidemic(kind)) => {
+            // DoS shrinks receive sets; the fixed-shape Pallas
+            // executable cannot apply, so fall back to the native rule
+            let want_hlo = cfg.engine == EngineKind::Hlo
+                && kind == crate::aggregation::RuleKind::NnmCwtm
+                && cfg.attack != crate::attacks::AttackKind::Dos;
+            if want_hlo {
+                let rt = runtime.as_mut().unwrap();
+                match rt.aggregate_exec(&cfg.arch, s + 1, bhat) {
+                    Ok(exec) => AggBackend::Hlo(exec),
+                    Err(e) => {
+                        log::warn!(
+                            "no Pallas aggregate artifact (m={}, b̂={bhat}): {e}; \
+                             falling back to native rule",
+                            s + 1
+                        );
+                        AggBackend::Native(kind.build(bhat))
+                    }
+                }
+            } else {
+                AggBackend::Native(kind.build(bhat))
+            }
+        }
+        (Topology::EpidemicPush { .. }, RuleChoice::Epidemic(kind)) => {
+            AggBackend::Native(kind.build(bhat))
+        }
+        (Topology::FixedGraph { .. }, RuleChoice::Gossip(kind)) => {
+            AggBackend::Gossip(kind.build(bhat))
+        }
+        _ => bail!("rule/topology mismatch (config validation bug)"),
+    };
+
+    // --- adversary placement (uniform random, Remark C.1) ---------------
+    let mut byz = vec![false; cfg.n];
+    for id in rng.fork(0xB12).sample_distinct(cfg.n, cfg.b) {
+        byz[id] = true;
+    }
+    let attack = if cfg.b > 0 { cfg.attack.build() } else { None };
+
+    // --- data ------------------------------------------------------------
+    let task = cfg.task.spec().instantiate(cfg.seed);
+    let mut data_rng = rng.fork(0xDA7A);
+    let shard_labels = partition_dirichlet(
+        cfg.n,
+        task.spec.classes,
+        cfg.samples_per_node,
+        cfg.alpha,
+        &mut data_rng,
+    );
+    let test_n = if engine.eval_n() > 0 {
+        if engine.eval_n() != cfg.test_samples {
+            log::info!(
+                "test_samples {} overridden to {} (baked into HLO eval artifact)",
+                cfg.test_samples,
+                engine.eval_n()
+            );
+        }
+        engine.eval_n()
+    } else {
+        cfg.test_samples
+    };
+    let test = task.sample_uniform(test_n, &mut data_rng);
+
+    // --- honest node states ----------------------------------------------
+    let mut nodes = Vec::with_capacity(if materialize_nodes { cfg.honest() } else { 0 });
+    let mut node_of = vec![usize::MAX; cfg.n];
+    let mut honest_seen = 0usize;
+    for id in 0..cfg.n {
+        if byz[id] {
+            continue;
+        }
+        node_of[id] = honest_seen;
+        honest_seen += 1;
+        // the fork must be consumed even when the node is skipped, so
+        // the parent stream (and the topology fork below) stays in sync
+        // with a full build
+        let node_rng = rng.fork(0x5AD + id as u64);
+        if !materialize_nodes {
+            continue;
+        }
+        let labels = &shard_labels[id];
+        let data = task.sample_labels(labels, &mut data_rng);
+        let data_shard = crate::data::Shard::new(data, node_rng);
+        let params = engine.init_params(cfg.seed as i32)?;
+        nodes.push(NodeState {
+            id,
+            params,
+            momentum: vec![0.0f32; d],
+            shard: data_shard,
+        });
+    }
+
+    // --- topology ----------------------------------------------------------
+    let (sampler, push_s, gossip_rows) = match cfg.topology {
+        Topology::Epidemic { s } => (Some(PullSampler::new(cfg.n, s)), None, None),
+        Topology::EpidemicPush { s } => (None, Some(s), None),
+        Topology::FixedGraph { edges } => {
+            let g = Graph::random_connected(cfg.n, edges, &mut rng.fork(0x6AF));
+            (None, None, Some(g.metropolis_weights()))
+        }
+    };
+
+    Ok(World {
+        engine,
+        agg,
+        attack,
+        bhat,
+        byz,
+        node_of,
+        nodes,
+        sampler,
+        push_s,
+        gossip_rows,
+        test_x: test.x,
+        test_y: test.y,
+        d,
+        cfg,
+    })
 }
 
 /// A fully constructed training run.
@@ -141,9 +366,14 @@ pub struct Trainer {
     /// per-id Byzantine flag and id → honest-index map
     byz: Vec<bool>,
     node_of: Vec<usize>,
-    /// shard-owned honest node state (contiguous honest-index ranges)
-    shards: Vec<NodeShard>,
-    /// honest count |H| (sum of shard lengths)
+    /// shard backends, ascending contiguous honest ranges — in-process
+    /// [`NodeShard`]s, or one [`proc::ProcessShard`] per worker process
+    backends: Vec<Box<dyn ShardBackend>>,
+    /// whether any backend is in-process (false ⇒ every shard is remote
+    /// and per-round context the workers derive themselves can be
+    /// skipped here)
+    local_backends: bool,
+    /// honest count |H| (sum of backend lengths)
     h: usize,
     sampler: Option<PullSampler>,
     /// push mode (pull-vs-push ablation): fan-out per honest sender
@@ -152,205 +382,108 @@ pub struct Trainer {
     gossip_rows: Option<Vec<Vec<(usize, f64)>>>,
     test_x: Vec<f32>,
     test_y: Vec<i32>,
-    /// persistent worker pool for the per-node phases
+    /// persistent worker pool for the in-process per-node phases
     pool: WorkerPool,
     /// §4.2 telemetry: max Byzantine rows any honest node received in the
     /// last round (the *observed* b̂)
     last_round_byz_max: usize,
+    /// delivered-message ledger: model rows honest nodes actually
+    /// received in the last round
+    last_round_delivered: usize,
     /// per-round digest of the honest population (phase 2 output)
     digest: HonestDigest,
+    /// round table: half-step rows x^{t+1/2}, ascending honest order
+    tbl_halves: Vec<Vec<f32>>,
+    /// round table: committed params mirror x^t (refreshed in phase 5;
+    /// backs `params_of`, evaluation, and the digest's prev-mean fold)
+    tbl_params: Vec<Vec<f32>>,
+    /// round table: per-node train loss of the last half-step phase
+    tbl_losses: Vec<f64>,
+    /// round table: per-node Byzantine rows received in the last round
+    tbl_byz_seen: Vec<usize>,
+    /// round table: per-node model rows received in the last round
+    tbl_recv: Vec<usize>,
 }
 
 impl Trainer {
-    /// Build everything: engine, adversary placement, shards, topology,
-    /// b̂ resolution (Algorithm 2 when unset).
+    /// Build everything: engine, adversary placement, shard backends
+    /// (spawning `rpel shard-worker` processes when `procs > 1`),
+    /// topology, b̂ resolution (Algorithm 2 when unset).
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
-        cfg.validate().map_err(|e| anyhow!("invalid config: {e}"))?;
-        let mut cfg = cfg.clone();
-        let mut rng = Rng::new(cfg.seed);
-
-        // --- compute engine -------------------------------------------------
-        let mut runtime = match cfg.engine {
-            EngineKind::Hlo => Some(
-                Runtime::open(&cfg.artifacts_dir)
-                    .context("HLO engine requires built artifacts")?,
-            ),
-            EngineKind::Native => None,
-        };
-        let engine = build_engine(&cfg, runtime.as_mut())?;
-        if engine.batch() != cfg.batch {
-            log::info!(
-                "batch {} overridden to {} (baked into HLO artifact)",
-                cfg.batch,
-                engine.batch()
-            );
-            cfg.batch = engine.batch();
-        }
-        let d = engine.d();
-
-        // --- resolve b̂ (Algorithm 2 / §6.1) --------------------------------
-        // b̂ resolution uses Appendix B Remark 2's "more precise" method:
-        // the exact 90%-quantile of max_{i,t} b_i^t from the closed-form
-        // hypergeometric CDF (deterministic; Algorithm 2's simulation is
-        // available via `rpel select` / sampling::select_params).
-        const BHAT_CONFIDENCE: f64 = 0.9;
-        let bhat = match (cfg.bhat, &cfg.topology) {
-            (Some(bh), _) => bh,
-            (None, _) if cfg.b == 0 => 0,
-            // push mode deliberately reuses the pull-mode b̂ (Appendix D:
-            // flooding voids the hypergeometric bound — that mismatch IS
-            // the ablation)
-            (None, Topology::Epidemic { s }) | (None, Topology::EpidemicPush { s }) => {
-                crate::sampling::selector::select_bhat_exact(
-                    cfg.n as u64,
-                    cfg.b as u64,
-                    cfg.rounds as u64,
-                    *s as u64,
-                    BHAT_CONFIDENCE,
-                ) as usize
-            }
-            (None, Topology::FixedGraph { .. }) => {
-                // Remark C.2: under random placement use the same b̂ an
-                // epidemic run of equal budget would use
-                let s_equiv = (2 * cfg.messages_per_round() / cfg.n).clamp(1, cfg.n - 1);
-                crate::sampling::selector::select_bhat_exact(
-                    cfg.n as u64,
-                    cfg.b as u64,
-                    cfg.rounds as u64,
-                    s_equiv as u64,
-                    BHAT_CONFIDENCE,
-                ) as usize
-            }
-        };
-        if let Topology::Epidemic { s } = cfg.topology {
-            if cfg.b > 0 && 2 * bhat >= s + 1 {
-                bail!(
-                    "effective adversarial fraction {bhat}/{} ≥ 1/2 — robust \
-                     aggregation breaks down (paper §6.2); increase s or reduce b",
-                    s + 1
-                );
-            }
-        }
-
-        // --- aggregation backend -------------------------------------------
-        let agg = match (&cfg.topology, cfg.rule) {
-            (Topology::Epidemic { s }, RuleChoice::Epidemic(kind)) => {
-                // DoS shrinks receive sets; the fixed-shape Pallas
-                // executable cannot apply, so fall back to the native rule
-                let want_hlo = cfg.engine == EngineKind::Hlo
-                    && kind == crate::aggregation::RuleKind::NnmCwtm
-                    && cfg.attack != crate::attacks::AttackKind::Dos;
-                if want_hlo {
-                    let rt = runtime.as_mut().unwrap();
-                    match rt.aggregate_exec(&cfg.arch, s + 1, bhat) {
-                        Ok(exec) => AggBackend::Hlo(exec),
-                        Err(e) => {
-                            log::warn!(
-                                "no Pallas aggregate artifact (m={}, b̂={bhat}): {e}; \
-                                 falling back to native rule",
-                                s + 1
-                            );
-                            AggBackend::Native(kind.build(bhat))
-                        }
-                    }
-                } else {
-                    AggBackend::Native(kind.build(bhat))
-                }
-            }
-            (Topology::EpidemicPush { .. }, RuleChoice::Epidemic(kind)) => {
-                AggBackend::Native(kind.build(bhat))
-            }
-            (Topology::FixedGraph { .. }, RuleChoice::Gossip(kind)) => {
-                AggBackend::Gossip(kind.build(bhat))
-            }
-            _ => bail!("rule/topology mismatch (config validation bug)"),
-        };
-
-        // --- adversary placement (uniform random, Remark C.1) ---------------
-        let mut byz = vec![false; cfg.n];
-        for id in rng.fork(0xB12).sample_distinct(cfg.n, cfg.b) {
-            byz[id] = true;
-        }
-        let attack = if cfg.b > 0 { cfg.attack.build() } else { None };
-
-        // --- data ------------------------------------------------------------
-        let task = cfg.task.spec().instantiate(cfg.seed);
-        let mut data_rng = rng.fork(0xDA7A);
-        let shard_labels = partition_dirichlet(
-            cfg.n,
-            task.spec.classes,
-            cfg.samples_per_node,
-            cfg.alpha,
-            &mut data_rng,
-        );
-        let test_n = if engine.eval_n() > 0 {
-            if engine.eval_n() != cfg.test_samples {
-                log::info!(
-                    "test_samples {} overridden to {} (baked into HLO eval artifact)",
-                    cfg.test_samples,
-                    engine.eval_n()
-                );
-            }
-            engine.eval_n()
+        let local_backends = cfg.procs <= 1;
+        let World {
+            cfg,
+            engine,
+            agg,
+            attack,
+            bhat,
+            byz,
+            node_of,
+            nodes,
+            sampler,
+            push_s,
+            gossip_rows,
+            test_x,
+            test_y,
+            d,
+        } = if local_backends {
+            build_world(cfg)?
         } else {
-            cfg.test_samples
+            // the workers rebuild their own node state; don't sample h
+            // nodes' data and params here just to drop them
+            build_world_lite(cfg)?
         };
-        let test = task.sample_uniform(test_n, &mut data_rng);
-
-        // --- honest node states ----------------------------------------------
-        let mut nodes = Vec::with_capacity(cfg.honest());
-        let mut node_of = vec![usize::MAX; cfg.n];
-        for id in 0..cfg.n {
-            if byz[id] {
-                continue;
-            }
-            let labels = &shard_labels[id];
-            let data = task.sample_labels(labels, &mut data_rng);
-            let data_shard = crate::data::Shard::new(data, rng.fork(0x5AD + id as u64));
-            node_of[id] = nodes.len();
-            let params = engine.init_params(cfg.seed as i32)?;
-            nodes.push(NodeState {
-                id,
-                params,
-                momentum: vec![0.0f32; d],
-                shard: data_shard,
-            });
-        }
-
-        // --- topology ----------------------------------------------------------
-        let (sampler, push_s, gossip_rows) = match cfg.topology {
-            Topology::Epidemic { s } => (Some(PullSampler::new(cfg.n, s)), None, None),
-            Topology::EpidemicPush { s } => (None, Some(s), None),
-            Topology::FixedGraph { edges } => {
-                let g = Graph::random_connected(cfg.n, edges, &mut rng.fork(0x6AF));
-                (None, None, Some(g.metropolis_weights()))
-            }
+        let h = cfg.honest();
+        debug_assert!(!local_backends || nodes.len() == h);
+        // committed-params mirror starts at the init params (identical
+        // for every node: init is a function of the experiment seed only)
+        let tbl_params: Vec<Vec<f32>> = if local_backends {
+            nodes.iter().map(|node| node.params.clone()).collect()
+        } else {
+            let row = engine.init_params(cfg.seed as i32)?;
+            vec![row; h]
         };
 
-        // --- shard partition: contiguous honest-index ranges -----------------
-        let h = nodes.len();
-        let shard_count = cfg.shards.clamp(1, h.max(1));
-        let mut shards = Vec::with_capacity(shard_count);
-        let base = h / shard_count;
-        let extra = h % shard_count;
-        let mut node_iter = nodes.into_iter();
-        let mut start = 0usize;
-        for k in 0..shard_count {
-            let len = base + usize::from(k < extra);
-            let shard_nodes: Vec<NodeState> = node_iter.by_ref().take(len).collect();
-            shards.push(NodeShard::new(start, shard_nodes, d));
-            start += len;
-        }
+        let backends: Vec<Box<dyn ShardBackend>> = if !local_backends {
+            // multi-process engine: one worker process per contiguous
+            // range; each rebuilds the identical world from the shipped
+            // config
+            let parts = cfg.procs.clamp(1, h.max(1));
+            if parts < cfg.procs {
+                log::info!("procs {} clamped to honest count {parts}", cfg.procs);
+            }
+            drop(nodes);
+            let toml = crate::config::file::to_toml_str(&cfg);
+            let ranges = shard::partition_ranges(h, parts);
+            proc::ProcessShard::spawn_all(&toml, &ranges, parts, d)
+                .with_context(|| format!("starting {parts} shard workers"))?
+                .into_iter()
+                .map(|worker| Box::new(worker) as Box<dyn ShardBackend>)
+                .collect()
+        } else {
+            // in-process engine: contiguous NodeShards
+            let parts = cfg.shards.clamp(1, h.max(1));
+            let ranges = shard::partition_ranges(h, parts);
+            let mut node_iter = nodes.into_iter();
+            ranges
+                .iter()
+                .map(|&(start, len)| {
+                    let shard_nodes: Vec<NodeState> = node_iter.by_ref().take(len).collect();
+                    Box::new(NodeShard::new(start, shard_nodes, d)) as Box<dyn ShardBackend>
+                })
+                .collect()
+        };
 
         let pool = WorkerPool::new(cfg.threads);
         log::info!(
-            "trainer '{}': n={} b={} b̂={bhat} rule={} engine={} d={d} shards={} threads={}",
+            "trainer '{}': n={} b={} b̂={bhat} rule={} engine={} d={d} shards={} procs={} threads={}",
             cfg.name,
             cfg.n,
             cfg.b,
             agg.name(),
             engine.name(),
-            shards.len(),
+            backends.len(),
+            cfg.procs,
             pool.threads()
         );
         Ok(Trainer {
@@ -360,13 +493,20 @@ impl Trainer {
             sampler,
             push_s,
             gossip_rows,
-            test_x: test.x,
-            test_y: test.y,
+            test_x,
+            test_y,
             pool,
             last_round_byz_max: 0,
+            last_round_delivered: 0,
             digest: HonestDigest::new(d),
-            shards,
+            backends,
+            local_backends,
             h,
+            tbl_halves: vec![vec![0.0f32; d]; h],
+            tbl_params,
+            tbl_losses: vec![0.0f64; h],
+            tbl_byz_seen: vec![0usize; h],
+            tbl_recv: vec![0usize; h],
             engine,
             agg,
             attack,
@@ -393,9 +533,22 @@ impl Trainer {
         self.pool.threads()
     }
 
-    /// Resolved shard count (≥ 1, ≤ honest count).
+    /// Resolved shard-backend count (≥ 1, ≤ honest count): `shards`
+    /// in-process shards, or `procs` worker processes.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.backends.len()
+    }
+
+    /// Test hook: forcibly kill the idx-th shard's backing worker
+    /// process. Returns false for in-process backends — used by the
+    /// crash tests to prove a dead worker surfaces as an error, not a
+    /// hang.
+    #[doc(hidden)]
+    pub fn kill_shard_worker(&mut self, idx: usize) -> bool {
+        match self.backends.get_mut(idx) {
+            Some(backend) => backend.kill_for_test(),
+            None => false,
+        }
     }
 
     /// Run the full training; returns the metric history.
@@ -407,6 +560,8 @@ impl Trainer {
             hist.train_loss.push(loss);
             hist.observed_byz_max.push(self.last_round_byz_max);
             hist.total_messages += self.cfg.messages_per_round();
+            hist.delivered_per_round.push(self.last_round_delivered);
+            hist.total_delivered += self.last_round_delivered;
             let last = round + 1 == self.cfg.rounds;
             if last || (round + 1) % self.cfg.eval_every == 0 {
                 hist.evals.push(self.evaluate(round + 1)?);
@@ -418,326 +573,194 @@ impl Trainer {
 
     /// Execute one synchronous round; returns the mean honest train loss.
     ///
-    /// Phases 1 and 4 run data-parallel over all shards' nodes (see the
-    /// module docs); every phase is bit-deterministic for any
-    /// (shards × threads) grid point.
+    /// Every phase is bit-deterministic for any (procs × shards ×
+    /// threads) grid point — see the module docs for the protocol.
     pub fn round(&mut self, round: usize) -> Result<f64> {
         // 1. local half-steps (Algorithm 1 lines 3–6)
         let loss = self.phase_half_steps(round)?;
-        // 2. shards publish their round digests; fold into the global
-        // honest digest the omniscient adversary conditions on
+        // 2. fold the published rows into the global honest digest the
+        // omniscient adversary conditions on
         self.phase_attack_context();
-        // push mode: honest senders scatter to s recipients; Byzantine
+        // 3. push mode: honest senders scatter to s recipients; Byzantine
         // senders flood every honest node (the Appendix-D failure mode)
-        let push_received = self.phase_push_routes(round);
-        // 3.+4. pull, attack, aggregate — against the immutable published
-        // snapshots (synchronous model)
-        self.phase_pull_craft_aggregate(round, push_received.as_ref())?;
-        // 5. synchronous swap, shard by shard
-        for shard in self.shards.iter_mut() {
-            shard.commit();
-        }
+        let push_recv = self.phase_push_routes(round);
+        // 4. pull, attack, aggregate — against the immutable round table
+        // (synchronous model)
+        self.phase_pull_craft_aggregate(round, push_recv.as_deref())?;
+        // 5. synchronous swap, backend by backend; fold the telemetry
+        self.phase_commit()?;
         Ok(loss)
     }
 
-    /// Phase 1: every honest node's local train step, in parallel across
-    /// all shards.
+    /// Phase 1: every honest node's local train step. Remote backends are
+    /// kicked off first so worker processes compute concurrently with the
+    /// in-process shards.
     fn phase_half_steps(&mut self, round: usize) -> Result<f64> {
-        let lr = self.cfg.lr_at(round);
-        let beta = self.cfg.momentum;
-        let wd = self.cfg.weight_decay;
-        let k = self.engine.local_steps();
-        let batch = self.engine.batch();
-        let h = self.h;
-        let engine: &dyn ComputeEngine = self.engine.as_ref();
+        let step_ctx = StepCtx {
+            engine: self.engine.as_ref(),
+            lr: self.cfg.lr_at(round),
+            beta: self.cfg.momentum,
+            wd: self.cfg.weight_decay,
+            local_steps: self.engine.local_steps(),
+            batch: self.engine.batch(),
+        };
+        for backend in self.backends.iter_mut() {
+            backend.half_step_begin(round)?;
+        }
         let pool = &self.pool;
-
-        let mut jobs: Vec<HalfStepJob<'_>> = Vec::with_capacity(h);
-        for shard in self.shards.iter_mut() {
-            for ((node, half), loss) in shard
-                .nodes
-                .iter_mut()
-                .zip(shard.halves.iter_mut())
-                .zip(shard.losses.iter_mut())
-            {
-                jobs.push(HalfStepJob { node, half, loss });
+        if self.local_backends {
+            // flatten all in-process shards into one pool dispatch: no
+            // per-shard barrier, one dispatch per phase (the PR-2 shape)
+            let mut triples = Vec::with_capacity(self.backends.len());
+            let mut halves_rest: &mut [Vec<f32>] = &mut self.tbl_halves;
+            let mut losses_rest: &mut [f64] = &mut self.tbl_losses;
+            for backend in self.backends.iter_mut() {
+                let len = backend.len();
+                let (hm, hr) = std::mem::take(&mut halves_rest).split_at_mut(len);
+                let (lm, lr) = std::mem::take(&mut losses_rest).split_at_mut(len);
+                halves_rest = hr;
+                losses_rest = lr;
+                let shard = backend
+                    .as_node_shard()
+                    .expect("local backends are NodeShards");
+                triples.push((shard, hm, lm));
+            }
+            shard::half_step_shards(triples, &step_ctx, pool)?;
+        } else {
+            for backend in self.backends.iter_mut() {
+                let (start, len) = (backend.start(), backend.len());
+                backend.half_step_end(
+                    round,
+                    &step_ctx,
+                    pool,
+                    &mut self.tbl_halves[start..start + len],
+                    &mut self.tbl_losses[start..start + len],
+                )?;
             }
         }
-        pool.try_for_each(&mut jobs, |_, job| {
-            job.half.copy_from_slice(&job.node.params);
-            // batch draws come from the node's own shard stream — already
-            // independent of scheduling order
-            let b = job.node.shard.next_batches(k, batch);
-            *job.loss = engine.train_step(
-                job.half,
-                &mut job.node.momentum,
-                &b.x,
-                &b.y,
-                lr,
-                beta,
-                wd,
-            )? as f64;
-            Ok(())
-        })?;
-        drop(jobs);
         // serial fold in ascending honest order: identical for every
-        // (shards × threads) grid point
-        let sum: f64 = self.shards.iter().flat_map(|s| s.losses.iter()).sum();
-        Ok(sum / h as f64)
+        // grid point
+        let sum: f64 = self.tbl_losses.iter().sum();
+        Ok(sum / self.h as f64)
     }
 
-    /// Phase 2: fold every shard's published [`shard::RoundDigest`] into
-    /// the global honest digest, in ascending honest-node order (per-shard
-    /// f64 partial sums would make the result depend on the shard
-    /// grouping — see `shard.rs`). Skipped entirely when nothing will read
-    /// it (no Byzantine nodes, or DoS where nothing is crafted); the
-    /// O(h·d) variance pass runs only for ALIE, its sole consumer.
+    /// Phase 2: fold the half-step table into the global honest digest,
+    /// in ascending honest-node order (per-shard f64 partial sums would
+    /// make the result depend on the shard grouping — see `shard.rs`).
+    /// Skipped entirely when nothing will read it (no Byzantine nodes, or
+    /// DoS where nothing is crafted); the O(h·d) variance pass runs only
+    /// for ALIE, its sole consumer.
     fn phase_attack_context(&mut self) {
         use crate::attacks::AttackKind;
         if self.cfg.b == 0 || self.cfg.attack == AttackKind::Dos {
             return;
         }
-        let mut halves: Vec<&[f32]> = Vec::with_capacity(self.h);
-        let mut prevs: Vec<&[f32]> = Vec::with_capacity(self.h);
-        for shard in &self.shards {
-            let published = shard.publish();
-            debug_assert_eq!(published.start, halves.len());
-            for row in published.halves {
-                halves.push(row);
-            }
-            for node in published.nodes {
-                prevs.push(&node.params);
-            }
-        }
+        let halves: Vec<&[f32]> = self.tbl_halves.iter().map(|r| r.as_slice()).collect();
+        let prevs: Vec<&[f32]> = self.tbl_params.iter().map(|r| r.as_slice()).collect();
         let with_std = self.cfg.attack == AttackKind::Alie;
         self.digest.recompute(&halves, &prevs, with_std);
     }
 
     /// Phase 3 (push-mode ablation only): sender → recipient routes. The
     /// scatter for sender `id` comes from the `(seed, round, id, PUSH)`
-    /// stream, so routes are reproducible regardless of iteration order.
+    /// stream, so routes are reproducible regardless of iteration order —
+    /// worker processes derive their victims' rows independently, so with
+    /// no in-process shard there is nothing to compute here.
     fn phase_push_routes(&self, round: usize) -> Option<Vec<Vec<usize>>> {
-        let s = self.push_s?;
-        let mut recv: Vec<Vec<usize>> = vec![Vec::new(); self.h];
-        for shard in &self.shards {
-            for node in &shard.nodes {
-                let id = node.id;
-                let mut rng =
-                    Rng::stream(self.cfg.seed, round as u64, id as u64, stream_tag::PUSH);
-                for dest in rng.sample_distinct_excluding(self.cfg.n, s, id) {
-                    if !self.byz[dest] {
-                        recv[self.node_of[dest]].push(id);
-                    }
-                    // pushes to Byzantine recipients are wasted messages
-                }
-            }
+        if !self.local_backends {
+            return None;
         }
-        Some(recv)
+        let s = self.push_s?;
+        Some(shard::push_routes(
+            self.cfg.seed,
+            round,
+            self.cfg.n,
+            s,
+            &self.byz,
+            &self.node_of,
+            self.h,
+        ))
     }
 
     /// Phase 4: per victim — pull `S_i^t`, craft the malicious rows
-    /// against the digest, robustly aggregate. Parallel over victims
-    /// across all shards; crafting scratch lives in per-worker
-    /// thread-locals that the persistent pool retains across rounds.
+    /// against the digest, robustly aggregate. Remote backends receive
+    /// the digest + table first and compute concurrently.
     fn phase_pull_craft_aggregate(
         &mut self,
         round: usize,
-        push_received: Option<&Vec<Vec<usize>>>,
+        push_recv: Option<&[Vec<usize>]>,
     ) -> Result<()> {
-        let h = self.h;
-        let d = self.digest.mean.len();
-        let dos = self.cfg.attack == crate::attacks::AttackKind::Dos;
-        let seed = self.cfg.seed;
-        let n = self.cfg.n;
-        let b = self.cfg.b;
-        // worst-case malicious rows per victim is b in every topology
-        // (pull sets and graph neighborhoods are duplicate-free, and a
-        // flooding push round delivers each Byzantine node once)
-        let byz_rows_cap = b;
-
-        // immutable round snapshot shared by all workers, assembled from
-        // the shards' published views in ascending honest order — plus the
-        // per-victim output slots (disjoint mutable borrows)
-        let mut jobs: Vec<AggJob<'_>> = Vec::with_capacity(h);
-        let mut all_halves: Vec<&[f32]> = Vec::with_capacity(h);
-        let mut all_prevs: Vec<&[f32]> = Vec::with_capacity(h);
-        let mut ids: Vec<usize> = Vec::with_capacity(h);
-        for shard in self.shards.iter_mut() {
-            let (nodes, halves, next, byz_seen) = shard.split_aggregate();
-            for node in nodes {
-                ids.push(node.id);
-                all_prevs.push(&node.params);
+        let ctx = AggCtx {
+            agg: &self.agg,
+            attack: self.attack.as_deref(),
+            digest: &self.digest,
+            halves: &self.tbl_halves,
+            push_recv,
+            byz: &self.byz,
+            node_of: &self.node_of,
+            sampler: self.sampler,
+            gossip_rows: self.gossip_rows.as_deref(),
+            seed: self.cfg.seed,
+            n: self.cfg.n,
+            b: self.cfg.b,
+            dos: self.cfg.attack == crate::attacks::AttackKind::Dos,
+            wire_frame: std::sync::OnceLock::new(),
+        };
+        for backend in self.backends.iter_mut() {
+            backend.aggregate_begin(round, &ctx)?;
+        }
+        let pool = &self.pool;
+        if self.local_backends {
+            // flatten all in-process shards into one pool dispatch
+            let mut triples = Vec::with_capacity(self.backends.len());
+            let mut byz_rest: &mut [usize] = &mut self.tbl_byz_seen;
+            let mut recv_rest: &mut [usize] = &mut self.tbl_recv;
+            for backend in self.backends.iter_mut() {
+                let len = backend.len();
+                let (bm, br) = std::mem::take(&mut byz_rest).split_at_mut(len);
+                let (rm, rr) = std::mem::take(&mut recv_rest).split_at_mut(len);
+                byz_rest = br;
+                recv_rest = rr;
+                let shard = backend
+                    .as_node_shard()
+                    .expect("local backends are NodeShards");
+                triples.push((shard, bm, rm));
             }
-            for row in halves {
-                all_halves.push(row);
-            }
-            for (out, seen) in next.iter_mut().zip(byz_seen.iter_mut()) {
-                jobs.push(AggJob {
-                    out,
-                    byz_seen: seen,
-                });
+            shard::aggregate_shards(triples, round, &ctx, pool)?;
+        } else {
+            for backend in self.backends.iter_mut() {
+                let (start, len) = (backend.start(), backend.len());
+                backend.aggregate_end(
+                    round,
+                    &ctx,
+                    pool,
+                    &mut self.tbl_byz_seen[start..start + len],
+                    &mut self.tbl_recv[start..start + len],
+                )?;
             }
         }
-        let all_halves = &all_halves;
-        let all_prevs = &all_prevs;
-        let ids = &ids;
+        Ok(())
+    }
 
-        let byz = &self.byz;
-        let node_of = &self.node_of;
-        let sampler = &self.sampler;
-        let gossip_rows = &self.gossip_rows;
-        let attack = &self.attack;
-        let agg = &self.agg;
-        let digest = &self.digest;
-        let pool = &self.pool;
-
-        pool.try_for_each(&mut jobs, |i, job| {
-            let id = ids[i];
-            // pull set from the (seed, round, id, PULL) stream; in push
-            // mode, borrow the precomputed receive row (no clone)
-            let pulled: Vec<usize>;
-            let peers: &[usize] = match (sampler, push_received, gossip_rows) {
-                (Some(sampler), _, _) => {
-                    pulled = sampler.sample_at(seed, round, id);
-                    &pulled
-                }
-                (None, Some(recv), _) => &recv[i],
-                (None, None, Some(rows)) => {
-                    pulled = rows[id]
-                        .iter()
-                        .map(|&(j, _)| j)
-                        .filter(|&j| j != id)
-                        .collect();
-                    &pulled
-                }
-                _ => unreachable!(),
-            };
-
-            // split into honest refs and byzantine slots
-            let mut honest_rows: Vec<&[f32]> = Vec::with_capacity(peers.len());
-            let mut byz_count = 0usize;
-            for &p in peers {
-                if byz[p] {
-                    byz_count += 1;
-                } else {
-                    honest_rows.push(all_halves[node_of[p]]);
-                }
-            }
-            if push_received.is_some() && b > 0 && !dos {
-                // flooding: every Byzantine node reaches every honest node
-                byz_count = b;
-            }
-            if dos {
-                byz_count = 0; // withheld responses simply never arrive
-            }
-            *job.byz_seen = byz_count;
-
-            // craft per-victim malicious models into the worker's retained
-            // scratch rows
-            let mut byz_buf = CRAFT_ROWS.with(|cell| cell.take());
-            if byz_rows_cap > 0
-                && (byz_buf.len() < byz_rows_cap || byz_buf[0].len() != d)
-            {
-                byz_buf = vec![vec![0.0f32; d]; byz_rows_cap];
-            }
-            if byz_count > 0 {
-                if let Some(attack) = attack {
-                    let ctx = AttackContext {
-                        victim_half: all_halves[i],
-                        victim_prev: all_prevs[i],
-                        honest_received: &honest_rows,
-                        digest,
-                        n,
-                        b,
-                    };
-                    attack.craft(&ctx, &mut byz_buf[..byz_count]);
-                } else {
-                    // b > 0 but attack "none": byzantine nodes behave as
-                    // silent crashers; model them as sending the honest
-                    // mean (benign)
-                    for row in &mut byz_buf[..byz_count] {
-                        for (o, &mu) in row.iter_mut().zip(digest.mean.iter()) {
-                            *o = mu as f32;
-                        }
-                    }
-                }
-            }
-
-            match agg {
-                AggBackend::Native(rule) => {
-                    let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
-                    rows.push(all_halves[i]);
-                    rows.extend_from_slice(&honest_rows);
-                    for rbuf in &byz_buf[..byz_count] {
-                        rows.push(rbuf);
-                    }
-                    if rows.len() < rule.min_inputs() {
-                        // too few responses to aggregate robustly (push /
-                        // DoS rounds): keep the local half-step
-                        job.out.copy_from_slice(all_halves[i]);
-                    } else {
-                        rule.aggregate(&rows, job.out);
-                    }
-                }
-                AggBackend::Hlo(exec) => {
-                    let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
-                    rows.push(all_halves[i]);
-                    rows.extend_from_slice(&honest_rows);
-                    for rbuf in &byz_buf[..byz_count] {
-                        rows.push(rbuf);
-                    }
-                    let out = exec.run(&rows);
-                    job.out.copy_from_slice(&out?);
-                }
-                AggBackend::Gossip(rule) => {
-                    // gossip needs (model, weight) pairs in graph order
-                    let rows = gossip_rows.as_ref().unwrap();
-                    let mut neigh: Vec<(&[f32], f64)> = Vec::with_capacity(peers.len());
-                    let mut byz_used = 0usize;
-                    for &(j, w) in &rows[id] {
-                        if j == id {
-                            continue;
-                        }
-                        if byz[j] {
-                            // DoS: the withheld model simply never
-                            // arrives — drop the edge this round
-                            if dos {
-                                continue;
-                            }
-                            neigh.push((&byz_buf[byz_used], w));
-                            byz_used += 1;
-                        } else {
-                            neigh.push((all_halves[node_of[j]], w));
-                        }
-                    }
-                    rule.aggregate(all_halves[i], &neigh, job.out);
-                }
-            }
-            CRAFT_ROWS.with(|cell| cell.replace(byz_buf));
-            Ok(())
-        })?;
-        drop(jobs);
-        // serial index-order max: identical for every grid point
-        self.last_round_byz_max = self
-            .shards
-            .iter()
-            .flat_map(|s| s.byz_seen.iter().copied())
-            .max()
-            .unwrap_or(0);
+    /// Phase 5: commit every backend and fold the round telemetry in
+    /// index order (identical for every grid point).
+    fn phase_commit(&mut self) -> Result<()> {
+        for backend in self.backends.iter_mut() {
+            let (start, len) = (backend.start(), backend.len());
+            backend.commit(&mut self.tbl_params[start..start + len])?;
+        }
+        self.last_round_byz_max = self.tbl_byz_seen.iter().copied().max().unwrap_or(0);
+        self.last_round_delivered = self.tbl_recv.iter().sum();
         Ok(())
     }
 
     /// Evaluate every honest node on the shared test set (parallel over
-    /// nodes; read-only against the committed models).
+    /// nodes; read-only against the committed-params mirror).
     pub fn evaluate(&self, round: usize) -> Result<EvalPoint> {
         let n_test = self.test_y.len() as f64;
         let h = self.h;
         let engine: &dyn ComputeEngine = self.engine.as_ref();
-        let params: Vec<&[f32]> = self
-            .shards
-            .iter()
-            .flat_map(|s| s.nodes.iter().map(|node| node.params.as_slice()))
-            .collect();
+        let params: Vec<&[f32]> = self.tbl_params.iter().map(|r| r.as_slice()).collect();
         let params = &params;
         let test_x = &self.test_x;
         let test_y = &self.test_y;
@@ -760,14 +783,17 @@ impl Trainer {
         })
     }
 
-    /// Immutable view of one honest node's parameters (tests).
+    /// Immutable view of one honest node's committed parameters. O(1):
+    /// the contiguous partition makes the honest index a direct row index
+    /// into the committed-params mirror (the former per-shard linear
+    /// scan — and its unreachable `panic!` — are gone).
     pub fn params_of(&self, honest_idx: usize) -> &[f32] {
-        for shard in &self.shards {
-            if honest_idx < shard.start + shard.len() {
-                return &shard.nodes[honest_idx - shard.start].params;
-            }
-        }
-        panic!("honest index {honest_idx} out of range ({})", self.h);
+        debug_assert!(
+            honest_idx < self.h,
+            "honest index {honest_idx} out of range ({})",
+            self.h
+        );
+        &self.tbl_params[honest_idx]
     }
 
     /// Global ids of the Byzantine nodes (tests/diagnostics).
@@ -809,13 +835,13 @@ mod tests {
         assert_eq!(t.shard_count(), 3);
         let mut covered = 0usize;
         let mut next_start = 0usize;
-        for shard in &t.shards {
-            assert_eq!(shard.start, next_start, "contiguous ranges");
-            next_start += shard.len();
-            covered += shard.len();
+        for backend in &t.backends {
+            assert_eq!(backend.start(), next_start, "contiguous ranges");
+            next_start += backend.len();
+            covered += backend.len();
         }
         assert_eq!(covered, t.honest_count());
-        // every honest index resolves to some shard-owned params
+        // every honest index resolves to some mirrored params row
         for i in 0..t.honest_count() {
             assert!(!t.params_of(i).is_empty());
         }
@@ -900,6 +926,15 @@ mod tests {
         let hist = Trainer::from_config(&cfg).unwrap().run().unwrap();
         assert_eq!(hist.messages_per_round, cfg.n * 7);
         assert_eq!(hist.total_messages, cfg.n * 7 * cfg.rounds);
+        // delivered ledger: with s = n−1 every honest victim receives a
+        // row from every peer (the single Byzantine node responds under
+        // SignFlip), so h·s models arrive per round — the nominal budget
+        // additionally counts the Byzantine node's own pulls
+        let h = cfg.n - cfg.b;
+        assert_eq!(hist.delivered_per_round.len(), cfg.rounds);
+        assert!(hist.delivered_per_round.iter().all(|&x| x == h * 7));
+        assert_eq!(hist.total_delivered, h * 7 * cfg.rounds);
+        assert!(hist.total_delivered < hist.total_messages);
     }
 
     #[test]
@@ -962,5 +997,19 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn dos_rounds_deliver_fewer_messages_than_nominal() {
+        let mut cfg = quick_cfg();
+        cfg.attack = AttackKind::Dos;
+        let hist = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let h = cfg.n - cfg.b;
+        // withheld Byzantine responses: strictly fewer than h·s arrive
+        assert!(hist
+            .delivered_per_round
+            .iter()
+            .all(|&x| x < h * 7), "{:?}", hist.delivered_per_round);
+        assert!(hist.total_delivered < hist.total_messages);
     }
 }

@@ -1,0 +1,650 @@
+//! Multi-process shard engine: the coordinator-side [`ProcessShard`]
+//! backend and the worker-side `rpel shard-worker` loop.
+//!
+//! Each worker process rebuilds the **identical world** from the config
+//! the coordinator ships in the `Init` handshake (all construction
+//! randomness is derived from the experiment seed, so adversary
+//! placement, data shards, graph topology and parameter init are
+//! bit-identical across processes), keeps only its contiguous honest
+//! range as a [`NodeShard`], and then speaks the round protocol of
+//! [`crate::wire::proto`] over stdin/stdout pipes:
+//!
+//! * `HalfStep` → run phase 1 on the owned nodes, reply with the shard's
+//!   `Snapshot` — the shipped round digest (half-step rows + losses);
+//! * `Aggregate` → receive the folded [`HonestDigest`] and the full
+//!   half-step table, serve the owned victims' pulls from it, craft and
+//!   robustly aggregate, commit, and reply `RoundDone` (byz-seen and
+//!   delivered counts + committed params for the coordinator's mirror);
+//! * `Shutdown` or EOF → exit cleanly.
+//!
+//! Both sides run the *same* [`NodeShard`] phase code — the only
+//! difference between the engines is whether the round tables travel by
+//! borrow or by wire, and the codec ships IEEE bit patterns, so results
+//! are bit-identical (`rust/tests/determinism.rs` pins it).
+//!
+//! A worker that dies mid-round surfaces as an actionable error on the
+//! coordinator (broken pipe / EOF with the worker's exit status), never
+//! a hang: every read is a blocking read on a pipe whose write end dies
+//! with the worker. Worker-side failures are shipped as `Failed{message}`
+//! before exiting, so the coordinator reports the root cause.
+
+use super::shard::{self, AggCtx, NodeShard, NodeState, ShardBackend, StepCtx};
+use super::{build_world, AggBackend};
+use crate::attacks::{Attack, AttackKind};
+use crate::config::{file as config_file, ExperimentConfig};
+use crate::coordinator::{ComputeEngine, PullSampler};
+use crate::util::pool::WorkerPool;
+use crate::wire;
+use crate::wire::proto::{self, FromWorker, ToWorker};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::OnceLock;
+
+/// Process-wide worker-binary override for tests. A `OnceLock` instead of
+/// `std::env::set_var`: mutating the environment races with concurrent
+/// `Command::spawn` reading `environ` from other test threads.
+static WORKER_BIN_OVERRIDE: OnceLock<PathBuf> = OnceLock::new();
+
+/// Test hook: pin the `rpel` binary used to spawn shard workers
+/// (first caller wins; later calls with the same path are no-ops).
+#[doc(hidden)]
+pub fn set_worker_bin(path: &str) {
+    let _ = WORKER_BIN_OVERRIDE.set(PathBuf::from(path));
+}
+
+/// Locate the `rpel` binary to spawn shard workers from: the test
+/// override or `RPEL_WORKER_BIN` first, then the current executable when
+/// it *is* `rpel`, then siblings of the current executable
+/// (`target/<profile>/deps/…` test binaries find `target/<profile>/rpel`
+/// one level up).
+fn worker_binary() -> Result<PathBuf> {
+    if let Some(path) = WORKER_BIN_OVERRIDE.get() {
+        return Ok(path.clone());
+    }
+    if let Ok(path) = std::env::var("RPEL_WORKER_BIN") {
+        return Ok(PathBuf::from(path));
+    }
+    let exe = std::env::current_exe().context("resolving current executable")?;
+    if exe.file_stem() == Some(std::ffi::OsStr::new("rpel")) {
+        return Ok(exe);
+    }
+    let mut candidates = Vec::new();
+    if let Some(dir) = exe.parent() {
+        candidates.push(dir.join("rpel"));
+        if let Some(up) = dir.parent() {
+            candidates.push(up.join("rpel"));
+        }
+    }
+    for cand in &candidates {
+        if cand.is_file() {
+            return Ok(cand.clone());
+        }
+    }
+    bail!(
+        "cannot locate the `rpel` binary to spawn shard workers \
+         (searched next to {}); set RPEL_WORKER_BIN",
+        exe.display()
+    )
+}
+
+fn reply_name(msg: &FromWorker) -> &'static str {
+    match msg {
+        FromWorker::InitOk { .. } => "InitOk",
+        FromWorker::Snapshot { .. } => "Snapshot",
+        FromWorker::RoundDone { .. } => "RoundDone",
+        FromWorker::Failed { .. } => "Failed",
+    }
+}
+
+fn request_name(msg: &ToWorker) -> &'static str {
+    match msg {
+        ToWorker::Init { .. } => "Init",
+        ToWorker::HalfStep { .. } => "HalfStep",
+        ToWorker::Aggregate { .. } => "Aggregate",
+        ToWorker::Shutdown => "Shutdown",
+    }
+}
+
+/// Coordinator-side handle to one `rpel shard-worker` process owning the
+/// honest range `[start, start + len)`.
+pub(crate) struct ProcessShard {
+    index: usize,
+    start: usize,
+    len: usize,
+    d: usize,
+    child: Child,
+    stdin: Option<BufWriter<ChildStdin>>,
+    stdout: BufReader<ChildStdout>,
+    /// committed params parked between `aggregate_end` and `commit`
+    pending_params: Vec<Vec<f32>>,
+}
+
+impl ProcessShard {
+    /// Spawn every worker process and run all handshakes: each `Init` is
+    /// sent before any `InitOk` is awaited, so the workers build their
+    /// worlds **concurrently** instead of serializing behind one blocking
+    /// handshake per process.
+    pub fn spawn_all(
+        cfg_toml: &str,
+        ranges: &[(usize, usize)],
+        procs: usize,
+        d: usize,
+    ) -> Result<Vec<ProcessShard>> {
+        let mut shards = Vec::with_capacity(ranges.len());
+        for (index, &(start, len)) in ranges.iter().enumerate() {
+            let mut shard = ProcessShard::launch(index, start, len, d)?;
+            shard.send(&proto::encode_init(cfg_toml, index as u32, procs as u32))?;
+            shards.push(shard);
+        }
+        for shard in shards.iter_mut() {
+            shard.finish_handshake()?;
+        }
+        Ok(shards)
+    }
+
+    /// Start the worker process with piped stdin/stdout (no handshake).
+    fn launch(index: usize, start: usize, len: usize, d: usize) -> Result<ProcessShard> {
+        let bin = worker_binary()?;
+        let mut child = Command::new(&bin)
+            .arg("shard-worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning shard worker {index} from {}", bin.display()))?;
+        let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
+        let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+        Ok(ProcessShard {
+            index,
+            start,
+            len,
+            d,
+            child,
+            stdin: Some(stdin),
+            stdout,
+            pending_params: Vec::new(),
+        })
+    }
+
+    /// Await `InitOk` and verify the worker independently derived the
+    /// same shard range.
+    fn finish_handshake(&mut self) -> Result<()> {
+        let (index, start, len, d) = (self.index, self.start, self.len, self.d);
+        match self.recv()? {
+            FromWorker::InitOk {
+                start: ws,
+                len: wl,
+                d: wd,
+            } => {
+                ensure!(
+                    ws == start as u64 && wl == len as u64 && wd == d as u64,
+                    "shard worker {index}: partition mismatch — worker derived \
+                     (start {ws}, len {wl}, d {wd}), coordinator expected \
+                     (start {start}, len {len}, d {d})"
+                );
+                Ok(())
+            }
+            other => bail!(
+                "shard worker {index}: expected InitOk, got {}",
+                reply_name(&other)
+            ),
+        }
+    }
+
+    /// One line of who/what/why for errors: which worker, which honest
+    /// range, and whether the process is still alive (with exit status).
+    fn describe(&mut self, action: &str) -> String {
+        let status = match self.child.try_wait() {
+            Ok(Some(st)) => format!("worker process exited: {st}"),
+            Ok(None) => "worker process still running".to_string(),
+            Err(e) => format!("worker status unknown: {e}"),
+        };
+        format!(
+            "shard worker {} (honest nodes {}..{}): {action} failed — {status}",
+            self.index,
+            self.start,
+            self.start + self.len
+        )
+    }
+
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        let result = (|| -> Result<()> {
+            let stdin = self
+                .stdin
+                .as_mut()
+                .context("worker stdin already closed")?;
+            wire::write_frame(stdin, payload)?;
+            stdin.flush()?;
+            Ok(())
+        })();
+        match result {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let what = self.describe("sending request");
+                Err(e.context(what))
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Result<FromWorker> {
+        let frame = match wire::read_frame(&mut self.stdout) {
+            Ok(f) => f,
+            Err(e) => {
+                let what = self.describe("awaiting reply");
+                return Err(e.context(what));
+            }
+        };
+        let msg = match proto::decode_from_worker(&frame) {
+            Ok(m) => m,
+            Err(e) => {
+                let what = self.describe("decoding reply");
+                return Err(e.context(what));
+            }
+        };
+        if let FromWorker::Failed { message } = &msg {
+            bail!(
+                "shard worker {} (honest nodes {}..{}) reported: {message}",
+                self.index,
+                self.start,
+                self.start + self.len
+            );
+        }
+        Ok(msg)
+    }
+}
+
+impl ShardBackend for ProcessShard {
+    fn start(&self) -> usize {
+        self.start
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn half_step_begin(&mut self, round: usize) -> Result<()> {
+        self.send(&proto::encode_half_step(round as u64))
+    }
+
+    fn half_step_end(
+        &mut self,
+        round: usize,
+        _ctx: &StepCtx<'_>,
+        _pool: &WorkerPool,
+        halves_out: &mut [Vec<f32>],
+        losses_out: &mut [f64],
+    ) -> Result<()> {
+        match self.recv()? {
+            FromWorker::Snapshot {
+                round: got,
+                losses,
+                halves,
+            } => {
+                ensure!(
+                    got == round as u64,
+                    "shard worker {}: stale Snapshot for round {got} (expected \
+                     {round}) — an earlier round aborted mid-collection",
+                    self.index
+                );
+                ensure!(
+                    losses.len() == self.len
+                        && halves.len() == self.len
+                        && halves.iter().all(|r| r.len() == self.d),
+                    "shard worker {}: malformed Snapshot ({} losses, {} rows; \
+                     expected {} of width {})",
+                    self.index,
+                    losses.len(),
+                    halves.len(),
+                    self.len,
+                    self.d
+                );
+                losses_out.copy_from_slice(&losses);
+                for (out, row) in halves_out.iter_mut().zip(halves) {
+                    *out = row;
+                }
+                Ok(())
+            }
+            other => bail!(
+                "shard worker {}: expected Snapshot, got {}",
+                self.index,
+                reply_name(&other)
+            ),
+        }
+    }
+
+    fn aggregate_begin(&mut self, round: usize, ctx: &AggCtx<'_>) -> Result<()> {
+        // the payload is worker-independent: encode the O(h·d) frame once
+        // per round and write the same bytes to every worker's pipe
+        let frame = ctx
+            .wire_frame
+            .get_or_init(|| proto::encode_aggregate(round as u64, ctx.digest, ctx.halves));
+        self.send(frame)
+    }
+
+    fn aggregate_end(
+        &mut self,
+        round: usize,
+        _ctx: &AggCtx<'_>,
+        _pool: &WorkerPool,
+        byz_seen_out: &mut [usize],
+        received_out: &mut [usize],
+    ) -> Result<()> {
+        match self.recv()? {
+            FromWorker::RoundDone {
+                round: got,
+                byz_seen,
+                received,
+                params,
+            } => {
+                ensure!(
+                    got == round as u64,
+                    "shard worker {}: stale RoundDone for round {got} (expected \
+                     {round}) — an earlier round aborted mid-collection",
+                    self.index
+                );
+                ensure!(
+                    byz_seen.len() == self.len
+                        && received.len() == self.len
+                        && params.len() == self.len
+                        && params.iter().all(|r| r.len() == self.d),
+                    "shard worker {}: malformed RoundDone ({} byz, {} recv, {} \
+                     params; expected {} of width {})",
+                    self.index,
+                    byz_seen.len(),
+                    received.len(),
+                    params.len(),
+                    self.len,
+                    self.d
+                );
+                for (out, v) in byz_seen_out.iter_mut().zip(&byz_seen) {
+                    *out = *v as usize;
+                }
+                for (out, v) in received_out.iter_mut().zip(&received) {
+                    *out = *v as usize;
+                }
+                self.pending_params = params;
+                Ok(())
+            }
+            other => bail!(
+                "shard worker {}: expected RoundDone, got {}",
+                self.index,
+                reply_name(&other)
+            ),
+        }
+    }
+
+    fn commit(&mut self, params_out: &mut [Vec<f32>]) -> Result<()> {
+        ensure!(
+            self.pending_params.len() == params_out.len(),
+            "shard worker {}: commit without a completed round",
+            self.index
+        );
+        for (out, row) in params_out.iter_mut().zip(self.pending_params.drain(..)) {
+            *out = row;
+        }
+        Ok(())
+    }
+
+    fn kill_for_test(&mut self) -> bool {
+        self.stdin = None; // close the pipe so nothing blocks on a corpse
+        self.child.kill().is_ok()
+    }
+}
+
+impl Drop for ProcessShard {
+    fn drop(&mut self) {
+        if let Some(mut stdin) = self.stdin.take() {
+            let _ = wire::write_frame(&mut stdin, &proto::encode_shutdown());
+            let _ = stdin.flush();
+            // dropping the write end closes the pipe: EOF doubles as
+            // Shutdown for workers that missed the frame
+        }
+        // Drain the worker's stdout before reaping: after an aborted
+        // round (e.g. a sibling worker died) a surviving worker can be
+        // blocked writing a reply nobody will read — with a reply larger
+        // than the pipe buffer, wait() alone would deadlock. Draining
+        // unblocks that write; the worker then reads EOF and exits.
+        let _ = std::io::copy(&mut self.stdout, &mut std::io::sink());
+        let _ = self.child.wait();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// One honest shard hosted in a worker process: the same world the
+/// coordinator builds, narrowed to the owned contiguous range.
+struct WorkerShard {
+    cfg: ExperimentConfig,
+    engine: Box<dyn ComputeEngine>,
+    agg: AggBackend,
+    attack: Option<Box<dyn Attack>>,
+    byz: Vec<bool>,
+    node_of: Vec<usize>,
+    sampler: Option<PullSampler>,
+    push_s: Option<usize>,
+    gossip_rows: Option<Vec<Vec<(usize, f64)>>>,
+    pool: WorkerPool,
+    shard: NodeShard,
+    d: usize,
+    /// honest population size (row count of the broadcast table)
+    h: usize,
+    /// the shard's slice of the round tables
+    halves: Vec<Vec<f32>>,
+    losses: Vec<f64>,
+    byz_seen: Vec<usize>,
+    received: Vec<usize>,
+    params_scratch: Vec<Vec<f32>>,
+}
+
+impl WorkerShard {
+    fn build(cfg: &ExperimentConfig, index: usize, procs: usize) -> Result<WorkerShard> {
+        let world = build_world(cfg)?;
+        let h = world.nodes.len();
+        let parts = procs.clamp(1, h.max(1));
+        ensure!(
+            index < parts,
+            "worker index {index} out of range for {parts} shard processes"
+        );
+        let ranges = shard::partition_ranges(h, parts);
+        let (start, len) = ranges[index];
+        let d = world.d;
+        let owned: Vec<NodeState> = world.nodes.into_iter().skip(start).take(len).collect();
+        debug_assert_eq!(owned.len(), len);
+        // threads=0 ("all cores") would oversubscribe the machine
+        // `parts`-fold with every worker running its own all-cores pool:
+        // split the cores across the worker processes instead (results
+        // are thread-count-invariant by design, so this is free)
+        let threads = if world.cfg.threads == 0 {
+            (crate::util::pool::resolve_threads(0) / parts).max(1)
+        } else {
+            world.cfg.threads
+        };
+        Ok(WorkerShard {
+            engine: world.engine,
+            agg: world.agg,
+            attack: world.attack,
+            byz: world.byz,
+            node_of: world.node_of,
+            sampler: world.sampler,
+            push_s: world.push_s,
+            gossip_rows: world.gossip_rows,
+            pool: WorkerPool::new(threads),
+            shard: NodeShard::new(start, owned, d),
+            d,
+            h,
+            halves: vec![vec![0.0f32; d]; len],
+            losses: vec![0.0f64; len],
+            byz_seen: vec![0usize; len],
+            received: vec![0usize; len],
+            params_scratch: vec![vec![0.0f32; d]; len],
+            cfg: world.cfg,
+        })
+    }
+
+    fn half_step(&mut self, round: usize) -> Result<()> {
+        let ctx = StepCtx {
+            engine: self.engine.as_ref(),
+            lr: self.cfg.lr_at(round),
+            beta: self.cfg.momentum,
+            wd: self.cfg.weight_decay,
+            local_steps: self.engine.local_steps(),
+            batch: self.engine.batch(),
+        };
+        self.shard
+            .half_step(&ctx, &self.pool, &mut self.halves, &mut self.losses)
+    }
+
+    fn aggregate_commit(
+        &mut self,
+        round: usize,
+        digest: proto::WireDigest,
+        all_halves: &[Vec<f32>],
+    ) -> Result<()> {
+        ensure!(
+            all_halves.len() == self.h && all_halves.iter().all(|r| r.len() == self.d),
+            "Aggregate table has {} rows, expected {} of width {}",
+            all_halves.len(),
+            self.h,
+            self.d
+        );
+        let digest = digest.into_digest();
+        let push_recv: Option<Vec<Vec<usize>>> = self.push_s.map(|s| {
+            shard::push_routes(
+                self.cfg.seed,
+                round,
+                self.cfg.n,
+                s,
+                &self.byz,
+                &self.node_of,
+                self.h,
+            )
+        });
+        let ctx = AggCtx {
+            agg: &self.agg,
+            attack: self.attack.as_deref(),
+            digest: &digest,
+            halves: all_halves,
+            push_recv: push_recv.as_deref(),
+            byz: &self.byz,
+            node_of: &self.node_of,
+            sampler: self.sampler,
+            gossip_rows: self.gossip_rows.as_deref(),
+            seed: self.cfg.seed,
+            n: self.cfg.n,
+            b: self.cfg.b,
+            dos: self.cfg.attack == AttackKind::Dos,
+            wire_frame: std::sync::OnceLock::new(),
+        };
+        self.shard.aggregate(
+            round,
+            &ctx,
+            &self.pool,
+            &mut self.byz_seen,
+            &mut self.received,
+        )?;
+        self.shard.commit_into(&mut self.params_scratch);
+        Ok(())
+    }
+}
+
+fn send_reply(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    wire::write_frame(w, payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// The `rpel shard-worker` main loop: strict request/reply over the given
+/// streams. Returns cleanly on `Shutdown` or EOF at a frame boundary;
+/// processing errors are shipped as `Failed{message}` (best effort)
+/// before propagating, so the coordinator sees the root cause.
+pub fn run_worker<R: Read, W: Write>(mut input: R, mut output: W) -> Result<()> {
+    let Some(first) = wire::read_frame_opt(&mut input).context("shard worker: reading handshake")?
+    else {
+        return Ok(()); // closed before Init: nothing to do
+    };
+    let (cfg, index, procs) =
+        match proto::decode_to_worker(&first).context("shard worker: decoding handshake")? {
+            ToWorker::Init {
+                config_toml,
+                worker,
+                procs,
+            } => match config_file::from_toml_str(&config_toml) {
+                Ok(cfg) => (cfg, worker as usize, procs as usize),
+                Err(e) => {
+                    let _ = send_reply(
+                        &mut output,
+                        &proto::encode_failed(&format!("bad config: {e}")),
+                    );
+                    bail!("shard worker: bad config: {e}");
+                }
+            },
+            other => bail!(
+                "shard worker: expected Init, got {}",
+                request_name(&other)
+            ),
+        };
+    let mut state = match WorkerShard::build(&cfg, index, procs) {
+        Ok(state) => state,
+        Err(e) => {
+            let _ = send_reply(&mut output, &proto::encode_failed(&format!("{e:#}")));
+            return Err(e);
+        }
+    };
+    send_reply(
+        &mut output,
+        &proto::encode_init_ok(
+            state.shard.start as u64,
+            state.shard.shard_len() as u64,
+            state.d as u64,
+        ),
+    )?;
+    log::info!(
+        "shard worker {index}/{procs}: honest nodes {}..{} (d={})",
+        state.shard.start,
+        state.shard.start + state.shard.shard_len(),
+        state.d
+    );
+
+    loop {
+        let Some(frame) = wire::read_frame_opt(&mut input)? else {
+            return Ok(()); // coordinator closed the pipe: orderly shutdown
+        };
+        match proto::decode_to_worker(&frame)? {
+            ToWorker::Shutdown => return Ok(()),
+            ToWorker::Init { .. } => bail!("shard worker: duplicate Init"),
+            ToWorker::HalfStep { round } => match state.half_step(round as usize) {
+                Ok(()) => send_reply(
+                    &mut output,
+                    &proto::encode_snapshot(round, &state.losses, &state.halves),
+                )?,
+                Err(e) => {
+                    let _ =
+                        send_reply(&mut output, &proto::encode_failed(&format!("{e:#}")));
+                    return Err(e);
+                }
+            },
+            ToWorker::Aggregate {
+                round,
+                digest,
+                halves,
+            } => match state.aggregate_commit(round as usize, digest, &halves) {
+                Ok(()) => {
+                    let byz: Vec<u32> = state.byz_seen.iter().map(|&x| x as u32).collect();
+                    let recv: Vec<u32> = state.received.iter().map(|&x| x as u32).collect();
+                    send_reply(
+                        &mut output,
+                        &proto::encode_round_done(round, &byz, &recv, &state.params_scratch),
+                    )?;
+                }
+                Err(e) => {
+                    let _ =
+                        send_reply(&mut output, &proto::encode_failed(&format!("{e:#}")));
+                    return Err(e);
+                }
+            },
+        }
+    }
+}

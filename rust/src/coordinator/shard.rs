@@ -1,32 +1,56 @@
-//! Shard-owned node state for the round engine.
+//! Shard backends for the round engine: the trait both the in-process
+//! and the multi-process shard speak, plus the in-process implementation.
 //!
-//! A [`NodeShard`] owns a **contiguous range of honest nodes** — their
-//! params, momentum, data shards, and the per-round half-step / next-model
-//! buffers — and steps through the explicit round protocol driven by the
-//! coordinator ([`crate::coordinator::Trainer`]):
+//! [`ShardBackend`] is the coordinator's view of one contiguous range of
+//! honest nodes. [`crate::coordinator::Trainer`] owns the **round tables**
+//! (half-step rows, committed-params mirror, per-node losses / byz-seen /
+//! delivered counts, all in ascending honest order) and drives every
+//! backend through the same five-phase protocol:
 //!
-//! 1. `half_step` — every owned node's local train step writes into the
-//!    shard's half buffers;
-//! 2. `publish` — the shard exposes a read-only [`RoundDigest`] of its
-//!    half-steps and round-start params; the coordinator folds all shard
-//!    digests (in ascending shard order = ascending honest-node order)
-//!    into the global [`crate::attacks::HonestDigest`];
-//! 3. `pull/craft/aggregate` — victims in any shard pull exactly the rows
-//!    they sampled from the published snapshots and write into the
-//!    shard's next buffers;
-//! 4. `commit` — the synchronous swap of next into params.
+//! 1. `half_step_begin` / `half_step_end` — every owned node's local
+//!    train step; the backend fills its slice of the coordinator's
+//!    half-step table ([`NodeShard`] computes in place on the worker
+//!    pool; [`super::proc::ProcessShard`] ships a `HalfStep` request and
+//!    receives the shard's `Snapshot` — the **shipped round digest**);
+//! 2. the coordinator folds the table rows, in ascending honest-node
+//!    order, into the global [`crate::attacks::HonestDigest`];
+//! 3. `aggregate_begin` / `aggregate_end` — per victim: pull `S_i^t`,
+//!    craft malicious rows against the digest, robustly aggregate
+//!    (in-process: on the pool against the shared tables; remote: the
+//!    worker receives the digest + full half-step table and replies with
+//!    its per-node byz-seen / delivered counts);
+//! 4. `commit` — the synchronous swap; the backend refreshes its slice
+//!    of the coordinator's committed-params mirror (remote shards ship
+//!    their committed rows, which is what keeps evaluation and
+//!    `params_of` local and O(1) in both engines).
+//!
+//! The begin/end split exists for the remote backend: the coordinator
+//! first *sends* a phase request to every worker, then *collects* replies
+//! in shard order — all worker processes compute concurrently while the
+//! in-process backends run on the coordinator's own pool.
 //!
 //! # Why the digest fold is centralized
 //!
 //! Per-shard f64 partial sums combined across shards would make the mean
 //! depend on the shard grouping (f64 addition is not associative), so the
-//! coordinator instead folds the published rows in ascending honest-node
-//! order regardless of shard boundaries — that single O(h·d) serial pass
-//! is what makes results **bit-identical for every (shards × threads)
-//! combination**, and it is the same fold a future multi-process engine
-//! can reproduce from shipped shard snapshots.
+//! coordinator folds raw rows in ascending honest-node order regardless
+//! of shard boundaries — one O(h·d) serial pass. Because the wire codec
+//! ships rows as IEEE bit patterns, a remote shard's rows are the same
+//! bytes its in-process twin would have published by borrow, and the fold
+//! (hence every result) is **bit-identical across the whole
+//! (procs × shards × threads) grid** — `rust/tests/determinism.rs`
+//! enforces it.
 
+use crate::aggregation::gossip::GossipAggregator as _;
+use crate::aggregation::Aggregator as _;
+use crate::attacks::{Attack, AttackContext, HonestDigest};
+use crate::coordinator::engine::ComputeEngine;
+use crate::coordinator::{AggBackend, PullSampler};
 use crate::data::Shard;
+use crate::util::pool::WorkerPool;
+use crate::util::rng::{stream_tag, Rng};
+use anyhow::Result;
+use std::cell::RefCell;
 
 /// State owned by one honest node.
 pub(crate) struct NodeState {
@@ -38,32 +62,129 @@ pub(crate) struct NodeState {
     pub shard: Shard,
 }
 
-/// A contiguous range of honest nodes plus their round buffers. All
-/// honest-node state lives in exactly one shard; the coordinator is an
-/// orchestrator over `Vec<NodeShard>` and owns no node state itself.
-pub(crate) struct NodeShard {
-    /// first honest index owned by this shard (honest indices are global:
-    /// shard k owns `[start, start + len)`)
-    pub start: usize,
-    pub nodes: Vec<NodeState>,
-    /// half-step models x^{t+1/2}, one row per owned node
-    pub halves: Vec<Vec<f32>>,
-    /// aggregated next models x^{t+1}, committed at the end of the round
-    pub next: Vec<Vec<f32>>,
-    /// per-node train loss of the last half-step phase
-    pub losses: Vec<f64>,
-    /// per-node count of Byzantine rows received in the last round
-    pub byz_seen: Vec<usize>,
+/// Immutable per-round inputs to the half-step phase.
+pub(crate) struct StepCtx<'a> {
+    pub engine: &'a dyn ComputeEngine,
+    pub lr: f32,
+    pub beta: f32,
+    pub wd: f32,
+    pub local_steps: usize,
+    pub batch: usize,
 }
 
-/// What a shard publishes after its half-step phase: read-only views of
-/// its half-steps and round-start params, tagged with the global range.
-/// Within one process this is a borrow; a multi-process engine would ship
-/// the same payload as the shard's round snapshot.
-pub(crate) struct RoundDigest<'a> {
-    pub start: usize,
+/// Immutable round context for the pull/craft/aggregate phase — the
+/// published half-step table plus everything the omniscient adversary
+/// and the aggregation rule condition on. Identical between backends: a
+/// remote worker reconstructs the same struct from the wire payload.
+pub(crate) struct AggCtx<'a> {
+    pub agg: &'a AggBackend,
+    pub attack: Option<&'a dyn Attack>,
+    pub digest: &'a HonestDigest,
+    /// all honest half-steps, ascending honest order (the round table)
     pub halves: &'a [Vec<f32>],
-    pub nodes: &'a [NodeState],
+    /// push mode: per-victim sender lists (honest-indexed)
+    pub push_recv: Option<&'a [Vec<usize>]>,
+    pub byz: &'a [bool],
+    pub node_of: &'a [usize],
+    pub sampler: Option<PullSampler>,
+    pub gossip_rows: Option<&'a [Vec<(usize, f64)>]>,
+    pub seed: u64,
+    pub n: usize,
+    pub b: usize,
+    pub dos: bool,
+    /// Lazily encoded `Aggregate` wire frame for this round: the payload
+    /// (digest + table) is identical for every worker process, so the
+    /// first remote backend encodes it once and the rest reuse the bytes
+    /// (`OnceLock` keeps the ctx shareable across pool threads).
+    pub wire_frame: std::sync::OnceLock<Vec<u8>>,
+}
+
+/// One contiguous range of honest nodes, driven through the round phases
+/// by either the coordinator (in-process backend) or a
+/// `rpel shard-worker` process (each worker owns exactly one).
+/// `Send` keeps the orchestrator movable across threads with either
+/// backend inside.
+pub(crate) trait ShardBackend: Send {
+    /// First honest index owned by this backend.
+    fn start(&self) -> usize;
+    /// Number of owned honest nodes.
+    fn len(&self) -> usize;
+    /// Kick off phase 1 (remote: send the request; local: no-op).
+    fn half_step_begin(&mut self, round: usize) -> Result<()>;
+    /// Complete phase 1: fill this backend's slices of the half-step
+    /// table and the loss table.
+    fn half_step_end(
+        &mut self,
+        round: usize,
+        ctx: &StepCtx<'_>,
+        pool: &WorkerPool,
+        halves_out: &mut [Vec<f32>],
+        losses_out: &mut [f64],
+    ) -> Result<()>;
+    /// Kick off phases 3–4 (remote: ship digest + table; local: no-op).
+    fn aggregate_begin(&mut self, round: usize, ctx: &AggCtx<'_>) -> Result<()>;
+    /// Complete phases 3–4: fill byz-seen and delivered-model counts.
+    fn aggregate_end(
+        &mut self,
+        round: usize,
+        ctx: &AggCtx<'_>,
+        pool: &WorkerPool,
+        byz_seen_out: &mut [usize],
+        received_out: &mut [usize],
+    ) -> Result<()>;
+    /// Phase 5: synchronous swap; refresh the committed-params mirror.
+    fn commit(&mut self, params_out: &mut [Vec<f32>]) -> Result<()>;
+    /// Downcast to the in-process shard, when this backend is one. The
+    /// coordinator uses it to flatten all local shards' per-node jobs
+    /// into **one** pool dispatch per phase (no per-shard barrier);
+    /// remote backends return None.
+    fn as_node_shard(&mut self) -> Option<&mut NodeShard> {
+        None
+    }
+    /// Test hook: forcibly kill the backing worker process (remote
+    /// backends only; returns false for in-process shards).
+    fn kill_for_test(&mut self) -> bool {
+        false
+    }
+}
+
+/// One node's slot in the parallel half-step phase.
+struct HalfStepJob<'a> {
+    node: &'a mut NodeState,
+    half: &'a mut Vec<f32>,
+    loss: &'a mut f64,
+}
+
+/// One victim's slot in the parallel pull/craft/aggregate phase. Carries
+/// the owning node and its global honest index so jobs from many shards
+/// can share a single flat dispatch.
+struct AggJob<'a> {
+    node: &'a NodeState,
+    /// the victim's global honest index (contiguous partition)
+    gi: usize,
+    out: &'a mut Vec<f32>,
+    byz_seen: &'a mut usize,
+    received: &'a mut usize,
+}
+
+thread_local! {
+    /// Per-worker crafting scratch (`b` rows of length d). Thread-local so
+    /// the persistent pool's workers retain it across rounds instead of
+    /// reallocating per dispatch.
+    static CRAFT_ROWS: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+}
+
+/// The in-process shard: owns its nodes' state and aggregation output
+/// buffers; half-steps and per-victim aggregation run data-parallel on
+/// the coordinator's persistent pool.
+pub(crate) struct NodeShard {
+    /// first honest index owned by this shard (honest indices are global:
+    /// the shard owns `[start, start + len)`)
+    pub start: usize,
+    pub nodes: Vec<NodeState>,
+    /// aggregated next models x^{t+1}, committed at the end of the round
+    /// (row length d)
+    pub next: Vec<Vec<f32>>,
 }
 
 impl NodeShard {
@@ -72,49 +193,447 @@ impl NodeShard {
         NodeShard {
             start,
             nodes,
-            halves: vec![vec![0.0f32; d]; len],
             next: vec![vec![0.0f32; d]; len],
-            losses: vec![0.0f64; len],
-            byz_seen: vec![0usize; len],
         }
     }
 
-    pub fn len(&self) -> usize {
+    pub fn shard_len(&self) -> usize {
         self.nodes.len()
     }
 
-    #[allow(dead_code)]
-    pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
-    }
-
-    /// Read-only round snapshot for the digest fold and peer pulls.
-    pub fn publish(&self) -> RoundDigest<'_> {
-        RoundDigest {
-            start: self.start,
-            halves: &self.halves,
-            nodes: &self.nodes,
+    /// Collect this shard's half-step jobs into a (possibly shared) flat
+    /// job list.
+    fn collect_half_jobs<'a>(
+        &'a mut self,
+        halves_out: &'a mut [Vec<f32>],
+        losses_out: &'a mut [f64],
+        jobs: &mut Vec<HalfStepJob<'a>>,
+    ) {
+        debug_assert_eq!(halves_out.len(), self.nodes.len());
+        debug_assert_eq!(losses_out.len(), self.nodes.len());
+        for ((node, half), loss) in self
+            .nodes
+            .iter_mut()
+            .zip(halves_out.iter_mut())
+            .zip(losses_out.iter_mut())
+        {
+            jobs.push(HalfStepJob { node, half, loss });
         }
     }
 
-    /// Split borrows for the pull/craft/aggregate phase: immutable node
-    /// state + published halves alongside the mutable output slots.
-    #[allow(clippy::type_complexity)]
-    pub fn split_aggregate(
+    /// Phase 1: every owned node's local train step, writing half-step
+    /// rows and losses into the coordinator's tables.
+    pub fn half_step(
         &mut self,
-    ) -> (&[NodeState], &[Vec<f32>], &mut [Vec<f32>], &mut [usize]) {
-        (
-            &self.nodes,
-            &self.halves,
-            &mut self.next,
-            &mut self.byz_seen,
-        )
+        ctx: &StepCtx<'_>,
+        pool: &WorkerPool,
+        halves_out: &mut [Vec<f32>],
+        losses_out: &mut [f64],
+    ) -> Result<()> {
+        let mut jobs = Vec::with_capacity(self.nodes.len());
+        self.collect_half_jobs(halves_out, losses_out, &mut jobs);
+        run_half_step_jobs(&mut jobs, ctx, pool)
     }
 
-    /// Synchronous swap: commit the aggregated next models.
-    pub fn commit(&mut self) {
-        for (node, next) in self.nodes.iter_mut().zip(&self.next) {
+    /// Collect this shard's pull/craft/aggregate jobs into a (possibly
+    /// shared) flat job list.
+    fn collect_agg_jobs<'a>(
+        &'a mut self,
+        byz_seen_out: &'a mut [usize],
+        received_out: &'a mut [usize],
+        jobs: &mut Vec<AggJob<'a>>,
+    ) {
+        debug_assert_eq!(byz_seen_out.len(), self.nodes.len());
+        debug_assert_eq!(received_out.len(), self.nodes.len());
+        let start = self.start;
+        for (i, (((node, out), byz_seen), received)) in self
+            .nodes
+            .iter()
+            .zip(self.next.iter_mut())
+            .zip(byz_seen_out.iter_mut())
+            .zip(received_out.iter_mut())
+            .enumerate()
+        {
+            jobs.push(AggJob {
+                node,
+                gi: start + i,
+                out,
+                byz_seen,
+                received,
+            });
+        }
+    }
+
+    /// Phases 3–4: per owned victim — pull `S_i^t`, craft the malicious
+    /// rows against the digest, robustly aggregate into the shard's next
+    /// buffers. Parallel over victims; crafting scratch lives in
+    /// per-worker thread-locals the persistent pool retains across rounds.
+    pub fn aggregate(
+        &mut self,
+        round: usize,
+        ctx: &AggCtx<'_>,
+        pool: &WorkerPool,
+        byz_seen_out: &mut [usize],
+        received_out: &mut [usize],
+    ) -> Result<()> {
+        let mut jobs = Vec::with_capacity(self.nodes.len());
+        self.collect_agg_jobs(byz_seen_out, received_out, &mut jobs);
+        run_agg_jobs(&mut jobs, round, ctx, pool)
+    }
+}
+
+/// Execute collected half-step jobs in one pool dispatch.
+fn run_half_step_jobs(
+    jobs: &mut Vec<HalfStepJob<'_>>,
+    ctx: &StepCtx<'_>,
+    pool: &WorkerPool,
+) -> Result<()> {
+    let engine = ctx.engine;
+    let (k, batch) = (ctx.local_steps, ctx.batch);
+    let (lr, beta, wd) = (ctx.lr, ctx.beta, ctx.wd);
+    pool.try_for_each(jobs, |_, job| {
+        job.half.copy_from_slice(&job.node.params);
+        // batch draws come from the node's own shard stream — already
+        // independent of scheduling order
+        let b = job.node.shard.next_batches(k, batch);
+        *job.loss = engine.train_step(
+            job.half,
+            &mut job.node.momentum,
+            &b.x,
+            &b.y,
+            lr,
+            beta,
+            wd,
+        )? as f64;
+        Ok(())
+    })
+}
+
+/// Execute collected pull/craft/aggregate jobs in one pool dispatch.
+fn run_agg_jobs(
+    jobs: &mut Vec<AggJob<'_>>,
+    round: usize,
+    ctx: &AggCtx<'_>,
+    pool: &WorkerPool,
+) -> Result<()> {
+    // worst-case malicious rows per victim is b in every topology
+    // (pull sets and graph neighborhoods are duplicate-free, and a
+    // flooding push round delivers each Byzantine node once)
+    let byz_rows_cap = ctx.b;
+    pool.try_for_each(jobs, |_, job| {
+            let node = job.node;
+            let id = node.id;
+            // this victim's global honest index (contiguous partition)
+            let gi = job.gi;
+            let d = job.out.len();
+            // pull set from the (seed, round, id, PULL) stream; in push
+            // mode, borrow the precomputed receive row (no clone)
+            let pulled: Vec<usize>;
+            let peers: &[usize] = match (ctx.sampler, ctx.push_recv, ctx.gossip_rows) {
+                (Some(sampler), _, _) => {
+                    pulled = sampler.sample_at(ctx.seed, round, id);
+                    &pulled
+                }
+                (None, Some(recv), _) => &recv[gi],
+                (None, None, Some(rows)) => {
+                    pulled = rows[id]
+                        .iter()
+                        .map(|&(j, _)| j)
+                        .filter(|&j| j != id)
+                        .collect();
+                    &pulled
+                }
+                _ => unreachable!(),
+            };
+
+            // split into honest refs and byzantine slots
+            let mut honest_rows: Vec<&[f32]> = Vec::with_capacity(peers.len());
+            let mut byz_count = 0usize;
+            for &p in peers {
+                if ctx.byz[p] {
+                    byz_count += 1;
+                } else {
+                    honest_rows.push(ctx.halves[ctx.node_of[p]].as_slice());
+                }
+            }
+            if ctx.push_recv.is_some() && ctx.b > 0 && !ctx.dos {
+                // flooding: every Byzantine node reaches every honest node
+                byz_count = ctx.b;
+            }
+            if ctx.dos {
+                byz_count = 0; // withheld responses simply never arrive
+            }
+            *job.byz_seen = byz_count;
+            // the delivered-messages ledger: model rows this victim
+            // actually received (self excluded)
+            *job.received = honest_rows.len() + byz_count;
+
+            // craft per-victim malicious models into the worker's retained
+            // scratch rows
+            let mut byz_buf = CRAFT_ROWS.with(|cell| cell.take());
+            if byz_rows_cap > 0 && (byz_buf.len() < byz_rows_cap || byz_buf[0].len() != d) {
+                byz_buf = vec![vec![0.0f32; d]; byz_rows_cap];
+            }
+            if byz_count > 0 {
+                if let Some(attack) = ctx.attack {
+                    let actx = AttackContext {
+                        victim_half: &ctx.halves[gi],
+                        victim_prev: &node.params,
+                        honest_received: &honest_rows,
+                        digest: ctx.digest,
+                        n: ctx.n,
+                        b: ctx.b,
+                    };
+                    attack.craft(&actx, &mut byz_buf[..byz_count]);
+                } else {
+                    // b > 0 but attack "none": byzantine nodes behave as
+                    // silent crashers; model them as sending the honest
+                    // mean (benign)
+                    for row in &mut byz_buf[..byz_count] {
+                        for (o, &mu) in row.iter_mut().zip(ctx.digest.mean.iter()) {
+                            *o = mu as f32;
+                        }
+                    }
+                }
+            }
+
+            match ctx.agg {
+                AggBackend::Native(rule) => {
+                    let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
+                    rows.push(ctx.halves[gi].as_slice());
+                    rows.extend_from_slice(&honest_rows);
+                    for rbuf in &byz_buf[..byz_count] {
+                        rows.push(rbuf);
+                    }
+                    if rows.len() < rule.min_inputs() {
+                        // too few responses to aggregate robustly (push /
+                        // DoS rounds): keep the local half-step
+                        job.out.copy_from_slice(&ctx.halves[gi]);
+                    } else {
+                        rule.aggregate(&rows, job.out);
+                    }
+                }
+                AggBackend::Hlo(exec) => {
+                    let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
+                    rows.push(ctx.halves[gi].as_slice());
+                    rows.extend_from_slice(&honest_rows);
+                    for rbuf in &byz_buf[..byz_count] {
+                        rows.push(rbuf);
+                    }
+                    let out = exec.run(&rows);
+                    job.out.copy_from_slice(&out?);
+                }
+                AggBackend::Gossip(rule) => {
+                    // gossip needs (model, weight) pairs in graph order
+                    let rows = ctx.gossip_rows.unwrap();
+                    let mut neigh: Vec<(&[f32], f64)> = Vec::with_capacity(peers.len());
+                    let mut byz_used = 0usize;
+                    for &(j, w) in &rows[id] {
+                        if j == id {
+                            continue;
+                        }
+                        if ctx.byz[j] {
+                            // DoS: the withheld model simply never
+                            // arrives — drop the edge this round
+                            if ctx.dos {
+                                continue;
+                            }
+                            neigh.push((byz_buf[byz_used].as_slice(), w));
+                            byz_used += 1;
+                        } else {
+                            neigh.push((ctx.halves[ctx.node_of[j]].as_slice(), w));
+                        }
+                    }
+                    rule.aggregate(&ctx.halves[gi], &neigh, job.out);
+                }
+            }
+            CRAFT_ROWS.with(|cell| cell.replace(byz_buf));
+            Ok(())
+    })
+}
+
+impl NodeShard {
+    /// Phase 5: synchronous swap — commit the aggregated next models and
+    /// refresh the coordinator's committed-params mirror rows.
+    pub fn commit_into(&mut self, params_out: &mut [Vec<f32>]) {
+        debug_assert_eq!(params_out.len(), self.nodes.len());
+        for ((node, next), out) in self.nodes.iter_mut().zip(&self.next).zip(params_out) {
             node.params.copy_from_slice(next);
+            out.copy_from_slice(next);
+        }
+    }
+}
+
+/// Flat half-step dispatch across all in-process shards: every shard's
+/// jobs in **one** pool dispatch (no per-shard barrier, no stragglers
+/// idling the pool between shards).
+pub(crate) fn half_step_shards<'a>(
+    shards: Vec<(&'a mut NodeShard, &'a mut [Vec<f32>], &'a mut [f64])>,
+    ctx: &StepCtx<'_>,
+    pool: &WorkerPool,
+) -> Result<()> {
+    let mut jobs: Vec<HalfStepJob<'a>> =
+        Vec::with_capacity(shards.iter().map(|(s, _, _)| s.shard_len()).sum());
+    for (shard, halves_out, losses_out) in shards {
+        shard.collect_half_jobs(halves_out, losses_out, &mut jobs);
+    }
+    run_half_step_jobs(&mut jobs, ctx, pool)
+}
+
+/// Flat pull/craft/aggregate dispatch across all in-process shards (see
+/// [`half_step_shards`]).
+pub(crate) fn aggregate_shards<'a>(
+    shards: Vec<(&'a mut NodeShard, &'a mut [usize], &'a mut [usize])>,
+    round: usize,
+    ctx: &AggCtx<'_>,
+    pool: &WorkerPool,
+) -> Result<()> {
+    let mut jobs: Vec<AggJob<'a>> =
+        Vec::with_capacity(shards.iter().map(|(s, _, _)| s.shard_len()).sum());
+    for (shard, byz_seen_out, received_out) in shards {
+        shard.collect_agg_jobs(byz_seen_out, received_out, &mut jobs);
+    }
+    run_agg_jobs(&mut jobs, round, ctx, pool)
+}
+
+impl ShardBackend for NodeShard {
+    fn start(&self) -> usize {
+        self.start
+    }
+
+    fn len(&self) -> usize {
+        self.shard_len()
+    }
+
+    fn half_step_begin(&mut self, _round: usize) -> Result<()> {
+        Ok(())
+    }
+
+    fn half_step_end(
+        &mut self,
+        _round: usize,
+        ctx: &StepCtx<'_>,
+        pool: &WorkerPool,
+        halves_out: &mut [Vec<f32>],
+        losses_out: &mut [f64],
+    ) -> Result<()> {
+        self.half_step(ctx, pool, halves_out, losses_out)
+    }
+
+    fn aggregate_begin(&mut self, _round: usize, _ctx: &AggCtx<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    fn aggregate_end(
+        &mut self,
+        round: usize,
+        ctx: &AggCtx<'_>,
+        pool: &WorkerPool,
+        byz_seen_out: &mut [usize],
+        received_out: &mut [usize],
+    ) -> Result<()> {
+        self.aggregate(round, ctx, pool, byz_seen_out, received_out)
+    }
+
+    fn commit(&mut self, params_out: &mut [Vec<f32>]) -> Result<()> {
+        self.commit_into(params_out);
+        Ok(())
+    }
+
+    fn as_node_shard(&mut self) -> Option<&mut NodeShard> {
+        Some(self)
+    }
+}
+
+/// Contiguous honest-index ranges for `parts` shards: the canonical
+/// partition both the coordinator and every shard-worker process derive
+/// independently (they must agree bit-for-bit on who owns what).
+pub(crate) fn partition_ranges(h: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, h.max(1));
+    let base = h / parts;
+    let extra = h % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for k in 0..parts {
+        let len = base + usize::from(k < extra);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Push-mode sender → recipient routes (the Appendix-D ablation): every
+/// honest sender scatters to `s` recipients drawn from its
+/// `(seed, round, id, PUSH)` stream; pushes to Byzantine recipients are
+/// wasted messages. Iterates senders in ascending id order, so the
+/// per-victim sender lists are identical however shards are hosted.
+pub(crate) fn push_routes(
+    seed: u64,
+    round: usize,
+    n: usize,
+    s: usize,
+    byz: &[bool],
+    node_of: &[usize],
+    h: usize,
+) -> Vec<Vec<usize>> {
+    let mut recv: Vec<Vec<usize>> = vec![Vec::new(); h];
+    for id in 0..n {
+        if byz[id] {
+            continue;
+        }
+        let mut rng = Rng::stream(seed, round as u64, id as u64, stream_tag::PUSH);
+        for dest in rng.sample_distinct_excluding(n, s, id) {
+            if !byz[dest] {
+                recv[node_of[dest]].push(id);
+            }
+            // pushes to Byzantine recipients are wasted messages
+        }
+    }
+    recv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_contiguous_and_balanced() {
+        for (h, parts) in [(10usize, 3usize), (7, 7), (5, 9), (1, 1), (12, 4)] {
+            let ranges = partition_ranges(h, parts);
+            assert_eq!(ranges.len(), parts.clamp(1, h));
+            let mut next = 0usize;
+            for &(start, len) in &ranges {
+                assert_eq!(start, next);
+                next += len;
+            }
+            assert_eq!(next, h, "h={h} parts={parts}");
+            let min = ranges.iter().map(|&(_, l)| l).min().unwrap();
+            let max = ranges.iter().map(|&(_, l)| l).max().unwrap();
+            assert!(max - min <= 1, "balanced split");
+        }
+    }
+
+    #[test]
+    fn push_routes_exclude_byzantine_endpoints_and_are_pure() {
+        let n = 9usize;
+        let byz = vec![false, true, false, false, true, false, false, false, false];
+        let mut node_of = vec![usize::MAX; n];
+        let mut h = 0usize;
+        for id in 0..n {
+            if !byz[id] {
+                node_of[id] = h;
+                h += 1;
+            }
+        }
+        let a = push_routes(7, 3, n, 4, &byz, &node_of, h);
+        let b = push_routes(7, 3, n, 4, &byz, &node_of, h);
+        assert_eq!(a, b, "pure function of its key");
+        let total: usize = a.iter().map(|r| r.len()).sum();
+        assert!(total <= h * 4, "at most s pushes per honest sender");
+        for senders in &a {
+            for &sender in senders {
+                assert!(!byz[sender], "byzantine senders never use routes");
+            }
         }
     }
 }

@@ -82,15 +82,17 @@ fn eaf_csv(rows: &[EafRow]) -> String {
     out
 }
 
-/// Run one figure end to end. `threads_override` / `shards_override`
-/// force the round-engine worker and shard counts on every series config
-/// (None = keep the preset's value; results are identical either way).
+/// Run one figure end to end. `threads_override` / `shards_override` /
+/// `procs_override` force the round-engine worker, shard, and
+/// shard-process counts on every series config (None = keep the preset's
+/// value; results are identical either way).
 pub fn run_figure(
     fig: &Figure,
     scale: Scale,
     engine_override: Option<EngineKind>,
     threads_override: Option<usize>,
     shards_override: Option<usize>,
+    procs_override: Option<usize>,
     out_dir: &str,
 ) -> Result<FigureOutcome> {
     println!("figure {} — {}", fig.id, fig.title);
@@ -108,6 +110,9 @@ pub fn run_figure(
                 }
                 if let Some(shards) = shards_override {
                     cfg.shards = shards;
+                }
+                if let Some(procs) = procs_override {
+                    cfg.procs = procs;
                 }
                 histories.push(run_training(cfg)?);
             }

@@ -46,6 +46,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod testkit;
 pub mod util;
+pub mod wire;
 
 /// Crate-wide result alias (all fallible public APIs use `anyhow`).
 pub type Result<T> = anyhow::Result<T>;

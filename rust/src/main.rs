@@ -1,12 +1,15 @@
 //! `rpel` — the RPEL coordinator CLI (leader entrypoint).
 //!
 //! Commands:
-//!   train   — run one training config (TOML file or built-in preset)
-//!   figure  — regenerate a paper figure (fig1L..fig21, fig3 = EAF sim)
-//!   eaf     — Effective-adversarial-fraction simulation (Algorithm 2 core)
-//!   select  — Algorithm 2 hyper-parameter selection for (s, b̂)
-//!   list    — figures, presets (Tables 1–2), and artifact inventory
-//!   check   — verify the AOT artifact directory loads and executes
+//!   train        — run one training config (TOML file or built-in preset)
+//!   figure       — regenerate a paper figure (fig1L..fig21, fig3 = EAF sim)
+//!   eaf          — Effective-adversarial-fraction simulation (Algorithm 2 core)
+//!   select       — Algorithm 2 hyper-parameter selection for (s, b̂)
+//!   list         — figures, presets (Tables 1–2), and artifact inventory
+//!   check        — verify the AOT artifact directory loads and executes
+//!   shard-worker — host one honest shard for a `--procs N` coordinator
+//!                  (spawned internally; speaks the wire protocol on
+//!                  stdin/stdout)
 
 use rpel::cli::Args;
 use rpel::config::presets::{self, Scale};
@@ -24,8 +27,10 @@ USAGE:
               [--engine hlo|native] [--out results] [--seed N] [--rounds N]
               [--threads N]   (0 = all cores, 1 = serial; same results)
               [--shards N]    (node-shard partitions, default 1; same results)
+              [--procs N]     (shard worker processes, default 1; same results)
   rpel figure --id <fig1L|fig1R|...|fig21|all> [--scale tiny|paper]
               [--engine hlo|native] [--out results] [--threads N] [--shards N]
+              [--procs N]
   rpel eaf    --n <N> --b <B> [--t 200] [--sims 5] --grid 5,10,15,...
   rpel select --n <N> --b <B> [--t 200] [--q 0.49] [--sims 5]
               [--grid 2,...,n-1] [--exact] [--p 0.99]
@@ -51,6 +56,7 @@ fn main() {
         Some("select") => cmd_select(&args),
         Some("list") => cmd_list(&args),
         Some("check") => cmd_check(&args),
+        Some("shard-worker") => cmd_shard_worker(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -78,7 +84,7 @@ fn engine_override(args: &Args) -> Result<Option<EngineKind>, String> {
 
 fn cmd_train(args: &Args) -> CmdResult {
     args.check_known(&[
-        "config", "preset", "engine", "out", "seed", "rounds", "threads", "shards",
+        "config", "preset", "engine", "out", "seed", "rounds", "threads", "shards", "procs",
     ])?;
     let mut cfg = if let Some(path) = args.get("config") {
         config_file::load(path)?
@@ -119,6 +125,9 @@ fn cmd_train(args: &Args) -> CmdResult {
     if let Some(shards) = args.get_usize("shards")? {
         cfg.shards = shards;
     }
+    if let Some(procs) = args.get_usize("procs")? {
+        cfg.procs = procs;
+    }
     let hist = experiments::run_training(&cfg)?;
     let out = args.get_or("out", "results");
     let paths = write_histories(&format!("{out}/train"), &[hist])?;
@@ -127,13 +136,14 @@ fn cmd_train(args: &Args) -> CmdResult {
 }
 
 fn cmd_figure(args: &Args) -> CmdResult {
-    args.check_known(&["id", "scale", "engine", "out", "threads", "shards"])?;
+    args.check_known(&["id", "scale", "engine", "out", "threads", "shards", "procs"])?;
     let id = args.get("id").ok_or("figure needs --id")?;
     let scale =
         Scale::parse(args.get_or("scale", "tiny")).ok_or("scale must be tiny|paper")?;
     let engine = engine_override(args)?;
     let threads = args.get_usize("threads")?;
     let shards = args.get_usize("shards")?;
+    let procs = args.get_usize("procs")?;
     let out = args.get_or("out", "results");
     let figs: Vec<_> = if id == "all" {
         presets::all_figures().to_vec()
@@ -142,7 +152,8 @@ fn cmd_figure(args: &Args) -> CmdResult {
             .ok_or_else(|| format!("unknown figure '{id}' (try `rpel list`)"))?]
     };
     for fig in figs {
-        let outcome = experiments::run_figure(&fig, scale, engine, threads, shards, out)?;
+        let outcome =
+            experiments::run_figure(&fig, scale, engine, threads, shards, procs, out)?;
         println!("\n{}", experiments::summary_table(&outcome));
         println!("csv: {}\n", outcome.csv_paths.join(", "));
     }
@@ -281,6 +292,17 @@ fn cmd_check(args: &Args) -> CmdResult {
     println!("aggregate_mlp_tiny_m8_b2: out[0]={} ✓", out[0]);
     println!("artifact check OK");
     Ok(())
+}
+
+/// Host one honest shard for a multi-process coordinator: strict
+/// request/reply wire protocol on stdin/stdout (see `rpel::wire::proto`).
+/// Spawned by `Trainer` when `--procs N > 1`; not intended for manual use.
+fn cmd_shard_worker(args: &Args) -> CmdResult {
+    args.check_known(&[])?;
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    rpel::coordinator::proc::run_worker(stdin.lock(), stdout.lock())
+        .map_err(|e| format!("{e:#}").into())
 }
 
 /// Minimal env_logger replacement: RUST_LOG=debug|info|warn enables stderr

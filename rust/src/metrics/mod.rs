@@ -26,9 +26,18 @@ pub struct History {
     /// round — the *observed* b̂ (must stay ≤ the Algorithm-2 b̂ whp)
     pub observed_byz_max: Vec<usize>,
     pub evals: Vec<EvalPoint>,
-    /// communication accounting (paper's headline axis)
+    /// communication accounting (paper's headline axis): the protocol's
+    /// **nominal** per-round budget and its running total
     pub messages_per_round: usize,
     pub total_messages: usize,
+    /// model rows honest nodes **actually received**, per round — the
+    /// delivered ledger. It diverges from the nominal budget exactly in
+    /// the adversarial regimes the paper characterizes: DoS withholds
+    /// every Byzantine response, push mode wastes pushes to Byzantine
+    /// recipients, and the nominal epidemic budget n·s also counts the
+    /// Byzantine nodes' own pulls.
+    pub delivered_per_round: Vec<usize>,
+    pub total_delivered: usize,
     /// wall-clock seconds of the run (perf bookkeeping)
     pub wall_secs: f64,
 }
@@ -50,8 +59,12 @@ impl History {
         self.evals.last().map(|e| e.worst_acc).unwrap_or(0.0)
     }
 
+    /// Best average accuracy over the run's evaluations. Empty history
+    /// returns NaN — the same convention as [`History::final_train_loss`]
+    /// — so "no evals yet" is never conflated with a genuine 0% run.
     pub fn best_avg_accuracy(&self) -> f64 {
-        self.evals.iter().map(|e| e.avg_acc).fold(0.0, f64::max)
+        // f64::max ignores NaN, so the seed vanishes on non-empty input
+        self.evals.iter().map(|e| e.avg_acc).fold(f64::NAN, f64::max)
     }
 
     pub fn final_train_loss(&self) -> f64 {
@@ -88,6 +101,19 @@ impl History {
             "total_messages".into(),
             Json::Num(self.total_messages as f64),
         );
+        obj.insert(
+            "total_delivered".into(),
+            Json::Num(self.total_delivered as f64),
+        );
+        obj.insert(
+            "delivered_per_round".into(),
+            Json::Arr(
+                self.delivered_per_round
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
+        );
         obj.insert("wall_secs".into(), Json::Num(self.wall_secs));
         obj.insert(
             "train_loss".into(),
@@ -112,16 +138,23 @@ impl History {
         Json::Obj(obj)
     }
 
-    /// One line in the paper-style series report.
+    /// One line in the paper-style series report. A history with no
+    /// evaluations prints `best=   n/a` rather than a fake 0% (or NaN).
     pub fn report_line(&self) -> String {
+        let best = self.best_avg_accuracy();
+        let best = if best.is_nan() {
+            "   n/a".to_string()
+        } else {
+            format!("{best:>6.3}")
+        };
         format!(
-            "{:<36} final_acc={:>6.3} worst={:>6.3} best={:>6.3} loss={:>7.4} msgs/round={} ({:.1}s)",
+            "{:<36} final_acc={:>6.3} worst={:>6.3} best={best} loss={:>7.4} msgs/round={} delivered={} ({:.1}s)",
             self.name,
             self.final_avg_accuracy(),
             self.final_worst_accuracy(),
-            self.best_avg_accuracy(),
             self.final_train_loss(),
             self.messages_per_round,
+            self.total_delivered,
             self.wall_secs,
         )
     }
@@ -166,6 +199,8 @@ mod tests {
             },
         ];
         h.total_messages = 1200;
+        h.delivered_per_round = vec![110, 110, 110];
+        h.total_delivered = 330;
         h
     }
 
@@ -183,6 +218,45 @@ mod tests {
         let h = History::new("empty", 0);
         assert_eq!(h.final_avg_accuracy(), 0.0);
         assert!(h.final_train_loss().is_nan());
+        // "no evals yet" must be NaN, not a fake 0% (same convention as
+        // final_train_loss) — and report_line must stay printable
+        assert!(h.best_avg_accuracy().is_nan());
+        assert!(h.report_line().contains("best=   n/a"));
+    }
+
+    #[test]
+    fn best_accuracy_distinguishes_empty_from_genuine_zero() {
+        let mut h = History::new("zero_run", 10);
+        h.evals = vec![EvalPoint {
+            round: 1,
+            avg_acc: 0.0,
+            worst_acc: 0.0,
+            avg_loss: 9.0,
+        }];
+        // a real 0%-accuracy run reports 0.0, not NaN
+        assert_eq!(h.best_avg_accuracy(), 0.0);
+        assert!(h.report_line().contains("best= 0.000"));
+    }
+
+    #[test]
+    fn delivered_ledger_exported() {
+        let h = sample();
+        let j = h.to_json();
+        let parsed = crate::util::json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(
+            parsed.get("total_delivered").unwrap().as_f64().unwrap(),
+            330.0
+        );
+        assert_eq!(
+            parsed
+                .get("delivered_per_round")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            3
+        );
+        assert!(h.report_line().contains("delivered=330"));
     }
 
     #[test]

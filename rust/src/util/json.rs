@@ -131,13 +131,21 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
-/// Parse error with byte position.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// Parse error with byte position. (Manual `Display`/`Error` impls —
+/// `thiserror` is not in the offline crate set.)
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

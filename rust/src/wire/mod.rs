@@ -1,0 +1,370 @@
+//! Length-prefixed binary wire format for the multi-process shard engine.
+//!
+//! The coordinator and its `rpel shard-worker` processes exchange frames
+//! over stdin/stdout pipes: `[u32 LE length][payload]`. Payloads are built
+//! from a handful of primitives — LE integers, IEEE-754 bit patterns for
+//! floats, and `u32`-length-prefixed sequences — so every message has
+//! exactly one byte representation and `encode ∘ decode = id` **bit-wise**
+//! (floats round-trip through `to_bits`/`from_bits`, never through text).
+//! That byte-exactness is what lets a shipped [`proto`] round payload
+//! reproduce the in-process engine's results to the last ulp; it is pinned
+//! by golden-vector and property tests in `rust/tests/wire_roundtrip.rs`.
+//!
+//! The codec is deliberately std-only (the offline crate set has no serde)
+//! and paranoid on the read side: every length is bounds-checked against
+//! the remaining buffer before allocation, truncated frames and trailing
+//! bytes are errors, and a [`MAX_FRAME`] cap turns stream corruption into
+//! an actionable error instead of an absurd allocation.
+
+pub mod proto;
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Upper bound on one frame's payload (1 GiB). Honest payloads are
+/// `O(h·d·4)` bytes; anything near the cap is stream corruption.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Append-only payload builder.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// IEEE-754 bit pattern, LE — bit-exact, never text.
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// IEEE-754 bit pattern, LE — bit-exact, never text.
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// `u32` length prefix + raw bytes.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// UTF-8 string as [`Writer::put_bytes`].
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+
+    /// `u32` count + per-element LE `u32`s (usize values must fit).
+    pub fn put_u32s(&mut self, v: &[u32]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_u32(x);
+        }
+    }
+
+    /// `u32` count + per-element f64 bit patterns.
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
+    /// Rectangular f32 row block: `[u32 rows][u32 d][rows·d f32]`.
+    /// Every row must have the same length.
+    pub fn put_f32_rows<R: AsRef<[f32]>>(&mut self, rows: &[R]) {
+        let d = rows.first().map(|r| r.as_ref().len()).unwrap_or(0);
+        self.put_u32(rows.len() as u32);
+        self.put_u32(d as u32);
+        for row in rows {
+            let row = row.as_ref();
+            debug_assert_eq!(row.len(), d, "ragged row block");
+            for &x in row {
+                self.put_f32(x);
+            }
+        }
+    }
+}
+
+/// Bounds-checked payload cursor.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "wire: truncated payload (need {n} bytes, {} left)",
+                self.remaining()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).context("wire: invalid UTF-8 string")
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).context("wire: u32 count overflow")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(8).context("wire: f64 count overflow")?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|b| {
+                f64::from_bits(u64::from_le_bytes([
+                    b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                ]))
+            })
+            .collect())
+    }
+
+    /// Inverse of [`Writer::put_f32_rows`].
+    pub fn f32_rows(&mut self) -> Result<Vec<Vec<f32>>> {
+        let rows = self.u32()? as usize;
+        let d = self.u32()? as usize;
+        if rows > 0 && d == 0 {
+            // zero-width rows never occur on the encode side; without
+            // this check a corrupt (rows=u32::MAX, d=0) header would
+            // pass the byte-level bounds check and allocate ~4G rows
+            bail!("wire: zero-width row block with {rows} rows");
+        }
+        let total = rows
+            .checked_mul(d)
+            .and_then(|n| n.checked_mul(4))
+            .context("wire: row block size overflow")?;
+        let raw = self.take(total)?;
+        let mut out = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row: Vec<f32> = raw[r * d * 4..(r + 1) * d * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+                .collect();
+            out.push(row);
+        }
+        Ok(out)
+    }
+
+    /// Error on trailing bytes — every message must consume its payload
+    /// exactly, so version skew fails loudly instead of silently.
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("wire: {} trailing bytes after message", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+/// Write one `[u32 length][payload]` frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("wire: frame of {} bytes exceeds cap {MAX_FRAME}", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary (the
+/// peer closed the stream between messages — an orderly shutdown).
+pub fn read_frame_opt(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let k = r.read(&mut header[got..])?;
+        if k == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("wire: stream closed mid-frame header");
+        }
+        got += k;
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    if len > MAX_FRAME {
+        bail!("wire: frame length {len} exceeds cap {MAX_FRAME} (corrupt stream?)");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)
+        .context("wire: stream closed mid-frame body")?;
+    Ok(Some(buf))
+}
+
+/// Read one frame; EOF anywhere is an error (the peer died mid-protocol).
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    read_frame_opt(r)?.context("wire: unexpected end of stream")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip_bitwise() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f32(-0.0);
+        w.put_f64(f64::MIN_POSITIVE);
+        w.put_str("héllo");
+        w.put_u32s(&[0, 1, u32::MAX]);
+        w.put_f64s(&[1.5, -2.25]);
+        w.put_f32_rows(&[vec![1.0f32, 2.0], vec![3.0, 4.0]]);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), f64::MIN_POSITIVE.to_bits());
+        assert_eq!(r.string().unwrap(), "héllo");
+        assert_eq!(r.u32s().unwrap(), vec![0, 1, u32::MAX]);
+        assert_eq!(r.f64s().unwrap(), vec![1.5, -2.25]);
+        assert_eq!(
+            r.f32_rows().unwrap(),
+            vec![vec![1.0f32, 2.0], vec![3.0, 4.0]]
+        );
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = Writer::new();
+        w.put_f64s(&[1.0, 2.0, 3.0]);
+        let buf = w.into_bytes();
+        for cut in 0..buf.len() {
+            let mut r = Reader::new(&buf[..cut]);
+            assert!(r.f64s().is_err(), "cut={cut} should fail");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut w = Writer::new();
+        w.put_u32(1);
+        w.put_u8(0xAA);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        r.u32().unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn absurd_length_prefix_bounded() {
+        // a corrupt u32 length must not trigger a giant allocation
+        let buf = u32::MAX.to_le_bytes();
+        let mut r = Reader::new(&buf);
+        assert!(r.f64s().is_err());
+        assert!(Reader::new(&buf).f32_rows().is_err());
+        // zero-width rows sidestep the byte bound: must still be rejected
+        let mut zw = Vec::new();
+        zw.extend_from_slice(&u32::MAX.to_le_bytes()); // rows
+        zw.extend_from_slice(&0u32.to_le_bytes()); // d = 0
+        assert!(Reader::new(&zw).f32_rows().is_err());
+        // while the legitimate empty block still decodes
+        let mut empty = Vec::new();
+        empty.extend_from_slice(&0u32.to_le_bytes());
+        empty.extend_from_slice(&0u32.to_le_bytes());
+        assert_eq!(Reader::new(&empty).f32_rows().unwrap(), Vec::<Vec<f32>>::new());
+    }
+
+    #[test]
+    fn frame_io_round_trips_and_handles_eof() {
+        let mut stream = Vec::new();
+        write_frame(&mut stream, b"abc").unwrap();
+        write_frame(&mut stream, b"").unwrap();
+        let mut cur = std::io::Cursor::new(stream);
+        assert_eq!(read_frame(&mut cur).unwrap(), b"abc");
+        assert_eq!(read_frame(&mut cur).unwrap(), b"");
+        assert!(read_frame_opt(&mut cur).unwrap().is_none());
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_header_rejected() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cur = std::io::Cursor::new(stream);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn mid_header_eof_is_an_error() {
+        let mut cur = std::io::Cursor::new(vec![1u8, 0]);
+        assert!(read_frame_opt(&mut cur).is_err());
+    }
+}

@@ -1,0 +1,449 @@
+//! Round-protocol messages for the multi-process shard engine.
+//!
+//! One worker process owns one contiguous honest shard and converses with
+//! the coordinator in strict request/reply lockstep:
+//!
+//! ```text
+//! coordinator → worker     worker → coordinator
+//! ------------------       --------------------
+//! Init                     InitOk | Failed        (handshake, once)
+//! HalfStep{round}          Snapshot{losses,halves}  (phase 1: the shipped
+//!                                                    RoundDigest payload)
+//! Aggregate{round,         RoundDone{byz_seen,
+//!   digest, halves}          received, params}    (phases 3–5)
+//! Shutdown (or EOF)        —                      (worker exits 0)
+//! ```
+//!
+//! `Snapshot` is the promoted [`crate::coordinator::Trainer`] round
+//! digest: the shard's half-step rows in ascending honest order plus its
+//! per-node losses. The coordinator folds all shards' snapshots — in
+//! ascending honest-node order, exactly as the in-process engine folds
+//! borrowed rows — into the global [`HonestDigest`], then broadcasts that
+//! digest and the full half-step table back in `Aggregate` so every
+//! worker can serve its victims' pulls and craft against the same
+//! omniscient context. All floats travel as IEEE bit patterns, so a
+//! multi-process run is bit-identical with its in-process twin.
+//!
+//! Any processing error on the worker is reported as `Failed{message}`
+//! before the worker exits, so the coordinator surfaces the root cause
+//! rather than a bare broken pipe.
+
+use super::{Reader, Writer};
+use crate::attacks::HonestDigest;
+use anyhow::{bail, Result};
+
+/// Bumped on any layout change; both sides verify it in the handshake.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+mod tag {
+    pub const INIT: u8 = 0x01;
+    pub const HALF_STEP: u8 = 0x02;
+    pub const AGGREGATE: u8 = 0x03;
+    pub const SHUTDOWN: u8 = 0x04;
+    pub const INIT_OK: u8 = 0x81;
+    pub const SNAPSHOT: u8 = 0x82;
+    pub const ROUND_DONE: u8 = 0x83;
+    pub const FAILED: u8 = 0xFF;
+}
+
+/// Coordinator → worker.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToWorker {
+    /// Handshake: the full experiment config (TOML text), this worker's
+    /// index, and the total process-shard count it partitions against.
+    Init {
+        config_toml: String,
+        worker: u32,
+        procs: u32,
+    },
+    /// Run phase 1 (local half-steps) for round `round`.
+    HalfStep { round: u64 },
+    /// Phases 3–5: the folded honest digest plus the full half-step
+    /// table (h rows, ascending honest order) to serve pulls from.
+    Aggregate {
+        round: u64,
+        digest: WireDigest,
+        halves: Vec<Vec<f32>>,
+    },
+    /// Orderly exit (EOF on stdin means the same).
+    Shutdown,
+}
+
+/// Worker → coordinator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FromWorker {
+    /// Handshake echo: the shard range the worker derived for itself.
+    InitOk { start: u64, len: u64, d: u64 },
+    /// The shipped round digest: per-node losses + half-step rows for
+    /// the worker's shard, ascending honest order. `round` echoes the
+    /// request, so a reply stranded by an aborted round can never be
+    /// silently consumed as a later round's.
+    Snapshot {
+        round: u64,
+        losses: Vec<f64>,
+        halves: Vec<Vec<f32>>,
+    },
+    /// Round completed: per-node Byzantine-rows-seen and delivered-model
+    /// counts, plus the committed params (the coordinator's mirror rows).
+    /// `round` echoes the request (see [`FromWorker::Snapshot`]).
+    RoundDone {
+        round: u64,
+        byz_seen: Vec<u32>,
+        received: Vec<u32>,
+        params: Vec<Vec<f32>>,
+    },
+    /// Terminal worker-side error, shipped before exiting.
+    Failed { message: String },
+}
+
+/// [`HonestDigest`] as a wire payload (f64 bit patterns).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireDigest {
+    pub count: u64,
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+    pub prev_mean: Vec<f64>,
+}
+
+impl WireDigest {
+    pub fn from_digest(d: &HonestDigest) -> WireDigest {
+        WireDigest {
+            count: d.count as u64,
+            mean: d.mean.clone(),
+            std: d.std.clone(),
+            prev_mean: d.prev_mean.clone(),
+        }
+    }
+
+    pub fn into_digest(self) -> HonestDigest {
+        HonestDigest {
+            count: self.count as usize,
+            mean: self.mean,
+            std: self.std,
+            prev_mean: self.prev_mean,
+        }
+    }
+}
+
+fn put_digest(w: &mut Writer, count: u64, mean: &[f64], std: &[f64], prev_mean: &[f64]) {
+    w.put_u64(count);
+    w.put_f64s(mean);
+    w.put_f64s(std);
+    w.put_f64s(prev_mean);
+}
+
+fn read_digest(r: &mut Reader<'_>) -> Result<WireDigest> {
+    Ok(WireDigest {
+        count: r.u64()?,
+        mean: r.f64s()?,
+        std: r.f64s()?,
+        prev_mean: r.f64s()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Allocation-light encoders for the per-round hot paths (take references;
+// the enum encoders below delegate to these).
+// ---------------------------------------------------------------------------
+
+pub fn encode_init(config_toml: &str, worker: u32, procs: u32) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::INIT);
+    w.put_u32(PROTOCOL_VERSION);
+    w.put_u32(worker);
+    w.put_u32(procs);
+    w.put_str(config_toml);
+    w.into_bytes()
+}
+
+pub fn encode_half_step(round: u64) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::HALF_STEP);
+    w.put_u64(round);
+    w.into_bytes()
+}
+
+pub fn encode_aggregate<R: AsRef<[f32]>>(
+    round: u64,
+    digest: &HonestDigest,
+    halves: &[R],
+) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::AGGREGATE);
+    w.put_u64(round);
+    put_digest(
+        &mut w,
+        digest.count as u64,
+        &digest.mean,
+        &digest.std,
+        &digest.prev_mean,
+    );
+    w.put_f32_rows(halves);
+    w.into_bytes()
+}
+
+pub fn encode_shutdown() -> Vec<u8> {
+    vec![tag::SHUTDOWN]
+}
+
+pub fn encode_init_ok(start: u64, len: u64, d: u64) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::INIT_OK);
+    w.put_u32(PROTOCOL_VERSION);
+    w.put_u64(start);
+    w.put_u64(len);
+    w.put_u64(d);
+    w.into_bytes()
+}
+
+pub fn encode_snapshot<R: AsRef<[f32]>>(round: u64, losses: &[f64], halves: &[R]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::SNAPSHOT);
+    w.put_u64(round);
+    w.put_f64s(losses);
+    w.put_f32_rows(halves);
+    w.into_bytes()
+}
+
+pub fn encode_round_done<R: AsRef<[f32]>>(
+    round: u64,
+    byz_seen: &[u32],
+    received: &[u32],
+    params: &[R],
+) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::ROUND_DONE);
+    w.put_u64(round);
+    w.put_u32s(byz_seen);
+    w.put_u32s(received);
+    w.put_f32_rows(params);
+    w.into_bytes()
+}
+
+pub fn encode_failed(message: &str) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::FAILED);
+    w.put_str(message);
+    w.into_bytes()
+}
+
+// ---------------------------------------------------------------------------
+// Enum encode/decode (decode side of the protocol; encode kept for tests
+// and symmetry)
+// ---------------------------------------------------------------------------
+
+pub fn encode_to_worker(msg: &ToWorker) -> Vec<u8> {
+    match msg {
+        ToWorker::Init {
+            config_toml,
+            worker,
+            procs,
+        } => encode_init(config_toml, *worker, *procs),
+        ToWorker::HalfStep { round } => encode_half_step(*round),
+        ToWorker::Aggregate {
+            round,
+            digest,
+            halves,
+        } => {
+            let mut w = Writer::new();
+            w.put_u8(tag::AGGREGATE);
+            w.put_u64(*round);
+            put_digest(
+                &mut w,
+                digest.count,
+                &digest.mean,
+                &digest.std,
+                &digest.prev_mean,
+            );
+            w.put_f32_rows(halves);
+            w.into_bytes()
+        }
+        ToWorker::Shutdown => encode_shutdown(),
+    }
+}
+
+pub fn decode_to_worker(buf: &[u8]) -> Result<ToWorker> {
+    let mut r = Reader::new(buf);
+    let msg = match r.u8()? {
+        tag::INIT => {
+            let version = r.u32()?;
+            if version != PROTOCOL_VERSION {
+                bail!(
+                    "wire: protocol version mismatch (peer {version}, ours {PROTOCOL_VERSION})"
+                );
+            }
+            let worker = r.u32()?;
+            let procs = r.u32()?;
+            let config_toml = r.string()?;
+            ToWorker::Init {
+                config_toml,
+                worker,
+                procs,
+            }
+        }
+        tag::HALF_STEP => ToWorker::HalfStep { round: r.u64()? },
+        tag::AGGREGATE => {
+            let round = r.u64()?;
+            let digest = read_digest(&mut r)?;
+            let halves = r.f32_rows()?;
+            ToWorker::Aggregate {
+                round,
+                digest,
+                halves,
+            }
+        }
+        tag::SHUTDOWN => ToWorker::Shutdown,
+        other => bail!("wire: unknown coordinator message tag {other:#04x}"),
+    };
+    r.finish()?;
+    Ok(msg)
+}
+
+pub fn encode_from_worker(msg: &FromWorker) -> Vec<u8> {
+    match msg {
+        FromWorker::InitOk { start, len, d } => encode_init_ok(*start, *len, *d),
+        FromWorker::Snapshot {
+            round,
+            losses,
+            halves,
+        } => encode_snapshot(*round, losses, halves),
+        FromWorker::RoundDone {
+            round,
+            byz_seen,
+            received,
+            params,
+        } => encode_round_done(*round, byz_seen, received, params),
+        FromWorker::Failed { message } => encode_failed(message),
+    }
+}
+
+pub fn decode_from_worker(buf: &[u8]) -> Result<FromWorker> {
+    let mut r = Reader::new(buf);
+    let msg = match r.u8()? {
+        tag::INIT_OK => {
+            let version = r.u32()?;
+            if version != PROTOCOL_VERSION {
+                bail!(
+                    "wire: protocol version mismatch (peer {version}, ours {PROTOCOL_VERSION})"
+                );
+            }
+            FromWorker::InitOk {
+                start: r.u64()?,
+                len: r.u64()?,
+                d: r.u64()?,
+            }
+        }
+        tag::SNAPSHOT => FromWorker::Snapshot {
+            round: r.u64()?,
+            losses: r.f64s()?,
+            halves: r.f32_rows()?,
+        },
+        tag::ROUND_DONE => FromWorker::RoundDone {
+            round: r.u64()?,
+            byz_seen: r.u32s()?,
+            received: r.u32s()?,
+            params: r.f32_rows()?,
+        },
+        tag::FAILED => FromWorker::Failed {
+            message: r.string()?,
+        },
+        other => bail!("wire: unknown worker message tag {other:#04x}"),
+    };
+    r.finish()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_worker_messages_round_trip() {
+        let msgs = [
+            ToWorker::Init {
+                config_toml: "task = \"tiny\"".into(),
+                worker: 1,
+                procs: 3,
+            },
+            ToWorker::HalfStep { round: 42 },
+            ToWorker::Aggregate {
+                round: 7,
+                digest: WireDigest {
+                    count: 5,
+                    mean: vec![0.5, -0.25],
+                    std: vec![1.0, 0.0],
+                    prev_mean: vec![-0.0, 2.0],
+                },
+                halves: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            },
+            ToWorker::Shutdown,
+        ];
+        for msg in &msgs {
+            let buf = encode_to_worker(msg);
+            assert_eq!(&decode_to_worker(&buf).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn from_worker_messages_round_trip() {
+        let msgs = [
+            FromWorker::InitOk {
+                start: 3,
+                len: 4,
+                d: 10,
+            },
+            FromWorker::Snapshot {
+                round: 11,
+                losses: vec![0.125, 2.0],
+                halves: vec![vec![-1.5f32; 3], vec![0.0f32; 3]],
+            },
+            FromWorker::RoundDone {
+                round: 12,
+                byz_seen: vec![0, 2],
+                received: vec![6, 6],
+                params: vec![vec![9.0f32, 8.0], vec![7.0, 6.0]],
+            },
+            FromWorker::Failed {
+                message: "boom".into(),
+            },
+        ];
+        for msg in &msgs {
+            let buf = encode_from_worker(msg);
+            assert_eq!(&decode_from_worker(&buf).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn digest_conversion_is_lossless() {
+        let mut d = HonestDigest::new(3);
+        let r1 = [1.0f32, 2.0, 3.0];
+        let r2 = [3.0f32, 2.0, 1.0];
+        d.recompute(&[&r1, &r2], &[&r2, &r1], true);
+        let back = WireDigest::from_digest(&d).into_digest();
+        assert_eq!(back.count, d.count);
+        assert_eq!(back.mean, d.mean);
+        assert_eq!(back.std, d.std);
+        assert_eq!(back.prev_mean, d.prev_mean);
+    }
+
+    #[test]
+    fn version_mismatch_detected() {
+        let mut buf = encode_init("x", 0, 1);
+        buf[1] ^= 0x40; // corrupt the version field
+        assert!(decode_to_worker(&buf).is_err());
+    }
+
+    #[test]
+    fn unknown_tags_and_truncations_error() {
+        assert!(decode_to_worker(&[0x7E]).is_err());
+        assert!(decode_from_worker(&[0x00]).is_err());
+        let full = encode_to_worker(&ToWorker::HalfStep { round: 1 });
+        for cut in 0..full.len() {
+            assert!(decode_to_worker(&full[..cut]).is_err(), "cut={cut}");
+        }
+        // trailing garbage rejected
+        let mut padded = full.clone();
+        padded.push(0);
+        assert!(decode_to_worker(&padded).is_err());
+    }
+}

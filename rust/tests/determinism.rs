@@ -1,10 +1,12 @@
 //! Bit-level reproducibility of the round engine: the same config must
 //! produce an identical `History` (and identical final models) on every
 //! run — and, because all round-path randomness is counter-keyed per
-//! `(seed, round, node)` and the attack digest is folded in global honest
-//! order, for **every (shards × threads) combination**. These are exact
-//! comparisons, not tolerances: the per-node RNG streams make this a hard
-//! guarantee, not a flake.
+//! `(seed, round, node)`, the attack digest is folded in global honest
+//! order, and the wire codec ships IEEE bit patterns, for **every
+//! (procs × shards × threads) combination** — including the
+//! multi-process engine, whose shard workers live in separate `rpel
+//! shard-worker` processes. These are exact comparisons, not tolerances:
+//! the per-node RNG streams make this a hard guarantee, not a flake.
 
 use rpel::aggregation::gossip::GossipRuleKind;
 use rpel::attacks::AttackKind;
@@ -53,6 +55,14 @@ fn assert_bit_identical(label: &str, a: &(History, Vec<Vec<f32>>), b: &(History,
         "{label}: observed_byz_max"
     );
     assert_eq!(a.0.total_messages, b.0.total_messages, "{label}: messages");
+    assert_eq!(
+        a.0.delivered_per_round, b.0.delivered_per_round,
+        "{label}: delivered_per_round"
+    );
+    assert_eq!(
+        a.0.total_delivered, b.0.total_delivered,
+        "{label}: total_delivered"
+    );
     assert_eq!(a.0.evals.len(), b.0.evals.len(), "{label}: eval count");
     for (ea, eb) in a.0.evals.iter().zip(&b.0.evals) {
         assert_eq!(ea.round, eb.round, "{label}: eval round");
@@ -211,6 +221,75 @@ fn fixed_graph_shard_grid_is_invariant() {
             &run_collect(&cfg),
         );
     }
+}
+
+/// Point the trainer's worker spawner at the cargo-built `rpel` binary
+/// (test binaries live in `deps/`, where the default resolution may not
+/// find it). Uses the library's `OnceLock` hook rather than
+/// `std::env::set_var`, which would race with concurrent spawns.
+fn enable_worker_bin() {
+    rpel::coordinator::proc::set_worker_bin(env!("CARGO_BIN_EXE_rpel"));
+}
+
+#[test]
+fn multi_process_engine_is_bit_identical_on_epidemic() {
+    // the tentpole guarantee: shipping the RoundDigest as a wire payload
+    // changes nothing — `--procs 2` (and 3) reproduce the in-process
+    // engine bit for bit, ALIE digest and all
+    enable_worker_bin();
+    let reference = run_collect(&base_cfg());
+    for procs in [2usize, 3] {
+        let mut cfg = base_cfg();
+        cfg.procs = procs;
+        cfg.threads = 2;
+        assert_bit_identical(
+            &format!("epidemic procs={procs} vs in-process"),
+            &reference,
+            &run_collect(&cfg),
+        );
+    }
+}
+
+#[test]
+fn multi_process_engine_is_bit_identical_on_push() {
+    use rpel::config::Topology;
+    enable_worker_bin();
+    let mut serial = base_cfg();
+    serial.topology = Topology::EpidemicPush { s: 6 };
+    serial.attack = AttackKind::SignFlip;
+    let reference = run_collect(&serial);
+    let mut cfg = serial.clone();
+    cfg.procs = 2;
+    assert_bit_identical("push procs=2 vs in-process", &reference, &run_collect(&cfg));
+}
+
+#[test]
+fn multi_process_engine_is_bit_identical_on_fixed_graph() {
+    enable_worker_bin();
+    let mut serial = base_cfg();
+    serial.topology = rpel::config::Topology::FixedGraph { edges: 24 };
+    serial.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
+    let reference = run_collect(&serial);
+    let mut cfg = serial.clone();
+    cfg.procs = 2;
+    assert_bit_identical(
+        "graph procs=2 vs in-process",
+        &reference,
+        &run_collect(&cfg),
+    );
+}
+
+#[test]
+fn multi_process_engine_matches_under_dos_withholding() {
+    // DoS is where the delivered-message ledger diverges from the
+    // nominal budget; the cross-process ledger must agree exactly
+    enable_worker_bin();
+    let mut serial = base_cfg();
+    serial.attack = AttackKind::Dos;
+    let reference = run_collect(&serial);
+    let mut cfg = serial.clone();
+    cfg.procs = 3;
+    assert_bit_identical("dos procs=3 vs in-process", &reference, &run_collect(&cfg));
 }
 
 #[test]

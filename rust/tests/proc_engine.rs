@@ -1,0 +1,138 @@
+//! Multi-process shard-engine failure modes: a worker that dies
+//! mid-round must surface as an **actionable error** on the coordinator
+//! — naming the worker, its honest range, and its exit status — never a
+//! hang; and the `rpel shard-worker` subcommand must be robust against a
+//! garbage or closed stream.
+
+use rpel::config::{ExperimentConfig, Topology};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+use std::io::Write;
+use std::process::{Command, Stdio};
+
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_rpel");
+
+fn enable_worker_bin() {
+    // OnceLock-backed hook: env::set_var would race with the sibling
+    // tests that are concurrently Command::spawn-ing workers
+    rpel::coordinator::proc::set_worker_bin(WORKER_BIN);
+}
+
+fn proc_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = "proc_crash".into();
+    cfg.n = 10;
+    cfg.b = 2;
+    cfg.topology = Topology::Epidemic { s: 5 };
+    cfg.bhat = Some(2);
+    cfg.rounds = 50;
+    cfg.batch = 8;
+    cfg.samples_per_node = 32;
+    cfg.test_samples = 64;
+    cfg.eval_every = 100;
+    cfg.procs = 2;
+    cfg.threads = 1;
+    cfg
+}
+
+#[test]
+fn killed_worker_surfaces_actionable_error_not_a_hang() {
+    enable_worker_bin();
+    let cfg = proc_cfg();
+    let mut t = Trainer::from_config(&cfg).expect("multi-process trainer builds");
+    assert_eq!(t.shard_count(), 2);
+    // one healthy round first, so the kill lands mid-run
+    t.round(0).expect("healthy round");
+
+    assert!(t.kill_shard_worker(1), "worker 1 should be killable");
+    let mut failure = None;
+    for round in 1..cfg.rounds {
+        if let Err(e) = t.round(round) {
+            failure = Some(format!("{e:#}"));
+            break;
+        }
+    }
+    let msg = failure.expect("rounds must fail after the worker died");
+    assert!(
+        msg.contains("shard worker 1"),
+        "error should name the dead worker: {msg}"
+    );
+    assert!(
+        msg.contains("honest nodes"),
+        "error should name the orphaned range: {msg}"
+    );
+}
+
+#[test]
+fn in_process_backends_are_not_killable() {
+    let mut cfg = proc_cfg();
+    cfg.procs = 1;
+    cfg.shards = 2;
+    cfg.rounds = 2;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    assert!(!t.kill_shard_worker(0));
+    assert!(!t.kill_shard_worker(99));
+    t.run().unwrap();
+}
+
+#[test]
+fn worker_rejects_garbage_stream_without_hanging() {
+    let mut child = Command::new(WORKER_BIN)
+        .arg("shard-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn shard-worker");
+    // an absurd frame-length header: must be rejected, not allocated
+    // (ignore write errors — the worker may exit before the write lands)
+    let _ = child.stdin.take().unwrap().write_all(&[0xFF; 64]);
+    let status = child.wait().expect("worker exits");
+    assert!(!status.success(), "garbage stream must be a failure");
+}
+
+#[test]
+fn worker_exits_cleanly_on_immediate_eof() {
+    let mut child = Command::new(WORKER_BIN)
+        .arg("shard-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn shard-worker");
+    drop(child.stdin.take()); // close before Init: an orderly no-op
+    let status = child.wait().expect("worker exits");
+    assert!(status.success(), "EOF before Init is a clean shutdown");
+}
+
+#[test]
+fn worker_reports_bad_config_instead_of_dying_silently() {
+    use rpel::wire;
+    use rpel::wire::proto::{self, FromWorker};
+
+    let mut child = Command::new(WORKER_BIN)
+        .arg("shard-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn shard-worker");
+    let mut stdin = child.stdin.take().unwrap();
+    wire::write_frame(
+        &mut stdin,
+        &proto::encode_init("task = \"not_a_task\"", 0, 2),
+    )
+    .unwrap();
+    stdin.flush().unwrap();
+    let mut stdout = child.stdout.take().unwrap();
+    let frame = wire::read_frame(&mut stdout).expect("worker replies before exiting");
+    match proto::decode_from_worker(&frame).unwrap() {
+        FromWorker::Failed { message } => {
+            assert!(message.contains("bad config"), "{message}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    drop(stdin);
+    let status = child.wait().unwrap();
+    assert!(!status.success());
+}

@@ -1,0 +1,274 @@
+//! Wire-codec guarantees behind the multi-process shard engine:
+//!
+//! * **encode ∘ decode = id**, bit-wise, for random shard payloads
+//!   (`testkit::forall` over random h/d row blocks and f64 digest
+//!   partials) — the property cross-process bit-identity rests on;
+//! * **committed golden vectors**: the byte layout is pinned literally,
+//!   so an accidental codec change breaks loudly instead of silently
+//!   desyncing coordinator and workers;
+//! * truncated or corrupt buffers decode to errors, never panics.
+
+use rpel::attacks::HonestDigest;
+use rpel::testkit::{forall, Gen};
+use rpel::util::rng::Rng;
+use rpel::wire::proto::{self, FromWorker, ToWorker, WireDigest};
+
+fn bits32(rows: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    rows.iter()
+        .map(|r| r.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+fn bits64(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random shard snapshot: h in [1,6] nodes, d in [1,9] coords, values
+/// spanning signs, magnitudes, and exact zeros.
+fn snapshot_gen() -> Gen<(Vec<f64>, Vec<Vec<f32>>)> {
+    Gen::plain(|rng: &mut Rng| {
+        let h = 1 + rng.index(6);
+        let d = 1 + rng.index(9);
+        let losses: Vec<f64> = (0..h).map(|_| (rng.f64() - 0.5) * 1e3).collect();
+        let halves: Vec<Vec<f32>> = (0..h)
+            .map(|_| {
+                (0..d)
+                    .map(|_| {
+                        let x = (rng.f32() - 0.5) * 2.0;
+                        if x.abs() < 0.01 {
+                            0.0
+                        } else {
+                            x * 10f32.powi(rng.index(7) as i32 - 3)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        (losses, halves)
+    })
+}
+
+#[test]
+fn snapshot_encode_decode_is_identity() {
+    forall(300, 0xA11CE, snapshot_gen(), |(losses, halves)| {
+        let buf = proto::encode_snapshot(41, losses, halves);
+        match proto::decode_from_worker(&buf) {
+            Ok(FromWorker::Snapshot {
+                round,
+                losses: l2,
+                halves: h2,
+            }) => round == 41 && bits64(losses) == bits64(&l2) && bits32(halves) == bits32(&h2),
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn aggregate_encode_decode_is_identity_with_f64_partials() {
+    forall(300, 0xD16E57, snapshot_gen(), |(partials, halves)| {
+        // reuse the generated f64 vector as digest partials
+        let digest = HonestDigest {
+            count: partials.len(),
+            mean: partials.clone(),
+            std: partials.iter().map(|x| x.abs()).collect(),
+            prev_mean: partials.iter().map(|x| -x).collect(),
+        };
+        let buf = proto::encode_aggregate(7, &digest, halves);
+        match proto::decode_to_worker(&buf) {
+            Ok(ToWorker::Aggregate {
+                round,
+                digest: d2,
+                halves: h2,
+            }) => {
+                round == 7
+                    && d2.count == digest.count as u64
+                    && bits64(&digest.mean) == bits64(&d2.mean)
+                    && bits64(&digest.std) == bits64(&d2.std)
+                    && bits64(&digest.prev_mean) == bits64(&d2.prev_mean)
+                    && bits32(halves) == bits32(&h2)
+            }
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn round_done_encode_decode_is_identity() {
+    forall(200, 0xB0B, snapshot_gen(), |(_, params)| {
+        let n = params.len();
+        let byz: Vec<u32> = (0..n as u32).collect();
+        let recv: Vec<u32> = (0..n as u32).map(|x| x * 3 + 1).collect();
+        let buf = proto::encode_round_done(9, &byz, &recv, params);
+        match proto::decode_from_worker(&buf) {
+            Ok(FromWorker::RoundDone {
+                round,
+                byz_seen,
+                received,
+                params: p2,
+            }) => round == 9 && byz_seen == byz && received == recv && bits32(params) == bits32(&p2),
+            _ => false,
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Golden vectors: the committed byte layout. If any of these fail, the
+// wire format changed — bump PROTOCOL_VERSION and regenerate.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_half_step() {
+    let expect: [u8; 9] = [0x02, 3, 0, 0, 0, 0, 0, 0, 0];
+    assert_eq!(proto::encode_half_step(3), expect);
+    assert_eq!(
+        proto::decode_to_worker(&expect).unwrap(),
+        ToWorker::HalfStep { round: 3 }
+    );
+}
+
+#[test]
+fn golden_snapshot() {
+    // round = 3, losses = [1.0f64], halves = [[1.0f32, -2.0f32]]
+    let expect: [u8; 37] = [
+        0x82, // tag
+        3, 0, 0, 0, 0, 0, 0, 0, // round echo = 3
+        0x01, 0x00, 0x00, 0x00, // 1 loss
+        0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xF0, 0x3F, // f64 1.0
+        0x01, 0x00, 0x00, 0x00, // 1 row
+        0x02, 0x00, 0x00, 0x00, // d = 2
+        0x00, 0x00, 0x80, 0x3F, // f32 1.0
+        0x00, 0x00, 0x00, 0xC0, // f32 -2.0
+    ];
+    let buf = proto::encode_snapshot(3, &[1.0f64], &[vec![1.0f32, -2.0f32]]);
+    assert_eq!(buf, expect);
+    match proto::decode_from_worker(&expect).unwrap() {
+        FromWorker::Snapshot {
+            round,
+            losses,
+            halves,
+        } => {
+            assert_eq!(round, 3);
+            assert_eq!(losses, vec![1.0f64]);
+            assert_eq!(halves, vec![vec![1.0f32, -2.0f32]]);
+        }
+        other => panic!("wrong message: {other:?}"),
+    }
+}
+
+#[test]
+fn golden_aggregate() {
+    // round 5; digest: count=2, mean=[0.5], std=[], prev_mean=[-1.0];
+    // halves = [[0.25f32]]
+    let digest = HonestDigest {
+        count: 2,
+        mean: vec![0.5],
+        std: vec![],
+        prev_mean: vec![-1.0],
+    };
+    let expect: [u8; 57] = [
+        0x03, // tag
+        5, 0, 0, 0, 0, 0, 0, 0, // round = 5
+        2, 0, 0, 0, 0, 0, 0, 0, // count = 2
+        0x01, 0x00, 0x00, 0x00, // 1 mean coord
+        0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xE0, 0x3F, // f64 0.5
+        0x00, 0x00, 0x00, 0x00, // 0 std coords
+        0x01, 0x00, 0x00, 0x00, // 1 prev-mean coord
+        0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xF0, 0xBF, // f64 -1.0
+        0x01, 0x00, 0x00, 0x00, // 1 row
+        0x01, 0x00, 0x00, 0x00, // d = 1
+        0x00, 0x00, 0x80, 0x3E, // f32 0.25
+    ];
+    let buf = proto::encode_aggregate(5, &digest, &[vec![0.25f32]]);
+    assert_eq!(buf, expect);
+    match proto::decode_to_worker(&expect).unwrap() {
+        ToWorker::Aggregate {
+            round,
+            digest: d2,
+            halves,
+        } => {
+            assert_eq!(round, 5);
+            assert_eq!(
+                d2,
+                WireDigest {
+                    count: 2,
+                    mean: vec![0.5],
+                    std: vec![],
+                    prev_mean: vec![-1.0],
+                }
+            );
+            assert_eq!(halves, vec![vec![0.25f32]]);
+        }
+        other => panic!("wrong message: {other:?}"),
+    }
+}
+
+#[test]
+fn golden_round_done() {
+    let expect: [u8; 37] = [
+        0x83, // tag
+        5, 0, 0, 0, 0, 0, 0, 0, // round echo = 5
+        0x01, 0x00, 0x00, 0x00, // 1 byz count
+        0x01, 0x00, 0x00, 0x00, // byz_seen[0] = 1
+        0x01, 0x00, 0x00, 0x00, // 1 recv count
+        0x06, 0x00, 0x00, 0x00, // received[0] = 6
+        0x01, 0x00, 0x00, 0x00, // 1 row
+        0x01, 0x00, 0x00, 0x00, // d = 1
+        0x00, 0x00, 0x20, 0x40, // f32 2.5
+    ];
+    let buf = proto::encode_round_done(5, &[1], &[6], &[vec![2.5f32]]);
+    assert_eq!(buf, expect);
+}
+
+#[test]
+fn golden_shutdown_and_init_ok() {
+    assert_eq!(proto::encode_shutdown(), vec![0x04]);
+    // InitOk: tag, version 1, start=3, len=4, d=10
+    let expect: [u8; 29] = [
+        0x81, // tag
+        0x01, 0x00, 0x00, 0x00, // protocol version 1
+        3, 0, 0, 0, 0, 0, 0, 0, // start
+        4, 0, 0, 0, 0, 0, 0, 0, // len
+        10, 0, 0, 0, 0, 0, 0, 0, // d
+    ];
+    assert_eq!(proto::encode_init_ok(3, 4, 10), expect);
+}
+
+#[test]
+fn every_truncation_of_every_message_errors_cleanly() {
+    let digest = HonestDigest {
+        count: 1,
+        mean: vec![0.5, 1.5],
+        std: vec![0.1, 0.2],
+        prev_mean: vec![-0.5, -1.5],
+    };
+    let to_worker = [
+        proto::encode_init("task = \"tiny\"", 0, 2),
+        proto::encode_half_step(9),
+        proto::encode_aggregate(1, &digest, &[vec![1.0f32, 2.0], vec![3.0, 4.0]]),
+        proto::encode_shutdown(),
+    ];
+    for buf in &to_worker {
+        proto::decode_to_worker(buf).expect("full buffer decodes");
+        for cut in 0..buf.len() {
+            assert!(
+                proto::decode_to_worker(&buf[..cut]).is_err(),
+                "truncation at {cut} must error"
+            );
+        }
+    }
+    let from_worker = [
+        proto::encode_init_ok(0, 5, 3),
+        proto::encode_snapshot(2, &[1.0, 2.0], &[vec![0.5f32], vec![1.5f32]]),
+        proto::encode_round_done(2, &[0, 1], &[5, 5], &[vec![1.0f32], vec![2.0f32]]),
+        proto::encode_failed("boom"),
+    ];
+    for buf in &from_worker {
+        proto::decode_from_worker(buf).expect("full buffer decodes");
+        for cut in 0..buf.len() {
+            assert!(
+                proto::decode_from_worker(&buf[..cut]).is_err(),
+                "truncation at {cut} must error"
+            );
+        }
+    }
+}
