@@ -39,7 +39,7 @@
 use std::collections::BTreeMap;
 
 use super::toml::{parse, TomlValue};
-use super::{EngineKind, ExperimentConfig, RuleChoice, Topology};
+use super::{EngineKind, ExperimentConfig, RuleChoice, Topology, TransportKind};
 use crate::aggregation::gossip::GossipRuleKind;
 use crate::aggregation::RuleKind;
 use crate::attacks::AttackKind;
@@ -123,6 +123,13 @@ pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
     }
     if let Some(procs) = get_usize(&doc, "procs")? {
         cfg.procs = procs;
+    }
+    if let Some(t) = get_str(&doc, "transport")? {
+        cfg.transport =
+            TransportKind::parse(t).ok_or_else(|| format!("unknown transport '{t}'"))?;
+    }
+    if let Some(dir) = get_str(&doc, "socket_dir")? {
+        cfg.socket_dir = dir.to_string();
     }
 
     if let Some(n) = get_usize(&doc, "nodes.n")? {
@@ -318,6 +325,11 @@ pub fn to_toml_str(cfg: &ExperimentConfig) -> String {
     out.push_str(&format!("threads = {}\n", cfg.threads));
     out.push_str(&format!("shards = {}\n", cfg.shards));
     out.push_str(&format!("procs = {}\n", cfg.procs));
+    out.push_str(&format!("transport = \"{}\"\n", cfg.transport.name()));
+    out.push_str(&format!(
+        "socket_dir = \"{}\"\n",
+        toml_escape(&cfg.socket_dir)
+    ));
 
     out.push_str("\n[nodes]\n");
     out.push_str(&format!("n = {}\n", cfg.n));
@@ -482,6 +494,17 @@ mod tests {
         assert_eq!(cfg.procs, 1, "default must be the in-process engine");
     }
 
+    #[test]
+    fn transport_parsed_with_pipe_default() {
+        let cfg = from_toml_str("task = \"tiny\"\ntransport = \"socket\"").unwrap();
+        assert_eq!(cfg.transport, TransportKind::Socket);
+        let cfg = from_toml_str("task = \"tiny\"\ntransport = \"tcp\"").unwrap();
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        let cfg = from_toml_str("task = \"tiny\"").unwrap();
+        assert_eq!(cfg.transport, TransportKind::Pipe, "default must be pipes");
+        assert!(from_toml_str("task = \"tiny\"\ntransport = \"telegraph\"").is_err());
+    }
+
     /// `to_toml_str` is what the coordinator ships to every shard-worker
     /// process: a parse of the output must reproduce the config
     /// field-for-field, or workers would silently build a different world.
@@ -501,6 +524,8 @@ mod tests {
         push_cfg.threads = 3;
         push_cfg.shards = 2;
         push_cfg.procs = 2;
+        push_cfg.transport = TransportKind::Socket;
+        push_cfg.socket_dir = "/tmp/rpel \"sock\"".into();
 
         let mut graph_cfg = crate::config::ExperimentConfig::default_for(TaskKind::MnistLike);
         graph_cfg.topology = Topology::FixedGraph { edges: 60 };

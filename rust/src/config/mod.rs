@@ -73,6 +73,47 @@ impl EngineKind {
     }
 }
 
+/// How a `--procs N` coordinator talks to its shard-worker processes
+/// (ignored when `procs <= 1`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// stdin/stdout pipes (the default): the coordinator broadcasts the
+    /// full O(h·d) half-step table to every worker each round.
+    Pipe,
+    /// Stream sockets (unix-domain where available, else loopback TCP):
+    /// workers serve each other's pulls directly and the coordinator
+    /// ships only the digest + per-round routing table.
+    Socket,
+    /// Like `Socket`, but forces loopback TCP — the same listener code
+    /// path that lets workers live on other hosts.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        Some(match s {
+            "pipe" | "pipes" => TransportKind::Pipe,
+            "socket" | "unix" => TransportKind::Socket,
+            "tcp" => TransportKind::Tcp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Pipe => "pipe",
+            TransportKind::Socket => "socket",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    /// Whether this transport routes pulls worker-to-worker (anything
+    /// but the pipe broadcast).
+    pub fn is_socket(&self) -> bool {
+        !matches!(self, TransportKind::Pipe)
+    }
+}
+
 /// Complete specification of one training run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
@@ -123,6 +164,17 @@ pub struct ExperimentConfig {
     /// shard in-process. Results are bit-identical for every value — the
     /// determinism suite pins `--procs 2` against the in-process engine.
     pub procs: usize,
+    /// Wire transport for the shard-worker processes (`--transport`,
+    /// default `pipe`). `socket`/`tcp` enable worker-side pull serving:
+    /// the coordinator ships each worker the per-round routing table
+    /// instead of the O(h·d) half-step table. Results are bit-identical
+    /// for every value — the determinism suite pins the whole
+    /// (transport × procs) grid.
+    pub transport: TransportKind,
+    /// Directory for the coordinator/worker unix sockets (`--socket-dir`).
+    /// Empty = a unique directory under the system temp dir; either way
+    /// a per-run subdirectory is created and removed on teardown.
+    pub socket_dir: String,
 }
 
 impl ExperimentConfig {
@@ -154,6 +206,8 @@ impl ExperimentConfig {
             threads: 0,
             shards: 1,
             procs: 1,
+            transport: TransportKind::Pipe,
+            socket_dir: String::new(),
         }
     }
 

@@ -27,7 +27,10 @@
 //! * [`proc::ProcessShard`] — **multi-process** (`--procs N`): the shard
 //!   lives in a spawned `rpel shard-worker` process that rebuilds the
 //!   identical world from the shipped config and speaks the
-//!   length-prefixed round protocol of [`crate::wire`] over pipes.
+//!   length-prefixed round protocol of [`crate::wire`] over pipes
+//!   (`--transport pipe`, broadcast table) or stream sockets
+//!   (`--transport socket|tcp`, worker-served pulls via the per-round
+//!   routing table — see [`peer`]).
 //!
 //! [`Trainer`] is an orchestrator over `Vec<Box<dyn ShardBackend>>` and
 //! owns the **round tables** — half-step rows, the committed-params
@@ -46,12 +49,15 @@
 //!    conditions on: crafting is O(d) per victim;
 //! 3. **push routes** (push-mode ablation only) — sender → recipient
 //!    scatter, reproducible from counter-keyed streams;
-//! 4. **pull + craft + aggregate** — `aggregate_begin` broadcasts the
-//!    digest + half-step table (a borrow in-process, a wire payload
-//!    cross-process); each victim pulls exactly its sampled rows, the
-//!    adversary crafts against the digest, and the rule aggregates into
-//!    the shard's next buffers; `aggregate_end` collects per-node
-//!    byz-seen and **delivered-message** counts;
+//! 4. **pull + craft + aggregate** — `serve_pulls` ships the digest +
+//!    per-round routing table to socket-transport workers (which fetch
+//!    the referenced rows from each other), then `aggregate_begin`
+//!    broadcasts the digest + half-step table to the remaining backends
+//!    (a borrow in-process, the full-table wire payload on pipes); each
+//!    victim pulls exactly its sampled rows, the adversary crafts
+//!    against the digest, and the rule aggregates into the shard's next
+//!    buffers; `aggregate_end` collects per-node byz-seen and
+//!    **delivered-message** counts;
 //! 5. **commit** — the synchronous swap; every backend refreshes its
 //!    slice of the committed-params mirror, which is what keeps
 //!    evaluation and [`Trainer::params_of`] local and O(1) for both
@@ -82,6 +88,7 @@
 //! against the in-process engine.
 
 pub mod engine;
+pub mod peer;
 pub mod proc;
 pub mod sampler;
 pub(crate) mod shard;
@@ -390,6 +397,10 @@ pub struct Trainer {
     /// delivered-message ledger: model rows honest nodes actually
     /// received in the last round
     last_round_delivered: usize,
+    /// bytes-on-the-wire ledger for the last round:
+    /// (coordinator→workers, workers→coordinator, peer-served) — all
+    /// zero for in-process backends
+    last_round_wire: (u64, u64, u64),
     /// per-round digest of the honest population (phase 2 output)
     digest: HonestDigest,
     /// round table: half-step rows x^{t+1/2}, ascending honest order
@@ -455,8 +466,20 @@ impl Trainer {
             drop(nodes);
             let toml = crate::config::file::to_toml_str(&cfg);
             let ranges = shard::partition_ranges(h, parts);
-            proc::ProcessShard::spawn_all(&toml, &ranges, parts, d)
-                .with_context(|| format!("starting {parts} shard workers"))?
+            proc::ProcessShard::spawn_all(
+                &toml,
+                &ranges,
+                parts,
+                d,
+                cfg.transport,
+                &cfg.socket_dir,
+            )
+            .with_context(|| {
+                format!(
+                    "starting {parts} shard workers (transport {})",
+                    cfg.transport.name()
+                )
+            })?
                 .into_iter()
                 .map(|worker| Box::new(worker) as Box<dyn ShardBackend>)
                 .collect()
@@ -498,6 +521,7 @@ impl Trainer {
             pool,
             last_round_byz_max: 0,
             last_round_delivered: 0,
+            last_round_wire: (0, 0, 0),
             digest: HonestDigest::new(d),
             backends,
             local_backends,
@@ -551,6 +575,23 @@ impl Trainer {
         }
     }
 
+    /// Test hook: wrap the idx-th shard's transport in the deterministic
+    /// chaos fault injector ([`crate::testkit::chaos`]). Returns false
+    /// for in-process backends — used by the fault-injection suite to
+    /// prove delayed/stale/cut replies surface as actionable errors
+    /// naming the worker and round, never a hang.
+    #[doc(hidden)]
+    pub fn chaos_shard_transport(
+        &mut self,
+        idx: usize,
+        plan: crate::testkit::chaos::ChaosPlan,
+    ) -> bool {
+        match self.backends.get_mut(idx) {
+            Some(backend) => backend.inject_chaos(plan),
+            None => false,
+        }
+    }
+
     /// Run the full training; returns the metric history.
     pub fn run(&mut self) -> Result<History> {
         let t0 = Instant::now();
@@ -562,6 +603,9 @@ impl Trainer {
             hist.total_messages += self.cfg.messages_per_round();
             hist.delivered_per_round.push(self.last_round_delivered);
             hist.total_delivered += self.last_round_delivered;
+            hist.wire_coord_out_per_round.push(self.last_round_wire.0 as usize);
+            hist.wire_coord_in_per_round.push(self.last_round_wire.1 as usize);
+            hist.wire_peer_per_round.push(self.last_round_wire.2 as usize);
             let last = round + 1 == self.cfg.rounds;
             if last || (round + 1) % self.cfg.eval_every == 0 {
                 hist.evals.push(self.evaluate(round + 1)?);
@@ -663,14 +707,15 @@ impl Trainer {
 
     /// Phase 3 (push-mode ablation only): sender → recipient routes. The
     /// scatter for sender `id` comes from the `(seed, round, id, PUSH)`
-    /// stream, so routes are reproducible regardless of iteration order —
-    /// worker processes derive their victims' rows independently, so with
-    /// no in-process shard there is nothing to compute here.
+    /// stream, so routes are reproducible regardless of iteration order.
+    /// Pipe-transport workers derive their victims' rows independently,
+    /// so with no in-process shard there is nothing to compute here —
+    /// but the socket transport needs them for the routing table.
     fn phase_push_routes(&self, round: usize) -> Option<Vec<Vec<usize>>> {
-        if !self.local_backends {
+        let s = self.push_s?;
+        if !self.local_backends && !self.cfg.transport.is_socket() {
             return None;
         }
-        let s = self.push_s?;
         Some(shard::push_routes(
             self.cfg.seed,
             round,
@@ -682,6 +727,57 @@ impl Trainer {
         ))
     }
 
+    /// The per-round pull **routing table** (socket transport only): per
+    /// victim, ascending honest order, the ordered global node ids it
+    /// receives from this round — the pull set from the counter-keyed
+    /// stream, the push sender list, or the graph neighborhood. This is
+    /// all the coordinator ships per worker besides the digest; the
+    /// workers fetch the referenced rows from each other.
+    ///
+    /// MUST stay bit-identical (content AND order) with the receive-set
+    /// derivation in `shard::run_agg_jobs` — the in-process and pipe
+    /// paths derive per-victim sets locally from the same keys, and any
+    /// divergence splits pipe vs socket results. The determinism suite
+    /// pins it, but edit both sites together.
+    fn phase_routing_table(
+        &self,
+        round: usize,
+        push_recv: Option<&[Vec<usize>]>,
+    ) -> Option<Vec<Vec<usize>>> {
+        if self.local_backends || !self.cfg.transport.is_socket() {
+            return None;
+        }
+        if let Some(sampler) = self.sampler {
+            let mut routes = Vec::with_capacity(self.h);
+            for id in 0..self.cfg.n {
+                if !self.byz[id] {
+                    routes.push(sampler.sample_at(self.cfg.seed, round, id));
+                }
+            }
+            return Some(routes);
+        }
+        if let Some(recv) = push_recv {
+            return Some(recv.to_vec());
+        }
+        if let Some(rows) = &self.gossip_rows {
+            let mut routes = Vec::with_capacity(self.h);
+            for id in 0..self.cfg.n {
+                if self.byz[id] {
+                    continue;
+                }
+                routes.push(
+                    rows[id]
+                        .iter()
+                        .map(|&(j, _)| j)
+                        .filter(|&j| j != id)
+                        .collect(),
+                );
+            }
+            return Some(routes);
+        }
+        unreachable!("config validation guarantees a topology")
+    }
+
     /// Phase 4: per victim — pull `S_i^t`, craft the malicious rows
     /// against the digest, robustly aggregate. Remote backends receive
     /// the digest + table first and compute concurrently.
@@ -690,12 +786,14 @@ impl Trainer {
         round: usize,
         push_recv: Option<&[Vec<usize>]>,
     ) -> Result<()> {
+        let routes_tbl = self.phase_routing_table(round, push_recv);
         let ctx = AggCtx {
             agg: &self.agg,
             attack: self.attack.as_deref(),
             digest: &self.digest,
             halves: &self.tbl_halves,
             push_recv,
+            routes: routes_tbl.as_ref().map(|r| (0usize, r.as_slice())),
             byz: &self.byz,
             node_of: &self.node_of,
             sampler: self.sampler,
@@ -703,9 +801,15 @@ impl Trainer {
             seed: self.cfg.seed,
             n: self.cfg.n,
             b: self.cfg.b,
+            push: self.push_s.is_some(),
             dos: self.cfg.attack == crate::attacks::AttackKind::Dos,
             wire_frame: std::sync::OnceLock::new(),
         };
+        // serve-pulls phase: socket workers get the digest + their slice
+        // of the routing table and start fetching from each other
+        for backend in self.backends.iter_mut() {
+            backend.serve_pulls(round, &ctx)?;
+        }
         for backend in self.backends.iter_mut() {
             backend.aggregate_begin(round, &ctx)?;
         }
@@ -745,10 +849,16 @@ impl Trainer {
     /// Phase 5: commit every backend and fold the round telemetry in
     /// index order (identical for every grid point).
     fn phase_commit(&mut self) -> Result<()> {
+        let mut wire = (0u64, 0u64, 0u64);
         for backend in self.backends.iter_mut() {
             let (start, len) = (backend.start(), backend.len());
             backend.commit(&mut self.tbl_params[start..start + len])?;
+            let (out, inn, peer) = backend.take_wire_bytes();
+            wire.0 += out;
+            wire.1 += inn;
+            wire.2 += peer;
         }
+        self.last_round_wire = wire;
         self.last_round_byz_max = self.tbl_byz_seen.iter().copied().max().unwrap_or(0);
         self.last_round_delivered = self.tbl_recv.iter().sum();
         Ok(())

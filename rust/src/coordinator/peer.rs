@@ -1,0 +1,319 @@
+//! Worker-side pull serving for the socket transport.
+//!
+//! On `--transport socket|tcp` the coordinator never broadcasts the
+//! O(h·d) half-step table. Instead every `rpel shard-worker` binds its
+//! own listener and the round's model exchange happens worker-to-worker:
+//!
+//! * [`RowServer`] — the serving half. After each half-step phase the
+//!   worker [`publish`](RowServer::publish)es its shard's rows for the
+//!   round; a background accept loop answers peers' `PullRequest`s with
+//!   exactly the requested rows (`PullReply`), or a `Deny` naming the
+//!   root cause (stale round, out-of-range row, protocol mismatch).
+//! * [`PeerClient`] — the fetching half. Given the coordinator's address
+//!   book (`Peers`) and the round's routing table, it dials the owning
+//!   peer (once — connections persist across rounds), requests the
+//!   missing honest rows, and verifies the reply echoes the round and
+//!   has the expected shape. Every error names the peer worker, its
+//!   honest range, and the round — a dead peer surfaces as an actionable
+//!   error on the puller, never a hang.
+//!
+//! Lockstep makes the serving side race-free without condvars: a peer
+//! can only request round t after the coordinator saw *every* worker's
+//! round-t `Snapshot`, and every worker publishes its rows before
+//! sending that snapshot; symmetrically, `HalfStep{t+1}` (which
+//! republishes) is only sent after every worker's round-t `RoundDone`,
+//! which follows its fetches. A request that still misses the published
+//! round is answered with `Deny` rather than blocking.
+
+use crate::wire::proto::{self, PeerEntry, PeerMsg};
+use crate::wire::transport::{Listener, SockAddr, SocketStream, SocketTransport, Transport};
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How often the accept loop polls for new connections / shutdown.
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+
+#[derive(Default)]
+struct Published {
+    have: bool,
+    round: u64,
+    rows: Vec<Vec<f32>>,
+}
+
+struct ServeShared {
+    stop: AtomicBool,
+    /// this worker's index (error messages name the *serving* worker)
+    worker: usize,
+    /// owned honest range `[start, start + len)`
+    start: usize,
+    len: usize,
+    state: Mutex<Published>,
+}
+
+/// The serving half of worker-side pull exchange: an accept loop plus
+/// the per-round published row table.
+pub struct RowServer {
+    shared: Arc<ServeShared>,
+}
+
+impl RowServer {
+    /// Start serving on `listener` (one detached accept thread; one
+    /// handler thread per peer connection — at most `procs − 1`).
+    pub fn spawn(listener: Listener, worker: usize, start: usize, len: usize) -> Result<RowServer> {
+        listener
+            .set_nonblocking(true)
+            .context("row server: nonblocking accept loop")?;
+        let shared = Arc::new(ServeShared {
+            stop: AtomicBool::new(false),
+            worker,
+            start,
+            len,
+            state: Mutex::new(Published::default()),
+        });
+        let for_thread = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name(format!("rpel-serve-{worker}"))
+            .spawn(move || accept_loop(listener, for_thread))
+            .context("row server: spawning accept loop")?;
+        Ok(RowServer { shared })
+    }
+
+    /// Publish this shard's half-step rows for `round`. Must happen
+    /// before the round's `Snapshot` is sent to the coordinator (the
+    /// lockstep argument above relies on it).
+    pub fn publish(&self, round: u64, rows: &[Vec<f32>]) {
+        debug_assert_eq!(rows.len(), self.shared.len);
+        let mut st = self.shared.state.lock().unwrap();
+        st.have = true;
+        st.round = round;
+        st.rows.resize(rows.len(), Vec::new());
+        for (dst, src) in st.rows.iter_mut().zip(rows) {
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+    }
+}
+
+impl Drop for RowServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(listener: Listener, shared: Arc<ServeShared>) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok(stream) => {
+                let _ = stream.set_nonblocking(false);
+                let for_conn = Arc::clone(&shared);
+                let worker = shared.worker;
+                let spawned = std::thread::Builder::new()
+                    .name(format!("rpel-serve-{worker}-conn"))
+                    .spawn(move || {
+                        if let Err(e) = serve_conn(&for_conn, stream) {
+                            log::warn!("worker {worker}: peer connection ended: {e:#}");
+                        }
+                    });
+                if let Err(e) = spawned {
+                    log::warn!("worker {worker}: cannot spawn peer handler: {e}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                log::warn!("worker {}: accept failed: {e}", shared.worker);
+                return;
+            }
+        }
+    }
+}
+
+/// One peer connection: `Hello` then a lockstep request/reply loop.
+fn serve_conn(shared: &ServeShared, stream: SocketStream) -> Result<()> {
+    let mut t = SocketTransport::from_stream(stream)?;
+    loop {
+        let Some(frame) = t.recv_opt()? else {
+            return Ok(()); // peer closed between requests: orderly
+        };
+        match proto::decode_peer(&frame) {
+            Ok(PeerMsg::Hello { .. }) => {} // identification only
+            Ok(PeerMsg::PullRequest { round, rows }) => {
+                let reply = {
+                    let st = shared.state.lock().unwrap();
+                    pull_reply_frame(shared, &st, round, &rows)
+                };
+                t.send(&reply)?;
+            }
+            Ok(other) => {
+                let msg = format!(
+                    "worker {}: unexpected {:?} on the serving side",
+                    shared.worker, other
+                );
+                let _ = t.send(&proto::encode_peer_deny(&msg));
+                bail!("{msg}");
+            }
+            Err(e) => {
+                // bad frame (e.g. a version-mismatched Hello): name the
+                // cause for the peer, then drop the connection
+                let _ = t.send(&proto::encode_peer_deny(&format!(
+                    "worker {}: {e:#}",
+                    shared.worker
+                )));
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Encode the reply to one `PullRequest` under the published-state lock.
+fn pull_reply_frame(
+    shared: &ServeShared,
+    st: &Published,
+    round: u64,
+    rows: &[u32],
+) -> Vec<u8> {
+    if !st.have || st.round != round {
+        let published = if st.have {
+            st.round.to_string()
+        } else {
+            "none".to_string()
+        };
+        return proto::encode_peer_deny(&format!(
+            "worker {}: pull for round {round} but published round is {published} \
+             (stale request or aborted round)",
+            shared.worker
+        ));
+    }
+    let end = shared.start + shared.len;
+    for &hi in rows {
+        let hi = hi as usize;
+        if hi < shared.start || hi >= end {
+            return proto::encode_peer_deny(&format!(
+                "worker {}: row {hi} outside owned honest range {}..{end}",
+                shared.worker, shared.start
+            ));
+        }
+    }
+    let refs: Vec<&[f32]> = rows
+        .iter()
+        .map(|&hi| st.rows[hi as usize - shared.start].as_slice())
+        .collect();
+    proto::encode_pull_reply(round, &refs)
+}
+
+struct PeerConn {
+    transport: SocketTransport,
+    /// bytes already attributed to earlier rounds' ledgers
+    counted: u64,
+}
+
+/// The fetching half: persistent outbound connections to owning peers.
+pub struct PeerClient {
+    me: usize,
+    /// per worker: (start, len, listener address)
+    entries: Vec<(usize, usize, SockAddr)>,
+    conns: Vec<Option<PeerConn>>,
+}
+
+impl PeerClient {
+    /// Build from the coordinator's `Peers` address book.
+    pub fn new(me: usize, book: &[PeerEntry]) -> Result<PeerClient> {
+        let mut entries = Vec::with_capacity(book.len());
+        for e in book {
+            entries.push((
+                e.start as usize,
+                e.len as usize,
+                SockAddr::parse(&e.addr)
+                    .with_context(|| format!("peer book entry for range {}..", e.start))?,
+            ));
+        }
+        let conns = (0..entries.len()).map(|_| None).collect();
+        Ok(PeerClient { me, entries, conns })
+    }
+
+    /// The worker owning global honest index `hi`.
+    pub fn owner_of(&self, hi: usize) -> Option<usize> {
+        self.entries
+            .iter()
+            .position(|&(start, len, _)| hi >= start && hi < start + len)
+    }
+
+    pub fn peer_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Owned range of worker `w` (for validation against the local
+    /// partition derivation).
+    pub fn range_of(&self, w: usize) -> (usize, usize) {
+        (self.entries[w].0, self.entries[w].1)
+    }
+
+    fn ensure_conn(&mut self, owner: usize) -> Result<&mut PeerConn> {
+        if self.conns[owner].is_none() {
+            let mut transport = SocketTransport::connect(&self.entries[owner].2)?;
+            transport.send(&proto::encode_peer_hello(self.me as u32, ""))?;
+            self.conns[owner] = Some(PeerConn {
+                transport,
+                counted: 0,
+            });
+        }
+        Ok(self.conns[owner].as_mut().unwrap())
+    }
+
+    /// Fetch the given rows (global honest indices owned by `owner`) of
+    /// round `round`'s table. Returns the rows in request order plus the
+    /// wire bytes this call consumed (requests + replies + the one-time
+    /// `Hello` on a fresh connection).
+    pub fn fetch(
+        &mut self,
+        round: u64,
+        owner: usize,
+        rows: &[u32],
+        d: usize,
+    ) -> Result<(Vec<Vec<f32>>, u64)> {
+        let (start, len, _) = self.entries[owner];
+        let who = format!(
+            "peer worker {owner} (honest nodes {start}..{}): pull for round {round}",
+            start + len
+        );
+        let result = self.fetch_inner(round, owner, rows, d);
+        result.with_context(|| format!("{who} failed"))
+    }
+
+    fn fetch_inner(
+        &mut self,
+        round: u64,
+        owner: usize,
+        rows: &[u32],
+        d: usize,
+    ) -> Result<(Vec<Vec<f32>>, u64)> {
+        let conn = self.ensure_conn(owner)?;
+        conn.transport.send(&proto::encode_pull_request(round, rows))?;
+        let frame = conn.transport.recv()?;
+        let reply = proto::decode_peer(&frame)?;
+        let bytes_now = conn.transport.bytes_out() + conn.transport.bytes_in();
+        let delta = bytes_now - conn.counted;
+        conn.counted = bytes_now;
+        match reply {
+            PeerMsg::PullReply { round: got, rows: got_rows } => {
+                ensure!(
+                    got == round,
+                    "stale PullReply for round {got} (expected {round}) — an \
+                     earlier round aborted mid-pull"
+                );
+                ensure!(
+                    got_rows.len() == rows.len() && got_rows.iter().all(|r| r.len() == d),
+                    "malformed PullReply ({} rows; expected {} of width {d})",
+                    got_rows.len(),
+                    rows.len()
+                );
+                Ok((got_rows, delta))
+            }
+            PeerMsg::Deny { message } => bail!("peer refused: {message}"),
+            other => bail!("expected PullReply, got {other:?}"),
+        }
+    }
+}

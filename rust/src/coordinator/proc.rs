@@ -1,5 +1,6 @@
 //! Multi-process shard engine: the coordinator-side [`ProcessShard`]
-//! backend and the worker-side `rpel shard-worker` loop.
+//! backend and the worker-side `rpel shard-worker` loop, over either
+//! wire transport.
 //!
 //! Each worker process rebuilds the **identical world** from the config
 //! the coordinator ships in the `Init` handshake (all construction
@@ -7,40 +8,89 @@
 //! placement, data shards, graph topology and parameter init are
 //! bit-identical across processes), keeps only its contiguous honest
 //! range as a [`NodeShard`], and then speaks the round protocol of
-//! [`crate::wire::proto`] over stdin/stdout pipes:
+//! [`crate::wire::proto`] over a [`Transport`].
 //!
-//! * `HalfStep` → run phase 1 on the owned nodes, reply with the shard's
-//!   `Snapshot` — the shipped round digest (half-step rows + losses);
-//! * `Aggregate` → receive the folded [`HonestDigest`] and the full
-//!   half-step table, serve the owned victims' pulls from it, craft and
-//!   robustly aggregate, commit, and reply `RoundDone` (byz-seen and
-//!   delivered counts + committed params for the coordinator's mirror);
-//! * `Shutdown` or EOF → exit cleanly.
+//! # Pipe transport (`--transport pipe`, the default)
 //!
-//! Both sides run the *same* [`NodeShard`] phase code — the only
-//! difference between the engines is whether the round tables travel by
-//! borrow or by wire, and the codec ships IEEE bit patterns, so results
-//! are bit-identical (`rust/tests/determinism.rs` pins it).
+//! The worker converses on stdin/stdout; the coordinator broadcasts the
+//! full half-step table each round:
+//!
+//! ```text
+//! coordinator                         worker
+//! -----------                         ------
+//! spawn(shard-worker) ──────────────▶ (stdin/stdout pipes)
+//! Init{config,worker,procs} ────────▶ build world, keep own range
+//! ◀──────────────────────── InitOk{start,len,d}
+//! per round t:
+//!   HalfStep{t} ────────────────────▶ phase 1 on owned nodes
+//!   ◀───────────────── Snapshot{t, losses, halves}
+//!   Aggregate{t, digest, halves[h]} ▶ pull/craft/aggregate/commit
+//!   ◀──────── RoundDone{t, byz, recv, 0, params}
+//! Shutdown (or EOF) ────────────────▶ exit 0
+//! ```
+//!
+//! # Socket transport (`--transport socket|tcp`)
+//!
+//! The worker dials the coordinator's listener for the control channel
+//! and binds its **own** listener to serve pulls; the coordinator ships
+//! only the digest plus the per-round routing table, and workers fetch
+//! the honest rows they lack from the owning peer (see
+//! [`super::peer`]):
+//!
+//! ```text
+//! coordinator                         worker w
+//! -----------                         --------
+//! bind coordinator.sock
+//! spawn(shard-worker --transport socket
+//!       --connect … --worker w)
+//! ◀──────────── connect + PeerHello{w, listen}   (worker binds its own
+//! Init{config,w,procs} ─────────────▶             pull listener first)
+//! ◀──────────────────────── InitOk{start,len,d}
+//! Peers{(start,len,addr)*} ─────────▶ start RowServer, build PeerClient
+//! per round t:
+//!   HalfStep{t} ────────────────────▶ phase 1; publish rows to RowServer
+//!   ◀───────────────── Snapshot{t, losses, halves}
+//!   AggregateRouted{t, digest,        fetch referenced off-shard rows
+//!     routes} ──────────────────────▶   from peers (PullRequest/Reply),
+//!                                       craft vs digest, aggregate
+//!   ◀── RoundDone{t, byz, recv, peer_bytes, params}
+//! Shutdown (or EOF) ────────────────▶ exit 0
+//! ```
+//!
+//! The coordinator still folds every snapshot into the [`HonestDigest`]
+//! in ascending honest order, and the routing table dictates each
+//! victim's receive order, so **both** transports are bit-identical with
+//! the in-process engine (`rust/tests/determinism.rs` pins the whole
+//! transport × procs × shards × threads grid). What changes is the
+//! coordinator's downstream traffic — O(s·d + routing table) per worker
+//! instead of O(h·d) — which the per-round bytes ledger in
+//! [`crate::metrics::History`] measures.
 //!
 //! A worker that dies mid-round surfaces as an actionable error on the
-//! coordinator (broken pipe / EOF with the worker's exit status), never
-//! a hang: every read is a blocking read on a pipe whose write end dies
-//! with the worker. Worker-side failures are shipped as `Failed{message}`
-//! before exiting, so the coordinator reports the root cause.
+//! coordinator (EOF / connection reset with the worker's exit status),
+//! and a peer that dies mid-pull surfaces on the *pulling* worker (which
+//! forwards it as `Failed`) — never a hang: every read is a blocking
+//! read on a stream whose write end dies with the peer, and
+//! [`ProcessShard`]'s `Drop` half-closes then drains so a worker blocked
+//! mid-write can always finish and observe EOF.
 
+use super::peer::{PeerClient, RowServer};
 use super::shard::{self, AggCtx, NodeShard, NodeState, ShardBackend, StepCtx};
 use super::{build_world, AggBackend};
 use crate::attacks::{Attack, AttackKind};
-use crate::config::{file as config_file, ExperimentConfig};
+use crate::config::{file as config_file, ExperimentConfig, TransportKind};
 use crate::coordinator::{ComputeEngine, PullSampler};
+use crate::testkit::chaos::{ChaosPlan, ChaosTransport};
 use crate::util::pool::WorkerPool;
-use crate::wire;
-use crate::wire::proto::{self, FromWorker, ToWorker};
+use crate::wire::proto::{self, FromWorker, PeerEntry, PeerMsg, ToWorker};
+use crate::wire::transport::{Listener, PipeTransport, SockAddr, SocketTransport, Transport};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::PathBuf;
-use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
-use std::sync::OnceLock;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
 
 /// Process-wide worker-binary override for tests. A `OnceLock` instead of
 /// `std::env::set_var`: mutating the environment races with concurrent
@@ -103,22 +153,48 @@ fn request_name(msg: &ToWorker) -> &'static str {
         ToWorker::Init { .. } => "Init",
         ToWorker::HalfStep { .. } => "HalfStep",
         ToWorker::Aggregate { .. } => "Aggregate",
+        ToWorker::Peers { .. } => "Peers",
+        ToWorker::AggregateRouted { .. } => "AggregateRouted",
         ToWorker::Shutdown => "Shutdown",
     }
 }
 
+/// Removes the per-run socket directory once the last shard drops it.
+struct SockDirGuard(PathBuf);
+
+impl Drop for SockDirGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// How long the coordinator waits for every spawned worker to dial in.
+const CONNECT_DEADLINE: Duration = Duration::from_secs(60);
+
 /// Coordinator-side handle to one `rpel shard-worker` process owning the
-/// honest range `[start, start + len)`.
+/// honest range `[start, start + len)`, over either transport.
 pub(crate) struct ProcessShard {
     index: usize,
     start: usize,
     len: usize,
     d: usize,
     child: Child,
-    stdin: Option<BufWriter<ChildStdin>>,
-    stdout: BufReader<ChildStdout>,
+    conn: Option<Box<dyn Transport>>,
+    /// true on the socket transport: `serve_pulls` ships the routing
+    /// table and `aggregate_begin` is a no-op (and vice versa for pipes)
+    routed: bool,
+    /// the worker's own pull-listener address (socket transport; what
+    /// the `Peers` address book redistributes)
+    listen_addr: String,
+    /// keeps the per-run socket directory alive until every shard drops
+    _sock_dir: Option<Arc<SockDirGuard>>,
     /// committed params parked between `aggregate_end` and `commit`
     pending_params: Vec<Vec<f32>>,
+    /// wire-ledger marks: transport counter values already attributed
+    counted_out: u64,
+    counted_in: u64,
+    /// peer-served bytes reported by the last `RoundDone`
+    peer_bytes: u64,
 }
 
 impl ProcessShard {
@@ -131,40 +207,224 @@ impl ProcessShard {
         ranges: &[(usize, usize)],
         procs: usize,
         d: usize,
+        transport: TransportKind,
+        socket_dir: &str,
     ) -> Result<Vec<ProcessShard>> {
-        let mut shards = Vec::with_capacity(ranges.len());
-        for (index, &(start, len)) in ranges.iter().enumerate() {
-            let mut shard = ProcessShard::launch(index, start, len, d)?;
+        let mut shards = match transport {
+            TransportKind::Pipe => Self::spawn_all_pipe(ranges, d)?,
+            TransportKind::Socket | TransportKind::Tcp => {
+                let tcp = transport == TransportKind::Tcp || !cfg!(unix);
+                Self::spawn_all_socket(ranges, d, socket_dir, tcp)?
+            }
+        };
+        for (index, shard) in shards.iter_mut().enumerate() {
             shard.send(&proto::encode_init(cfg_toml, index as u32, procs as u32))?;
-            shards.push(shard);
         }
         for shard in shards.iter_mut() {
             shard.finish_handshake()?;
         }
+        if transport.is_socket() {
+            // the address book completes the socket handshake: every
+            // worker learns which peer serves which honest range
+            let book: Vec<PeerEntry> = shards
+                .iter()
+                .map(|s| PeerEntry {
+                    start: s.start as u64,
+                    len: s.len as u64,
+                    addr: s.listen_addr.clone(),
+                })
+                .collect();
+            let frame = proto::encode_peers(&book);
+            for shard in shards.iter_mut() {
+                shard.send(&frame)?;
+            }
+        }
+        // handshake traffic is construction cost, not part of the
+        // per-round bytes ledger
+        for shard in shards.iter_mut() {
+            shard.reset_wire_marks();
+        }
         Ok(shards)
     }
 
-    /// Start the worker process with piped stdin/stdout (no handshake).
-    fn launch(index: usize, start: usize, len: usize, d: usize) -> Result<ProcessShard> {
+    /// Pipe path: one child per range with piped stdin/stdout.
+    fn spawn_all_pipe(ranges: &[(usize, usize)], d: usize) -> Result<Vec<ProcessShard>> {
         let bin = worker_binary()?;
-        let mut child = Command::new(&bin)
-            .arg("shard-worker")
-            .stdin(Stdio::piped())
-            .stdout(Stdio::piped())
-            .spawn()
-            .with_context(|| format!("spawning shard worker {index} from {}", bin.display()))?;
-        let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
-        let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
-        Ok(ProcessShard {
-            index,
-            start,
-            len,
-            d,
-            child,
-            stdin: Some(stdin),
-            stdout,
-            pending_params: Vec::new(),
-        })
+        let mut shards = Vec::with_capacity(ranges.len());
+        for (index, &(start, len)) in ranges.iter().enumerate() {
+            let mut child = Command::new(&bin)
+                .arg("shard-worker")
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .spawn()
+                .with_context(|| {
+                    format!("spawning shard worker {index} from {}", bin.display())
+                })?;
+            let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
+            let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+            shards.push(ProcessShard {
+                index,
+                start,
+                len,
+                d,
+                child,
+                conn: Some(Box::new(PipeTransport::new(stdout, stdin))),
+                routed: false,
+                _sock_dir: None,
+                listen_addr: String::new(),
+                pending_params: Vec::new(),
+                counted_out: 0,
+                counted_in: 0,
+                peer_bytes: 0,
+            });
+        }
+        Ok(shards)
+    }
+
+    /// Socket path: bind the coordinator listener, spawn the children
+    /// with `--connect`, and accept + identify every control connection
+    /// under a deadline — a worker that dies before dialing in surfaces
+    /// as an error naming it, never a hang.
+    fn spawn_all_socket(
+        ranges: &[(usize, usize)],
+        d: usize,
+        socket_dir: &str,
+        tcp: bool,
+    ) -> Result<Vec<ProcessShard>> {
+        static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+        let (listener, guard) = if tcp {
+            (Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into()))?, None)
+        } else {
+            let base = if socket_dir.is_empty() {
+                std::env::temp_dir()
+            } else {
+                PathBuf::from(socket_dir)
+            };
+            let dir = base.join(format!(
+                "rpel-{}-{}",
+                std::process::id(),
+                DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating socket dir {}", dir.display()))?;
+            let listener = Listener::bind(&SockAddr::Unix(dir.join("coordinator.sock")))?;
+            (listener, Some(Arc::new(SockDirGuard(dir))))
+        };
+        let coord_addr = listener.local_addr()?.to_string();
+
+        let bin = worker_binary()?;
+        let mut children: Vec<Option<Child>> = Vec::with_capacity(ranges.len());
+        for index in 0..ranges.len() {
+            let child = Command::new(&bin)
+                .arg("shard-worker")
+                .arg("--transport")
+                .arg("socket")
+                .arg("--connect")
+                .arg(&coord_addr)
+                .arg("--worker")
+                .arg(index.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .spawn()
+                .with_context(|| {
+                    format!("spawning shard worker {index} from {}", bin.display())
+                })?;
+            children.push(Some(child));
+        }
+
+        // accept + identify: PeerHello carries the worker index and the
+        // address of the worker's own pull listener
+        listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + CONNECT_DEADLINE;
+        let mut conns: Vec<Option<SocketTransport>> = (0..ranges.len()).map(|_| None).collect();
+        let mut listens: Vec<String> = vec![String::new(); ranges.len()];
+        let accept_result = (|| -> Result<()> {
+            let mut accepted = 0usize;
+            while accepted < ranges.len() {
+                match listener.accept() {
+                    Ok(stream) => {
+                        stream.set_nonblocking(false)?;
+                        let mut t = SocketTransport::from_stream(stream)?;
+                        // a worker that connects but never speaks must not
+                        // bypass the deadline: bound the PeerHello read by
+                        // the time remaining, then restore blocking reads
+                        let remaining = deadline
+                            .saturating_duration_since(Instant::now())
+                            .max(Duration::from_millis(10));
+                        t.set_read_timeout(Some(remaining))?;
+                        let frame = t
+                            .recv()
+                            .context("reading PeerHello from a connecting shard worker")?;
+                        t.set_read_timeout(None)?;
+                        match proto::decode_peer(&frame).context("decoding PeerHello")? {
+                            PeerMsg::Hello { worker, listen } => {
+                                let w = worker as usize;
+                                ensure!(w < ranges.len(), "shard worker index {w} out of range");
+                                ensure!(conns[w].is_none(), "shard worker {w} connected twice");
+                                listens[w] = listen;
+                                conns[w] = Some(t);
+                                accepted += 1;
+                            }
+                            other => bail!(
+                                "expected PeerHello on the coordinator socket, got {other:?}"
+                            ),
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        for (i, slot) in children.iter_mut().enumerate() {
+                            if let Some(child) = slot {
+                                if let Some(status) = child.try_wait()? {
+                                    bail!(
+                                        "shard worker {i} exited before connecting: {status}"
+                                    );
+                                }
+                            }
+                        }
+                        ensure!(
+                            Instant::now() < deadline,
+                            "timed out waiting for {} shard workers to connect at {coord_addr}",
+                            ranges.len() - accepted
+                        );
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        return Err(e).context("accepting shard worker control connections")
+                    }
+                }
+            }
+            Ok(())
+        })();
+        if let Err(e) = accept_result {
+            // don't leak half-spawned workers as zombies: kill and reap
+            // whatever came up before the handshake failed
+            for slot in children.iter_mut() {
+                if let Some(child) = slot.as_mut() {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+            }
+            return Err(e);
+        }
+
+        let mut shards = Vec::with_capacity(ranges.len());
+        for (index, &(start, len)) in ranges.iter().enumerate() {
+            shards.push(ProcessShard {
+                index,
+                start,
+                len,
+                d,
+                child: children[index].take().expect("child spawned"),
+                conn: Some(Box::new(conns[index].take().expect("worker connected"))),
+                routed: true,
+                _sock_dir: guard.clone(),
+                listen_addr: std::mem::take(&mut listens[index]),
+                pending_params: Vec::new(),
+                counted_out: 0,
+                counted_in: 0,
+                peer_bytes: 0,
+            });
+        }
+        Ok(shards)
     }
 
     /// Await `InitOk` and verify the worker independently derived the
@@ -209,15 +469,10 @@ impl ProcessShard {
     }
 
     fn send(&mut self, payload: &[u8]) -> Result<()> {
-        let result = (|| -> Result<()> {
-            let stdin = self
-                .stdin
-                .as_mut()
-                .context("worker stdin already closed")?;
-            wire::write_frame(stdin, payload)?;
-            stdin.flush()?;
-            Ok(())
-        })();
+        let result = match self.conn.as_mut() {
+            Some(conn) => conn.send(payload),
+            None => Err(anyhow::anyhow!("worker connection already closed")),
+        };
         match result {
             Ok(()) => Ok(()),
             Err(e) => {
@@ -228,7 +483,11 @@ impl ProcessShard {
     }
 
     fn recv(&mut self) -> Result<FromWorker> {
-        let frame = match wire::read_frame(&mut self.stdout) {
+        let frame = match self.conn.as_mut() {
+            Some(conn) => conn.recv(),
+            None => Err(anyhow::anyhow!("worker connection already closed")),
+        };
+        let frame = match frame {
             Ok(f) => f,
             Err(e) => {
                 let what = self.describe("awaiting reply");
@@ -251,6 +510,15 @@ impl ProcessShard {
             );
         }
         Ok(msg)
+    }
+
+    /// Forget all traffic so far (handshakes are not ledger traffic).
+    fn reset_wire_marks(&mut self) {
+        if let Some(conn) = &self.conn {
+            self.counted_out = conn.bytes_out();
+            self.counted_in = conn.bytes_in();
+        }
+        self.peer_bytes = 0;
     }
 }
 
@@ -313,7 +581,43 @@ impl ShardBackend for ProcessShard {
         }
     }
 
+    fn serve_pulls(&mut self, round: usize, ctx: &AggCtx<'_>) -> Result<()> {
+        if !self.routed {
+            return Ok(());
+        }
+        let (first, rows) = ctx
+            .routes
+            .context("internal: socket transport without a routing table")?;
+        let lo = self.start.checked_sub(first).with_context(|| {
+            format!(
+                "internal: routing table starts at victim {first}, past shard start {}",
+                self.start
+            )
+        })?;
+        ensure!(
+            rows.len() >= lo + self.len,
+            "internal: routing table has {} victims, shard {} needs {}..{}",
+            rows.len(),
+            self.index,
+            lo,
+            lo + self.len
+        );
+        let slice = &rows[lo..lo + self.len];
+        let as_u32: Vec<Vec<u32>> = slice
+            .iter()
+            .map(|per| per.iter().map(|&p| p as u32).collect())
+            .collect();
+        self.send(&proto::encode_aggregate_routed(
+            round as u64,
+            ctx.digest,
+            &as_u32,
+        ))
+    }
+
     fn aggregate_begin(&mut self, round: usize, ctx: &AggCtx<'_>) -> Result<()> {
+        if self.routed {
+            return Ok(()); // serve_pulls already shipped the routed frame
+        }
         // the payload is worker-independent: encode the O(h·d) frame once
         // per round and write the same bytes to every worker's pipe
         let frame = ctx
@@ -335,6 +639,7 @@ impl ShardBackend for ProcessShard {
                 round: got,
                 byz_seen,
                 received,
+                peer_bytes,
                 params,
             } => {
                 ensure!(
@@ -363,6 +668,7 @@ impl ShardBackend for ProcessShard {
                 for (out, v) in received_out.iter_mut().zip(&received) {
                     *out = *v as usize;
                 }
+                self.peer_bytes += peer_bytes;
                 self.pending_params = params;
                 Ok(())
             }
@@ -386,26 +692,49 @@ impl ShardBackend for ProcessShard {
         Ok(())
     }
 
+    fn take_wire_bytes(&mut self) -> (u64, u64, u64) {
+        let (out, inn) = match &self.conn {
+            Some(conn) => (conn.bytes_out(), conn.bytes_in()),
+            None => (self.counted_out, self.counted_in),
+        };
+        let delta = (out - self.counted_out, inn - self.counted_in, self.peer_bytes);
+        self.counted_out = out;
+        self.counted_in = inn;
+        self.peer_bytes = 0;
+        delta
+    }
+
     fn kill_for_test(&mut self) -> bool {
-        self.stdin = None; // close the pipe so nothing blocks on a corpse
+        // drop the connection outright (no drain — the peer is about to
+        // die) so nothing blocks on a corpse
+        self.conn = None;
         self.child.kill().is_ok()
+    }
+
+    fn inject_chaos(&mut self, plan: ChaosPlan) -> bool {
+        match self.conn.take() {
+            Some(inner) => {
+                self.conn = Some(Box::new(ChaosTransport::new(inner, plan)));
+                true
+            }
+            None => false,
+        }
     }
 }
 
 impl Drop for ProcessShard {
     fn drop(&mut self) {
-        if let Some(mut stdin) = self.stdin.take() {
-            let _ = wire::write_frame(&mut stdin, &proto::encode_shutdown());
-            let _ = stdin.flush();
-            // dropping the write end closes the pipe: EOF doubles as
-            // Shutdown for workers that missed the frame
+        if let Some(mut conn) = self.conn.take() {
+            // Best effort: ask for an orderly exit, then half-close the
+            // write direction and drain the read side. After an aborted
+            // round (e.g. a sibling worker died) a surviving worker can
+            // be blocked writing a reply nobody will read — with a reply
+            // larger than the kernel buffer, wait() alone would deadlock.
+            // Draining unblocks that write; the worker then observes the
+            // close (pipe EOF / socket half-close) and exits.
+            let _ = conn.send(&proto::encode_shutdown());
+            conn.shutdown();
         }
-        // Drain the worker's stdout before reaping: after an aborted
-        // round (e.g. a sibling worker died) a surviving worker can be
-        // blocked writing a reply nobody will read — with a reply larger
-        // than the pipe buffer, wait() alone would deadlock. Draining
-        // unblocks that write; the worker then reads EOF and exits.
-        let _ = std::io::copy(&mut self.stdout, &mut std::io::sink());
         let _ = self.child.wait();
     }
 }
@@ -429,7 +758,7 @@ struct WorkerShard {
     pool: WorkerPool,
     shard: NodeShard,
     d: usize,
-    /// honest population size (row count of the broadcast table)
+    /// honest population size (row count of the full round table)
     h: usize,
     /// the shard's slice of the round tables
     halves: Vec<Vec<f32>>,
@@ -497,6 +826,7 @@ impl WorkerShard {
             .half_step(&ctx, &self.pool, &mut self.halves, &mut self.losses)
     }
 
+    /// Phases 3–5 against the full broadcast table (pipe transport).
     fn aggregate_commit(
         &mut self,
         round: usize,
@@ -528,6 +858,7 @@ impl WorkerShard {
             digest: &digest,
             halves: all_halves,
             push_recv: push_recv.as_deref(),
+            routes: None,
             byz: &self.byz,
             node_of: &self.node_of,
             sampler: self.sampler,
@@ -535,6 +866,7 @@ impl WorkerShard {
             seed: self.cfg.seed,
             n: self.cfg.n,
             b: self.cfg.b,
+            push: self.push_s.is_some(),
             dos: self.cfg.attack == AttackKind::Dos,
             wire_frame: std::sync::OnceLock::new(),
         };
@@ -548,21 +880,145 @@ impl WorkerShard {
         self.shard.commit_into(&mut self.params_scratch);
         Ok(())
     }
+
+    /// Phases 3–5 against the shipped routing table (socket transport):
+    /// fetch the referenced off-shard honest rows from the owning peers,
+    /// then aggregate exactly as the pipe path would. Returns the bytes
+    /// exchanged with peers (for the coordinator's ledger).
+    fn aggregate_commit_routed(
+        &mut self,
+        round: usize,
+        digest: proto::WireDigest,
+        routes_wire: &[Vec<u32>],
+        client: &mut PeerClient,
+    ) -> Result<u64> {
+        let start = self.shard.start;
+        let len = self.shard.shard_len();
+        ensure!(
+            routes_wire.len() == len,
+            "AggregateRouted has {} victims, expected {len}",
+            routes_wire.len()
+        );
+        let mut routes: Vec<Vec<usize>> = Vec::with_capacity(len);
+        for per in routes_wire {
+            let mut row = Vec::with_capacity(per.len());
+            for &p in per {
+                let p = p as usize;
+                ensure!(
+                    p < self.cfg.n,
+                    "routing table references node {p} (n = {})",
+                    self.cfg.n
+                );
+                row.push(p);
+            }
+            routes.push(row);
+        }
+        // sparse round table: own rows now, referenced peer rows below —
+        // no row travels that the routing table doesn't require
+        let mut table: Vec<Vec<f32>> = vec![Vec::new(); self.h];
+        for (i, row) in self.halves.iter().enumerate() {
+            table[start + i] = row.clone();
+        }
+        let mut need: Vec<Vec<u32>> = vec![Vec::new(); client.peer_count()];
+        for per in &routes {
+            for &p in per {
+                if self.byz[p] {
+                    continue; // crafted locally against the digest
+                }
+                let hi = self.node_of[p];
+                if hi >= start && hi < start + len {
+                    continue; // own row
+                }
+                let owner = client.owner_of(hi).with_context(|| {
+                    format!("routing table references honest row {hi} that no peer owns")
+                })?;
+                need[owner].push(hi as u32);
+            }
+        }
+        let mut peer_bytes = 0u64;
+        for (owner, mut rows) in need.into_iter().enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            rows.sort_unstable();
+            rows.dedup();
+            let (fetched, bytes) = client.fetch(round as u64, owner, &rows, self.d)?;
+            peer_bytes += bytes;
+            for (hi, row) in rows.iter().zip(fetched) {
+                table[*hi as usize] = row;
+            }
+        }
+        let digest = digest.into_digest();
+        let ctx = AggCtx {
+            agg: &self.agg,
+            attack: self.attack.as_deref(),
+            digest: &digest,
+            halves: &table,
+            push_recv: None,
+            routes: Some((start, &routes)),
+            byz: &self.byz,
+            node_of: &self.node_of,
+            sampler: self.sampler,
+            gossip_rows: self.gossip_rows.as_deref(),
+            seed: self.cfg.seed,
+            n: self.cfg.n,
+            b: self.cfg.b,
+            push: self.push_s.is_some(),
+            dos: self.cfg.attack == AttackKind::Dos,
+            wire_frame: std::sync::OnceLock::new(),
+        };
+        self.shard.aggregate(
+            round,
+            &ctx,
+            &self.pool,
+            &mut self.byz_seen,
+            &mut self.received,
+        )?;
+        self.shard.commit_into(&mut self.params_scratch);
+        Ok(peer_bytes)
+    }
 }
 
-fn send_reply(w: &mut impl Write, payload: &[u8]) -> Result<()> {
-    wire::write_frame(w, payload)?;
-    w.flush()?;
-    Ok(())
+/// The `rpel shard-worker` entry for the pipe transport: strict
+/// request/reply over stdin/stdout. Returns cleanly on `Shutdown` or EOF
+/// at a frame boundary; processing errors are shipped as
+/// `Failed{message}` (best effort) before propagating, so the
+/// coordinator sees the root cause.
+pub fn run_worker<R: Read + Send, W: Write + Send>(input: R, output: W) -> Result<()> {
+    let mut conn = PipeTransport::new(BufReader::new(input), BufWriter::new(output));
+    run_worker_loop(&mut conn, None)
 }
 
-/// The `rpel shard-worker` main loop: strict request/reply over the given
-/// streams. Returns cleanly on `Shutdown` or EOF at a frame boundary;
-/// processing errors are shipped as `Failed{message}` (best effort)
-/// before propagating, so the coordinator sees the root cause.
-pub fn run_worker<R: Read, W: Write>(mut input: R, mut output: W) -> Result<()> {
-    let Some(first) = wire::read_frame_opt(&mut input).context("shard worker: reading handshake")?
-    else {
+/// The `rpel shard-worker` entry for the socket transport: bind our own
+/// pull listener, dial the coordinator, identify with `PeerHello`, then
+/// speak the same request/reply protocol on the control connection while
+/// the listener serves peers' `PullRequest`s.
+pub fn run_worker_socket(connect: &str, worker: usize) -> Result<()> {
+    let coord = SockAddr::parse(connect)
+        .with_context(|| format!("shard worker {worker}: bad --connect address"))?;
+    let listen_at = match &coord {
+        SockAddr::Unix(path) => {
+            let dir = path
+                .parent()
+                .context("coordinator socket path has no parent directory")?;
+            SockAddr::Unix(dir.join(format!("worker-{worker}.sock")))
+        }
+        SockAddr::Tcp(_) => SockAddr::Tcp("127.0.0.1:0".into()),
+    };
+    let listener = Listener::bind(&listen_at)
+        .with_context(|| format!("shard worker {worker}: binding pull listener"))?;
+    let listen = listener.local_addr()?;
+    let mut conn = SocketTransport::connect(&coord)
+        .with_context(|| format!("shard worker {worker}: connecting to coordinator at {coord}"))?;
+    conn.send(&proto::encode_peer_hello(worker as u32, &listen.to_string()))?;
+    run_worker_loop(&mut conn, Some(listener))
+}
+
+/// The shared worker loop. `peer_listener` is `Some` on the socket
+/// transport, where the `Peers` address book is expected right after the
+/// `Init`/`InitOk` handshake and pull serving starts.
+fn run_worker_loop<T: Transport>(conn: &mut T, peer_listener: Option<Listener>) -> Result<()> {
+    let Some(first) = conn.recv_opt().context("shard worker: reading handshake")? else {
         return Ok(()); // closed before Init: nothing to do
     };
     let (cfg, index, procs) =
@@ -574,33 +1030,24 @@ pub fn run_worker<R: Read, W: Write>(mut input: R, mut output: W) -> Result<()> 
             } => match config_file::from_toml_str(&config_toml) {
                 Ok(cfg) => (cfg, worker as usize, procs as usize),
                 Err(e) => {
-                    let _ = send_reply(
-                        &mut output,
-                        &proto::encode_failed(&format!("bad config: {e}")),
-                    );
+                    let _ = conn.send(&proto::encode_failed(&format!("bad config: {e}")));
                     bail!("shard worker: bad config: {e}");
                 }
             },
-            other => bail!(
-                "shard worker: expected Init, got {}",
-                request_name(&other)
-            ),
+            other => bail!("shard worker: expected Init, got {}", request_name(&other)),
         };
     let mut state = match WorkerShard::build(&cfg, index, procs) {
         Ok(state) => state,
         Err(e) => {
-            let _ = send_reply(&mut output, &proto::encode_failed(&format!("{e:#}")));
+            let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
             return Err(e);
         }
     };
-    send_reply(
-        &mut output,
-        &proto::encode_init_ok(
-            state.shard.start as u64,
-            state.shard.shard_len() as u64,
-            state.d as u64,
-        ),
-    )?;
+    conn.send(&proto::encode_init_ok(
+        state.shard.start as u64,
+        state.shard.shard_len() as u64,
+        state.d as u64,
+    ))?;
     log::info!(
         "shard worker {index}/{procs}: honest nodes {}..{} (d={})",
         state.shard.start,
@@ -608,21 +1055,51 @@ pub fn run_worker<R: Read, W: Write>(mut input: R, mut output: W) -> Result<()> 
         state.d
     );
 
+    // socket transport: the address book arrives before the first round
+    let mut peer_net: Option<(RowServer, PeerClient)> = None;
+    if let Some(listener) = peer_listener {
+        let Some(frame) = conn.recv_opt()? else {
+            return Ok(()); // torn down before the first round
+        };
+        match proto::decode_to_worker(&frame)? {
+            ToWorker::Peers { peers } => match build_peer_net(&state, index, &peers, listener) {
+                Ok(net) => peer_net = Some(net),
+                Err(e) => {
+                    let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
+                    return Err(e);
+                }
+            },
+            other => bail!(
+                "shard worker: expected Peers after InitOk, got {}",
+                request_name(&other)
+            ),
+        }
+    }
+
     loop {
-        let Some(frame) = wire::read_frame_opt(&mut input)? else {
-            return Ok(()); // coordinator closed the pipe: orderly shutdown
+        let Some(frame) = conn.recv_opt()? else {
+            return Ok(()); // coordinator closed the stream: orderly shutdown
         };
         match proto::decode_to_worker(&frame)? {
             ToWorker::Shutdown => return Ok(()),
             ToWorker::Init { .. } => bail!("shard worker: duplicate Init"),
+            ToWorker::Peers { .. } if peer_net.is_some() => {
+                bail!("shard worker: duplicate Peers")
+            }
+            ToWorker::Peers { .. } => {
+                bail!("shard worker: Peers on the pipe transport (no pull listener)")
+            }
             ToWorker::HalfStep { round } => match state.half_step(round as usize) {
-                Ok(()) => send_reply(
-                    &mut output,
-                    &proto::encode_snapshot(round, &state.losses, &state.halves),
-                )?,
+                Ok(()) => {
+                    if let Some((server, _)) = &peer_net {
+                        // publish BEFORE the snapshot: the coordinator
+                        // only routes peers here after seeing it
+                        server.publish(round, &state.halves);
+                    }
+                    conn.send(&proto::encode_snapshot(round, &state.losses, &state.halves))?;
+                }
                 Err(e) => {
-                    let _ =
-                        send_reply(&mut output, &proto::encode_failed(&format!("{e:#}")));
+                    let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
                     return Err(e);
                 }
             },
@@ -634,17 +1111,82 @@ pub fn run_worker<R: Read, W: Write>(mut input: R, mut output: W) -> Result<()> 
                 Ok(()) => {
                     let byz: Vec<u32> = state.byz_seen.iter().map(|&x| x as u32).collect();
                     let recv: Vec<u32> = state.received.iter().map(|&x| x as u32).collect();
-                    send_reply(
-                        &mut output,
-                        &proto::encode_round_done(round, &byz, &recv, &state.params_scratch),
-                    )?;
+                    conn.send(&proto::encode_round_done(
+                        round,
+                        &byz,
+                        &recv,
+                        0,
+                        &state.params_scratch,
+                    ))?;
                 }
                 Err(e) => {
-                    let _ =
-                        send_reply(&mut output, &proto::encode_failed(&format!("{e:#}")));
+                    let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
                     return Err(e);
                 }
             },
+            ToWorker::AggregateRouted {
+                round,
+                digest,
+                routes,
+            } => {
+                let result = match &mut peer_net {
+                    Some((_, client)) => {
+                        state.aggregate_commit_routed(round as usize, digest, &routes, client)
+                    }
+                    None => Err(anyhow::anyhow!(
+                        "AggregateRouted on the pipe transport (no peer network)"
+                    )),
+                };
+                match result {
+                    Ok(peer_bytes) => {
+                        let byz: Vec<u32> = state.byz_seen.iter().map(|&x| x as u32).collect();
+                        let recv: Vec<u32> =
+                            state.received.iter().map(|&x| x as u32).collect();
+                        conn.send(&proto::encode_round_done(
+                            round,
+                            &byz,
+                            &recv,
+                            peer_bytes,
+                            &state.params_scratch,
+                        ))?;
+                    }
+                    Err(e) => {
+                        let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
+                        return Err(e);
+                    }
+                }
+            }
         }
     }
+}
+
+/// Validate the coordinator's address book against the locally derived
+/// partition, then start serving.
+fn build_peer_net(
+    state: &WorkerShard,
+    index: usize,
+    book: &[PeerEntry],
+    listener: Listener,
+) -> Result<(RowServer, PeerClient)> {
+    let client = PeerClient::new(index, book)?;
+    ensure!(
+        index < client.peer_count(),
+        "peer book has {} entries, but this is worker {index}",
+        client.peer_count()
+    );
+    let (bs, bl) = client.range_of(index);
+    ensure!(
+        bs == state.shard.start && bl == state.shard.shard_len(),
+        "peer book range mismatch for worker {index}: book says {bs}+{bl}, \
+         derived {}+{}",
+        state.shard.start,
+        state.shard.shard_len()
+    );
+    let server = RowServer::spawn(
+        listener,
+        index,
+        state.shard.start,
+        state.shard.shard_len(),
+    )?;
+    Ok((server, client))
 }

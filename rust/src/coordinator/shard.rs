@@ -14,11 +14,14 @@
 //!    receives the shard's `Snapshot` — the **shipped round digest**);
 //! 2. the coordinator folds the table rows, in ascending honest-node
 //!    order, into the global [`crate::attacks::HonestDigest`];
-//! 3. `aggregate_begin` / `aggregate_end` — per victim: pull `S_i^t`,
-//!    craft malicious rows against the digest, robustly aggregate
-//!    (in-process: on the pool against the shared tables; remote: the
-//!    worker receives the digest + full half-step table and replies with
-//!    its per-node byz-seen / delivered counts);
+//! 3. `serve_pulls` / `aggregate_begin` / `aggregate_end` — per victim:
+//!    pull `S_i^t`, craft malicious rows against the digest, robustly
+//!    aggregate (in-process: on the pool against the shared tables;
+//!    pipe remote: the worker receives the digest + full half-step
+//!    table; socket remote: `serve_pulls` ships only the digest + the
+//!    routing table and the worker fetches the referenced rows from the
+//!    owning peers — see [`super::peer`]); `aggregate_end` collects the
+//!    per-node byz-seen / delivered counts;
 //! 4. `commit` — the synchronous swap; the backend refreshes its slice
 //!    of the coordinator's committed-params mirror (remote shards ship
 //!    their committed rows, which is what keeps evaluation and
@@ -80,10 +83,21 @@ pub(crate) struct AggCtx<'a> {
     pub agg: &'a AggBackend,
     pub attack: Option<&'a dyn Attack>,
     pub digest: &'a HonestDigest,
-    /// all honest half-steps, ascending honest order (the round table)
+    /// all honest half-steps, ascending honest order (the round table).
+    /// On a routed (socket-transport) worker this is sparse: only the
+    /// rows the routing table references are populated — own rows plus
+    /// the rows fetched from owning peers.
     pub halves: &'a [Vec<f32>],
     /// push mode: per-victim sender lists (honest-indexed)
     pub push_recv: Option<&'a [Vec<usize>]>,
+    /// Routing table `(first_victim, per-victim receive sets)`: the
+    /// ordered global node ids each victim receives from this round.
+    /// `Some` on the routed paths (coordinator with socket transport;
+    /// worker executing `AggregateRouted`), where it *replaces* the
+    /// local pull-set / push-route / neighborhood derivation — receive
+    /// order is dictated by the table, so both derivations are
+    /// bit-identical by construction.
+    pub routes: Option<(usize, &'a [Vec<usize>])>,
     pub byz: &'a [bool],
     pub node_of: &'a [usize],
     pub sampler: Option<PullSampler>,
@@ -91,11 +105,13 @@ pub(crate) struct AggCtx<'a> {
     pub seed: u64,
     pub n: usize,
     pub b: usize,
+    /// push topology (Byzantine senders flood every honest node)
+    pub push: bool,
     pub dos: bool,
     /// Lazily encoded `Aggregate` wire frame for this round: the payload
-    /// (digest + table) is identical for every worker process, so the
-    /// first remote backend encodes it once and the rest reuse the bytes
-    /// (`OnceLock` keeps the ctx shareable across pool threads).
+    /// (digest + table) is identical for every pipe-transport worker, so
+    /// the first remote backend encodes it once and the rest reuse the
+    /// bytes (`OnceLock` keeps the ctx shareable across pool threads).
     pub wire_frame: std::sync::OnceLock<Vec<u8>>,
 }
 
@@ -121,7 +137,16 @@ pub(crate) trait ShardBackend: Send {
         halves_out: &mut [Vec<f32>],
         losses_out: &mut [f64],
     ) -> Result<()>;
-    /// Kick off phases 3–4 (remote: ship digest + table; local: no-op).
+    /// The serve-pulls phase (socket transport only): ship the digest
+    /// plus this worker's slice of the per-round pull routing table; the
+    /// worker then fetches the referenced honest rows from the owning
+    /// peers' listeners. No-op for in-process and pipe backends, which
+    /// see the whole table in `aggregate_begin`.
+    fn serve_pulls(&mut self, _round: usize, _ctx: &AggCtx<'_>) -> Result<()> {
+        Ok(())
+    }
+    /// Kick off phases 3–4 (pipe remote: ship digest + full table;
+    /// socket remote: no-op — `serve_pulls` already did; local: no-op).
     fn aggregate_begin(&mut self, round: usize, ctx: &AggCtx<'_>) -> Result<()>;
     /// Complete phases 3–4: fill byz-seen and delivered-model counts.
     fn aggregate_end(
@@ -141,9 +166,20 @@ pub(crate) trait ShardBackend: Send {
     fn as_node_shard(&mut self) -> Option<&mut NodeShard> {
         None
     }
+    /// Drain this backend's wire-byte counters since the last call:
+    /// `(coordinator→worker, worker→coordinator, peer-served)` bytes.
+    /// In-process backends report zeros.
+    fn take_wire_bytes(&mut self) -> (u64, u64, u64) {
+        (0, 0, 0)
+    }
     /// Test hook: forcibly kill the backing worker process (remote
     /// backends only; returns false for in-process shards).
     fn kill_for_test(&mut self) -> bool {
+        false
+    }
+    /// Test hook: wrap the backend's transport in the chaos fault
+    /// injector (remote backends only; returns false otherwise).
+    fn inject_chaos(&mut self, _plan: crate::testkit::chaos::ChaosPlan) -> bool {
         false
     }
 }
@@ -326,24 +362,30 @@ fn run_agg_jobs(
             // this victim's global honest index (contiguous partition)
             let gi = job.gi;
             let d = job.out.len();
-            // pull set from the (seed, round, id, PULL) stream; in push
-            // mode, borrow the precomputed receive row (no clone)
+            // receive set: the shipped routing table when present (routed
+            // socket path — order is dictated by the table); otherwise the
+            // (seed, round, id, PULL) stream, the precomputed push receive
+            // row (borrowed, no clone), or the graph neighborhood
             let pulled: Vec<usize>;
-            let peers: &[usize] = match (ctx.sampler, ctx.push_recv, ctx.gossip_rows) {
-                (Some(sampler), _, _) => {
-                    pulled = sampler.sample_at(ctx.seed, round, id);
-                    &pulled
+            let peers: &[usize] = if let Some((first, rows)) = ctx.routes {
+                &rows[gi - first]
+            } else {
+                match (ctx.sampler, ctx.push_recv, ctx.gossip_rows) {
+                    (Some(sampler), _, _) => {
+                        pulled = sampler.sample_at(ctx.seed, round, id);
+                        &pulled
+                    }
+                    (None, Some(recv), _) => &recv[gi],
+                    (None, None, Some(rows)) => {
+                        pulled = rows[id]
+                            .iter()
+                            .map(|&(j, _)| j)
+                            .filter(|&j| j != id)
+                            .collect();
+                        &pulled
+                    }
+                    _ => unreachable!(),
                 }
-                (None, Some(recv), _) => &recv[gi],
-                (None, None, Some(rows)) => {
-                    pulled = rows[id]
-                        .iter()
-                        .map(|&(j, _)| j)
-                        .filter(|&j| j != id)
-                        .collect();
-                    &pulled
-                }
-                _ => unreachable!(),
             };
 
             // split into honest refs and byzantine slots
@@ -356,8 +398,10 @@ fn run_agg_jobs(
                     honest_rows.push(ctx.halves[ctx.node_of[p]].as_slice());
                 }
             }
-            if ctx.push_recv.is_some() && ctx.b > 0 && !ctx.dos {
+            if ctx.push && ctx.b > 0 && !ctx.dos {
                 // flooding: every Byzantine node reaches every honest node
+                // (push routes carry only honest senders, so this holds on
+                // the routed path too)
                 byz_count = ctx.b;
             }
             if ctx.dos {

@@ -5,7 +5,7 @@
 //! `results/<figure>/`.
 
 use crate::config::presets::{EafScenario, Figure, FigureSeries, Scale};
-use crate::config::{EngineKind, ExperimentConfig};
+use crate::config::{EngineKind, ExperimentConfig, TransportKind};
 use crate::coordinator::Trainer;
 use crate::metrics::{write_histories, History};
 use crate::sampling::EafSimulator;
@@ -83,9 +83,11 @@ fn eaf_csv(rows: &[EafRow]) -> String {
 }
 
 /// Run one figure end to end. `threads_override` / `shards_override` /
-/// `procs_override` force the round-engine worker, shard, and
-/// shard-process counts on every series config (None = keep the preset's
-/// value; results are identical either way).
+/// `procs_override` / `transport_override` force the round-engine
+/// worker, shard, shard-process, and wire-transport settings on every
+/// series config (None = keep the preset's value; results are identical
+/// either way).
+#[allow(clippy::too_many_arguments)]
 pub fn run_figure(
     fig: &Figure,
     scale: Scale,
@@ -93,6 +95,7 @@ pub fn run_figure(
     threads_override: Option<usize>,
     shards_override: Option<usize>,
     procs_override: Option<usize>,
+    transport_override: Option<TransportKind>,
     out_dir: &str,
 ) -> Result<FigureOutcome> {
     println!("figure {} — {}", fig.id, fig.title);
@@ -113,6 +116,9 @@ pub fn run_figure(
                 }
                 if let Some(procs) = procs_override {
                     cfg.procs = procs;
+                }
+                if let Some(transport) = transport_override {
+                    cfg.transport = transport;
                 }
                 histories.push(run_training(cfg)?);
             }

@@ -13,7 +13,7 @@
 
 use rpel::cli::Args;
 use rpel::config::presets::{self, Scale};
-use rpel::config::{file as config_file, EngineKind};
+use rpel::config::{file as config_file, EngineKind, TransportKind};
 use rpel::experiments;
 use rpel::metrics::write_histories;
 use rpel::sampling::select_params;
@@ -28,9 +28,12 @@ USAGE:
               [--threads N]   (0 = all cores, 1 = serial; same results)
               [--shards N]    (node-shard partitions, default 1; same results)
               [--procs N]     (shard worker processes, default 1; same results)
+              [--transport pipe|socket|tcp]  (worker wire; same results.
+                socket/tcp = worker-served pulls, no O(h·d) table broadcast)
+              [--socket-dir DIR]  (unix-socket directory; default temp)
   rpel figure --id <fig1L|fig1R|...|fig21|all> [--scale tiny|paper]
               [--engine hlo|native] [--out results] [--threads N] [--shards N]
-              [--procs N]
+              [--procs N] [--transport pipe|socket|tcp]
   rpel eaf    --n <N> --b <B> [--t 200] [--sims 5] --grid 5,10,15,...
   rpel select --n <N> --b <B> [--t 200] [--q 0.49] [--sims 5]
               [--grid 2,...,n-1] [--exact] [--p 0.99]
@@ -82,9 +85,28 @@ fn engine_override(args: &Args) -> Result<Option<EngineKind>, String> {
     }
 }
 
+fn transport_override(args: &Args) -> Result<Option<TransportKind>, String> {
+    match args.get("transport") {
+        None => Ok(None),
+        Some(t) => TransportKind::parse(t)
+            .map(Some)
+            .ok_or_else(|| format!("unknown transport '{t}' (pipe|socket|tcp)")),
+    }
+}
+
 fn cmd_train(args: &Args) -> CmdResult {
     args.check_known(&[
-        "config", "preset", "engine", "out", "seed", "rounds", "threads", "shards", "procs",
+        "config",
+        "preset",
+        "engine",
+        "out",
+        "seed",
+        "rounds",
+        "threads",
+        "shards",
+        "procs",
+        "transport",
+        "socket-dir",
     ])?;
     let mut cfg = if let Some(path) = args.get("config") {
         config_file::load(path)?
@@ -128,6 +150,12 @@ fn cmd_train(args: &Args) -> CmdResult {
     if let Some(procs) = args.get_usize("procs")? {
         cfg.procs = procs;
     }
+    if let Some(transport) = transport_override(args)? {
+        cfg.transport = transport;
+    }
+    if let Some(dir) = args.get("socket-dir") {
+        cfg.socket_dir = dir.to_string();
+    }
     let hist = experiments::run_training(&cfg)?;
     let out = args.get_or("out", "results");
     let paths = write_histories(&format!("{out}/train"), &[hist])?;
@@ -136,7 +164,9 @@ fn cmd_train(args: &Args) -> CmdResult {
 }
 
 fn cmd_figure(args: &Args) -> CmdResult {
-    args.check_known(&["id", "scale", "engine", "out", "threads", "shards", "procs"])?;
+    args.check_known(&[
+        "id", "scale", "engine", "out", "threads", "shards", "procs", "transport",
+    ])?;
     let id = args.get("id").ok_or("figure needs --id")?;
     let scale =
         Scale::parse(args.get_or("scale", "tiny")).ok_or("scale must be tiny|paper")?;
@@ -144,6 +174,7 @@ fn cmd_figure(args: &Args) -> CmdResult {
     let threads = args.get_usize("threads")?;
     let shards = args.get_usize("shards")?;
     let procs = args.get_usize("procs")?;
+    let transport = transport_override(args)?;
     let out = args.get_or("out", "results");
     let figs: Vec<_> = if id == "all" {
         presets::all_figures().to_vec()
@@ -152,8 +183,9 @@ fn cmd_figure(args: &Args) -> CmdResult {
             .ok_or_else(|| format!("unknown figure '{id}' (try `rpel list`)"))?]
     };
     for fig in figs {
-        let outcome =
-            experiments::run_figure(&fig, scale, engine, threads, shards, procs, out)?;
+        let outcome = experiments::run_figure(
+            &fig, scale, engine, threads, shards, procs, transport, out,
+        )?;
         println!("\n{}", experiments::summary_table(&outcome));
         println!("csv: {}\n", outcome.csv_paths.join(", "));
     }
@@ -295,14 +327,27 @@ fn cmd_check(args: &Args) -> CmdResult {
 }
 
 /// Host one honest shard for a multi-process coordinator: strict
-/// request/reply wire protocol on stdin/stdout (see `rpel::wire::proto`).
-/// Spawned by `Trainer` when `--procs N > 1`; not intended for manual use.
+/// request/reply wire protocol on stdin/stdout (pipe transport) or on a
+/// stream socket with worker-side pull serving (`--transport socket
+/// --connect <addr> --worker <idx>`). See `rpel::wire::proto` for the
+/// sequence diagrams. Spawned by `Trainer` when `--procs N > 1`; not
+/// intended for manual use.
 fn cmd_shard_worker(args: &Args) -> CmdResult {
-    args.check_known(&[])?;
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    rpel::coordinator::proc::run_worker(stdin.lock(), stdout.lock())
-        .map_err(|e| format!("{e:#}").into())
+    args.check_known(&["transport", "connect", "worker"])?;
+    let result = match args.get_or("transport", "pipe") {
+        "pipe" => rpel::coordinator::proc::run_worker(std::io::stdin(), std::io::stdout()),
+        "socket" | "tcp" => {
+            let connect = args
+                .get("connect")
+                .ok_or("shard-worker --transport socket needs --connect")?;
+            let worker = args
+                .get_usize("worker")?
+                .ok_or("shard-worker --transport socket needs --worker")?;
+            rpel::coordinator::proc::run_worker_socket(connect, worker)
+        }
+        other => return Err(format!("unknown shard-worker transport '{other}'").into()),
+    };
+    result.map_err(|e| format!("{e:#}").into())
 }
 
 /// Minimal env_logger replacement: RUST_LOG=debug|info|warn enables stderr

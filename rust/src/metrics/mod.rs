@@ -38,6 +38,18 @@ pub struct History {
     /// Byzantine nodes' own pulls.
     pub delivered_per_round: Vec<usize>,
     pub total_delivered: usize,
+    /// Bytes-on-the-wire ledger (multi-process engine; all zeros for
+    /// in-process runs), per round. `wire_coord_out_per_round` is what
+    /// the coordinator shipped to shard workers — the axis the socket
+    /// transport shrinks from O(h·d) per worker (pipe broadcast) to
+    /// O(s·d + routing table); `wire_coord_in_per_round` is the upstream
+    /// snapshot/commit traffic; `wire_peer_per_round` is what workers
+    /// served each other directly (socket transport only). Measured, not
+    /// asserted: `rust/tests/message_accounting.rs` pins each against
+    /// independent recomputation from the routing table.
+    pub wire_coord_out_per_round: Vec<usize>,
+    pub wire_coord_in_per_round: Vec<usize>,
+    pub wire_peer_per_round: Vec<usize>,
     /// wall-clock seconds of the run (perf bookkeeping)
     pub wall_secs: f64,
 }
@@ -113,6 +125,21 @@ impl History {
                     .map(|&x| Json::Num(x as f64))
                     .collect(),
             ),
+        );
+        let bytes_arr = |xs: &[usize]| {
+            Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+        };
+        obj.insert(
+            "wire_coord_out_per_round".into(),
+            bytes_arr(&self.wire_coord_out_per_round),
+        );
+        obj.insert(
+            "wire_coord_in_per_round".into(),
+            bytes_arr(&self.wire_coord_in_per_round),
+        );
+        obj.insert(
+            "wire_peer_per_round".into(),
+            bytes_arr(&self.wire_peer_per_round),
         );
         obj.insert("wall_secs".into(), Json::Num(self.wall_secs));
         obj.insert(
@@ -257,6 +284,22 @@ mod tests {
             3
         );
         assert!(h.report_line().contains("delivered=330"));
+    }
+
+    #[test]
+    fn wire_ledger_exported() {
+        let mut h = sample();
+        h.wire_coord_out_per_round = vec![640, 640, 640];
+        h.wire_coord_in_per_round = vec![900, 900, 900];
+        h.wire_peer_per_round = vec![128, 128, 128];
+        let parsed = crate::util::json::parse(&h.to_json().to_string_compact()).unwrap();
+        for key in [
+            "wire_coord_out_per_round",
+            "wire_coord_in_per_round",
+            "wire_peer_per_round",
+        ] {
+            assert_eq!(parsed.get(key).unwrap().as_arr().unwrap().len(), 3, "{key}");
+        }
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Deterministic fault injection for the wire transports.
+//!
+//! Two layers, matching the two layers of the transport stack:
+//!
+//! * [`ChaosStream`] wraps any `Read`/`Write` byte stream and perturbs
+//!   the *byte* level: split reads (fewer bytes than asked), short
+//!   writes (partial `write` returns), EOF mid-frame after a byte
+//!   budget, and fixed delays. Chunk sizes come from the counter RNG
+//!   keyed `(seed, op_index, 0, CHAOS)` — a chaotic run reproduces
+//!   exactly from its seed.
+//! * [`ChaosTransport`] wraps a [`Transport`] and perturbs the *frame*
+//!   level: delayed replies, a replayed earlier frame (how a reply
+//!   stranded by an aborted round manifests — the stale-round case), and
+//!   a stream cut after N frames (how a worker killed mid-protocol
+//!   manifests to the peer still reading).
+//!
+//! The test suite (`rust/tests/transport_faults.rs`) drives both pipe
+//! and socket paths through these wrappers and asserts every fault
+//! surfaces as an actionable error naming the worker and round — never
+//! a hang, never silent corruption.
+
+use crate::util::rng::{stream_tag, Rng};
+use crate::wire::transport::Transport;
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Byte-level fault wrapper. All faults default to off; enable the ones
+/// a test needs with the builder methods.
+pub struct ChaosStream<S> {
+    inner: S,
+    seed: u64,
+    ops: u64,
+    split_reads: bool,
+    short_writes: bool,
+    /// Stop yielding bytes (EOF) after this many bytes have been read —
+    /// lands mid-frame by construction in the tests.
+    eof_after: Option<u64>,
+    /// Sleep this long before every read (a slow peer, not a dead one).
+    read_delay: Option<Duration>,
+    bytes_read: u64,
+}
+
+impl<S> ChaosStream<S> {
+    pub fn new(inner: S, seed: u64) -> ChaosStream<S> {
+        ChaosStream {
+            inner,
+            seed,
+            ops: 0,
+            split_reads: false,
+            short_writes: false,
+            eof_after: None,
+            read_delay: None,
+            bytes_read: 0,
+        }
+    }
+
+    /// Reads return 1–3 bytes at a time regardless of how many were asked.
+    pub fn split_reads(mut self) -> Self {
+        self.split_reads = true;
+        self
+    }
+
+    /// Writes accept 1–3 bytes at a time regardless of how many were given.
+    pub fn short_writes(mut self) -> Self {
+        self.short_writes = true;
+        self
+    }
+
+    /// Simulate the peer dying after `n` bytes: reads hit EOF mid-frame.
+    pub fn eof_after(mut self, n: u64) -> Self {
+        self.eof_after = Some(n);
+        self
+    }
+
+    /// Sleep before every read — a delayed (but correct) reply.
+    pub fn read_delay(mut self, d: Duration) -> Self {
+        self.read_delay = Some(d);
+        self
+    }
+
+    /// 1..=3, a pure function of (seed, op counter).
+    fn chunk(&mut self) -> usize {
+        let mut rng = Rng::stream(self.seed, self.ops, 0, stream_tag::CHAOS);
+        self.ops += 1;
+        1 + rng.index(3)
+    }
+}
+
+impl<S: Read> Read for ChaosStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if let Some(d) = self.read_delay {
+            std::thread::sleep(d);
+        }
+        let mut max = buf.len();
+        if self.split_reads {
+            max = max.min(self.chunk());
+        }
+        if let Some(cap) = self.eof_after {
+            let left = cap.saturating_sub(self.bytes_read) as usize;
+            if left == 0 {
+                return Ok(0); // the "peer" is gone: clean EOF mid-frame
+            }
+            max = max.min(left);
+        }
+        let n = self.inner.read(&mut buf[..max])?;
+        self.bytes_read += n as u64;
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for ChaosStream<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let mut max = buf.len();
+        if self.short_writes {
+            max = max.min(self.chunk());
+        }
+        self.inner.write(&buf[..max])
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Frame-level fault schedule for [`ChaosTransport`].
+#[derive(Clone, Debug, Default)]
+pub struct ChaosPlan {
+    /// Sleep before delivering every received frame (delayed replies).
+    pub recv_delay: Option<Duration>,
+    /// `(at, from)`: deliver, in place of the `at`-th received frame
+    /// (0-based), a byte-exact replay of the `from`-th — the stale-reply
+    /// case an aborted round leaves behind.
+    pub replay: Option<(u64, u64)>,
+    /// Error out (as a mid-frame stream death) on the `n`-th receive.
+    pub cut_at: Option<u64>,
+}
+
+/// Transport wrapper applying a [`ChaosPlan`]. Sends pass through
+/// untouched — the faults model a misbehaving *peer*, not a corrupted
+/// local encoder.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    plan: ChaosPlan,
+    recvd: u64,
+    log: Vec<Vec<u8>>,
+}
+
+impl ChaosTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: ChaosPlan) -> ChaosTransport {
+        ChaosTransport {
+            inner,
+            plan,
+            recvd: 0,
+            log: Vec::new(),
+        }
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        self.inner.send(payload)
+    }
+
+    fn recv_opt(&mut self) -> Result<Option<Vec<u8>>> {
+        if let Some(d) = self.plan.recv_delay {
+            std::thread::sleep(d);
+        }
+        let idx = self.recvd;
+        if self.plan.cut_at == Some(idx) {
+            bail!("wire: stream closed mid-frame body (chaos cut)");
+        }
+        if let Some((at, from)) = self.plan.replay {
+            if idx == at {
+                let frame = self
+                    .log
+                    .get(from as usize)
+                    .cloned()
+                    .expect("chaos replay source not yet received");
+                self.recvd += 1;
+                return Ok(Some(frame));
+            }
+        }
+        let frame = self.inner.recv_opt()?;
+        if let Some(f) = &frame {
+            // retain only what a pending replay can still reference —
+            // without this the log would grow by O(table) per round
+            let keep = self
+                .plan
+                .replay
+                .map(|(_, from)| from as usize + 1)
+                .unwrap_or(0);
+            if self.log.len() < keep {
+                self.log.push(f.clone());
+            }
+            self.recvd += 1;
+        }
+        Ok(frame)
+    }
+
+    fn bytes_out(&self) -> u64 {
+        self.inner.bytes_out()
+    }
+
+    fn bytes_in(&self) -> u64 {
+        self.inner.bytes_in()
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire;
+
+    #[test]
+    fn chaos_chunks_are_deterministic_per_seed() {
+        let sizes = |seed| {
+            let mut s = ChaosStream::new(std::io::empty(), seed).split_reads();
+            (0..32).map(|_| s.chunk()).collect::<Vec<_>>()
+        };
+        assert_eq!(sizes(7), sizes(7));
+        assert_ne!(sizes(7), sizes(8));
+        assert!(sizes(7).iter().all(|&c| (1..=3).contains(&c)));
+    }
+
+    #[test]
+    fn split_reads_and_short_writes_preserve_frames() {
+        let mut wire_bytes = Vec::new();
+        {
+            let mut w = ChaosStream::new(&mut wire_bytes, 1).short_writes();
+            wire::write_frame(&mut w, b"the quick brown fox").unwrap();
+            wire::write_frame(&mut w, b"").unwrap();
+            w.flush().unwrap();
+        }
+        let mut r = ChaosStream::new(std::io::Cursor::new(wire_bytes), 2).split_reads();
+        assert_eq!(wire::read_frame(&mut r).unwrap(), b"the quick brown fox");
+        assert_eq!(wire::read_frame(&mut r).unwrap(), b"");
+        assert!(wire::read_frame_opt(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn eof_mid_frame_is_an_error_not_a_hang() {
+        let mut buf = Vec::new();
+        wire::write_frame(&mut buf, &[0xAB; 64]).unwrap();
+        for cut in [2u64, 4, 5, 40] {
+            let mut r = ChaosStream::new(std::io::Cursor::new(buf.clone()), 3).eof_after(cut);
+            let err = wire::read_frame(&mut r).unwrap_err().to_string();
+            assert!(err.contains("mid-frame"), "cut={cut}: {err}");
+        }
+    }
+}

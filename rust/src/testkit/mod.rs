@@ -1,4 +1,5 @@
-//! Property-testing mini-harness (the offline crate set lacks proptest).
+//! Property-testing mini-harness (the offline crate set lacks proptest),
+//! plus the deterministic transport fault injector ([`chaos`]).
 //!
 //! A [`forall`] runner drives a generator against a property over many
 //! seeded cases; on failure it performs greedy shrinking (halving vectors,
@@ -13,6 +14,8 @@
 //!     v.iter().all(|x| x.abs() <= 10.0)
 //! });
 //! ```
+
+pub mod chaos;
 
 use crate::util::rng::Rng;
 

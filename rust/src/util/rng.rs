@@ -30,6 +30,11 @@ pub mod stream_tag {
     /// Per-victim attack randomness (reserved; current attacks are
     /// deterministic functions of the honest state).
     pub const ATTACK: u64 = 0x52;
+    /// Fault-injection schedule of the chaos test harness
+    /// ([`crate::testkit::chaos`]): split-read and short-write sizes are
+    /// a pure function of `(seed, op_index, 0, CHAOS)`, so every chaotic
+    /// failure reproduces from its seed.
+    pub const CHAOS: u64 = 0x53;
 }
 
 /// Xoshiro256++ PRNG (Blackman & Vigna), seeded through SplitMix64.

@@ -1,22 +1,44 @@
 //! Length-prefixed binary wire format for the multi-process shard engine.
 //!
 //! The coordinator and its `rpel shard-worker` processes exchange frames
-//! over stdin/stdout pipes: `[u32 LE length][payload]`. Payloads are built
-//! from a handful of primitives — LE integers, IEEE-754 bit patterns for
-//! floats, and `u32`-length-prefixed sequences — so every message has
-//! exactly one byte representation and `encode ∘ decode = id` **bit-wise**
-//! (floats round-trip through `to_bits`/`from_bits`, never through text).
-//! That byte-exactness is what lets a shipped [`proto`] round payload
-//! reproduce the in-process engine's results to the last ulp; it is pinned
-//! by golden-vector and property tests in `rust/tests/wire_roundtrip.rs`.
+//! of `[u32 LE length][payload]` over a [`transport::Transport`] — the
+//! stdin/stdout pipe pair (`--transport pipe`, the default) or a stream
+//! socket (`--transport socket` for unix-domain, `tcp` for loopback TCP;
+//! both sit behind the same [`transport::Listener`] code so workers can
+//! later live on other hosts). Payloads are built from a handful of
+//! primitives — LE integers, IEEE-754 bit patterns for floats, and
+//! `u32`-length-prefixed sequences — so every message has exactly one
+//! byte representation and `encode ∘ decode = id` **bit-wise** (floats
+//! round-trip through `to_bits`/`from_bits`, never through text). That
+//! byte-exactness is what lets a shipped [`proto`] round payload
+//! reproduce the in-process engine's results to the last ulp *on either
+//! transport*; it is pinned by golden-vector and property tests in
+//! `rust/tests/wire_roundtrip.rs` and the (transport × procs × shards ×
+//! threads) grid in `rust/tests/determinism.rs`.
+//!
+//! The two transports differ in **who ships the round tables**, not in
+//! the codec (see [`proto`] for the sequence diagrams):
+//!
+//! * **pipe** — the coordinator broadcasts the full O(h·d) half-step
+//!   table to every worker in `Aggregate`;
+//! * **socket** — the coordinator ships only the folded digest plus the
+//!   per-round pull **routing table** (`AggregateRouted`), and workers
+//!   serve each other the referenced rows directly (`PullRequest` /
+//!   `PullReply` on each worker's own listener), dropping the per-worker
+//!   coordinator traffic from O(h·d) to O(s·d + routing table). The
+//!   reduction is *measured* by the per-round bytes ledger in
+//!   [`crate::metrics::History`].
 //!
 //! The codec is deliberately std-only (the offline crate set has no serde)
 //! and paranoid on the read side: every length is bounds-checked against
 //! the remaining buffer before allocation, truncated frames and trailing
 //! bytes are errors, and a [`MAX_FRAME`] cap turns stream corruption into
-//! an actionable error instead of an absurd allocation.
+//! an actionable error instead of an absurd allocation. Fault injection
+//! (short writes, split reads, mid-frame EOF, delayed and stale replies)
+//! is covered by [`crate::testkit::chaos`] + `rust/tests/transport_faults.rs`.
 
 pub mod proto;
+pub mod transport;
 
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};

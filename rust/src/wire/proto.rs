@@ -1,7 +1,8 @@
 //! Round-protocol messages for the multi-process shard engine.
 //!
 //! One worker process owns one contiguous honest shard and converses with
-//! the coordinator in strict request/reply lockstep:
+//! the coordinator in strict request/reply lockstep. On the **pipe**
+//! transport (stdin/stdout, the default):
 //!
 //! ```text
 //! coordinator → worker     worker → coordinator
@@ -9,37 +10,76 @@
 //! Init                     InitOk | Failed        (handshake, once)
 //! HalfStep{round}          Snapshot{losses,halves}  (phase 1: the shipped
 //!                                                    RoundDigest payload)
-//! Aggregate{round,         RoundDone{byz_seen,
-//!   digest, halves}          received, params}    (phases 3–5)
+//! Aggregate{round,         RoundDone{byz_seen, received,
+//!   digest, halves}          peer_bytes, params}  (phases 3–5)
 //! Shutdown (or EOF)        —                      (worker exits 0)
+//! ```
+//!
+//! On the **socket** transport each worker additionally binds its own
+//! listener and *serves pulls to its peers directly*, so the coordinator
+//! never broadcasts the O(h·d) table — only the digest and the per-round
+//! pull **routing table**:
+//!
+//! ```text
+//! worker → coordinator      coordinator → worker     worker w → worker v
+//! --------------------      ------------------       -------------------
+//! PeerHello{worker,listen}                           (control connect)
+//!                           Init
+//! InitOk | Failed
+//!                           Peers{start,len,addr}*   (the address book)
+//!                           HalfStep{round}
+//! Snapshot{losses,halves}
+//!                           AggregateRouted{round,
+//!                             digest, routes}        PeerHello{worker}
+//!                                                    PullRequest{round,rows}
+//!                                                    ← PullReply{round,rows}
+//!                                                      | Deny{message}
+//! RoundDone{...}
+//!                           Shutdown (or EOF)
 //! ```
 //!
 //! `Snapshot` is the promoted [`crate::coordinator::Trainer`] round
 //! digest: the shard's half-step rows in ascending honest order plus its
 //! per-node losses. The coordinator folds all shards' snapshots — in
 //! ascending honest-node order, exactly as the in-process engine folds
-//! borrowed rows — into the global [`HonestDigest`], then broadcasts that
-//! digest and the full half-step table back in `Aggregate` so every
-//! worker can serve its victims' pulls and craft against the same
-//! omniscient context. All floats travel as IEEE bit patterns, so a
-//! multi-process run is bit-identical with its in-process twin.
+//! borrowed rows — into the global [`HonestDigest`]. On the pipe path it
+//! then broadcasts that digest and the full half-step table back in
+//! `Aggregate`; on the socket path it ships `AggregateRouted` instead —
+//! the digest plus, per owned victim, the ordered list of global node
+//! ids the victim receives from this round — and each worker fetches the
+//! honest rows it needs from the owning peer's listener. Rows travel as
+//! IEEE bit patterns either way and per-victim receive order is dictated
+//! by the routing table, so both transports are bit-identical with the
+//! in-process engine.
 //!
-//! Any processing error on the worker is reported as `Failed{message}`
-//! before the worker exits, so the coordinator surfaces the root cause
-//! rather than a bare broken pipe.
+//! Every worker reply echoes the request's round, and `PullReply` echoes
+//! the `PullRequest` round, so a reply stranded by an aborted round can
+//! never be silently consumed as a later round's. Any processing error
+//! on the worker is reported as `Failed{message}` (or `Deny{message}`
+//! peer-side) before the stream closes, so the coordinator surfaces the
+//! root cause rather than a bare broken pipe.
 
 use super::{Reader, Writer};
 use crate::attacks::HonestDigest;
 use anyhow::{bail, Result};
 
-/// Bumped on any layout change; both sides verify it in the handshake.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// Bumped on any layout change; every side verifies it in its handshake
+/// (`Init`/`InitOk` on the control channel, `PeerHello` peer-side).
+/// v2: socket transport — `PeerHello`/`Peers`/`AggregateRouted`/
+/// `PullRequest`/`PullReply`; `RoundDone` gained `peer_bytes`.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 mod tag {
     pub const INIT: u8 = 0x01;
     pub const HALF_STEP: u8 = 0x02;
     pub const AGGREGATE: u8 = 0x03;
     pub const SHUTDOWN: u8 = 0x04;
+    pub const PEERS: u8 = 0x05;
+    pub const AGGREGATE_ROUTED: u8 = 0x06;
+    pub const PEER_HELLO: u8 = 0x40;
+    pub const PULL_REQUEST: u8 = 0x41;
+    pub const PULL_REPLY: u8 = 0x42;
+    pub const PEER_DENY: u8 = 0x43;
     pub const INIT_OK: u8 = 0x81;
     pub const SNAPSHOT: u8 = 0x82;
     pub const ROUND_DONE: u8 = 0x83;
@@ -58,15 +98,59 @@ pub enum ToWorker {
     },
     /// Run phase 1 (local half-steps) for round `round`.
     HalfStep { round: u64 },
-    /// Phases 3–5: the folded honest digest plus the full half-step
-    /// table (h rows, ascending honest order) to serve pulls from.
+    /// Phases 3–5 (pipe transport): the folded honest digest plus the
+    /// full half-step table (h rows, ascending honest order) to serve
+    /// pulls from.
     Aggregate {
         round: u64,
         digest: WireDigest,
         halves: Vec<Vec<f32>>,
     },
+    /// Peer address book (socket transport, once after `InitOk`): per
+    /// worker process, the honest range it owns and the listener address
+    /// it serves pulls on.
+    Peers { peers: Vec<PeerEntry> },
+    /// Phases 3–5 (socket transport): the folded honest digest plus the
+    /// per-round pull **routing table** — per owned victim (ascending),
+    /// the ordered global node ids it receives from this round. The
+    /// worker crafts Byzantine rows against the digest and fetches the
+    /// honest rows it lacks from the owning peers' listeners; no
+    /// committed row travels that the table does not require.
+    AggregateRouted {
+        round: u64,
+        digest: WireDigest,
+        routes: Vec<Vec<u32>>,
+    },
     /// Orderly exit (EOF on stdin means the same).
     Shutdown,
+}
+
+/// One worker's entry in the `Peers` address book.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PeerEntry {
+    /// First honest index of the worker's contiguous range.
+    pub start: u64,
+    /// Honest nodes in the range.
+    pub len: u64,
+    /// Textual listener address (`unix:<path>` / `tcp:<host:port>`).
+    pub addr: String,
+}
+
+/// Worker ↔ worker pull-serving protocol (socket transport only).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PeerMsg {
+    /// Connection opener, both on the coordinator control socket and on
+    /// peer pull connections: identifies the dialing worker (and, on the
+    /// control socket, the listener address it serves pulls on).
+    /// Version-checked like `Init`.
+    Hello { worker: u32, listen: String },
+    /// Fetch the given honest rows (global honest indices, owned by the
+    /// serving worker) of round `round`'s half-step table.
+    PullRequest { round: u64, rows: Vec<u32> },
+    /// The requested rows, in request order. `round` echoes the request.
+    PullReply { round: u64, rows: Vec<Vec<f32>> },
+    /// Refusal with a root cause (stale round, out-of-range row, …).
+    Deny { message: String },
 }
 
 /// Worker → coordinator.
@@ -84,12 +168,17 @@ pub enum FromWorker {
         halves: Vec<Vec<f32>>,
     },
     /// Round completed: per-node Byzantine-rows-seen and delivered-model
-    /// counts, plus the committed params (the coordinator's mirror rows).
-    /// `round` echoes the request (see [`FromWorker::Snapshot`]).
+    /// counts, the bytes this worker **fetched from peers' listeners**
+    /// this round (pull requests + replies + one-time hellos; 0 on the
+    /// pipe transport — each peer transfer is counted exactly once, on
+    /// the pulling side, so serving workers report 0 for rows they
+    /// shipped), plus the committed params (the coordinator's mirror
+    /// rows). `round` echoes the request (see [`FromWorker::Snapshot`]).
     RoundDone {
         round: u64,
         byz_seen: Vec<u32>,
         received: Vec<u32>,
+        peer_bytes: u64,
         params: Vec<Vec<f32>>,
     },
     /// Terminal worker-side error, shipped before exiting.
@@ -209,6 +298,7 @@ pub fn encode_round_done<R: AsRef<[f32]>>(
     round: u64,
     byz_seen: &[u32],
     received: &[u32],
+    peer_bytes: u64,
     params: &[R],
 ) -> Vec<u8> {
     let mut w = Writer::new();
@@ -216,8 +306,142 @@ pub fn encode_round_done<R: AsRef<[f32]>>(
     w.put_u64(round);
     w.put_u32s(byz_seen);
     w.put_u32s(received);
+    w.put_u64(peer_bytes);
     w.put_f32_rows(params);
     w.into_bytes()
+}
+
+pub fn encode_peers(peers: &[PeerEntry]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::PEERS);
+    w.put_u32(peers.len() as u32);
+    for p in peers {
+        w.put_u64(p.start);
+        w.put_u64(p.len);
+        w.put_str(&p.addr);
+    }
+    w.into_bytes()
+}
+
+/// Routing table encoding: `[u32 victims]` then per victim a `u32`-count
+/// list of global node ids (the ordered receive set).
+fn put_routes(w: &mut Writer, routes: &[Vec<u32>]) {
+    w.put_u32(routes.len() as u32);
+    for r in routes {
+        w.put_u32s(r);
+    }
+}
+
+fn read_routes(r: &mut Reader<'_>) -> Result<Vec<Vec<u32>>> {
+    let n = r.u32()? as usize;
+    // each victim row costs at least its 4-byte count prefix: bound the
+    // allocation before trusting a corrupt count
+    if n > r.remaining() / 4 {
+        bail!(
+            "wire: routing table claims {n} victims with only {} bytes left",
+            r.remaining()
+        );
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.u32s()?);
+    }
+    Ok(out)
+}
+
+/// Socket-transport aggregate kick-off: digest + routing table, no rows.
+pub fn encode_aggregate_routed(
+    round: u64,
+    digest: &HonestDigest,
+    routes: &[Vec<u32>],
+) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::AGGREGATE_ROUTED);
+    w.put_u64(round);
+    put_digest(
+        &mut w,
+        digest.count as u64,
+        &digest.mean,
+        &digest.std,
+        &digest.prev_mean,
+    );
+    put_routes(&mut w, routes);
+    w.into_bytes()
+}
+
+// --- peer protocol (worker ↔ worker pull serving) --------------------------
+
+pub fn encode_peer_hello(worker: u32, listen: &str) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::PEER_HELLO);
+    w.put_u32(PROTOCOL_VERSION);
+    w.put_u32(worker);
+    w.put_str(listen);
+    w.into_bytes()
+}
+
+pub fn encode_pull_request(round: u64, rows: &[u32]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::PULL_REQUEST);
+    w.put_u64(round);
+    w.put_u32s(rows);
+    w.into_bytes()
+}
+
+pub fn encode_pull_reply<R: AsRef<[f32]>>(round: u64, rows: &[R]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::PULL_REPLY);
+    w.put_u64(round);
+    w.put_f32_rows(rows);
+    w.into_bytes()
+}
+
+pub fn encode_peer_deny(message: &str) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::PEER_DENY);
+    w.put_str(message);
+    w.into_bytes()
+}
+
+pub fn encode_peer(msg: &PeerMsg) -> Vec<u8> {
+    match msg {
+        PeerMsg::Hello { worker, listen } => encode_peer_hello(*worker, listen),
+        PeerMsg::PullRequest { round, rows } => encode_pull_request(*round, rows),
+        PeerMsg::PullReply { round, rows } => encode_pull_reply(*round, rows),
+        PeerMsg::Deny { message } => encode_peer_deny(message),
+    }
+}
+
+pub fn decode_peer(buf: &[u8]) -> Result<PeerMsg> {
+    let mut r = Reader::new(buf);
+    let msg = match r.u8()? {
+        tag::PEER_HELLO => {
+            let version = r.u32()?;
+            if version != PROTOCOL_VERSION {
+                bail!(
+                    "wire: protocol version mismatch (peer {version}, ours {PROTOCOL_VERSION})"
+                );
+            }
+            PeerMsg::Hello {
+                worker: r.u32()?,
+                listen: r.string()?,
+            }
+        }
+        tag::PULL_REQUEST => PeerMsg::PullRequest {
+            round: r.u64()?,
+            rows: r.u32s()?,
+        },
+        tag::PULL_REPLY => PeerMsg::PullReply {
+            round: r.u64()?,
+            rows: r.f32_rows()?,
+        },
+        tag::PEER_DENY => PeerMsg::Deny {
+            message: r.string()?,
+        },
+        other => bail!("wire: unknown peer message tag {other:#04x}"),
+    };
+    r.finish()?;
+    Ok(msg)
 }
 
 pub fn encode_failed(message: &str) -> Vec<u8> {
@@ -258,6 +482,25 @@ pub fn encode_to_worker(msg: &ToWorker) -> Vec<u8> {
             w.put_f32_rows(halves);
             w.into_bytes()
         }
+        ToWorker::Peers { peers } => encode_peers(peers),
+        ToWorker::AggregateRouted {
+            round,
+            digest,
+            routes,
+        } => {
+            let mut w = Writer::new();
+            w.put_u8(tag::AGGREGATE_ROUTED);
+            w.put_u64(*round);
+            put_digest(
+                &mut w,
+                digest.count,
+                &digest.mean,
+                &digest.std,
+                &digest.prev_mean,
+            );
+            put_routes(&mut w, routes);
+            w.into_bytes()
+        }
         ToWorker::Shutdown => encode_shutdown(),
     }
 }
@@ -292,6 +535,35 @@ pub fn decode_to_worker(buf: &[u8]) -> Result<ToWorker> {
                 halves,
             }
         }
+        tag::PEERS => {
+            let n = r.u32()? as usize;
+            // each entry costs at least start+len+addr-count = 20 bytes
+            if n > r.remaining() / 20 {
+                bail!(
+                    "wire: peer book claims {n} entries with only {} bytes left",
+                    r.remaining()
+                );
+            }
+            let mut peers = Vec::with_capacity(n);
+            for _ in 0..n {
+                peers.push(PeerEntry {
+                    start: r.u64()?,
+                    len: r.u64()?,
+                    addr: r.string()?,
+                });
+            }
+            ToWorker::Peers { peers }
+        }
+        tag::AGGREGATE_ROUTED => {
+            let round = r.u64()?;
+            let digest = read_digest(&mut r)?;
+            let routes = read_routes(&mut r)?;
+            ToWorker::AggregateRouted {
+                round,
+                digest,
+                routes,
+            }
+        }
         tag::SHUTDOWN => ToWorker::Shutdown,
         other => bail!("wire: unknown coordinator message tag {other:#04x}"),
     };
@@ -311,8 +583,9 @@ pub fn encode_from_worker(msg: &FromWorker) -> Vec<u8> {
             round,
             byz_seen,
             received,
+            peer_bytes,
             params,
-        } => encode_round_done(*round, byz_seen, received, params),
+        } => encode_round_done(*round, byz_seen, received, *peer_bytes, params),
         FromWorker::Failed { message } => encode_failed(message),
     }
 }
@@ -342,6 +615,7 @@ pub fn decode_from_worker(buf: &[u8]) -> Result<FromWorker> {
             round: r.u64()?,
             byz_seen: r.u32s()?,
             received: r.u32s()?,
+            peer_bytes: r.u64()?,
             params: r.f32_rows()?,
         },
         tag::FAILED => FromWorker::Failed {
@@ -376,6 +650,30 @@ mod tests {
                 },
                 halves: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
             },
+            ToWorker::Peers {
+                peers: vec![
+                    PeerEntry {
+                        start: 0,
+                        len: 5,
+                        addr: "unix:/tmp/w0.sock".into(),
+                    },
+                    PeerEntry {
+                        start: 5,
+                        len: 4,
+                        addr: "tcp:127.0.0.1:9009".into(),
+                    },
+                ],
+            },
+            ToWorker::AggregateRouted {
+                round: 8,
+                digest: WireDigest {
+                    count: 3,
+                    mean: vec![1.0],
+                    std: vec![0.5],
+                    prev_mean: vec![0.0],
+                },
+                routes: vec![vec![4, 1, 9], vec![], vec![2]],
+            },
             ToWorker::Shutdown,
         ];
         for msg in &msgs {
@@ -401,6 +699,7 @@ mod tests {
                 round: 12,
                 byz_seen: vec![0, 2],
                 received: vec![6, 6],
+                peer_bytes: 12345,
                 params: vec![vec![9.0f32, 8.0], vec![7.0, 6.0]],
             },
             FromWorker::Failed {
@@ -411,6 +710,54 @@ mod tests {
             let buf = encode_from_worker(msg);
             assert_eq!(&decode_from_worker(&buf).unwrap(), msg);
         }
+    }
+
+    #[test]
+    fn peer_messages_round_trip() {
+        let msgs = [
+            PeerMsg::Hello {
+                worker: 2,
+                listen: "unix:/tmp/w2.sock".into(),
+            },
+            PeerMsg::PullRequest {
+                round: 3,
+                rows: vec![0, 7, 4],
+            },
+            PeerMsg::PullReply {
+                round: 3,
+                rows: vec![vec![1.5f32, -0.0], vec![2.0, 4.0]],
+            },
+            PeerMsg::Deny {
+                message: "stale round".into(),
+            },
+        ];
+        for msg in &msgs {
+            let buf = encode_peer(msg);
+            assert_eq!(&decode_peer(&buf).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn peer_hello_version_mismatch_detected() {
+        let mut buf = encode_peer_hello(1, "unix:/x");
+        buf[1] ^= 0x10;
+        let err = decode_peer(&buf).unwrap_err().to_string();
+        assert!(err.contains("version mismatch"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_route_and_peer_counts_bounded() {
+        // absurd victim count in AggregateRouted must not allocate
+        let digest = HonestDigest::new(1);
+        let mut buf = encode_aggregate_routed(1, &digest, &[]);
+        let n = buf.len();
+        buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_to_worker(&buf).is_err());
+        // absurd peer count in Peers likewise
+        let mut buf = encode_peers(&[]);
+        let n = buf.len();
+        buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_to_worker(&buf).is_err());
     }
 
     #[test]

@@ -1,0 +1,475 @@
+//! Framed transports: the byte streams the wire codec rides on.
+//!
+//! [`Transport`] abstracts "send one frame / receive one frame" over any
+//! duplex byte channel, with cumulative byte counters so the coordinator
+//! can keep a per-round bytes-on-the-wire ledger. Two implementations:
+//!
+//! * [`PipeTransport`] — the original stdin/stdout path: any
+//!   `Read` + `Write` pair (child pipes, in-memory cursors in tests);
+//! * [`SocketTransport`] — a connected stream socket. Unix-domain
+//!   sockets are the default on unix; TCP sits behind the **same**
+//!   listener/stream code ([`Listener`], [`SockAddr::Tcp`]) so shard
+//!   workers can later live on other hosts.
+//!
+//! Both speak the identical `[u32 LE length][payload]` framing of
+//! [`super`], so a message is byte-for-byte the same on either transport
+//! — which is what lets the determinism suite pin bit-identical results
+//! across the whole (transport × procs × shards × threads) grid.
+//!
+//! Teardown is part of the contract: [`Transport::shutdown`] closes the
+//! write direction and then drains the read side, so a peer blocked
+//! mid-write (a reply larger than the kernel buffer, aimed at a
+//! coordinator that already gave up on the round) is unblocked and
+//! observes EOF instead of deadlocking the reap.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+
+/// One frame in, one frame out, with byte accounting.
+pub trait Transport: Send {
+    /// Write one framed payload and flush it.
+    fn send(&mut self, payload: &[u8]) -> Result<()>;
+    /// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+    fn recv_opt(&mut self) -> Result<Option<Vec<u8>>>;
+    /// Read one frame; EOF anywhere is an error (peer died mid-protocol).
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.recv_opt()?
+            .context("wire: unexpected end of stream")
+    }
+    /// Cumulative bytes written (payloads + 4-byte frame headers).
+    fn bytes_out(&self) -> u64;
+    /// Cumulative bytes read (payloads + 4-byte frame headers).
+    fn bytes_in(&self) -> u64;
+    /// Close the write direction, then drain the read side to EOF so a
+    /// peer blocked mid-write can finish and observe the close.
+    fn shutdown(&mut self);
+}
+
+/// Framed transport over any `Read` + `Write` pair — the stdin/stdout
+/// pipe path, and the generic substrate the chaos harness wraps.
+pub struct PipeTransport<R: Read, W: Write> {
+    r: R,
+    /// `None` after [`Transport::shutdown`] (dropping the writer closes
+    /// the pipe's write end, which is EOF for the peer).
+    w: Option<W>,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+impl<R: Read, W: Write> PipeTransport<R, W> {
+    pub fn new(r: R, w: W) -> PipeTransport<R, W> {
+        PipeTransport {
+            r,
+            w: Some(w),
+            bytes_in: 0,
+            bytes_out: 0,
+        }
+    }
+}
+
+impl<R: Read + Send, W: Write + Send> Transport for PipeTransport<R, W> {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        let w = self
+            .w
+            .as_mut()
+            .context("wire: transport already shut down")?;
+        super::write_frame(w, payload)?;
+        w.flush()?;
+        self.bytes_out += payload.len() as u64 + 4;
+        Ok(())
+    }
+
+    fn recv_opt(&mut self) -> Result<Option<Vec<u8>>> {
+        let frame = super::read_frame_opt(&mut self.r)?;
+        if let Some(f) = &frame {
+            self.bytes_in += f.len() as u64 + 4;
+        }
+        Ok(frame)
+    }
+
+    fn bytes_out(&self) -> u64 {
+        self.bytes_out
+    }
+
+    fn bytes_in(&self) -> u64 {
+        self.bytes_in
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(mut w) = self.w.take() {
+            let _ = w.flush();
+            drop(w); // closes the write end: the peer reads EOF
+        }
+        // unblock a peer stuck writing a bigger-than-buffer reply
+        let _ = std::io::copy(&mut self.r, &mut std::io::sink());
+    }
+}
+
+/// Socket address for [`Listener`]/[`SocketTransport`]: a filesystem
+/// path (unix-domain) or `host:port` (TCP). The textual form
+/// (`unix:<path>` / `tcp:<host:port>`) is what travels in `PeerHello`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SockAddr {
+    Unix(PathBuf),
+    Tcp(String),
+}
+
+impl SockAddr {
+    pub fn parse(s: &str) -> Result<SockAddr> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            Ok(SockAddr::Unix(PathBuf::from(path)))
+        } else if let Some(addr) = s.strip_prefix("tcp:") {
+            Ok(SockAddr::Tcp(addr.to_string()))
+        } else {
+            bail!("bad socket address '{s}' (expected unix:<path> or tcp:<host:port>)")
+        }
+    }
+}
+
+impl std::fmt::Display for SockAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SockAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+            SockAddr::Tcp(a) => write!(f, "tcp:{a}"),
+        }
+    }
+}
+
+/// A connected stream socket (unix-domain or TCP) behind one type.
+pub enum SocketStream {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl SocketStream {
+    pub fn connect(addr: &SockAddr) -> Result<SocketStream> {
+        match addr {
+            #[cfg(unix)]
+            SockAddr::Unix(path) => {
+                let s = UnixStream::connect(path)
+                    .with_context(|| format!("connecting to unix socket {}", path.display()))?;
+                Ok(SocketStream::Unix(s))
+            }
+            #[cfg(not(unix))]
+            SockAddr::Unix(path) => bail!(
+                "unix-domain sockets are unsupported on this platform \
+                 (addr {}); use transport \"tcp\"",
+                path.display()
+            ),
+            SockAddr::Tcp(a) => {
+                let s = TcpStream::connect(a.as_str())
+                    .with_context(|| format!("connecting to tcp socket {a}"))?;
+                s.set_nodelay(true).ok();
+                Ok(SocketStream::Tcp(s))
+            }
+        }
+    }
+
+    fn try_clone(&self) -> Result<SocketStream> {
+        Ok(match self {
+            #[cfg(unix)]
+            SocketStream::Unix(s) => SocketStream::Unix(s.try_clone()?),
+            SocketStream::Tcp(s) => SocketStream::Tcp(s.try_clone()?),
+        })
+    }
+
+    fn shutdown_write(&self) {
+        let how = std::net::Shutdown::Write;
+        match self {
+            #[cfg(unix)]
+            SocketStream::Unix(s) => {
+                let _ = s.shutdown(how);
+            }
+            SocketStream::Tcp(s) => {
+                let _ = s.shutdown(how);
+            }
+        }
+    }
+
+    pub fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.set_nonblocking(nb)?,
+            SocketStream::Tcp(s) => s.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+
+    /// Bound blocking reads (`None` = block forever). A timed-out read
+    /// surfaces as an io error, so a mute peer becomes an actionable
+    /// failure instead of a hang.
+    pub fn set_read_timeout(&self, timeout: Option<std::time::Duration>) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.set_read_timeout(timeout)?,
+            SocketStream::Tcp(s) => s.set_read_timeout(timeout)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for SocketStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.read(buf),
+            SocketStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for SocketStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.write(buf),
+            SocketStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            SocketStream::Unix(s) => s.flush(),
+            SocketStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Framed transport over a connected socket. Reader and writer are
+/// independent handles onto the same socket (`try_clone`), so a serving
+/// thread can hold one while the protocol loop holds the other.
+pub struct SocketTransport {
+    r: std::io::BufReader<SocketStream>,
+    w: Option<std::io::BufWriter<SocketStream>>,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+impl SocketTransport {
+    pub fn connect(addr: &SockAddr) -> Result<SocketTransport> {
+        SocketTransport::from_stream(SocketStream::connect(addr)?)
+    }
+
+    pub fn from_stream(stream: SocketStream) -> Result<SocketTransport> {
+        let w = stream.try_clone()?;
+        Ok(SocketTransport {
+            r: std::io::BufReader::new(stream),
+            w: Some(std::io::BufWriter::new(w)),
+            bytes_in: 0,
+            bytes_out: 0,
+        })
+    }
+
+    /// See [`SocketStream::set_read_timeout`].
+    pub fn set_read_timeout(&self, timeout: Option<std::time::Duration>) -> Result<()> {
+        self.r.get_ref().set_read_timeout(timeout)
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        let w = self
+            .w
+            .as_mut()
+            .context("wire: socket transport already shut down")?;
+        super::write_frame(w, payload)?;
+        w.flush()?;
+        self.bytes_out += payload.len() as u64 + 4;
+        Ok(())
+    }
+
+    fn recv_opt(&mut self) -> Result<Option<Vec<u8>>> {
+        let frame = super::read_frame_opt(&mut self.r)?;
+        if let Some(f) = &frame {
+            self.bytes_in += f.len() as u64 + 4;
+        }
+        Ok(frame)
+    }
+
+    fn bytes_out(&self) -> u64 {
+        self.bytes_out
+    }
+
+    fn bytes_in(&self) -> u64 {
+        self.bytes_in
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(mut w) = self.w.take() {
+            let _ = w.flush();
+            // half-close: the socket stays readable, the peer sees EOF
+            w.get_ref().shutdown_write();
+        }
+        let _ = std::io::copy(&mut self.r, &mut std::io::sink());
+    }
+}
+
+/// Bound listener: unix-domain and TCP behind the same accept loop, so
+/// the worker-spawning code is transport-family agnostic.
+pub enum Listener {
+    #[cfg(unix)]
+    Unix { inner: UnixListener, path: PathBuf },
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Bind at `addr`. `tcp:host:0` binds an ephemeral port — query the
+    /// real address with [`Listener::local_addr`]. A stale unix socket
+    /// file at the path is removed first.
+    pub fn bind(addr: &SockAddr) -> Result<Listener> {
+        match addr {
+            #[cfg(unix)]
+            SockAddr::Unix(path) => {
+                let _ = std::fs::remove_file(path);
+                let inner = UnixListener::bind(path)
+                    .with_context(|| format!("binding unix socket {}", path.display()))?;
+                Ok(Listener::Unix {
+                    inner,
+                    path: path.clone(),
+                })
+            }
+            #[cfg(not(unix))]
+            SockAddr::Unix(path) => bail!(
+                "unix-domain sockets are unsupported on this platform \
+                 (addr {}); use transport \"tcp\"",
+                path.display()
+            ),
+            SockAddr::Tcp(a) => {
+                let inner = TcpListener::bind(a.as_str())
+                    .with_context(|| format!("binding tcp socket {a}"))?;
+                Ok(Listener::Tcp(inner))
+            }
+        }
+    }
+
+    /// The bound address (with the real port for ephemeral TCP binds).
+    pub fn local_addr(&self) -> Result<SockAddr> {
+        Ok(match self {
+            #[cfg(unix)]
+            Listener::Unix { path, .. } => SockAddr::Unix(path.clone()),
+            Listener::Tcp(l) => SockAddr::Tcp(l.local_addr()?.to_string()),
+        })
+    }
+
+    pub fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix { inner, .. } => inner.set_nonblocking(nb)?,
+            Listener::Tcp(l) => l.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+
+    /// Accept one connection (honors the listener's blocking mode; a
+    /// `WouldBlock` is returned as the raw io error for poll loops).
+    pub fn accept(&self) -> std::io::Result<SocketStream> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix { inner, .. } => {
+                let (s, _) = inner.accept()?;
+                Ok(SocketStream::Unix(s))
+            }
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true).ok();
+                Ok(SocketStream::Tcp(s))
+            }
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Unix { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipe_transport_frames_and_counts() {
+        let mut out = Vec::new();
+        {
+            let mut t = PipeTransport::new(std::io::empty(), &mut out);
+            t.send(b"abc").unwrap();
+            t.send(b"").unwrap();
+            assert_eq!(t.bytes_out(), 3 + 4 + 4);
+        }
+        let mut t = PipeTransport::new(std::io::Cursor::new(out), std::io::sink());
+        assert_eq!(t.recv().unwrap(), b"abc");
+        assert_eq!(t.recv().unwrap(), b"");
+        assert!(t.recv_opt().unwrap().is_none());
+        assert_eq!(t.bytes_in(), 3 + 4 + 4);
+        assert!(t.recv().is_err(), "EOF mid-protocol is an error");
+    }
+
+    #[test]
+    fn sockaddr_round_trips_textually() {
+        for addr in [
+            SockAddr::Unix(PathBuf::from("/tmp/x.sock")),
+            SockAddr::Tcp("127.0.0.1:7007".into()),
+        ] {
+            assert_eq!(SockAddr::parse(&addr.to_string()).unwrap(), addr);
+        }
+        assert!(SockAddr::parse("carrier-pigeon:coop").is_err());
+    }
+
+    #[test]
+    fn tcp_listener_and_socket_transport_round_trip() {
+        let listener = Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into())).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let mut t = SocketTransport::from_stream(listener.accept().unwrap()).unwrap();
+            let got = t.recv().unwrap();
+            t.send(&got).unwrap();
+            t.shutdown();
+        });
+        let mut c = SocketTransport::connect(&addr).unwrap();
+        c.send(b"ping").unwrap();
+        assert_eq!(c.recv().unwrap(), b"ping");
+        assert!(c.recv_opt().unwrap().is_none(), "server half-closed");
+        assert_eq!(c.bytes_out(), 8);
+        assert_eq!(c.bytes_in(), 8);
+        server.join().unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_listener_and_socket_transport_round_trip() {
+        let dir = std::env::temp_dir().join(format!("rpel-transport-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.sock");
+        let listener = Listener::bind(&SockAddr::Unix(path.clone())).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let mut t = SocketTransport::from_stream(listener.accept().unwrap()).unwrap();
+            assert_eq!(t.recv().unwrap(), b"hello");
+            t.send(b"world").unwrap();
+        });
+        let mut c = SocketTransport::connect(&addr).unwrap();
+        c.send(b"hello").unwrap();
+        assert_eq!(c.recv().unwrap(), b"world");
+        server.join().unwrap();
+        assert!(!path.exists(), "listener drop removes the socket file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shutdown_unblocks_and_signals_eof() {
+        // after shutdown, sends fail loudly instead of writing nowhere
+        let mut t = PipeTransport::new(std::io::empty(), Vec::new());
+        t.shutdown();
+        assert!(t.send(b"late").is_err());
+    }
+}

@@ -251,6 +251,94 @@ fn multi_process_engine_is_bit_identical_on_epidemic() {
 }
 
 #[test]
+fn socket_transport_is_bit_identical_on_epidemic() {
+    // the PR-4 tentpole guarantee: replacing the O(h·d) table broadcast
+    // with worker-served pulls over sockets changes nothing — the routing
+    // table dictates the same receive sets in the same order, and rows
+    // travel as the same IEEE bit patterns, peer-to-peer
+    use rpel::config::TransportKind;
+    enable_worker_bin();
+    let reference = run_collect(&base_cfg());
+    for procs in [2usize, 3] {
+        let mut cfg = base_cfg();
+        cfg.procs = procs;
+        cfg.threads = 2;
+        cfg.transport = TransportKind::Socket;
+        assert_bit_identical(
+            &format!("epidemic socket procs={procs} vs in-process"),
+            &reference,
+            &run_collect(&cfg),
+        );
+    }
+}
+
+#[test]
+fn socket_transport_is_bit_identical_on_push() {
+    use rpel::config::{Topology, TransportKind};
+    enable_worker_bin();
+    let mut serial = base_cfg();
+    serial.topology = Topology::EpidemicPush { s: 6 };
+    serial.attack = AttackKind::SignFlip;
+    let reference = run_collect(&serial);
+    let mut cfg = serial.clone();
+    cfg.procs = 2;
+    cfg.transport = TransportKind::Socket;
+    assert_bit_identical(
+        "push socket procs=2 vs in-process",
+        &reference,
+        &run_collect(&cfg),
+    );
+}
+
+#[test]
+fn socket_transport_matches_under_dos_withholding() {
+    use rpel::config::TransportKind;
+    enable_worker_bin();
+    let mut serial = base_cfg();
+    serial.attack = AttackKind::Dos;
+    let reference = run_collect(&serial);
+    let mut cfg = serial.clone();
+    cfg.procs = 3;
+    cfg.transport = TransportKind::Socket;
+    assert_bit_identical(
+        "dos socket procs=3 vs in-process",
+        &reference,
+        &run_collect(&cfg),
+    );
+}
+
+#[test]
+fn socket_transport_is_bit_identical_on_fixed_graph() {
+    use rpel::config::TransportKind;
+    enable_worker_bin();
+    let mut serial = base_cfg();
+    serial.topology = rpel::config::Topology::FixedGraph { edges: 24 };
+    serial.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
+    let reference = run_collect(&serial);
+    let mut cfg = serial.clone();
+    cfg.procs = 2;
+    cfg.transport = TransportKind::Socket;
+    assert_bit_identical(
+        "graph socket procs=2 vs in-process",
+        &reference,
+        &run_collect(&cfg),
+    );
+}
+
+#[test]
+fn socket_transport_tcp_is_bit_identical() {
+    // the same listener code with TCP loopback streams — what a future
+    // multi-host deployment rides — must also be bit-invisible
+    use rpel::config::TransportKind;
+    enable_worker_bin();
+    let reference = run_collect(&base_cfg());
+    let mut cfg = base_cfg();
+    cfg.procs = 2;
+    cfg.transport = TransportKind::Tcp;
+    assert_bit_identical("epidemic tcp procs=2 vs in-process", &reference, &run_collect(&cfg));
+}
+
+#[test]
 fn multi_process_engine_is_bit_identical_on_push() {
     use rpel::config::Topology;
     enable_worker_bin();

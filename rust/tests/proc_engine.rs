@@ -2,9 +2,11 @@
 //! mid-round must surface as an **actionable error** on the coordinator
 //! — naming the worker, its honest range, and its exit status — never a
 //! hang; and the `rpel shard-worker` subcommand must be robust against a
-//! garbage or closed stream.
+//! garbage or closed stream. Both transports are covered: pipes (the
+//! worker's stdin/stdout) and sockets (worker-served pulls, where a
+//! killed worker also strands its peers' in-flight pulls).
 
-use rpel::config::{ExperimentConfig, Topology};
+use rpel::config::{ExperimentConfig, Topology, TransportKind};
 use rpel::coordinator::Trainer;
 use rpel::data::TaskKind;
 use std::io::Write;
@@ -61,6 +63,207 @@ fn killed_worker_surfaces_actionable_error_not_a_hang() {
         msg.contains("honest nodes"),
         "error should name the orphaned range: {msg}"
     );
+}
+
+#[test]
+fn killed_socket_worker_surfaces_actionable_error_not_a_hang() {
+    // socket-transport teardown audit: the killed worker's control
+    // socket AND its peers' pull connections die with it — whichever
+    // side trips first, the coordinator must report a named shard
+    // worker, and the run must never wedge (a peer blocked on a pull to
+    // the corpse would be exactly that)
+    enable_worker_bin();
+    let mut cfg = proc_cfg();
+    cfg.name = "proc_crash_socket".into();
+    cfg.transport = TransportKind::Socket;
+    let mut t = Trainer::from_config(&cfg).expect("socket-transport trainer builds");
+    assert_eq!(t.shard_count(), 2);
+    t.round(0).expect("healthy round");
+
+    assert!(t.kill_shard_worker(1), "worker 1 should be killable");
+    let mut failure = None;
+    for round in 1..cfg.rounds {
+        if let Err(e) = t.round(round) {
+            failure = Some(format!("{e:#}"));
+            break;
+        }
+    }
+    let msg = failure.expect("rounds must fail after the worker died");
+    assert!(
+        msg.contains("shard worker") || msg.contains("peer worker"),
+        "error should name the dead worker: {msg}"
+    );
+    drop(t); // teardown with a corpse in the pool must not deadlock
+}
+
+#[test]
+fn socket_trainer_tears_down_cleanly_mid_run() {
+    // Drop with live workers (socket transport): Shutdown frames, a
+    // half-close + drain per worker, reap — the test completing IS the
+    // no-deadlock assertion
+    enable_worker_bin();
+    let mut cfg = proc_cfg();
+    cfg.name = "proc_teardown_socket".into();
+    cfg.transport = TransportKind::Socket;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.round(0).unwrap();
+    drop(t);
+}
+
+/// The ISSUE satellite end-to-end, with REAL worker processes: the test
+/// plays coordinator over sockets, completes one routed round (so
+/// worker 0 holds a live pull connection to worker 1), then kills
+/// worker 1 and routes another round's pulls through the corpse. Worker
+/// 0's in-flight pull must come back as `Failed` naming the peer worker
+/// and the round — never a hang, never silent corruption.
+#[test]
+fn real_socket_peer_pull_to_killed_worker_returns_failed() {
+    use rpel::wire::proto::{self, FromWorker, PeerEntry, PeerMsg, ToWorker, WireDigest};
+    use rpel::wire::transport::{Listener, SockAddr, SocketTransport, Transport};
+
+    // b = 0 keeps the routing arbitrary (node id == honest index) and
+    // the digest unused; procs = 2 splits h = 6 as (0..3, 3..6)
+    const CFG: &str = "task = \"tiny\"\n\n[nodes]\nn = 6\nbyzantine = 0\n\n\
+                       [topology]\nkind = \"epidemic\"\ns = 3\n";
+
+    let listener = Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into())).unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let spawn_worker = |i: usize| {
+        Command::new(WORKER_BIN)
+            .arg("shard-worker")
+            .arg("--transport")
+            .arg("socket")
+            .arg("--connect")
+            .arg(&addr)
+            .arg("--worker")
+            .arg(i.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn shard-worker")
+    };
+    let mut children = vec![spawn_worker(0), spawn_worker(1)];
+
+    // accept both control connections, identified by PeerHello
+    let mut conns: Vec<Option<SocketTransport>> = vec![None, None];
+    let mut listens = vec![String::new(); 2];
+    for _ in 0..2 {
+        let stream = listener.accept().unwrap();
+        let mut t = SocketTransport::from_stream(stream).unwrap();
+        match proto::decode_peer(&t.recv().unwrap()).unwrap() {
+            PeerMsg::Hello { worker, listen } => {
+                let w = worker as usize;
+                listens[w] = listen;
+                conns[w] = Some(t);
+            }
+            other => panic!("expected PeerHello, got {other:?}"),
+        }
+    }
+    let mut w0 = conns[0].take().unwrap();
+    let mut w1 = conns[1].take().unwrap();
+
+    w0.send(&proto::encode_init(CFG, 0, 2)).unwrap();
+    w1.send(&proto::encode_init(CFG, 1, 2)).unwrap();
+    let init_ok = |t: &mut SocketTransport| match proto::decode_from_worker(&t.recv().unwrap())
+        .unwrap()
+    {
+        FromWorker::InitOk { start, len, d: _ } => (start, len),
+        other => panic!("expected InitOk, got {other:?}"),
+    };
+    assert_eq!(init_ok(&mut w0), (0, 3));
+    assert_eq!(init_ok(&mut w1), (3, 3));
+
+    let book = proto::encode_peers(&[
+        PeerEntry {
+            start: 0,
+            len: 3,
+            addr: listens[0].clone(),
+        },
+        PeerEntry {
+            start: 3,
+            len: 3,
+            addr: listens[1].clone(),
+        },
+    ]);
+    w0.send(&book).unwrap();
+    w1.send(&book).unwrap();
+
+    let half = |t: &mut SocketTransport, round: u64| {
+        t.send(&proto::encode_half_step(round)).unwrap();
+        match proto::decode_from_worker(&t.recv().unwrap()).unwrap() {
+            FromWorker::Snapshot { round: got, .. } => assert_eq!(got, round),
+            other => panic!("expected Snapshot, got {other:?}"),
+        }
+    };
+    let routed = |round: u64, routes: Vec<Vec<u32>>| {
+        proto::encode_to_worker(&ToWorker::AggregateRouted {
+            round,
+            digest: WireDigest::default(),
+            routes,
+        })
+    };
+
+    // round 0 completes: worker 0 pulls worker 1's rows (establishing
+    // the persistent peer connection), worker 1 pulls nothing
+    half(&mut w0, 0);
+    half(&mut w1, 0);
+    w0.send(&routed(0, vec![vec![3], vec![4], vec![5]])).unwrap();
+    w1.send(&routed(0, vec![vec![], vec![], vec![]])).unwrap();
+    let done = |t: &mut SocketTransport, round: u64| match proto::decode_from_worker(
+        &t.recv().unwrap(),
+    )
+    .unwrap()
+    {
+        FromWorker::RoundDone {
+            round: got,
+            peer_bytes,
+            ..
+        } => {
+            assert_eq!(got, round);
+            peer_bytes
+        }
+        other => panic!("expected RoundDone, got {other:?}"),
+    };
+    assert!(done(&mut w0, 0) > 0, "worker 0 must have fetched from its peer");
+    done(&mut w1, 0);
+
+    // round 1: half-steps land, then worker 1 dies with worker 0's next
+    // pull aimed straight at it over the already-open connection
+    half(&mut w0, 1);
+    half(&mut w1, 1);
+    children[1].kill().unwrap();
+    children[1].wait().unwrap();
+    w0.send(&routed(1, vec![vec![3], vec![4], vec![5]])).unwrap();
+    match proto::decode_from_worker(&w0.recv().unwrap()).unwrap() {
+        FromWorker::Failed { message } => {
+            assert!(message.contains("peer worker 1"), "{message}");
+            assert!(message.contains("round 1"), "{message}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    drop(w0);
+    drop(w1);
+    let status = children[0].wait().unwrap();
+    assert!(!status.success(), "worker 0 exits nonzero after the failed pull");
+}
+
+#[test]
+fn socket_worker_with_unreachable_coordinator_exits_nonzero() {
+    let status = Command::new(WORKER_BIN)
+        .arg("shard-worker")
+        .arg("--transport")
+        .arg("socket")
+        .arg("--connect")
+        .arg("unix:/nonexistent-rpel-dir/coordinator.sock")
+        .arg("--worker")
+        .arg("0")
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .expect("spawn shard-worker");
+    assert!(!status.success(), "dead coordinator address must be fatal");
 }
 
 #[test]

@@ -1,0 +1,423 @@
+//! Fault-injection suite for the round protocol, over both transports.
+//!
+//! Every injected fault — short writes, split reads, mid-frame EOF,
+//! delayed replies, stale-round replies, a peer dying with a pull in
+//! flight — must surface as an **actionable error naming the worker and
+//! the round** (or change nothing at all, for delays): never a hang,
+//! never silent corruption. Faults are keyed off the deterministic
+//! counter RNG ([`rpel::testkit::chaos`]), so a failing case reproduces
+//! from its seed.
+
+use rpel::config::{ExperimentConfig, Topology, TransportKind};
+use rpel::coordinator::peer::{PeerClient, RowServer};
+use rpel::coordinator::proc::run_worker;
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+use rpel::testkit::chaos::{ChaosPlan, ChaosStream};
+use rpel::wire;
+use rpel::wire::proto::{self, PeerEntry, PeerMsg};
+use rpel::wire::transport::{Listener, SockAddr, SocketStream, SocketTransport, Transport};
+use std::io::Write;
+use std::time::Duration;
+
+fn enable_worker_bin() {
+    rpel::coordinator::proc::set_worker_bin(env!("CARGO_BIN_EXE_rpel"));
+}
+
+fn chaos_cfg(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = name.into();
+    cfg.n = 10;
+    cfg.b = 2;
+    cfg.topology = Topology::Epidemic { s: 5 };
+    cfg.bhat = Some(2);
+    cfg.rounds = 6;
+    cfg.batch = 8;
+    cfg.samples_per_node = 32;
+    cfg.test_samples = 64;
+    cfg.eval_every = 100;
+    cfg.procs = 2;
+    cfg.threads = 1;
+    cfg
+}
+
+fn tcp_pair() -> (SocketStream, SocketStream) {
+    let listener = Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into())).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let client = std::thread::spawn(move || SocketStream::connect(&addr).unwrap());
+    let server = listener.accept().unwrap();
+    server.set_nonblocking(false).unwrap();
+    (server, client.join().unwrap())
+}
+
+// ---------------------------------------------------------------------------
+// Byte-level faults: the framed codec itself
+// ---------------------------------------------------------------------------
+
+#[test]
+fn protocol_frames_survive_split_reads_and_short_writes_on_pipes() {
+    let original = proto::encode_init("task = \"tiny\"", 1, 2);
+    let mut stream_bytes = Vec::new();
+    {
+        let mut chaotic = ChaosStream::new(&mut stream_bytes, 11).short_writes();
+        wire::write_frame(&mut chaotic, &original).unwrap();
+        chaotic.flush().unwrap();
+    }
+    let mut chaotic = ChaosStream::new(std::io::Cursor::new(stream_bytes), 12).split_reads();
+    let frame = wire::read_frame(&mut chaotic).unwrap();
+    assert_eq!(frame, original, "bytes must be identical, not just parseable");
+    proto::decode_to_worker(&frame).unwrap();
+}
+
+#[test]
+fn protocol_frames_survive_split_reads_on_sockets() {
+    let (server, mut client) = tcp_pair();
+    let original = proto::encode_pull_reply(9, &[vec![1.0f32, -2.0], vec![0.5, 4.0]]);
+    let payload = original.clone();
+    let writer = std::thread::spawn(move || {
+        wire::write_frame(&mut client, &payload).unwrap();
+        client.flush().unwrap();
+    });
+    let mut chaotic = ChaosStream::new(server, 13).split_reads();
+    let frame = wire::read_frame(&mut chaotic).unwrap();
+    writer.join().unwrap();
+    assert_eq!(frame, original);
+}
+
+#[test]
+fn peer_dying_mid_frame_on_socket_is_an_error_not_a_hang() {
+    let (server, mut client) = tcp_pair();
+    // header promises 1000 bytes; the peer dies after 4 of them
+    let writer = std::thread::spawn(move || {
+        client.write_all(&1000u32.to_le_bytes()).unwrap();
+        client.write_all(&[0xAB; 4]).unwrap();
+        client.flush().unwrap();
+        drop(client);
+    });
+    let mut t = SocketTransport::from_stream(server).unwrap();
+    let err = t.recv().unwrap_err().to_string();
+    writer.join().unwrap();
+    assert!(err.contains("mid-frame"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Worker-loop faults (pipe path, in-process via scripted streams)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn worker_loop_surfaces_mid_frame_eof_after_handshake() {
+    // script: a valid Init frame, then a frame cut off mid-body
+    let mut input = Vec::new();
+    wire::write_frame(&mut input, &proto::encode_init("task = \"tiny\"", 0, 2)).unwrap();
+    input.extend_from_slice(&50u32.to_le_bytes());
+    input.extend_from_slice(&[0u8; 10]); // 40 bytes short
+    let mut output = Vec::new();
+    let err = run_worker(std::io::Cursor::new(input), &mut output)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("mid-frame"), "{err}");
+    // the handshake reply still made it out before the fault
+    let mut out = std::io::Cursor::new(output);
+    let first = wire::read_frame(&mut out).unwrap();
+    assert!(matches!(
+        proto::decode_from_worker(&first).unwrap(),
+        proto::FromWorker::InitOk { .. }
+    ));
+}
+
+#[test]
+fn worker_loop_survives_chaotic_byte_stream() {
+    // the same script delivered through split reads must behave
+    // identically (framing is below the protocol, faults and all)
+    let mut input = Vec::new();
+    wire::write_frame(&mut input, &proto::encode_init("task = \"tiny\"", 0, 2)).unwrap();
+    wire::write_frame(&mut input, &proto::encode_shutdown()).unwrap();
+    let mut output = Vec::new();
+    run_worker(
+        ChaosStream::new(std::io::Cursor::new(input), 21).split_reads(),
+        &mut output,
+    )
+    .expect("orderly shutdown through a chaotic stream");
+}
+
+// ---------------------------------------------------------------------------
+// Transport-level faults against real worker processes, both transports
+// ---------------------------------------------------------------------------
+
+fn stale_replay_names_worker_and_round(transport: TransportKind) {
+    enable_worker_bin();
+    let mut cfg = chaos_cfg(&format!("chaos_stale_{}", transport.name()));
+    cfg.transport = transport;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    // replace the 3rd post-handshake reply (round 1's Snapshot) with a
+    // byte-exact replay of the 1st (round 0's Snapshot) — exactly what a
+    // reply stranded by an aborted round looks like
+    assert!(t.chaos_shard_transport(
+        1,
+        ChaosPlan {
+            replay: Some((2, 0)),
+            ..Default::default()
+        }
+    ));
+    assert!(
+        !t.chaos_shard_transport(99, ChaosPlan::default()),
+        "out-of-range shard index must report false"
+    );
+    let mut failure = None;
+    for round in 0..cfg.rounds {
+        if let Err(e) = t.round(round) {
+            failure = Some(format!("{e:#}"));
+            break;
+        }
+    }
+    let msg = failure.expect("a stale reply must fail the round");
+    assert!(msg.contains("stale Snapshot"), "{msg}");
+    assert!(msg.contains("shard worker 1"), "{msg}");
+    assert!(msg.contains("round 0"), "should name the stale round: {msg}");
+}
+
+#[test]
+fn stale_replay_errors_on_pipe_transport() {
+    stale_replay_names_worker_and_round(TransportKind::Pipe);
+}
+
+#[test]
+fn stale_replay_errors_on_socket_transport() {
+    stale_replay_names_worker_and_round(TransportKind::Socket);
+}
+
+fn cut_stream_names_worker(transport: TransportKind) {
+    enable_worker_bin();
+    let mut cfg = chaos_cfg(&format!("chaos_cut_{}", transport.name()));
+    cfg.transport = transport;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    assert!(t.chaos_shard_transport(
+        0,
+        ChaosPlan {
+            cut_at: Some(1),
+            ..Default::default()
+        }
+    ));
+    let msg = format!("{:#}", t.round(0).unwrap_err());
+    assert!(msg.contains("shard worker 0"), "{msg}");
+    assert!(msg.contains("awaiting reply"), "{msg}");
+    drop(t); // teardown with a half-dead round must not deadlock
+}
+
+#[test]
+fn cut_stream_errors_on_pipe_transport() {
+    cut_stream_names_worker(TransportKind::Pipe);
+}
+
+#[test]
+fn cut_stream_errors_on_socket_transport() {
+    cut_stream_names_worker(TransportKind::Socket);
+}
+
+#[test]
+fn delayed_replies_change_nothing() {
+    enable_worker_bin();
+    let mut cfg = chaos_cfg("chaos_delay");
+    cfg.rounds = 3;
+    cfg.transport = TransportKind::Socket;
+    let reference = Trainer::from_config(&cfg).unwrap().run().unwrap();
+
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    assert!(t.chaos_shard_transport(
+        0,
+        ChaosPlan {
+            recv_delay: Some(Duration::from_millis(10)),
+            ..Default::default()
+        }
+    ));
+    let delayed = t.run().unwrap();
+    assert_eq!(reference.train_loss, delayed.train_loss);
+    assert_eq!(reference.observed_byz_max, delayed.observed_byz_max);
+}
+
+// ---------------------------------------------------------------------------
+// Peer pull serving: a dying or misbehaving peer, seen from the puller
+// ---------------------------------------------------------------------------
+
+/// A fake peer listener driven by a closure; returns the bound address.
+fn fake_peer<F>(script: F) -> SockAddr
+where
+    F: FnOnce(SocketStream) + Send + 'static,
+{
+    let listener = Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into())).unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let stream = listener.accept().unwrap();
+        stream.set_nonblocking(false).unwrap();
+        script(stream);
+    });
+    addr
+}
+
+fn two_worker_book(fake: &SockAddr) -> Vec<PeerEntry> {
+    vec![
+        PeerEntry {
+            start: 0,
+            len: 5,
+            addr: "tcp:127.0.0.1:1".into(), // never dialed (own range)
+        },
+        PeerEntry {
+            start: 5,
+            len: 5,
+            addr: fake.to_string(),
+        },
+    ]
+}
+
+#[test]
+fn peer_killed_mid_pull_is_actionable_never_a_hang() {
+    // the satellite case: the serving worker dies while our pull is in
+    // flight — header promises a reply, the body never comes
+    let addr = fake_peer(|mut stream| {
+        let _hello = wire::read_frame(&mut stream).unwrap();
+        let _request = wire::read_frame(&mut stream).unwrap();
+        stream.write_all(&1000u32.to_le_bytes()).unwrap();
+        stream.flush().unwrap();
+        drop(stream); // killed mid-reply
+    });
+    let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
+    let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3).unwrap_err());
+    assert!(err.contains("peer worker 1"), "{err}");
+    assert!(err.contains("round 7"), "{err}");
+    assert!(err.contains("honest nodes 5..10"), "{err}");
+}
+
+#[test]
+fn stale_pull_reply_is_rejected() {
+    let addr = fake_peer(|stream| {
+        let mut t = SocketTransport::from_stream(stream).unwrap();
+        let _hello = t.recv().unwrap();
+        let _request = t.recv().unwrap();
+        // correct shape, wrong round: a stranded reply from round 6
+        t.send(&proto::encode_pull_reply(6, &[vec![0.0f32; 3], vec![0.0f32; 3]]))
+            .unwrap();
+    });
+    let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
+    let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3).unwrap_err());
+    assert!(err.contains("stale PullReply"), "{err}");
+    assert!(err.contains("round 7"), "{err}");
+}
+
+#[test]
+fn malformed_pull_reply_is_rejected() {
+    let addr = fake_peer(|stream| {
+        let mut t = SocketTransport::from_stream(stream).unwrap();
+        let _hello = t.recv().unwrap();
+        let _request = t.recv().unwrap();
+        // right round, wrong width: silent corruption must not pass
+        t.send(&proto::encode_pull_reply(7, &[vec![0.0f32; 2], vec![0.0f32; 2]]))
+            .unwrap();
+    });
+    let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
+    let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3).unwrap_err());
+    assert!(err.contains("malformed PullReply"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// The real RowServer, exercised directly
+// ---------------------------------------------------------------------------
+
+fn connect_hello(addr: &SockAddr) -> SocketTransport {
+    let mut t = SocketTransport::connect(addr).unwrap();
+    t.send(&proto::encode_peer_hello(9, "")).unwrap();
+    t
+}
+
+#[test]
+fn row_server_serves_published_rounds_and_denies_everything_else() {
+    let listener = Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into())).unwrap();
+    let addr = listener.local_addr().unwrap();
+    // worker 3 owns honest nodes 4..6
+    let server = RowServer::spawn(listener, 3, 4, 2).unwrap();
+    server.publish(5, &[vec![1.0f32, 2.0], vec![3.0, 4.0]]);
+
+    let mut t = connect_hello(&addr);
+
+    // the happy path: exactly the requested rows, request order
+    t.send(&proto::encode_pull_request(5, &[5, 4])).unwrap();
+    match proto::decode_peer(&t.recv().unwrap()).unwrap() {
+        PeerMsg::PullReply { round, rows } => {
+            assert_eq!(round, 5);
+            assert_eq!(rows, vec![vec![3.0f32, 4.0], vec![1.0, 2.0]]);
+        }
+        other => panic!("expected PullReply, got {other:?}"),
+    }
+
+    // stale round: denied with the published round named
+    t.send(&proto::encode_pull_request(6, &[4])).unwrap();
+    match proto::decode_peer(&t.recv().unwrap()).unwrap() {
+        PeerMsg::Deny { message } => {
+            assert!(message.contains("round 6"), "{message}");
+            assert!(message.contains("5"), "{message}");
+        }
+        other => panic!("expected Deny, got {other:?}"),
+    }
+
+    // out-of-range row: denied with the owned range named
+    t.send(&proto::encode_pull_request(5, &[9])).unwrap();
+    match proto::decode_peer(&t.recv().unwrap()).unwrap() {
+        PeerMsg::Deny { message } => {
+            assert!(message.contains("4..6"), "{message}");
+        }
+        other => panic!("expected Deny, got {other:?}"),
+    }
+
+    // a republish moves the served round forward
+    server.publish(6, &[vec![9.0f32, 9.0], vec![8.0, 8.0]]);
+    t.send(&proto::encode_pull_request(6, &[4])).unwrap();
+    match proto::decode_peer(&t.recv().unwrap()).unwrap() {
+        PeerMsg::PullReply { round, rows } => {
+            assert_eq!(round, 6);
+            assert_eq!(rows, vec![vec![9.0f32, 9.0]]);
+        }
+        other => panic!("expected PullReply, got {other:?}"),
+    }
+}
+
+#[test]
+fn row_server_rejects_wrong_version_handshake() {
+    let listener = Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into())).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let _server = RowServer::spawn(listener, 0, 0, 1).unwrap();
+
+    let mut t = SocketTransport::connect(&addr).unwrap();
+    let mut bad_hello = proto::encode_peer_hello(1, "x");
+    bad_hello[1] ^= 0x7F; // corrupt the version field
+    t.send(&bad_hello).unwrap();
+    match proto::decode_peer(&t.recv().unwrap()).unwrap() {
+        PeerMsg::Deny { message } => {
+            assert!(message.contains("version mismatch"), "{message}");
+        }
+        other => panic!("expected Deny, got {other:?}"),
+    }
+    // the server then drops the connection: EOF, not a hang
+    assert!(t.recv_opt().unwrap().is_none());
+}
+
+#[cfg(unix)]
+#[test]
+fn row_server_works_over_unix_sockets_too() {
+    let dir = std::env::temp_dir().join(format!("rpel-faults-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let listener = Listener::bind(&SockAddr::Unix(dir.join("serve.sock"))).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = RowServer::spawn(listener, 0, 0, 1).unwrap();
+    server.publish(2, &[vec![7.5f32]]);
+
+    let mut t = connect_hello(&addr);
+    t.send(&proto::encode_pull_request(2, &[0])).unwrap();
+    match proto::decode_peer(&t.recv().unwrap()).unwrap() {
+        PeerMsg::PullReply { round, rows } => {
+            assert_eq!((round, rows), (2, vec![vec![7.5f32]]));
+        }
+        other => panic!("expected PullReply, got {other:?}"),
+    }
+    drop(t);
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}

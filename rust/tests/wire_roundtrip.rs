@@ -2,16 +2,20 @@
 //!
 //! * **encode ∘ decode = id**, bit-wise, for random shard payloads
 //!   (`testkit::forall` over random h/d row blocks and f64 digest
-//!   partials) — the property cross-process bit-identity rests on;
+//!   partials) — the property cross-process bit-identity rests on —
+//!   including the socket-transport frames (`PeerHello`, `PullRequest`,
+//!   `PullReply`, `Peers`, `AggregateRouted`);
 //! * **committed golden vectors**: the byte layout is pinned literally,
 //!   so an accidental codec change breaks loudly instead of silently
 //!   desyncing coordinator and workers;
-//! * truncated or corrupt buffers decode to errors, never panics.
+//! * truncated or corrupt buffers — oversized row blocks, zero-width
+//!   rows, absurd route counts, wrong-version handshakes — decode to
+//!   errors, never panics.
 
 use rpel::attacks::HonestDigest;
 use rpel::testkit::{forall, Gen};
 use rpel::util::rng::Rng;
-use rpel::wire::proto::{self, FromWorker, ToWorker, WireDigest};
+use rpel::wire::proto::{self, FromWorker, PeerEntry, PeerMsg, ToWorker, WireDigest};
 
 fn bits32(rows: &[Vec<f32>]) -> Vec<Vec<u32>> {
     rows.iter()
@@ -98,14 +102,77 @@ fn round_done_encode_decode_is_identity() {
         let n = params.len();
         let byz: Vec<u32> = (0..n as u32).collect();
         let recv: Vec<u32> = (0..n as u32).map(|x| x * 3 + 1).collect();
-        let buf = proto::encode_round_done(9, &byz, &recv, params);
+        let peer_bytes = n as u64 * 1017;
+        let buf = proto::encode_round_done(9, &byz, &recv, peer_bytes, params);
         match proto::decode_from_worker(&buf) {
             Ok(FromWorker::RoundDone {
                 round,
                 byz_seen,
                 received,
+                peer_bytes: pb,
                 params: p2,
-            }) => round == 9 && byz_seen == byz && received == recv && bits32(params) == bits32(&p2),
+            }) => {
+                round == 9
+                    && byz_seen == byz
+                    && received == recv
+                    && pb == peer_bytes
+                    && bits32(params) == bits32(&p2)
+            }
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn pull_reply_encode_decode_is_identity() {
+    // the peer-served rows ride the same row-block primitive as the
+    // broadcast table: bit-exactness must hold here too
+    forall(300, 0x9EE7, snapshot_gen(), |(_, rows)| {
+        let idx: Vec<u32> = (0..rows.len() as u32).map(|x| x * 5 + 2).collect();
+        let req = proto::encode_pull_request(17, &idx);
+        let reply = proto::encode_pull_reply(17, rows);
+        let req_ok = matches!(
+            proto::decode_peer(&req),
+            Ok(PeerMsg::PullRequest { round: 17, rows: r }) if r == idx
+        );
+        let reply_ok = match proto::decode_peer(&reply) {
+            Ok(PeerMsg::PullReply { round, rows: r2 }) => {
+                round == 17 && bits32(rows) == bits32(&r2)
+            }
+            _ => false,
+        };
+        req_ok && reply_ok
+    });
+}
+
+#[test]
+fn aggregate_routed_encode_decode_is_identity() {
+    forall(300, 0x10C4, snapshot_gen(), |(partials, halves)| {
+        let digest = HonestDigest {
+            count: partials.len(),
+            mean: partials.clone(),
+            std: vec![],
+            prev_mean: partials.iter().map(|x| x * 0.5).collect(),
+        };
+        // derive a ragged routing table from the generated rows
+        let routes: Vec<Vec<u32>> = halves
+            .iter()
+            .enumerate()
+            .map(|(i, row)| (0..i % 4).map(|k| (row.len() + k) as u32).collect())
+            .collect();
+        let buf = proto::encode_aggregate_routed(23, &digest, &routes);
+        match proto::decode_to_worker(&buf) {
+            Ok(ToWorker::AggregateRouted {
+                round,
+                digest: d2,
+                routes: r2,
+            }) => {
+                round == 23
+                    && d2.count == digest.count as u64
+                    && bits64(&digest.mean) == bits64(&d2.mean)
+                    && bits64(&digest.prev_mean) == bits64(&d2.prev_mean)
+                    && r2 == routes
+            }
             _ => false,
         }
     });
@@ -204,33 +271,140 @@ fn golden_aggregate() {
 
 #[test]
 fn golden_round_done() {
-    let expect: [u8; 37] = [
+    let expect: [u8; 45] = [
         0x83, // tag
         5, 0, 0, 0, 0, 0, 0, 0, // round echo = 5
         0x01, 0x00, 0x00, 0x00, // 1 byz count
         0x01, 0x00, 0x00, 0x00, // byz_seen[0] = 1
         0x01, 0x00, 0x00, 0x00, // 1 recv count
         0x06, 0x00, 0x00, 0x00, // received[0] = 6
+        7, 0, 0, 0, 0, 0, 0, 0, // peer_bytes = 7
         0x01, 0x00, 0x00, 0x00, // 1 row
         0x01, 0x00, 0x00, 0x00, // d = 1
         0x00, 0x00, 0x20, 0x40, // f32 2.5
     ];
-    let buf = proto::encode_round_done(5, &[1], &[6], &[vec![2.5f32]]);
+    let buf = proto::encode_round_done(5, &[1], &[6], 7, &[vec![2.5f32]]);
     assert_eq!(buf, expect);
 }
 
 #[test]
 fn golden_shutdown_and_init_ok() {
     assert_eq!(proto::encode_shutdown(), vec![0x04]);
-    // InitOk: tag, version 1, start=3, len=4, d=10
+    // InitOk: tag, version 2, start=3, len=4, d=10
     let expect: [u8; 29] = [
         0x81, // tag
-        0x01, 0x00, 0x00, 0x00, // protocol version 1
+        0x02, 0x00, 0x00, 0x00, // protocol version 2
         3, 0, 0, 0, 0, 0, 0, 0, // start
         4, 0, 0, 0, 0, 0, 0, 0, // len
         10, 0, 0, 0, 0, 0, 0, 0, // d
     ];
     assert_eq!(proto::encode_init_ok(3, 4, 10), expect);
+}
+
+#[test]
+fn golden_peer_hello() {
+    let expect: [u8; 14] = [
+        0x40, // tag
+        0x02, 0x00, 0x00, 0x00, // protocol version 2
+        0x01, 0x00, 0x00, 0x00, // worker = 1
+        0x01, 0x00, 0x00, 0x00, // 1-byte address
+        b'u',
+    ];
+    assert_eq!(proto::encode_peer_hello(1, "u"), expect);
+    assert_eq!(
+        proto::decode_peer(&expect).unwrap(),
+        PeerMsg::Hello {
+            worker: 1,
+            listen: "u".into()
+        }
+    );
+}
+
+#[test]
+fn golden_pull_request_and_reply() {
+    let expect_req: [u8; 21] = [
+        0x41, // tag
+        3, 0, 0, 0, 0, 0, 0, 0, // round = 3
+        0x02, 0x00, 0x00, 0x00, // 2 rows requested
+        0x07, 0x00, 0x00, 0x00, // row 7
+        0x09, 0x00, 0x00, 0x00, // row 9
+    ];
+    assert_eq!(proto::encode_pull_request(3, &[7, 9]), expect_req);
+
+    let expect_reply: [u8; 21] = [
+        0x42, // tag
+        3, 0, 0, 0, 0, 0, 0, 0, // round echo = 3
+        0x01, 0x00, 0x00, 0x00, // 1 row
+        0x01, 0x00, 0x00, 0x00, // d = 1
+        0x00, 0x00, 0x00, 0x3F, // f32 0.5
+    ];
+    assert_eq!(proto::encode_pull_reply(3, &[vec![0.5f32]]), expect_reply);
+    match proto::decode_peer(&expect_reply).unwrap() {
+        PeerMsg::PullReply { round, rows } => {
+            assert_eq!(round, 3);
+            assert_eq!(rows, vec![vec![0.5f32]]);
+        }
+        other => panic!("wrong message: {other:?}"),
+    }
+}
+
+#[test]
+fn golden_peers() {
+    let expect: [u8; 28] = [
+        0x05, // tag
+        0x01, 0x00, 0x00, 0x00, // 1 entry
+        2, 0, 0, 0, 0, 0, 0, 0, // start = 2
+        3, 0, 0, 0, 0, 0, 0, 0, // len = 3
+        0x03, 0x00, 0x00, 0x00, // 3-byte address
+        b'u', b':', b'x',
+    ];
+    let buf = proto::encode_peers(&[PeerEntry {
+        start: 2,
+        len: 3,
+        addr: "u:x".into(),
+    }]);
+    assert_eq!(buf, expect);
+}
+
+#[test]
+fn golden_aggregate_routed() {
+    // round 4; digest: count=1, mean=[0.5], std=[], prev_mean=[-1.0];
+    // one victim receiving from nodes [2, 0]
+    let digest = HonestDigest {
+        count: 1,
+        mean: vec![0.5],
+        std: vec![],
+        prev_mean: vec![-1.0],
+    };
+    let expect: [u8; 61] = [
+        0x06, // tag
+        4, 0, 0, 0, 0, 0, 0, 0, // round = 4
+        1, 0, 0, 0, 0, 0, 0, 0, // count = 1
+        0x01, 0x00, 0x00, 0x00, // 1 mean coord
+        0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xE0, 0x3F, // f64 0.5
+        0x00, 0x00, 0x00, 0x00, // 0 std coords
+        0x01, 0x00, 0x00, 0x00, // 1 prev-mean coord
+        0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xF0, 0xBF, // f64 -1.0
+        0x01, 0x00, 0x00, 0x00, // 1 victim
+        0x02, 0x00, 0x00, 0x00, // 2 sources
+        0x02, 0x00, 0x00, 0x00, // node 2
+        0x00, 0x00, 0x00, 0x00, // node 0
+    ];
+    let buf = proto::encode_aggregate_routed(4, &digest, &[vec![2, 0]]);
+    assert_eq!(buf, expect);
+    match proto::decode_to_worker(&expect).unwrap() {
+        ToWorker::AggregateRouted {
+            round,
+            digest: d2,
+            routes,
+        } => {
+            assert_eq!(round, 4);
+            assert_eq!(d2.count, 1);
+            assert_eq!(d2.mean, vec![0.5]);
+            assert_eq!(routes, vec![vec![2, 0]]);
+        }
+        other => panic!("wrong message: {other:?}"),
+    }
 }
 
 #[test]
@@ -245,6 +419,19 @@ fn every_truncation_of_every_message_errors_cleanly() {
         proto::encode_init("task = \"tiny\"", 0, 2),
         proto::encode_half_step(9),
         proto::encode_aggregate(1, &digest, &[vec![1.0f32, 2.0], vec![3.0, 4.0]]),
+        proto::encode_aggregate_routed(1, &digest, &[vec![0, 3], vec![2]]),
+        proto::encode_peers(&[
+            PeerEntry {
+                start: 0,
+                len: 4,
+                addr: "unix:/tmp/a.sock".into(),
+            },
+            PeerEntry {
+                start: 4,
+                len: 4,
+                addr: "tcp:127.0.0.1:4040".into(),
+            },
+        ]),
         proto::encode_shutdown(),
     ];
     for buf in &to_worker {
@@ -259,7 +446,7 @@ fn every_truncation_of_every_message_errors_cleanly() {
     let from_worker = [
         proto::encode_init_ok(0, 5, 3),
         proto::encode_snapshot(2, &[1.0, 2.0], &[vec![0.5f32], vec![1.5f32]]),
-        proto::encode_round_done(2, &[0, 1], &[5, 5], &[vec![1.0f32], vec![2.0f32]]),
+        proto::encode_round_done(2, &[0, 1], &[5, 5], 99, &[vec![1.0f32], vec![2.0f32]]),
         proto::encode_failed("boom"),
     ];
     for buf in &from_worker {
@@ -271,4 +458,46 @@ fn every_truncation_of_every_message_errors_cleanly() {
             );
         }
     }
+    let peer = [
+        proto::encode_peer_hello(3, "unix:/tmp/w3.sock"),
+        proto::encode_pull_request(6, &[1, 2, 3]),
+        proto::encode_pull_reply(6, &[vec![1.0f32, 2.0], vec![3.0, 4.0]]),
+        proto::encode_peer_deny("nope"),
+    ];
+    for buf in &peer {
+        proto::decode_peer(buf).expect("full buffer decodes");
+        for cut in 0..buf.len() {
+            assert!(
+                proto::decode_peer(&buf[..cut]).is_err(),
+                "truncation at {cut} must error"
+            );
+        }
+    }
+}
+
+#[test]
+fn adversarial_pull_reply_shapes_error_not_panic() {
+    // oversized row block: the claimed rows×d blows past the buffer —
+    // must error on the byte bound, not allocate
+    let mut buf = proto::encode_pull_reply(1, &[vec![1.0f32]]);
+    // rows count sits right after tag+round: claim 2^31 rows
+    buf[9..13].copy_from_slice(&(1u32 << 31).to_le_bytes());
+    assert!(proto::decode_peer(&buf).is_err());
+
+    // zero-width rows with a huge row count sidestep the byte bound —
+    // rejected explicitly
+    let mut zw = Vec::new();
+    zw.push(0x42u8); // PullReply tag
+    zw.extend_from_slice(&9u64.to_le_bytes());
+    zw.extend_from_slice(&u32::MAX.to_le_bytes()); // rows = 4G
+    zw.extend_from_slice(&0u32.to_le_bytes()); // d = 0
+    assert!(proto::decode_peer(&zw).is_err());
+
+    // trailing garbage after a valid message is version skew: reject
+    let mut padded = proto::encode_pull_request(2, &[1]);
+    padded.push(0xEE);
+    assert!(proto::decode_peer(&padded).is_err());
+
+    // unknown peer tag
+    assert!(proto::decode_peer(&[0x7F]).is_err());
 }
