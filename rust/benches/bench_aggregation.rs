@@ -1,14 +1,37 @@
-//! Aggregation-rule benchmarks: the L3 hot path (one aggregation per
-//! honest node per round) across rules, fan-ins and model sizes — plus the
-//! native-vs-Pallas/HLO comparison that the §Perf log in EXPERIMENTS.md
-//! tracks.
+//! Aggregation fast-path benchmarks: the three layers of the hot path
+//! measured against their baselines, plus the rule panel and the
+//! native-vs-Pallas/HLO comparison.
+//!
+//! * **pairwise kernel** — naive serial subtract-square loop vs the
+//!   Gram-blocked kernel (precomputed sq-norms + tile-swept dot
+//!   products) at m ∈ {8, 16, 32} × d ∈ {10³, 10⁵};
+//! * **round-level distance memoization** — h victims co-pulling from a
+//!   shared row table, NNM∘CWTM per victim, with and without the
+//!   [`DistCache`], plus the row-pair evaluation ledger
+//!   (`aggregation::perf`) proving the cached path computes strictly
+//!   fewer distances than the naive victims × (s+1)² bound;
+//! * **trimmed-stats crossover** — insertion-sort vs selection path for
+//!   the per-coordinate trimmed sum across m (the data behind
+//!   `cwtm::SELECT_MIN_M`);
+//! * **end-to-end** — full n=256 coordinator rounds, cache on vs off.
+//!
+//! Emits `BENCH_aggregation.json` (naive/blocked/cached comparison
+//! points) next to `BENCH_round.json`; the CI `bench-smoke` job runs
+//! `BENCH_SMOKE=1` and uploads the measured file.
 //!
 //! Run: cargo bench --bench bench_aggregation
 
-use rpel::aggregation::{pairwise_sqdist, RuleKind};
+use rpel::aggregation::cwtm::{trimmed_sum_select_path, trimmed_sum_sort_path};
+use rpel::aggregation::{pairwise_sqdist, perf, Aggregator, DistCache, RowCtx, RuleKind};
+use rpel::attacks::AttackKind;
 use rpel::benchkit::{black_box, section, Bencher};
+use rpel::config::{EngineKind, ExperimentConfig, Topology};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
 use rpel::runtime::{artifacts_available, Runtime};
+use rpel::util::json::Json;
 use rpel::util::rng::Rng;
+use std::collections::BTreeMap;
 
 fn random_rows(rng: &mut Rng, m: usize, d: usize) -> Vec<Vec<f32>> {
     (0..m)
@@ -16,20 +39,289 @@ fn random_rows(rng: &mut Rng, m: usize, d: usize) -> Vec<Vec<f32>> {
         .collect()
 }
 
-fn main() {
-    let b = Bencher::default();
-    let mut rng = Rng::new(42);
+/// The pre-fast-path kernel: serial subtract-and-square per pair.
+fn naive_pairwise(inputs: &[&[f32]]) -> Vec<f64> {
+    let m = inputs.len();
+    let mut out = vec![0.0f64; m * m];
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let mut acc = 0.0f64;
+            for (x, y) in inputs[i].iter().zip(inputs[j]) {
+                let d = (*x as f64) - (*y as f64);
+                acc += d * d;
+            }
+            out[i * m + j] = acc;
+            out[j * m + i] = acc;
+        }
+    }
+    out
+}
 
-    section("pairwise squared distances (m x m over d)");
-    for &(m, d) in &[(8usize, 4874usize), (16, 4874), (16, 21066), (32, 21066)] {
-        let rows = random_rows(&mut rng, m, d);
-        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
-        let r = b.run_throughput(
-            &format!("pairwise_sqdist m={m} d={d}"),
-            (m * m * d) as f64,
-            || black_box(pairwise_sqdist(&refs)),
+/// One simulated round of the shard engine's access pattern: every
+/// victim aggregates its own published row plus its pulled ones, all
+/// identified for the (optional) round cache.
+fn aggregate_all_victims(
+    rule: &dyn Aggregator,
+    rows: &[Vec<f32>],
+    pulls: &[Vec<usize>],
+    cache: Option<&DistCache>,
+    out: &mut [f32],
+) {
+    for (v, pulled) in pulls.iter().enumerate() {
+        let mut refs: Vec<&[f32]> = Vec::with_capacity(pulled.len() + 1);
+        let mut ids: Vec<Option<u32>> = Vec::with_capacity(pulled.len() + 1);
+        refs.push(rows[v].as_slice());
+        ids.push(Some(v as u32));
+        for &p in pulled {
+            refs.push(rows[p].as_slice());
+            ids.push(Some(p as u32));
+        }
+        let ctx = RowCtx { ids: &ids, cache };
+        rule.aggregate_with_ctx(&refs, &ctx, out);
+    }
+}
+
+/// Aggregation-bound round geometry: tiny model math, fat fan-in, so
+/// phase 4 dominates and the cache effect is visible end-to-end.
+fn round_cfg(n: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = format!("bench_agg_n{n}");
+    cfg.n = n;
+    cfg.b = n / 10;
+    cfg.topology = Topology::Epidemic { s: 16 };
+    cfg.bhat = Some(5);
+    cfg.attack = AttackKind::Alie;
+    cfg.batch = 8;
+    cfg.samples_per_node = 32;
+    cfg.test_samples = 64;
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let b = if smoke {
+        Bencher {
+            warmup_iters: 1,
+            samples: 2,
+            iters_per_sample: 1,
+        }
+    } else {
+        Bencher::default()
+    };
+    let mut rng = Rng::new(42);
+    let mut json_root: BTreeMap<String, Json> = BTreeMap::new();
+    json_root.insert("bench".into(), Json::Str("bench_aggregation".into()));
+    json_root.insert("units".into(), Json::Str("ns_per_iter".into()));
+    json_root.insert("smoke".into(), Json::Bool(smoke));
+
+    section("pairwise kernel: naive serial loop vs Gram-blocked");
+    {
+        let mut rows_json = Vec::new();
+        for &(m, d) in &[
+            (8usize, 1_000usize),
+            (16, 1_000),
+            (32, 1_000),
+            (8, 100_000),
+            (16, 100_000),
+            (32, 100_000),
+        ] {
+            let rows = random_rows(&mut rng, m, d);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let r_naive = b.run_throughput(
+                &format!("naive pairwise m={m} d={d}"),
+                (m * m * d) as f64,
+                || black_box(naive_pairwise(&refs)),
+            );
+            println!("{}", r_naive.report());
+            let r_blocked = b.run_throughput(
+                &format!("blocked pairwise m={m} d={d}"),
+                (m * m * d) as f64,
+                || black_box(pairwise_sqdist(&refs)),
+            );
+            println!("{}", r_blocked.report());
+            println!(
+                "  => blocked speedup: {:.2}x",
+                r_naive.mean_ns() / r_blocked.mean_ns()
+            );
+            let mut obj = BTreeMap::new();
+            obj.insert("m".into(), Json::Num(m as f64));
+            obj.insert("d".into(), Json::Num(d as f64));
+            obj.insert("naive_ns".into(), Json::Num(r_naive.mean_ns()));
+            obj.insert("blocked_ns".into(), Json::Num(r_blocked.mean_ns()));
+            obj.insert(
+                "blocked_speedup".into(),
+                Json::Num(r_naive.mean_ns() / r_blocked.mean_ns()),
+            );
+            rows_json.push(Json::Obj(obj));
+        }
+        json_root.insert("pairwise".into(), Json::Arr(rows_json));
+    }
+
+    section("round-level memoization: h victims co-pulling shared rows");
+    {
+        // h published rows; each victim aggregates its own row plus s
+        // pulled ones — the shard-engine access pattern, distilled
+        let (h, s) = (64usize, 15usize);
+        let mut rows_json = Vec::new();
+        for &d in &[1_000usize, 100_000] {
+            let rows = random_rows(&mut rng, h, if smoke && d > 1_000 { 10_000 } else { d });
+            let d_eff = rows[0].len();
+            let rule = RuleKind::NnmCwtm.build(5);
+            let mut out = vec![0.0f32; d_eff];
+            // per-victim pull sets, fixed across iterations
+            let mut pull_rng = Rng::new(7);
+            let pulls: Vec<Vec<usize>> = (0..h)
+                .map(|v| pull_rng.sample_distinct_excluding(h, s, v))
+                .collect();
+            let r_uncached = b.run(&format!("{h} victims uncached d={d_eff}"), || {
+                aggregate_all_victims(rule.as_ref(), &rows, &pulls, None, &mut out);
+                black_box(out[0])
+            });
+            println!("{}", r_uncached.report());
+            let r_cached = b.run(&format!("{h} victims cached d={d_eff}"), || {
+                let cache = DistCache::new(); // fresh per "round"
+                aggregate_all_victims(rule.as_ref(), &rows, &pulls, Some(&cache), &mut out);
+                black_box(out[0])
+            });
+            println!("{}", r_cached.report());
+            // the evaluation ledger for one cached round
+            perf::reset_dist_pair_evals();
+            let cache = DistCache::new();
+            aggregate_all_victims(rule.as_ref(), &rows, &pulls, Some(&cache), &mut out);
+            let cached_evals = perf::dist_pair_evals();
+            perf::reset_dist_pair_evals();
+            aggregate_all_victims(rule.as_ref(), &rows, &pulls, None, &mut out);
+            let uncached_evals = perf::dist_pair_evals();
+            perf::reset_dist_pair_evals();
+            println!(
+                "  => cached speedup {:.2}x; pair evals {cached_evals} vs {uncached_evals} \
+                 (naive bound {})",
+                r_uncached.mean_ns() / r_cached.mean_ns(),
+                h * (s + 1) * (s + 1)
+            );
+            assert!(
+                cached_evals < uncached_evals,
+                "cache must strictly reduce pair evaluations"
+            );
+            let mut obj = BTreeMap::new();
+            obj.insert("h".into(), Json::Num(h as f64));
+            obj.insert("s".into(), Json::Num(s as f64));
+            obj.insert("d".into(), Json::Num(d_eff as f64));
+            obj.insert("uncached_ns".into(), Json::Num(r_uncached.mean_ns()));
+            obj.insert("cached_ns".into(), Json::Num(r_cached.mean_ns()));
+            obj.insert(
+                "cached_speedup".into(),
+                Json::Num(r_uncached.mean_ns() / r_cached.mean_ns()),
+            );
+            obj.insert("cached_pair_evals".into(), Json::Num(cached_evals as f64));
+            obj.insert(
+                "uncached_pair_evals".into(),
+                Json::Num(uncached_evals as f64),
+            );
+            rows_json.push(Json::Obj(obj));
+        }
+        json_root.insert("cached".into(), Json::Arr(rows_json));
+    }
+
+    section("trimmed-stats crossover: insertion sort vs selection (b = m/4)");
+    {
+        let mut rows_json = Vec::new();
+        let d = 4096usize;
+        for &m in &[8usize, 16, 24, 32, 48, 64] {
+            let cols: Vec<Vec<f32>> = (0..d)
+                .map(|_| (0..m).map(|_| rng.gaussian32(0.0, 1.0)).collect())
+                .collect();
+            let trim = m / 4;
+            let r_sort = b.run(&format!("trimmed sum sort m={m}"), || {
+                let mut acc = 0.0f64;
+                for col in &cols {
+                    acc += trimmed_sum_sort_path(col, trim);
+                }
+                black_box(acc)
+            });
+            println!("{}", r_sort.report());
+            let r_select = b.run(&format!("trimmed sum select m={m}"), || {
+                let mut acc = 0.0f64;
+                for col in &cols {
+                    acc += trimmed_sum_select_path(col, trim);
+                }
+                black_box(acc)
+            });
+            println!("{}", r_select.report());
+            let mut obj = BTreeMap::new();
+            obj.insert("m".into(), Json::Num(m as f64));
+            obj.insert("b".into(), Json::Num(trim as f64));
+            obj.insert("coords".into(), Json::Num(d as f64));
+            obj.insert("sort_ns".into(), Json::Num(r_sort.mean_ns()));
+            obj.insert("select_ns".into(), Json::Num(r_select.mean_ns()));
+            rows_json.push(Json::Obj(obj));
+        }
+        json_root.insert("trimmed".into(), Json::Arr(rows_json));
+    }
+
+    section("end-to-end: n=256 rounds, distance cache on vs off");
+    {
+        let n = 256usize;
+        let cfg = round_cfg(n);
+        let mut on = Trainer::from_config(&cfg).unwrap();
+        let mut off = Trainer::from_config(&cfg).unwrap();
+        off.set_dist_cache(false);
+        let mut round = 0usize;
+        let r_on = b.run("round n=256 cache on", || {
+            round += 1;
+            black_box(on.round(round).unwrap())
+        });
+        println!("{}", r_on.report());
+        let mut round_off = 0usize;
+        let r_off = b.run("round n=256 cache off", || {
+            round_off += 1;
+            black_box(off.round(round_off).unwrap())
+        });
+        println!("{}", r_off.report());
+        // the acceptance ledger: one cached round computes strictly fewer
+        // row-pair distances than victims × (s+1)²
+        let victims = n - cfg.b;
+        let s = 16usize;
+        let bound = (victims * (s + 1) * (s + 1)) as u64;
+        perf::reset_dist_pair_evals();
+        round += 1;
+        black_box(on.round(round).unwrap());
+        let evals = perf::dist_pair_evals();
+        perf::reset_dist_pair_evals();
+        println!(
+            "  => cache speedup {:.2}x; cached round pair evals {evals} < naive bound {bound}",
+            r_off.mean_ns() / r_on.mean_ns()
         );
-        println!("{}", r.report());
+        assert!(
+            evals < bound,
+            "cached round computed {evals} pair distances, naive bound is {bound}"
+        );
+        let mut obj = BTreeMap::new();
+        obj.insert("n".into(), Json::Num(n as f64));
+        obj.insert("s".into(), Json::Num(s as f64));
+        obj.insert("cache_on_ns".into(), Json::Num(r_on.mean_ns()));
+        obj.insert("cache_off_ns".into(), Json::Num(r_off.mean_ns()));
+        obj.insert(
+            "cache_speedup".into(),
+            Json::Num(r_off.mean_ns() / r_on.mean_ns()),
+        );
+        obj.insert("cached_round_pair_evals".into(), Json::Num(evals as f64));
+        obj.insert("naive_pair_bound".into(), Json::Num(bound as f64));
+        json_root.insert("round".into(), Json::Obj(obj));
+    }
+
+    match std::fs::write(
+        "BENCH_aggregation.json",
+        Json::Obj(json_root).to_string_compact(),
+    ) {
+        Ok(()) => println!("\nwrote BENCH_aggregation.json"),
+        Err(e) => println!("\ncould not write BENCH_aggregation.json: {e}"),
+    }
+
+    if smoke {
+        println!("(BENCH_SMOKE set — skipping the deep-dive sections)");
+        return;
     }
 
     section("Definition-5.1 rules (m=16, d=4874: fig1 geometry)");

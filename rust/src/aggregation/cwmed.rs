@@ -1,5 +1,11 @@
 //! Coordinate-wise median (Yin et al. 2018).
+//!
+//! Shares [`super::cwtm`]'s fast path: transpose-tiled coordinate
+//! gather, total-order integer keys (NaN/±Inf land at the extremes
+//! deterministically), and a `select_nth_unstable` median above the
+//! measured crossover — bit-identical to the sort-based reference path.
 
+use super::cwtm::{for_each_coord, median_keys};
 use super::Aggregator;
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -7,20 +13,8 @@ pub struct CwMed;
 
 impl Aggregator for CwMed {
     fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
-        let m = inputs.len();
-        assert!(m > 0);
-        let mut buf: Vec<f32> = vec![0.0; m];
-        for (j, o) in out.iter_mut().enumerate() {
-            for (slot, row) in buf.iter_mut().zip(inputs) {
-                *slot = row[j];
-            }
-            super::cwtm::insertion_sort(&mut buf);
-            *o = if m % 2 == 1 {
-                buf[m / 2]
-            } else {
-                0.5 * (buf[m / 2 - 1] + buf[m / 2])
-            };
-        }
+        assert!(!inputs.is_empty());
+        for_each_coord(inputs, out, median_keys);
     }
 
     fn name(&self) -> &'static str {
@@ -57,5 +51,21 @@ mod tests {
         let mut out = vec![0.0f32; 1];
         CwMed.aggregate(&inputs, &mut out);
         assert_eq!(out[0], 1.0);
+    }
+
+    #[test]
+    fn non_finite_minority_cannot_move_the_median_off_the_hull() {
+        let rows = [
+            vec![1.0f32],
+            vec![2.0f32],
+            vec![3.0f32],
+            vec![f32::NAN],
+            vec![f32::INFINITY],
+        ];
+        let inputs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0.0f32; 1];
+        CwMed.aggregate(&inputs, &mut out);
+        // total order: 1, 2, 3, +Inf, NaN → median 3 (hull edge), no panic
+        assert_eq!(out[0], 3.0);
     }
 }

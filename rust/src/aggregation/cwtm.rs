@@ -2,12 +2,33 @@
 //! the `b` largest and `b` smallest values and average the remaining
 //! `m − 2b`. The paper composes this after NNM as its aggregation rule.
 //!
-//! Hot-path note: per coordinate we need the *sum of the middle m−2b order
-//! statistics*, not a full sort. For small m a binary-insertion buffer
-//! beats comparison sorts; the scratch buffer is reused across coordinates
-//! (no allocation in the loop).
+//! # Hot-path shape
+//!
+//! Per coordinate we need the *sum of the middle m − 2b order
+//! statistics*, not a full sort. The kernel:
+//!
+//! * gathers coordinates through a transpose tile ([`for_each_coord`]):
+//!   rows are copied [`COORD_TILE`] coordinates at a time into an
+//!   L1-resident staging block, so the big row reads are sequential and
+//!   the per-coordinate gather strides only inside the hot tile;
+//! * maps each f32 to an order-preserving u32 key ([`sort_key`]) —
+//!   integer compares in the inner loops, and a *total* order identical
+//!   to `f32::total_cmp`, so NaN/±Inf adversarial values land
+//!   deterministically at the extremes (where trimming removes them)
+//!   instead of corrupting the sort like the old raw-f32 compares;
+//! * below [`SELECT_MIN_M`] inputs, binary-insertion sorts the keys (for
+//!   tiny m this beats the general sorts' dispatch); at or above it,
+//!   `select_nth_unstable` partitions off the b smallest and b largest
+//!   in O(m) and only the surviving middle is sorted.
+//!
+//! Both paths sum the middle values **ascending**, so they are
+//! bit-identical to each other (pinned by `rust/tests/agg_kernels.rs`)
+//! and the crossover constant is a pure speed knob. Scratch (tile +
+//! keys) lives in a thread-local reused across coordinates, calls, and
+//! rounds.
 
 use super::Aggregator;
+use std::cell::RefCell;
 
 #[derive(Clone, Copy, Debug)]
 pub struct CwTm {
@@ -20,12 +41,47 @@ impl CwTm {
     }
 }
 
-/// In-place insertion sort — for the tiny per-coordinate buffers (m ≤ a
-/// few dozen) this beats the general-purpose sort's dispatch overhead by
-/// ~2x, and `total_cmp`-free f32 compares keep the inner loop branchless
-/// enough for the optimizer.
+/// Coordinates staged per transpose tile: 64 f32 = 256 B per row, so a
+/// 64-row gather works a 16 KiB block — L1-resident while the stat
+/// kernel strides through it.
+const COORD_TILE: usize = 64;
+
+/// Crossover between the insertion-sort and selection paths, in input
+/// count m. Measured by `bench_aggregation`'s "trimmed stats crossover"
+/// section (BENCH_aggregation.json `trimmed` rows): binary insertion on
+/// integer keys wins for the small fan-ins the paper's geometries use
+/// (m ≲ 24); the O(m) `select_nth_unstable` partition wins beyond.
+/// Outputs are bit-identical on both sides, so this only moves time.
+pub const SELECT_MIN_M: usize = 24;
+
+/// f32 → u32 key whose unsigned order equals `f32::total_cmp`: flip the
+/// sign bit for non-negatives, all bits for negatives.
 #[inline]
-pub(crate) fn insertion_sort(buf: &mut [f32]) {
+pub(crate) fn sort_key(x: f32) -> u32 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b ^ 0x8000_0000
+    }
+}
+
+/// Inverse of [`sort_key`].
+#[inline]
+pub(crate) fn key_val(k: u32) -> f32 {
+    let b = if k & 0x8000_0000 != 0 {
+        k ^ 0x8000_0000
+    } else {
+        !k
+    };
+    f32::from_bits(b)
+}
+
+/// In-place insertion sort over keys — for the tiny per-coordinate
+/// buffers this beats the general-purpose sorts' dispatch overhead, and
+/// integer compares keep the inner loop branch-cheap.
+#[inline]
+fn insertion_sort_keys(buf: &mut [u32]) {
     for i in 1..buf.len() {
         let v = buf[i];
         let mut j = i;
@@ -37,6 +93,166 @@ pub(crate) fn insertion_sort(buf: &mut [f32]) {
     }
 }
 
+/// Ascending f64 sum of decoded keys — THE canonical accumulation order
+/// for trimmed sums. Equal keys are identical f32 bits, so any stable
+/// arrangement of ties yields the same sum: ascending key order pins the
+/// result across sort/selection paths.
+#[inline]
+fn sum_ascending(keys: &[u32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &k in keys {
+        acc += key_val(k) as f64;
+    }
+    acc
+}
+
+/// Trimmed sum via full insertion sort (reference path, wins small m).
+pub(crate) fn trimmed_sum_keys_sort(keys: &mut [u32], b: usize) -> f64 {
+    insertion_sort_keys(keys);
+    sum_ascending(&keys[b..keys.len() - b])
+}
+
+/// Trimmed sum via two `select_nth_unstable` partitions: the b smallest
+/// and b largest are split off in O(m) and never sorted; only the
+/// surviving middle is sorted (ascending) for the canonical sum.
+pub(crate) fn trimmed_sum_keys_select(keys: &mut [u32], b: usize) -> f64 {
+    let m = keys.len();
+    if b > 0 {
+        // keys[b] becomes the (b+1)-th smallest with the b smallest left
+        // of it, then the upper cut pins the (m-b)-th smallest at m-b-1
+        keys.select_nth_unstable(b);
+        keys[b..].select_nth_unstable(m - 2 * b - 1);
+    }
+    let mid = &mut keys[b..m - b];
+    mid.sort_unstable();
+    sum_ascending(mid)
+}
+
+/// Crossover dispatch (see [`SELECT_MIN_M`]).
+#[inline]
+pub(crate) fn trimmed_sum_keys(keys: &mut [u32], b: usize) -> f64 {
+    if keys.len() < SELECT_MIN_M {
+        trimmed_sum_keys_sort(keys, b)
+    } else {
+        trimmed_sum_keys_select(keys, b)
+    }
+}
+
+/// Median via full insertion sort (reference path, wins small m).
+pub(crate) fn median_keys_sort(keys: &mut [u32]) -> f32 {
+    let m = keys.len();
+    insertion_sort_keys(keys);
+    if m % 2 == 1 {
+        key_val(keys[m / 2])
+    } else {
+        0.5 * (key_val(keys[m / 2 - 1]) + key_val(keys[m / 2]))
+    }
+}
+
+/// Median via one `select_nth_unstable` partition; the lower middle of
+/// an even count is the max of the left partition. Identical expression
+/// order to the sort path, hence bit-identical.
+pub(crate) fn median_keys_select(keys: &mut [u32]) -> f32 {
+    let m = keys.len();
+    let (lo_part, hi, _) = keys.select_nth_unstable(m / 2);
+    let hi = *hi;
+    if m % 2 == 1 {
+        key_val(hi)
+    } else {
+        let lo = *lo_part.iter().max().expect("even m >= 2 has a left partition");
+        0.5 * (key_val(lo) + key_val(hi))
+    }
+}
+
+/// Crossover dispatch (see [`SELECT_MIN_M`]).
+#[inline]
+pub(crate) fn median_keys(keys: &mut [u32]) -> f32 {
+    if keys.len() < SELECT_MIN_M {
+        median_keys_sort(keys)
+    } else {
+        median_keys_select(keys)
+    }
+}
+
+/// Bench/test surface for the two trimmed-sum paths over plain f32s.
+#[doc(hidden)]
+pub fn trimmed_sum_sort_path(vals: &[f32], b: usize) -> f64 {
+    let mut keys: Vec<u32> = vals.iter().map(|&v| sort_key(v)).collect();
+    trimmed_sum_keys_sort(&mut keys, b)
+}
+
+/// Bench/test surface for the selection trimmed-sum path.
+#[doc(hidden)]
+pub fn trimmed_sum_select_path(vals: &[f32], b: usize) -> f64 {
+    let mut keys: Vec<u32> = vals.iter().map(|&v| sort_key(v)).collect();
+    trimmed_sum_keys_select(&mut keys, b)
+}
+
+/// Bench/test surface for the sort median path.
+#[doc(hidden)]
+pub fn median_sort_path(vals: &[f32]) -> f32 {
+    let mut keys: Vec<u32> = vals.iter().map(|&v| sort_key(v)).collect();
+    median_keys_sort(&mut keys)
+}
+
+/// Bench/test surface for the selection median path.
+#[doc(hidden)]
+pub fn median_select_path(vals: &[f32]) -> f32 {
+    let mut keys: Vec<u32> = vals.iter().map(|&v| sort_key(v)).collect();
+    median_keys_select(&mut keys)
+}
+
+/// Per-thread staging for the coordinate-wise rules, retained across
+/// calls and rounds by the persistent pool's workers.
+#[derive(Default)]
+struct CoordScratch {
+    /// m × tile-width staging block (row-major)
+    tile: Vec<f32>,
+    /// one coordinate's m keys
+    keys: Vec<u32>,
+}
+
+thread_local! {
+    static COORD_SCRATCH: RefCell<CoordScratch> = RefCell::new(CoordScratch::default());
+}
+
+/// Drive `stat` over every coordinate: rows are staged tile-by-tile
+/// (sequential reads of [`COORD_TILE`] coordinates per row into an
+/// L1-resident block), each coordinate's column is lifted to total-order
+/// keys, and `stat`'s result is written to `out[j]`.
+pub(crate) fn for_each_coord(
+    inputs: &[&[f32]],
+    out: &mut [f32],
+    mut stat: impl FnMut(&mut [u32]) -> f32,
+) {
+    let m = inputs.len();
+    let d = out.len();
+    let mut scratch = COORD_SCRATCH.with(|cell| cell.take());
+    scratch.keys.clear();
+    scratch.keys.resize(m, 0);
+    // grow-only staging, sliced per tile — the gather below overwrites
+    // every slot it reads, so no per-tile (or even per-call) zeroing
+    if scratch.tile.len() < m * COORD_TILE {
+        scratch.tile.resize(m * COORD_TILE, 0.0);
+    }
+    let mut j0 = 0usize;
+    while j0 < d {
+        let tw = COORD_TILE.min(d - j0);
+        let tile = &mut scratch.tile[..m * tw];
+        for (r, row) in inputs.iter().enumerate() {
+            tile[r * tw..(r + 1) * tw].copy_from_slice(&row[j0..j0 + tw]);
+        }
+        for t in 0..tw {
+            for (r, key) in scratch.keys.iter_mut().enumerate() {
+                *key = sort_key(tile[r * tw + t]);
+            }
+            out[j0 + t] = stat(&mut scratch.keys);
+        }
+        j0 += tw;
+    }
+    COORD_SCRATCH.with(|cell| cell.replace(scratch));
+}
+
 impl Aggregator for CwTm {
     fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
         let m = inputs.len();
@@ -45,19 +261,9 @@ impl Aggregator for CwTm {
             "CWTM needs m > 2b (m={m}, b={})",
             self.b
         );
-        let inv = 1.0f64 / (m - 2 * self.b) as f64;
-        let mut buf: Vec<f32> = vec![0.0; m];
-        for (j, o) in out.iter_mut().enumerate() {
-            for (slot, row) in buf.iter_mut().zip(inputs) {
-                *slot = row[j];
-            }
-            insertion_sort(&mut buf);
-            let mut acc = 0.0f64;
-            for &v in &buf[self.b..m - self.b] {
-                acc += v as f64;
-            }
-            *o = (acc * inv) as f32;
-        }
+        let b = self.b;
+        let inv = 1.0f64 / (m - 2 * b) as f64;
+        for_each_coord(inputs, out, |keys| (trimmed_sum_keys(keys, b) * inv) as f32);
     }
 
     fn name(&self) -> &'static str {
@@ -118,5 +324,75 @@ mod tests {
         let inputs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
         let mut out = vec![0.0f32; 1];
         CwTm::new(1).aggregate(&inputs, &mut out);
+    }
+
+    #[test]
+    fn sort_key_orders_like_total_cmp() {
+        let vals = [
+            f32::NEG_INFINITY,
+            -1e30,
+            -1.0,
+            -1e-42, // denormal
+            -0.0,
+            0.0,
+            1e-42,
+            1.0,
+            1e30,
+            f32::INFINITY,
+            f32::NAN,
+        ];
+        for (i, &a) in vals.iter().enumerate() {
+            for &b in &vals[i..] {
+                assert_eq!(
+                    sort_key(a).cmp(&sort_key(b)),
+                    a.total_cmp(&b),
+                    "key order diverged at ({a}, {b})"
+                );
+                assert_eq!(key_val(sort_key(a)).to_bits(), a.to_bits(), "roundtrip {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn selection_matches_sort_path_across_widths() {
+        // both sides of the crossover compute identical bits
+        let mut state = 0x2545F4914F6CDD1Du64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 40) as f32 / 256.0 - 32.0
+        };
+        for m in [3usize, 5, 8, 16, 23, 24, 25, 33, 64] {
+            let vals: Vec<f32> = (0..m).map(|_| next()).collect();
+            for b in 0..(m - 1) / 2 {
+                let a = trimmed_sum_sort_path(&vals, b);
+                let s = trimmed_sum_select_path(&vals, b);
+                assert_eq!(a.to_bits(), s.to_bits(), "m={m} b={b}");
+            }
+            let ms = median_sort_path(&vals);
+            let sl = median_select_path(&vals);
+            assert_eq!(ms.to_bits(), sl.to_bits(), "median m={m}");
+        }
+    }
+
+    #[test]
+    fn nan_rows_are_trimmed_not_propagated() {
+        // per coordinate: 5 finite + 2 non-finite with b=2 — the total
+        // order sends NaN/Inf to the extremes, trimming removes them
+        let rows = [
+            vec![1.0f32],
+            vec![2.0f32],
+            vec![3.0f32],
+            vec![4.0f32],
+            vec![5.0f32],
+            vec![f32::NAN],
+            vec![f32::NEG_INFINITY],
+        ];
+        let inputs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0.0f32; 1];
+        CwTm::new(2).aggregate(&inputs, &mut out);
+        // -Inf and the 1.0 trim low; NaN and 5.0 trim high → mean(2,3,4)
+        assert_eq!(out[0], 3.0);
     }
 }

@@ -2,9 +2,22 @@
 //! robust aggregation primitive). Matches `python/compile/kernels/ref.py`
 //! exactly: fixed iteration count, epsilon-guarded denominators,
 //! initialized at the coordinate mean.
+//!
+//! Rides the shared fast-path kernels: per-row distances use the blocked
+//! [`vecmath::dist`] reduction, the mean init reuses [`vecmath::mean_of`]'s
+//! thread-local staging, and the f64 iterate buffer below lives in a
+//! thread-local retained across calls — the Weiszfeld loop allocates
+//! nothing in steady state.
 
 use super::Aggregator;
 use crate::util::vecmath;
+use std::cell::RefCell;
+
+thread_local! {
+    /// d-length f64 iterate, moved out of the cell per call (repo-wide
+    /// take/replace pattern).
+    static NEXT: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct GeoMedian {
@@ -27,7 +40,9 @@ impl Aggregator for GeoMedian {
         let d = out.len();
         // init: coordinate mean
         vecmath::mean_of(inputs, out);
-        let mut next = vec![0.0f64; d];
+        let mut next = NEXT.with(|cell| cell.take());
+        next.clear();
+        next.resize(d, 0.0);
         for _ in 0..self.iters {
             next.fill(0.0);
             let mut wsum = 0.0f64;
@@ -42,6 +57,7 @@ impl Aggregator for GeoMedian {
                 *o = (*nj / wsum) as f32;
             }
         }
+        NEXT.with(|cell| cell.replace(next));
     }
 
     fn name(&self) -> &'static str {

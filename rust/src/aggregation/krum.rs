@@ -1,11 +1,30 @@
 //! Krum (Blanchard et al. 2017): select the input whose summed squared
 //! distance to its m − b − 2 nearest peers (excluding itself) is smallest.
+//!
+//! The pairwise matrix rides the same Gram-blocked kernel and round
+//! [`super::DistCache`] as NNM; neighbor ranking uses the total-order
+//! [`super::rank_cmp`] so non-finite adversarial rows rank farthest (and
+//! their own all-NaN scores can never win the argmin) instead of
+//! panicking the old `partial_cmp().unwrap()` sort.
 
-use super::{pairwise_sqdist, Aggregator};
+use super::{pairwise_sqdist_into, Aggregator, PairScratch, RowCtx};
+use std::cell::RefCell;
 
 #[derive(Clone, Copy, Debug)]
 pub struct Krum {
     pub b: usize,
+}
+
+/// Per-thread buffers reused across victims and rounds.
+#[derive(Default)]
+struct KrumScratch {
+    dist: Vec<f64>,
+    pairs: PairScratch,
+    neigh: Vec<f64>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<KrumScratch> = RefCell::new(KrumScratch::default());
 }
 
 impl Krum {
@@ -15,14 +34,20 @@ impl Krum {
 
     /// Index of the Krum-selected input.
     pub fn select(&self, inputs: &[&[f32]]) -> usize {
+        self.select_with(inputs, None)
+    }
+
+    fn select_with(&self, inputs: &[&[f32]], rows: Option<&RowCtx<'_>>) -> usize {
         let m = inputs.len();
         let k = m
             .checked_sub(self.b + 2)
             .filter(|&k| k >= 1)
             .unwrap_or_else(|| panic!("Krum needs m - b - 2 >= 1 (m={m}, b={})", self.b));
-        let dist = pairwise_sqdist(inputs);
+        let mut scratch = SCRATCH.with(|cell| cell.take());
+        pairwise_sqdist_into(inputs, rows, &mut scratch.pairs, &mut scratch.dist);
+        let dist = &scratch.dist;
+        let neigh = &mut scratch.neigh;
         let mut best = (f64::INFINITY, 0usize);
-        let mut neigh: Vec<f64> = Vec::with_capacity(m - 1);
         for i in 0..m {
             neigh.clear();
             for j in 0..m {
@@ -30,19 +55,28 @@ impl Krum {
                     neigh.push(dist[i * m + j]);
                 }
             }
-            neigh.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            neigh.sort_unstable_by(|a, b| super::rank_cmp(*a, *b));
+            // ascending sum of the k nearest — a non-finite score (all
+            // neighbors poisoned) compares false against best and is
+            // simply never selected
             let score: f64 = neigh[..k].iter().sum();
             if score < best.0 {
                 best = (score, i);
             }
         }
+        SCRATCH.with(|cell| cell.replace(scratch));
         best.1
     }
 }
 
 impl Aggregator for Krum {
     fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
-        let idx = self.select(inputs);
+        let idx = self.select_with(inputs, None);
+        out.copy_from_slice(inputs[idx]);
+    }
+
+    fn aggregate_with_ctx(&self, inputs: &[&[f32]], rows: &RowCtx<'_>, out: &mut [f32]) {
+        let idx = self.select_with(inputs, Some(rows));
         out.copy_from_slice(inputs[idx]);
     }
 
@@ -108,5 +142,46 @@ mod tests {
     fn panics_when_too_few_inputs() {
         let data = vec![vec![0.0f32], vec![1.0f32]];
         Krum::new(1).select(&as_rows(&data));
+    }
+
+    #[test]
+    fn non_finite_rows_never_win_selection() {
+        // the old partial_cmp().unwrap() panicked on the NaN distances;
+        // now the poisoned rows rank farthest and an honest row wins
+        let data = vec![
+            vec![0.0f32],
+            vec![0.1f32],
+            vec![0.2f32],
+            vec![0.15f32],
+            vec![f32::NAN],
+            vec![f32::INFINITY],
+        ];
+        let idx = Krum::new(2).select(&as_rows(&data));
+        assert!(idx <= 3, "selected poisoned row {idx}");
+        let mut out = vec![0.0f32; 1];
+        Krum::new(2).aggregate(&as_rows(&data), &mut out);
+        assert!(out[0].is_finite());
+    }
+
+    #[test]
+    fn cached_selection_matches_plain() {
+        use super::super::DistCache;
+        let data: Vec<Vec<f32>> = (0..6)
+            .map(|i| (0..17).map(|j| ((i * 17 + j) as f32 * 0.7).cos()).collect())
+            .collect();
+        let inputs = as_rows(&data);
+        let rule = Krum::new(1);
+        let plain = rule.select(&inputs);
+        let ids: Vec<Option<u32>> = (0..6).map(|i| Some(i as u32)).collect();
+        let cache = DistCache::new();
+        let ctx = RowCtx { ids: &ids, cache: Some(&cache) };
+        let mut out_plain = vec![0.0f32; 17];
+        let mut out_cached = vec![0.0f32; 17];
+        rule.aggregate(&inputs, &mut out_plain);
+        rule.aggregate_with_ctx(&inputs, &ctx, &mut out_cached); // cold
+        assert_eq!(out_plain, out_cached);
+        rule.aggregate_with_ctx(&inputs, &ctx, &mut out_cached); // warm
+        assert_eq!(out_plain, out_cached);
+        assert_eq!(rule.select_with(&inputs, Some(&ctx)), plain);
     }
 }

@@ -15,6 +15,51 @@
 //!   node's model, its neighbors' models and gossip weights, produce the
 //!   new model. ClippedGossip (He et al. 2022), CS+ (Gaucher et al. 2025),
 //!   GTS (NNA adapted to sparse graphs) and RTC (Yang & Ghaderi 2024).
+//!
+//! # The aggregation fast path
+//!
+//! Per round, every honest victim runs its rule over s+1 rows, so the
+//! engine's dominant cost is h·(s+1)²·d/2 pairwise distances (NNM, Krum)
+//! plus h·d per-coordinate order statistics (CWTM/CWMed). Three layers
+//! attack this:
+//!
+//! 1. **Round-level distance memoization** ([`DistCache`]). The honest
+//!    half-steps are *published once per round and shared by every victim
+//!    that pulls them*, so the squared distance between two honest rows is
+//!    a pure function of the round — the coordinator (and each
+//!    `shard-worker`) threads one per-round cache through
+//!    `coordinator::shard::AggCtx` into
+//!    [`Aggregator::aggregate_with_ctx`], and each honest↔honest pair is
+//!    computed once per address space per round instead of once per
+//!    victim that co-pulls it. See [`DistCache`] for the exact protocol
+//!    — in particular what must stay **per-victim** (any pair touching a
+//!    crafted Byzantine row or the victim's own unpublished data).
+//!
+//! 2. **Gram-blocked pairwise kernel** ([`pairwise_sqdist`]). Distances
+//!    come from precomputed row sq-norms plus a tile-blocked
+//!    `‖a‖² + ‖b‖² − 2·a·b` inner-product sweep
+//!    ([`crate::util::vecmath::dot_tile`], 4-wide unrolled f64
+//!    accumulators): each [`vecmath::GRAM_TILE`] column block is swept
+//!    across the whole pending pair list while the rows' tiles are hot
+//!    in L2, instead of streaming full d-length rows once per pair.
+//!
+//! 3. **Selection-based coordinate stats** (see [`cwtm`]): per-coordinate
+//!    trimmed sums and medians via `select_nth_unstable` over
+//!    total-order keys above a measured crossover, with transpose-tiled
+//!    gathers so row reads are sequential.
+//!
+//! # FP policy: grid invariance, not seed identity
+//!
+//! The blocked kernels change f64 summation order relative to the old
+//! serial loops, so results differ (≤ 1e-10 relative, pinned by
+//! `rust/tests/agg_kernels.rs`) from pre-fast-path seeds. The binding
+//! contract is the one `rust/tests/determinism.rs` enforces: every
+//! reduction is a pure function of its inputs with a fixed evaluation
+//! order, so results are **bit-identical across the whole (transport ×
+//! procs × shards × threads) grid — and with the distance cache on or
+//! off**. Cache hits return exactly the bits a miss would compute
+//! (same kernel, same tile order), which is what makes the memoization
+//! bit-safe.
 
 pub mod cwmed;
 pub mod cwtm;
@@ -33,16 +78,185 @@ pub use mean::Mean;
 pub use nnm::Nnm;
 
 use crate::util::vecmath;
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+/// Aggregation-fast-path performance counters (process-wide, relaxed
+/// atomics — a ledger, not a synchronization point). `bench_aggregation`
+/// and `rust/tests/agg_counters.rs` use them to prove the distance cache
+/// performs strictly fewer row-pair evaluations than the naive
+/// victims × (s+1)² bound; they are NOT deterministic under concurrent
+/// runs in one process, so counter-reading tests live in their own
+/// test binary.
+pub mod perf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DIST_PAIR_EVALS: AtomicU64 = AtomicU64::new(0);
+
+    /// Row-pair squared-distance evaluations actually computed by the
+    /// aggregation kernels since the last reset (cache hits excluded).
+    pub fn dist_pair_evals() -> u64 {
+        DIST_PAIR_EVALS.load(Ordering::Relaxed)
+    }
+
+    /// Reset the row-pair evaluation counter to zero.
+    pub fn reset_dist_pair_evals() {
+        DIST_PAIR_EVALS.store(0, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_dist_pair_evals(n: u64) {
+        if n > 0 {
+            DIST_PAIR_EVALS.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Lock stripes for the round distance cache: enough that h victims on a
+/// full worker pool rarely collide, few enough that `clear()` stays cheap.
+const CACHE_STRIPES: usize = 64;
+
+/// Cancellation guard for the Gram-identity distance: results below this
+/// fraction of the norm scale `‖a‖² + ‖b‖²` are dominated by the
+/// identity's ~d·ε·scale rounding error (d up to 10⁶ → ~2e-10 relative
+/// to scale; 1e-6 leaves four orders of margin), so such pairs are
+/// recomputed with the direct subtract-square kernel instead. This keeps
+/// neighbor rankings exact for near-identical rows — the converged /
+/// adversarially-mimicking regime — at the cost of one extra O(d) pass
+/// for only those pairs.
+const GRAM_GUARD: f64 = 1e-6;
+
+/// Round-scoped memo of honest↔honest squared distances (and row
+/// sq-norms), shared by every victim aggregation in one address space.
+///
+/// # What is cacheable, and why it is bit-safe
+///
+/// A row is cacheable iff it is one of the round's *published* honest
+/// half-steps — identified by its stable honest index, the key both the
+/// coordinator and every worker derive identically. Those rows are frozen
+/// for the round (the synchronous model: phase 4 reads the immutable
+/// phase-1 table), so `‖x_a − x_b‖²` is a pure function of `(round, a,
+/// b)`. Both the cached and the uncached path evaluate the identical
+/// Gram-blocked kernel ([`vecmath::dot_tile`] tiles in ascending order
+/// over `norm_sq(a) + norm_sq(b) − 2·a·b`), so a hit returns exactly the
+/// bits a miss would compute — cache-on vs cache-off runs are
+/// byte-identical (pinned by `rust/tests/agg_kernels.rs`).
+///
+/// # What must stay per-victim
+///
+/// Crafted Byzantine rows are functions of the *victim* (ALIE/FOE etc.
+/// condition on the victim's half-step and previous model), so any pair
+/// touching one is computed fresh per victim and never inserted — such
+/// rows carry no id (`None` in [`RowCtx::ids`]). The cache is cleared at
+/// the start of every round's aggregation phase: half-steps change each
+/// round, and honest indices would otherwise alias stale rows.
+pub struct DistCache {
+    /// pair key `(lo << 32) | hi` over honest indices → ‖x_lo − x_hi‖²
+    dist: Vec<RwLock<HashMap<u64, f64>>>,
+    /// honest index → ‖x_i‖² (the Gram kernel's other shared factor)
+    norm: Vec<RwLock<HashMap<u32, f64>>>,
+}
+
+impl DistCache {
+    pub fn new() -> DistCache {
+        DistCache {
+            dist: (0..CACHE_STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
+            norm: (0..CACHE_STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+
+    /// Drop every entry (start of a new round); keeps stripe capacity.
+    pub fn clear(&mut self) {
+        for stripe in &mut self.dist {
+            stripe.get_mut().unwrap().clear();
+        }
+        for stripe in &mut self.norm {
+            stripe.get_mut().unwrap().clear();
+        }
+    }
+
+    #[inline]
+    fn stripe(key: u64) -> usize {
+        // Fibonacci multiplicative hash, top bits select the stripe
+        (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 58) as usize % CACHE_STRIPES
+    }
+
+    #[inline]
+    fn pair_key(a: u32, b: u32) -> u64 {
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        ((lo as u64) << 32) | hi as u64
+    }
+
+    /// Cached squared distance between published rows `a` and `b`.
+    pub fn get(&self, a: u32, b: u32) -> Option<f64> {
+        let key = Self::pair_key(a, b);
+        self.dist[Self::stripe(key)].read().unwrap().get(&key).copied()
+    }
+
+    fn put(&self, a: u32, b: u32, v: f64) {
+        let key = Self::pair_key(a, b);
+        self.dist[Self::stripe(key)].write().unwrap().insert(key, v);
+    }
+
+    /// Cached sq-norm of published row `id`, computing (and memoizing)
+    /// it on miss. Bit-safe for the same reason distances are: `norm_sq`
+    /// is a pure function of the frozen row.
+    fn norm_get_or(&self, id: u32, row: &[f32]) -> f64 {
+        let stripe = Self::stripe(id as u64);
+        if let Some(&v) = self.norm[stripe].read().unwrap().get(&id) {
+            return v;
+        }
+        let v = vecmath::norm_sq(row);
+        self.norm[stripe].write().unwrap().insert(id, v);
+        v
+    }
+
+    /// Number of memoized pair distances (tests/diagnostics).
+    pub fn dist_entries(&self) -> usize {
+        self.dist.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+}
+
+impl Default for DistCache {
+    fn default() -> Self {
+        DistCache::new()
+    }
+}
+
+/// Row-identity context for [`Aggregator::aggregate_with_ctx`]: which
+/// input rows are the round's shared published half-steps (keyed by
+/// honest index) and the round cache to memoize their pair distances in.
+#[derive(Clone, Copy)]
+pub struct RowCtx<'a> {
+    /// Parallel to `inputs`: `Some(honest_index)` for a published
+    /// half-step row, `None` for a per-victim row (crafted Byzantine
+    /// payloads). Distances between two identified rows are served from /
+    /// inserted into `cache`; anything else is computed fresh.
+    pub ids: &'a [Option<u32>],
+    /// The round-scoped memo (`None` disables memoization — the result
+    /// is byte-identical either way).
+    pub cache: Option<&'a DistCache>,
+}
 
 /// A robust aggregation rule over m = s+1 vectors (Definition 5.1 family).
 ///
 /// `Send + Sync` with `&self` aggregation is a hard requirement: one rule
 /// instance is shared by every worker of the parallel round engine, so
-/// implementations keep per-call state on the stack (or behind a lock).
+/// implementations keep per-call state on the stack, in thread-local
+/// scratch, or behind a lock.
 pub trait Aggregator: Send + Sync {
     /// Aggregate `inputs` (row 0 = own half-step model) into `out`.
     /// All rows have equal length d = out.len().
     fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]);
+
+    /// [`aggregate`](Self::aggregate) with row identities for the round
+    /// distance cache. Distance-free rules ignore the context (the
+    /// default); NNM and Krum route their pairwise matrices through
+    /// [`DistCache`]. The output is byte-identical to `aggregate` —
+    /// callers opt in purely for speed.
+    fn aggregate_with_ctx(&self, inputs: &[&[f32]], rows: &RowCtx<'_>, out: &mut [f32]) {
+        let _ = rows;
+        self.aggregate(inputs, out);
+    }
 
     /// Human-readable rule name (figures/benches).
     fn name(&self) -> &'static str;
@@ -53,6 +267,19 @@ pub trait Aggregator: Send + Sync {
     fn min_inputs(&self) -> usize {
         1
     }
+}
+
+/// Total-order comparator for *ranking* squared distances (NNM neighbor
+/// sort, Krum score sort). Non-finite distances — NaN/±Inf rows are
+/// legal adversarial payloads, and the Gram identity turns them into
+/// NaN/−Inf — all rank as +∞, i.e. "farthest", so a poisoned row can
+/// never panic the sort (the old `partial_cmp().unwrap()`) or sneak into
+/// a neighborhood ahead of a finite row. Ties keep index order wherever
+/// a stable sort is used.
+#[inline]
+pub(crate) fn rank_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    let key = |x: f64| if x.is_finite() { x } else { f64::INFINITY };
+    key(a).total_cmp(&key(b))
 }
 
 /// Named rule selection for configs / CLI.
@@ -119,19 +346,141 @@ impl RuleKind {
     }
 }
 
-/// Pairwise squared-distance matrix of the input rows (f64, exactness
-/// matters for neighbor rankings under adversarial magnitudes).
+/// Reusable buffers for [`pairwise_sqdist_into`] — per-thread, retained
+/// across victims and rounds by NNM/Krum's thread-local scratch.
+#[derive(Default)]
+pub(crate) struct PairScratch {
+    norms: Vec<f64>,
+    have_norm: Vec<bool>,
+    /// (i, j) row-index pairs still needing evaluation this call
+    pending: Vec<(u32, u32)>,
+    /// per-pending-pair dot-product accumulator
+    acc: Vec<f64>,
+}
+
+/// Pairwise squared-distance matrix of the input rows (f64 — exactness
+/// matters for neighbor rankings under adversarial magnitudes, which is
+/// what the [`GRAM_GUARD`] fallback preserves for near-identical rows).
+///
+/// Convenience wrapper over [`pairwise_sqdist_into`] with no cache and
+/// fresh scratch — benches and tests; the round engine goes through
+/// [`Aggregator::aggregate_with_ctx`].
 pub fn pairwise_sqdist(inputs: &[&[f32]]) -> Vec<f64> {
+    let mut out = Vec::new();
+    pairwise_sqdist_into(inputs, None, &mut PairScratch::default(), &mut out);
+    out
+}
+
+/// Fill `out` (m×m, row-major, zero diagonal) with pairwise squared
+/// distances via the Gram identity `‖a‖² + ‖b‖² − 2·a·b`:
+///
+/// 1. resolve cached pairs (both rows identified in `rows` and present
+///    in the round cache) — no row data is touched for these;
+/// 2. memoized sq-norms for every row a pending pair needs;
+/// 3. one tile-blocked sweep: each [`vecmath::GRAM_TILE`] column block
+///    is applied to the whole pending list ([`vecmath::dot_tile`]),
+///    so row tiles stay hot in cache across pairs and the per-pair sum
+///    order (ascending blocks) is identical to a lone
+///    [`vecmath::dot`] — which is what makes cache hits bit-equal to
+///    misses.
+///
+/// Pairs whose Gram result falls under the [`GRAM_GUARD`] cancellation
+/// threshold are recomputed with the direct subtract-square kernel, so
+/// accuracy stays relative to the distance even for near-identical rows.
+///
+/// Newly computed distances between two identified rows are inserted
+/// into the cache; pairs touching an unidentified (per-victim) row are
+/// never cached. Each computed pair bumps [`perf::dist_pair_evals`].
+pub(crate) fn pairwise_sqdist_into(
+    inputs: &[&[f32]],
+    rows: Option<&RowCtx<'_>>,
+    scratch: &mut PairScratch,
+    out: &mut Vec<f64>,
+) {
     let m = inputs.len();
-    let mut d = vec![0.0f64; m * m];
+    let d = inputs.first().map_or(0, |r| r.len());
+    out.clear();
+    out.resize(m * m, 0.0);
+    let cache = rows.and_then(|r| r.cache);
+    let ids: &[Option<u32>] = rows.map_or(&[], |r| r.ids);
+    debug_assert!(ids.is_empty() || ids.len() == m);
+    let id_of = |i: usize| ids.get(i).copied().flatten();
+
+    scratch.pending.clear();
     for i in 0..m {
         for j in (i + 1)..m {
-            let v = vecmath::dist_sq(inputs[i], inputs[j]);
-            d[i * m + j] = v;
-            d[j * m + i] = v;
+            if let (Some(cache), Some(a), Some(b)) = (cache, id_of(i), id_of(j)) {
+                if let Some(v) = cache.get(a, b) {
+                    out[i * m + j] = v;
+                    out[j * m + i] = v;
+                    continue;
+                }
+            }
+            scratch.pending.push((i as u32, j as u32));
         }
     }
-    d
+    if scratch.pending.is_empty() {
+        return;
+    }
+
+    // sq-norms for exactly the rows the pending pairs touch (a fully
+    // warm cache skips even this); identified rows hit the norm memo
+    scratch.norms.clear();
+    scratch.norms.resize(m, 0.0);
+    scratch.have_norm.clear();
+    scratch.have_norm.resize(m, false);
+    for &(i, j) in &scratch.pending {
+        for idx in [i as usize, j as usize] {
+            if !scratch.have_norm[idx] {
+                scratch.norms[idx] = match (cache, id_of(idx)) {
+                    (Some(cache), Some(id)) => cache.norm_get_or(id, inputs[idx]),
+                    _ => vecmath::norm_sq(inputs[idx]),
+                };
+                scratch.have_norm[idx] = true;
+            }
+        }
+    }
+
+    // tile-blocked Gram sweep over the pending list
+    scratch.acc.clear();
+    scratch.acc.resize(scratch.pending.len(), 0.0);
+    let mut col = 0usize;
+    while col < d {
+        let end = (col + vecmath::GRAM_TILE).min(d);
+        for (acc, &(i, j)) in scratch.acc.iter_mut().zip(&scratch.pending) {
+            let (a, b) = (inputs[i as usize], inputs[j as usize]);
+            *acc += vecmath::dot_tile(&a[col..end], &b[col..end]);
+        }
+        col = end;
+    }
+
+    for (acc, &(i, j)) in scratch.acc.iter().zip(&scratch.pending) {
+        let (i, j) = (i as usize, j as usize);
+        let scale = scratch.norms[i] + scratch.norms[j];
+        let raw = scale - 2.0 * acc;
+        // Cancellation guard: the Gram identity's absolute error is
+        // ~d·ε·scale, so when the result lands below GRAM_GUARD·scale
+        // (near-identical rows — converged honest half-steps, or mimic
+        // rows placed ε-close — exactly where neighbor rankings need
+        // exactness) the digits are noise and the sign can even go
+        // negative. Those pairs are recomputed with the direct
+        // subtract-square kernel, whose error is relative to the
+        // *distance* itself. The predicate is a pure function of the
+        // rows and sits at the single compute site, so cached and fresh
+        // values stay identical; a NaN `raw` fails the comparison and
+        // passes through (non-finite rows must keep ranking farthest).
+        let v = if raw < GRAM_GUARD * scale {
+            vecmath::dist_sq(inputs[i], inputs[j])
+        } else {
+            raw
+        };
+        out[i * m + j] = v;
+        out[j * m + i] = v;
+        if let (Some(cache), Some(a), Some(b)) = (cache, id_of(i), id_of(j)) {
+            cache.put(a, b, v);
+        }
+    }
+    perf::record_dist_pair_evals(scratch.pending.len() as u64);
 }
 
 #[cfg(test)]
@@ -167,6 +516,61 @@ mod tests {
         assert_eq!(d[1 * 3 + 0], 25.0);
         assert_eq!(d[0 * 3 + 0], 0.0);
         assert_eq!(d[0 * 3 + 2], 1.0);
+    }
+
+    #[test]
+    fn dist_cache_round_trip_is_bit_identical() {
+        // warm hits must return exactly the bits the cold computation
+        // produced — the property that makes the memo bit-safe
+        let data: Vec<Vec<f32>> = (0..6)
+            .map(|i| {
+                (0..257)
+                    .map(|j| ((i * 257 + j) as f32 * 0.37).sin() * 1e3)
+                    .collect()
+            })
+            .collect();
+        let inputs = rows(&data);
+        let ids: Vec<Option<u32>> = (0..6).map(|i| Some(i as u32)).collect();
+        let cache = DistCache::new();
+        let plain = pairwise_sqdist(&inputs);
+        let ctx = RowCtx { ids: &ids, cache: Some(&cache) };
+        let mut scratch = PairScratch::default();
+        let mut cold = Vec::new();
+        pairwise_sqdist_into(&inputs, Some(&ctx), &mut scratch, &mut cold);
+        assert_eq!(cache.dist_entries(), 6 * 5 / 2);
+        let mut warm = Vec::new();
+        pairwise_sqdist_into(&inputs, Some(&ctx), &mut scratch, &mut warm);
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&plain), bits(&cold), "cold cache vs no cache");
+        assert_eq!(bits(&cold), bits(&warm), "warm hits vs cold misses");
+    }
+
+    #[test]
+    fn per_victim_rows_are_never_cached() {
+        let data = vec![
+            vec![1.0f32, 2.0, 3.0],
+            vec![4.0f32, 5.0, 6.0],
+            vec![7.0f32, 8.0, 9.0],
+        ];
+        let inputs = rows(&data);
+        // row 2 is a crafted (per-victim) row: no id
+        let ids = vec![Some(0u32), Some(1u32), None];
+        let cache = DistCache::new();
+        let ctx = RowCtx { ids: &ids, cache: Some(&cache) };
+        let mut out = Vec::new();
+        pairwise_sqdist_into(&inputs, Some(&ctx), &mut PairScratch::default(), &mut out);
+        // only the (0, 1) honest pair is memoized
+        assert_eq!(cache.dist_entries(), 1);
+        assert!(cache.get(0, 1).is_some());
+    }
+
+    #[test]
+    fn rank_cmp_sends_poison_to_the_back() {
+        use std::cmp::Ordering;
+        assert_eq!(rank_cmp(1.0, 2.0), Ordering::Less);
+        assert_eq!(rank_cmp(f64::NAN, 1.0), Ordering::Greater);
+        assert_eq!(rank_cmp(1.0, f64::NEG_INFINITY), Ordering::Less);
+        assert_eq!(rank_cmp(f64::NAN, f64::INFINITY), Ordering::Equal);
     }
 
     #[test]

@@ -6,15 +6,70 @@
 //! κ = O(b/m), which the paper leans on for Corollary 5.7.
 //!
 //! Tie-breaking matches the Pallas/jnp stable argsort: equal distances
-//! resolve by index order. The mixing loop reuses a flat scratch matrix —
-//! no per-round allocation when driven through [`NnmScratch`].
+//! resolve by index order; non-finite distances (NaN/±Inf adversarial
+//! rows) rank as +∞ via [`super::rank_cmp`] — farthest, never a panic.
+//!
+//! This is the round engine's hottest rule, so the whole call is
+//! allocation-free in steady state: one thread-local [`NnmScratch`]
+//! holds the mixed matrix, the neighbor ordering, the pairwise matrix
+//! and its Gram buffers, and the recycled row-view allocation for the
+//! base-rule call. Driven through
+//! [`Aggregator::aggregate_with_ctx`], the honest↔honest entries of the
+//! pairwise matrix are served from the round [`super::DistCache`].
 
-use super::{pairwise_sqdist, Aggregator};
+use super::{pairwise_sqdist_into, Aggregator, PairScratch, RowCtx};
+use std::cell::RefCell;
 
 #[derive(Debug)]
 pub struct Nnm<A: Aggregator> {
     pub b: usize,
     pub base: A,
+}
+
+/// Per-thread working state for one NNM aggregation, retained across
+/// victims and rounds by the persistent pool's workers.
+#[derive(Default)]
+struct NnmScratch {
+    /// m·d mixed matrix (row-major)
+    mixed: Vec<f32>,
+    /// neighbor ordering, reused across the m mixing rows
+    order: Vec<usize>,
+    /// m·m pairwise squared-distance matrix
+    dist: Vec<f64>,
+    /// Gram-kernel buffers for the pairwise fill
+    pairs: PairScratch,
+    /// recycled allocation for the base rule's row views (emptied
+    /// before storage, so the 'static lifetime is never inhabited)
+    views: Vec<&'static [f32]>,
+}
+
+thread_local! {
+    /// The scratch is moved out of the cell for the duration of the
+    /// call, so a (hypothetical) nested NNM would degrade to fresh
+    /// allocations instead of a borrow panic.
+    static SCRATCH: RefCell<NnmScratch> = RefCell::new(NnmScratch::default());
+}
+
+/// Reuse an emptied row-view allocation under a fresh element lifetime:
+/// clear, disassemble, reassemble with len 0. Sound because no element
+/// ever crosses the lifetime boundary — only the raw allocation does,
+/// and `&'a [f32]` and `&'static [f32]` have identical layout.
+fn recycled_views<'a>(views: Vec<&'static [f32]>) -> Vec<&'a [f32]> {
+    let mut views = std::mem::ManuallyDrop::new(views);
+    views.clear();
+    let (ptr, cap) = (views.as_mut_ptr(), views.capacity());
+    // SAFETY: ptr/cap come from a live Vec whose ownership we just took
+    // (ManuallyDrop suppresses its drop); len 0 means no element is read.
+    unsafe { Vec::from_raw_parts(ptr.cast::<&'a [f32]>(), 0, cap) }
+}
+
+/// Store a row-view allocation back (inverse of [`recycled_views`]).
+fn stored_views(views: Vec<&[f32]>) -> Vec<&'static [f32]> {
+    let mut views = std::mem::ManuallyDrop::new(views);
+    views.clear();
+    let (ptr, cap) = (views.as_mut_ptr(), views.capacity());
+    // SAFETY: as above — the vec is emptied before its parts are reused.
+    unsafe { Vec::from_raw_parts(ptr.cast::<&'static [f32]>(), 0, cap) }
 }
 
 impl<A: Aggregator> Nnm<A> {
@@ -24,21 +79,37 @@ impl<A: Aggregator> Nnm<A> {
 
     /// Compute the mixed matrix into `mixed` (m rows of d, row-major).
     pub fn mix_into(&self, inputs: &[&[f32]], mixed: &mut Vec<f32>) {
+        let mut scratch = SCRATCH.with(|cell| cell.take());
+        self.mix_with(inputs, None, mixed, &mut scratch);
+        SCRATCH.with(|cell| cell.replace(scratch));
+    }
+
+    /// [`mix_into`](Self::mix_into) against explicit scratch, routing the
+    /// pairwise matrix through the round cache when `rows` carries one.
+    fn mix_with(
+        &self,
+        inputs: &[&[f32]],
+        rows: Option<&RowCtx<'_>>,
+        mixed: &mut Vec<f32>,
+        scratch: &mut NnmScratch,
+    ) {
         let m = inputs.len();
         let d = inputs[0].len();
         let k = m - self.b;
         assert!(k >= 1, "NNM needs m - b >= 1 (m={m}, b={})", self.b);
-        let dist = pairwise_sqdist(inputs);
+        pairwise_sqdist_into(inputs, rows, &mut scratch.pairs, &mut scratch.dist);
         mixed.clear();
         mixed.resize(m * d, 0.0);
-        let mut order: Vec<usize> = Vec::with_capacity(m);
+        let order = &mut scratch.order;
+        let dist = &scratch.dist;
         let inv = 1.0 / k as f32;
         for i in 0..m {
             order.clear();
             order.extend(0..m);
             // stable sort by distance, ties by index (order is already
-            // index-ascending, and sort_by is stable)
-            order.sort_by(|&a, &b| dist[i * m + a].partial_cmp(&dist[i * m + b]).unwrap());
+            // index-ascending, and sort_by is stable); non-finite
+            // distances rank last
+            order.sort_by(|&a, &b| super::rank_cmp(dist[i * m + a], dist[i * m + b]));
             let row = &mut mixed[i * d..(i + 1) * d];
             for &j in &order[..k] {
                 crate::util::vecmath::axpy(row, 1.0, inputs[j]);
@@ -46,29 +117,31 @@ impl<A: Aggregator> Nnm<A> {
             crate::util::vecmath::scale(row, inv);
         }
     }
+
+    fn aggregate_impl(&self, inputs: &[&[f32]], rows: Option<&RowCtx<'_>>, out: &mut [f32]) {
+        let m = inputs.len();
+        let d = out.len();
+        let mut scratch = SCRATCH.with(|cell| cell.take());
+        let mut mixed = std::mem::take(&mut scratch.mixed);
+        self.mix_with(inputs, rows, &mut mixed, &mut scratch);
+        // mixed rows are per-victim blends — no identities to hand down,
+        // so the base rule runs without a row context
+        let mut views = recycled_views(std::mem::take(&mut scratch.views));
+        views.extend((0..m).map(|i| &mixed[i * d..(i + 1) * d]));
+        self.base.aggregate(&views, out);
+        scratch.views = stored_views(views);
+        scratch.mixed = mixed;
+        SCRATCH.with(|cell| cell.replace(scratch));
+    }
 }
 
 impl<A: Aggregator> Aggregator for Nnm<A> {
     fn aggregate(&self, inputs: &[&[f32]], out: &mut [f32]) {
-        // per-thread mixing buffer: the m·d matrix would otherwise be a
-        // fresh megabyte-scale allocation on every aggregation (once per
-        // honest node per round, the coordinator's hottest call), and a
-        // shared `&self` buffer would either lock or contend under the
-        // parallel round engine. The buffer is moved out of the cell for
-        // the duration of the call, so a (hypothetical) nested NNM would
-        // degrade to an allocation instead of a borrow panic.
-        thread_local! {
-            static SCRATCH: std::cell::RefCell<Vec<f32>> =
-                std::cell::RefCell::new(Vec::new());
-        }
-        let m = inputs.len();
-        let d = out.len();
-        let mut mixed = SCRATCH.with(|cell| cell.take());
-        self.mix_into(inputs, &mut mixed);
-        let rows: Vec<&[f32]> = (0..m).map(|i| &mixed[i * d..(i + 1) * d]).collect();
-        self.base.aggregate(&rows, out);
-        drop(rows);
-        SCRATCH.with(|cell| cell.replace(mixed));
+        self.aggregate_impl(inputs, None, out);
+    }
+
+    fn aggregate_with_ctx(&self, inputs: &[&[f32]], rows: &RowCtx<'_>, out: &mut [f32]) {
+        self.aggregate_impl(inputs, Some(rows), out);
     }
 
     fn name(&self) -> &'static str {
@@ -83,7 +156,7 @@ impl<A: Aggregator> Aggregator for Nnm<A> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::{CwTm, Mean};
+    use super::super::{CwTm, DistCache, Mean};
     use super::*;
 
     fn as_rows(data: &[Vec<f32>]) -> Vec<&[f32]> {
@@ -152,5 +225,51 @@ mod tests {
         nnm.mix_into(&as_rows(&data), &mut mixed);
         // row 0 mixes self(0.0) and index-1 (1.0) -> 0.5
         assert!((mixed[0] - 0.5).abs() < 1e-6, "mixed0={}", mixed[0]);
+    }
+
+    #[test]
+    fn cached_aggregation_is_byte_identical() {
+        // the cache-on path must reproduce the plain path bit-for-bit,
+        // cold and warm
+        let data: Vec<Vec<f32>> = (0..7)
+            .map(|i| (0..33).map(|j| ((i * 33 + j) as f32).sin() * 50.0).collect())
+            .collect();
+        let inputs = as_rows(&data);
+        let rule = Nnm::new(2, CwTm::new(2));
+        let mut plain = vec![0.0f32; 33];
+        rule.aggregate(&inputs, &mut plain);
+        let ids: Vec<Option<u32>> = (0..7).map(|i| Some(i as u32)).collect();
+        let cache = DistCache::new();
+        let ctx = RowCtx { ids: &ids, cache: Some(&cache) };
+        for pass in ["cold", "warm"] {
+            let mut out = vec![0.0f32; 33];
+            rule.aggregate_with_ctx(&inputs, &ctx, &mut out);
+            let pb: Vec<u32> = plain.iter().map(|x| x.to_bits()).collect();
+            let ob: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(pb, ob, "{pass} cache pass diverged");
+        }
+        assert_eq!(cache.dist_entries(), 7 * 6 / 2);
+    }
+
+    #[test]
+    fn non_finite_rows_neither_panic_nor_poison() {
+        // NaN / ±Inf are legal adversarial payloads: the old
+        // partial_cmp().unwrap() ranking panicked here
+        let data = vec![
+            vec![0.0f32, 1.0],
+            vec![0.1, 1.1],
+            vec![0.2, 0.9],
+            vec![0.15, 1.05],
+            vec![0.05, 0.95],
+            vec![f32::NAN, f32::NAN],
+            vec![f32::INFINITY, f32::NEG_INFINITY],
+        ];
+        let rule = Nnm::new(2, CwTm::new(2));
+        let mut out = vec![0.0f32; 2];
+        rule.aggregate(&as_rows(&data), &mut out);
+        assert!(out.iter().all(|v| v.is_finite()), "out={out:?}");
+        // honest hull: coordinates of the 5 honest rows
+        assert!((0.0..=0.2).contains(&out[0]), "out={out:?}");
+        assert!((0.9..=1.1).contains(&out[1]), "out={out:?}");
     }
 }

@@ -85,7 +85,12 @@
 //! reductions collect per-node values and fold them serially in index
 //! order; and the wire codec ships IEEE-754 bit patterns, never text.
 //! `rust/tests/determinism.rs` enforces the grid, including `--procs 2`
-//! against the in-process engine.
+//! against the in-process engine. The phase-4 fast path additionally
+//! memoizes honest↔honest pairwise distances in a round-scoped
+//! [`crate::aggregation::DistCache`] (one per address space); the memo
+//! is bit-invisible — a hit returns exactly the bits a miss would
+//! compute — so the grid guarantee (and a cache-on vs cache-off
+//! comparison) holds byte-for-byte.
 
 pub mod engine;
 pub mod peer;
@@ -97,7 +102,7 @@ pub use engine::{build_engine, ComputeEngine, HloEngine, NativeEngine};
 pub use sampler::PullSampler;
 
 use crate::aggregation::gossip::GossipAggregator;
-use crate::aggregation::Aggregator;
+use crate::aggregation::{Aggregator, DistCache};
 use crate::attacks::{Attack, HonestDigest};
 use crate::config::{EngineKind, ExperimentConfig, RuleChoice, Topology};
 use crate::data::partition_dirichlet;
@@ -403,6 +408,14 @@ pub struct Trainer {
     last_round_wire: (u64, u64, u64),
     /// per-round digest of the honest population (phase 2 output)
     digest: HonestDigest,
+    /// round-scoped honest↔honest distance memo for the in-process
+    /// aggregation fast path (cleared at the top of every phase 4;
+    /// worker processes keep their own). Bit-invisible: hits return the
+    /// bits a miss would compute.
+    dist_cache: DistCache,
+    /// test hook: `false` disables the memo (cache-on vs cache-off runs
+    /// are pinned byte-identical by `rust/tests/agg_kernels.rs`)
+    dist_cache_on: bool,
     /// round table: half-step rows x^{t+1/2}, ascending honest order
     tbl_halves: Vec<Vec<f32>>,
     /// round table: committed params mirror x^t (refreshed in phase 5;
@@ -523,6 +536,8 @@ impl Trainer {
             last_round_delivered: 0,
             last_round_wire: (0, 0, 0),
             digest: HonestDigest::new(d),
+            dist_cache: DistCache::new(),
+            dist_cache_on: true,
             backends,
             local_backends,
             h,
@@ -573,6 +588,15 @@ impl Trainer {
             Some(backend) => backend.kill_for_test(),
             None => false,
         }
+    }
+
+    /// Test hook: enable/disable the round-level distance cache for the
+    /// in-process aggregation path (worker processes always cache).
+    /// Results are byte-identical either way — `agg_kernels.rs` pins it;
+    /// `bench_aggregation` uses the toggle to measure the speedup.
+    #[doc(hidden)]
+    pub fn set_dist_cache(&mut self, on: bool) {
+        self.dist_cache_on = on;
     }
 
     /// Test hook: wrap the idx-th shard's transport in the deterministic
@@ -787,6 +811,9 @@ impl Trainer {
         push_recv: Option<&[Vec<usize>]>,
     ) -> Result<()> {
         let routes_tbl = self.phase_routing_table(round, push_recv);
+        // round-scope the distance memo: the half-step table it keys
+        // over is rebuilt every round
+        self.dist_cache.clear();
         let ctx = AggCtx {
             agg: &self.agg,
             attack: self.attack.as_deref(),
@@ -803,6 +830,7 @@ impl Trainer {
             b: self.cfg.b,
             push: self.push_s.is_some(),
             dos: self.cfg.attack == crate::attacks::AttackKind::Dos,
+            dist_cache: self.dist_cache_on.then_some(&self.dist_cache),
             wire_frame: std::sync::OnceLock::new(),
         };
         // serve-pulls phase: socket workers get the digest + their slice

@@ -766,6 +766,12 @@ struct WorkerShard {
     byz_seen: Vec<usize>,
     received: Vec<usize>,
     params_scratch: Vec<Vec<f32>>,
+    /// round-scoped honest↔honest distance memo for this worker's
+    /// victims (the per-shard twin of the coordinator's cache; cleared
+    /// at the top of every aggregate phase). Bit-invisible by the
+    /// [`crate::aggregation::DistCache`] contract, so per-worker caches
+    /// cannot split results across the procs grid.
+    dist_cache: crate::aggregation::DistCache,
 }
 
 impl WorkerShard {
@@ -809,6 +815,7 @@ impl WorkerShard {
             byz_seen: vec![0usize; len],
             received: vec![0usize; len],
             params_scratch: vec![vec![0.0f32; d]; len],
+            dist_cache: crate::aggregation::DistCache::new(),
             cfg: world.cfg,
         })
     }
@@ -852,6 +859,7 @@ impl WorkerShard {
                 self.h,
             )
         });
+        self.dist_cache.clear();
         let ctx = AggCtx {
             agg: &self.agg,
             attack: self.attack.as_deref(),
@@ -868,6 +876,7 @@ impl WorkerShard {
             b: self.cfg.b,
             push: self.push_s.is_some(),
             dos: self.cfg.attack == AttackKind::Dos,
+            dist_cache: Some(&self.dist_cache),
             wire_frame: std::sync::OnceLock::new(),
         };
         self.shard.aggregate(
@@ -949,6 +958,7 @@ impl WorkerShard {
             }
         }
         let digest = digest.into_digest();
+        self.dist_cache.clear();
         let ctx = AggCtx {
             agg: &self.agg,
             attack: self.attack.as_deref(),
@@ -965,6 +975,7 @@ impl WorkerShard {
             b: self.cfg.b,
             push: self.push_s.is_some(),
             dos: self.cfg.attack == AttackKind::Dos,
+            dist_cache: Some(&self.dist_cache),
             wire_frame: std::sync::OnceLock::new(),
         };
         self.shard.aggregate(

@@ -45,7 +45,7 @@
 //! enforces it.
 
 use crate::aggregation::gossip::GossipAggregator as _;
-use crate::aggregation::Aggregator as _;
+use crate::aggregation::{Aggregator as _, DistCache, RowCtx};
 use crate::attacks::{Attack, AttackContext, HonestDigest};
 use crate::coordinator::engine::ComputeEngine;
 use crate::coordinator::{AggBackend, PullSampler};
@@ -108,6 +108,14 @@ pub(crate) struct AggCtx<'a> {
     /// push topology (Byzantine senders flood every honest node)
     pub push: bool,
     pub dos: bool,
+    /// Round-scoped honest↔honest distance memo shared by every victim
+    /// this address space aggregates (cleared each round by its owner —
+    /// the coordinator or the worker shard). `None` disables
+    /// memoization; results are byte-identical either way, because hits
+    /// return exactly the bits a miss computes (see
+    /// [`crate::aggregation::DistCache`]). Rows the cache may serve are
+    /// keyed by honest index; per-victim crafted rows are never cached.
+    pub dist_cache: Option<&'a DistCache>,
     /// Lazily encoded `Aggregate` wire frame for this round: the payload
     /// (digest + table) is identical for every pipe-transport worker, so
     /// the first remote backend encodes it once and the rest reuse the
@@ -444,17 +452,32 @@ fn run_agg_jobs(
             match ctx.agg {
                 AggBackend::Native(rule) => {
                     let mut rows: Vec<&[f32]> = Vec::with_capacity(1 + peers.len());
+                    // row identities for the round distance cache: the
+                    // victim's own row and every pulled honest row are
+                    // published half-steps (keyed by honest index, the
+                    // same key every victim derives); crafted Byzantine
+                    // rows are per-victim and carry no id
+                    let mut ids: Vec<Option<u32>> = Vec::with_capacity(1 + peers.len());
                     rows.push(ctx.halves[gi].as_slice());
+                    ids.push(Some(gi as u32));
                     rows.extend_from_slice(&honest_rows);
+                    for &p in peers {
+                        if !ctx.byz[p] {
+                            ids.push(Some(ctx.node_of[p] as u32));
+                        }
+                    }
+                    debug_assert_eq!(ids.len(), rows.len());
                     for rbuf in &byz_buf[..byz_count] {
                         rows.push(rbuf);
+                        ids.push(None);
                     }
                     if rows.len() < rule.min_inputs() {
                         // too few responses to aggregate robustly (push /
                         // DoS rounds): keep the local half-step
                         job.out.copy_from_slice(&ctx.halves[gi]);
                     } else {
-                        rule.aggregate(&rows, job.out);
+                        let rctx = RowCtx { ids: &ids, cache: ctx.dist_cache };
+                        rule.aggregate_with_ctx(&rows, &rctx, job.out);
                     }
                 }
                 AggBackend::Hlo(exec) => {

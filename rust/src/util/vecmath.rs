@@ -5,6 +5,23 @@
 //! from these primitives. Reductions accumulate in f64: with d up to ~10⁶
 //! and adversarial magnitudes in play, f32 accumulation loses digits that
 //! the robustness logic (distance rankings!) actually needs.
+//!
+//! # Kernel shape and the FP policy
+//!
+//! The reductions ([`dot`], [`norm_sq`], [`dist_sq`]) run 4-wide: four
+//! independent f64 accumulators over lock-step chunks of 4, combined as
+//! `(a0+a1)+(a2+a3)` per [`GRAM_TILE`]-sized tile, tiles summed in
+//! ascending order. The unrolled accumulators break the serial f64
+//! dependency chain so the optimizer can vectorize; the fixed tile/chunk
+//! order keeps every reduction a *pure function of its inputs* — the same
+//! everywhere it is evaluated.
+//!
+//! This **changes the summation order** relative to the old serial loops,
+//! so results are not bit-identical with pre-fast-path seeds. The
+//! determinism contract is *grid invariance*, not seed archaeology:
+//! identical bits across (transport × procs × shards × threads), which
+//! `rust/tests/determinism.rs` pins, and ≤ 1e-10 relative drift against
+//! the naive serial oracle, which `rust/tests/agg_kernels.rs` pins.
 
 /// y += a * x
 #[inline]
@@ -29,25 +46,56 @@ pub fn scale(x: &mut [f32], a: f32) {
     }
 }
 
-/// Dot product with f64 accumulation.
+/// f32 elements per reduction tile: 2048 f32 = 8 KiB per row slice, so a
+/// 32-row Gram pass (see `aggregation::pairwise_sqdist`) keeps all its
+/// row tiles L2-resident while it sweeps the pair list.
+pub const GRAM_TILE: usize = 2048;
+
+/// Dot product of one tile (callers slice rows into [`GRAM_TILE`]-sized
+/// pieces) with four independent f64 accumulators. This is the summation
+/// order every Gram-style distance in the codebase must share: the
+/// round-level distance cache stores values computed by one call site
+/// and serves them to another, so the kernel must be a pure function of
+/// the two slices — same tile split, same chunk order, same final
+/// `(a0+a1)+(a2+a3)` combine.
+#[inline]
+pub fn dot_tile(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xs, ys) in (&mut ca).zip(&mut cb) {
+        acc[0] += (xs[0] as f64) * (ys[0] as f64);
+        acc[1] += (xs[1] as f64) * (ys[1] as f64);
+        acc[2] += (xs[2] as f64) * (ys[2] as f64);
+        acc[3] += (xs[3] as f64) * (ys[3] as f64);
+    }
+    for (k, (x, y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        acc[k] += (*x as f64) * (*y as f64);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// Dot product with f64 accumulation: [`dot_tile`] over ascending
+/// [`GRAM_TILE`] tiles.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = 0.0f64;
-    for (x, y) in a.iter().zip(b) {
-        acc += (*x as f64) * (*y as f64);
+    let mut i = 0usize;
+    while i < a.len() {
+        let end = (i + GRAM_TILE).min(a.len());
+        acc += dot_tile(&a[i..end], &b[i..end]);
+        i = end;
     }
     acc
 }
 
-/// Squared L2 norm (f64 accumulation).
+/// Squared L2 norm (f64 accumulation). Defined as `dot(x, x)` so a
+/// cached norm and a freshly computed one are always the same bits.
 #[inline]
 pub fn norm_sq(x: &[f32]) -> f64 {
-    let mut acc = 0.0f64;
-    for v in x {
-        acc += (*v as f64) * (*v as f64);
-    }
-    acc
+    dot(x, x)
 }
 
 /// L2 norm.
@@ -56,14 +104,44 @@ pub fn norm(x: &[f32]) -> f64 {
     norm_sq(x).sqrt()
 }
 
-/// Squared L2 distance ||a - b||² (f64 accumulation).
+/// One tile of the direct squared-distance reduction (4-wide unrolled,
+/// same shape as [`dot_tile`]).
+#[inline]
+fn dist_sq_tile(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xs, ys) in (&mut ca).zip(&mut cb) {
+        let d0 = (xs[0] as f64) - (ys[0] as f64);
+        let d1 = (xs[1] as f64) - (ys[1] as f64);
+        let d2 = (xs[2] as f64) - (ys[2] as f64);
+        let d3 = (xs[3] as f64) - (ys[3] as f64);
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+    }
+    for (k, (x, y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        let d = (*x as f64) - (*y as f64);
+        acc[k] += d * d;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// Squared L2 distance ||a - b||² (f64 accumulation, 4-wide unrolled
+/// tiles). Direct subtract-and-square — immune to the cancellation the
+/// Gram identity suffers for near-identical rows, which is why the
+/// single-pair API keeps this form while `aggregation::pairwise_sqdist`
+/// uses norms + dot.
 #[inline]
 pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = 0.0f64;
-    for (x, y) in a.iter().zip(b) {
-        let d = (*x as f64) - (*y as f64);
-        acc += d * d;
+    let mut i = 0usize;
+    while i < a.len() {
+        let end = (i + GRAM_TILE).min(a.len());
+        acc += dist_sq_tile(&a[i..end], &b[i..end]);
+        i = end;
     }
     acc
 }
@@ -84,7 +162,17 @@ pub fn dist(a: &[f32], b: &[f32]) -> f64 {
 /// more than one f32 ulp — see `mean_of_f64_accumulation_fixes_drift`).
 pub fn mean_of<R: AsRef<[f32]>>(rows: &[R], out: &mut [f32]) {
     assert!(!rows.is_empty());
-    let mut acc = vec![0.0f64; out.len()];
+    // per-thread f64 staging: this runs once per aggregation call on the
+    // round hot path, where a fresh d-length allocation per call is pure
+    // overhead. Moved out of the cell for the call (the repo-wide
+    // take/replace pattern), so re-entrancy degrades to an allocation.
+    thread_local! {
+        static MEAN_ACC: std::cell::RefCell<Vec<f64>> =
+            std::cell::RefCell::new(Vec::new());
+    }
+    let mut acc = MEAN_ACC.with(|cell| cell.take());
+    acc.clear();
+    acc.resize(out.len(), 0.0);
     for r in rows {
         let r = r.as_ref();
         debug_assert_eq!(r.len(), out.len());
@@ -93,9 +181,10 @@ pub fn mean_of<R: AsRef<[f32]>>(rows: &[R], out: &mut [f32]) {
         }
     }
     let inv = 1.0 / rows.len() as f64;
-    for (o, a) in out.iter_mut().zip(acc) {
+    for (o, a) in out.iter_mut().zip(acc.iter()) {
         *o = (a * inv) as f32;
     }
+    MEAN_ACC.with(|cell| cell.replace(acc));
 }
 
 /// out = a - b
@@ -236,6 +325,57 @@ mod tests {
         let x = vec![1e4f32; n];
         let ns = norm_sq(&x);
         assert!((ns - 1e8 * n as f64).abs() / (1e8 * n as f64) < 1e-12);
+    }
+
+    #[test]
+    fn tiled_kernels_handle_remainders_and_tile_edges() {
+        // lengths straddling the chunk (4) and tile (GRAM_TILE) edges all
+        // agree with the naive serial loops to reordering precision
+        for len in [
+            0usize,
+            1,
+            3,
+            4,
+            5,
+            7,
+            GRAM_TILE - 1,
+            GRAM_TILE,
+            GRAM_TILE + 1,
+            2 * GRAM_TILE + 3,
+        ] {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..len).map(|i| (i as f32 * 0.11).cos()).collect();
+            let naive_dot: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| (*x as f64) * (*y as f64))
+                .sum();
+            let naive_dist: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| {
+                    let d = (*x as f64) - (*y as f64);
+                    d * d
+                })
+                .sum();
+            let scale = naive_dist.abs().max(naive_dot.abs()).max(1.0);
+            assert!(
+                (dot(&a, &b) - naive_dot).abs() / scale < 1e-10,
+                "dot len={len}"
+            );
+            assert!(
+                (dist_sq(&a, &b) - naive_dist).abs() / scale < 1e-10,
+                "dist_sq len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn norm_sq_is_exactly_dot_with_self() {
+        // the cache contract: a norm computed anywhere equals dot(x, x)
+        // bit-for-bit, so cached and fresh norms are interchangeable
+        let x: Vec<f32> = (0..5000).map(|i| (i as f32 * 0.013).tan()).collect();
+        assert_eq!(norm_sq(&x).to_bits(), dot(&x, &x).to_bits());
     }
 
     #[test]

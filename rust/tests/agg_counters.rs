@@ -1,0 +1,67 @@
+//! Row-pair evaluation ledger for the aggregation fast path.
+//!
+//! Lives in its own test binary on purpose: `aggregation::perf` counters
+//! are process-wide, and the other suites (which also run aggregation)
+//! would pollute the counts if these assertions shared their process.
+//! The single #[test] below keeps the binary race-free.
+
+use rpel::aggregation::perf;
+use rpel::attacks::AttackKind;
+use rpel::config::{EngineKind, ExperimentConfig, Topology};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+
+fn cfg(n: usize, s: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = format!("agg_counters_n{n}");
+    cfg.n = n;
+    cfg.b = n / 10;
+    cfg.topology = Topology::Epidemic { s };
+    cfg.bhat = Some(2);
+    cfg.attack = AttackKind::Alie;
+    cfg.batch = 8;
+    cfg.samples_per_node = 24;
+    cfg.test_samples = 32;
+    cfg.engine = EngineKind::Native;
+    cfg.threads = 1; // deterministic single-thread ledger
+    cfg
+}
+
+#[test]
+fn cached_round_computes_strictly_fewer_pair_distances() {
+    let (n, s) = (32usize, 8usize);
+    let config = cfg(n, s);
+    let victims = n - config.b;
+
+    // cache ON: one round's ledger
+    let mut on = Trainer::from_config(&config).unwrap();
+    perf::reset_dist_pair_evals();
+    on.round(0).unwrap();
+    let cached = perf::dist_pair_evals();
+
+    // cache OFF: same round's ledger
+    let mut off = Trainer::from_config(&config).unwrap();
+    off.set_dist_cache(false);
+    perf::reset_dist_pair_evals();
+    off.round(0).unwrap();
+    let uncached = perf::dist_pair_evals();
+
+    let naive_bound = (victims * (s + 1) * (s + 1)) as u64;
+    assert!(cached > 0, "ledger recorded nothing — hook disconnected?");
+    assert!(
+        cached < uncached,
+        "cache must strictly reduce evaluations: cached {cached}, uncached {uncached}"
+    );
+    assert!(
+        cached < naive_bound,
+        "cached round computed {cached} pair distances, naive bound is {naive_bound}"
+    );
+    // sanity on the uncached ledger: exactly one half-matrix per victim
+    // (m = own row + s pulled rows, every pair evaluated once)
+    let m = s + 1;
+    assert_eq!(
+        uncached,
+        (victims * (m * (m - 1)) / 2) as u64,
+        "uncached ledger should be victims × C(m, 2)"
+    );
+}

@@ -1,0 +1,313 @@
+//! Oracle-equivalence suite for the aggregation fast path:
+//!
+//! * the Gram-blocked pairwise kernel and the blocked `dist_sq` stay
+//!   within 1e-10 relative of the naive serial oracle (the FP policy is
+//!   grid invariance, not seed identity — this pins the drift bound);
+//! * cached and uncached NNM∘CWTM are **byte-identical**, at the rule
+//!   level (forall) and end-to-end across the (shards × procs × threads)
+//!   grid with the cache toggled;
+//! * the selection-based per-coordinate trimmed sum / median is
+//!   **bit-identical** to the sort-based path on random and adversarial
+//!   (tied, denormal, mixed-magnitude, signed-zero, non-finite) inputs;
+//! * NaN/±Inf adversarial rows cannot panic any distance-based rule and
+//!   the output stays in the honest hull.
+
+use rpel::aggregation::cwtm::{
+    median_select_path, median_sort_path, trimmed_sum_select_path, trimmed_sum_sort_path,
+};
+use rpel::aggregation::{pairwise_sqdist, Aggregator, DistCache, RowCtx, RuleKind};
+use rpel::attacks::AttackKind;
+use rpel::config::ExperimentConfig;
+use rpel::coordinator::Trainer;
+use rpel::testkit::{forall, Gen};
+use rpel::util::rng::Rng;
+use rpel::util::vecmath;
+
+fn naive_dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x as f64) - (*y as f64);
+        acc += d * d;
+    }
+    acc
+}
+
+fn naive_norm_sq(a: &[f32]) -> f64 {
+    a.iter().map(|x| (*x as f64) * (*x as f64)).sum()
+}
+
+/// Random row set: (m rows, each of length d) with mixed magnitudes.
+fn gen_rows(m_max: usize, d_max: usize) -> Gen<Vec<Vec<f32>>> {
+    Gen::plain(move |rng: &mut Rng| {
+        let m = 2 + rng.index(m_max - 1);
+        let d = 1 + rng.index(d_max);
+        let scale = [1.0f32, 1e-3, 1e3, 1e6][rng.index(4)];
+        (0..m)
+            .map(|_| (0..d).map(|_| rng.gaussian32(0.0, scale)).collect())
+            .collect()
+    })
+}
+
+#[test]
+fn blocked_dist_sq_within_1e10_of_naive_oracle() {
+    forall(300, 11, gen_rows(3, 600), |rows| {
+        let a = &rows[0];
+        let b = &rows[1];
+        if a.len() != b.len() {
+            return true; // gen gives equal lengths; belt and braces
+        }
+        let naive = naive_dist_sq(a, b);
+        let blocked = vecmath::dist_sq(a, b);
+        (blocked - naive).abs() <= 1e-10 * naive.max(1e-300)
+    });
+    // the d = 10⁵ regime the issue names, deterministic
+    let mut rng = Rng::new(5);
+    let a: Vec<f32> = (0..100_000).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+    let b: Vec<f32> = (0..100_000).map(|_| rng.gaussian32(0.5, 2.0)).collect();
+    let naive = naive_dist_sq(&a, &b);
+    let blocked = vecmath::dist_sq(&a, &b);
+    assert!(
+        (blocked - naive).abs() <= 1e-10 * naive,
+        "d=1e5: naive {naive}, blocked {blocked}"
+    );
+}
+
+#[test]
+fn gram_pairwise_within_1e10_of_naive_oracle() {
+    // the Gram identity cancels, so the drift bound is relative to the
+    // norm scale that sets its ulps (equal to the distance scale for
+    // the independent rows generated here)
+    forall(200, 12, gen_rows(8, 400), |rows| {
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let m = refs.len();
+        let gram = pairwise_sqdist(&refs);
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let naive = naive_dist_sq(refs[i], refs[j]);
+                let scale = (naive_norm_sq(refs[i]) + naive_norm_sq(refs[j])).max(naive);
+                if (gram[i * m + j] - naive).abs() > 1e-10 * scale.max(1e-300) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+    // d = 10⁵ point
+    let mut rng = Rng::new(6);
+    let rows: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..100_000).map(|_| rng.gaussian32(0.0, 3.0)).collect())
+        .collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let gram = pairwise_sqdist(&refs);
+    for i in 0..4 {
+        for j in (i + 1)..4 {
+            let naive = naive_dist_sq(refs[i], refs[j]);
+            assert!(
+                (gram[i * 4 + j] - naive).abs() <= 1e-10 * naive,
+                "({i},{j}): naive {naive}, gram {}",
+                gram[i * 4 + j]
+            );
+        }
+    }
+}
+
+#[test]
+fn gram_guard_keeps_near_identical_rows_distance_accurate() {
+    // the cancellation regime: rows with large norms and tiny
+    // separation (converged half-steps / mimic adversaries). The raw
+    // Gram identity's error here is ~d·ε·‖a‖² — orders of magnitude
+    // larger than the true distance — so the kernel must fall back to
+    // the direct subtract-square path and stay distance-relative.
+    let mut rng = Rng::new(9);
+    let d = 50_000usize;
+    let base: Vec<f32> = (0..d).map(|_| rng.gaussian32(0.0, 1e3)).collect();
+    // three rows ε-close to `base` at distinct distances, plus base
+    let mut rows = vec![base.clone()];
+    for k in 1..=3u32 {
+        let eps = 1e-4f32 * k as f32;
+        rows.push(base.iter().map(|&x| x + eps).collect());
+    }
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let m = refs.len();
+    let gram = pairwise_sqdist(&refs);
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let naive = naive_dist_sq(refs[i], refs[j]);
+            let got = gram[i * m + j];
+            assert!(
+                (got - naive).abs() <= 1e-10 * naive,
+                "({i},{j}): naive {naive}, got {got} — cancellation guard failed"
+            );
+        }
+    }
+    // and the ranking NNM derives from it is the true one: base's
+    // nearest neighbors in order are rows 1, 2, 3
+    assert!(gram[1] < gram[2] && gram[2] < gram[3], "{gram:?}");
+}
+
+#[test]
+fn cached_nnm_cwtm_is_byte_identical_forall() {
+    // per-rule property: with every row identified, with a per-victim
+    // (unidentified) minority, cold and warm — always the plain bits
+    forall(120, 13, gen_rows(9, 120), |rows| {
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let m = refs.len();
+        let d = refs[0].len();
+        let b = (m - 1) / 2;
+        let rule = RuleKind::NnmCwtm.build(b.min(2));
+        let mut plain = vec![0.0f32; d];
+        rule.aggregate(&refs, &mut plain);
+        let plain_bits: Vec<u32> = plain.iter().map(|x| x.to_bits()).collect();
+        // ids: last row unidentified when m > 2 (a "crafted" row)
+        let ids: Vec<Option<u32>> = (0..m)
+            .map(|i| if m > 2 && i == m - 1 { None } else { Some(i as u32) })
+            .collect();
+        let cache = DistCache::new();
+        let ctx = RowCtx { ids: &ids, cache: Some(&cache) };
+        for _pass in 0..2 {
+            let mut out = vec![0.0f32; d];
+            rule.aggregate_with_ctx(&refs, &ctx, &mut out);
+            let bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+            if bits != plain_bits {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn selection_stats_bit_identical_to_sort_path() {
+    // adversarial value classes the selection partition must order
+    // exactly like the reference insertion sort: ties, denormals, mixed
+    // magnitudes, signed zeros, non-finite payloads
+    let gen = Gen::plain(|rng: &mut Rng| {
+        let m = 3 + rng.index(62);
+        let mode = rng.index(5);
+        let vals: Vec<f32> = (0..m)
+            .map(|_| match mode {
+                0 => rng.gaussian32(0.0, 1e3),
+                1 => [-1.0f32, 0.0, 1.0, 2.0][rng.index(4)], // heavy ties
+                2 => [1e-42f32, -1e-42, 1e-40, -1e-40][rng.index(4)], // denormals
+                3 => rng.gaussian32(0.0, 1.0) * [1e-30f32, 1.0, 1e30][rng.index(3)],
+                _ => [0.0f32, -0.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0]
+                    [rng.index(6)],
+            })
+            .collect();
+        let b = rng.index((m - 1) / 2 + 1); // 0 ≤ b ≤ (m-1)/2 ⇒ m > 2b
+        (vals, b)
+    });
+    forall(500, 14, gen, |(vals, b)| {
+        let sum_sort = trimmed_sum_sort_path(vals, *b);
+        let sum_select = trimmed_sum_select_path(vals, *b);
+        let med_sort = median_sort_path(vals);
+        let med_select = median_select_path(vals);
+        sum_sort.to_bits() == sum_select.to_bits()
+            && med_sort.to_bits() == med_select.to_bits()
+    });
+}
+
+#[test]
+fn non_finite_rows_stay_in_hull_for_every_nnm_composite() {
+    // NaN and ±Inf are legal adversarial payloads; every distance-based
+    // composite must absorb them without a panic and land in the hull
+    let data = vec![
+        vec![0.0f32, 1.0],
+        vec![0.1, 1.1],
+        vec![0.2, 0.9],
+        vec![0.15, 1.05],
+        vec![0.05, 0.95],
+        vec![0.12, 1.02],
+        vec![f32::NAN, f32::INFINITY],
+        vec![f32::NEG_INFINITY, f32::NAN],
+    ];
+    let refs: Vec<&[f32]> = data.iter().map(|v| v.as_slice()).collect();
+    for kind in [RuleKind::NnmCwtm, RuleKind::NnmCwMed, RuleKind::NnmKrum, RuleKind::Krum] {
+        let rule = kind.build(2);
+        let mut out = vec![0.0f32; 2];
+        rule.aggregate(&refs, &mut out);
+        assert!(
+            out.iter().all(|v| v.is_finite()),
+            "{}: non-finite output {out:?}",
+            kind.name()
+        );
+        assert!(
+            (0.0..=0.2).contains(&out[0]) && (0.9..=1.1).contains(&out[1]),
+            "{}: out of honest hull {out:?}",
+            kind.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: the cache toggle across the engine grid
+// ---------------------------------------------------------------------------
+
+fn grid_cfg() -> ExperimentConfig {
+    use rpel::config::{EngineKind, Topology};
+    use rpel::data::TaskKind;
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.n = 12;
+    cfg.b = 2;
+    cfg.topology = Topology::Epidemic { s: 6 };
+    cfg.bhat = Some(2);
+    cfg.attack = AttackKind::Alie;
+    cfg.rounds = 6;
+    cfg.batch = 8;
+    cfg.samples_per_node = 48;
+    cfg.test_samples = 96;
+    cfg.eval_every = 3;
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+/// Run and collect the bit-comparable outputs.
+fn run_collect(cfg: &ExperimentConfig, cache_on: bool) -> (Vec<u64>, Vec<Vec<u32>>) {
+    let mut t = Trainer::from_config(cfg).unwrap();
+    t.set_dist_cache(cache_on);
+    let hist = t.run().unwrap();
+    let losses: Vec<u64> = hist.train_loss.iter().map(|x| x.to_bits()).collect();
+    let params: Vec<Vec<u32>> = (0..t.honest_count())
+        .map(|i| t.params_of(i).iter().map(|x| x.to_bits()).collect())
+        .collect();
+    (losses, params)
+}
+
+#[test]
+fn cache_toggle_is_byte_invisible_across_the_grid() {
+    // reference: cache OFF, serial, single shard
+    let mut off_cfg = grid_cfg();
+    off_cfg.shards = 1;
+    off_cfg.threads = 1;
+    let reference = run_collect(&off_cfg, false);
+    // cache ON across the in-process (shards × threads) grid
+    for shards in [1usize, 2, 3] {
+        for threads in [1usize, 4] {
+            let mut cfg = grid_cfg();
+            cfg.shards = shards;
+            cfg.threads = threads;
+            let got = run_collect(&cfg, true);
+            assert_eq!(
+                reference, got,
+                "cache-on shards={shards} threads={threads} diverged from cache-off serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn worker_processes_cache_is_byte_invisible_too() {
+    // the multi-process engine always caches in each worker; it must
+    // reproduce the cache-off in-process run bit-for-bit. Pin the worker
+    // binary first (test binaries live in deps/, where the default
+    // sibling resolution may not find — or may find a stale — `rpel`).
+    rpel::coordinator::proc::set_worker_bin(env!("CARGO_BIN_EXE_rpel"));
+    let mut off_cfg = grid_cfg();
+    off_cfg.threads = 1;
+    let reference = run_collect(&off_cfg, false);
+    let mut cfg = grid_cfg();
+    cfg.procs = 2;
+    cfg.threads = 1;
+    let got = run_collect(&cfg, true);
+    assert_eq!(reference, got, "procs=2 (worker caches) vs cache-off in-process");
+}
