@@ -1,0 +1,169 @@
+//! The "async jungle" experiment: which robust aggregators survive
+//! degraded, asynchronous participation?
+//!
+//! *Collaborative Learning in the Jungle* is the reference point for
+//! Byzantine robustness under asynchrony; this driver puts RPEL's rule
+//! panel in that regime. Every run rides the deterministic virtual
+//! clock (`util/vclock.rs`): two-point stragglers plus crash/rejoin
+//! churn, rounds closed at a quorum of honest arrivals, missed
+//! snapshots carried under bounded staleness. The sweep crosses
+//! aggregation rules with the staleness bound (0 = a missed node is
+//! served its own last commit; larger bounds carry its last published
+//! half-step) and reports final accuracy next to the participation and
+//! staleness ledgers.
+//!
+//! Emits `BENCH_async.json` (the `sweep` section; the `timing` section
+//! belongs to `cargo bench --bench bench_async`).
+//!
+//! Run:  cargo run --release --example async_jungle
+
+use rpel::aggregation::RuleKind;
+use rpel::attacks::AttackKind;
+use rpel::config::{ExperimentConfig, RuleChoice, Topology};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+use rpel::metrics::History;
+use rpel::testkit::scenario::Scenario;
+use rpel::util::json::Json;
+use std::collections::BTreeMap;
+
+const ROUNDS: usize = 20;
+
+fn jungle_cfg(rule: RuleKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = format!("jungle_{rule:?}");
+    cfg.n = 12;
+    cfg.b = 2;
+    cfg.topology = Topology::Epidemic { s: 6 };
+    cfg.bhat = Some(2);
+    cfg.attack = AttackKind::Alie;
+    cfg.rule = RuleChoice::Epidemic(rule);
+    cfg.rounds = ROUNDS;
+    cfg.batch = 8;
+    cfg.samples_per_node = 48;
+    cfg.test_samples = 96;
+    cfg.eval_every = 10;
+    cfg
+}
+
+/// The jungle: the named straggler scenario plus crash/rejoin churn.
+fn into_jungle(cfg: &mut ExperimentConfig, max_staleness: usize) {
+    Scenario::named("straggler_twopoint")
+        .expect("built-in scenario")
+        .apply(cfg)
+        .expect("scenario applies");
+    cfg.asyn.max_staleness = max_staleness;
+    cfg.asyn.crash_prob = 0.1;
+    cfg.asyn.down_rounds = 2;
+    cfg.validate().expect("jungle config validates");
+}
+
+struct Cell {
+    rule: &'static str,
+    mode: String,
+    acc: f64,
+    mean_participation: f64,
+    stale_serves: u64,
+    dropped_serves: u64,
+}
+
+fn run_cell(rule_name: &'static str, mode: String, cfg: &ExperimentConfig) -> anyhow::Result<Cell> {
+    let hist: History = Trainer::from_config(cfg)?.run()?;
+    let h = (cfg.n - cfg.b) as f64;
+    let (mean_p, stale, dropped) = if cfg.asyn.is_enabled() {
+        let sum: u64 = hist.participation_per_round.iter().map(|&p| p as u64).sum();
+        let cap = cfg.asyn.max_staleness + 1;
+        let stale: u64 = hist.staleness_hist[1..cap].iter().sum();
+        (sum as f64 / ROUNDS as f64, stale, hist.staleness_hist[cap])
+    } else {
+        (h, 0, 0)
+    };
+    Ok(Cell {
+        rule: rule_name,
+        mode,
+        acc: hist.final_avg_accuracy(),
+        mean_participation: mean_p,
+        stale_serves: stale,
+        dropped_serves: dropped,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let rules = [
+        ("mean", RuleKind::Mean),
+        ("cwmed", RuleKind::CwMed),
+        ("cwtm", RuleKind::CwTm),
+        ("nnm_cwtm", RuleKind::NnmCwtm),
+    ];
+    println!(
+        "async jungle: n=12 b=2 s=6 alie, two-point stragglers (quorum 7) \
+         + crash/rejoin churn, {ROUNDS} rounds\n"
+    );
+
+    let mut cells = Vec::new();
+    for (name, rule) in rules {
+        cells.push(run_cell(name, "sync".into(), &jungle_cfg(rule))?);
+        for ms in [0usize, 1, 3] {
+            let mut cfg = jungle_cfg(rule);
+            into_jungle(&mut cfg, ms);
+            cells.push(run_cell(name, format!("async_ms{ms}"), &cfg)?);
+        }
+    }
+
+    println!(
+        "{:<10} {:<10} {:>8} {:>14} {:>12} {:>12}",
+        "rule", "mode", "acc", "mean particip", "stale", "dropped"
+    );
+    for c in &cells {
+        println!(
+            "{:<10} {:<10} {:>8.3} {:>14.2} {:>12} {:>12}",
+            c.rule, c.mode, c.acc, c.mean_participation, c.stale_serves, c.dropped_serves
+        );
+    }
+
+    // the jungle headline: the paper's rule vs the non-robust baseline
+    // under the harshest staleness bound
+    let pick = |rule: &str, mode: &str| {
+        cells
+            .iter()
+            .find(|c| c.rule == rule && c.mode == mode)
+            .map(|c| c.acc)
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "\nheadline: at max_staleness=3, nnm_cwtm holds {:.3} vs mean {:.3} \
+         (sync nnm_cwtm reference {:.3})",
+        pick("nnm_cwtm", "async_ms3"),
+        pick("mean", "async_ms3"),
+        pick("nnm_cwtm", "sync"),
+    );
+
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("bench_async".into()));
+    root.insert("produced_by".into(), Json::Str("examples/async_jungle".into()));
+    root.insert("units".into(), Json::Str("ns_per_round".into()));
+    root.insert("smoke".into(), Json::Null);
+    root.insert("timing".into(), Json::Null); // bench_async fills this
+    let sweep: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let mut obj = BTreeMap::new();
+            obj.insert("rule".into(), Json::Str(c.rule.into()));
+            obj.insert("mode".into(), Json::Str(c.mode.clone()));
+            obj.insert("final_acc".into(), Json::Num(c.acc));
+            obj.insert(
+                "mean_participation".into(),
+                Json::Num(c.mean_participation),
+            );
+            obj.insert("stale_serves".into(), Json::Num(c.stale_serves as f64));
+            obj.insert("dropped_serves".into(), Json::Num(c.dropped_serves as f64));
+            Json::Obj(obj)
+        })
+        .collect();
+    root.insert("sweep".into(), Json::Arr(sweep));
+    match std::fs::write("BENCH_async.json", Json::Obj(root).to_string_compact()) {
+        Ok(()) => println!("\nwrote BENCH_async.json"),
+        Err(e) => println!("\ncould not write BENCH_async.json: {e}"),
+    }
+    Ok(())
+}

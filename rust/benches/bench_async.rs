@@ -1,0 +1,125 @@
+//! Async-engine overhead benchmark: what does the virtual clock cost?
+//!
+//! Three configurations over the same n=64 round geometry:
+//!
+//! * **sync** — the synchronous engine (async disabled, no schedule);
+//! * **neutral async** — `quorum = h`: the async engine runs (schedule,
+//!   freshness bookkeeping, ledgers) but every node is fresh every
+//!   round, so this prices the pure engine overhead against sync;
+//! * **straggler async** — two-point stragglers + churn + bounded
+//!   staleness: the working regime, including carry/decay serves.
+//!
+//! Emits the `timing` section of `BENCH_async.json` (the `sweep`
+//! section belongs to `examples/async_jungle.rs`); the CI `bench-smoke`
+//! job runs `BENCH_SMOKE=1` and uploads the measured file.
+//!
+//! Run: cargo bench --bench bench_async
+
+use rpel::attacks::AttackKind;
+use rpel::benchkit::{black_box, section, Bencher};
+use rpel::config::{AsyncCfg, EngineKind, ExperimentConfig, StragglerKind, Topology};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+use rpel::util::json::Json;
+use std::collections::BTreeMap;
+
+const N: usize = 64;
+
+fn base_cfg(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = name.into();
+    cfg.n = N;
+    cfg.b = N / 10;
+    cfg.topology = Topology::Epidemic { s: 8 };
+    cfg.bhat = Some(3);
+    cfg.attack = AttackKind::Alie;
+    cfg.batch = 8;
+    cfg.samples_per_node = 32;
+    cfg.test_samples = 64;
+    cfg.eval_every = 1_000_000; // never: rounds only
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+fn round_mean_ns(b: &Bencher, label: &str, cfg: &ExperimentConfig) -> f64 {
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    let mut round = 0usize;
+    let r = b.run(label, || {
+        round += 1;
+        black_box(trainer.round(round).unwrap())
+    });
+    println!("{}", r.report());
+    r.mean_ns()
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let b = if smoke {
+        Bencher {
+            warmup_iters: 1,
+            samples: 2,
+            iters_per_sample: 1,
+        }
+    } else {
+        Bencher {
+            warmup_iters: 2,
+            samples: 8,
+            iters_per_sample: 1,
+        }
+    };
+    let h = N - N / 10;
+
+    let mut json_root: BTreeMap<String, Json> = BTreeMap::new();
+    json_root.insert("bench".into(), Json::Str("bench_async".into()));
+    json_root.insert("produced_by".into(), Json::Str("rust/benches/bench_async".into()));
+    json_root.insert("units".into(), Json::Str("ns_per_round".into()));
+    json_root.insert("smoke".into(), Json::Bool(smoke));
+    json_root.insert("sweep".into(), Json::Null); // async_jungle fills this
+
+    section(&format!(
+        "async engine overhead (n={N}, s=8, alie, native engine)"
+    ));
+
+    let sync_ns = round_mean_ns(&b, "sync round", &base_cfg("bench_async_sync"));
+
+    let mut neutral = base_cfg("bench_async_neutral");
+    neutral.asyn.quorum = h;
+    let neutral_ns = round_mean_ns(&b, "neutral async round (quorum = h)", &neutral);
+
+    let mut straggler = base_cfg("bench_async_straggler");
+    straggler.asyn = AsyncCfg {
+        quorum: h * 3 / 4,
+        max_staleness: 2,
+        straggler: StragglerKind::TwoPoint,
+        slow_prob: 0.2,
+        slow_latency: 4.0,
+        crash_prob: 0.05,
+        down_rounds: 2,
+        ..AsyncCfg::default()
+    };
+    let straggler_ns = round_mean_ns(&b, "straggler async round (q = 3h/4)", &straggler);
+
+    println!(
+        "  => neutral overhead {:.2}x, straggler {:.2}x vs sync",
+        neutral_ns / sync_ns,
+        straggler_ns / sync_ns
+    );
+
+    let mut timing = BTreeMap::new();
+    timing.insert("n".into(), Json::Num(N as f64));
+    timing.insert("s".into(), Json::Num(8.0));
+    timing.insert("sync_ns".into(), Json::Num(sync_ns));
+    timing.insert("neutral_async_ns".into(), Json::Num(neutral_ns));
+    timing.insert("straggler_async_ns".into(), Json::Num(straggler_ns));
+    timing.insert("neutral_overhead".into(), Json::Num(neutral_ns / sync_ns));
+    timing.insert(
+        "straggler_overhead".into(),
+        Json::Num(straggler_ns / sync_ns),
+    );
+    json_root.insert("timing".into(), Json::Obj(timing));
+
+    match std::fs::write("BENCH_async.json", Json::Obj(json_root).to_string_compact()) {
+        Ok(()) => println!("\nwrote BENCH_async.json"),
+        Err(e) => println!("\ncould not write BENCH_async.json: {e}"),
+    }
+}

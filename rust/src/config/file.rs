@@ -39,7 +39,10 @@
 use std::collections::BTreeMap;
 
 use super::toml::{parse, TomlValue};
-use super::{EngineKind, ExperimentConfig, RuleChoice, Topology, TransportKind};
+use super::{
+    AsyncCfg, EngineKind, ExperimentConfig, RuleChoice, StalePolicyKind, StragglerKind,
+    Topology, TransportKind,
+};
 use crate::aggregation::gossip::GossipRuleKind;
 use crate::aggregation::RuleKind;
 use crate::attacks::AttackKind;
@@ -55,7 +58,7 @@ fn task_from_name(s: &str) -> Option<TaskKind> {
     })
 }
 
-type Doc = BTreeMap<String, TomlValue>;
+pub(crate) type Doc = BTreeMap<String, TomlValue>;
 
 fn get_usize(doc: &Doc, key: &str) -> Result<Option<usize>, String> {
     match doc.get(key) {
@@ -222,8 +225,64 @@ pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
         cfg.eval_every = v.max(1);
     }
 
+    async_from_doc(&doc, &mut cfg.asyn)?;
+
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Apply an `[async]` section onto `asyn` (missing keys keep their
+/// current value). Shared with [`crate::testkit::scenario`], whose named
+/// scenario configs speak the same schema.
+pub(crate) fn async_from_doc(doc: &Doc, asyn: &mut AsyncCfg) -> Result<(), String> {
+    if let Some(v) = get_usize(doc, "async.quorum")? {
+        asyn.quorum = v;
+    }
+    if let Some(v) = get_f64(doc, "async.deadline")? {
+        asyn.deadline = v;
+    }
+    if let Some(v) = get_usize(doc, "async.max_staleness")? {
+        asyn.max_staleness = v;
+    }
+    if let Some(s) = get_str(doc, "async.stale_policy")? {
+        asyn.stale_policy = StalePolicyKind::parse(s)
+            .ok_or_else(|| format!("unknown stale policy '{s}' (carry|decay)"))?;
+    }
+    if let Some(v) = get_f64(doc, "async.stale_decay")? {
+        asyn.stale_decay = v;
+    }
+    if let Some(s) = get_str(doc, "async.straggler")? {
+        asyn.straggler = StragglerKind::parse(s)
+            .ok_or_else(|| format!("unknown straggler kind '{s}' (constant|two_point|lognormal)"))?;
+    }
+    if let Some(v) = get_f64(doc, "async.base_latency")? {
+        asyn.base_latency = v;
+    }
+    if let Some(v) = get_f64(doc, "async.slow_prob")? {
+        asyn.slow_prob = v;
+    }
+    if let Some(v) = get_f64(doc, "async.slow_latency")? {
+        asyn.slow_latency = v;
+    }
+    if let Some(v) = get_f64(doc, "async.sigma")? {
+        asyn.sigma = v;
+    }
+    if let Some(v) = get_f64(doc, "async.crash_prob")? {
+        asyn.crash_prob = v;
+    }
+    if let Some(v) = get_usize(doc, "async.down_rounds")? {
+        asyn.down_rounds = v;
+    }
+    if let Some(v) = get_usize(doc, "async.part_from")? {
+        asyn.part_from = v;
+    }
+    if let Some(v) = get_usize(doc, "async.part_to")? {
+        asyn.part_to = v;
+    }
+    if let Some(v) = get_usize(doc, "async.part_nodes")? {
+        asyn.part_nodes = v;
+    }
+    Ok(())
 }
 
 /// `lr = 0.5` or `lr = [[0, 0.5], [500, 0.1]]`.
@@ -376,7 +435,36 @@ pub fn to_toml_str(cfg: &ExperimentConfig) -> String {
     out.push_str(&format!("samples_per_node = {}\n", cfg.samples_per_node));
     out.push_str(&format!("test_samples = {}\n", cfg.test_samples));
     out.push_str(&format!("eval_every = {}\n", cfg.eval_every));
+
+    // [async] is emitted only when some knob moved off the default: a
+    // synchronous config serializes byte-identically to what it did
+    // before asynchrony existed (worker Init frames included)
+    if cfg.asyn != AsyncCfg::default() {
+        async_to_toml(&mut out, &cfg.asyn);
+    }
     out
+}
+
+/// Append the `[async]` section for `asyn`. Every field is emitted so a
+/// reparse reproduces the value exactly; shared with
+/// [`crate::testkit::scenario`].
+pub(crate) fn async_to_toml(out: &mut String, asyn: &AsyncCfg) {
+    out.push_str("\n[async]\n");
+    out.push_str(&format!("quorum = {}\n", asyn.quorum));
+    out.push_str(&format!("deadline = {}\n", fmt_float(asyn.deadline)));
+    out.push_str(&format!("max_staleness = {}\n", asyn.max_staleness));
+    out.push_str(&format!("stale_policy = \"{}\"\n", asyn.stale_policy.name()));
+    out.push_str(&format!("stale_decay = {}\n", fmt_float(asyn.stale_decay)));
+    out.push_str(&format!("straggler = \"{}\"\n", asyn.straggler.name()));
+    out.push_str(&format!("base_latency = {}\n", fmt_float(asyn.base_latency)));
+    out.push_str(&format!("slow_prob = {}\n", fmt_float(asyn.slow_prob)));
+    out.push_str(&format!("slow_latency = {}\n", fmt_float(asyn.slow_latency)));
+    out.push_str(&format!("sigma = {}\n", fmt_float(asyn.sigma)));
+    out.push_str(&format!("crash_prob = {}\n", fmt_float(asyn.crash_prob)));
+    out.push_str(&format!("down_rounds = {}\n", asyn.down_rounds));
+    out.push_str(&format!("part_from = {}\n", asyn.part_from));
+    out.push_str(&format!("part_to = {}\n", asyn.part_to));
+    out.push_str(&format!("part_nodes = {}\n", asyn.part_nodes));
 }
 
 #[cfg(test)]
@@ -505,6 +593,48 @@ mod tests {
         assert!(from_toml_str("task = \"tiny\"\ntransport = \"telegraph\"").is_err());
     }
 
+    #[test]
+    fn async_section_parsed_with_sync_default() {
+        let cfg = from_toml_str(
+            r#"
+            task = "tiny"
+            [async]
+            quorum = 9
+            deadline = 8.0
+            max_staleness = 2
+            stale_policy = "decay"
+            stale_decay = 0.5
+            straggler = "two_point"
+            slow_prob = 0.2
+            slow_latency = 5.0
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.asyn.is_enabled());
+        assert_eq!(cfg.asyn.quorum, 9);
+        assert_eq!(cfg.asyn.deadline, 8.0);
+        assert_eq!(cfg.asyn.max_staleness, 2);
+        assert_eq!(cfg.asyn.stale_policy, crate::config::StalePolicyKind::Decay);
+        assert_eq!(cfg.asyn.straggler, crate::config::StragglerKind::TwoPoint);
+        assert_eq!(cfg.asyn.slow_prob, 0.2);
+
+        // no [async] section → the synchronous engine, and the shipped
+        // TOML must not grow an [async] section (worker Init frames for
+        // sync runs stay byte-identical to the pre-async wire format)
+        let sync = from_toml_str("task = \"tiny\"").unwrap();
+        assert!(!sync.asyn.is_enabled());
+        assert!(!to_toml_str(&sync).contains("[async]"));
+
+        assert!(
+            from_toml_str("task = \"tiny\"\n[async]\nstale_policy = \"drop\"").is_err(),
+            "unknown stale policy must be rejected"
+        );
+        assert!(
+            from_toml_str("task = \"tiny\"\n[async]\nquorum = 99").is_err(),
+            "quorum past the honest count must be rejected"
+        );
+    }
+
     /// `to_toml_str` is what the coordinator ships to every shard-worker
     /// process: a parse of the output must reproduce the config
     /// field-for-field, or workers would silently build a different world.
@@ -533,11 +663,27 @@ mod tests {
         graph_cfg.alpha = 0.3;
         graph_cfg.seed = 12345;
 
+        let mut async_cfg = crate::config::ExperimentConfig::default_for(TaskKind::Tiny);
+        async_cfg.asyn.quorum = 7;
+        async_cfg.asyn.deadline = 12.5;
+        async_cfg.asyn.max_staleness = 3;
+        async_cfg.asyn.stale_policy = crate::config::StalePolicyKind::Decay;
+        async_cfg.asyn.stale_decay = 0.25;
+        async_cfg.asyn.straggler = crate::config::StragglerKind::LogNormal;
+        async_cfg.asyn.base_latency = 2.0;
+        async_cfg.asyn.sigma = 0.75;
+        async_cfg.asyn.crash_prob = 0.05;
+        async_cfg.asyn.down_rounds = 4;
+        async_cfg.asyn.part_from = 3;
+        async_cfg.asyn.part_to = 6;
+        async_cfg.asyn.part_nodes = 2;
+
         for cfg in [
             presets::quickstart_config(),
             from_toml_str(FULL).unwrap(),
             push_cfg,
             graph_cfg,
+            async_cfg,
         ] {
             let text = to_toml_str(&cfg);
             let back = from_toml_str(&text)

@@ -9,6 +9,8 @@ use crate::aggregation::RuleKind;
 use crate::attacks::AttackKind;
 use crate::data::TaskKind;
 
+pub use crate::util::vclock::{AsyncCfg, StalePolicyKind, StragglerKind};
+
 /// How nodes exchange models.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Topology {
@@ -175,6 +177,14 @@ pub struct ExperimentConfig {
     /// Empty = a unique directory under the system temp dir; either way
     /// a per-run subdirectory is created and removed on teardown.
     pub socket_dir: String,
+    /// Asynchronous-round knobs (`[async]` in TOML; named `asyn` because
+    /// `async` is a Rust keyword): quorum round-close, virtual deadline,
+    /// bounded staleness, straggler distribution, crash/rejoin churn —
+    /// all on the deterministic virtual clock ([`crate::util::vclock`]).
+    /// The default value is the synchronous engine; any fixed async
+    /// config is itself bit-identical across the whole
+    /// (transport × procs × shards × threads) grid.
+    pub asyn: AsyncCfg,
 }
 
 impl ExperimentConfig {
@@ -208,6 +218,7 @@ impl ExperimentConfig {
             procs: 1,
             transport: TransportKind::Pipe,
             socket_dir: String::new(),
+            asyn: AsyncCfg::default(),
         }
     }
 
@@ -324,6 +335,14 @@ impl ExperimentConfig {
         {
             return Err("alpha, weight_decay, and lr values must be finite".into());
         }
+        self.asyn.validate()?;
+        if self.asyn.quorum > self.honest() {
+            return Err(format!(
+                "async.quorum {} exceeds the honest count {}",
+                self.asyn.quorum,
+                self.honest()
+            ));
+        }
         Ok(())
     }
 }
@@ -412,6 +431,17 @@ mod tests {
         assert!(cfg.validate().unwrap_err().contains("procs"));
         cfg.procs = 2;
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_async_misconfig() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.asyn.quorum = cfg.honest() + 1;
+        assert!(cfg.validate().unwrap_err().contains("quorum"));
+        cfg.asyn.quorum = cfg.honest();
+        assert!(cfg.validate().is_ok());
+        cfg.asyn.stale_decay = -0.5;
+        assert!(cfg.validate().unwrap_err().contains("stale_decay"));
     }
 
     #[test]

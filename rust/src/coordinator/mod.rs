@@ -91,6 +91,56 @@
 //! is bit-invisible — a hit returns exactly the bits a miss would
 //! compute — so the grid guarantee (and a cache-on vs cache-off
 //! comparison) holds byte-for-byte.
+//!
+//! # Asynchronous rounds (the `[async]` config section)
+//!
+//! With [`crate::util::vclock::AsyncCfg::is_enabled`], each round is
+//! prefixed by a **virtual-clock** phase. Nothing is measured: every
+//! latency and churn coin is a pure function of
+//! `(seed, round, node, LATENCY|CHURN)`, so the async engine keeps the
+//! full grid guarantee above. The round-close sequence:
+//!
+//! ```text
+//!  coordinator (virtual clock)          backends / workers
+//!  ---------------------------          ------------------
+//!  draw churn coins, latencies
+//!  close = max(q-th arrival, cap
+//!          by deadline if set)
+//!  stale[i] = rounds since node i       AsyncRound{round, stale-slice}
+//!    last made a close (0 = fresh) ───────────▶ (remote shards only)
+//!  HalfStep ─────────────────────────────────▶ every node computes its
+//!                                              half-step (stale ones
+//!                                              too: RNG/momentum state
+//!                                              must stay on-schedule)
+//!                                       serve transform, by row OWNER:
+//!                                        st = 0   → fresh row, record
+//!                                                   as carried snapshot
+//!                                        1…bound  → carried row, aged
+//!                                                   per stale_policy
+//!                                        beyond   → committed params
+//!                                                   (frozen model)
+//!  ◀───────────────────────────────────── Snapshot{losses, served rows}
+//!  digest fold, routes, pull/craft/
+//!  aggregate, commit — unchanged
+//!  non-fresh nodes do NOT commit:       restore pre-round params, zero
+//!  train-loss fold is fresh-only  ◀───── byz-seen/delivered ledgers
+//! ```
+//!
+//! **Staleness policy spec.** A node's *served row* is what its peers
+//! aggregate. `stale == 0`: the fresh half-step, recorded as the carried
+//! snapshot. `1 ≤ stale ≤ max_staleness` with a carried snapshot:
+//! `Carry` serves it verbatim; `Decay` serves
+//! `params + λ^stale · (carried − params)` with `λ^stale` formed by
+//! repeated f64 multiplication. Beyond the bound (or before any snapshot
+//! arrived): the node's committed params. Peers always receive *some*
+//! row, so receive sets, push routes, routing tables and the digest fold
+//! are byte-identical code paths with or without asynchrony — staleness
+//! is a modeled transform of row contents, never a membership change.
+//! Non-fresh nodes also skip the commit (params and ledgers stay at the
+//! pre-round state) while their momentum/RNG streams advance normally,
+//! so `quorum = h` + `max_staleness = 0` + no churn reproduces the
+//! synchronous engine bit-for-bit — `rust/tests/async_rounds.rs` pins
+//! both properties across the transport × procs × shards × threads grid.
 
 pub mod engine;
 pub mod peer;
@@ -111,9 +161,10 @@ use crate::metrics::{EvalPoint, History};
 use crate::runtime::{AggregateExec, Runtime};
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
+use crate::util::vclock::{serve_row, RoundSchedule, VClock};
 use anyhow::{anyhow, bail, Context, Result};
 use shard::{AggCtx, NodeShard, NodeState, ShardBackend, StepCtx};
-use std::time::Instant;
+use std::time::Instant; // lint: wall-clock-exempt (reporting-only wall_secs)
 
 /// Which aggregation backend executes step 4.
 pub(crate) enum AggBackend {
@@ -427,6 +478,18 @@ pub struct Trainer {
     tbl_byz_seen: Vec<usize>,
     /// round table: per-node model rows received in the last round
     tbl_recv: Vec<usize>,
+    /// asynchronous round engine: the deterministic virtual clock
+    /// (`None` ⇒ classic synchronous lockstep — see the module docs)
+    vclock: Option<VClock>,
+    /// per honest node: last fresh snapshot (the async serve state;
+    /// used on the in-process path only — worker processes keep their
+    /// own carried rows)
+    carried: Vec<Option<Vec<f32>>>,
+    /// async ledgers for the last round: fresh honest nodes, virtual
+    /// close time, and the per-node staleness slice
+    last_round_participation: u32,
+    last_round_vclose: f64,
+    last_round_stale: Vec<u32>,
 }
 
 impl Trainer {
@@ -546,6 +609,14 @@ impl Trainer {
             tbl_losses: vec![0.0f64; h],
             tbl_byz_seen: vec![0usize; h],
             tbl_recv: vec![0usize; h],
+            vclock: cfg
+                .asyn
+                .is_enabled()
+                .then(|| VClock::new(&cfg.asyn, cfg.seed, h)),
+            carried: vec![None; h],
+            last_round_participation: 0,
+            last_round_vclose: 0.0,
+            last_round_stale: Vec::new(),
             engine,
             agg,
             attack,
@@ -618,8 +689,14 @@ impl Trainer {
 
     /// Run the full training; returns the metric history.
     pub fn run(&mut self) -> Result<History> {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // lint: wall-clock-exempt (reporting only)
         let mut hist = History::new(&self.cfg.name, self.cfg.messages_per_round());
+        let async_on = self.vclock.is_some();
+        if async_on {
+            // bucket k counts node-rounds served at staleness k; the last
+            // bucket (max_staleness + 1) is the params-fallback regime
+            hist.staleness_hist = vec![0u64; self.cfg.asyn.max_staleness + 2];
+        }
         for round in 0..self.cfg.rounds {
             let loss = self.round(round)?;
             hist.train_loss.push(loss);
@@ -630,6 +707,13 @@ impl Trainer {
             hist.wire_coord_out_per_round.push(self.last_round_wire.0 as usize);
             hist.wire_coord_in_per_round.push(self.last_round_wire.1 as usize);
             hist.wire_peer_per_round.push(self.last_round_wire.2 as usize);
+            if async_on {
+                hist.participation_per_round.push(self.last_round_participation);
+                hist.virtual_close_per_round.push(self.last_round_vclose);
+                for &st in &self.last_round_stale {
+                    hist.staleness_hist[st as usize] += 1;
+                }
+            }
             let last = round + 1 == self.cfg.rounds;
             if last || (round + 1) % self.cfg.eval_every == 0 {
                 hist.evals.push(self.evaluate(round + 1)?);
@@ -644,8 +728,18 @@ impl Trainer {
     /// Every phase is bit-deterministic for any (procs × shards ×
     /// threads) grid point — see the module docs for the protocol.
     pub fn round(&mut self, round: usize) -> Result<f64> {
-        // 1. local half-steps (Algorithm 1 lines 3–6)
-        let loss = self.phase_half_steps(round)?;
+        // 0. async engine only: resolve the virtual-clock schedule and
+        // ship each worker its staleness slice (None ⇒ synchronous)
+        let sched = self.phase_async_begin(round)?;
+        // 1. local half-steps (Algorithm 1 lines 3–6) — stale nodes
+        // compute too (discarded): their RNG/momentum state must stay
+        // on-schedule for the bit-identical neutral-config guarantee
+        let mut loss = self.phase_half_steps(round)?;
+        // 1b. async: apply the served-row policy to the published table
+        // and restrict the loss fold to fresh nodes
+        if let Some(sched) = sched.as_ref() {
+            loss = self.phase_async_serve(sched);
+        }
         // 2. fold the published rows into the global honest digest the
         // omniscient adversary conditions on
         self.phase_attack_context();
@@ -655,9 +749,114 @@ impl Trainer {
         // 4. pull, attack, aggregate — against the immutable round table
         // (synchronous model)
         self.phase_pull_craft_aggregate(round, push_recv.as_deref())?;
-        // 5. synchronous swap, backend by backend; fold the telemetry
+        // 5. synchronous swap, backend by backend; fold the telemetry.
+        // Async: non-fresh nodes do not commit — their params and
+        // ledgers return to the pre-round state (workers handle their
+        // own slices; the in-process path saves/restores here)
+        let saved = self.phase_async_pre_commit(sched.as_ref());
         self.phase_commit()?;
+        self.phase_async_post_commit(saved);
         Ok(loss)
+    }
+
+    /// Phase 0 (async engine only): advance the virtual clock, stash the
+    /// round ledgers, and ship every remote backend its slice of the
+    /// staleness schedule.
+    fn phase_async_begin(&mut self, round: usize) -> Result<Option<RoundSchedule>> {
+        let Some(vc) = self.vclock.as_mut() else {
+            return Ok(None);
+        };
+        // virtual rounds are 1-based: "last fresh at 0" means never
+        let sched = vc.advance(round as u64 + 1);
+        self.last_round_participation = sched.participation();
+        self.last_round_vclose = sched.close;
+        self.last_round_stale = sched.stale.clone();
+        for backend in self.backends.iter_mut() {
+            let (start, len) = (backend.start(), backend.len());
+            backend.begin_round_async(round, &sched.stale[start..start + len])?;
+        }
+        Ok(Some(sched))
+    }
+
+    /// Phase 1b (async): transform each published row per the staleness
+    /// policy (in-process path — worker processes transform their own
+    /// rows before shipping their snapshots, so with remote backends the
+    /// table already holds served rows) and fold the fresh-only loss.
+    fn phase_async_serve(&mut self, sched: &RoundSchedule) -> f64 {
+        if self.local_backends {
+            for (i, &st) in sched.stale.iter().enumerate() {
+                serve_row(
+                    &self.cfg.asyn,
+                    st,
+                    &mut self.tbl_halves[i],
+                    &mut self.carried[i],
+                    &self.tbl_params[i],
+                );
+            }
+        }
+        // serial fresh-only fold in ascending honest order; with every
+        // node fresh this is exactly the synchronous sum/h
+        let mut sum = 0.0f64;
+        let mut fresh = 0usize;
+        for (i, &st) in sched.stale.iter().enumerate() {
+            if st == 0 {
+                sum += self.tbl_losses[i];
+                fresh += 1;
+            }
+        }
+        if fresh == 0 {
+            0.0
+        } else {
+            sum / fresh as f64
+        }
+    }
+
+    /// Async, in-process path: zero the non-fresh nodes' round ledgers
+    /// and save their pre-round params so [`Self::phase_async_post_commit`]
+    /// can undo the commit. Remote workers restore and zero their own
+    /// slices before `RoundDone`, so nothing is saved for them here.
+    fn phase_async_pre_commit(
+        &mut self,
+        sched: Option<&RoundSchedule>,
+    ) -> Option<Vec<(usize, Vec<f32>)>> {
+        let sched = sched?;
+        if !self.local_backends {
+            return None;
+        }
+        let mut saved = Vec::new();
+        for (i, &st) in sched.stale.iter().enumerate() {
+            if st != 0 {
+                self.tbl_byz_seen[i] = 0;
+                self.tbl_recv[i] = 0;
+                saved.push((i, self.tbl_params[i].clone()));
+            }
+        }
+        Some(saved)
+    }
+
+    /// Async, in-process path: a non-fresh node does not commit — its
+    /// params return to the pre-round state, both in the mirror and in
+    /// the owning shard's node state (momentum keeps advancing: the
+    /// half-step ran, only its result is discarded).
+    fn phase_async_post_commit(&mut self, saved: Option<Vec<(usize, Vec<f32>)>>) {
+        let Some(saved) = saved else { return };
+        for (i, row) in &saved {
+            self.tbl_params[*i].copy_from_slice(row);
+        }
+        let mut it = saved.iter().peekable();
+        for backend in self.backends.iter_mut() {
+            let (start, len) = (backend.start(), backend.len());
+            let shard = backend
+                .as_node_shard()
+                .expect("local backends are NodeShards");
+            while let Some((i, row)) = it.peek() {
+                if *i >= start + len {
+                    break;
+                }
+                shard.nodes[*i - start].params.copy_from_slice(row);
+                it.next();
+            }
+        }
     }
 
     /// Phase 1: every honest node's local train step. Remote backends are
@@ -1135,6 +1334,57 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn neutral_async_config_is_bit_identical_to_sync() {
+        let cfg = quick_cfg();
+        let mut t_sync = Trainer::from_config(&cfg).unwrap();
+        let sync = t_sync.run().unwrap();
+        // quorum = h with every other knob default: the async machinery
+        // runs (schedule, serve transform, fresh-only folds) but must
+        // reproduce the synchronous engine bit-for-bit
+        let mut acfg = quick_cfg();
+        acfg.asyn.quorum = acfg.honest();
+        let mut t_async = Trainer::from_config(&acfg).unwrap();
+        let asy = t_async.run().unwrap();
+        assert_eq!(sync.train_loss, asy.train_loss);
+        assert_eq!(sync.observed_byz_max, asy.observed_byz_max);
+        assert_eq!(sync.total_delivered, asy.total_delivered);
+        for i in 0..t_sync.honest_count() {
+            assert_eq!(t_sync.params_of(i), t_async.params_of(i), "node {i}");
+        }
+        let h = acfg.honest() as u32;
+        assert_eq!(asy.participation_per_round, vec![h; acfg.rounds]);
+        assert!(sync.participation_per_round.is_empty(), "sync runs keep no async ledgers");
+    }
+
+    #[test]
+    fn straggler_run_is_reproducible_and_keeps_ledgers() {
+        let mut cfg = quick_cfg();
+        cfg.asyn.quorum = 5;
+        cfg.asyn.max_staleness = 2;
+        cfg.asyn.stale_policy = crate::config::StalePolicyKind::Decay;
+        cfg.asyn.straggler = crate::config::StragglerKind::TwoPoint;
+        cfg.asyn.slow_prob = 0.35;
+        cfg.asyn.crash_prob = 0.1;
+        let a = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let b = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(a.train_loss, b.train_loss, "modeled asynchrony is deterministic");
+        assert_eq!(a.participation_per_round, b.participation_per_round);
+        assert_eq!(a.virtual_close_per_round, b.virtual_close_per_round);
+        assert_eq!(a.staleness_hist, b.staleness_hist);
+        // ledger shape: one close/participation entry per round, one
+        // histogram increment per honest node per round
+        assert_eq!(a.participation_per_round.len(), cfg.rounds);
+        assert_eq!(a.virtual_close_per_round.len(), cfg.rounds);
+        assert_eq!(a.staleness_hist.len(), cfg.asyn.max_staleness + 2);
+        let total: u64 = a.staleness_hist.iter().sum();
+        assert_eq!(total, (cfg.rounds * cfg.honest()) as u64);
+        let fresh: u64 = a.participation_per_round.iter().map(|&p| p as u64).sum();
+        assert_eq!(a.staleness_hist[0], fresh);
+        // slow_prob 0.35 with quorum 5/7 over 12 rounds must straggle
+        assert!(a.staleness_hist[1..].iter().sum::<u64>() > 0);
     }
 
     #[test]

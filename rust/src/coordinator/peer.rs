@@ -251,6 +251,19 @@ impl PeerClient {
         (self.entries[w].0, self.entries[w].1)
     }
 
+    /// Drop every cached peer connection: the next [`fetch`] to each
+    /// owner re-dials and re-identifies with a fresh `PeerHello`. This is
+    /// the rejoin path — a worker that crashed and came back (or healed
+    /// from a partition) re-handshakes exactly like a first contact, and
+    /// the `Hello` bytes land in that fetch's ledger delta.
+    ///
+    /// [`fetch`]: PeerClient::fetch
+    pub fn reset_conns(&mut self) {
+        for conn in self.conns.iter_mut() {
+            *conn = None;
+        }
+    }
+
     fn ensure_conn(&mut self, owner: usize) -> Result<&mut PeerConn> {
         if self.conns[owner].is_none() {
             let mut transport = SocketTransport::connect(&self.entries[owner].2)?;

@@ -66,6 +66,18 @@
 //! instead of O(h·d) — which the per-round bytes ledger in
 //! [`crate::metrics::History`] measures.
 //!
+//! # Asynchronous rounds
+//!
+//! When the asynchronous engine is enabled (`[async]` config section),
+//! the coordinator prepends an `AsyncRound{t, stale}` frame — the
+//! virtual-clock staleness schedule for this worker's owned range —
+//! before each `HalfStep`. The worker applies the served-row staleness
+//! policy to its own rows *before* publishing them to the `RowServer`
+//! and before encoding the `Snapshot` (so both transports serve the same
+//! bytes), and discards the committed update of every non-fresh row
+//! (params restored, DoS/receive counters zeroed) before `RoundDone`.
+//! See [`super`] module docs for the full round-close sequence.
+//!
 //! A worker that dies mid-round surfaces as an actionable error on the
 //! coordinator (EOF / connection reset with the worker's exit status),
 //! and a peer that dies mid-pull surfaces on the *pulling* worker (which
@@ -82,6 +94,7 @@ use crate::config::{file as config_file, ExperimentConfig, TransportKind};
 use crate::coordinator::{ComputeEngine, PullSampler};
 use crate::testkit::chaos::{ChaosPlan, ChaosTransport};
 use crate::util::pool::WorkerPool;
+use crate::util::vclock::serve_row;
 use crate::wire::proto::{self, FromWorker, PeerEntry, PeerMsg, ToWorker};
 use crate::wire::transport::{Listener, PipeTransport, SockAddr, SocketTransport, Transport};
 use anyhow::{bail, ensure, Context, Result};
@@ -90,7 +103,7 @@ use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant}; // lint: wall-clock-exempt (worker-spawn deadline only)
 
 /// Process-wide worker-binary override for tests. A `OnceLock` instead of
 /// `std::env::set_var`: mutating the environment races with concurrent
@@ -155,6 +168,7 @@ fn request_name(msg: &ToWorker) -> &'static str {
         ToWorker::Aggregate { .. } => "Aggregate",
         ToWorker::Peers { .. } => "Peers",
         ToWorker::AggregateRouted { .. } => "AggregateRouted",
+        ToWorker::AsyncRound { .. } => "AsyncRound",
         ToWorker::Shutdown => "Shutdown",
     }
 }
@@ -335,7 +349,7 @@ impl ProcessShard {
         // accept + identify: PeerHello carries the worker index and the
         // address of the worker's own pull listener
         listener.set_nonblocking(true)?;
-        let deadline = Instant::now() + CONNECT_DEADLINE;
+        let deadline = Instant::now() + CONNECT_DEADLINE; // lint: wall-clock-exempt
         let mut conns: Vec<Option<SocketTransport>> = (0..ranges.len()).map(|_| None).collect();
         let mut listens: Vec<String> = vec![String::new(); ranges.len()];
         let accept_result = (|| -> Result<()> {
@@ -349,7 +363,7 @@ impl ProcessShard {
                         // bypass the deadline: bound the PeerHello read by
                         // the time remaining, then restore blocking reads
                         let remaining = deadline
-                            .saturating_duration_since(Instant::now())
+                            .saturating_duration_since(Instant::now()) // lint: wall-clock-exempt
                             .max(Duration::from_millis(10));
                         t.set_read_timeout(Some(remaining))?;
                         let frame = t
@@ -381,7 +395,7 @@ impl ProcessShard {
                             }
                         }
                         ensure!(
-                            Instant::now() < deadline,
+                            Instant::now() < deadline, // lint: wall-clock-exempt
                             "timed out waiting for {} shard workers to connect at {coord_addr}",
                             ranges.len() - accepted
                         );
@@ -529,6 +543,12 @@ impl ShardBackend for ProcessShard {
 
     fn len(&self) -> usize {
         self.len
+    }
+
+    fn begin_round_async(&mut self, round: usize, stale: &[u32]) -> Result<()> {
+        // ships the schedule ahead of HalfStep; the frame's bytes land in
+        // the per-round wire ledger like any other control traffic
+        self.send(&proto::encode_async_round(round as u64, stale))
     }
 
     fn half_step_begin(&mut self, round: usize) -> Result<()> {
@@ -766,6 +786,14 @@ struct WorkerShard {
     byz_seen: Vec<usize>,
     received: Vec<usize>,
     params_scratch: Vec<Vec<f32>>,
+    /// async engine: the half-step each owned node last served while
+    /// fresh (the coordinator's `carried` twin for this range)
+    carried: Vec<Option<Vec<f32>>>,
+    /// async engine: this round's staleness schedule for the owned range
+    /// (0 = fresh), shipped by `AsyncRound` ahead of each `HalfStep`
+    cur_stale: Vec<u32>,
+    /// round the `cur_stale` schedule belongs to
+    stale_round: Option<u64>,
     /// round-scoped honest↔honest distance memo for this worker's
     /// victims (the per-shard twin of the coordinator's cache; cleared
     /// at the top of every aggregate phase). Bit-invisible by the
@@ -815,6 +843,9 @@ impl WorkerShard {
             byz_seen: vec![0usize; len],
             received: vec![0usize; len],
             params_scratch: vec![vec![0.0f32; d]; len],
+            carried: vec![None; len],
+            cur_stale: vec![0u32; len],
+            stale_round: None,
             dist_cache: crate::aggregation::DistCache::new(),
             cfg: world.cfg,
         })
@@ -830,7 +861,49 @@ impl WorkerShard {
             batch: self.engine.batch(),
         };
         self.shard
-            .half_step(&ctx, &self.pool, &mut self.halves, &mut self.losses)
+            .half_step(&ctx, &self.pool, &mut self.halves, &mut self.losses)?;
+        if self.cfg.asyn.is_enabled() {
+            // the schedule must have arrived ahead of this HalfStep — a
+            // missing or mismatched AsyncRound means the coordinator and
+            // worker disagree about the round structure
+            ensure!(
+                self.stale_round == Some(round as u64),
+                "HalfStep for round {round} without a matching AsyncRound \
+                 schedule (have {:?})",
+                self.stale_round
+            );
+            // owner-side served-row transform, BEFORE RowServer publish
+            // and Snapshot encode: both transports serve the same bytes
+            for (i, &st) in self.cur_stale.iter().enumerate() {
+                serve_row(
+                    &self.cfg.asyn,
+                    st,
+                    &mut self.halves[i],
+                    &mut self.carried[i],
+                    &self.shard.nodes[i].params,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Async engine: discard the committed update of every non-fresh
+    /// node — the virtual clock says its round-`t` work never arrived,
+    /// so params stay at the pre-round value and the node's DoS/receive
+    /// counters read zero (exactly what the coordinator's in-process
+    /// path does after its own commit).
+    fn async_discard_stale(&mut self) {
+        if !self.cfg.asyn.is_enabled() {
+            return;
+        }
+        for (i, &st) in self.cur_stale.iter().enumerate() {
+            if st != 0 {
+                let params = &self.shard.nodes[i].params;
+                self.shard.next[i].copy_from_slice(params);
+                self.byz_seen[i] = 0;
+                self.received[i] = 0;
+            }
+        }
     }
 
     /// Phases 3–5 against the full broadcast table (pipe transport).
@@ -886,6 +959,7 @@ impl WorkerShard {
             &mut self.byz_seen,
             &mut self.received,
         )?;
+        self.async_discard_stale();
         self.shard.commit_into(&mut self.params_scratch);
         Ok(())
     }
@@ -985,6 +1059,7 @@ impl WorkerShard {
             &mut self.byz_seen,
             &mut self.received,
         )?;
+        self.async_discard_stale();
         self.shard.commit_into(&mut self.params_scratch);
         Ok(peer_bytes)
     }
@@ -1099,6 +1174,20 @@ fn run_worker_loop<T: Transport>(conn: &mut T, peer_listener: Option<Listener>) 
             }
             ToWorker::Peers { .. } => {
                 bail!("shard worker: Peers on the pipe transport (no pull listener)")
+            }
+            ToWorker::AsyncRound { round, stale } => {
+                // fire-and-forget schedule ahead of HalfStep — no reply
+                if stale.len() != state.shard.shard_len() {
+                    let msg = format!(
+                        "AsyncRound schedule has {} entries, expected {}",
+                        stale.len(),
+                        state.shard.shard_len()
+                    );
+                    let _ = conn.send(&proto::encode_failed(&msg));
+                    bail!("shard worker: {msg}");
+                }
+                state.cur_stale = stale;
+                state.stale_round = Some(round);
             }
             ToWorker::HalfStep { round } => match state.half_step(round as usize) {
                 Ok(()) => {

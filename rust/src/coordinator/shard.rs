@@ -133,6 +133,13 @@ pub(crate) trait ShardBackend: Send {
     fn start(&self) -> usize;
     /// Number of owned honest nodes.
     fn len(&self) -> usize;
+    /// Async engine only: ship the round's virtual-clock staleness
+    /// schedule for this backend's owned range (remote: send the
+    /// `AsyncRound` frame before `HalfStep`; local: no-op — the
+    /// coordinator applies the served-row policy to its own tables).
+    fn begin_round_async(&mut self, _round: usize, _stale: &[u32]) -> Result<()> {
+        Ok(())
+    }
     /// Kick off phase 1 (remote: send the request; local: no-op).
     fn half_step_begin(&mut self, round: usize) -> Result<()>;
     /// Complete phase 1: fill this backend's slices of the half-step

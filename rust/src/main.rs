@@ -13,7 +13,8 @@
 
 use rpel::cli::Args;
 use rpel::config::presets::{self, Scale};
-use rpel::config::{file as config_file, EngineKind, TransportKind};
+use rpel::config::{file as config_file, EngineKind, StalePolicyKind, StragglerKind, TransportKind};
+use rpel::testkit::scenario::Scenario;
 use rpel::experiments;
 use rpel::metrics::write_histories;
 use rpel::sampling::select_params;
@@ -31,6 +32,14 @@ USAGE:
               [--transport pipe|socket|tcp]  (worker wire; same results.
                 socket/tcp = worker-served pulls, no O(h·d) table broadcast)
               [--socket-dir DIR]  (unix-socket directory; default temp)
+              [--scenario NAME]   (named [async] scenario: straggler_twopoint|
+                straggler_lognormal|crash_recover|partition_heal)
+              [--quorum N] [--deadline T] [--max-staleness K]
+              [--stale-policy carry|decay] [--stale-decay L]
+              [--straggler constant|two_point|lognormal]
+              [--crash-prob P] [--down-rounds N]
+                (async round engine on a deterministic virtual clock;
+                 quorum = honest count reproduces synchronous runs)
   rpel figure --id <fig1L|fig1R|...|fig21|all> [--scale tiny|paper]
               [--engine hlo|native] [--out results] [--threads N] [--shards N]
               [--procs N] [--transport pipe|socket|tcp]
@@ -107,6 +116,15 @@ fn cmd_train(args: &Args) -> CmdResult {
         "procs",
         "transport",
         "socket-dir",
+        "scenario",
+        "quorum",
+        "deadline",
+        "max-staleness",
+        "stale-policy",
+        "stale-decay",
+        "straggler",
+        "crash-prob",
+        "down-rounds",
     ])?;
     let mut cfg = if let Some(path) = args.get("config") {
         config_file::load(path)?
@@ -156,10 +174,67 @@ fn cmd_train(args: &Args) -> CmdResult {
     if let Some(dir) = args.get("socket-dir") {
         cfg.socket_dir = dir.to_string();
     }
+    apply_async_flags(args, &mut cfg)?;
     let hist = experiments::run_training(&cfg)?;
     let out = args.get_or("out", "results");
     let paths = write_histories(&format!("{out}/train"), &[hist])?;
     println!("wrote {}", paths.join(", "));
+    Ok(())
+}
+
+/// Apply the async round-engine flags: a named `--scenario` first (a
+/// whole `[async]` section at once), then per-knob overrides on top.
+/// Re-validates the combined config whenever anything async changed.
+fn apply_async_flags(args: &Args, cfg: &mut rpel::config::ExperimentConfig) -> CmdResult {
+    let mut touched = false;
+    if let Some(name) = args.get("scenario") {
+        let scenario = Scenario::named(name).ok_or_else(|| {
+            format!(
+                "unknown scenario '{name}' (try straggler_twopoint|\
+                 straggler_lognormal|crash_recover|partition_heal)"
+            )
+        })?;
+        cfg.asyn = scenario.asyn;
+        touched = true;
+    }
+    if let Some(q) = args.get_usize("quorum")? {
+        cfg.asyn.quorum = q;
+        touched = true;
+    }
+    if let Some(t) = args.get_f64("deadline")? {
+        cfg.asyn.deadline = t;
+        touched = true;
+    }
+    if let Some(k) = args.get_usize("max-staleness")? {
+        cfg.asyn.max_staleness = k;
+        touched = true;
+    }
+    if let Some(p) = args.get("stale-policy") {
+        cfg.asyn.stale_policy = StalePolicyKind::parse(p)
+            .ok_or_else(|| format!("unknown stale policy '{p}' (carry|decay)"))?;
+        touched = true;
+    }
+    if let Some(l) = args.get_f64("stale-decay")? {
+        cfg.asyn.stale_decay = l;
+        touched = true;
+    }
+    if let Some(s) = args.get("straggler") {
+        cfg.asyn.straggler = StragglerKind::parse(s).ok_or_else(|| {
+            format!("unknown straggler kind '{s}' (constant|two_point|lognormal)")
+        })?;
+        touched = true;
+    }
+    if let Some(p) = args.get_f64("crash-prob")? {
+        cfg.asyn.crash_prob = p;
+        touched = true;
+    }
+    if let Some(r) = args.get_usize("down-rounds")? {
+        cfg.asyn.down_rounds = r;
+        touched = true;
+    }
+    if touched {
+        cfg.validate()?;
+    }
     Ok(())
 }
 

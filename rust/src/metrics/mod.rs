@@ -50,6 +50,18 @@ pub struct History {
     pub wire_coord_out_per_round: Vec<usize>,
     pub wire_coord_in_per_round: Vec<usize>,
     pub wire_peer_per_round: Vec<usize>,
+    /// Async-round ledgers (populated only when the `[async]` config is
+    /// live; empty for synchronous runs). Per round: how many honest
+    /// nodes made the quorum close (fresh), and the virtual time the
+    /// round closed at. `staleness_hist[k]` counts node-rounds served at
+    /// staleness `k` over the whole run (bucket `max_staleness + 1` is
+    /// the params-fallback regime), so the buckets sum to
+    /// `rounds × h`. All three are recomputable from the counter-keyed
+    /// latency/churn streams alone — `rust/tests/async_rounds.rs` pins
+    /// them byte-exact against that independent recomputation.
+    pub participation_per_round: Vec<u32>,
+    pub virtual_close_per_round: Vec<f64>,
+    pub staleness_hist: Vec<u64>,
     /// wall-clock seconds of the run (perf bookkeeping)
     pub wall_secs: f64,
 }
@@ -140,6 +152,33 @@ impl History {
         obj.insert(
             "wire_peer_per_round".into(),
             bytes_arr(&self.wire_peer_per_round),
+        );
+        obj.insert(
+            "participation_per_round".into(),
+            Json::Arr(
+                self.participation_per_round
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "virtual_close_per_round".into(),
+            Json::Arr(
+                self.virtual_close_per_round
+                    .iter()
+                    .map(|&x| Json::Num(x))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "staleness_hist".into(),
+            Json::Arr(
+                self.staleness_hist
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
         );
         obj.insert("wall_secs".into(), Json::Num(self.wall_secs));
         obj.insert(
@@ -300,6 +339,40 @@ mod tests {
         ] {
             assert_eq!(parsed.get(key).unwrap().as_arr().unwrap().len(), 3, "{key}");
         }
+    }
+
+    #[test]
+    fn async_ledgers_exported() {
+        let mut h = sample();
+        h.participation_per_round = vec![6, 7, 5];
+        h.virtual_close_per_round = vec![1.0, 4.0, 1.0];
+        h.staleness_hist = vec![18, 2, 1];
+        let parsed = crate::util::json::parse(&h.to_json().to_string_compact()).unwrap();
+        assert_eq!(
+            parsed
+                .get("participation_per_round")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            3
+        );
+        assert_eq!(
+            parsed
+                .get("virtual_close_per_round")
+                .unwrap()
+                .as_arr()
+                .unwrap()[1]
+                .as_f64()
+                .unwrap(),
+            4.0
+        );
+        assert_eq!(
+            parsed.get("staleness_hist").unwrap().as_arr().unwrap()[0]
+                .as_f64()
+                .unwrap(),
+            18.0
+        );
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Property-testing mini-harness (the offline crate set lacks proptest),
-//! plus the deterministic transport fault injector ([`chaos`]).
+//! plus the deterministic transport fault injector ([`chaos`]) and the
+//! named asynchrony scenarios ([`scenario`]) the scenario test tier runs.
 //!
 //! A [`forall`] runner drives a generator against a property over many
 //! seeded cases; on failure it performs greedy shrinking (halving vectors,
@@ -16,6 +17,7 @@
 //! ```
 
 pub mod chaos;
+pub mod scenario;
 
 use crate::util::rng::Rng;
 

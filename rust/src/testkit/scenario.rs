@@ -1,0 +1,174 @@
+//! Named asynchrony scenarios for the scenario-grade test tier.
+//!
+//! A [`Scenario`] is a reusable `[async]` configuration with a name:
+//! stragglers, crash/rejoin churn, a partition that heals. Scenarios
+//! round-trip through TOML **exactly** (the serializer is the same one
+//! the coordinator uses to ship configs to shard workers), so a scenario
+//! pinned in a test is the same scenario a user can put in a config
+//! file. `rust/tests/scenario_chaos.rs` drives every named scenario
+//! end-to-end and checks the runs converge, stay bit-reproducible, and
+//! keep their ledgers consistent.
+
+use crate::config::file::{async_from_doc, async_to_toml};
+use crate::config::toml::parse;
+use crate::config::{AsyncCfg, ExperimentConfig, StalePolicyKind, StragglerKind};
+
+/// A named `[async]` configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub asyn: AsyncCfg,
+}
+
+impl Scenario {
+    /// Look up a built-in scenario by name.
+    pub fn named(name: &str) -> Option<Scenario> {
+        Scenario::all().into_iter().find(|s| s.name == name)
+    }
+
+    /// Every built-in scenario. Quorums are sized for the small worlds
+    /// the scenario tests run (honest count ≥ 10); `apply` + `validate`
+    /// rejects a scenario that asks for more arrivals than a config's
+    /// honest population can produce.
+    pub fn all() -> Vec<Scenario> {
+        vec![
+            // two-point stragglers: most nodes fast, a slow minority;
+            // the round closes on the quorum, slow nodes carry forward
+            Scenario {
+                name: "straggler_twopoint".into(),
+                asyn: AsyncCfg {
+                    quorum: 7,
+                    max_staleness: 2,
+                    straggler: StragglerKind::TwoPoint,
+                    slow_prob: 0.3,
+                    slow_latency: 4.0,
+                    ..AsyncCfg::default()
+                },
+            },
+            // heavy-tailed lognormal stragglers with decayed stale rows
+            Scenario {
+                name: "straggler_lognormal".into(),
+                asyn: AsyncCfg {
+                    quorum: 8,
+                    max_staleness: 3,
+                    stale_policy: StalePolicyKind::Decay,
+                    stale_decay: 0.5,
+                    straggler: StragglerKind::LogNormal,
+                    sigma: 0.5,
+                    ..AsyncCfg::default()
+                },
+            },
+            // crash/rejoin churn: nodes drop for `down_rounds` rounds
+            // and rejoin; constant latency isolates the churn effect
+            Scenario {
+                name: "crash_recover".into(),
+                asyn: AsyncCfg {
+                    quorum: 6,
+                    max_staleness: 2,
+                    crash_prob: 0.15,
+                    down_rounds: 2,
+                    ..AsyncCfg::default()
+                },
+            },
+            // a partition takes out a node block mid-run, then heals
+            Scenario {
+                name: "partition_heal".into(),
+                asyn: AsyncCfg {
+                    quorum: 6,
+                    max_staleness: 3,
+                    part_from: 2,
+                    part_to: 5,
+                    part_nodes: 3,
+                    ..AsyncCfg::default()
+                },
+            },
+        ]
+    }
+
+    /// Serialize as TOML: a `name` key plus the same `[async]` section
+    /// [`crate::config::file::to_toml_str`] emits.
+    pub fn to_toml_str(&self) -> String {
+        let mut out = format!("name = \"{}\"\n", self.name);
+        async_to_toml(&mut out, &self.asyn);
+        out
+    }
+
+    /// Parse a scenario back from TOML. `from_toml_str(to_toml_str(s))`
+    /// must reproduce `s` field-for-field (pinned per scenario in
+    /// `rust/tests/scenario_chaos.rs`).
+    pub fn from_toml_str(text: &str) -> Result<Scenario, String> {
+        let doc = parse(text).map_err(|e| e.to_string())?;
+        let name = doc
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| "scenario is missing a 'name' string".to_string())?
+            .to_string();
+        let mut asyn = AsyncCfg::default();
+        async_from_doc(&doc, &mut asyn)?;
+        asyn.validate()?;
+        Ok(Scenario { name, asyn })
+    }
+
+    /// Install this scenario's `[async]` section on a config. The
+    /// combined config is re-validated (a quorum larger than the
+    /// config's honest population is rejected here, not at run time).
+    pub fn apply(&self, cfg: &mut ExperimentConfig) -> Result<(), String> {
+        cfg.asyn = self.asyn.clone();
+        cfg.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskKind;
+
+    #[test]
+    fn every_builtin_scenario_is_enabled_and_valid() {
+        let all = Scenario::all();
+        assert_eq!(all.len(), 4);
+        for s in &all {
+            assert!(s.asyn.is_enabled(), "{} must enable the async engine", s.name);
+            s.asyn.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        }
+    }
+
+    #[test]
+    fn named_lookup_finds_each_scenario_once() {
+        for s in Scenario::all() {
+            assert_eq!(Scenario::named(&s.name), Some(s.clone()));
+        }
+        assert_eq!(Scenario::named("no_such_scenario"), None);
+    }
+
+    #[test]
+    fn toml_round_trip_is_exact() {
+        for s in Scenario::all() {
+            let text = s.to_toml_str();
+            let back = Scenario::from_toml_str(&text)
+                .unwrap_or_else(|e| panic!("{}: reparse failed: {e}\n---\n{text}", s.name));
+            assert_eq!(back, s, "round-trip mismatch for:\n{text}");
+        }
+    }
+
+    #[test]
+    fn apply_installs_and_validates() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        let s = Scenario::named("crash_recover").unwrap();
+        s.apply(&mut cfg).unwrap();
+        assert_eq!(cfg.asyn, s.asyn);
+
+        // a quorum past the honest population must be rejected on apply
+        let mut tiny = ExperimentConfig::default_for(TaskKind::Tiny);
+        tiny.n = 6;
+        tiny.b = 1;
+        let too_big = Scenario {
+            name: "overquorum".into(),
+            asyn: AsyncCfg {
+                quorum: 9,
+                ..AsyncCfg::default()
+            },
+        };
+        assert!(too_big.apply(&mut tiny).is_err());
+    }
+}

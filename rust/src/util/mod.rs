@@ -10,4 +10,5 @@ pub mod pool;
 pub mod rng;
 pub mod special;
 pub mod stats;
+pub mod vclock;
 pub mod vecmath;

@@ -35,6 +35,15 @@ pub mod stream_tag {
     /// a pure function of `(seed, op_index, 0, CHAOS)`, so every chaotic
     /// failure reproduces from its seed.
     pub const CHAOS: u64 = 0x53;
+    /// Virtual-clock compute latency of one node in one round
+    /// ([`crate::util::vclock`]): the straggler distribution draws its
+    /// uniform from `(seed, round, node, LATENCY)`, so the asynchronous
+    /// round schedule is a pure function of the experiment seed.
+    pub const LATENCY: u64 = 0x54;
+    /// Churn schedule ([`crate::util::vclock`]): the per-round
+    /// crash/rejoin coin of one node is the first draw of
+    /// `(seed, round, node, CHURN)`.
+    pub const CHURN: u64 = 0x55;
 }
 
 /// Xoshiro256++ PRNG (Blackman & Vigna), seeded through SplitMix64.

@@ -105,6 +105,24 @@ pub fn inverse_normal_cdf(p: f64) -> f64 {
     }
 }
 
+/// Standard-normal CDF Φ via the Abramowitz & Stegun 7.1.26 erf
+/// approximation (|ε| ≤ 1.5e-7) — the analytic reference the straggler
+/// sampler's KS test compares the inverse-CDF lognormal draws against.
+pub fn normal_cdf(x: f64) -> f64 {
+    // erf on t = |x|/sqrt(2), then fold the sign back in
+    let z = x.abs() / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.327_591_1 * z);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    let erf = 1.0 - poly * (-z * z).exp();
+    if x >= 0.0 {
+        0.5 * (1.0 + erf)
+    } else {
+        0.5 * (1.0 - erf)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +213,37 @@ mod tests {
     #[should_panic]
     fn inverse_normal_rejects_boundary() {
         inverse_normal_cdf(0.0);
+    }
+
+    #[test]
+    fn normal_cdf_known_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((normal_cdf(1.0) - 0.841_344_746).abs() < 1.5e-7);
+        assert!((normal_cdf(-1.0) - 0.158_655_254).abs() < 1.5e-7);
+        assert!((normal_cdf(1.959_964) - 0.975).abs() < 1e-6);
+        assert!(normal_cdf(8.0) > 1.0 - 1e-9);
+        assert!(normal_cdf(-8.0) < 1e-9);
+    }
+
+    #[test]
+    fn normal_cdf_inverts_acklam() {
+        // Φ(Φ⁻¹(p)) ≈ p across the body and both tails, within the
+        // combined error budget of the two approximations
+        for p in [0.001, 0.02425, 0.1, 0.3, 0.5, 0.7, 0.9, 0.99, 0.999] {
+            let back = normal_cdf(inverse_normal_cdf(p));
+            assert!((back - p).abs() < 1e-6, "p={p} back={back}");
+        }
+    }
+
+    #[test]
+    fn normal_cdf_monotone_and_symmetric() {
+        let mut prev = 0.0;
+        for i in -40..=40 {
+            let x = i as f64 / 10.0;
+            let c = normal_cdf(x);
+            assert!(c >= prev, "x={x}");
+            assert!((c + normal_cdf(-x) - 1.0).abs() < 1e-9, "x={x}");
+            prev = c;
+        }
     }
 }

@@ -1,0 +1,671 @@
+//! Deterministic virtual clock for asynchronous rounds.
+//!
+//! Real fleets are heterogeneous and flaky; wall clocks are not
+//! reproducible. This module models both straggling and churn on a
+//! **virtual** clock whose every tick is a pure function of the
+//! experiment seed: node `i`'s compute latency in round `t` is drawn from
+//! a configurable straggler distribution via
+//! `Rng::stream(seed, t, i, LATENCY)`, its crash/rejoin coin from
+//! `Rng::stream(seed, t, i, CHURN)`. The coordinator closes the round at
+//! the virtual time the configured quorum of non-down honest nodes has
+//! arrived (optionally capped by a virtual deadline), and every node that
+//! missed the cut is *stale*: its published row is served under the
+//! bounded-staleness policy below instead of its fresh half-step.
+//!
+//! ## Staleness policy (the modeled knob)
+//!
+//! For an honest node with staleness `st` in the current round
+//! (`st = round − last round its snapshot arrived`, saturated at
+//! `max_staleness + 1`):
+//!
+//! * `st == 0` — fresh: its half-step row is served unchanged and
+//!   recorded as the node's *carried* snapshot.
+//! * `1 ≤ st ≤ max_staleness` (carried snapshot available) — the carried
+//!   row is integrated, aged per [`StalePolicyKind`]:
+//!   - `Carry`: served verbatim (a late snapshot is still a snapshot);
+//!   - `Decay`: served as `params + λ^st · (carried − params)` — the
+//!     stale direction shrinks toward the node's committed params with
+//!     one factor of `λ` per round of age. `λ^st` is computed by
+//!     repeated `f64` multiplication (never `powi`) and applied in
+//!     `f32`, so the served bits are a pure function of
+//!     `(policy, λ, st, carried, params)`.
+//! * otherwise (too stale, or no snapshot ever arrived) — the node's
+//!   committed params are served: peers see its frozen model, never a
+//!   dropped row, so receive sets, routing tables and message budgets
+//!   are untouched by asynchrony.
+//!
+//! A node that is not fresh also does not *commit*: its aggregation
+//! result is discarded and its params/ledgers stay at the pre-round
+//! state, exactly as if the round closed without it. Because staleness
+//! is modeled (bit-exact serve transform) rather than measured (FP
+//! noise), a fixed async config is bit-identical across the whole
+//! transport × procs × shards × threads grid, and the neutral config
+//! (`quorum = h`, `max_staleness = 0`, no churn, constant latency)
+//! reproduces synchronous runs bit-for-bit.
+//!
+//! ## Churn
+//!
+//! With `crash_prob > 0`, each round every honest node draws one uniform
+//! from its CHURN stream; a node that is currently up crashes when the
+//! draw falls below `crash_prob` and stays down for `down_rounds`
+//! rounds. A partition window (`part_from ≤ round < part_to`) forces the
+//! first `part_nodes` honest nodes down for its duration. Down nodes are
+//! modeled as infinite-latency stragglers: they never make the quorum,
+//! their rows age like any straggler's, and on rejoin they are simply
+//! fresh again — no special-cased protocol state.
+
+use crate::util::rng::{stream_tag, Rng};
+
+/// Per-round compute-latency distribution of the virtual clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StragglerKind {
+    /// Every node takes `base_latency` exactly (no draws).
+    Constant,
+    /// With probability `slow_prob` a node takes `slow_latency`,
+    /// otherwise `base_latency` — the classic slow-node model.
+    TwoPoint,
+    /// `base_latency · exp(σ · Φ⁻¹(u))` by inverse-CDF sampling — a
+    /// lognormal latency with log-scale σ.
+    LogNormal,
+}
+
+impl StragglerKind {
+    pub fn parse(s: &str) -> Option<StragglerKind> {
+        match s {
+            "constant" => Some(StragglerKind::Constant),
+            "two_point" | "twopoint" => Some(StragglerKind::TwoPoint),
+            "lognormal" | "log_normal" => Some(StragglerKind::LogNormal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StragglerKind::Constant => "constant",
+            StragglerKind::TwoPoint => "two_point",
+            StragglerKind::LogNormal => "lognormal",
+        }
+    }
+}
+
+/// How a stale-but-within-bound carried snapshot is integrated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StalePolicyKind {
+    /// Serve the carried snapshot verbatim.
+    Carry,
+    /// Shrink the carried direction toward committed params by one
+    /// factor of `stale_decay` per round of age.
+    Decay,
+}
+
+impl StalePolicyKind {
+    pub fn parse(s: &str) -> Option<StalePolicyKind> {
+        match s {
+            "carry" => Some(StalePolicyKind::Carry),
+            "decay" => Some(StalePolicyKind::Decay),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StalePolicyKind::Carry => "carry",
+            StalePolicyKind::Decay => "decay",
+        }
+    }
+}
+
+/// Asynchronous-round knobs (the `[async]` TOML section). The all-default
+/// value means "synchronous": [`AsyncCfg::is_enabled`] is false and the
+/// round engine takes its classic lockstep path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncCfg {
+    /// Honest snapshots required to close a round; 0 means "all honest"
+    /// (and, with every other knob at default, asynchrony off).
+    pub quorum: usize,
+    /// Virtual-time cap on the round close; 0 disables the cap. When the
+    /// quorum has not arrived by the deadline the round closes anyway
+    /// with fewer fresh nodes.
+    pub deadline: f64,
+    /// Rounds a late snapshot may age before peers fall back to the
+    /// node's committed params.
+    pub max_staleness: usize,
+    /// Integration rule for stale-but-within-bound snapshots.
+    pub stale_policy: StalePolicyKind,
+    /// λ for [`StalePolicyKind::Decay`].
+    pub stale_decay: f64,
+    /// Latency distribution.
+    pub straggler: StragglerKind,
+    /// Baseline per-round compute latency (virtual units).
+    pub base_latency: f64,
+    /// TwoPoint: probability of a slow round.
+    pub slow_prob: f64,
+    /// TwoPoint: latency of a slow round.
+    pub slow_latency: f64,
+    /// LogNormal: log-scale σ.
+    pub sigma: f64,
+    /// Per-round crash probability of an up node; 0 disables churn.
+    pub crash_prob: f64,
+    /// Rounds a crashed node stays down before rejoining.
+    pub down_rounds: usize,
+    /// Partition window: rounds `[part_from, part_to)` force the first
+    /// `part_nodes` honest nodes down.
+    pub part_from: usize,
+    pub part_to: usize,
+    pub part_nodes: usize,
+}
+
+impl Default for AsyncCfg {
+    fn default() -> Self {
+        AsyncCfg {
+            quorum: 0,
+            deadline: 0.0,
+            max_staleness: 0,
+            stale_policy: StalePolicyKind::Carry,
+            stale_decay: 0.5,
+            straggler: StragglerKind::Constant,
+            base_latency: 1.0,
+            slow_prob: 0.1,
+            slow_latency: 4.0,
+            sigma: 0.5,
+            crash_prob: 0.0,
+            down_rounds: 2,
+            part_from: 0,
+            part_to: 0,
+            part_nodes: 0,
+        }
+    }
+}
+
+impl AsyncCfg {
+    /// Whether any knob moves the engine off the synchronous path. Note
+    /// `quorum = h` counts as enabled: the async machinery runs (and is
+    /// pinned bit-identical to the synchronous engine).
+    pub fn is_enabled(&self) -> bool {
+        self.quorum != 0
+            || self.deadline > 0.0
+            || self.max_staleness != 0
+            || self.crash_prob > 0.0
+            || self.part_to > self.part_from
+            || self.straggler != StragglerKind::Constant
+    }
+
+    /// Range/finiteness validation (the experiment-level `quorum ≤ h`
+    /// check lives in `ExperimentConfig::validate`, which knows h).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.deadline.is_finite() || self.deadline < 0.0 {
+            return Err(format!("async.deadline must be finite and >= 0, got {}", self.deadline));
+        }
+        if !self.stale_decay.is_finite() || !(0.0..=1.0).contains(&self.stale_decay) {
+            return Err(format!("async.stale_decay must be in [0,1], got {}", self.stale_decay));
+        }
+        if !self.base_latency.is_finite() || self.base_latency <= 0.0 {
+            return Err(format!("async.base_latency must be finite and > 0, got {}", self.base_latency));
+        }
+        if !self.slow_prob.is_finite() || !(0.0..=1.0).contains(&self.slow_prob) {
+            return Err(format!("async.slow_prob must be in [0,1], got {}", self.slow_prob));
+        }
+        if !self.slow_latency.is_finite() || self.slow_latency <= 0.0 {
+            return Err(format!("async.slow_latency must be finite and > 0, got {}", self.slow_latency));
+        }
+        if !self.sigma.is_finite() || self.sigma < 0.0 {
+            return Err(format!("async.sigma must be finite and >= 0, got {}", self.sigma));
+        }
+        if !self.crash_prob.is_finite() || !(0.0..=1.0).contains(&self.crash_prob) {
+            return Err(format!("async.crash_prob must be in [0,1], got {}", self.crash_prob));
+        }
+        if self.crash_prob > 0.0 && self.down_rounds == 0 {
+            return Err("async.down_rounds must be >= 1 when crash_prob > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// One round's resolved schedule: who arrived, who is down, how stale
+/// every honest node's served row is, and the virtual close time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundSchedule {
+    pub round: u64,
+    /// Virtual time the round closed (0.0 when no node could arrive).
+    pub close: f64,
+    /// Per honest node: snapshot arrived by the close.
+    pub fresh: Vec<bool>,
+    /// Per honest node: crashed or partitioned away this round.
+    pub down: Vec<bool>,
+    /// Per honest node: rounds since its snapshot last arrived,
+    /// saturated at `max_staleness + 1` (0 = fresh; the saturation value
+    /// = params fallback). This is exactly the slice shipped to shard
+    /// workers and the staleness-histogram bucket index.
+    pub stale: Vec<u32>,
+}
+
+impl RoundSchedule {
+    /// Number of fresh honest nodes (the participation ledger entry).
+    pub fn participation(&self) -> u32 {
+        self.stale.iter().filter(|&&s| s == 0).count() as u32
+    }
+}
+
+/// Draw one node's compute latency for one round — a pure function of
+/// the key, exposed for the independent-recomputation tests.
+pub fn sample_latency(cfg: &AsyncCfg, seed: u64, round: u64, node: u64) -> f64 {
+    match cfg.straggler {
+        StragglerKind::Constant => cfg.base_latency,
+        StragglerKind::TwoPoint => {
+            let u = Rng::stream(seed, round, node, stream_tag::LATENCY).f64();
+            if u < cfg.slow_prob {
+                cfg.slow_latency
+            } else {
+                cfg.base_latency
+            }
+        }
+        StragglerKind::LogNormal => {
+            // f64() ∈ [0,1); clamp away from 0 (Φ⁻¹ rejects the boundary)
+            let u = Rng::stream(seed, round, node, stream_tag::LATENCY)
+                .f64()
+                .max(1e-12);
+            cfg.base_latency * (cfg.sigma * crate::util::special::inverse_normal_cdf(u)).exp()
+        }
+    }
+}
+
+/// λ^stale by repeated multiplication: `powi` is not guaranteed to be
+/// correctly rounded, a plain product of f64s is — the served bits must
+/// be reproducible everywhere.
+pub fn decay_weight(lambda: f64, stale: u32) -> f32 {
+    let mut w = 1.0f64;
+    for _ in 0..stale {
+        w *= lambda;
+    }
+    w as f32
+}
+
+/// Apply the staleness policy to one honest node's published row, in
+/// place. `half` enters as the node's current half-step and leaves as
+/// the row its peers will actually see; `carried` is the node's last
+/// fresh snapshot (refreshed here when `stale == 0`); `params` are its
+/// committed params (the too-stale fallback). Shared verbatim by the
+/// in-process trainer and the shard-worker processes so both serve
+/// bit-identical rows.
+pub fn serve_row(
+    cfg: &AsyncCfg,
+    stale: u32,
+    half: &mut Vec<f32>,
+    carried: &mut Option<Vec<f32>>,
+    params: &[f32],
+) {
+    if stale == 0 {
+        match carried {
+            Some(c) => c.copy_from_slice(half),
+            None => *carried = Some(half.clone()),
+        }
+        return;
+    }
+    match carried {
+        Some(c) if (stale as usize) <= cfg.max_staleness => match cfg.stale_policy {
+            StalePolicyKind::Carry => half.copy_from_slice(c),
+            StalePolicyKind::Decay => {
+                let wf = decay_weight(cfg.stale_decay, stale);
+                for ((h, &cv), &p) in half.iter_mut().zip(c.iter()).zip(params) {
+                    *h = p + wf * (cv - p);
+                }
+            }
+        },
+        _ => half.copy_from_slice(params),
+    }
+}
+
+/// The virtual clock itself: owns the churn state (`down_until`) and the
+/// arrival history (`last_fresh`), and resolves one [`RoundSchedule`]
+/// per round. Lives on the coordinator only — workers receive their
+/// stale slice over the wire.
+#[derive(Clone, Debug)]
+pub struct VClock {
+    cfg: AsyncCfg,
+    seed: u64,
+    h: usize,
+    /// First round index at which the node is up again (exclusive bound
+    /// of its down window); 0 = never crashed.
+    down_until: Vec<u64>,
+    /// Last round the node's snapshot arrived; 0 = never (rounds are
+    /// 1-based).
+    last_fresh: Vec<u64>,
+}
+
+impl VClock {
+    pub fn new(cfg: &AsyncCfg, seed: u64, h: usize) -> VClock {
+        VClock {
+            cfg: cfg.clone(),
+            seed,
+            h,
+            down_until: vec![0; h],
+            last_fresh: vec![0; h],
+        }
+    }
+
+    /// Resolve round `round` (1-based, strictly increasing across calls).
+    pub fn advance(&mut self, round: u64) -> RoundSchedule {
+        let h = self.h;
+        let cfg = &self.cfg;
+        // churn coins: one CHURN draw per node per round; an up node
+        // crashes when its coin lands below crash_prob
+        if cfg.crash_prob > 0.0 {
+            for i in 0..h {
+                let u = Rng::stream(self.seed, round, i as u64, stream_tag::CHURN).f64();
+                if u < cfg.crash_prob && round >= self.down_until[i] {
+                    self.down_until[i] = round + cfg.down_rounds as u64;
+                }
+            }
+        }
+        let in_partition = (round as usize) >= cfg.part_from && (round as usize) < cfg.part_to;
+        let down: Vec<bool> = (0..h)
+            .map(|i| round < self.down_until[i] || (in_partition && i < cfg.part_nodes))
+            .collect();
+        let lat: Vec<f64> = (0..h)
+            .map(|i| {
+                if down[i] {
+                    f64::INFINITY
+                } else {
+                    sample_latency(cfg, self.seed, round, i as u64)
+                }
+            })
+            .collect();
+        // close at the quorum-th arrival among non-down nodes, capped by
+        // the deadline when one is set
+        let mut alive: Vec<f64> = lat.iter().copied().filter(|l| l.is_finite()).collect();
+        alive.sort_unstable_by(f64::total_cmp);
+        let q = if cfg.quorum == 0 { h } else { cfg.quorum };
+        let q_eff = q.min(alive.len());
+        let mut close = if q_eff == 0 { 0.0 } else { alive[q_eff - 1] };
+        if cfg.deadline > 0.0 {
+            close = close.min(cfg.deadline);
+        }
+        let fresh: Vec<bool> = (0..h).map(|i| !down[i] && lat[i] <= close).collect();
+        let cap = cfg.max_staleness as u64 + 1;
+        let stale: Vec<u32> = (0..h)
+            .map(|i| {
+                if fresh[i] {
+                    self.last_fresh[i] = round;
+                    0
+                } else {
+                    (round - self.last_fresh[i]).min(cap) as u32
+                }
+            })
+            .collect();
+        RoundSchedule {
+            round,
+            close,
+            fresh,
+            down,
+            stale,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AsyncCfg {
+        AsyncCfg::default()
+    }
+
+    #[test]
+    fn default_is_disabled_and_valid() {
+        let c = cfg();
+        assert!(!c.is_enabled());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn any_moved_knob_enables() {
+        for f in [
+            (|c: &mut AsyncCfg| c.quorum = 10) as fn(&mut AsyncCfg),
+            |c| c.deadline = 2.0,
+            |c| c.max_staleness = 1,
+            |c| c.crash_prob = 0.1,
+            |c| c.part_to = 3,
+            |c| c.straggler = StragglerKind::TwoPoint,
+        ] {
+            let mut c = cfg();
+            f(&mut c);
+            assert!(c.is_enabled(), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_ranges() {
+        for f in [
+            (|c: &mut AsyncCfg| c.deadline = -1.0) as fn(&mut AsyncCfg),
+            |c| c.deadline = f64::NAN,
+            |c| c.stale_decay = 1.5,
+            |c| c.base_latency = 0.0,
+            |c| c.slow_prob = -0.1,
+            |c| c.slow_latency = f64::INFINITY,
+            |c| c.sigma = -1.0,
+            |c| c.crash_prob = 2.0,
+            |c| {
+                c.crash_prob = 0.5;
+                c.down_rounds = 0;
+            },
+        ] {
+            let mut c = cfg();
+            f(&mut c);
+            assert!(c.validate().is_err(), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn neutral_schedule_everyone_fresh() {
+        // quorum = h, constant latency: the synchronous-equivalent config
+        let mut c = cfg();
+        c.quorum = 8;
+        let mut vc = VClock::new(&c, 7, 8);
+        for round in 1..=5u64 {
+            let s = vc.advance(round);
+            assert_eq!(s.close, 1.0);
+            assert!(s.fresh.iter().all(|&f| f));
+            assert!(s.down.iter().all(|&d| !d));
+            assert!(s.stale.iter().all(|&st| st == 0));
+            assert_eq!(s.participation(), 8);
+        }
+    }
+
+    #[test]
+    fn schedules_are_reproducible() {
+        let mut c = cfg();
+        c.quorum = 5;
+        c.max_staleness = 2;
+        c.straggler = StragglerKind::TwoPoint;
+        c.slow_prob = 0.3;
+        c.crash_prob = 0.1;
+        let run = |seed| {
+            let mut vc = VClock::new(&c, seed, 9);
+            (1..=20u64).map(|r| vc.advance(r)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11), run(12));
+    }
+
+    #[test]
+    fn two_point_quorum_close_picks_qth_latency() {
+        let mut c = cfg();
+        c.quorum = 6;
+        c.max_staleness = 1;
+        c.straggler = StragglerKind::TwoPoint;
+        c.slow_prob = 0.4;
+        let mut vc = VClock::new(&c, 3, 10);
+        let mut saw_partial = false;
+        for round in 1..=30u64 {
+            let s = vc.advance(round);
+            let slow = (0..10)
+                .filter(|&i| sample_latency(&c, 3, round, i) == c.slow_latency)
+                .count();
+            if slow <= 10 - c.quorum {
+                // quorum reachable on fast nodes: close = base, only
+                // fast nodes fresh
+                assert_eq!(s.close, c.base_latency, "round {round}");
+                assert_eq!(s.participation() as usize, 10 - slow);
+                if slow > 0 {
+                    saw_partial = true;
+                }
+            } else {
+                // the quorum-th arrival is a slow node: everyone makes it
+                assert_eq!(s.close, c.slow_latency, "round {round}");
+                assert_eq!(s.participation(), 10);
+            }
+        }
+        assert!(saw_partial, "slow_prob=0.4 over 30 rounds must straggle");
+    }
+
+    #[test]
+    fn deadline_caps_close() {
+        let mut c = cfg();
+        c.quorum = 4;
+        c.deadline = 2.0;
+        c.max_staleness = 1;
+        c.straggler = StragglerKind::TwoPoint;
+        c.slow_prob = 1.0; // every node slow (latency 4 > deadline 2)
+        let mut vc = VClock::new(&c, 1, 4);
+        let s = vc.advance(1);
+        assert_eq!(s.close, 2.0);
+        assert_eq!(s.participation(), 0);
+        assert!(s.stale.iter().all(|&st| st == 1));
+    }
+
+    #[test]
+    fn staleness_ages_and_saturates() {
+        let mut c = cfg();
+        c.quorum = 1;
+        c.max_staleness = 2;
+        c.part_from = 1;
+        c.part_to = 5;
+        c.part_nodes = 1; // node 0 down rounds 1..4
+        let mut vc = VClock::new(&c, 5, 3);
+        let stales: Vec<u32> = (1..=6u64).map(|r| vc.advance(r).stale[0]).collect();
+        // never fresh before round 5: ages 1,2,3 then saturates at
+        // max_staleness+1 = 3; fresh again from round 5
+        assert_eq!(stales, vec![1, 2, 3, 3, 0, 0]);
+    }
+
+    #[test]
+    fn churn_crashes_and_rejoins() {
+        let mut c = cfg();
+        c.quorum = 2;
+        c.max_staleness = 1;
+        c.crash_prob = 0.25;
+        c.down_rounds = 2;
+        let mut vc = VClock::new(&c, 42, 6);
+        let mut crashed = 0u32;
+        let mut rejoined = 0u32;
+        let mut prev_down = vec![false; 6];
+        for round in 1..=60u64 {
+            let s = vc.advance(round);
+            for i in 0..6 {
+                if s.down[i] && !prev_down[i] {
+                    crashed += 1;
+                }
+                if !s.down[i] && prev_down[i] {
+                    rejoined += 1;
+                }
+            }
+            prev_down = s.down;
+        }
+        assert!(crashed > 10, "crash_prob=0.25 over 60 rounds: {crashed}");
+        assert!(rejoined > 10, "down_rounds=2 must rejoin: {rejoined}");
+    }
+
+    #[test]
+    fn all_down_closes_at_zero_with_nobody_fresh() {
+        let mut c = cfg();
+        c.quorum = 2;
+        c.max_staleness = 1;
+        c.part_from = 1;
+        c.part_to = 2;
+        c.part_nodes = 4;
+        let mut vc = VClock::new(&c, 9, 4);
+        let s = vc.advance(1);
+        assert_eq!(s.close, 0.0);
+        assert_eq!(s.participation(), 0);
+        assert!(s.down.iter().all(|&d| d));
+    }
+
+    #[test]
+    fn decay_weight_is_repeated_multiplication() {
+        assert_eq!(decay_weight(0.5, 0), 1.0);
+        assert_eq!(decay_weight(0.5, 1), 0.5);
+        assert_eq!(decay_weight(0.5, 3), 0.125);
+        let mut w = 1.0f64;
+        for _ in 0..7 {
+            w *= 0.3;
+        }
+        assert_eq!(decay_weight(0.3, 7), w as f32);
+    }
+
+    #[test]
+    fn serve_row_policies() {
+        let mut c = cfg();
+        c.max_staleness = 2;
+        let params = vec![1.0f32, 1.0];
+
+        // fresh: row untouched, carried refreshed
+        let mut half = vec![3.0f32, 5.0];
+        let mut carried = None;
+        serve_row(&c, 0, &mut half, &mut carried, &params);
+        assert_eq!(half, vec![3.0, 5.0]);
+        assert_eq!(carried.as_deref(), Some(&[3.0f32, 5.0][..]));
+
+        // stale within bound, Carry: carried served verbatim
+        let mut half = vec![9.0f32, 9.0];
+        serve_row(&c, 1, &mut half, &mut carried, &params);
+        assert_eq!(half, vec![3.0, 5.0]);
+
+        // stale within bound, Decay: params + λ^st (carried − params)
+        c.stale_policy = StalePolicyKind::Decay;
+        c.stale_decay = 0.5;
+        let mut half = vec![9.0f32, 9.0];
+        serve_row(&c, 2, &mut half, &mut carried, &params);
+        assert_eq!(half, vec![1.0 + 0.25 * 2.0, 1.0 + 0.25 * 4.0]);
+
+        // beyond max_staleness: committed params served
+        let mut half = vec![9.0f32, 9.0];
+        serve_row(&c, 3, &mut half, &mut carried, &params);
+        assert_eq!(half, params);
+
+        // no carried snapshot yet: params even within the bound
+        let mut half = vec![9.0f32, 9.0];
+        let mut none = None;
+        serve_row(&c, 1, &mut half, &mut none, &params);
+        assert_eq!(half, params);
+    }
+
+    #[test]
+    fn lognormal_latency_is_positive_and_spread() {
+        let mut c = cfg();
+        c.straggler = StragglerKind::LogNormal;
+        c.sigma = 0.5;
+        let draws: Vec<f64> = (0..200)
+            .map(|r| sample_latency(&c, 77, r, 0))
+            .collect();
+        assert!(draws.iter().all(|&l| l > 0.0 && l.is_finite()));
+        let above = draws.iter().filter(|&&l| l > c.base_latency).count();
+        // median of the lognormal is base_latency: both sides populated
+        assert!(above > 50 && above < 150, "above-median count {above}");
+    }
+
+    #[test]
+    fn parse_names_round_trip() {
+        for k in [
+            StragglerKind::Constant,
+            StragglerKind::TwoPoint,
+            StragglerKind::LogNormal,
+        ] {
+            assert_eq!(StragglerKind::parse(k.name()), Some(k));
+        }
+        for p in [StalePolicyKind::Carry, StalePolicyKind::Decay] {
+            assert_eq!(StalePolicyKind::parse(p.name()), Some(p));
+        }
+        assert_eq!(StragglerKind::parse("bogus"), None);
+        assert_eq!(StalePolicyKind::parse("bogus"), None);
+    }
+}

@@ -67,7 +67,9 @@ use anyhow::{bail, Result};
 /// (`Init`/`InitOk` on the control channel, `PeerHello` peer-side).
 /// v2: socket transport — `PeerHello`/`Peers`/`AggregateRouted`/
 /// `PullRequest`/`PullReply`; `RoundDone` gained `peer_bytes`.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// v3: asynchronous rounds — `AsyncRound` carries the virtual-clock
+/// staleness schedule ahead of each `HalfStep` when `[async]` is live.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 mod tag {
     pub const INIT: u8 = 0x01;
@@ -76,6 +78,7 @@ mod tag {
     pub const SHUTDOWN: u8 = 0x04;
     pub const PEERS: u8 = 0x05;
     pub const AGGREGATE_ROUTED: u8 = 0x06;
+    pub const ASYNC_ROUND: u8 = 0x07;
     pub const PEER_HELLO: u8 = 0x40;
     pub const PULL_REQUEST: u8 = 0x41;
     pub const PULL_REPLY: u8 = 0x42;
@@ -98,6 +101,14 @@ pub enum ToWorker {
     },
     /// Run phase 1 (local half-steps) for round `round`.
     HalfStep { round: u64 },
+    /// Virtual-clock schedule for round `round` (async engine only; sent
+    /// before `HalfStep`): per owned honest node (ascending), its
+    /// staleness — 0 = fresh this round, `k ≥ 1` = last fresh `k` rounds
+    /// ago, capped at `max_staleness + 1` (beyond the bound). The worker
+    /// applies the served-row policy to its own rows before publishing
+    /// its snapshot and discards non-fresh aggregation results after
+    /// commit.
+    AsyncRound { round: u64, stale: Vec<u32> },
     /// Phases 3–5 (pipe transport): the folded honest digest plus the
     /// full half-step table (h rows, ascending honest order) to serve
     /// pulls from.
@@ -249,6 +260,14 @@ pub fn encode_half_step(round: u64) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_u8(tag::HALF_STEP);
     w.put_u64(round);
+    w.into_bytes()
+}
+
+pub fn encode_async_round(round: u64, stale: &[u32]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::ASYNC_ROUND);
+    w.put_u64(round);
+    w.put_u32s(stale);
     w.into_bytes()
 }
 
@@ -464,6 +483,7 @@ pub fn encode_to_worker(msg: &ToWorker) -> Vec<u8> {
             procs,
         } => encode_init(config_toml, *worker, *procs),
         ToWorker::HalfStep { round } => encode_half_step(*round),
+        ToWorker::AsyncRound { round, stale } => encode_async_round(*round, stale),
         ToWorker::Aggregate {
             round,
             digest,
@@ -525,6 +545,10 @@ pub fn decode_to_worker(buf: &[u8]) -> Result<ToWorker> {
             }
         }
         tag::HALF_STEP => ToWorker::HalfStep { round: r.u64()? },
+        tag::ASYNC_ROUND => ToWorker::AsyncRound {
+            round: r.u64()?,
+            stale: r.u32s()?,
+        },
         tag::AGGREGATE => {
             let round = r.u64()?;
             let digest = read_digest(&mut r)?;
@@ -640,6 +664,10 @@ mod tests {
                 procs: 3,
             },
             ToWorker::HalfStep { round: 42 },
+            ToWorker::AsyncRound {
+                round: 42,
+                stale: vec![0, 3, 1, 0],
+            },
             ToWorker::Aggregate {
                 round: 7,
                 digest: WireDigest {

@@ -1,0 +1,353 @@
+//! The asynchronous round engine on its deterministic virtual clock:
+//!
+//! * **neutral equivalence** — `quorum = h`, `max_staleness = 0`, no
+//!   churn, constant latency must reproduce the synchronous engine **bit
+//!   for bit**, across the whole transport × procs × shards × threads
+//!   grid (asynchrony off is not a separate code path's luck; it is the
+//!   async engine collapsing to lockstep);
+//! * **grid invariance** — a genuinely asynchronous config (stragglers,
+//!   bounded staleness, churn) is itself bit-identical across the same
+//!   grid and across repeat runs: staleness is *modeled* on counter-keyed
+//!   streams, never measured off a wall clock;
+//! * **ledger recomputation** — the participation, virtual-close and
+//!   staleness-histogram ledgers equal an independent recomputation from
+//!   the public `(seed, round, node, LATENCY/CHURN)` streams, byte-exact
+//!   (the `message_accounting.rs` idiom applied to the virtual clock).
+
+use rpel::attacks::AttackKind;
+use rpel::config::{AsyncCfg, ExperimentConfig, StalePolicyKind, StragglerKind, Topology, TransportKind};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+use rpel::metrics::History;
+use rpel::util::rng::{stream_tag, Rng};
+use rpel::util::vclock::sample_latency;
+
+const ROUNDS: usize = 10;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.n = 12;
+    cfg.b = 2;
+    cfg.topology = Topology::Epidemic { s: 6 };
+    cfg.bhat = Some(2);
+    cfg.attack = AttackKind::Alie;
+    cfg.rounds = ROUNDS;
+    cfg.batch = 8;
+    cfg.samples_per_node = 48;
+    cfg.test_samples = 96;
+    cfg.eval_every = 5;
+    cfg
+}
+
+/// A config that actually exercises stragglers, decay and churn.
+fn async_cfg() -> ExperimentConfig {
+    let mut cfg = base_cfg();
+    cfg.asyn = AsyncCfg {
+        quorum: 5,
+        max_staleness: 2,
+        stale_policy: StalePolicyKind::Decay,
+        stale_decay: 0.5,
+        straggler: StragglerKind::TwoPoint,
+        slow_prob: 0.35,
+        slow_latency: 4.0,
+        crash_prob: 0.1,
+        down_rounds: 2,
+        ..AsyncCfg::default()
+    };
+    cfg
+}
+
+fn run_collect(cfg: &ExperimentConfig) -> (History, Vec<Vec<f32>>) {
+    let mut t = Trainer::from_config(cfg).unwrap();
+    let hist = t.run().unwrap();
+    let params: Vec<Vec<f32>> = (0..t.honest_count())
+        .map(|i| t.params_of(i).to_vec())
+        .collect();
+    (hist, params)
+}
+
+/// Exact equality of the training outcome: losses, evals, message
+/// ledgers, final models. Wire-byte ledgers are deliberately NOT
+/// compared — the async engine ships one extra `AsyncRound` frame per
+/// worker per round, which is a protocol cost, not a training
+/// divergence.
+fn assert_bit_identical(label: &str, a: &(History, Vec<Vec<f32>>), b: &(History, Vec<Vec<f32>>)) {
+    let bits64 = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits64(&a.0.train_loss),
+        bits64(&b.0.train_loss),
+        "{label}: train_loss"
+    );
+    assert_eq!(
+        a.0.observed_byz_max, b.0.observed_byz_max,
+        "{label}: observed_byz_max"
+    );
+    assert_eq!(a.0.total_messages, b.0.total_messages, "{label}: messages");
+    assert_eq!(
+        a.0.delivered_per_round, b.0.delivered_per_round,
+        "{label}: delivered_per_round"
+    );
+    assert_eq!(a.0.evals.len(), b.0.evals.len(), "{label}: eval count");
+    for (ea, eb) in a.0.evals.iter().zip(&b.0.evals) {
+        assert_eq!(ea.round, eb.round, "{label}: eval round");
+        assert_eq!(
+            ea.avg_acc.to_bits(),
+            eb.avg_acc.to_bits(),
+            "{label}: avg_acc @ {}",
+            ea.round
+        );
+    }
+    assert_eq!(a.1.len(), b.1.len(), "{label}: node count");
+    for (i, (pa, pb)) in a.1.iter().zip(&b.1).enumerate() {
+        let ba: Vec<u32> = pa.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = pb.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ba, bb, "{label}: params of honest node {i}");
+    }
+}
+
+/// Async-engine ledgers must also match exactly across the grid.
+fn assert_ledgers_identical(label: &str, a: &History, b: &History) {
+    assert_eq!(
+        a.participation_per_round, b.participation_per_round,
+        "{label}: participation ledger"
+    );
+    let bits64 = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits64(&a.virtual_close_per_round),
+        bits64(&b.virtual_close_per_round),
+        "{label}: virtual-close ledger"
+    );
+    assert_eq!(a.staleness_hist, b.staleness_hist, "{label}: staleness histogram");
+}
+
+fn enable_worker_bin() {
+    rpel::coordinator::proc::set_worker_bin(env!("CARGO_BIN_EXE_rpel"));
+}
+
+/// The (transport × procs × shards × threads) grid every async property
+/// must hold on. transport only matters with worker processes, so the
+/// pipe/socket split rides the procs=2 points.
+fn grid() -> Vec<(TransportKind, usize, usize, usize)> {
+    let mut out = Vec::new();
+    for &shards in &[1usize, 3] {
+        for &threads in &[1usize, 4] {
+            out.push((TransportKind::Pipe, 1, shards, threads));
+            out.push((TransportKind::Pipe, 2, shards, threads));
+            out.push((TransportKind::Socket, 2, shards, threads));
+        }
+    }
+    out
+}
+
+#[test]
+fn neutral_async_grid_reproduces_sync_bit_for_bit() {
+    enable_worker_bin();
+    let sync = run_collect(&base_cfg());
+    assert!(
+        sync.0.participation_per_round.is_empty(),
+        "sync runs must not record async ledgers"
+    );
+
+    let h = base_cfg().n - base_cfg().b;
+    for (transport, procs, shards, threads) in grid() {
+        let mut cfg = base_cfg();
+        cfg.asyn.quorum = h; // neutral: every honest node makes the cut
+        cfg.transport = transport;
+        cfg.procs = procs;
+        cfg.shards = shards;
+        cfg.threads = threads;
+        let got = run_collect(&cfg);
+        assert_bit_identical(
+            &format!("neutral {transport:?} procs={procs} shards={shards} threads={threads}"),
+            &sync,
+            &got,
+        );
+        assert_eq!(
+            got.0.participation_per_round,
+            vec![h as u32; ROUNDS],
+            "neutral runs participate in full every round"
+        );
+        assert_eq!(got.0.staleness_hist[0], (h * ROUNDS) as u64);
+        assert!(got.0.staleness_hist[1..].iter().all(|&x| x == 0));
+    }
+}
+
+#[test]
+fn straggler_config_is_bit_identical_across_the_grid_and_repeats() {
+    enable_worker_bin();
+    let reference = run_collect(&async_cfg());
+
+    // repeat run first: same process, same config, same bits
+    let again = run_collect(&async_cfg());
+    assert_bit_identical("async repeat run", &reference, &again);
+    assert_ledgers_identical("async repeat run", &reference.0, &again.0);
+
+    // the run must actually be asynchronous, or the grid pin is vacuous
+    assert!(
+        reference
+            .0
+            .participation_per_round
+            .iter()
+            .any(|&p| (p as usize) < async_cfg().n - async_cfg().b),
+        "straggler config never produced a short round"
+    );
+    assert!(
+        reference.0.staleness_hist[1..].iter().sum::<u64>() > 0,
+        "straggler config never produced a stale serve"
+    );
+
+    for (transport, procs, shards, threads) in grid() {
+        let mut cfg = async_cfg();
+        cfg.transport = transport;
+        cfg.procs = procs;
+        cfg.shards = shards;
+        cfg.threads = threads;
+        let got = run_collect(&cfg);
+        let label =
+            format!("async {transport:?} procs={procs} shards={shards} threads={threads}");
+        assert_bit_identical(&label, &reference, &got);
+        assert_ledgers_identical(&label, &reference.0, &got.0);
+    }
+}
+
+#[test]
+fn different_seed_changes_the_async_run() {
+    // guards against the grid comparison being vacuous
+    let a = run_collect(&async_cfg());
+    let mut cfg = async_cfg();
+    cfg.seed += 1;
+    let b = run_collect(&cfg);
+    assert_ne!(a.0.train_loss, b.0.train_loss);
+    let bits64 = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert!(
+        a.0.participation_per_round != b.0.participation_per_round
+            || a.0.staleness_hist != b.0.staleness_hist
+            || bits64(&a.0.virtual_close_per_round) != bits64(&b.0.virtual_close_per_round),
+        "churn/straggler schedule must be seed-derived"
+    );
+}
+
+/// Independent twin of the coordinator's virtual clock, built only from
+/// the config and the public counter-keyed streams: churn coins from
+/// `(seed, round, node, CHURN)`, latencies via [`sample_latency`] (a
+/// pure function of `(seed, round, node, LATENCY)`), the quorum close
+/// and staleness aging re-derived from the documented rules.
+fn recompute_ledgers(cfg: &ExperimentConfig) -> (Vec<u32>, Vec<f64>, Vec<u64>) {
+    let a = &cfg.asyn;
+    let h = cfg.n - cfg.b;
+    let mut down_until = vec![0u64; h];
+    let mut last_fresh = vec![0u64; h];
+    let mut participation = Vec::with_capacity(cfg.rounds);
+    let mut vclose = Vec::with_capacity(cfg.rounds);
+    let mut hist = vec![0u64; a.max_staleness + 2];
+    for round in 1..=cfg.rounds as u64 {
+        if a.crash_prob > 0.0 {
+            for i in 0..h {
+                let u = Rng::stream(cfg.seed, round, i as u64, stream_tag::CHURN).f64();
+                if u < a.crash_prob && round >= down_until[i] {
+                    down_until[i] = round + a.down_rounds as u64;
+                }
+            }
+        }
+        let in_part = (round as usize) >= a.part_from && (round as usize) < a.part_to;
+        let down: Vec<bool> = (0..h)
+            .map(|i| round < down_until[i] || (in_part && i < a.part_nodes))
+            .collect();
+        let lat: Vec<f64> = (0..h)
+            .map(|i| {
+                if down[i] {
+                    f64::INFINITY
+                } else {
+                    sample_latency(a, cfg.seed, round, i as u64)
+                }
+            })
+            .collect();
+        let mut alive: Vec<f64> = lat.iter().copied().filter(|l| l.is_finite()).collect();
+        alive.sort_unstable_by(f64::total_cmp);
+        let q = if a.quorum == 0 { h } else { a.quorum };
+        let q_eff = q.min(alive.len());
+        let mut close = if q_eff == 0 { 0.0 } else { alive[q_eff - 1] };
+        if a.deadline > 0.0 {
+            close = close.min(a.deadline);
+        }
+        let mut fresh_count = 0u32;
+        let cap = a.max_staleness as u64 + 1;
+        for i in 0..h {
+            let st = if !down[i] && lat[i] <= close {
+                last_fresh[i] = round;
+                fresh_count += 1;
+                0u32
+            } else {
+                (round - last_fresh[i]).min(cap) as u32
+            };
+            hist[st as usize] += 1;
+        }
+        participation.push(fresh_count);
+        vclose.push(close);
+    }
+    (participation, vclose, hist)
+}
+
+#[test]
+fn ledgers_match_independent_stream_recomputation() {
+    for cfg in [async_cfg(), {
+        // a second shape: lognormal stragglers + a partition window
+        let mut c = base_cfg();
+        c.asyn = AsyncCfg {
+            quorum: 7,
+            max_staleness: 3,
+            straggler: StragglerKind::LogNormal,
+            sigma: 0.6,
+            part_from: 3,
+            part_to: 6,
+            part_nodes: 2,
+            ..AsyncCfg::default()
+        };
+        c
+    }] {
+        let hist = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let (participation, vclose, stale_hist) = recompute_ledgers(&cfg);
+        assert_eq!(
+            hist.participation_per_round, participation,
+            "{}: participation ledger",
+            cfg.asyn.straggler.name()
+        );
+        let bits: Vec<u64> = hist.virtual_close_per_round.iter().map(|x| x.to_bits()).collect();
+        let expect_bits: Vec<u64> = vclose.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(
+            bits, expect_bits,
+            "{}: virtual-close ledger (bit-exact)",
+            cfg.asyn.straggler.name()
+        );
+        assert_eq!(
+            hist.staleness_hist, stale_hist,
+            "{}: staleness histogram",
+            cfg.asyn.straggler.name()
+        );
+        // the buckets account for every (round, node) pair exactly once
+        let h = (cfg.n - cfg.b) as u64;
+        assert_eq!(hist.staleness_hist.iter().sum::<u64>(), h * cfg.rounds as u64);
+    }
+}
+
+#[test]
+fn deadline_cap_limits_participation() {
+    // a deadline below the slow latency: slow nodes can never arrive,
+    // so every round's participation is exactly the fast population
+    let mut cfg = async_cfg();
+    cfg.asyn.crash_prob = 0.0;
+    cfg.asyn.quorum = 10; // ask for everyone…
+    cfg.asyn.deadline = 2.0; // …but cap the wait below slow_latency = 4
+    let hist = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    let h = cfg.n - cfg.b;
+    for (round, &p) in hist.participation_per_round.iter().enumerate() {
+        let fast = (0..h)
+            .filter(|&i| {
+                sample_latency(&cfg.asyn, cfg.seed, round as u64 + 1, i as u64)
+                    <= cfg.asyn.deadline
+            })
+            .count() as u32;
+        assert_eq!(p, fast, "round {round}: deadline-capped participation");
+        assert!(hist.virtual_close_per_round[round] <= cfg.asyn.deadline);
+    }
+}

@@ -4,9 +4,12 @@
 //! standard deviations beyond what a correct sampler can produce, so a
 //! failure means a real distributional bug, not noise.
 
+use rpel::config::{AsyncCfg, StragglerKind};
 use rpel::coordinator::PullSampler;
 use rpel::sampling::Hypergeometric;
 use rpel::util::rng::Rng;
+use rpel::util::special::normal_cdf;
+use rpel::util::vclock::sample_latency;
 
 /// Pearson chi-square statistic against per-cell expected counts.
 fn chi_square(observed: &[u64], expected: &[f64]) -> f64 {
@@ -106,4 +109,104 @@ fn hypergeometric_sampler_matches_exact_cdf() {
         "empirical mean {mean_emp:.3} vs exact {:.3}",
         hg.mean()
     );
+}
+
+// ---------------------------------------------------------------------------
+// Straggler latency distributions (the async engine's virtual clock)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lognormal_latency_matches_the_analytic_cdf() {
+    // inverse-CDF sampling over counter-keyed streams against the exact
+    // law: lat = base * exp(sigma * PhiInv(u)), so
+    // F(x) = Phi(ln(x / base) / sigma). KS sup-distance ~ 0.004 expected
+    // at this N; 0.02 is far outside what a correct sampler can reach.
+    let cfg = AsyncCfg {
+        straggler: StragglerKind::LogNormal,
+        base_latency: 2.0,
+        sigma: 0.5,
+        ..AsyncCfg::default()
+    };
+    let (seed, rounds, nodes) = (2026u64, 200u64, 200u64);
+    let n = (rounds * nodes) as usize;
+    let mut samples = Vec::with_capacity(n);
+    for round in 1..=rounds {
+        for node in 0..nodes {
+            let lat = sample_latency(&cfg, seed, round, node);
+            assert!(lat.is_finite() && lat > 0.0, "lat = {lat}");
+            samples.push(lat);
+        }
+    }
+    samples.sort_unstable_by(f64::total_cmp);
+    let mut worst = 0.0f64;
+    let mut mean_ln = 0.0f64;
+    for (i, &x) in samples.iter().enumerate() {
+        let z = (x / cfg.base_latency).ln() / cfg.sigma;
+        mean_ln += z / n as f64;
+        let f = normal_cdf(z);
+        worst = worst
+            .max((f - i as f64 / n as f64).abs())
+            .max((f - (i + 1) as f64 / n as f64).abs());
+    }
+    assert!(worst < 0.02, "KS distance {worst:.4}");
+    // ln(lat/base)/sigma is standard normal: mean 0 +/- 1/sqrt(N)
+    assert!(mean_ln.abs() < 0.02, "mean z = {mean_ln:.4}");
+}
+
+#[test]
+fn two_point_latency_frequencies_are_exact() {
+    // every draw is bit-exactly the fast or the slow latency, and the
+    // slow fraction matches slow_prob: chi-square over 2 cells, df = 1.
+    // E[chi2] = 1, sd ~ 1.4; 30 is many sigma out.
+    let cfg = AsyncCfg {
+        straggler: StragglerKind::TwoPoint,
+        base_latency: 1.0,
+        slow_prob: 0.25,
+        slow_latency: 4.0,
+        ..AsyncCfg::default()
+    };
+    let (seed, rounds, nodes) = (7u64, 200u64, 200u64);
+    let n = rounds * nodes;
+    let mut slow = 0u64;
+    for round in 1..=rounds {
+        for node in 0..nodes {
+            let lat = sample_latency(&cfg, seed, round, node);
+            if lat.to_bits() == cfg.slow_latency.to_bits() {
+                slow += 1;
+            } else {
+                assert_eq!(
+                    lat.to_bits(),
+                    cfg.base_latency.to_bits(),
+                    "two-point draw off-support: {lat}"
+                );
+            }
+        }
+    }
+    let expected = [
+        n as f64 * (1.0 - cfg.slow_prob),
+        n as f64 * cfg.slow_prob,
+    ];
+    let chi2 = chi_square(&[n - slow, slow], &expected);
+    assert!(chi2 < 30.0, "chi2 = {chi2:.1} (slow {slow}/{n})");
+}
+
+#[test]
+fn constant_latency_is_seed_independent_and_exact() {
+    // the neutral distribution draws nothing: bit-exactly base_latency
+    // for every key, under every seed (this is what makes quorum = h
+    // collapse to the synchronous engine)
+    let cfg = AsyncCfg {
+        base_latency: 1.5,
+        ..AsyncCfg::default()
+    };
+    for seed in [0u64, 1, 2026] {
+        for round in 1..=50u64 {
+            for node in 0..20u64 {
+                assert_eq!(
+                    sample_latency(&cfg, seed, round, node).to_bits(),
+                    1.5f64.to_bits()
+                );
+            }
+        }
+    }
 }

@@ -1,0 +1,404 @@
+//! Scenario-grade chaos tier: every named asynchrony scenario from
+//! [`rpel::testkit::scenario`] is driven end to end.
+//!
+//! * scenarios round-trip through TOML **exactly** — both at the tier
+//!   level and embedded in a full experiment config;
+//! * a partition that heals has an *exactly* deterministic schedule
+//!   (participation, staleness histogram, virtual close are pinned
+//!   value-for-value) and the run still converges;
+//! * crash/rejoin churn matches an independent twin built from the
+//!   public `(seed, round, node, CHURN)` streams, and nodes genuinely
+//!   recover (fresh → down → fresh again);
+//! * a worker killed forever under an async scenario surfaces an
+//!   actionable error naming the worker and its honest range — never a
+//!   hang;
+//! * a rejoining worker serves pulls again: `PeerClient::reset_conns`
+//!   re-dials and re-handshakes, including across a full server restart
+//!   on the same address;
+//! * and a source lint: the deterministic modules (`coordinator/`,
+//!   `aggregation/`, `sampling/`) contain no wall-clock reads outside
+//!   explicitly `lint: wall-clock-exempt`-marked lines — the virtual
+//!   clock is the only clock.
+
+use rpel::attacks::AttackKind;
+use rpel::config::file::{from_toml_str, to_toml_str};
+use rpel::config::{ExperimentConfig, Topology};
+use rpel::coordinator::peer::{PeerClient, RowServer};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+use rpel::testkit::scenario::Scenario;
+use rpel::util::rng::{stream_tag, Rng};
+use rpel::wire::proto::PeerEntry;
+use rpel::wire::transport::{Listener, SockAddr};
+use std::path::{Path, PathBuf};
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = "chaos".into();
+    cfg.n = 12;
+    cfg.b = 2;
+    cfg.topology = Topology::Epidemic { s: 6 };
+    cfg.bhat = Some(2);
+    cfg.attack = AttackKind::Alie;
+    cfg.rounds = 10;
+    cfg.batch = 8;
+    cfg.samples_per_node = 48;
+    cfg.test_samples = 96;
+    cfg.eval_every = 100;
+    cfg
+}
+
+fn enable_worker_bin() {
+    rpel::coordinator::proc::set_worker_bin(env!("CARGO_BIN_EXE_rpel"));
+}
+
+// ---------------------------------------------------------------------------
+// TOML round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_scenario_round_trips_toml_exactly() {
+    let all = Scenario::all();
+    assert!(!all.is_empty());
+    for s in all {
+        // tier level: a scenario file reparses to the identical scenario
+        let text = s.to_toml_str();
+        let back = Scenario::from_toml_str(&text)
+            .unwrap_or_else(|e| panic!("{}: reparse failed: {e}\n---\n{text}", s.name));
+        assert_eq!(back, s, "{}: scenario round trip\n---\n{text}", s.name);
+
+        // and embedded in a full experiment config: the same [async]
+        // section the coordinator ships to shard workers
+        let mut cfg = base_cfg();
+        s.apply(&mut cfg)
+            .unwrap_or_else(|e| panic!("{}: apply failed: {e}", s.name));
+        let doc = to_toml_str(&cfg);
+        assert!(
+            doc.contains("[async]"),
+            "{}: config TOML must carry the async section:\n{doc}",
+            s.name
+        );
+        let back = from_toml_str(&doc)
+            .unwrap_or_else(|e| panic!("{}: config reparse failed: {e}\n---\n{doc}", s.name));
+        assert_eq!(back, cfg, "{}: full-config round trip", s.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// partition_heal: an exactly deterministic schedule, and convergence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn partition_heal_schedule_is_exact_and_the_run_converges() {
+    // quorum 6, partition takes honest nodes 0..3 out of rounds 2..5
+    // (1-based), constant latency 1.0 — every ledger entry is derivable
+    // by hand, so pin all of them exactly
+    let mut cfg = base_cfg();
+    Scenario::named("partition_heal").unwrap().apply(&mut cfg).unwrap();
+    let hist = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    let h = (cfg.n - cfg.b) as u32; // 10
+
+    assert_eq!(
+        hist.participation_per_round,
+        vec![h, 7, 7, 7, h, h, h, h, h, h],
+        "participation must dip to 7 exactly while the partition holds"
+    );
+    // with constant latency the quorum close is the base latency every
+    // round the quorum is met (it is: 7 alive ≥ quorum 6)
+    assert_eq!(
+        hist.virtual_close_per_round
+            .iter()
+            .map(|x| x.to_bits())
+            .collect::<Vec<_>>(),
+        vec![1.0f64.to_bits(); cfg.rounds],
+        "virtual close is the constant base latency, bit-exact"
+    );
+    // the three partitioned nodes age 1, 2, 3 across the window and
+    // refresh on heal: hist = [91, 3, 3, 3, 0]
+    assert_eq!(hist.staleness_hist, vec![91, 3, 3, 3, 0]);
+    assert_eq!(
+        hist.staleness_hist.iter().sum::<u64>(),
+        h as u64 * cfg.rounds as u64,
+        "every (round, node) pair lands in exactly one bucket"
+    );
+
+    // heal means the run still trains through the outage
+    assert_eq!(hist.train_loss.len(), cfg.rounds);
+    assert!(hist.train_loss.iter().all(|l| l.is_finite()));
+    assert!(
+        hist.train_loss[cfg.rounds - 1] < hist.train_loss[0],
+        "loss must still fall across the partition: {:?}",
+        hist.train_loss
+    );
+}
+
+// ---------------------------------------------------------------------------
+// crash_recover: churn matches its stream twin, and nodes come back
+// ---------------------------------------------------------------------------
+
+/// Independent twin of the churn schedule under **constant** latency:
+/// crash coins from the public `(seed, round, node, CHURN)` stream, a
+/// crashed node stays down `down_rounds` rounds, every alive node lands
+/// exactly at the base latency so freshness == aliveness.
+fn churn_twin(cfg: &ExperimentConfig) -> (Vec<u32>, Vec<u64>, Vec<Vec<bool>>) {
+    let a = &cfg.asyn;
+    let h = cfg.n - cfg.b;
+    let cap = a.max_staleness as u64 + 1;
+    let mut down_until = vec![0u64; h];
+    let mut last_fresh = vec![0u64; h];
+    let mut participation = Vec::with_capacity(cfg.rounds);
+    let mut hist = vec![0u64; a.max_staleness + 2];
+    let mut fresh_rows = Vec::with_capacity(cfg.rounds);
+    for round in 1..=cfg.rounds as u64 {
+        for i in 0..h {
+            let u = Rng::stream(cfg.seed, round, i as u64, stream_tag::CHURN).f64();
+            if u < a.crash_prob && round >= down_until[i] {
+                down_until[i] = round + a.down_rounds as u64;
+            }
+        }
+        let fresh: Vec<bool> = (0..h).map(|i| round >= down_until[i]).collect();
+        for i in 0..h {
+            if fresh[i] {
+                last_fresh[i] = round;
+                hist[0] += 1;
+            } else {
+                hist[((round - last_fresh[i]).min(cap)) as usize] += 1;
+            }
+        }
+        participation.push(fresh.iter().filter(|&&f| f).count() as u32);
+        fresh_rows.push(fresh);
+    }
+    (participation, hist, fresh_rows)
+}
+
+#[test]
+fn crash_recover_matches_its_stream_twin_and_nodes_rejoin() {
+    let mut cfg = base_cfg();
+    Scenario::named("crash_recover").unwrap().apply(&mut cfg).unwrap();
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let hist = t.run().unwrap();
+    let h = cfg.n - cfg.b;
+
+    let (participation, stale_hist, fresh_rows) = churn_twin(&cfg);
+    assert_eq!(hist.participation_per_round, participation, "participation ledger");
+    assert_eq!(hist.staleness_hist, stale_hist, "staleness histogram");
+
+    // the seed must actually produce churn, or the twin match is vacuous
+    assert!(
+        participation.iter().any(|&p| (p as usize) < h),
+        "crash_recover produced no crashes: {participation:?}"
+    );
+    // …and at least one node must come back: fresh, then down, then
+    // fresh again — the rejoin path, not a permanent exit
+    let recovered = (0..h).any(|i| {
+        let mut seen_down_after_fresh = false;
+        let mut was_fresh = false;
+        for row in &fresh_rows {
+            if row[i] && seen_down_after_fresh {
+                return true;
+            }
+            if !row[i] && was_fresh {
+                seen_down_after_fresh = true;
+            }
+            was_fresh = was_fresh || row[i];
+        }
+        false
+    });
+    assert!(recovered, "no node ever rejoined: {fresh_rows:?}");
+
+    // the run ends consistent: finite losses, finite final models
+    assert!(hist.train_loss.iter().all(|l| l.is_finite()));
+    for i in 0..t.honest_count() {
+        assert!(
+            t.params_of(i).iter().all(|x| x.is_finite()),
+            "node {i} ended with non-finite params"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// killed forever: a named error, never a hang
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_worker_under_async_scenario_fails_by_name_never_hangs() {
+    enable_worker_bin();
+    let mut cfg = base_cfg();
+    cfg.name = "chaos_proc_crash".into();
+    cfg.rounds = 50;
+    cfg.procs = 2;
+    cfg.threads = 1;
+    Scenario::named("straggler_twopoint").unwrap().apply(&mut cfg).unwrap();
+
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    assert_eq!(t.shard_count(), 2);
+    t.round(0).expect("healthy async round");
+
+    assert!(t.kill_shard_worker(1), "worker 1 should be killable");
+    let mut failure = None;
+    for round in 1..cfg.rounds {
+        if let Err(e) = t.round(round) {
+            failure = Some(format!("{e:#}"));
+            break;
+        }
+    }
+    // the worker is gone for good (no rejoin at the process layer): the
+    // loop completing at all IS the no-hang assertion
+    let msg = failure.expect("rounds must fail after the worker died");
+    assert!(
+        msg.contains("shard worker 1"),
+        "error should name the dead worker: {msg}"
+    );
+    assert!(
+        msg.contains("honest nodes"),
+        "error should name the orphaned range: {msg}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// rejoin: reset_conns re-dials and re-handshakes
+// ---------------------------------------------------------------------------
+
+fn two_worker_book(serving: &SockAddr) -> Vec<PeerEntry> {
+    vec![
+        PeerEntry {
+            start: 0,
+            len: 5,
+            addr: "tcp:127.0.0.1:1".into(), // own range: never dialed
+        },
+        PeerEntry {
+            start: 5,
+            len: 2,
+            addr: serving.to_string(),
+        },
+    ]
+}
+
+#[test]
+fn reset_conns_rehandshakes_and_replays_the_hello_bytes_exactly() {
+    let listener = Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into())).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = RowServer::spawn(listener, 1, 5, 2).unwrap();
+    server.publish(1, &[vec![1.0f32, 2.0], vec![3.0, 4.0]]);
+
+    let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
+    let (rows, d_first) = client.fetch(1, 1, &[5, 6], 2).unwrap();
+    assert_eq!(rows, vec![vec![1.0f32, 2.0], vec![3.0, 4.0]]);
+
+    // warm fetch: the cached connection skips the Hello
+    server.publish(2, &[vec![5.0f32, 6.0], vec![7.0, 8.0]]);
+    let (_, d_warm) = client.fetch(2, 1, &[5, 6], 2).unwrap();
+    assert!(
+        d_warm < d_first,
+        "warm fetch must not re-send the Hello ({d_warm} vs {d_first})"
+    );
+
+    // the rejoin path: reset, then the next fetch re-dials and
+    // re-identifies — byte-for-byte the same cost as first contact
+    client.reset_conns();
+    let (rows, d_rejoin) = client.fetch(2, 1, &[5, 6], 2).unwrap();
+    assert_eq!(rows, vec![vec![5.0f32, 6.0], vec![7.0, 8.0]]);
+    assert_eq!(
+        d_rejoin, d_first,
+        "a re-handshake replays exactly the first-contact bytes"
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn restarted_worker_serves_pulls_again_after_reset_conns() {
+    // a full crash/rejoin at the transport layer: the serving worker
+    // goes away, a new incarnation binds the same address, and only
+    // `reset_conns` routes the client to it
+    let dir = std::env::temp_dir().join(format!("rpel-chaos-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rejoin.sock");
+
+    let listener = Listener::bind(&SockAddr::Unix(path.clone())).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = RowServer::spawn(listener, 1, 5, 2).unwrap();
+    server.publish(1, &[vec![1.0f32], vec![2.0]]);
+
+    let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
+    let (rows, _) = client.fetch(1, 1, &[5], 1).unwrap();
+    assert_eq!(rows, vec![vec![1.0f32]]);
+
+    // crash: the first incarnation stops; a new one rebinds the same
+    // path with the next round published
+    drop(server);
+    std::fs::remove_file(&path).unwrap();
+    let listener = Listener::bind(&SockAddr::Unix(path.clone())).unwrap();
+    let server = RowServer::spawn(listener, 1, 5, 2).unwrap();
+    server.publish(2, &[vec![9.0f32], vec![8.0]]);
+
+    // the cached connection still points at the dead incarnation, which
+    // can only serve its stale table: a named denial, never wrong data
+    let err = format!("{:#}", client.fetch(2, 1, &[5], 1).unwrap_err());
+    assert!(err.contains("peer worker 1"), "{err}");
+    assert!(err.contains("round 2"), "{err}");
+
+    // rejoin: reset + refetch re-dials the new incarnation
+    client.reset_conns();
+    let (rows, _) = client.fetch(2, 1, &[5], 1).unwrap();
+    assert_eq!(rows, vec![vec![9.0f32]]);
+
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// source lint: the virtual clock is the only clock
+// ---------------------------------------------------------------------------
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).unwrap_or_else(|e| panic!("{}: {e}", dir.display())) {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn no_wall_clock_reads_in_deterministic_modules() {
+    // round timing must come from the virtual clock's counter streams;
+    // a stray Instant/SystemTime in these modules would let real time
+    // leak into results. Intentional uses (process-spawn deadlines,
+    // reporting-only wall_secs) carry a `lint: wall-clock-exempt`
+    // marker on the same or the preceding line.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let mut files = Vec::new();
+    for sub in ["coordinator", "aggregation", "sampling"] {
+        rs_files(&root.join(sub), &mut files);
+    }
+    assert!(
+        files.len() >= 6,
+        "lint scan is looking at the wrong tree: {files:?}"
+    );
+
+    let mut offenders = Vec::new();
+    for file in &files {
+        let text = std::fs::read_to_string(file).unwrap();
+        let mut prev_exempt = false;
+        for (idx, line) in text.lines().enumerate() {
+            let exempt = line.contains("lint: wall-clock-exempt");
+            if (line.contains("Instant") || line.contains("SystemTime"))
+                && !exempt
+                && !prev_exempt
+            {
+                offenders.push(format!("{}:{}: {}", file.display(), idx + 1, line.trim()));
+            }
+            prev_exempt = exempt;
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "wall-clock reads in deterministic modules — model time on the \
+         virtual clock, or mark an intentional use with \
+         `// lint: wall-clock-exempt`:\n{}",
+        offenders.join("\n")
+    );
+}

@@ -194,6 +194,27 @@ fn golden_half_step() {
 }
 
 #[test]
+fn golden_async_round() {
+    // round = 6, stale = [0, 2, 1]
+    let expect: [u8; 25] = [
+        0x07, // tag
+        6, 0, 0, 0, 0, 0, 0, 0, // round = 6
+        0x03, 0x00, 0x00, 0x00, // 3 staleness entries
+        0x00, 0x00, 0x00, 0x00, // stale[0] = 0 (fresh)
+        0x02, 0x00, 0x00, 0x00, // stale[1] = 2
+        0x01, 0x00, 0x00, 0x00, // stale[2] = 1
+    ];
+    assert_eq!(proto::encode_async_round(6, &[0, 2, 1]), expect);
+    assert_eq!(
+        proto::decode_to_worker(&expect).unwrap(),
+        ToWorker::AsyncRound {
+            round: 6,
+            stale: vec![0, 2, 1]
+        }
+    );
+}
+
+#[test]
 fn golden_snapshot() {
     // round = 3, losses = [1.0f64], halves = [[1.0f32, -2.0f32]]
     let expect: [u8; 37] = [
@@ -290,10 +311,10 @@ fn golden_round_done() {
 #[test]
 fn golden_shutdown_and_init_ok() {
     assert_eq!(proto::encode_shutdown(), vec![0x04]);
-    // InitOk: tag, version 2, start=3, len=4, d=10
+    // InitOk: tag, version 3, start=3, len=4, d=10
     let expect: [u8; 29] = [
         0x81, // tag
-        0x02, 0x00, 0x00, 0x00, // protocol version 2
+        0x03, 0x00, 0x00, 0x00, // protocol version 3
         3, 0, 0, 0, 0, 0, 0, 0, // start
         4, 0, 0, 0, 0, 0, 0, 0, // len
         10, 0, 0, 0, 0, 0, 0, 0, // d
@@ -305,7 +326,7 @@ fn golden_shutdown_and_init_ok() {
 fn golden_peer_hello() {
     let expect: [u8; 14] = [
         0x40, // tag
-        0x02, 0x00, 0x00, 0x00, // protocol version 2
+        0x03, 0x00, 0x00, 0x00, // protocol version 3
         0x01, 0x00, 0x00, 0x00, // worker = 1
         0x01, 0x00, 0x00, 0x00, // 1-byte address
         b'u',
@@ -418,6 +439,7 @@ fn every_truncation_of_every_message_errors_cleanly() {
     let to_worker = [
         proto::encode_init("task = \"tiny\"", 0, 2),
         proto::encode_half_step(9),
+        proto::encode_async_round(9, &[0, 1, 3]),
         proto::encode_aggregate(1, &digest, &[vec![1.0f32, 2.0], vec![3.0, 4.0]]),
         proto::encode_aggregate_routed(1, &digest, &[vec![0, 3], vec![2]]),
         proto::encode_peers(&[
