@@ -4,9 +4,11 @@
 //! (train step / eval) — the L3 profile that drives the §Perf loop.
 //!
 //! Emits `BENCH_round.json` (ns/round for serial vs pool vs sharded at
-//! n ∈ {64, 256, 1024}) so the perf trajectory is machine-readable across
-//! PRs. Set `BENCH_SMOKE=1` for a short CI iteration (fewer samples,
-//! n = 64 only).
+//! n ∈ {64, 256, 1024}, plus the sparse n-sweep: dense vs virtual-node
+//! backend at 1% participation for n ∈ {10³, 10⁴, 10⁵, 10⁶}, with
+//! resident-bytes per point) so the perf trajectory is machine-readable
+//! across PRs. Set `BENCH_SMOKE=1` for a short CI iteration (fewer
+//! samples, n = 64 only; sparse sweep capped at n = 10⁴).
 //!
 //! Run: cargo bench --bench bench_round
 
@@ -51,6 +53,26 @@ fn sweep_cfg(n: usize) -> ExperimentConfig {
     cfg.samples_per_node = 32;
     cfg.test_samples = 64;
     cfg.engine = EngineKind::Native;
+    cfg
+}
+
+/// Sparse-activation sweep geometry: no adversary (this sweep referees
+/// throughput and residency, not robustness), participation pinned at
+/// 1% so the active set scales as n/100 while dense state scales as n.
+fn sparse_sweep_cfg(n: usize, virtual_nodes: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = format!("bench_sparse_n{n}");
+    cfg.n = n;
+    cfg.b = 0;
+    cfg.topology = Topology::Epidemic { s: 8 };
+    cfg.attack = AttackKind::None;
+    cfg.batch = 8;
+    cfg.samples_per_node = 16;
+    cfg.test_samples = 32;
+    cfg.engine = EngineKind::Native;
+    cfg.threads = 0; // all cores
+    cfg.participation = 0.01;
+    cfg.virtual_nodes = virtual_nodes;
     cfg
 }
 
@@ -184,6 +206,63 @@ fn main() {
             rows.push(Json::Obj(obj));
         }
         json_root.insert("rounds".into(), Json::Arr(rows));
+    }
+
+    section("sparse n sweep: dense vs virtual-node backend (p=0.01, b=0)");
+    let sparse_sweep: &[usize] = if smoke {
+        &[1_000, 10_000]
+    } else {
+        &[1_000, 10_000, 100_000, 1_000_000]
+    };
+    {
+        // measures a round at 1% participation both ways: the dense
+        // engine still owns full n·2·d·4 resident state and O(n) table
+        // scans; the virtual backend's committed state is (seed, delta
+        // log) and only the touched rows materialize
+        let mut rows = Vec::new();
+        for &n in sparse_sweep {
+            let mut obj = BTreeMap::new();
+            obj.insert("n".into(), Json::Num(n as f64));
+            obj.insert("participation".into(), Json::Num(0.01));
+            if n <= 100_000 {
+                let cfg = sparse_sweep_cfg(n, false);
+                let mut t = Trainer::from_config(&cfg).unwrap();
+                let mut round = 0usize;
+                let r = b.run(&format!("round n={n} dense p=0.01"), || {
+                    round += 1;
+                    black_box(t.round(round).unwrap())
+                });
+                println!("{}", r.report());
+                let (_, _, resident) = t.sparse_round_stats(round);
+                obj.insert("dense_ns".into(), Json::Num(r.mean_ns()));
+                obj.insert("dense_resident_bytes".into(), Json::Num(resident as f64));
+            } else {
+                // the dense table alone is gigabytes at n = 10^6 —
+                // exactly the regime the virtual backend exists for
+                println!("round n={n} dense p=0.01: skipped (dense state too large)");
+                obj.insert("dense_ns".into(), Json::Null);
+                obj.insert("dense_resident_bytes".into(), Json::Null);
+            }
+            {
+                let cfg = sparse_sweep_cfg(n, true);
+                let mut t = Trainer::from_config(&cfg).unwrap();
+                let mut round = 0usize;
+                let r = b.run(&format!("round n={n} virtual p=0.01"), || {
+                    round += 1;
+                    black_box(t.round(round).unwrap())
+                });
+                println!("{}", r.report());
+                let (active, materialized, resident) = t.sparse_round_stats(round);
+                println!(
+                    "  => n={n}: active={active} materialized={materialized} resident={resident} B"
+                );
+                obj.insert("virtual_ns".into(), Json::Num(r.mean_ns()));
+                obj.insert("virtual_resident_bytes".into(), Json::Num(resident as f64));
+                obj.insert("virtual_materialized".into(), Json::Num(materialized as f64));
+            }
+            rows.push(Json::Obj(obj));
+        }
+        json_root.insert("n_sweep".into(), Json::Arr(rows));
     }
 
     match std::fs::write(

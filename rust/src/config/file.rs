@@ -91,6 +91,16 @@ fn get_str<'a>(doc: &'a Doc, key: &str) -> Result<Option<&'a str>, String> {
     }
 }
 
+fn get_bool(doc: &Doc, key: &str) -> Result<Option<bool>, String> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| format!("'{key}' must be a boolean")),
+    }
+}
+
 /// Parse a TOML document into a config (missing keys fall back to the
 /// task's defaults).
 pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
@@ -133,6 +143,12 @@ pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
     }
     if let Some(dir) = get_str(&doc, "socket_dir")? {
         cfg.socket_dir = dir.to_string();
+    }
+    if let Some(p) = get_f64(&doc, "participation")? {
+        cfg.participation = p;
+    }
+    if let Some(v) = get_bool(&doc, "virtual_nodes")? {
+        cfg.virtual_nodes = v;
     }
 
     if let Some(n) = get_usize(&doc, "nodes.n")? {
@@ -389,6 +405,19 @@ pub fn to_toml_str(cfg: &ExperimentConfig) -> String {
         "socket_dir = \"{}\"\n",
         toml_escape(&cfg.socket_dir)
     ));
+    // the sparse-engine knobs follow the [async] convention: emitted only
+    // off-default, so a dense full-participation config serializes
+    // byte-identically to what it did before the sparse engine existed
+    // (worker Init frames included)
+    if cfg.participation != 1.0 {
+        out.push_str(&format!(
+            "participation = {}\n",
+            fmt_float(cfg.participation)
+        ));
+    }
+    if cfg.virtual_nodes {
+        out.push_str("virtual_nodes = true\n");
+    }
 
     out.push_str("\n[nodes]\n");
     out.push_str(&format!("n = {}\n", cfg.n));
@@ -635,6 +664,32 @@ mod tests {
         );
     }
 
+    #[test]
+    fn sparse_keys_parsed_with_dense_defaults() {
+        let cfg =
+            from_toml_str("task = \"tiny\"\nparticipation = 0.5\nvirtual_nodes = true").unwrap();
+        assert_eq!(cfg.participation, 0.5);
+        assert!(cfg.virtual_nodes);
+
+        // defaults are the dense full-participation engine, and a default
+        // config must not grow the sparse keys on serialization
+        let dense = from_toml_str("task = \"tiny\"").unwrap();
+        assert_eq!(dense.participation, 1.0);
+        assert!(!dense.virtual_nodes);
+        let text = to_toml_str(&dense);
+        assert!(!text.contains("participation"));
+        assert!(!text.contains("virtual_nodes"));
+
+        assert!(
+            from_toml_str("task = \"tiny\"\nparticipation = 0.0").is_err(),
+            "participation outside (0, 1] must be rejected"
+        );
+        assert!(
+            from_toml_str("task = \"tiny\"\nvirtual_nodes = 1").is_err(),
+            "virtual_nodes must be a boolean"
+        );
+    }
+
     /// `to_toml_str` is what the coordinator ships to every shard-worker
     /// process: a parse of the output must reproduce the config
     /// field-for-field, or workers would silently build a different world.
@@ -678,12 +733,19 @@ mod tests {
         async_cfg.asyn.part_to = 6;
         async_cfg.asyn.part_nodes = 2;
 
+        let mut sparse_cfg = crate::config::ExperimentConfig::default_for(TaskKind::Tiny);
+        sparse_cfg.participation = 0.25;
+        sparse_cfg.virtual_nodes = true;
+        sparse_cfg.asyn.quorum = 7;
+        sparse_cfg.asyn.max_staleness = 2;
+
         for cfg in [
             presets::quickstart_config(),
             from_toml_str(FULL).unwrap(),
             push_cfg,
             graph_cfg,
             async_cfg,
+            sparse_cfg,
         ] {
             let text = to_toml_str(&cfg);
             let back = from_toml_str(&text)

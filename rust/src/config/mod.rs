@@ -185,6 +185,24 @@ pub struct ExperimentConfig {
     /// config is itself bit-identical across the whole
     /// (transport × procs × shards × threads) grid.
     pub asyn: AsyncCfg,
+    /// Per-round partial participation (`--participation`, default 1.0):
+    /// each honest node joins a round iff its counter-keyed
+    /// `(seed, round, node, PARTICIPATE)` coin lands below this fraction.
+    /// Inactive nodes skip the half-step entirely (data RNG and momentum
+    /// frozen), serve their committed params to pullers, and neither
+    /// aggregate nor commit — so the per-round cost tracks the active
+    /// set. Because the coin is a pure function of its key, a fixed
+    /// `participation < 1` config is bit-identical across the whole
+    /// (transport × procs × shards × threads) grid; `1.0` reproduces the
+    /// full-participation engine bit-for-bit.
+    pub participation: f64,
+    /// Virtual-node backend (`--virtual-nodes`, default false): committed
+    /// per-node state lives as `(init seed, XOR round-delta log)` with
+    /// lazy materialization for only the nodes touched each round — a
+    /// representation change pinned bit-identical to the dense engine.
+    /// In-process only (`procs = 1`), epidemic pull topology.
+    /// See [`crate::coordinator::vnode`].
+    pub virtual_nodes: bool,
 }
 
 impl ExperimentConfig {
@@ -219,6 +237,8 @@ impl ExperimentConfig {
             transport: TransportKind::Pipe,
             socket_dir: String::new(),
             asyn: AsyncCfg::default(),
+            participation: 1.0,
+            virtual_nodes: false,
         }
     }
 
@@ -343,6 +363,30 @@ impl ExperimentConfig {
                 self.honest()
             ));
         }
+        if !self.participation.is_finite() || !(self.participation > 0.0) || self.participation > 1.0
+        {
+            return Err(format!(
+                "participation {} must be in (0, 1]",
+                self.participation
+            ));
+        }
+        if self.participation < 1.0 && !matches!(self.topology, Topology::Epidemic { .. }) {
+            return Err(
+                "participation < 1 needs the epidemic pull topology (push floods and \
+                 gossip graphs have no inactive-node serve semantics)"
+                    .into(),
+            );
+        }
+        if self.virtual_nodes {
+            if !matches!(self.topology, Topology::Epidemic { .. }) {
+                return Err("virtual_nodes needs the epidemic pull topology".into());
+            }
+            if self.procs > 1 {
+                return Err(
+                    "virtual_nodes is the in-process sparse backend; use procs = 1".into(),
+                );
+            }
+        }
         Ok(())
     }
 }
@@ -442,6 +486,31 @@ mod tests {
         assert!(cfg.validate().is_ok());
         cfg.asyn.stale_decay = -0.5;
         assert!(cfg.validate().unwrap_err().contains("stale_decay"));
+    }
+
+    #[test]
+    fn validation_rejects_sparse_misconfig() {
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.participation = 0.0;
+        assert!(cfg.validate().unwrap_err().contains("participation"));
+        cfg.participation = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.participation = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.participation = 0.5;
+        assert!(cfg.validate().is_ok());
+        cfg.topology = Topology::EpidemicPush { s: 6 };
+        assert!(cfg.validate().unwrap_err().contains("epidemic pull"));
+
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.virtual_nodes = true;
+        assert!(cfg.validate().is_ok());
+        cfg.procs = 2;
+        assert!(cfg.validate().unwrap_err().contains("procs"));
+        cfg.procs = 1;
+        cfg.topology = Topology::FixedGraph { edges: 60 };
+        cfg.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
+        assert!(cfg.validate().unwrap_err().contains("virtual_nodes"));
     }
 
     #[test]

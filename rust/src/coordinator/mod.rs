@@ -16,7 +16,7 @@
 //! snapshot (synchronous model, §3.3) — nodes never see intra-round
 //! updates of their peers.
 //!
-//! # Two shard backends, one round protocol
+//! # Three shard backends, one round protocol
 //!
 //! Honest-node state is partitioned into contiguous shards, each hosted
 //! by a [`shard::ShardBackend`]:
@@ -30,7 +30,11 @@
 //!   length-prefixed round protocol of [`crate::wire`] over pipes
 //!   (`--transport pipe`, broadcast table) or stream sockets
 //!   (`--transport socket|tcp`, worker-served pulls via the per-round
-//!   routing table — see [`peer`]).
+//!   routing table — see [`peer`]);
+//! * [`vnode::VirtualShard`] — **virtual nodes** (`--virtual-nodes`): one
+//!   backend hosts ALL honest nodes as `(seed, XOR-delta log)` recipes
+//!   and materializes full state lazily, only for the nodes a round
+//!   touches — the million-node engine (see below).
 //!
 //! [`Trainer`] is an orchestrator over `Vec<Box<dyn ShardBackend>>` and
 //! owns the **round tables** — half-step rows, the committed-params
@@ -141,12 +145,51 @@
 //! so `quorum = h` + `max_staleness = 0` + no churn reproduces the
 //! synchronous engine bit-for-bit — `rust/tests/async_rounds.rs` pins
 //! both properties across the transport × procs × shards × threads grid.
+//!
+//! # Sparse activation: partial participation + virtual nodes
+//!
+//! `participation = p < 1` (epidemic topology only) activates each
+//! honest node per round with probability p, decided by the public
+//! `(seed, round, node, PARTICIPATE)` coin ([`vnode::is_active`]) —
+//! keyed by **global** node id, so every backend on every grid point
+//! derives the same active set independently. An inactive node is a
+//! frozen model, not an absent one: it skips the half-step (its data-RNG
+//! and momentum do not advance), publishes its committed params as its
+//! row (peers that pull it aggregate those), is excluded from the
+//! digest, loss and ledger folds, skips the async serve transform
+//! (inactivity trumps staleness — its carried snapshot does not move),
+//! and does not commit. Byzantine nodes are always "available": the
+//! adversary does not get quieter because honest nodes rest.
+//!
+//! `--virtual-nodes` swaps the storage model underneath the exact same
+//! semantics. Committed per-node state follows the lifecycle
+//!
+//! ```text
+//!   seed ─▶ shared init row ─▶ per-round XOR delta log ─▶ compacted
+//!   arena row (log folded once it passes a threshold) ─▶ lazily
+//!   materialized params/momentum/shard for this round's active set
+//!   ─▶ commit appends the next XOR delta
+//! ```
+//!
+//! and each round runs: compute active set → materialize exactly those
+//! nodes → half-step through the shared job dispatch → serve transform
+//! (async) → populate the table rows active victims will pull from
+//! inactive peers with committed params → aggregate → commit deltas and
+//! park momentum/shard state. Everything else is an **empty table row**
+//! — the trainer's half-step/params tables hold rows only for the
+//! touched set, which is what makes n = 10⁶ rounds fit in memory
+//! (`rust/tests/large_n.rs`). Module docs in [`vnode`] cover the
+//! lifecycle in detail; `History`'s `active/materialized/resident_bytes`
+//! ledgers expose it per round. Dense and virtual engines are pinned
+//! bit-identical at every participation level by
+//! `rust/tests/determinism.rs` and `rust/tests/sparse_engine.rs`.
 
 pub mod engine;
 pub mod peer;
 pub mod proc;
 pub mod sampler;
 pub(crate) mod shard;
+pub mod vnode;
 
 pub use engine::{build_engine, ComputeEngine, HloEngine, NativeEngine};
 pub use sampler::PullSampler;
@@ -207,27 +250,57 @@ pub(crate) struct World {
     pub test_x: Vec<f32>,
     pub test_y: Vec<i32>,
     pub d: usize,
+    /// Virtual build only: the lazy-materialization substrate (per-node
+    /// RNG snapshots + label bytes) the [`vnode::VirtualShard`] owns.
+    pub vseeds: Option<vnode::VirtualSeeds>,
+}
+
+/// How much per-node state the one world-construction path materializes.
+/// All three modes run the **same** build — engine, b̂, adversary
+/// placement, data partition, the per-node fork loop, topology — and
+/// differ only in what the node-loop arm keeps, so the RNG fork/draw
+/// sequence (hence everything downstream) is bit-identical by
+/// construction rather than by three hand-synchronized copies.
+#[derive(Clone, Copy, PartialEq)]
+pub(crate) enum Materialize {
+    /// Full node states (params, momentum, sampled shard): the
+    /// in-process dense engine.
+    Full,
+    /// Nothing per node (each skipped node still consumes its
+    /// `0x5AD + id` fork and its data-stream draws stay un-taken — the
+    /// test set is drawn before the loop, so nothing downstream shifts):
+    /// the multi-process coordinator, whose workers rebuild their own.
+    Lite,
+    /// Recipes only: per-node RNG snapshots + label bytes for
+    /// [`vnode::VirtualShard`]'s lazy materialization, with the shared
+    /// data stream advanced by exactly the draws a full build would
+    /// consume.
+    Virtual,
 }
 
 /// Build the full world from a config: engine, adversary placement, b̂
 /// resolution (Algorithm 2 when unset), node states, topology.
 pub(crate) fn build_world(cfg: &ExperimentConfig) -> Result<World> {
-    build_world_impl(cfg, true)
+    build_world_impl(cfg, Materialize::Full)
 }
 
 /// [`build_world`] without materializing per-node state (`nodes` comes
 /// back empty): what a multi-process coordinator needs — every worker
 /// rebuilds its own nodes anyway, and sampling h nodes' data and params
-/// here would only be dropped. The RNG **fork sequence is kept
-/// identical** (each skipped node still consumes its `0x5AD + id` fork),
-/// so the graph topology and everything after the node loop match the
-/// full build bit-for-bit; the test set is drawn before the node loop,
-/// so skipping the per-node data draws cannot shift it.
+/// here would only be dropped.
 pub(crate) fn build_world_lite(cfg: &ExperimentConfig) -> Result<World> {
-    build_world_impl(cfg, false)
+    build_world_impl(cfg, Materialize::Lite)
 }
 
-fn build_world_impl(cfg: &ExperimentConfig, materialize_nodes: bool) -> Result<World> {
+/// [`build_world`] capturing materialization *recipes* instead of node
+/// state: what the sparse engine boots from. A node first activated in
+/// round t samples its shard from the stored RNG snapshots and gets
+/// bit-for-bit the dataset the dense build would have given it.
+pub(crate) fn build_world_virtual(cfg: &ExperimentConfig) -> Result<World> {
+    build_world_impl(cfg, Materialize::Virtual)
+}
+
+fn build_world_impl(cfg: &ExperimentConfig, materialize: Materialize) -> Result<World> {
     cfg.validate().map_err(|e| anyhow!("invalid config: {e}"))?;
     let mut cfg = cfg.clone();
     let mut rng = Rng::new(cfg.seed);
@@ -361,7 +434,16 @@ fn build_world_impl(cfg: &ExperimentConfig, materialize_nodes: bool) -> Result<W
     let test = task.sample_uniform(test_n, &mut data_rng);
 
     // --- honest node states ----------------------------------------------
-    let mut nodes = Vec::with_capacity(if materialize_nodes { cfg.honest() } else { 0 });
+    let full = materialize == Materialize::Full;
+    let mut nodes = Vec::with_capacity(if full { cfg.honest() } else { 0 });
+    let mut vseeds = (materialize == Materialize::Virtual).then(|| vnode::VirtualSeeds {
+        ids: Vec::with_capacity(cfg.honest()),
+        node_rngs: Vec::with_capacity(cfg.honest()),
+        data_rngs: Vec::with_capacity(cfg.honest()),
+        labels_flat: Vec::new(),
+        label_off: vec![0u32],
+        task: task.clone(),
+    });
     let mut node_of = vec![usize::MAX; cfg.n];
     let mut honest_seen = 0usize;
     for id in 0..cfg.n {
@@ -374,19 +456,37 @@ fn build_world_impl(cfg: &ExperimentConfig, materialize_nodes: bool) -> Result<W
         // the parent stream (and the topology fork below) stays in sync
         // with a full build
         let node_rng = rng.fork(0x5AD + id as u64);
-        if !materialize_nodes {
-            continue;
-        }
         let labels = &shard_labels[id];
-        let data = task.sample_labels(labels, &mut data_rng);
-        let data_shard = crate::data::Shard::new(data, node_rng);
-        let params = engine.init_params(cfg.seed as i32)?;
-        nodes.push(NodeState {
-            id,
-            params,
-            momentum: vec![0.0f32; d],
-            shard: data_shard,
-        });
+        match materialize {
+            Materialize::Lite => {}
+            Materialize::Full => {
+                let data = task.sample_labels(labels, &mut data_rng);
+                let data_shard = crate::data::Shard::new(data, node_rng);
+                let params = engine.init_params(cfg.seed as i32)?;
+                nodes.push(NodeState {
+                    id,
+                    params,
+                    momentum: vec![0.0f32; d],
+                    shard: data_shard,
+                });
+            }
+            Materialize::Virtual => {
+                // snapshot the recipe, then advance the shared data
+                // stream by exactly the draws `sample_labels` would
+                // consume (one gaussian per feature — gaussian32's draw
+                // count is independent of mean/std), so every later
+                // node's snapshot matches the full build bit-for-bit
+                let vs = vseeds.as_mut().unwrap();
+                vs.ids.push(id);
+                vs.node_rngs.push(node_rng);
+                vs.data_rngs.push(data_rng.clone());
+                vs.labels_flat.extend(labels.iter().map(|&c| c as u8));
+                vs.label_off.push(vs.labels_flat.len() as u32);
+                for _ in 0..labels.len() * task.spec.dim {
+                    data_rng.gaussian();
+                }
+            }
+        }
     }
 
     // --- topology ----------------------------------------------------------
@@ -413,6 +513,7 @@ fn build_world_impl(cfg: &ExperimentConfig, materialize_nodes: bool) -> Result<W
         test_x: test.x,
         test_y: test.y,
         d,
+        vseeds,
         cfg,
     })
 }
@@ -429,6 +530,8 @@ pub struct Trainer {
     /// per-id Byzantine flag and id → honest-index map
     byz: Vec<bool>,
     node_of: Vec<usize>,
+    /// honest index → global node id (the PARTICIPATE coin's key)
+    honest_ids: Vec<usize>,
     /// shard backends, ascending contiguous honest ranges — in-process
     /// [`NodeShard`]s, or one [`proc::ProcessShard`] per worker process
     backends: Vec<Box<dyn ShardBackend>>,
@@ -497,7 +600,8 @@ impl Trainer {
     /// (spawning `rpel shard-worker` processes when `procs > 1`),
     /// topology, b̂ resolution (Algorithm 2 when unset).
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
-        let local_backends = cfg.procs <= 1;
+        let virtual_nodes = cfg.virtual_nodes;
+        let local_backends = cfg.procs <= 1 && !virtual_nodes;
         let World {
             cfg,
             engine,
@@ -513,7 +617,10 @@ impl Trainer {
             test_x,
             test_y,
             d,
-        } = if local_backends {
+            vseeds,
+        } = if virtual_nodes {
+            build_world_virtual(cfg)?
+        } else if local_backends {
             build_world(cfg)?
         } else {
             // the workers rebuild their own node state; don't sample h
@@ -523,15 +630,34 @@ impl Trainer {
         let h = cfg.honest();
         debug_assert!(!local_backends || nodes.len() == h);
         // committed-params mirror starts at the init params (identical
-        // for every node: init is a function of the experiment seed only)
-        let tbl_params: Vec<Vec<f32>> = if local_backends {
+        // for every node: init is a function of the experiment seed
+        // only). The virtual backend keeps the mirror EMPTY — committed
+        // params are recipes there, materialized on read by
+        // `committed_params` — which is most of the memory diet.
+        let tbl_params: Vec<Vec<f32>> = if virtual_nodes {
+            vec![Vec::new(); h]
+        } else if local_backends {
             nodes.iter().map(|node| node.params.clone()).collect()
         } else {
             let row = engine.init_params(cfg.seed as i32)?;
             vec![row; h]
         };
 
-        let backends: Vec<Box<dyn ShardBackend>> = if !local_backends {
+        let backends: Vec<Box<dyn ShardBackend>> = if virtual_nodes {
+            let seeds = vseeds.expect("virtual build returns seeds");
+            let init = engine.init_params(cfg.seed as i32)?;
+            let vsampler = sampler.expect("validated: virtual_nodes needs epidemic topology");
+            vec![Box::new(vnode::VirtualShard::new(
+                seeds,
+                init,
+                cfg.seed,
+                cfg.participation,
+                cfg.asyn.clone(),
+                vsampler,
+                byz.clone(),
+                node_of.clone(),
+            )) as Box<dyn ShardBackend>]
+        } else if !local_backends {
             // multi-process engine: one worker process per contiguous
             // range; each rebuilds the identical world from the shipped
             // config
@@ -574,6 +700,7 @@ impl Trainer {
         };
 
         let pool = WorkerPool::new(cfg.threads);
+        let honest_ids: Vec<usize> = (0..cfg.n).filter(|&id| !byz[id]).collect();
         log::info!(
             "trainer '{}': n={} b={} b̂={bhat} rule={} engine={} d={d} shards={} procs={} threads={}",
             cfg.name,
@@ -589,6 +716,7 @@ impl Trainer {
             bhat,
             byz,
             node_of,
+            honest_ids,
             sampler,
             push_s,
             gossip_rows,
@@ -604,7 +732,13 @@ impl Trainer {
             backends,
             local_backends,
             h,
-            tbl_halves: vec![vec![0.0f32; d]; h],
+            // the virtual backend rebuilds (only) the touched rows each
+            // round; pre-sizing h dense rows would defeat it
+            tbl_halves: if virtual_nodes {
+                vec![Vec::new(); h]
+            } else {
+                vec![vec![0.0f32; d]; h]
+            },
             tbl_params,
             tbl_losses: vec![0.0f64; h],
             tbl_byz_seen: vec![0usize; h],
@@ -697,6 +831,7 @@ impl Trainer {
             // bucket (max_staleness + 1) is the params-fallback regime
             hist.staleness_hist = vec![0u64; self.cfg.asyn.max_staleness + 2];
         }
+        let sparse_on = self.cfg.virtual_nodes || self.cfg.participation < 1.0;
         for round in 0..self.cfg.rounds {
             let loss = self.round(round)?;
             hist.train_loss.push(loss);
@@ -707,6 +842,12 @@ impl Trainer {
             hist.wire_coord_out_per_round.push(self.last_round_wire.0 as usize);
             hist.wire_coord_in_per_round.push(self.last_round_wire.1 as usize);
             hist.wire_peer_per_round.push(self.last_round_wire.2 as usize);
+            if sparse_on {
+                let (active, materialized, resident) = self.sparse_round_stats(round);
+                hist.active_per_round.push(active);
+                hist.materialized_per_round.push(materialized);
+                hist.resident_bytes_per_round.push(resident);
+            }
             if async_on {
                 hist.participation_per_round.push(self.last_round_participation);
                 hist.virtual_close_per_round.push(self.last_round_vclose);
@@ -728,27 +869,33 @@ impl Trainer {
     /// Every phase is bit-deterministic for any (procs × shards ×
     /// threads) grid point — see the module docs for the protocol.
     pub fn round(&mut self, round: usize) -> Result<f64> {
+        // the round's active set (None ⇒ full participation): the same
+        // per-node PARTICIPATE coin the job dispatches check, folded
+        // once here for the digest/loss/serve phases
+        let active = self.compute_active(round);
         // 0. async engine only: resolve the virtual-clock schedule and
         // ship each worker its staleness slice (None ⇒ synchronous)
         let sched = self.phase_async_begin(round)?;
         // 1. local half-steps (Algorithm 1 lines 3–6) — stale nodes
         // compute too (discarded): their RNG/momentum state must stay
-        // on-schedule for the bit-identical neutral-config guarantee
-        let mut loss = self.phase_half_steps(round)?;
+        // on-schedule for the bit-identical neutral-config guarantee.
+        // Inactive nodes do NOT compute: their streams freeze with them
+        let mut loss = self.phase_half_steps(round, active.as_deref())?;
         // 1b. async: apply the served-row policy to the published table
         // and restrict the loss fold to fresh nodes
         if let Some(sched) = sched.as_ref() {
-            loss = self.phase_async_serve(sched);
+            loss = self.phase_async_serve(sched, active.as_deref());
         }
         // 2. fold the published rows into the global honest digest the
-        // omniscient adversary conditions on
-        self.phase_attack_context();
+        // omniscient adversary conditions on (active rows only: resting
+        // nodes publish no new information)
+        self.phase_attack_context(active.as_deref());
         // 3. push mode: honest senders scatter to s recipients; Byzantine
         // senders flood every honest node (the Appendix-D failure mode)
         let push_recv = self.phase_push_routes(round);
         // 4. pull, attack, aggregate — against the immutable round table
         // (synchronous model)
-        self.phase_pull_craft_aggregate(round, push_recv.as_deref())?;
+        self.phase_pull_craft_aggregate(round, push_recv.as_deref(), active.as_deref())?;
         // 5. synchronous swap, backend by backend; fold the telemetry.
         // Async: non-fresh nodes do not commit — their params and
         // ledgers return to the pre-round state (workers handle their
@@ -757,6 +904,49 @@ impl Trainer {
         self.phase_commit()?;
         self.phase_async_post_commit(saved);
         Ok(loss)
+    }
+
+    /// The round's honest active set under partial participation, or
+    /// None at `participation = 1.0` (nothing is drawn — the dense
+    /// engine's bits cannot shift). Honest-indexed; a pure function of
+    /// `(seed, round)`, identical on every grid point.
+    fn compute_active(&self, round: usize) -> Option<Vec<bool>> {
+        if self.cfg.participation >= 1.0 {
+            return None;
+        }
+        let p = self.cfg.participation;
+        Some(
+            self.honest_ids
+                .iter()
+                .map(|&id| vnode::is_active(self.cfg.seed, round, id, p))
+                .collect(),
+        )
+    }
+
+    /// The sparse ledgers' round entry: (active, materialized,
+    /// resident-bytes). The virtual backend reports its own stores; the
+    /// dense engines recount the public PARTICIPATE coins (byte-exact
+    /// with what the job dispatches decided) and report full residency —
+    /// h materialized rows plus every node's params + momentum. Public
+    /// so memory-diet tests (`rust/tests/large_n.rs`) can read residency
+    /// after driving [`Trainer::round`] directly, without a full `run()`.
+    pub fn sparse_round_stats(&self, round: usize) -> (u32, u32, u64) {
+        let tbl: u64 = self
+            .tbl_halves
+            .iter()
+            .chain(self.tbl_params.iter())
+            .map(|r| r.len() as u64 * 4)
+            .sum();
+        if let Some(v) = self.backends[0].as_virtual() {
+            let s = v.stats();
+            return (s.active, s.materialized, s.resident_bytes + tbl);
+        }
+        let active = match self.compute_active(round) {
+            Some(mask) => mask.iter().filter(|&&a| a).count() as u32,
+            None => self.h as u32,
+        };
+        let d = self.engine.d() as u64;
+        (active, self.h as u32, tbl + self.h as u64 * 2 * d * 4)
     }
 
     /// Phase 0 (async engine only): advance the virtual clock, stash the
@@ -779,12 +969,18 @@ impl Trainer {
     }
 
     /// Phase 1b (async): transform each published row per the staleness
-    /// policy (in-process path — worker processes transform their own
-    /// rows before shipping their snapshots, so with remote backends the
-    /// table already holds served rows) and fold the fresh-only loss.
-    fn phase_async_serve(&mut self, sched: &RoundSchedule) -> f64 {
+    /// policy (in-process path — worker processes and the virtual
+    /// backend transform their own rows before publishing, so the table
+    /// already holds served rows) and fold the fresh-only loss.
+    /// Inactivity trumps staleness: an inactive node's row IS its
+    /// committed params, untransformed, and its carried snapshot stays
+    /// frozen with the rest of its state.
+    fn phase_async_serve(&mut self, sched: &RoundSchedule, active: Option<&[bool]>) -> f64 {
         if self.local_backends {
             for (i, &st) in sched.stale.iter().enumerate() {
+                if !active.map_or(true, |m| m[i]) {
+                    continue;
+                }
                 serve_row(
                     &self.cfg.asyn,
                     st,
@@ -794,12 +990,12 @@ impl Trainer {
                 );
             }
         }
-        // serial fresh-only fold in ascending honest order; with every
-        // node fresh this is exactly the synchronous sum/h
+        // serial fresh∩active fold in ascending honest order; with every
+        // node fresh and active this is exactly the synchronous sum/h
         let mut sum = 0.0f64;
         let mut fresh = 0usize;
         for (i, &st) in sched.stale.iter().enumerate() {
-            if st == 0 {
+            if st == 0 && active.map_or(true, |m| m[i]) {
                 sum += self.tbl_losses[i];
                 fresh += 1;
             }
@@ -862,7 +1058,7 @@ impl Trainer {
     /// Phase 1: every honest node's local train step. Remote backends are
     /// kicked off first so worker processes compute concurrently with the
     /// in-process shards.
-    fn phase_half_steps(&mut self, round: usize) -> Result<f64> {
+    fn phase_half_steps(&mut self, round: usize, active: Option<&[bool]>) -> Result<f64> {
         let step_ctx = StepCtx {
             engine: self.engine.as_ref(),
             lr: self.cfg.lr_at(round),
@@ -870,6 +1066,9 @@ impl Trainer {
             wd: self.cfg.weight_decay,
             local_steps: self.engine.local_steps(),
             batch: self.engine.batch(),
+            seed: self.cfg.seed,
+            round,
+            participation: self.cfg.participation,
         };
         for backend in self.backends.iter_mut() {
             backend.half_step_begin(round)?;
@@ -906,9 +1105,19 @@ impl Trainer {
             }
         }
         // serial fold in ascending honest order: identical for every
-        // grid point
+        // grid point. Inactive nodes hold exactly 0.0 (the dispatches
+        // wrote it), so folding the full table adds only exact zeros;
+        // the mean is over the nodes that actually trained
         let sum: f64 = self.tbl_losses.iter().sum();
-        Ok(sum / self.h as f64)
+        let denom = match active {
+            Some(mask) => mask.iter().filter(|&&a| a).count(),
+            None => self.h,
+        };
+        if denom == 0 {
+            Ok(0.0)
+        } else {
+            Ok(sum / denom as f64)
+        }
     }
 
     /// Phase 2: fold the half-step table into the global honest digest,
@@ -917,14 +1126,43 @@ impl Trainer {
     /// Skipped entirely when nothing will read it (no Byzantine nodes, or
     /// DoS where nothing is crafted); the O(h·d) variance pass runs only
     /// for ALIE, its sole consumer.
-    fn phase_attack_context(&mut self) {
+    /// The fold is restricted to the round's ACTIVE rows: a resting node
+    /// publishes no new information, so the omniscient adversary (like
+    /// everything else) conditions only on what the round produced. The
+    /// virtual backend supplies its live set directly — its committed
+    /// prev-params live in the materialized nodes, not the (empty)
+    /// mirror rows — and the dense engines filter by the same mask, so
+    /// the folds are row-for-row identical.
+    fn phase_attack_context(&mut self, active: Option<&[bool]>) {
         use crate::attacks::AttackKind;
         if self.cfg.b == 0 || self.cfg.attack == AttackKind::Dos {
             return;
         }
-        let halves: Vec<&[f32]> = self.tbl_halves.iter().map(|r| r.as_slice()).collect();
-        let prevs: Vec<&[f32]> = self.tbl_params.iter().map(|r| r.as_slice()).collect();
         let with_std = self.cfg.attack == AttackKind::Alie;
+        if let Some(v) = self.backends[0].as_virtual() {
+            let live = v.live();
+            let halves: Vec<&[f32]> =
+                live.iter().map(|&(hi, _)| self.tbl_halves[hi].as_slice()).collect();
+            let prevs: Vec<&[f32]> =
+                live.iter().map(|(_, node)| node.params.as_slice()).collect();
+            self.digest.recompute(&halves, &prevs, with_std);
+            return;
+        }
+        let keep = |i: usize| active.map_or(true, |m| m[i]);
+        let halves: Vec<&[f32]> = self
+            .tbl_halves
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| keep(i))
+            .map(|(_, r)| r.as_slice())
+            .collect();
+        let prevs: Vec<&[f32]> = self
+            .tbl_params
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| keep(i))
+            .map(|(_, r)| r.as_slice())
+            .collect();
         self.digest.recompute(&halves, &prevs, with_std);
     }
 
@@ -962,10 +1200,16 @@ impl Trainer {
     /// paths derive per-victim sets locally from the same keys, and any
     /// divergence splits pipe vs socket results. The determinism suite
     /// pins it, but edit both sites together.
+    /// Under partial participation an inactive victim's row is shipped
+    /// EMPTY: its aggregation job short-circuits before reading the
+    /// routes, and the empty reference list is what makes socket workers
+    /// skip fetching rows nobody will aggregate — the deterministic
+    /// "skip inactive" rule on the wire.
     fn phase_routing_table(
         &self,
         round: usize,
         push_recv: Option<&[Vec<usize>]>,
+        active: Option<&[bool]>,
     ) -> Option<Vec<Vec<usize>>> {
         if self.local_backends || !self.cfg.transport.is_socket() {
             return None;
@@ -974,7 +1218,12 @@ impl Trainer {
             let mut routes = Vec::with_capacity(self.h);
             for id in 0..self.cfg.n {
                 if !self.byz[id] {
-                    routes.push(sampler.sample_at(self.cfg.seed, round, id));
+                    let hi = routes.len();
+                    routes.push(if active.map_or(true, |m| m[hi]) {
+                        sampler.sample_at(self.cfg.seed, round, id)
+                    } else {
+                        Vec::new()
+                    });
                 }
             }
             return Some(routes);
@@ -1008,8 +1257,9 @@ impl Trainer {
         &mut self,
         round: usize,
         push_recv: Option<&[Vec<usize>]>,
+        active: Option<&[bool]>,
     ) -> Result<()> {
-        let routes_tbl = self.phase_routing_table(round, push_recv);
+        let routes_tbl = self.phase_routing_table(round, push_recv, active);
         // round-scope the distance memo: the half-step table it keys
         // over is rebuilt every round
         self.dist_cache.clear();
@@ -1031,6 +1281,7 @@ impl Trainer {
             dos: self.cfg.attack == crate::attacks::AttackKind::Dos,
             dist_cache: self.dist_cache_on.then_some(&self.dist_cache),
             wire_frame: std::sync::OnceLock::new(),
+            participation: self.cfg.participation,
         };
         // serve-pulls phase: socket workers get the digest + their slice
         // of the routing table and start fetching from each other
@@ -1097,20 +1348,33 @@ impl Trainer {
         let n_test = self.test_y.len() as f64;
         let h = self.h;
         let engine: &dyn ComputeEngine = self.engine.as_ref();
-        let params: Vec<&[f32]> = self.tbl_params.iter().map(|r| r.as_slice()).collect();
-        let params = &params;
         let test_x = &self.test_x;
         let test_y = &self.test_y;
         let mut accs = vec![0.0f64; h];
         let mut losses = vec![0.0f64; h];
         let mut jobs: Vec<(&mut f64, &mut f64)> =
             accs.iter_mut().zip(losses.iter_mut()).collect();
-        self.pool.try_for_each(&mut jobs, |i, job| {
-            let (correct, loss_sum) = engine.evaluate(params[i], test_x, test_y)?;
-            *job.0 = correct / n_test;
-            *job.1 = loss_sum / n_test;
-            Ok(())
-        })?;
+        if let Some(v) = self.backends[0].as_virtual() {
+            // the mirror is empty on purpose: materialize each node's
+            // committed row inside its own job — O(d) scratch per worker,
+            // never h rows at once
+            self.pool.try_for_each(&mut jobs, |i, job| {
+                let row = v.committed_row(i);
+                let (correct, loss_sum) = engine.evaluate(&row, test_x, test_y)?;
+                *job.0 = correct / n_test;
+                *job.1 = loss_sum / n_test;
+                Ok(())
+            })?;
+        } else {
+            let params: Vec<&[f32]> = self.tbl_params.iter().map(|r| r.as_slice()).collect();
+            let params = &params;
+            self.pool.try_for_each(&mut jobs, |i, job| {
+                let (correct, loss_sum) = engine.evaluate(params[i], test_x, test_y)?;
+                *job.0 = correct / n_test;
+                *job.1 = loss_sum / n_test;
+                Ok(())
+            })?;
+        }
         drop(jobs);
         Ok(EvalPoint {
             round,
@@ -1120,10 +1384,24 @@ impl Trainer {
         })
     }
 
+    /// One honest node's committed parameters, by value — works for
+    /// every backend: the virtual engine XOR-folds the node's delta log
+    /// on demand (O(d·log-length)); the dense engines clone the mirror
+    /// row. This is the accessor the cross-engine equality pins use.
+    pub fn committed_params(&self, honest_idx: usize) -> Vec<f32> {
+        debug_assert!(honest_idx < self.h);
+        match self.backends[0].as_virtual() {
+            Some(v) => v.committed_row(honest_idx),
+            None => self.tbl_params[honest_idx].clone(),
+        }
+    }
+
     /// Immutable view of one honest node's committed parameters. O(1):
     /// the contiguous partition makes the honest index a direct row index
     /// into the committed-params mirror (the former per-shard linear
-    /// scan — and its unreachable `panic!` — are gone).
+    /// scan — and its unreachable `panic!` — are gone). Dense engines
+    /// only — the virtual backend keeps no mirror rows; use
+    /// [`Self::committed_params`] there.
     pub fn params_of(&self, honest_idx: usize) -> &[f32] {
         debug_assert!(
             honest_idx < self.h,
@@ -1385,6 +1663,91 @@ mod tests {
         assert_eq!(a.staleness_hist[0], fresh);
         // slow_prob 0.35 with quorum 5/7 over 12 rounds must straggle
         assert!(a.staleness_hist[1..].iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn virtual_backend_reproduces_dense_bit_for_bit() {
+        let cfg = quick_cfg();
+        let mut dense = Trainer::from_config(&cfg).unwrap();
+        let dh = dense.run().unwrap();
+        let mut vcfg = quick_cfg();
+        vcfg.virtual_nodes = true;
+        let mut virt = Trainer::from_config(&vcfg).unwrap();
+        let vh = virt.run().unwrap();
+        // same losses, same telemetry, same committed bits — the XOR
+        // delta-log representation and lazy materialization must be
+        // invisible
+        assert_eq!(dh.train_loss, vh.train_loss);
+        assert_eq!(dh.observed_byz_max, vh.observed_byz_max);
+        assert_eq!(dh.total_delivered, vh.total_delivered);
+        for i in 0..dense.honest_count() {
+            assert_eq!(
+                dense.committed_params(i),
+                virt.committed_params(i),
+                "node {i}"
+            );
+        }
+        // full participation: every node active and materialized, ledgers
+        // present only because the backend is virtual
+        assert_eq!(vh.active_per_round, vec![cfg.honest() as u32; cfg.rounds]);
+        assert!(dh.active_per_round.is_empty(), "dense full participation keeps no sparse ledgers");
+    }
+
+    #[test]
+    fn partial_participation_freezes_inactive_nodes() {
+        let mut cfg = quick_cfg();
+        cfg.participation = 0.5;
+        let a = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let b = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(a.train_loss, b.train_loss, "participation coins are counter-keyed");
+        assert_eq!(a.active_per_round, b.active_per_round);
+        assert_eq!(a.active_per_round.len(), cfg.rounds);
+        let h = cfg.honest() as u32;
+        assert!(a.active_per_round.iter().all(|&x| x <= h));
+        assert!(
+            a.active_per_round.iter().any(|&x| x < h),
+            "p=0.5 over 12 rounds must rest someone: {:?}",
+            a.active_per_round
+        );
+        // the ledger recomputes byte-exactly from the public stream
+        let t = Trainer::from_config(&cfg).unwrap();
+        for (round, &led) in a.active_per_round.iter().enumerate() {
+            let expect = t
+                .honest_ids
+                .iter()
+                .filter(|&&id| vnode::is_active(cfg.seed, round, id, cfg.participation))
+                .count() as u32;
+            assert_eq!(led, expect, "round {round}");
+        }
+        // fewer rows move: delivered is bounded by the dense run's
+        let dense = Trainer::from_config(&quick_cfg()).unwrap().run().unwrap();
+        assert!(a.total_delivered < dense.total_delivered);
+    }
+
+    #[test]
+    fn virtual_matches_dense_under_partial_participation() {
+        let mut dcfg = quick_cfg();
+        dcfg.participation = 0.6;
+        let mut dense = Trainer::from_config(&dcfg).unwrap();
+        let dh = dense.run().unwrap();
+        let mut vcfg = dcfg.clone();
+        vcfg.virtual_nodes = true;
+        let mut virt = Trainer::from_config(&vcfg).unwrap();
+        let vh = virt.run().unwrap();
+        assert_eq!(dh.train_loss, vh.train_loss);
+        assert_eq!(dh.active_per_round, vh.active_per_round);
+        for i in 0..dense.honest_count() {
+            assert_eq!(dense.committed_params(i), virt.committed_params(i), "node {i}");
+        }
+        // the sparse backend holds fewer resident bytes than the dense
+        // engine's full tables once someone has rested
+        let dmax = dh.resident_bytes_per_round.iter().max().unwrap();
+        let vmax = vh.resident_bytes_per_round.iter().max().unwrap();
+        assert!(vmax < dmax, "virtual {vmax} >= dense {dmax}");
+        // materialized = active ∪ pulled ≤ h, ≥ active
+        for (m, a) in vh.materialized_per_round.iter().zip(&vh.active_per_round) {
+            assert!(m >= a && *m <= dcfg.honest() as u32);
+        }
     }
 
     #[test]

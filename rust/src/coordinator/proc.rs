@@ -859,6 +859,9 @@ impl WorkerShard {
             wd: self.cfg.weight_decay,
             local_steps: self.engine.local_steps(),
             batch: self.engine.batch(),
+            seed: self.cfg.seed,
+            round,
+            participation: self.cfg.participation,
         };
         self.shard
             .half_step(&ctx, &self.pool, &mut self.halves, &mut self.losses)?;
@@ -873,8 +876,20 @@ impl WorkerShard {
                 self.stale_round
             );
             // owner-side served-row transform, BEFORE RowServer publish
-            // and Snapshot encode: both transports serve the same bytes
+            // and Snapshot encode: both transports serve the same bytes.
+            // Inactivity trumps staleness: an inactive node's row is its
+            // committed params as the dispatch wrote it, untransformed,
+            // and its carried snapshot stays frozen (exactly what the
+            // coordinator's in-process path skips)
             for (i, &st) in self.cur_stale.iter().enumerate() {
+                if !super::vnode::is_active(
+                    self.cfg.seed,
+                    round,
+                    self.shard.nodes[i].id,
+                    self.cfg.participation,
+                ) {
+                    continue;
+                }
                 serve_row(
                     &self.cfg.asyn,
                     st,
@@ -951,6 +966,7 @@ impl WorkerShard {
             dos: self.cfg.attack == AttackKind::Dos,
             dist_cache: Some(&self.dist_cache),
             wire_frame: std::sync::OnceLock::new(),
+            participation: self.cfg.participation,
         };
         self.shard.aggregate(
             round,
@@ -1051,6 +1067,7 @@ impl WorkerShard {
             dos: self.cfg.attack == AttackKind::Dos,
             dist_cache: Some(&self.dist_cache),
             wire_frame: std::sync::OnceLock::new(),
+            participation: self.cfg.participation,
         };
         self.shard.aggregate(
             round,

@@ -73,6 +73,16 @@ pub(crate) struct StepCtx<'a> {
     pub wd: f32,
     pub local_steps: usize,
     pub batch: usize,
+    /// Partial-participation key: a node whose
+    /// `(seed, round, id, PARTICIPATE)` coin lands at or above
+    /// `participation` skips the step entirely — no compute, no data-RNG
+    /// or momentum advance — and publishes its committed params instead.
+    /// Checked per job by global node id inside the dispatch, so every
+    /// backend (in-process, worker process, virtual) derives the same
+    /// active set independently. `participation = 1.0` short-circuits.
+    pub seed: u64,
+    pub round: usize,
+    pub participation: f64,
 }
 
 /// Immutable round context for the pull/craft/aggregate phase — the
@@ -121,6 +131,10 @@ pub(crate) struct AggCtx<'a> {
     /// the first remote backend encodes it once and the rest reuse the
     /// bytes (`OnceLock` keeps the ctx shareable across pool threads).
     pub wire_frame: std::sync::OnceLock<Vec<u8>>,
+    /// Partial-participation fraction (see [`StepCtx::participation`]):
+    /// an inactive victim pulls nothing and keeps its committed params as
+    /// the round's output, with zeroed byz-seen / delivered counts.
+    pub participation: f64,
 }
 
 /// One contiguous range of honest nodes, driven through the round phases
@@ -181,6 +195,13 @@ pub(crate) trait ShardBackend: Send {
     fn as_node_shard(&mut self) -> Option<&mut NodeShard> {
         None
     }
+    /// Downcast to the virtual-node backend, when this backend is one.
+    /// The coordinator uses it for the digest fold (committed prev-params
+    /// live in the backend's materialized active set, not the trainer's
+    /// mirror rows) and the sparse resident-state ledgers.
+    fn as_virtual(&self) -> Option<&super::vnode::VirtualShard> {
+        None
+    }
     /// Drain this backend's wire-byte counters since the last call:
     /// `(coordinator→worker, worker→coordinator, peer-served)` bytes.
     /// In-process backends report zeros.
@@ -199,23 +220,25 @@ pub(crate) trait ShardBackend: Send {
     }
 }
 
-/// One node's slot in the parallel half-step phase.
-struct HalfStepJob<'a> {
-    node: &'a mut NodeState,
-    half: &'a mut Vec<f32>,
-    loss: &'a mut f64,
+/// One node's slot in the parallel half-step phase. `pub(crate)` so the
+/// virtual backend ([`super::vnode`]) can stage jobs for its
+/// (non-contiguous) materialized active set through the same dispatch.
+pub(crate) struct HalfStepJob<'a> {
+    pub node: &'a mut NodeState,
+    pub half: &'a mut Vec<f32>,
+    pub loss: &'a mut f64,
 }
 
 /// One victim's slot in the parallel pull/craft/aggregate phase. Carries
 /// the owning node and its global honest index so jobs from many shards
 /// can share a single flat dispatch.
-struct AggJob<'a> {
-    node: &'a NodeState,
+pub(crate) struct AggJob<'a> {
+    pub node: &'a NodeState,
     /// the victim's global honest index (contiguous partition)
-    gi: usize,
-    out: &'a mut Vec<f32>,
-    byz_seen: &'a mut usize,
-    received: &'a mut usize,
+    pub gi: usize,
+    pub out: &'a mut Vec<f32>,
+    pub byz_seen: &'a mut usize,
+    pub received: &'a mut usize,
 }
 
 thread_local! {
@@ -334,7 +357,7 @@ impl NodeShard {
 }
 
 /// Execute collected half-step jobs in one pool dispatch.
-fn run_half_step_jobs(
+pub(crate) fn run_half_step_jobs(
     jobs: &mut Vec<HalfStepJob<'_>>,
     ctx: &StepCtx<'_>,
     pool: &WorkerPool,
@@ -343,6 +366,14 @@ fn run_half_step_jobs(
     let (k, batch) = (ctx.local_steps, ctx.batch);
     let (lr, beta, wd) = (ctx.lr, ctx.beta, ctx.wd);
     pool.try_for_each(jobs, |_, job| {
+        if !super::vnode::is_active(ctx.seed, ctx.round, job.node.id, ctx.participation) {
+            // inactive this round: no compute, no data-RNG or momentum
+            // advance — peers see the committed params, and the zeroed
+            // loss is excluded from the round's loss fold
+            job.half.copy_from_slice(&job.node.params);
+            *job.loss = 0.0;
+            return Ok(());
+        }
         job.half.copy_from_slice(&job.node.params);
         // batch draws come from the node's own shard stream — already
         // independent of scheduling order
@@ -361,7 +392,7 @@ fn run_half_step_jobs(
 }
 
 /// Execute collected pull/craft/aggregate jobs in one pool dispatch.
-fn run_agg_jobs(
+pub(crate) fn run_agg_jobs(
     jobs: &mut Vec<AggJob<'_>>,
     round: usize,
     ctx: &AggCtx<'_>,
@@ -374,6 +405,14 @@ fn run_agg_jobs(
     pool.try_for_each(jobs, |_, job| {
             let node = job.node;
             let id = node.id;
+            if !super::vnode::is_active(ctx.seed, round, id, ctx.participation) {
+                // inactive victim: pulls nothing, aggregates nothing —
+                // its committed params carry through the round unchanged
+                job.out.copy_from_slice(&node.params);
+                *job.byz_seen = 0;
+                *job.received = 0;
+                return Ok(());
+            }
             // this victim's global honest index (contiguous partition)
             let gi = job.gi;
             let d = job.out.len();

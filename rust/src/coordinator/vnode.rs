@@ -1,0 +1,668 @@
+//! The sparse-activation **virtual-node** backend: million-node rounds
+//! with lazily materialized per-node state.
+//!
+//! The dense engine keeps `params`, `momentum` and a materialized data
+//! shard resident for every honest node — O(h·d) floats before the first
+//! round runs. This backend inverts that: a node's committed state is a
+//! *recipe*, not a buffer, and full vectors exist only for the nodes a
+//! round actually touches.
+//!
+//! # Committed-state lifecycle
+//!
+//! ```text
+//!  seed ──▶ shared init row (init_params is a pure function of the
+//!  │        experiment seed, so every node starts from the SAME bits)
+//!  │
+//!  ├─ round t commits: delta = bits(x^{t+1}) XOR bits(x^t), appended to
+//!  │  the node's delta log (all-zero deltas — skipped rounds, stale
+//!  │  discards — are not stored)
+//!  │
+//!  ├─ log longer than COMPACT_AFTER ──▶ fold the log into a per-node
+//!  │  compacted arena row, clear the log
+//!  │
+//!  └─ committed params of node i = (arena row | init row) XOR-folded
+//!     with the log — **bit-exact**, because XOR of IEEE-754 bit patterns
+//!     round-trips where f32 arithmetic would not. Materialization is a
+//!     representation change, never FP noise.
+//! ```
+//!
+//! Data is the same story: the world build snapshots each node's RNG
+//! states (the `0x5AD + id` fork and the shared data stream's position)
+//! plus its Dirichlet label multiset as bytes, and the actual `Shard` is
+//! sampled on the node's **first** activation — producing bit-for-bit
+//! the dataset the dense build would have produced — then kept (its
+//! cursor/RNG must persist across activations).
+//!
+//! # The active set
+//!
+//! [`is_active`] draws the round's participation coin from the public
+//! `(seed, round, node, PARTICIPATE)` stream, keyed by **global** node
+//! id: the coordinator, every in-process shard, every worker process and
+//! this backend derive the same active set independently, which is what
+//! keeps results bit-identical across the whole transport × procs ×
+//! shards × threads grid. Per round the backend:
+//!
+//! 1. computes the active set and materializes exactly those nodes
+//!    (committed row + stored-or-zero momentum + stored-or-sampled
+//!    shard);
+//! 2. stages their half-step jobs through the SAME dispatch the dense
+//!    engine uses ([`super::shard::run_half_step_jobs`]), then applies
+//!    the async served-row transform to active rows (worker-style);
+//! 3. populates the half-step table rows active victims will pull from
+//!    inactive peers with those peers' committed params (pull sets are
+//!    pure functions of `(seed, round, victim, PULL)`, so the set of
+//!    touched rows is known before aggregation) — everything else stays
+//!    an empty row;
+//! 4. aggregates through [`super::shard::run_agg_jobs`] and commits by
+//!    appending XOR deltas, returning momentum and shard to the store.
+//!
+//! Inactive nodes carry committed state at zero per-round cost: no
+//! compute, no RNG or momentum advance, zero ledger counts, and peers
+//! that pull them observe the committed params — exactly the dense
+//! engine's `participation < 1` semantics, which is why dense and
+//! virtual runs are bit-identical at every participation level.
+
+use super::sampler::PullSampler;
+use super::shard::{
+    run_agg_jobs, run_half_step_jobs, AggCtx, AggJob, HalfStepJob, NodeState, ShardBackend,
+    StepCtx,
+};
+use crate::data::{Shard, TaskInstance};
+use crate::util::pool::WorkerPool;
+use crate::util::rng::{stream_tag, Rng};
+use crate::util::vclock::{serve_row, AsyncCfg};
+use anyhow::Result;
+
+/// Delta-log length at which a node's log is folded into its compacted
+/// arena row. Small enough that `committed_row` stays O(d), large enough
+/// that a node active every round doesn't re-fold per commit.
+const COMPACT_AFTER: usize = 4;
+
+/// The round's participation coin: node `node` is active in `round` iff
+/// the first `f64` of its `(seed, round, node, PARTICIPATE)` stream lands
+/// below `participation`. A pure function of its key — every backend in
+/// every process derives the same active set. `participation >= 1.0`
+/// short-circuits (the dense full-participation regime draws nothing).
+pub fn is_active(seed: u64, round: usize, node: usize, participation: f64) -> bool {
+    participation >= 1.0
+        || Rng::stream(seed, round as u64, node as u64, stream_tag::PARTICIPATE).f64()
+            < participation
+}
+
+/// Per-round footprint of the virtual backend (the sparse ledgers'
+/// source): how many nodes were active, how many table rows were
+/// materialized (active ∪ pulled), and the bytes actually resident in
+/// the backend's stores.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SparseStats {
+    /// honest nodes whose PARTICIPATE coin landed below the fraction
+    pub active: u32,
+    /// rows materialized this round: active nodes plus the inactive
+    /// peers some active victim pulled
+    pub materialized: u32,
+    /// bytes resident in the backend after commit: seed substrate,
+    /// arena rows + delta logs, stored momentum/shards/carried rows
+    pub resident_bytes: u64,
+}
+
+/// Everything needed to materialize any node's state on demand, captured
+/// by the world build at construction time (see
+/// [`super::build_world_virtual`]): per-node RNG snapshots and compact
+/// label bytes instead of sampled datasets and parameter buffers.
+pub(crate) struct VirtualSeeds {
+    /// global node id per honest index
+    pub ids: Vec<usize>,
+    /// the node's `0x5AD + id` fork, pre-`Shard::new` (whose reshuffle
+    /// consumes from it)
+    pub node_rngs: Vec<Rng>,
+    /// the shared data stream's position just before this node's
+    /// `sample_labels` draws
+    pub data_rngs: Vec<Rng>,
+    /// Dirichlet label multisets, flattened (class counts fit u8)
+    pub labels_flat: Vec<u8>,
+    /// prefix offsets into `labels_flat`, length h+1
+    pub label_off: Vec<u32>,
+    /// the frozen task instance (class means) all shards sample from
+    pub task: TaskInstance,
+}
+
+impl VirtualSeeds {
+    fn labels_of(&self, hi: usize) -> &[u8] {
+        &self.labels_flat[self.label_off[hi] as usize..self.label_off[hi + 1] as usize]
+    }
+}
+
+/// The sparse backend: one instance hosts ALL honest nodes (start 0,
+/// length h) behind the ordinary [`ShardBackend`] protocol, so the
+/// trainer drives it exactly like a remote shard — which is also what
+/// keeps the round tables sparse (rows it does not touch stay empty).
+pub(crate) struct VirtualShard {
+    h: usize,
+    d: usize,
+    seed: u64,
+    participation: f64,
+    asyn: AsyncCfg,
+    sampler: PullSampler,
+    byz: Vec<bool>,
+    node_of: Vec<usize>,
+    seeds: VirtualSeeds,
+    /// shared init row (f32 and bit views): every node's round-0 state
+    init: Vec<f32>,
+    init_bits: Vec<u32>,
+    /// compacted arena row per node (None ⇒ still on the shared init row)
+    base: Vec<Option<Box<[u32]>>>,
+    /// XOR delta log per node, committed round order
+    logs: Vec<Vec<Box<[u32]>>>,
+    /// momentum parked between activations (None ⇒ never active: zeros)
+    momentum: Vec<Option<Box<[f32]>>>,
+    /// data shard parked between activations (None ⇒ sampled on first
+    /// activation; MUST persist afterwards — cursor/RNG state advance)
+    shards: Vec<Option<Shard>>,
+    /// async engine: last fresh served row per node (the worker-side
+    /// `carried` twin; only ever Some for nodes that were active+fresh)
+    carried: Vec<Option<Vec<f32>>>,
+    /// async engine: this round's staleness schedule + its round
+    cur_stale: Vec<u32>,
+    stale_round: Option<u64>,
+    /// this round's materialized nodes, ascending honest index
+    live: Vec<(usize, NodeState)>,
+    /// aggregation outputs, parallel to `live`
+    next: Vec<Vec<f32>>,
+    /// sparse ledger sources for the round in flight
+    round_active: u32,
+    round_materialized: u32,
+}
+
+impl VirtualShard {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        seeds: VirtualSeeds,
+        init: Vec<f32>,
+        seed: u64,
+        participation: f64,
+        asyn: AsyncCfg,
+        sampler: PullSampler,
+        byz: Vec<bool>,
+        node_of: Vec<usize>,
+    ) -> VirtualShard {
+        let h = seeds.ids.len();
+        let d = init.len();
+        let init_bits: Vec<u32> = init.iter().map(|x| x.to_bits()).collect();
+        VirtualShard {
+            h,
+            d,
+            seed,
+            participation,
+            asyn,
+            sampler,
+            byz,
+            node_of,
+            seeds,
+            init,
+            init_bits,
+            base: (0..h).map(|_| None).collect(),
+            logs: vec![Vec::new(); h],
+            momentum: (0..h).map(|_| None).collect(),
+            shards: (0..h).map(|_| None).collect(),
+            carried: vec![None; h],
+            cur_stale: Vec::new(),
+            stale_round: None,
+            live: Vec::new(),
+            next: Vec::new(),
+            round_active: 0,
+            round_materialized: 0,
+        }
+    }
+
+    /// Committed parameter bits of node `hi`: arena (or init) row
+    /// XOR-folded with the delta log. Bit-exact by construction.
+    fn committed_bits(&self, hi: usize) -> Vec<u32> {
+        let mut bits: Vec<u32> = match &self.base[hi] {
+            Some(row) => row.to_vec(),
+            None => self.init_bits.clone(),
+        };
+        for delta in &self.logs[hi] {
+            for (o, x) in bits.iter_mut().zip(delta.iter()) {
+                *o ^= x;
+            }
+        }
+        bits
+    }
+
+    /// Committed params of node `hi` as f32 — the row peers observe when
+    /// they pull an inactive node, and what evaluation reads.
+    pub fn committed_row(&self, hi: usize) -> Vec<f32> {
+        self.committed_bits(hi)
+            .into_iter()
+            .map(f32::from_bits)
+            .collect()
+    }
+
+    /// Record a commit: append `new` XOR committed to the delta log (an
+    /// all-zero delta is dropped), compacting the log into the arena row
+    /// once it grows past [`COMPACT_AFTER`].
+    fn absorb(&mut self, hi: usize, new: &[f32]) {
+        let old = self.committed_bits(hi);
+        let mut any = false;
+        let delta: Vec<u32> = new
+            .iter()
+            .zip(old.iter())
+            .map(|(n, o)| {
+                let x = n.to_bits() ^ o;
+                any |= x != 0;
+                x
+            })
+            .collect();
+        if !any {
+            return;
+        }
+        self.logs[hi].push(delta.into_boxed_slice());
+        if self.logs[hi].len() > COMPACT_AFTER {
+            let folded = self.committed_bits(hi);
+            self.base[hi] = Some(folded.into_boxed_slice());
+            self.logs[hi].clear();
+        }
+    }
+
+    /// Materialize node `hi` for this round: committed params, parked or
+    /// zero momentum, parked or first-touch-sampled data shard. The
+    /// first-touch sample replays exactly the dense build's draws: the
+    /// stored data-stream snapshot feeds `sample_labels`, then the
+    /// stored node fork feeds `Shard::new`'s epoch shuffle.
+    fn materialize(&mut self, hi: usize) -> NodeState {
+        let params = self.committed_row(hi);
+        let momentum = match self.momentum[hi].take() {
+            Some(m) => m.into_vec(),
+            None => vec![0.0f32; self.d],
+        };
+        let shard = match self.shards[hi].take() {
+            Some(s) => s,
+            None => {
+                let labels: Vec<i32> =
+                    self.seeds.labels_of(hi).iter().map(|&c| c as i32).collect();
+                let mut drng = self.seeds.data_rngs[hi].clone();
+                let data = self.seeds.task.sample_labels(&labels, &mut drng);
+                Shard::new(data, self.seeds.node_rngs[hi].clone())
+            }
+        };
+        NodeState {
+            id: self.seeds.ids[hi],
+            params,
+            momentum,
+            shard,
+        }
+    }
+
+    /// This round's materialized nodes (ascending honest index) — the
+    /// trainer's digest fold reads committed prev-params from here.
+    pub(crate) fn live(&self) -> &[(usize, NodeState)] {
+        &self.live
+    }
+
+    /// Resident-byte accounting plus the round's active/materialized
+    /// counts. Honest about every store the backend holds onto; the
+    /// trainer adds the round-table rows it owns itself.
+    pub fn stats(&self) -> SparseStats {
+        let d = self.d as u64;
+        let h = self.h as u64;
+        // the always-resident seed substrate: two 32-byte RNG snapshots,
+        // the id, a label offset, the Option discriminants of the four
+        // per-node stores, and the label bytes
+        let mut bytes = h * (32 + 32 + 8 + 4 + 8 * 3 + 24 + 4)
+            + self.seeds.labels_flat.len() as u64
+            + 2 * d * 4; // shared init row, f32 + bit views
+        for (hi, log) in self.logs.iter().enumerate() {
+            bytes += log.len() as u64 * d * 4;
+            if self.base[hi].is_some() {
+                bytes += d * 4;
+            }
+            if self.momentum[hi].is_some() {
+                bytes += d * 4;
+            }
+            if let Some(s) = &self.shards[hi] {
+                // dataset rows + labels + the shuffle order
+                bytes += s.len() as u64 * (s.dim() as u64 * 4 + 4 + 8);
+            }
+            if self.carried[hi].is_some() {
+                bytes += d * 4;
+            }
+        }
+        SparseStats {
+            active: self.round_active,
+            materialized: self.round_materialized,
+            resident_bytes: bytes,
+        }
+    }
+}
+
+impl ShardBackend for VirtualShard {
+    fn start(&self) -> usize {
+        0
+    }
+
+    fn len(&self) -> usize {
+        self.h
+    }
+
+    fn begin_round_async(&mut self, round: usize, stale: &[u32]) -> Result<()> {
+        self.cur_stale = stale.to_vec();
+        self.stale_round = Some(round as u64);
+        Ok(())
+    }
+
+    fn half_step_begin(&mut self, _round: usize) -> Result<()> {
+        Ok(())
+    }
+
+    fn half_step_end(
+        &mut self,
+        round: usize,
+        ctx: &StepCtx<'_>,
+        pool: &WorkerPool,
+        halves_out: &mut [Vec<f32>],
+        losses_out: &mut [f64],
+    ) -> Result<()> {
+        debug_assert_eq!(halves_out.len(), self.h);
+        // rows not rebuilt this round must not leak a previous round's
+        // contents: the table starts each round all-empty, all-zero-loss
+        for row in halves_out.iter_mut() {
+            *row = Vec::new();
+        }
+        for loss in losses_out.iter_mut() {
+            *loss = 0.0;
+        }
+
+        // 1. the active set, ascending — materialize exactly those nodes
+        self.live.clear();
+        for hi in 0..self.h {
+            if is_active(self.seed, round, self.seeds.ids[hi], self.participation) {
+                let node = self.materialize(hi);
+                self.live.push((hi, node));
+            }
+        }
+        self.round_active = self.live.len() as u32;
+
+        // 2. stage the active half-step jobs through the shared dispatch
+        // (split-cursor over the table slices: live is ascending)
+        {
+            let mut rest_h: &mut [Vec<f32>] = halves_out;
+            let mut rest_l: &mut [f64] = losses_out;
+            let mut offset = 0usize;
+            let mut jobs: Vec<HalfStepJob<'_>> = Vec::with_capacity(self.live.len());
+            for (hi, node) in self.live.iter_mut() {
+                let (_, h2) = std::mem::take(&mut rest_h).split_at_mut(*hi - offset);
+                let (_, l2) = std::mem::take(&mut rest_l).split_at_mut(*hi - offset);
+                let (half, h3) = h2.split_first_mut().expect("hi < h");
+                let (loss, l3) = l2.split_first_mut().expect("hi < h");
+                rest_h = h3;
+                rest_l = l3;
+                offset = *hi + 1;
+                *half = vec![0.0f32; self.d];
+                jobs.push(HalfStepJob { node, half, loss });
+            }
+            run_half_step_jobs(&mut jobs, ctx, pool)?;
+        }
+
+        // 3. async engine: owner-side served-row transform on active rows
+        // only — inactivity trumps staleness (an inactive node's row IS
+        // its committed params, untransformed, and its carried snapshot
+        // does not move)
+        if self.stale_round == Some(round as u64) {
+            for (hi, node) in self.live.iter() {
+                serve_row(
+                    &self.asyn,
+                    self.cur_stale[*hi],
+                    &mut halves_out[*hi],
+                    &mut self.carried[*hi],
+                    &node.params,
+                );
+            }
+        }
+
+        // 4. populate the rows active victims will pull from inactive
+        // honest peers (pull sets are pure functions of the round key,
+        // so the touched-row set is known now). Every other row stays
+        // empty — that emptiness is the memory diet.
+        let mut populated = 0u32;
+        for (_, node) in self.live.iter() {
+            for p in self.sampler.sample_at(self.seed, round, node.id) {
+                if self.byz[p] {
+                    continue; // crafted per victim, never a table row
+                }
+                let phi = self.node_of[p];
+                if halves_out[phi].is_empty() {
+                    halves_out[phi] = self.committed_row(phi);
+                    populated += 1;
+                }
+            }
+        }
+        self.round_materialized = self.round_active + populated;
+        Ok(())
+    }
+
+    fn aggregate_begin(&mut self, _round: usize, _ctx: &AggCtx<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    fn aggregate_end(
+        &mut self,
+        round: usize,
+        ctx: &AggCtx<'_>,
+        pool: &WorkerPool,
+        byz_seen_out: &mut [usize],
+        received_out: &mut [usize],
+    ) -> Result<()> {
+        debug_assert_eq!(byz_seen_out.len(), self.h);
+        // inactive entries must read zero, same as the dense engine's
+        // inactive-victim jobs write
+        for x in byz_seen_out.iter_mut() {
+            *x = 0;
+        }
+        for x in received_out.iter_mut() {
+            *x = 0;
+        }
+        self.next.resize_with(self.live.len(), Vec::new);
+        for row in self.next.iter_mut() {
+            if row.len() != self.d {
+                *row = vec![0.0f32; self.d];
+            }
+        }
+        {
+            let mut rest_b: &mut [usize] = byz_seen_out;
+            let mut rest_r: &mut [usize] = received_out;
+            let mut offset = 0usize;
+            let mut jobs: Vec<AggJob<'_>> = Vec::with_capacity(self.live.len());
+            for ((hi, node), out) in self.live.iter().zip(self.next.iter_mut()) {
+                let (_, b2) = std::mem::take(&mut rest_b).split_at_mut(*hi - offset);
+                let (_, r2) = std::mem::take(&mut rest_r).split_at_mut(*hi - offset);
+                let (byz_seen, b3) = b2.split_first_mut().expect("hi < h");
+                let (received, r3) = r2.split_first_mut().expect("hi < h");
+                rest_b = b3;
+                rest_r = r3;
+                offset = *hi + 1;
+                jobs.push(AggJob {
+                    node,
+                    gi: *hi,
+                    out,
+                    byz_seen,
+                    received,
+                });
+            }
+            run_agg_jobs(&mut jobs, round, ctx, pool)?;
+        }
+        // async engine: a non-fresh active node does not commit — its
+        // round-t work "never arrived" (the worker-side discard twin)
+        if self.stale_round == Some(round as u64) {
+            for ((hi, node), next) in self.live.iter().zip(self.next.iter_mut()) {
+                if self.cur_stale[*hi] != 0 {
+                    next.copy_from_slice(&node.params);
+                    byz_seen_out[*hi] = 0;
+                    received_out[*hi] = 0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn commit(&mut self, params_out: &mut [Vec<f32>]) -> Result<()> {
+        debug_assert_eq!(params_out.len(), self.h);
+        // the mirror rows stay empty on purpose: committed params are a
+        // recipe here — `Trainer::committed_params` materializes on read
+        let live = std::mem::take(&mut self.live);
+        for (k, (hi, node)) in live.into_iter().enumerate() {
+            // take the row out so absorb can borrow self mutably; the
+            // buffer goes back for next round's reuse
+            let next = std::mem::take(&mut self.next[k]);
+            self.absorb(hi, &next);
+            self.next[k] = next;
+            self.momentum[hi] = Some(node.momentum.into_boxed_slice());
+            self.shards[hi] = Some(node.shard);
+        }
+        Ok(())
+    }
+
+    fn as_virtual(&self) -> Option<&VirtualShard> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TaskKind;
+
+    #[test]
+    fn is_active_is_pure_monotone_and_short_circuits() {
+        // full participation never draws; the same key always lands the
+        // same side; raising the fraction can only add nodes
+        for node in 0..200 {
+            assert!(is_active(7, 3, node, 1.0));
+            let lo = is_active(7, 3, node, 0.2);
+            let hi = is_active(7, 3, node, 0.8);
+            assert_eq!(lo, is_active(7, 3, node, 0.2));
+            if lo {
+                assert!(hi, "monotone in the fraction");
+            }
+        }
+        // the coin matches a by-hand read of the public stream
+        let coin = Rng::stream(7, 3, 11, stream_tag::PARTICIPATE).f64();
+        assert_eq!(is_active(7, 3, 11, 0.5), coin < 0.5);
+    }
+
+    #[test]
+    fn active_fraction_tracks_participation() {
+        let mut active = 0usize;
+        let n = 20_000;
+        for node in 0..n {
+            if is_active(42, 5, node, 0.3) {
+                active += 1;
+            }
+        }
+        let frac = active as f64 / n as f64;
+        assert!((frac - 0.3).abs() < 0.02, "frac={frac}");
+    }
+
+    fn tiny_shard(h: usize, d: usize) -> VirtualShard {
+        let task = TaskKind::Tiny.spec().instantiate(0);
+        let spn = 3usize;
+        let seeds = VirtualSeeds {
+            ids: (0..h).collect(),
+            node_rngs: (0..h).map(|i| Rng::new(100 + i as u64)).collect(),
+            data_rngs: (0..h).map(|i| Rng::new(200 + i as u64)).collect(),
+            labels_flat: vec![0u8; h * spn],
+            label_off: (0..=h).map(|i| (i * spn) as u32).collect(),
+            task,
+        };
+        VirtualShard::new(
+            seeds,
+            vec![0.5f32; d],
+            9,
+            1.0,
+            AsyncCfg::default(),
+            PullSampler::new(h.max(2), 1),
+            vec![false; h.max(2)],
+            (0..h.max(2)).collect(),
+        )
+    }
+
+    #[test]
+    fn delta_log_roundtrips_bits_and_compacts() {
+        let d = 8;
+        let mut vs = tiny_shard(2, d);
+        assert_eq!(vs.committed_row(0), vec![0.5f32; d]);
+        // a run of commits: committed_row must always return exactly the
+        // last absorbed bits, across the log→arena compaction boundary
+        let mut expect = vec![0.5f32; d];
+        for step in 1..=(COMPACT_AFTER * 3) {
+            let row: Vec<f32> = (0..d).map(|j| (step * 31 + j) as f32 * 0.125 - 3.0).collect();
+            vs.absorb(0, &row);
+            expect.copy_from_slice(&row);
+            let got = vs.committed_row(0);
+            let got_bits: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+            let want_bits: Vec<u32> = expect.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got_bits, want_bits, "step {step}");
+            assert!(vs.logs[0].len() <= COMPACT_AFTER, "log stays bounded");
+        }
+        assert!(vs.base[0].is_some(), "compaction produced an arena row");
+        // the untouched node is still on the shared init row, log empty
+        assert!(vs.base[1].is_none() && vs.logs[1].is_empty());
+        assert_eq!(vs.committed_row(1), vec![0.5f32; d]);
+    }
+
+    #[test]
+    fn zero_delta_commits_are_not_stored() {
+        let d = 4;
+        let mut vs = tiny_shard(1, d);
+        let row = vs.committed_row(0);
+        vs.absorb(0, &row); // identical bits: a skipped/stale round
+        assert!(vs.logs[0].is_empty() && vs.base[0].is_none());
+        // negative zero differs in bits from positive zero — the XOR log
+        // must preserve exactly that distinction
+        let signed: Vec<f32> = vec![-0.0f32; d];
+        vs.absorb(0, &signed);
+        assert_eq!(vs.logs[0].len(), 1);
+        let got = vs.committed_row(0);
+        assert!(got.iter().all(|x| x.to_bits() == (-0.0f32).to_bits()));
+    }
+
+    #[test]
+    fn first_touch_materialization_is_reproducible_and_persistent() {
+        let d = 6;
+        let mut vs = tiny_shard(2, d);
+        let a = vs.materialize(0);
+        // park it back, as commit would
+        vs.momentum[0] = Some(a.momentum.clone().into_boxed_slice());
+        vs.shards[0] = Some(a.shard);
+        // a twin backend materializing the same node gets the same bits
+        let b = tiny_shard(2, d).materialize(0);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.momentum, b.momentum);
+        // the parked shard is returned by reference on reactivation (its
+        // batch cursor must persist), not resampled
+        let mut re = vs.materialize(0);
+        let batch1 = re.shard.next_batch(2);
+        vs.shards[0] = Some(re.shard);
+        let mut fresh = tiny_shard(2, d).materialize(0);
+        let fresh1 = fresh.shard.next_batch(2);
+        assert_eq!(batch1.x, fresh1.x, "first activation replays the dense build");
+        let batch2 = vs.materialize(0).shard.next_batch(2);
+        assert_ne!(batch1.x, batch2.x, "cursor advanced across activations");
+    }
+
+    #[test]
+    fn stats_count_only_touched_state() {
+        let d = 8;
+        let mut vs = tiny_shard(4, d);
+        let base = vs.stats().resident_bytes;
+        let node = vs.materialize(0);
+        vs.momentum[0] = Some(node.momentum.into_boxed_slice());
+        vs.shards[0] = Some(node.shard);
+        let row: Vec<f32> = (0..d).map(|j| j as f32).collect();
+        vs.absorb(0, &row);
+        let grown = vs.stats().resident_bytes;
+        assert!(grown > base, "touching one node grows residency");
+        // one delta row + one momentum row + the 3-sample shard — far
+        // below a dense world's 2 rows per node
+        assert!(grown - base < 4 * (d as u64) * 4 + 4 * 1024);
+    }
+}

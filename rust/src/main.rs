@@ -40,6 +40,11 @@ USAGE:
               [--crash-prob P] [--down-rounds N]
                 (async round engine on a deterministic virtual clock;
                  quorum = honest count reproduces synchronous runs)
+              [--participation P]  (per-round active fraction in (0,1],
+                sampled on the PARTICIPATE stream; 1.0 = everyone)
+              [--virtual-nodes]    (sparse backend: committed state as
+                seed + delta log, lazy per-round materialization;
+                procs = 1, epidemic pull only)
   rpel figure --id <fig1L|fig1R|...|fig21|all> [--scale tiny|paper]
               [--engine hlo|native] [--out results] [--threads N] [--shards N]
               [--procs N] [--transport pipe|socket|tcp]
@@ -125,6 +130,8 @@ fn cmd_train(args: &Args) -> CmdResult {
         "straggler",
         "crash-prob",
         "down-rounds",
+        "participation",
+        "virtual-nodes",
     ])?;
     let mut cfg = if let Some(path) = args.get("config") {
         config_file::load(path)?
@@ -175,6 +182,18 @@ fn cmd_train(args: &Args) -> CmdResult {
         cfg.socket_dir = dir.to_string();
     }
     apply_async_flags(args, &mut cfg)?;
+    let mut sparse_touched = false;
+    if let Some(p) = args.get_f64("participation")? {
+        cfg.participation = p;
+        sparse_touched = true;
+    }
+    if args.has("virtual-nodes") {
+        cfg.virtual_nodes = true;
+        sparse_touched = true;
+    }
+    if sparse_touched {
+        cfg.validate()?;
+    }
     let hist = experiments::run_training(&cfg)?;
     let out = args.get_or("out", "results");
     let paths = write_histories(&format!("{out}/train"), &[hist])?;

@@ -62,6 +62,21 @@ pub struct History {
     pub participation_per_round: Vec<u32>,
     pub virtual_close_per_round: Vec<f64>,
     pub staleness_hist: Vec<u64>,
+    /// Sparse-engine ledgers (populated only when `participation < 1` or
+    /// the virtual-node backend is live; empty for dense
+    /// full-participation runs). Per round: honest nodes whose
+    /// PARTICIPATE coin made them active (`active_per_round` recomputes
+    /// byte-exactly from the public stream — `rust/tests/sparse_engine.rs`
+    /// pins it), nodes whose full params/momentum state was materialized
+    /// this round (= h for the dense engine, |active ∪ pulled| for the
+    /// virtual backend), and the committed-state bytes resident after the
+    /// round (delta logs + arenas + momentum + data + per-node seeds for
+    /// the virtual backend; n·d·4 params + momentum for dense). The
+    /// resident ledger is the memory-diet referee of the n = 10⁶ test in
+    /// `rust/tests/large_n.rs`.
+    pub active_per_round: Vec<u32>,
+    pub materialized_per_round: Vec<u32>,
+    pub resident_bytes_per_round: Vec<u64>,
     /// wall-clock seconds of the run (perf bookkeeping)
     pub wall_secs: f64,
 }
@@ -175,6 +190,33 @@ impl History {
             "staleness_hist".into(),
             Json::Arr(
                 self.staleness_hist
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "active_per_round".into(),
+            Json::Arr(
+                self.active_per_round
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "materialized_per_round".into(),
+            Json::Arr(
+                self.materialized_per_round
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "resident_bytes_per_round".into(),
+            Json::Arr(
+                self.resident_bytes_per_round
                     .iter()
                     .map(|&x| Json::Num(x as f64))
                     .collect(),
@@ -372,6 +414,39 @@ mod tests {
                 .as_f64()
                 .unwrap(),
             18.0
+        );
+    }
+
+    #[test]
+    fn sparse_ledgers_exported() {
+        let mut h = sample();
+        h.active_per_round = vec![4, 6, 5];
+        h.materialized_per_round = vec![9, 11, 10];
+        h.resident_bytes_per_round = vec![4096, 5120, 5120];
+        let parsed = crate::util::json::parse(&h.to_json().to_string_compact()).unwrap();
+        assert_eq!(
+            parsed.get("active_per_round").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        assert_eq!(
+            parsed
+                .get("materialized_per_round")
+                .unwrap()
+                .as_arr()
+                .unwrap()[1]
+                .as_f64()
+                .unwrap(),
+            11.0
+        );
+        assert_eq!(
+            parsed
+                .get("resident_bytes_per_round")
+                .unwrap()
+                .as_arr()
+                .unwrap()[0]
+                .as_f64()
+                .unwrap(),
+            4096.0
         );
     }
 

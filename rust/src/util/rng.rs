@@ -44,6 +44,13 @@ pub mod stream_tag {
     /// crash/rejoin coin of one node is the first draw of
     /// `(seed, round, node, CHURN)`.
     pub const CHURN: u64 = 0x55;
+    /// Partial-participation coin ([`crate::coordinator::vnode`]): a node
+    /// is active in a round iff the first `f64` of
+    /// `(seed, round, node, PARTICIPATE)` lands below the configured
+    /// participation fraction. Keyed by the **global** node id, so the
+    /// coordinator, every shard backend, and every worker process derive
+    /// the same active set independently.
+    pub const PARTICIPATE: u64 = 0x56;
 }
 
 /// Xoshiro256++ PRNG (Blackman & Vigna), seeded through SplitMix64.

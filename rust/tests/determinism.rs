@@ -380,6 +380,92 @@ fn multi_process_engine_matches_under_dos_withholding() {
     assert_bit_identical("dos procs=3 vs in-process", &reference, &run_collect(&cfg));
 }
 
+/// Like `run_collect`, but reads final models through the
+/// backend-agnostic `committed_params` accessor, which works for both
+/// the dense tables and the virtual-node delta-log store (where
+/// `params_of` rows are intentionally empty).
+fn run_collect_committed(cfg: &rpel::config::ExperimentConfig) -> (History, Vec<Vec<f32>>) {
+    let mut t = Trainer::from_config(cfg).unwrap();
+    let hist = t.run().unwrap();
+    let params: Vec<Vec<f32>> = (0..t.honest_count())
+        .map(|i| t.committed_params(i))
+        .collect();
+    (hist, params)
+}
+
+#[test]
+fn virtual_engine_is_bit_identical_at_full_participation() {
+    // the PR-7 tentpole guarantee: storing committed state as
+    // (seed, delta log) and materializing lazily changes nothing —
+    // at participation=1.0 the virtual backend replays the dense
+    // engine bit for bit, across thread counts
+    let reference = run_collect_committed(&base_cfg());
+    for threads in [1usize, 4] {
+        let mut cfg = base_cfg();
+        cfg.virtual_nodes = true;
+        cfg.threads = threads;
+        assert_bit_identical(
+            &format!("virtual threads={threads} vs dense"),
+            &reference,
+            &run_collect_committed(&cfg),
+        );
+    }
+}
+
+#[test]
+fn partial_participation_is_invariant_across_the_grid() {
+    // the PARTICIPATE coin is keyed on (seed, round, global node id),
+    // so the active set — and everything downstream of it — must be
+    // identical however the honest nodes are spread over shards,
+    // threads, and worker processes
+    use rpel::config::TransportKind;
+    enable_worker_bin();
+    let mut serial = base_cfg();
+    serial.participation = 0.6;
+    serial.shards = 1;
+    serial.threads = 1;
+    let reference = run_collect(&serial);
+    for (shards, threads) in [(2usize, 4usize), (5, 4)] {
+        let mut cfg = serial.clone();
+        cfg.shards = shards;
+        cfg.threads = threads;
+        assert_bit_identical(
+            &format!("p=0.6 shards={shards} threads={threads} vs serial"),
+            &reference,
+            &run_collect(&cfg),
+        );
+    }
+    for transport in [TransportKind::Pipe, TransportKind::Socket] {
+        let mut cfg = serial.clone();
+        cfg.procs = 2;
+        cfg.threads = 2;
+        cfg.transport = transport;
+        assert_bit_identical(
+            &format!("p=0.6 {transport:?} procs=2 vs serial"),
+            &reference,
+            &run_collect(&cfg),
+        );
+    }
+}
+
+#[test]
+fn virtual_engine_matches_dense_under_partial_participation() {
+    // sparse activation end to end: the lazily-materialized active set
+    // must step, serve, and commit exactly as the dense engine's frozen
+    // inactive rows dictate
+    let mut dense = base_cfg();
+    dense.participation = 0.6;
+    let reference = run_collect_committed(&dense);
+    let mut cfg = dense.clone();
+    cfg.virtual_nodes = true;
+    cfg.threads = 4;
+    assert_bit_identical(
+        "virtual p=0.6 vs dense",
+        &reference,
+        &run_collect_committed(&cfg),
+    );
+}
+
 #[test]
 fn push_topology_is_thread_invariant_too() {
     use rpel::config::Topology;

@@ -1,9 +1,16 @@
-//! Large-n memory-diet smoke: the digest-based attack context must let a
-//! 2048-node round run without materializing per-victim full scans
-//! (ALIE is O(d) per victim; peak round state is the O(h·d) shard
-//! buffers plus one O(d) digest — no O(h²) anything).
+//! Large-n memory-diet smokes.
 //!
-//! Ignored by default (it is a CI smoke, not a unit test): run with
+//! * `n2048_two_rounds_native_alie` — the digest-based attack context
+//!   must let a 2048-node round run without materializing per-victim
+//!   full scans (ALIE is O(d) per victim; peak round state is the
+//!   O(h·d) shard buffers plus one O(d) digest — no O(h²) anything).
+//! * `n_one_million_virtual_round_stays_lean` — the virtual-node
+//!   backend must carry a **million**-node world through real rounds
+//!   while keeping committed state as `(seed, delta log)`: the
+//!   resident-bytes ledger must stay far below the n·d·4 a dense
+//!   params table alone would cost.
+//!
+//! Ignored by default (they are CI smokes, not unit tests): run with
 //! `cargo test --release --test large_n -- --ignored`.
 
 use rpel::attacks::AttackKind;
@@ -38,4 +45,56 @@ fn n2048_two_rounds_native_alie() {
     // every honest node saw at most b Byzantine rows
     assert!(hist.observed_byz_max.iter().all(|&m| m <= cfg.b));
     assert_eq!(hist.evals.len(), 1, "final-round eval only");
+}
+
+#[test]
+#[ignore = "million-node virtual-round smoke (minutes in release, far slower in debug)"]
+fn n_one_million_virtual_round_stays_lean() {
+    const N: usize = 1_000_000;
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = "large_n_virtual_million".into();
+    cfg.n = N;
+    cfg.b = 0; // digest path skipped; this smoke referees memory, not robustness
+    cfg.attack = AttackKind::None;
+    cfg.topology = Topology::Epidemic { s: 8 };
+    cfg.rounds = 2;
+    cfg.batch = 8;
+    cfg.samples_per_node = 16;
+    cfg.test_samples = 32;
+    cfg.eval_every = 100_000; // never: full-world eval would defeat the diet
+    cfg.engine = EngineKind::Native;
+    cfg.threads = 0; // all cores
+    cfg.participation = 0.002; // ~2000 active nodes per round
+    cfg.virtual_nodes = true;
+
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    assert_eq!(t.honest_count(), N);
+    let d = t.committed_params(0).len() as u64;
+
+    // drive rounds directly (no run(): its final eval walks all n models)
+    for round in 0..cfg.rounds {
+        let loss = t.round(round).unwrap();
+        assert!(loss.is_finite(), "round {round}: loss {loss}");
+
+        let (active, materialized, resident) = t.sparse_round_stats(round);
+        // binomial(n, 0.002): mean 2000, sd ~45 — these bounds are >20 sd out
+        assert!(
+            (1000..=4000).contains(&active),
+            "round {round}: active={active} is not ~p·n"
+        );
+        assert!(materialized >= active, "round {round}: pulled rows count too");
+        assert!(
+            (materialized as usize) < N / 50,
+            "round {round}: materialized={materialized} — lazy state is leaking"
+        );
+        // the memory-diet referee: everything resident (seed substrate,
+        // delta logs, arenas, momentum, shards of touched nodes) must be
+        // a small fraction of what a dense params table ALONE costs —
+        // and dense would pay another n·d·4 for momentum on top
+        let dense_params_bytes = N as u64 * d * 4;
+        assert!(
+            resident * 4 < dense_params_bytes,
+            "round {round}: resident {resident} B is not \u{226a} dense n\u{b7}d\u{b7}4 = {dense_params_bytes} B"
+        );
+    }
 }
