@@ -21,6 +21,11 @@
 //!
 //! Run: cargo bench --bench bench_aggregation
 
+// Test/bench code may time things, read the environment, and build
+// scratch hash tables (clippy.toml's disallowed lists guard src only;
+// the rpel-lint pass likewise skips test code).
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
 use rpel::aggregation::cwtm::{trimmed_sum_select_path, trimmed_sum_sort_path};
 use rpel::aggregation::{pairwise_sqdist, perf, Aggregator, DistCache, RowCtx, RuleKind};
 use rpel::attacks::AttackKind;

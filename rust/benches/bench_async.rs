@@ -15,6 +15,11 @@
 //!
 //! Run: cargo bench --bench bench_async
 
+// Test/bench code may time things, read the environment, and build
+// scratch hash tables (clippy.toml's disallowed lists guard src only;
+// the rpel-lint pass likewise skips test code).
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
 use rpel::attacks::AttackKind;
 use rpel::benchkit::{black_box, section, Bencher};
 use rpel::config::{AsyncCfg, EngineKind, ExperimentConfig, StragglerKind, Topology};

@@ -5,6 +5,11 @@
 //! Run: cargo bench --bench bench_figures
 //! (full training figures at bench scale — a few minutes on one core)
 
+// Test/bench code may time things, read the environment, and build
+// scratch hash tables (clippy.toml's disallowed lists guard src only;
+// the rpel-lint pass likewise skips test code).
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
 use rpel::benchkit::section;
 use rpel::config::presets::{self, FigureSeries, Scale};
 use rpel::config::EngineKind;

@@ -78,8 +78,16 @@ pub use mean::Mean;
 pub use nnm::Nnm;
 
 use crate::util::vecmath;
-use std::collections::HashMap;
+#[allow(clippy::disallowed_types)]
+use std::collections::HashMap; // lint: hash-order-exempt (Memo alias below)
 use std::sync::RwLock;
+
+/// Lookup-only hash memo used by [`DistCache`]: reads are keyed `get`s
+/// and `clear` drops everything, so the seeded iteration order of
+/// `HashMap` is never observed and cannot leak into results (the
+/// bit-safety argument is on [`DistCache`]).
+#[allow(clippy::disallowed_types)]
+type Memo<K> = HashMap<K, f64>; // lint: hash-order-exempt (order never observed)
 
 /// Aggregation-fast-path performance counters (process-wide, relaxed
 /// atomics — a ledger, not a synchronization point). `bench_aggregation`
@@ -151,16 +159,16 @@ const GRAM_GUARD: f64 = 1e-6;
 /// round, and honest indices would otherwise alias stale rows.
 pub struct DistCache {
     /// pair key `(lo << 32) | hi` over honest indices → ‖x_lo − x_hi‖²
-    dist: Vec<RwLock<HashMap<u64, f64>>>,
+    dist: Vec<RwLock<Memo<u64>>>,
     /// honest index → ‖x_i‖² (the Gram kernel's other shared factor)
-    norm: Vec<RwLock<HashMap<u32, f64>>>,
+    norm: Vec<RwLock<Memo<u32>>>,
 }
 
 impl DistCache {
     pub fn new() -> DistCache {
         DistCache {
-            dist: (0..CACHE_STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
-            norm: (0..CACHE_STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
+            dist: (0..CACHE_STRIPES).map(|_| RwLock::new(Memo::new())).collect(),
+            norm: (0..CACHE_STRIPES).map(|_| RwLock::new(Memo::new())).collect(),
         }
     }
 

@@ -1,0 +1,319 @@
+//! The lint engine: walks a source tree (or a single in-memory source),
+//! lexes each file, carves out regions that are out of scope for a rule
+//! (`#[cfg(test)]` bodies, excluded inline modules, skipped macro
+//! invocations), applies every in-scope rule's matcher, and honors
+//! per-rule exemption markers on the same or preceding line.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::lexer::{lex, Lexed, Token};
+use super::rules::{Rule, Severity};
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the analysis root, `/`-separated.
+    pub file: String,
+    /// 1-based line of the first matched token.
+    pub line: u32,
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub message: String,
+    /// The trimmed source line, for human reports.
+    pub snippet: String,
+}
+
+/// The result of linting a tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub rules_run: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Lint a single source text as if it lived at `rel_path` under the
+/// analysis root. This is the unit-testable core: fixtures call it with
+/// virtual paths (`"coordinator/fixture.rs"`) to pick rule scopes.
+pub fn lint_source(rel_path: &str, src: &str, rules: &[Rule]) -> Vec<Finding> {
+    let lexed = lex(src);
+    let toks = &lexed.tokens;
+    let lines: Vec<&str> = src.lines().collect();
+    let test_ranges = attr_ranges(toks, &["cfg", "(", "test", ")"]);
+    let mut findings = Vec::new();
+
+    for rule in rules.iter().filter(|r| r.applies_to(rel_path)) {
+        let mut skip = test_ranges.clone();
+        for (suffix, mod_name) in rule.exclude_mods {
+            if rel_path.ends_with(suffix) {
+                skip.extend(mod_ranges(toks, mod_name));
+            }
+        }
+        for mac in rule.skip_macros {
+            skip.extend(macro_ranges(toks, mac));
+        }
+        let marker = rule.marker();
+        let mut flagged: BTreeSet<u32> = BTreeSet::new();
+        for i in 0..toks.len() {
+            if skip.iter().any(|r| r.contains(&i)) {
+                continue;
+            }
+            let Some(what) = rule.matcher.matches_at(toks, i) else {
+                continue;
+            };
+            let line = toks[i].line;
+            if flagged.contains(&line) || lexed.exempted(&marker, line) {
+                continue;
+            }
+            flagged.insert(line);
+            findings.push(Finding {
+                file: rel_path.to_string(),
+                line,
+                rule: rule.id,
+                severity: rule.severity,
+                message: format!("{what}: {}", rule.invariant),
+                snippet: lines
+                    .get(line as usize - 1)
+                    .map(|l| l.trim().to_string())
+                    .unwrap_or_default(),
+            });
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    findings
+}
+
+/// Lint every `.rs` file under `root` (recursively, in sorted order so
+/// reports are deterministic). If `root` contains a `rust/src` directory
+/// — i.e. the repo root was passed — the walk descends into it, so rule
+/// scopes stay relative to the source root either way.
+pub fn lint_tree(root: &Path, rules: &[Rule]) -> Result<Report> {
+    let src_root = resolve_root(root);
+    let mut files = Vec::new();
+    collect_rs_files(&src_root, &mut files)
+        .with_context(|| format!("walking {}", src_root.display()))?;
+    files.sort();
+    let mut report = Report {
+        findings: Vec::new(),
+        files_scanned: files.len(),
+        rules_run: rules.len(),
+    };
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src =
+            fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        report.findings.extend(lint_source(&rel, &src, rules));
+    }
+    Ok(report)
+}
+
+/// Map a user-supplied path to the analysis root: repo root → `rust/src`.
+pub fn resolve_root(root: &Path) -> PathBuf {
+    let nested = root.join("rust").join("src");
+    if nested.is_dir() {
+        nested
+    } else {
+        root.to_path_buf()
+    }
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Token-index ranges of items annotated `#[<attr tokens>]` (e.g.
+/// `cfg ( test )`), spanning the attribute through the item's body.
+/// Any further attributes between the match and the body are included.
+fn attr_ranges(toks: &[Token], attr: &[&str]) -> Vec<Range<usize>> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text == "#"
+            && tok_text(toks, i + 1) == Some("[")
+            && attr
+                .iter()
+                .enumerate()
+                .all(|(k, want)| tok_text(toks, i + 2 + k) == Some(want))
+            && tok_text(toks, i + 2 + attr.len()) == Some("]")
+        {
+            let mut j = i + 3 + attr.len();
+            // Skip any further attributes before the item itself.
+            while tok_text(toks, j) == Some("#") && tok_text(toks, j + 1) == Some("[") {
+                let mut depth = 0usize;
+                j += 1;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "[" => depth += 1,
+                        "]" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+            let end = item_end(toks, j);
+            out.push(i..end);
+            i = end;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Token-index ranges of `mod <name> { … }` bodies.
+fn mod_ranges(toks: &[Token], name: &str) -> Vec<Range<usize>> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        if toks[i].text == "mod"
+            && tok_text(toks, i + 1) == Some(name)
+            && tok_text(toks, i + 2) == Some("{")
+        {
+            let end = match_delim(toks, i + 2, "{", "}");
+            out.push(i..end);
+            i = end;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Token-index ranges of `<name>! { … }` / `(...)` / `[...]` invocations.
+fn macro_ranges(toks: &[Token], name: &str) -> Vec<Range<usize>> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        if toks[i].text == name && tok_text(toks, i + 1) == Some("!") {
+            let (open, close) = match tok_text(toks, i + 2) {
+                Some("{") => ("{", "}"),
+                Some("(") => ("(", ")"),
+                Some("[") => ("[", "]"),
+                _ => {
+                    i += 1;
+                    continue;
+                }
+            };
+            let end = match_delim(toks, i + 2, open, close);
+            out.push(i..end);
+            i = end;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// End (exclusive) of the item starting at `toks[i]`: the matching `}` of
+/// its first brace, or the first `;` for braceless items (`use`, statics).
+fn item_end(toks: &[Token], i: usize) -> usize {
+    let mut j = i;
+    let mut nest = 0usize; // [] / () nesting; `;` inside (e.g. `[u8; 4]`) is not an item end
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "{" => return match_delim(toks, j, "{", "}"),
+            "[" | "(" => nest += 1,
+            "]" | ")" => nest = nest.saturating_sub(1),
+            ";" if nest == 0 => return j + 1,
+            _ => {}
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// `i` points at `open`; returns the index past its matching `close`.
+fn match_delim(toks: &[Token], i: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0usize;
+    let mut j = i;
+    while j < toks.len() {
+        if toks[j].text == open {
+            depth += 1;
+        } else if toks[j].text == close {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+fn tok_text<'t>(toks: &'t [Token], i: usize) -> Option<&'t str> {
+    toks.get(i).map(|t| t.text.as_str())
+}
+
+/// Re-export for callers that only need marker lookups.
+pub fn lex_for_markers(src: &str) -> Lexed {
+    lex(src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rules::default_rules;
+
+    #[test]
+    fn cfg_test_regions_are_skipped() {
+        let src = "fn live() { let t = Instant::now(); }\n\
+                   #[cfg(test)]\nmod tests {\n    fn f() { let t = Instant::now(); }\n}\n";
+        let f = lint_source("coordinator/x.rs", src, &default_rules());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn excluded_mod_is_out_of_scope_only_in_named_file() {
+        let src = "pub mod perf {\n    static C: AtomicU64 = AtomicU64::new(0);\n}\n";
+        assert!(lint_source("aggregation/mod.rs", src, &default_rules()).is_empty());
+        let f = lint_source("metrics/mod.rs", src, &default_rules());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "global-state");
+    }
+
+    #[test]
+    fn thread_local_statics_are_not_global_state() {
+        let src = "thread_local! {\n    static SCRATCH: RefCell<Vec<f32>> = \
+                   RefCell::new(Vec::new());\n}\n";
+        assert!(lint_source("util/x.rs", src, &default_rules()).is_empty());
+    }
+
+    #[test]
+    fn repo_root_resolves_to_rust_src() {
+        let repo = Path::new(env!("CARGO_MANIFEST_DIR"));
+        assert_eq!(resolve_root(repo), repo.join("rust").join("src"));
+        let already = repo.join("rust").join("src");
+        assert_eq!(resolve_root(&already), already);
+    }
+}

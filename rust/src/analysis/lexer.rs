@@ -1,0 +1,447 @@
+//! A minimal Rust lexer for the lint pass.
+//!
+//! The goal is not fidelity to `rustc`'s grammar — it is to turn source
+//! text into a token stream in which comments, string/char literals, and
+//! raw strings have been *removed*, so rule matchers can never fire on
+//! prose ("this would panic"), format strings, or doc examples. Along the
+//! way the lexer records, per line, every `lint: <marker>` annotation it
+//! finds inside comments; the engine uses those to honor per-rule
+//! exemptions (`// lint: <rule-id>-exempt`).
+//!
+//! Handled literal forms: `//`/`///`/`//!` line comments, nested
+//! `/* .. */` block comments, `"…"` strings (with escapes and escaped
+//! newlines), `b"…"` byte strings, `r"…"`/`r#"…"#`/`br#"…"#` raw strings
+//! with any hash depth, `'x'`/`'\n'`/`b'x'` char literals, and the
+//! char-vs-lifetime ambiguity (`'a>` lexes as a lifetime token, `'a'` as
+//! a char literal). Identifiers are maximal (`unwrap_or` is one token and
+//! is *not* a match for `unwrap`); `r#ident` raw identifiers lex as the
+//! bare identifier. `::` is merged into a single punctuation token; every
+//! other punctuation char is its own token.
+
+use std::collections::BTreeMap;
+
+/// Token class. Matchers use it to tell `static` (ident) from `'static`
+/// (lifetime) and to recognize `f32`-suffixed numeric literals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Num,
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub text: String,
+    pub kind: TokKind,
+    pub line: u32,
+}
+
+/// Lexer output: the literal-free token stream plus every `lint:` marker
+/// found in comments, keyed by the line the marker appears on.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub markers: BTreeMap<u32, Vec<String>>,
+}
+
+impl Lexed {
+    /// True if `marker` (e.g. `"wall-clock-exempt"`) appears in a comment
+    /// on `line` or the line directly above it.
+    pub fn exempted(&self, marker: &str, line: u32) -> bool {
+        let on = |ln: u32| {
+            self.markers
+                .get(&ln)
+                .is_some_and(|ms| ms.iter().any(|m| m == marker))
+        };
+        on(line) || (line > 1 && on(line - 1))
+    }
+}
+
+/// Lex `src` into tokens + comment markers. Never fails: unterminated
+/// literals simply consume to end of input.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Lexed::default();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            collect_markers(&chars[start..i], line, &mut out.markers);
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            i = skip_block_comment(&chars, i, &mut line, &mut out.markers);
+        } else if c == '"' {
+            i = skip_string(&chars, i, &mut line);
+        } else if c == '\'' {
+            i = char_or_lifetime(&chars, i, line, &mut out);
+        } else if c == 'r' || c == 'b' {
+            i = raw_or_ident(&chars, i, &mut line, &mut out);
+        } else if c == '_' || c.is_ascii_alphabetic() {
+            let start = i;
+            while i < n && (chars[i] == '_' || chars[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            out.tokens.push(Token {
+                text: chars[start..i].iter().collect(),
+                kind: TokKind::Ident,
+                line,
+            });
+        } else if c.is_ascii_digit() {
+            i = lex_number(&chars, i, line, &mut out);
+        } else if c == ':' && i + 1 < n && chars[i + 1] == ':' {
+            out.tokens.push(Token {
+                text: "::".to_string(),
+                kind: TokKind::Punct,
+                line,
+            });
+            i += 2;
+        } else {
+            out.tokens.push(Token {
+                text: c.to_string(),
+                kind: TokKind::Punct,
+                line,
+            });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Scan a comment's text for `lint: <word>` annotations and record each
+/// word under `line`. Multiple `lint:` markers in one comment all count.
+fn collect_markers(comment: &[char], line: u32, markers: &mut BTreeMap<u32, Vec<String>>) {
+    let text: String = comment.iter().collect();
+    let mut rest = text.as_str();
+    while let Some(pos) = rest.find("lint:") {
+        rest = &rest[pos + "lint:".len()..];
+        let word: String = rest
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if !word.is_empty() {
+            markers.entry(line).or_default().push(word);
+        }
+    }
+}
+
+/// `i` points at `/*`. Returns the index past the matching (nested) close;
+/// records markers per line inside the comment.
+fn skip_block_comment(
+    chars: &[char],
+    mut i: usize,
+    line: &mut u32,
+    markers: &mut BTreeMap<u32, Vec<String>>,
+) -> usize {
+    let n = chars.len();
+    let mut depth = 1usize;
+    i += 2;
+    let mut seg = i;
+    while i < n && depth > 0 {
+        if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+            depth += 1;
+            i += 2;
+        } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+            depth -= 1;
+            i += 2;
+        } else if chars[i] == '\n' {
+            collect_markers(&chars[seg..i], *line, markers);
+            *line += 1;
+            i += 1;
+            seg = i;
+        } else {
+            i += 1;
+        }
+    }
+    collect_markers(&chars[seg..i.min(n)], *line, markers);
+    i
+}
+
+/// `i` points at the opening `"`. Returns the index past the closing quote.
+fn skip_string(chars: &[char], mut i: usize, line: &mut u32) -> usize {
+    let n = chars.len();
+    i += 1;
+    while i < n {
+        match chars[i] {
+            '\\' => {
+                if i + 1 < n && chars[i + 1] == '\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// `i` points at `'`. Distinguishes char literals from lifetimes: `'x'`
+/// and `'\…'` are literals (skipped); `'ident` not followed by a closing
+/// quote is a lifetime token.
+fn char_or_lifetime(chars: &[char], i: usize, line: u32, out: &mut Lexed) -> usize {
+    let n = chars.len();
+    if i + 1 >= n {
+        return n;
+    }
+    if chars[i + 1] == '\\' {
+        // Escaped char literal: the char after the backslash is consumed
+        // unconditionally (it may itself be a quote, as in '\''), then we
+        // scan to the closing quote (covers multi-char escapes like \u{…}).
+        let mut j = (i + 3).min(n);
+        while j < n && chars[j] != '\'' {
+            j += 1;
+        }
+        return (j + 1).min(n);
+    }
+    if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+        return i + 3; // plain char literal 'x'
+    }
+    if chars[i + 1] == '_' || chars[i + 1].is_ascii_alphabetic() {
+        let start = i + 1;
+        let mut j = start;
+        while j < n && (chars[j] == '_' || chars[j].is_ascii_alphanumeric()) {
+            j += 1;
+        }
+        out.tokens.push(Token {
+            text: chars[start..j].iter().collect(),
+            kind: TokKind::Lifetime,
+            line,
+        });
+        return j;
+    }
+    i + 1 // stray quote; skip it
+}
+
+/// `i` points at `r` or `b`. Handles raw strings, byte strings, byte
+/// chars, and raw identifiers; anything else lexes as a plain identifier.
+fn raw_or_ident(chars: &[char], i: usize, line: &mut u32, out: &mut Lexed) -> usize {
+    let n = chars.len();
+    let c = chars[i];
+    let next = chars.get(i + 1).copied();
+    if c == 'b' {
+        match next {
+            Some('"') => return skip_string(chars, i + 1, line),
+            Some('\'') => return char_or_lifetime(chars, i + 1, *line, out),
+            Some('r') => {
+                let after = chars.get(i + 2).copied();
+                if after == Some('"') || after == Some('#') {
+                    return skip_raw_string(chars, i + 2, line);
+                }
+            }
+            _ => {}
+        }
+    } else if next == Some('"') || next == Some('#') {
+        // r"…", r#"…"#, or a raw identifier r#ident.
+        if next == Some('"') {
+            return skip_raw_string(chars, i + 1, line);
+        }
+        let mut k = i + 1;
+        while k < n && chars[k] == '#' {
+            k += 1;
+        }
+        if k < n && chars[k] == '"' {
+            return skip_raw_string(chars, i + 1, line);
+        }
+        if k == i + 2 && k < n && (chars[k] == '_' || chars[k].is_ascii_alphabetic()) {
+            // raw identifier: lex the bare ident after `r#`.
+            let start = k;
+            let mut j = start;
+            while j < n && (chars[j] == '_' || chars[j].is_ascii_alphanumeric()) {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                text: chars[start..j].iter().collect(),
+                kind: TokKind::Ident,
+                line: *line,
+            });
+            return j;
+        }
+    }
+    // Plain identifier starting with r/b.
+    let start = i;
+    let mut j = i;
+    while j < n && (chars[j] == '_' || chars[j].is_ascii_alphanumeric()) {
+        j += 1;
+    }
+    out.tokens.push(Token {
+        text: chars[start..j].iter().collect(),
+        kind: TokKind::Ident,
+        line: *line,
+    });
+    j
+}
+
+/// `i` points at the first `#` (or the `"` when there are no hashes) of a
+/// raw string body marker. Returns the index past the closing delimiter.
+fn skip_raw_string(chars: &[char], mut i: usize, line: &mut u32) -> usize {
+    let n = chars.len();
+    let mut hashes = 0usize;
+    while i < n && chars[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    if i >= n || chars[i] != '"' {
+        return i; // malformed; bail without consuming further
+    }
+    i += 1;
+    while i < n {
+        if chars[i] == '\n' {
+            *line += 1;
+            i += 1;
+        } else if chars[i] == '"' {
+            let mut k = 0usize;
+            while k < hashes && i + 1 + k < n && chars[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// `i` points at an ASCII digit. Consumes a maximal numeric literal,
+/// including `_` separators, type suffixes (`4u64`, `0.5f32`), hex/octal
+/// prefixes, a decimal point when followed by a digit, and signed
+/// exponents (`1e-6`). Range dots (`0..n`) are not consumed.
+fn lex_number(chars: &[char], i: usize, line: u32, out: &mut Lexed) -> usize {
+    let n = chars.len();
+    let start = i;
+    let mut j = i;
+    while j < n {
+        let c = chars[j];
+        if c == '_' || c.is_ascii_alphanumeric() {
+            j += 1;
+        } else if c == '.' && j + 1 < n && chars[j + 1].is_ascii_digit() {
+            j += 1;
+        } else if (c == '+' || c == '-')
+            && j > start
+            && (chars[j - 1] == 'e' || chars[j - 1] == 'E')
+        {
+            j += 1;
+        } else {
+            break;
+        }
+    }
+    out.tokens.push(Token {
+        text: chars[start..j].iter().collect(),
+        kind: TokKind::Num,
+        line,
+    });
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_stripped() {
+        let src = r##"
+            // Instant in a line comment
+            /* HashMap in /* a nested */ block */
+            let msg = "calling unwrap() would panic";
+            let raw = r#"SystemTime "quoted" inside"#;
+            let c = 'u';
+        "##;
+        let t = texts(src);
+        assert!(!t.iter().any(|x| x == "Instant" || x == "HashMap"));
+        assert!(!t.iter().any(|x| x == "unwrap" || x == "SystemTime"));
+        assert!(t.iter().any(|x| x == "msg"));
+    }
+
+    #[test]
+    fn identifiers_are_maximal() {
+        let t = texts("x.unwrap_or(0); y.unwrap();");
+        assert!(t.iter().any(|x| x == "unwrap_or"));
+        assert_eq!(t.iter().filter(|x| *x == "unwrap").count(), 1);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let lexed = lex("fn f<'a>(x: &'a str) -> char { 's' }");
+        assert!(lexed
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokKind::Lifetime && t.text == "a"));
+        // the char literal 's' must not appear as any token
+        assert!(!lexed
+            .tokens
+            .iter()
+            .any(|t| t.text == "s" && t.kind != TokKind::Lifetime));
+        let lexed = lex("let t: &'static str = x;");
+        assert!(lexed
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokKind::Lifetime && t.text == "static"));
+    }
+
+    #[test]
+    fn line_numbers_track_all_literal_forms() {
+        let src = "a\n\"two\nlines\"\nb /* c\nc2 */ d\ne";
+        let lexed = lex(src);
+        let find = |name: &str| lexed.tokens.iter().find(|t| t.text == name).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("b"), 4);
+        assert_eq!(find("d"), 5);
+        assert_eq!(find("e"), 6);
+    }
+
+    #[test]
+    fn markers_collected_per_line() {
+        let src =
+            "let x = 1; // lint: wall-clock-exempt (reporting)\n// lint: hash-order-exempt\nlet y = 2;";
+        let lexed = lex(src);
+        assert!(lexed.exempted("wall-clock-exempt", 1));
+        assert!(lexed.exempted("hash-order-exempt", 2));
+        // preceding-line rule: line 3 inherits line 2's marker
+        assert!(lexed.exempted("hash-order-exempt", 3));
+        assert!(!lexed.exempted("wall-clock-exempt", 3));
+    }
+
+    #[test]
+    fn numbers_keep_suffixes_and_stop_at_range_dots() {
+        let t = texts("fold(0.0f32, |a, b| a + b); for i in 0..rows {}");
+        assert!(t.iter().any(|x| x == "0.0f32"));
+        assert!(t.iter().any(|x| x == "0"));
+        assert!(t.iter().any(|x| x == "rows"));
+    }
+
+    #[test]
+    fn double_colon_is_one_token() {
+        let t = texts("std::env::var(\"X\")");
+        assert_eq!(
+            t,
+            vec!["std", "::", "env", "::", "var", "(", ")"]
+                .into_iter()
+                .map(String::from)
+                .collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,73 @@
+//! `rpel lint` — a determinism & panic-safety static-analysis pass over
+//! this source tree.
+//!
+//! Every guarantee the repo ships — bit-identical rounds across the
+//! (transport × procs × shards × threads × participation) grid — rests on
+//! a handful of written invariants: time is modeled on the virtual clock,
+//! iteration orders are total, randomness comes from counter-keyed
+//! streams, decode paths return named errors, and size math is checked.
+//! The runtime determinism suites enforce those invariants *after the
+//! fact*, at grid-run cost. This pass enforces them at `cargo test`
+//! speed, on the token stream itself.
+//!
+//! The pipeline: [`lexer`] turns a file into a token stream with all
+//! comments and string/char literals removed (so prose and format strings
+//! can never fire a rule) while collecting exemption markers from
+//! comments; [`engine`] carves out `#[cfg(test)]` bodies, excluded inline
+//! modules, and skipped macro invocations, then applies each in-scope
+//! rule from [`rules`]; [`report`] renders findings as human text or
+//! machine JSON. The CLI front-end is `rpel lint [--json] [path]`, which
+//! exits nonzero on any finding; the same engine backs the
+//! `no_wall_clock_reads_in_deterministic_modules` test and the
+//! whole-tree assertion in `rust/tests/lint.rs`.
+//!
+//! # Rule catalogue
+//!
+//! | id | scope | invariant |
+//! |----|-------|-----------|
+//! | `wall-clock` | `coordinator/`, `aggregation/`, `sampling/` | No `Instant`/`SystemTime`: deterministic modules model time on `util::vclock`. Wall-clock reads change round closure across hosts. |
+//! | `hash-order` | `coordinator/`, `aggregation/`, `sampling/` | No `HashMap`/`HashSet`/`RandomState`: seeded hash tables iterate in nondeterministic order. Use `BTreeMap`/`BTreeSet`, or exempt-mark lookup-only tables whose iteration order is never observed. |
+//! | `ambient-rng` | `coordinator/`, `aggregation/`, `sampling/`, `wire/` | No `thread_rng`/`from_entropy`, `std::env` reads (`var`, `vars`, `var_os`, `temp_dir`, `current_exe`), or `process::id`: randomness comes from counter-keyed `util::rng` streams, configuration from flags. |
+//! | `panic-path` | `wire/`, `coordinator/proc.rs`, `coordinator/peer.rs` | No `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` on decode paths or in the shard-worker loop: malformed frames and peer failures must surface as named errors (`bail!`/`ensure!`/`context`), not kill the process. |
+//! | `unchecked-alloc` | `wire/` | Allocation sizing (`with_capacity`, `reserve`, `vec![…; n]`) fed by arithmetic must use `checked_*`/`saturating_*`: counts are attacker-supplied and the codec's 1 GiB frame cap depends on overflow-free size math. |
+//! | `f32-fold` | `aggregation/`, `coordinator/` | No ad-hoc f32 reductions (`sum::<f32>`, `product::<f32>`, `fold(0.0f32, …)`): f32 folds reassociate under vectorization; stage through the documented f64 kernels in `util::vecmath`. |
+//! | `global-state` | whole tree, except `mod perf` in `aggregation/mod.rs` | No `static mut` and no `static` of an interior-mutable type (atomics, locks, cells, once-types): process-global state breaks run isolation. Thread scratch belongs in `thread_local!` (always allowed); sanctioned perf counters live in `aggregation::perf`. |
+//!
+//! # Exemption markers
+//!
+//! A finding is silenced by a comment marker on the **same line** or the
+//! **line directly above**:
+//!
+//! ```text
+//! let t0 = Instant::now(); // lint: wall-clock-exempt (reporting only)
+//! ```
+//!
+//! The marker is `lint: <rule-id>-exempt`; anything after it is free-form
+//! rationale and is strongly encouraged. Markers are read from comments
+//! only (a marker inside a string literal does nothing), are per-rule
+//! (a `wall-clock-exempt` never silences `hash-order`), and are honored
+//! by both the CLI and the test-tier entry points. `#[cfg(test)]` bodies
+//! need no markers — the engine skips them wholesale, since tests may
+//! freely time things and build scratch hash tables.
+//!
+//! Rules 1–3 are additionally mirrored by `clippy.toml`
+//! (`disallowed-methods` / `disallowed-types`), so `cargo clippy` backs
+//! up this pass with type-resolved matching where the lexer only sees
+//! names.
+
+pub mod engine;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+pub use engine::{lint_source, lint_tree, Finding, Report};
+pub use rules::{default_rules, Rule, Severity};
+
+/// Lint `root` (a source tree or repo root) with the default rule set.
+pub fn run_lint(root: &Path) -> Result<Report> {
+    lint_tree(root, &default_rules())
+}

@@ -1,0 +1,94 @@
+//! Finding reporters: a human-readable text rendering and a
+//! machine-readable JSON document (built on [`crate::util::json`], since
+//! serde is not in the offline crate set). The JSON shape is stable for
+//! CI artifact consumers:
+//!
+//! ```json
+//! {
+//!   "count": 1,
+//!   "files_scanned": 70,
+//!   "rules_run": 7,
+//!   "findings": [
+//!     {"file": "coordinator/x.rs", "line": 12, "rule": "wall-clock",
+//!      "severity": "deny", "message": "…", "snippet": "…"}
+//!   ]
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::engine::Report;
+use crate::util::json::Json;
+
+/// Human rendering: one block per finding plus a summary line.
+pub fn render_text(report: &Report) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        let _ = writeln!(
+            out,
+            "{}:{}: [{}] {}",
+            f.file, f.line, f.rule, f.message
+        );
+        if !f.snippet.is_empty() {
+            let _ = writeln!(out, "    {}", f.snippet);
+        }
+        let _ = writeln!(
+            out,
+            "    note: silence with `// lint: {}-exempt (reason)` on this or the preceding line",
+            f.rule
+        );
+    }
+    let files: std::collections::BTreeSet<&str> =
+        report.findings.iter().map(|f| f.file.as_str()).collect();
+    if report.clean() {
+        let _ = writeln!(
+            out,
+            "rpel lint: clean ({} files, {} rules)",
+            report.files_scanned, report.rules_run
+        );
+    } else {
+        let _ = writeln!(
+            out,
+            "rpel lint: {} finding(s) in {} file(s) ({} files scanned, {} rules)",
+            report.findings.len(),
+            files.len(),
+            report.files_scanned,
+            report.rules_run
+        );
+    }
+    out
+}
+
+/// Machine rendering; see the module docs for the shape.
+pub fn render_json(report: &Report) -> String {
+    let findings = report
+        .findings
+        .iter()
+        .map(|f| {
+            let mut obj = BTreeMap::new();
+            obj.insert("file".to_string(), Json::Str(f.file.clone()));
+            obj.insert("line".to_string(), Json::Num(f.line as f64));
+            obj.insert("rule".to_string(), Json::Str(f.rule.to_string()));
+            obj.insert(
+                "severity".to_string(),
+                Json::Str(f.severity.as_str().to_string()),
+            );
+            obj.insert("message".to_string(), Json::Str(f.message.clone()));
+            obj.insert("snippet".to_string(), Json::Str(f.snippet.clone()));
+            Json::Obj(obj)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert(
+        "count".to_string(),
+        Json::Num(report.findings.len() as f64),
+    );
+    doc.insert(
+        "files_scanned".to_string(),
+        Json::Num(report.files_scanned as f64),
+    );
+    doc.insert("rules_run".to_string(), Json::Num(report.rules_run as f64));
+    doc.insert("findings".to_string(), Json::Arr(findings));
+    Json::Obj(doc).to_string_compact()
+}

@@ -1,0 +1,290 @@
+//! The rule catalogue: each rule encodes one written invariant of the
+//! repo as a matcher over the lexed token stream. See the module docs in
+//! [`crate::analysis`] for the full catalogue with rationale and the
+//! exemption-marker syntax.
+
+use super::lexer::{TokKind, Token};
+
+/// Finding severity. Every shipped rule is `Deny` (nonzero exit);
+/// `Warn` is reserved for advisory rules that report but do not fail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Deny,
+    Warn,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Deny => "deny",
+            Severity::Warn => "warn",
+        }
+    }
+}
+
+/// One lint rule. `include` holds path prefixes relative to the analysis
+/// root (`rust/src`); an empty string scopes the rule to the whole tree.
+/// `exclude_mods` names `(path-suffix, mod-name)` pairs whose inline
+/// module bodies are out of scope (e.g. `aggregation::perf` for
+/// `global-state`). `skip_macros` names macro invocations whose bodies
+/// are out of scope (e.g. `thread_local!` statics are per-thread scratch,
+/// not process-global state).
+pub struct Rule {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub invariant: &'static str,
+    pub include: &'static [&'static str],
+    pub exclude_mods: &'static [(&'static str, &'static str)],
+    pub skip_macros: &'static [&'static str],
+    pub matcher: Matcher,
+}
+
+impl Rule {
+    /// The comment marker that exempts a line from this rule.
+    pub fn marker(&self) -> String {
+        format!("{}-exempt", self.id)
+    }
+
+    /// True if `rel_path` (.rs file path relative to the analysis root,
+    /// `/`-separated) is in this rule's scope.
+    pub fn applies_to(&self, rel_path: &str) -> bool {
+        self.include.iter().any(|p| rel_path.starts_with(p))
+    }
+}
+
+/// Matching strategy over the token stream.
+pub enum Matcher {
+    /// Fires when any of the listed token-text sequences occurs
+    /// (lifetime tokens never match, so `'static` is not `static`).
+    AnySeq(&'static [&'static [&'static str]]),
+    /// f32 fold-order hazards: `sum::<f32>`, `product::<f32>`, or a
+    /// `fold(` whose initial accumulator is an `f32`-suffixed literal.
+    FoldF32,
+    /// Allocation-sizing calls (`with_capacity`, `reserve`,
+    /// `reserve_exact`, `vec![…; n]`) whose arguments contain bare `*`
+    /// or `+` arithmetic with no `checked_*`/`saturating_*` guard.
+    UncheckedAlloc,
+    /// `static mut`, or a `static` item whose type has interior
+    /// mutability (atomics, locks, cells, once-types).
+    GlobalState,
+}
+
+impl Matcher {
+    /// If a violation is anchored at `toks[i]`, return a short
+    /// description of what matched.
+    pub fn matches_at(&self, toks: &[Token], i: usize) -> Option<String> {
+        match self {
+            Matcher::AnySeq(seqs) => seqs.iter().find_map(|seq| {
+                let window = toks.get(i..i + seq.len())?;
+                let hit = window
+                    .iter()
+                    .zip(seq.iter())
+                    .all(|(t, want)| t.kind != TokKind::Lifetime && t.text == *want);
+                hit.then(|| format!("`{}`", seq.concat()))
+            }),
+            Matcher::FoldF32 => match_fold_f32(toks, i),
+            Matcher::UncheckedAlloc => match_unchecked_alloc(toks, i),
+            Matcher::GlobalState => match_global_state(toks, i),
+        }
+    }
+}
+
+fn tok_is(toks: &[Token], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.text == text)
+}
+
+fn match_fold_f32(toks: &[Token], i: usize) -> Option<String> {
+    for head in ["sum", "product"] {
+        if tok_is(toks, i, head)
+            && tok_is(toks, i + 1, "::")
+            && tok_is(toks, i + 2, "<")
+            && tok_is(toks, i + 3, "f32")
+            && tok_is(toks, i + 4, ">")
+        {
+            return Some(format!("`{head}::<f32>`"));
+        }
+    }
+    if tok_is(toks, i, "fold") && tok_is(toks, i + 1, "(") {
+        let acc = toks.get(i + 2)?;
+        if acc.kind == TokKind::Num && acc.text.ends_with("f32") {
+            return Some(format!("`fold({}, …)` with an f32 accumulator", acc.text));
+        }
+    }
+    None
+}
+
+/// `*` counts as multiplication (not a deref) only when the previous
+/// token can end an operand.
+fn is_binary_star_context(prev: &Token) -> bool {
+    matches!(prev.kind, TokKind::Ident | TokKind::Num) || prev.text == ")" || prev.text == "]"
+}
+
+fn match_unchecked_alloc(toks: &[Token], i: usize) -> Option<String> {
+    let (what, open_at) = if matches!(
+        toks.get(i).map(|t| t.text.as_str()),
+        Some("with_capacity" | "reserve" | "reserve_exact")
+    ) && tok_is(toks, i + 1, "(")
+    {
+        (toks[i].text.clone(), i + 1)
+    } else if tok_is(toks, i, "vec")
+        && tok_is(toks, i + 1, "!")
+        && (tok_is(toks, i + 2, "[") || tok_is(toks, i + 2, "("))
+    {
+        ("vec!".to_string(), i + 2)
+    } else {
+        return None;
+    };
+    let close = match toks[open_at].text.as_str() {
+        "[" => "]",
+        _ => ")",
+    };
+    let open = toks[open_at].text.clone();
+    let mut depth = 1usize;
+    let mut j = open_at + 1;
+    let mut bare_arith = false;
+    let mut guarded = false;
+    while j < toks.len() && depth > 0 {
+        let t = &toks[j];
+        match t.text.as_str() {
+            x if x == open => depth += 1,
+            x if x == close => depth -= 1,
+            "*" if is_binary_star_context(&toks[j - 1]) => bare_arith = true,
+            "+" => bare_arith = true,
+            "<" if tok_is(toks, j + 1, "<") => bare_arith = true,
+            _ => {
+                if t.kind == TokKind::Ident
+                    && (t.text.starts_with("checked_") || t.text.starts_with("saturating_"))
+                {
+                    guarded = true;
+                }
+            }
+        }
+        j += 1;
+    }
+    (bare_arith && !guarded).then(|| format!("unguarded arithmetic in `{what}` size"))
+}
+
+/// Types whose statics constitute mutable process-global state.
+const INTERIOR_MUT: &[&str] = &[
+    "AtomicBool", "AtomicU8", "AtomicU16", "AtomicU32", "AtomicU64", "AtomicUsize", "AtomicI8",
+    "AtomicI16", "AtomicI32", "AtomicI64", "AtomicIsize", "AtomicPtr", "Mutex", "RwLock",
+    "OnceLock", "OnceCell", "LazyLock", "Cell", "RefCell", "UnsafeCell",
+];
+
+fn match_global_state(toks: &[Token], i: usize) -> Option<String> {
+    let t = toks.get(i)?;
+    if t.kind != TokKind::Ident || t.text != "static" {
+        return None;
+    }
+    if tok_is(toks, i + 1, "mut") {
+        return Some("`static mut`".to_string());
+    }
+    // static NAME: <type tokens> = …;  — scan the type for interior
+    // mutability. Bounded lookahead keeps pathological input cheap.
+    let mut j = i + 1;
+    let end = (i + 64).min(toks.len());
+    while j < end && !tok_is(toks, j, ":") {
+        j += 1;
+    }
+    while j < end && !tok_is(toks, j, "=") && !tok_is(toks, j, ";") {
+        if toks[j].kind == TokKind::Ident && INTERIOR_MUT.contains(&toks[j].text.as_str()) {
+            return Some(format!("process-global `static … : {}`", toks[j].text));
+        }
+        j += 1;
+    }
+    None
+}
+
+/// The shipped rule set, in catalogue order. Kept in sync with the
+/// catalogue in the [`crate::analysis`] module docs and mirrored (rules
+/// 1–3) by `clippy.toml`'s `disallowed-methods`/`disallowed-types`.
+pub fn default_rules() -> Vec<Rule> {
+    vec![
+        Rule {
+            id: "wall-clock",
+            severity: Severity::Deny,
+            invariant: "deterministic modules model time on the virtual clock \
+                        (util::vclock); wall-clock reads change results across hosts",
+            include: &["coordinator/", "aggregation/", "sampling/"],
+            exclude_mods: &[],
+            skip_macros: &[],
+            matcher: Matcher::AnySeq(&[&["Instant"], &["SystemTime"]]),
+        },
+        Rule {
+            id: "hash-order",
+            severity: Severity::Deny,
+            invariant: "seeded hash tables iterate in nondeterministic order; use \
+                        BTreeMap/BTreeSet or exempt-mark lookup-only uses",
+            include: &["coordinator/", "aggregation/", "sampling/"],
+            exclude_mods: &[],
+            skip_macros: &[],
+            matcher: Matcher::AnySeq(&[&["HashMap"], &["HashSet"], &["RandomState"]]),
+        },
+        Rule {
+            id: "ambient-rng",
+            severity: Severity::Deny,
+            invariant: "ambient nondeterminism; draw randomness from counter-keyed \
+                        util::rng streams and take configuration via flags",
+            include: &["coordinator/", "aggregation/", "sampling/", "wire/"],
+            exclude_mods: &[],
+            skip_macros: &[],
+            matcher: Matcher::AnySeq(&[
+                &["thread_rng"],
+                &["from_entropy"],
+                &["env", "::", "var"],
+                &["env", "::", "var_os"],
+                &["env", "::", "vars"],
+                &["env", "::", "temp_dir"],
+                &["env", "::", "current_exe"],
+                &["process", "::", "id"],
+            ]),
+        },
+        Rule {
+            id: "panic-path",
+            severity: Severity::Deny,
+            invariant: "decode paths and the worker loop return named errors \
+                        (bail!/ensure!/context); a panic kills the whole shard",
+            include: &["wire/", "coordinator/proc.rs", "coordinator/peer.rs"],
+            exclude_mods: &[],
+            skip_macros: &[],
+            matcher: Matcher::AnySeq(&[
+                &["unwrap"],
+                &["expect"],
+                &["panic"],
+                &["unreachable"],
+                &["todo"],
+                &["unimplemented"],
+            ]),
+        },
+        Rule {
+            id: "unchecked-alloc",
+            severity: Severity::Deny,
+            invariant: "attacker-supplied counts size allocations in the wire codec; \
+                        size math must go through checked_* per the 1 GiB frame cap",
+            include: &["wire/"],
+            exclude_mods: &[],
+            skip_macros: &[],
+            matcher: Matcher::UncheckedAlloc,
+        },
+        Rule {
+            id: "f32-fold",
+            severity: Severity::Deny,
+            invariant: "f32 reductions reassociate under vectorization; stage them \
+                        through the documented f64 kernels (util::vecmath)",
+            include: &["aggregation/", "coordinator/"],
+            exclude_mods: &[],
+            skip_macros: &[],
+            matcher: Matcher::FoldF32,
+        },
+        Rule {
+            id: "global-state",
+            severity: Severity::Deny,
+            invariant: "process-global mutable state breaks run isolation; thread \
+                        scratch belongs in thread_local!, counters in aggregation::perf",
+            include: &[""],
+            exclude_mods: &[("aggregation/mod.rs", "perf")],
+            skip_macros: &["thread_local"],
+            matcher: Matcher::GlobalState,
+        },
+    ]
+}

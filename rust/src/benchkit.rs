@@ -3,6 +3,10 @@
 //! criterion-style one-line reports. Used by every target in
 //! `rust/benches/`.
 
+// Timing is this module's whole job; the rpel-lint wall-clock rule scopes
+// to the deterministic modules and does not cover the bench harness.
+#![allow(clippy::disallowed_methods)]
+
 use crate::util::stats::{self, Summary};
 use std::time::Instant;
 

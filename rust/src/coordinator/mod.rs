@@ -94,7 +94,11 @@
 //! [`crate::aggregation::DistCache`] (one per address space); the memo
 //! is bit-invisible — a hit returns exactly the bits a miss would
 //! compute — so the grid guarantee (and a cache-on vs cache-off
-//! comparison) holds byte-for-byte.
+//! comparison) holds byte-for-byte. These invariants are machine-checked:
+//! `rpel lint` ([`crate::analysis`]) statically scans the source tree for
+//! wall-clock reads, iteration-order-sensitive containers, ambient
+//! nondeterminism, and f32 fold-order hazards on the round path, and CI
+//! fails on any finding.
 //!
 //! # Asynchronous rounds (the `[async]` config section)
 //!
@@ -823,6 +827,7 @@ impl Trainer {
 
     /// Run the full training; returns the metric history.
     pub fn run(&mut self) -> Result<History> {
+        #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now(); // lint: wall-clock-exempt (reporting only)
         let mut hist = History::new(&self.cfg.name, self.cfg.messages_per_round());
         let async_on = self.vclock.is_some();

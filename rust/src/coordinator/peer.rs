@@ -85,14 +85,24 @@ impl RowServer {
     /// lockstep argument above relies on it).
     pub fn publish(&self, round: u64, rows: &[Vec<f32>]) {
         debug_assert_eq!(rows.len(), self.shared.len);
-        let mut st = self.shared.state.lock().unwrap();
-        st.have = true;
+        // A poisoned lock means a serve thread panicked while reading;
+        // publish overwrites the whole table, so recovery is sound.
+        let mut st = self
+            .shared
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        // `have` is cleared first and set last: if *this* write is ever
+        // interrupted, a recovering reader sees "not published" instead
+        // of a half-copied table.
+        st.have = false;
         st.round = round;
         st.rows.resize(rows.len(), Vec::new());
         for (dst, src) in st.rows.iter_mut().zip(rows) {
             dst.clear();
             dst.extend_from_slice(src);
         }
+        st.have = true;
     }
 }
 
@@ -142,7 +152,12 @@ fn serve_conn(shared: &ServeShared, stream: SocketStream) -> Result<()> {
             Ok(PeerMsg::Hello { .. }) => {} // identification only
             Ok(PeerMsg::PullRequest { round, rows }) => {
                 let reply = {
-                    let st = shared.state.lock().unwrap();
+                    // Poison recovery is safe: `publish` orders its writes
+                    // so `have` is only true for a fully-copied table.
+                    let st = shared
+                        .state
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
                     pull_reply_frame(shared, &st, round, &rows)
                 };
                 t.send(&reply)?;
@@ -273,7 +288,9 @@ impl PeerClient {
                 counted: 0,
             });
         }
-        Ok(self.conns[owner].as_mut().unwrap())
+        self.conns[owner]
+            .as_mut()
+            .with_context(|| format!("internal: no connection to peer worker {owner} after dial"))
     }
 
     /// Fetch the given rows (global honest indices owned by `owner`) of

@@ -108,7 +108,7 @@ use std::time::{Duration, Instant}; // lint: wall-clock-exempt (worker-spawn dea
 /// Process-wide worker-binary override for tests. A `OnceLock` instead of
 /// `std::env::set_var`: mutating the environment races with concurrent
 /// `Command::spawn` reading `environ` from other test threads.
-static WORKER_BIN_OVERRIDE: OnceLock<PathBuf> = OnceLock::new();
+static WORKER_BIN_OVERRIDE: OnceLock<PathBuf> = OnceLock::new(); // lint: global-state-exempt (test-only spawn override, first-set-wins)
 
 /// Test hook: pin the `rpel` binary used to spawn shard workers
 /// (first caller wins; later calls with the same path are no-ops).
@@ -122,14 +122,15 @@ pub fn set_worker_bin(path: &str) {
 /// it *is* `rpel`, then siblings of the current executable
 /// (`target/<profile>/deps/…` test binaries find `target/<profile>/rpel`
 /// one level up).
+#[allow(clippy::disallowed_methods)] // env reads are exempt-marked spawn config
 fn worker_binary() -> Result<PathBuf> {
     if let Some(path) = WORKER_BIN_OVERRIDE.get() {
         return Ok(path.clone());
     }
-    if let Ok(path) = std::env::var("RPEL_WORKER_BIN") {
+    if let Ok(path) = std::env::var("RPEL_WORKER_BIN") { // lint: ambient-rng-exempt (spawn config only; results never depend on it)
         return Ok(PathBuf::from(path));
     }
-    let exe = std::env::current_exe().context("resolving current executable")?;
+    let exe = std::env::current_exe().context("resolving current executable")?; // lint: ambient-rng-exempt (spawn config only)
     if exe.file_stem() == Some(std::ffi::OsStr::new("rpel")) {
         return Ok(exe);
     }
@@ -274,8 +275,18 @@ impl ProcessShard {
                 .with_context(|| {
                     format!("spawning shard worker {index} from {}", bin.display())
                 })?;
-            let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
-            let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+            let stdin = BufWriter::new(
+                child
+                    .stdin
+                    .take()
+                    .with_context(|| format!("shard worker {index}: stdin not piped"))?,
+            );
+            let stdout = BufReader::new(
+                child
+                    .stdout
+                    .take()
+                    .with_context(|| format!("shard worker {index}: stdout not piped"))?,
+            );
             shards.push(ProcessShard {
                 index,
                 start,
@@ -299,24 +310,25 @@ impl ProcessShard {
     /// with `--connect`, and accept + identify every control connection
     /// under a deadline — a worker that dies before dialing in surfaces
     /// as an error naming it, never a hang.
+    #[allow(clippy::disallowed_methods)] // temp_dir/pid/Instant are exempt-marked spawn plumbing
     fn spawn_all_socket(
         ranges: &[(usize, usize)],
         d: usize,
         socket_dir: &str,
         tcp: bool,
     ) -> Result<Vec<ProcessShard>> {
-        static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+        static DIR_SEQ: AtomicU64 = AtomicU64::new(0); // lint: global-state-exempt (socket-dir uniquifier; never observable in results)
         let (listener, guard) = if tcp {
             (Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into()))?, None)
         } else {
             let base = if socket_dir.is_empty() {
-                std::env::temp_dir()
+                std::env::temp_dir() // lint: ambient-rng-exempt (socket scratch location only)
             } else {
                 PathBuf::from(socket_dir)
             };
             let dir = base.join(format!(
                 "rpel-{}-{}",
-                std::process::id(),
+                std::process::id(), // lint: ambient-rng-exempt (socket-path uniquifier only)
                 DIR_SEQ.fetch_add(1, Ordering::Relaxed)
             ));
             std::fs::create_dir_all(&dir)
@@ -427,8 +439,12 @@ impl ProcessShard {
                 start,
                 len,
                 d,
-                child: children[index].take().expect("child spawned"),
-                conn: Some(Box::new(conns[index].take().expect("worker connected"))),
+                child: children[index]
+                    .take()
+                    .with_context(|| format!("internal: shard worker {index} has no child handle"))?,
+                conn: Some(Box::new(conns[index].take().with_context(|| {
+                    format!("internal: shard worker {index} never connected")
+                })?)),
                 routed: true,
                 _sock_dir: guard.clone(),
                 listen_addr: std::mem::take(&mut listens[index]),

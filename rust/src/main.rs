@@ -53,6 +53,8 @@ USAGE:
               [--grid 2,...,n-1] [--exact] [--p 0.99]
   rpel list   [--presets] [--artifacts <dir>]
   rpel check  [--artifacts <dir>]
+  rpel lint   [--json] [path]   (determinism & panic-safety static analysis
+              over rust/src; nonzero exit on findings. See rpel::analysis.)
 
 Run `make artifacts` before using --engine hlo (the default for check).
 ";
@@ -73,6 +75,7 @@ fn main() {
         Some("select") => cmd_select(&args),
         Some("list") => cmd_list(&args),
         Some("check") => cmd_check(&args),
+        Some("lint") => cmd_lint(&args),
         Some("shard-worker") => cmd_shard_worker(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -420,6 +423,33 @@ fn cmd_check(args: &Args) -> CmdResult {
     Ok(())
 }
 
+/// Determinism & panic-safety static analysis (see `rpel::analysis` for
+/// the rule catalogue and exemption-marker syntax). Exits nonzero when
+/// any rule fires so CI and pre-commit hooks can gate on it.
+fn cmd_lint(args: &Args) -> CmdResult {
+    args.check_known(&["json"])?;
+    // Accept both `rpel lint path --json` and `rpel lint --json path`: in
+    // the latter the bare grammar parses the path as --json's value.
+    let root = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("json").filter(|v| !v.is_empty()))
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let report = rpel::analysis::run_lint(&root).map_err(|e| format!("{e:#}"))?;
+    if args.has("json") {
+        println!("{}", rpel::analysis::report::render_json(&report));
+    } else {
+        print!("{}", rpel::analysis::report::render_text(&report));
+    }
+    if report.clean() {
+        Ok(())
+    } else {
+        Err(format!("rpel lint: {} finding(s)", report.findings.len()).into())
+    }
+}
+
 /// Host one honest shard for a multi-process coordinator: strict
 /// request/reply wire protocol on stdin/stdout (pipe transport) or on a
 /// stream socket with worker-side pull serving (`--transport socket
@@ -446,6 +476,7 @@ fn cmd_shard_worker(args: &Args) -> CmdResult {
 
 /// Minimal env_logger replacement: RUST_LOG=debug|info|warn enables stderr
 /// logging through the `log` facade.
+#[allow(clippy::disallowed_methods)] // log verbosity may read the environment
 fn env_logger_lite() {
     struct L(log::LevelFilter);
     impl log::Log for L {

@@ -2,6 +2,11 @@
 //! (Appendix D flooding), DoS under the synchronous model, corrupt
 //! artifacts, and observed-b̂ telemetry against the Algorithm-2 bound.
 
+// Test/bench code may time things, read the environment, and build
+// scratch hash tables (clippy.toml's disallowed lists guard src only;
+// the rpel-lint pass likewise skips test code).
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
 use rpel::aggregation::RuleKind;
 use rpel::attacks::AttackKind;
 use rpel::config::{EngineKind, ExperimentConfig, RuleChoice, Topology};

@@ -1,0 +1,403 @@
+//! Engine-grade tests for `rpel::analysis` (the `rpel lint` pass).
+//!
+//! Every shipped rule gets three fixtures: one that provably **fires**,
+//! one that is provably **clean**, and one silenced by its **exemption
+//! marker** — plus scope checks (out-of-scope paths never fire), lexer
+//! false-positive checks (lint keywords inside strings/comments are
+//! invisible), a whole-tree lint-clean assertion over the real source,
+//! and an end-to-end CLI check (`rpel lint` exits 0 on the shipped tree,
+//! nonzero — naming file, line, and rule id — on an injected violation).
+
+// Test/bench code may time things, read the environment, and build
+// scratch hash tables (clippy.toml's disallowed lists guard src only;
+// the rpel-lint pass likewise skips test code).
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
+use rpel::analysis::{default_rules, lint_source, lint_tree, report, Finding};
+use std::path::Path;
+
+fn findings(rel_path: &str, src: &str) -> Vec<Finding> {
+    lint_source(rel_path, src, &default_rules())
+}
+
+/// Assert `src` at `rel_path` produces exactly one finding for `rule`,
+/// and that appending ` // lint: <rule>-exempt` to its line silences it.
+fn fires_and_exempts(rel_path: &str, src: &str, rule: &str) {
+    let found = findings(rel_path, src);
+    assert_eq!(
+        found.len(),
+        1,
+        "{rule} fixture at {rel_path} should fire exactly once: {found:?}"
+    );
+    assert_eq!(found[0].rule, rule);
+    assert_eq!(found[0].file, rel_path);
+    assert!(found[0].line >= 1);
+
+    // same-line marker
+    let line = found[0].line as usize;
+    let mut lines: Vec<String> = src.lines().map(String::from).collect();
+    lines[line - 1].push_str(&format!(" // lint: {rule}-exempt (fixture)"));
+    let silenced = findings(rel_path, &lines.join("\n"));
+    assert!(
+        silenced.iter().all(|f| f.rule != rule),
+        "same-line marker must silence {rule}: {silenced:?}"
+    );
+
+    // preceding-line marker
+    let mut lines: Vec<String> = src.lines().map(String::from).collect();
+    lines.insert(line - 1, format!("// lint: {rule}-exempt (fixture)"));
+    let silenced = findings(rel_path, &lines.join("\n"));
+    assert!(
+        silenced.iter().all(|f| f.rule != rule),
+        "preceding-line marker must silence {rule}: {silenced:?}"
+    );
+
+    // a marker for a *different* rule must NOT silence it
+    let mut lines: Vec<String> = src.lines().map(String::from).collect();
+    lines[line - 1].push_str(" // lint: some-other-exempt");
+    assert_eq!(
+        findings(rel_path, &lines.join("\n")).len(),
+        1,
+        "foreign marker must not silence {rule}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// rule 1: wall-clock
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wall_clock_fires_exempts_and_scopes() {
+    let bad = "fn f() { let t = std::time::Instant::now(); }\n";
+    fires_and_exempts("coordinator/fx.rs", bad, "wall-clock");
+    fires_and_exempts(
+        "sampling/fx.rs",
+        "fn f() -> SystemTime { SystemTime::now() }\n",
+        "wall-clock",
+    );
+    // clean: virtual-clock time is fine
+    assert!(findings("coordinator/fx.rs", "fn f(now: u64) -> u64 { now + 1 }\n").is_empty());
+    // out of scope: the bench harness may time things
+    assert!(findings("benchkit.rs", bad).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule 2: hash-order
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hash_order_fires_exempts_and_scopes() {
+    let bad = "use std::collections::HashMap;\n";
+    fires_and_exempts("aggregation/fx.rs", bad, "hash-order");
+    fires_and_exempts(
+        "coordinator/fx.rs",
+        "fn f(s: std::collections::HashSet<u32>) {}\n",
+        "hash-order",
+    );
+    // clean: ordered collections
+    assert!(findings(
+        "aggregation/fx.rs",
+        "use std::collections::{BTreeMap, BTreeSet};\n"
+    )
+    .is_empty());
+    assert!(findings("util/fx.rs", bad).is_empty(), "util/ out of scope");
+}
+
+// ---------------------------------------------------------------------------
+// rule 3: ambient-rng
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ambient_rng_fires_exempts_and_scopes() {
+    fires_and_exempts(
+        "wire/fx.rs",
+        "fn f() -> String { std::env::var(\"X\").unwrap_or_default() }\n",
+        "ambient-rng",
+    );
+    fires_and_exempts(
+        "coordinator/fx.rs",
+        "fn f() -> u32 { std::process::id() }\n",
+        "ambient-rng",
+    );
+    fires_and_exempts("sampling/fx.rs", "fn f() { let r = thread_rng(); }\n", "ambient-rng");
+    // clean: counter-keyed streams
+    assert!(findings(
+        "sampling/fx.rs",
+        "fn f(seed: u64) { let r = Rng::stream(seed, 0, 0, 0); }\n"
+    )
+    .is_empty());
+    // `env::args` is CLI input, not ambient state
+    assert!(findings("coordinator/fx.rs", "fn f() { let a = std::env::args(); }\n").is_empty());
+    assert!(
+        findings("util/rng.rs", "fn f() { let r = thread_rng(); }\n").is_empty(),
+        "util/rng.rs is the sanctioned randomness home"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// rule 4: panic-path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panic_path_fires_exempts_and_scopes() {
+    fires_and_exempts(
+        "wire/fx.rs",
+        "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        "panic-path",
+    );
+    fires_and_exempts(
+        "coordinator/proc.rs",
+        "fn f(x: Option<u32>) -> u32 { x.expect(\"x\") }\n",
+        "panic-path",
+    );
+    fires_and_exempts("coordinator/peer.rs", "fn f() { panic!(\"boom\"); }\n", "panic-path");
+    // clean: named-error convention, and unwrap_or* are not unwrap
+    let clean = "fn f(x: Option<u32>) -> Result<u32> {\n\
+                 \x20   x.context(\"missing x\")\n}\n\
+                 fn g(x: Option<u32>) -> u32 { x.unwrap_or_default() }\n";
+    assert!(findings("wire/fx.rs", clean).is_empty());
+    // coordinator/mod.rs is NOT on the panic-path scope (only proc/peer)
+    assert!(findings("coordinator/mod.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n")
+        .is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule 5: unchecked-alloc
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unchecked_alloc_fires_exempts_and_scopes() {
+    fires_and_exempts(
+        "wire/fx.rs",
+        "fn f(n: usize) -> Vec<u8> { Vec::with_capacity(n * 4) }\n",
+        "unchecked-alloc",
+    );
+    fires_and_exempts(
+        "wire/fx.rs",
+        "fn f(n: usize, d: usize) -> Vec<u8> { vec![0u8; n + d] }\n",
+        "unchecked-alloc",
+    );
+    // clean: checked math guards the size, or no arithmetic at all
+    assert!(findings(
+        "wire/fx.rs",
+        "fn f(n: usize) -> Result<Vec<u8>> {\n\
+         \x20   let sz = n.checked_mul(4).context(\"frame too large\")?;\n\
+         \x20   Ok(Vec::with_capacity(sz))\n}\n"
+    )
+    .is_empty());
+    assert!(findings("wire/fx.rs", "fn f(n: usize) -> Vec<u8> { Vec::with_capacity(n) }\n")
+        .is_empty());
+    // aggregation may size scratch from trusted shapes
+    assert!(findings(
+        "aggregation/fx.rs",
+        "fn f(n: usize) -> Vec<u8> { Vec::with_capacity(n * 4) }\n"
+    )
+    .is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule 6: f32-fold
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f32_fold_fires_exempts_and_scopes() {
+    fires_and_exempts(
+        "aggregation/fx.rs",
+        "fn f(xs: &[f32]) -> f32 { xs.iter().sum::<f32>() }\n",
+        "f32-fold",
+    );
+    fires_and_exempts(
+        "coordinator/fx.rs",
+        "fn f(xs: &[f32]) -> f32 { xs.iter().fold(0.0f32, |a, b| a + b) }\n",
+        "f32-fold",
+    );
+    // clean: the documented f64-staged kernels
+    assert!(findings(
+        "aggregation/fx.rs",
+        "fn f(xs: &[f32]) -> f64 { xs.iter().map(|x| *x as f64).sum::<f64>() }\n"
+    )
+    .is_empty());
+    assert!(findings(
+        "aggregation/fx.rs",
+        "fn f(xs: &[f64]) -> f64 { xs.iter().fold(0.0f64, |a, b| a + b) }\n"
+    )
+    .is_empty());
+    // attacks/ is out of scope (adversary math is spec'd per-attack)
+    assert!(findings("attacks/fx.rs", "fn f(xs: &[f32]) -> f32 { xs.iter().sum::<f32>() }\n")
+        .is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule 7: global-state
+// ---------------------------------------------------------------------------
+
+#[test]
+fn global_state_fires_exempts_and_scopes() {
+    fires_and_exempts("metrics/fx.rs", "static mut COUNTER: u64 = 0;\n", "global-state");
+    fires_and_exempts(
+        "util/fx.rs",
+        "static EVALS: AtomicU64 = AtomicU64::new(0);\n",
+        "global-state",
+    );
+    // clean: immutable statics and thread-local scratch
+    assert!(findings("util/fx.rs", "static TABLE: [u8; 4] = [1, 2, 3, 4];\n").is_empty());
+    assert!(findings(
+        "util/fx.rs",
+        "thread_local! {\n    static SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());\n}\n"
+    )
+    .is_empty());
+    // `'static` lifetimes are not `static` items
+    assert!(findings("util/fx.rs", "fn f(s: &'static str) -> &'static str { s }\n").is_empty());
+    // the sanctioned counter home: mod perf inside aggregation/mod.rs
+    let perf = "pub mod perf {\n    static EVALS: AtomicU64 = AtomicU64::new(0);\n}\n";
+    assert!(findings("aggregation/mod.rs", perf).is_empty());
+    assert_eq!(findings("coordinator/mod.rs", perf).len(), 1, "perf is only exempt in aggregation");
+}
+
+// ---------------------------------------------------------------------------
+// lexer: keywords in literals/comments never fire; cfg(test) is skipped
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lint_keywords_inside_strings_and_comments_do_not_fire() {
+    let src = "\
+// A comment mentioning Instant, HashMap, unwrap(), and panic! is prose.\n\
+/* So is SystemTime in /* a nested */ block comment. */\n\
+fn f() -> String {\n\
+    let a = \"calling unwrap() would panic with SystemTime\".to_string();\n\
+    let b = r#\"raw Instant \"quoted\" HashMap\"#;\n\
+    let c = 'u'; // the char after 'u' is not an ident\n\
+    format!(\"{a}{b}{c}\")\n\
+}\n";
+    // the fixture path puts every rule in scope at once
+    assert!(findings("coordinator/proc.rs", src).is_empty(), "literals must be invisible");
+}
+
+#[test]
+fn markers_inside_string_literals_do_not_exempt() {
+    // The marker text lives in a *string*, not a comment: the real
+    // violation on the same line must still fire.
+    let src = "fn f() { let m = \"lint: wall-clock-exempt\"; let t = Instant::now(); }\n";
+    let found = findings("coordinator/fx.rs", src);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert_eq!(found[0].rule, "wall-clock");
+}
+
+#[test]
+fn cfg_test_bodies_are_out_of_scope() {
+    let src = "\
+fn live() {}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    use std::collections::HashMap;\n\
+    #[test]\n\
+    fn t() {\n\
+        let mut m = HashMap::new();\n\
+        m.insert(1, std::time::Instant::now());\n\
+        assert!(m.get(&1).is_some(), \"{}\", m.len());\n\
+    }\n\
+}\n";
+    assert!(findings("coordinator/fx.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// reports
+// ---------------------------------------------------------------------------
+
+#[test]
+fn findings_name_file_line_and_rule_in_both_renderings() {
+    let src = "fn a() {}\nfn f() { let t = Instant::now(); }\n";
+    let rep = rpel::analysis::Report {
+        findings: findings("coordinator/fx.rs", src),
+        files_scanned: 1,
+        rules_run: default_rules().len(),
+    };
+
+    let text = report::render_text(&rep);
+    assert!(text.contains("coordinator/fx.rs:2: [wall-clock]"), "{text}");
+    assert!(text.contains("wall-clock-exempt"), "text points at the marker syntax: {text}");
+
+    let json = report::render_json(&rep);
+    let doc = rpel::util::json::parse(&json).expect("lint JSON parses");
+    assert_eq!(doc.get("count").and_then(|c| c.as_usize()), Some(1));
+    let f = &doc.get("findings").unwrap().as_arr().unwrap()[0];
+    assert_eq!(f.get("file").and_then(|x| x.as_str()), Some("coordinator/fx.rs"));
+    assert_eq!(f.get("line").and_then(|x| x.as_usize()), Some(2));
+    assert_eq!(f.get("rule").and_then(|x| x.as_str()), Some("wall-clock"));
+    assert_eq!(f.get("severity").and_then(|x| x.as_str()), Some("deny"));
+}
+
+// ---------------------------------------------------------------------------
+// the shipped tree is clean — the pass is load-bearing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn whole_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let rep = lint_tree(&root, &default_rules()).unwrap();
+    assert!(
+        rep.files_scanned >= 60,
+        "wrong tree? scanned {} files",
+        rep.files_scanned
+    );
+    assert!(
+        rep.clean(),
+        "the shipped tree must lint clean:\n{}",
+        report::render_text(&rep)
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CLI end to end: exit codes and machine output
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cli_exits_zero_on_clean_tree_and_nonzero_on_violation() {
+    let bin = env!("CARGO_BIN_EXE_rpel");
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR"));
+
+    // shipped tree: clean, exit 0
+    let out = std::process::Command::new(bin)
+        .args(["lint", repo.to_str().unwrap()])
+        .output()
+        .expect("running rpel lint");
+    assert!(
+        out.status.success(),
+        "rpel lint must exit 0 on the shipped tree:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("clean"));
+
+    // injected violation in a scratch tree: nonzero, names file/line/rule
+    let dir = std::env::temp_dir().join(format!("rpel-lint-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("coordinator")).unwrap();
+    std::fs::write(
+        dir.join("coordinator/bad.rs"),
+        "fn f() {}\nfn g() { let t = std::time::Instant::now(); }\n",
+    )
+    .unwrap();
+    let out = std::process::Command::new(bin)
+        .args(["lint", dir.to_str().unwrap()])
+        .output()
+        .expect("running rpel lint on fixture");
+    assert!(!out.status.success(), "violations must exit nonzero");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("coordinator/bad.rs:2: [wall-clock]"),
+        "finding must name file, line, and rule id:\n{stdout}"
+    );
+
+    // --json on the same fixture parses and carries the finding
+    let out = std::process::Command::new(bin)
+        .args(["lint", dir.to_str().unwrap(), "--json"])
+        .output()
+        .expect("running rpel lint --json");
+    assert!(!out.status.success());
+    let doc = rpel::util::json::parse(&String::from_utf8_lossy(&out.stdout))
+        .expect("lint --json emits valid JSON");
+    assert_eq!(doc.get("count").and_then(|c| c.as_usize()), Some(1));
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -21,6 +21,11 @@
 //! routing table doesn't require — and measurably drops the per-worker
 //! coordinator traffic from O(h·d) to O(s·d + routing table).
 
+// Test/bench code may time things, read the environment, and build
+// scratch hash tables (clippy.toml's disallowed lists guard src only;
+// the rpel-lint pass likewise skips test code).
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
 use rpel::attacks::HonestDigest;
 use rpel::config::{ExperimentConfig, Topology, TransportKind};
 use rpel::coordinator::{PullSampler, Trainer};

@@ -20,6 +20,11 @@
 //!   explicitly `lint: wall-clock-exempt`-marked lines — the virtual
 //!   clock is the only clock.
 
+// Test/bench code may time things, read the environment, and build
+// scratch hash tables (clippy.toml's disallowed lists guard src only;
+// the rpel-lint pass likewise skips test code).
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
 use rpel::attacks::AttackKind;
 use rpel::config::file::{from_toml_str, to_toml_str};
 use rpel::config::{ExperimentConfig, Topology};
@@ -30,7 +35,7 @@ use rpel::testkit::scenario::Scenario;
 use rpel::util::rng::{stream_tag, Rng};
 use rpel::wire::proto::PeerEntry;
 use rpel::wire::transport::{Listener, SockAddr};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 fn base_cfg() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
@@ -351,54 +356,34 @@ fn restarted_worker_serves_pulls_again_after_reset_conns() {
 // source lint: the virtual clock is the only clock
 // ---------------------------------------------------------------------------
 
-fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
-    for entry in std::fs::read_dir(dir).unwrap_or_else(|e| panic!("{}: {e}", dir.display())) {
-        let path = entry.unwrap().path();
-        if path.is_dir() {
-            rs_files(&path, out);
-        } else if path.extension().is_some_and(|e| e == "rs") {
-            out.push(path);
-        }
-    }
-}
-
 #[test]
 fn no_wall_clock_reads_in_deterministic_modules() {
     // round timing must come from the virtual clock's counter streams;
     // a stray Instant/SystemTime in these modules would let real time
     // leak into results. Intentional uses (process-spawn deadlines,
     // reporting-only wall_secs) carry a `lint: wall-clock-exempt`
-    // marker on the same or the preceding line.
+    // marker on the same or the preceding line. The scan is the real
+    // `rpel::analysis` engine (single source of truth with `rpel lint`),
+    // restricted to its `wall-clock` rule; rust/tests/lint.rs holds the
+    // whole-tree assertion over every rule.
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
-    let mut files = Vec::new();
-    for sub in ["coordinator", "aggregation", "sampling"] {
-        rs_files(&root.join(sub), &mut files);
-    }
+    let rules: Vec<_> = rpel::analysis::default_rules()
+        .into_iter()
+        .filter(|r| r.id == "wall-clock")
+        .collect();
+    assert_eq!(rules.len(), 1, "the wall-clock rule must exist");
+    let report = rpel::analysis::lint_tree(&root, &rules).unwrap();
     assert!(
-        files.len() >= 6,
-        "lint scan is looking at the wrong tree: {files:?}"
+        report.files_scanned >= 6,
+        "lint scan is looking at the wrong tree: {} files under {}",
+        report.files_scanned,
+        root.display()
     );
-
-    let mut offenders = Vec::new();
-    for file in &files {
-        let text = std::fs::read_to_string(file).unwrap();
-        let mut prev_exempt = false;
-        for (idx, line) in text.lines().enumerate() {
-            let exempt = line.contains("lint: wall-clock-exempt");
-            if (line.contains("Instant") || line.contains("SystemTime"))
-                && !exempt
-                && !prev_exempt
-            {
-                offenders.push(format!("{}:{}: {}", file.display(), idx + 1, line.trim()));
-            }
-            prev_exempt = exempt;
-        }
-    }
     assert!(
-        offenders.is_empty(),
+        report.clean(),
         "wall-clock reads in deterministic modules — model time on the \
          virtual clock, or mark an intentional use with \
          `// lint: wall-clock-exempt`:\n{}",
-        offenders.join("\n")
+        rpel::analysis::report::render_text(&report)
     );
 }

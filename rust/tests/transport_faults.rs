@@ -8,6 +8,11 @@
 //! counter RNG ([`rpel::testkit::chaos`]), so a failing case reproduces
 //! from its seed.
 
+// Test/bench code may time things, read the environment, and build
+// scratch hash tables (clippy.toml's disallowed lists guard src only;
+// the rpel-lint pass likewise skips test code).
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
 use rpel::config::{ExperimentConfig, Topology, TransportKind};
 use rpel::coordinator::peer::{PeerClient, RowServer};
 use rpel::coordinator::proc::run_worker;
