@@ -1,0 +1,155 @@
+//! Wire-codec benchmark: what does the bandwidth diet cost in CPU, and
+//! what does it save in bytes?
+//!
+//! Two layers over the same synthetic model geometry:
+//!
+//! * **codec** — `encode_rows` (publish-point transform) and the full
+//!   frame decode (`decode_peer_c` on a `PullReply` block) per
+//!   compression level, at a model-sized row block;
+//! * **round** — in-process training rounds with the publish-point
+//!   transform on (`none` vs `f16` vs `q8`), pricing the codec against
+//!   the whole round path.
+//!
+//! Emits `BENCH_wire.json`; the CI `bench-smoke` job runs
+//! `BENCH_SMOKE=1` and uploads the measured file.
+//!
+//! Run: cargo bench --bench bench_wire
+
+// Test/bench code may time things, read the environment, and build
+// scratch hash tables (clippy.toml's disallowed lists guard src only;
+// the rpel-lint pass likewise skips test code).
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
+use rpel::attacks::AttackKind;
+use rpel::benchkit::{black_box, section, Bencher};
+use rpel::config::{EngineKind, ExperimentConfig, Topology};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+use rpel::util::json::Json;
+use rpel::wire::codec::{self, Compression, RowCodec};
+use rpel::wire::proto;
+use std::collections::BTreeMap;
+
+const LEVELS: [Compression; 3] = [Compression::None, Compression::F16, Compression::Q8];
+
+/// Deterministic synthetic block: a reference vector plus rows a small
+/// delta away from it — the regime the delta codec is built for.
+fn synth_rows(rows: usize, d: usize) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let reference: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+    let table: Vec<Vec<f32>> = (0..rows)
+        .map(|r| {
+            (0..d)
+                .map(|i| reference[i] + ((r * d + i) as f32 * 0.11).cos() * 0.05)
+                .collect()
+        })
+        .collect();
+    (reference, table)
+}
+
+fn base_cfg(name: &str, comp: Compression) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = name.into();
+    cfg.n = 24;
+    cfg.b = 3;
+    cfg.topology = Topology::Epidemic { s: 6 };
+    cfg.bhat = Some(2);
+    cfg.attack = AttackKind::Alie;
+    cfg.batch = 8;
+    cfg.samples_per_node = 32;
+    cfg.test_samples = 64;
+    cfg.eval_every = 1_000_000; // never: rounds only
+    cfg.engine = EngineKind::Native;
+    cfg.compression = comp;
+    cfg
+}
+
+fn round_mean_ns(b: &Bencher, label: &str, cfg: &ExperimentConfig) -> f64 {
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    let mut round = 0usize;
+    let r = b.run(label, || {
+        round += 1;
+        black_box(trainer.round(round).unwrap())
+    });
+    println!("{}", r.report());
+    r.mean_ns()
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let b = if smoke {
+        Bencher {
+            warmup_iters: 1,
+            samples: 2,
+            iters_per_sample: 1,
+        }
+    } else {
+        Bencher {
+            warmup_iters: 2,
+            samples: 8,
+            iters_per_sample: 1,
+        }
+    };
+    let (rows, d) = if smoke { (8usize, 256usize) } else { (64, 4096) };
+
+    let mut json_root: BTreeMap<String, Json> = BTreeMap::new();
+    json_root.insert("bench".into(), Json::Str("bench_wire".into()));
+    json_root.insert("produced_by".into(), Json::Str("rust/benches/bench_wire".into()));
+    json_root.insert("units".into(), Json::Str("ns_per_op".into()));
+    json_root.insert("smoke".into(), Json::Bool(smoke));
+
+    section(&format!("row codec ({rows} rows x d={d})"));
+    let (reference, table) = synth_rows(rows, d);
+
+    let mut timing = BTreeMap::new();
+    timing.insert("rows".into(), Json::Num(rows as f64));
+    timing.insert("d".into(), Json::Num(d as f64));
+    for comp in LEVELS {
+        let rc = RowCodec::new(comp, &reference);
+        let enc = b.run(&format!("{} encode_rows", comp.name()), || {
+            black_box(codec::encode_rows(&rc, &table))
+        });
+        println!("{}", enc.report());
+        let block = codec::encode_rows(&rc, &table);
+        let frame = proto::encode_pull_reply_block(1, &block);
+        let dec = b.run(&format!("{} frame decode", comp.name()), || {
+            black_box(proto::decode_peer_c(&frame, &rc).unwrap())
+        });
+        println!("{}", dec.report());
+        println!(
+            "  => {}: {} bytes/row ({}x vs raw)",
+            comp.name(),
+            comp.stride(d),
+            (4 * d) as f64 / comp.stride(d) as f64
+        );
+        timing.insert(format!("{}_encode_ns", comp.name()), Json::Num(enc.mean_ns()));
+        timing.insert(format!("{}_decode_ns", comp.name()), Json::Num(dec.mean_ns()));
+        timing.insert(
+            format!("{}_bytes_per_row", comp.name()),
+            Json::Num(comp.stride(d) as f64),
+        );
+    }
+    json_root.insert("timing".into(), Json::Obj(timing));
+
+    section("in-process round with publish-point transform (n=24, s=6, alie)");
+    let mut rounds = BTreeMap::new();
+    let mut none_ns = 0f64;
+    for comp in LEVELS {
+        let ns = round_mean_ns(
+            &b,
+            &format!("{} round", comp.name()),
+            &base_cfg(&format!("bench_wire_{}", comp.name()), comp),
+        );
+        if comp.is_none() {
+            none_ns = ns;
+        } else {
+            println!("  => {} overhead {:.2}x vs none", comp.name(), ns / none_ns);
+        }
+        rounds.insert(format!("{}_round_ns", comp.name()), Json::Num(ns));
+    }
+    json_root.insert("round".into(), Json::Obj(rounds));
+
+    match std::fs::write("BENCH_wire.json", Json::Obj(json_root).to_string_compact()) {
+        Ok(()) => println!("\nwrote BENCH_wire.json"),
+        Err(e) => println!("\ncould not write BENCH_wire.json: {e}"),
+    }
+}

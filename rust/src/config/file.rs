@@ -34,14 +34,17 @@
 //! alpha = 1.0
 //! samples_per_node = 128
 //! test_samples = 512
+//!
+//! [wire]
+//! compression = "none"        # none | f16 | q8 (row-block codec, see wire::codec)
 //! ```
 
 use std::collections::BTreeMap;
 
 use super::toml::{parse, TomlValue};
 use super::{
-    AsyncCfg, EngineKind, ExperimentConfig, RuleChoice, StalePolicyKind, StragglerKind,
-    Topology, TransportKind,
+    AsyncCfg, Compression, EngineKind, ExperimentConfig, RuleChoice, StalePolicyKind,
+    StragglerKind, Topology, TransportKind,
 };
 use crate::aggregation::gossip::GossipRuleKind;
 use crate::aggregation::RuleKind;
@@ -149,6 +152,10 @@ pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
     }
     if let Some(v) = get_bool(&doc, "virtual_nodes")? {
         cfg.virtual_nodes = v;
+    }
+    if let Some(s) = get_str(&doc, "wire.compression")? {
+        cfg.compression = Compression::parse(s)
+            .ok_or_else(|| format!("unknown compression '{s}' (none|f16|q8)"))?;
     }
 
     if let Some(n) = get_usize(&doc, "nodes.n")? {
@@ -465,6 +472,15 @@ pub fn to_toml_str(cfg: &ExperimentConfig) -> String {
     out.push_str(&format!("test_samples = {}\n", cfg.test_samples));
     out.push_str(&format!("eval_every = {}\n", cfg.eval_every));
 
+    // [wire] follows the [async]/sparse convention: emitted only
+    // off-default, so a compression = none config serializes
+    // byte-identically to the pre-codec schema (worker Init frames
+    // included — that byte-equality is an acceptance criterion)
+    if !cfg.compression.is_none() {
+        out.push_str("\n[wire]\n");
+        out.push_str(&format!("compression = \"{}\"\n", cfg.compression.name()));
+    }
+
     // [async] is emitted only when some knob moved off the default: a
     // synchronous config serializes byte-identically to what it did
     // before asynchrony existed (worker Init frames included)
@@ -690,6 +706,26 @@ mod tests {
         );
     }
 
+    #[test]
+    fn wire_compression_parsed_with_none_default() {
+        let cfg = from_toml_str("task = \"tiny\"\n[wire]\ncompression = \"q8\"").unwrap();
+        assert_eq!(cfg.compression, Compression::Q8);
+        let cfg = from_toml_str("task = \"tiny\"\n[wire]\ncompression = \"f16\"").unwrap();
+        assert_eq!(cfg.compression, Compression::F16);
+
+        // default is none, and a none config must not grow a [wire]
+        // section on serialization (Init frames stay byte-identical to
+        // the pre-codec schema)
+        let plain = from_toml_str("task = \"tiny\"").unwrap();
+        assert_eq!(plain.compression, Compression::None);
+        assert!(!to_toml_str(&plain).contains("[wire]"));
+
+        assert!(
+            from_toml_str("task = \"tiny\"\n[wire]\ncompression = \"gzip\"").is_err(),
+            "unknown compression must be rejected"
+        );
+    }
+
     /// `to_toml_str` is what the coordinator ships to every shard-worker
     /// process: a parse of the output must reproduce the config
     /// field-for-field, or workers would silently build a different world.
@@ -739,6 +775,11 @@ mod tests {
         sparse_cfg.asyn.quorum = 7;
         sparse_cfg.asyn.max_staleness = 2;
 
+        let mut wire_cfg = crate::config::ExperimentConfig::default_for(TaskKind::Tiny);
+        wire_cfg.compression = Compression::Q8;
+        wire_cfg.procs = 2;
+        wire_cfg.transport = TransportKind::Socket;
+
         for cfg in [
             presets::quickstart_config(),
             from_toml_str(FULL).unwrap(),
@@ -746,6 +787,7 @@ mod tests {
             graph_cfg,
             async_cfg,
             sparse_cfg,
+            wire_cfg,
         ] {
             let text = to_toml_str(&cfg);
             let back = from_toml_str(&text)

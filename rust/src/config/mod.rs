@@ -10,6 +10,7 @@ use crate::attacks::AttackKind;
 use crate::data::TaskKind;
 
 pub use crate::util::vclock::{AsyncCfg, StalePolicyKind, StragglerKind};
+pub use crate::wire::codec::Compression;
 
 /// How nodes exchange models.
 #[derive(Clone, Debug, PartialEq)]
@@ -196,6 +197,15 @@ pub struct ExperimentConfig {
     /// (transport × procs × shards × threads) grid; `1.0` reproduces the
     /// full-participation engine bit-for-bit.
     pub participation: f64,
+    /// Wire row-block compression (`[wire] compression` in TOML,
+    /// `--compression`, default `none`): `Snapshot`/`PullReply` rows
+    /// travel as deterministic f16 or q8 deltas against the round's
+    /// digest mean. The decode is part of the wire spec — every path
+    /// (in-process, pipe, socket/tcp, virtual) aggregates the *decoded*
+    /// bits, so a fixed level is a modeled accuracy knob that stays
+    /// bit-identical across the whole grid, and `none` reproduces the
+    /// uncompressed engine byte-for-byte. See [`crate::wire::codec`].
+    pub compression: Compression,
     /// Virtual-node backend (`--virtual-nodes`, default false): committed
     /// per-node state lives as `(init seed, XOR round-delta log)` with
     /// lazy materialization for only the nodes touched each round — a
@@ -238,6 +248,7 @@ impl ExperimentConfig {
             socket_dir: String::new(),
             asyn: AsyncCfg::default(),
             participation: 1.0,
+            compression: Compression::None,
             virtual_nodes: false,
         }
     }
@@ -283,16 +294,20 @@ impl ExperimentConfig {
             return Err("need at least 2 nodes".into());
         }
         if self.b >= self.n.div_ceil(2) {
+            // the enforced bound is ⌈n/2⌉, and the message must quote
+            // exactly that: for n = 5 the old text printed "n/2 = 2"
+            // (floor) while b = 2 was in fact accepted — the real
+            // rejection threshold is 3
             return Err(format!(
-                "Byzantine majority: b={} must be < n/2 = {}",
+                "Byzantine majority: b={} must be < ⌈n/2⌉ = {}",
                 self.b,
-                self.n / 2
+                self.n.div_ceil(2)
             ));
         }
         match self.topology {
             Topology::Epidemic { s } => {
                 if s == 0 || s > self.n - 1 {
-                    return Err(format!("s={s} must be in [1, n-1]"));
+                    return Err(format!("s={s} must be in [1, n-1] = [1, {}]", self.n - 1));
                 }
                 if let Some(bh) = self.bhat {
                     if 2 * bh >= s + 1 {
@@ -309,7 +324,7 @@ impl ExperimentConfig {
             }
             Topology::EpidemicPush { s } => {
                 if s == 0 || s > self.n - 1 {
-                    return Err(format!("s={s} must be in [1, n-1]"));
+                    return Err(format!("s={s} must be in [1, n-1] = [1, {}]", self.n - 1));
                 }
                 if matches!(self.rule, RuleChoice::Gossip(_)) {
                     return Err("gossip rules need a fixed-graph topology".into());
@@ -511,6 +526,69 @@ mod tests {
         cfg.topology = Topology::FixedGraph { edges: 60 };
         cfg.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
         assert!(cfg.validate().unwrap_err().contains("virtual_nodes"));
+    }
+
+    #[test]
+    fn rejection_messages_quote_the_exact_bound() {
+        // one row per validate() arm with a numeric bound: the message
+        // must quote the bound it actually enforces (the old Byzantine-
+        // majority text printed the floor, n/2, while enforcing ⌈n/2⌉)
+        type Mutator = fn(&mut ExperimentConfig);
+        let cases: &[(Mutator, &str)] = &[
+            (
+                |c| {
+                    c.n = 5;
+                    c.b = 3;
+                },
+                "Byzantine majority: b=3 must be < ⌈n/2⌉ = 3",
+            ),
+            (
+                |c| {
+                    c.n = 5;
+                    c.b = 2;
+                    c.topology = Topology::Epidemic { s: 0 };
+                },
+                "s=0 must be in [1, n-1] = [1, 4]",
+            ),
+            (
+                |c| {
+                    c.n = 5;
+                    c.b = 2;
+                    c.topology = Topology::EpidemicPush { s: 7 };
+                },
+                "s=7 must be in [1, n-1] = [1, 4]",
+            ),
+            (
+                |c| c.participation = 1.5,
+                "participation 1.5 must be in (0, 1]",
+            ),
+            (|c| c.momentum = 1.0, "momentum 1 outside [0,1)"),
+            (
+                |c| c.asyn.quorum = 18,
+                "async.quorum 18 exceeds the honest count 17",
+            ),
+            (
+                |c| {
+                    c.topology = Topology::FixedGraph { edges: 10 };
+                    c.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
+                },
+                "edges=10 below spanning-tree minimum 19",
+            ),
+        ];
+        for (i, (mutate, want)) in cases.iter().enumerate() {
+            let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+            mutate(&mut cfg);
+            let got = cfg.validate().unwrap_err();
+            assert_eq!(&got, want, "case {i}");
+        }
+        // the point the old floor-printed message claimed was out of
+        // bounds ("b=2 must be < n/2 = 2" at n=5) is in fact accepted:
+        // the enforced threshold is ⌈5/2⌉ = 3
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.n = 5;
+        cfg.b = 2;
+        cfg.topology = Topology::Epidemic { s: 4 };
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

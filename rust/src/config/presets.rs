@@ -17,7 +17,7 @@
 //! encoded directly in the `base_*` constructors below and printed by
 //! `rpel list --presets`.
 
-use super::{EngineKind, ExperimentConfig, RuleChoice, Topology};
+use super::{Compression, EngineKind, ExperimentConfig, RuleChoice, Topology};
 use crate::aggregation::gossip::GossipRuleKind;
 use crate::aggregation::RuleKind;
 use crate::attacks::AttackKind;
@@ -224,6 +224,7 @@ const FIGURES: &[Figure] = &[
     Figure { id: "fig19", title: "FEMNIST n=30 f=0 s=6, 3 local steps", expectation: "attack-free, faster convergence" },
     Figure { id: "fig20", title: "FEMNIST n=30 f=3 s=6", expectation: "robust accuracy close to f=0 reference" },
     Figure { id: "fig21", title: "FEMNIST n=30 f=3 s=6, 3 local steps", expectation: "robust, faster convergence" },
+    Figure { id: "figWire", title: "Accuracy vs wire bits (none/f16/q8 × attack)", expectation: "f16 tracks the uncompressed curve; q8 stays within a small gap under SF/FOE/ALIE — the codec is a modeled protocol knob, not FP noise" },
 ];
 
 /// All registered figures.
@@ -446,6 +447,28 @@ fn build_series(id: &str, scale: Scale) -> FigureSeries {
             base.name = format!("{id}/none");
             FigureSeries::Training(vec![base])
         }
+        "figWire" => {
+            // Accuracy-vs-bits sweep for the wire codec. Decoding is part of
+            // the protocol (every consumer aggregates the decoded bits), so
+            // each compression level is its own deterministic trajectory; the
+            // sweep measures how much accuracy the f16/q8 rounding costs under
+            // each attack, relative to the uncompressed reference.
+            let mut base = base_mnist(scale);
+            base.n = 30;
+            base.b = 6;
+            base.topology = Topology::Epidemic { s: 15 };
+            let mut series = Vec::new();
+            for comp in [Compression::None, Compression::F16, Compression::Q8] {
+                let mut b = base.clone();
+                b.compression = comp;
+                series.extend(with_attacks(
+                    &b,
+                    &format!("figWire/{}", comp.name()),
+                    &PANEL,
+                ));
+            }
+            FigureSeries::Training(series)
+        }
         "fig20" | "fig21" => {
             let mut base = base_femnist(scale);
             base.local_steps = if id == "fig20" { 1 } else { 3 };
@@ -508,7 +531,25 @@ mod tests {
         assert!(figure("fig1L").is_some());
         assert!(figure("fig3").is_some());
         assert!(figure("nope").is_none());
-        assert_eq!(all_figures().len(), 23);
+        assert_eq!(all_figures().len(), 24);
+    }
+
+    #[test]
+    fn figwire_sweeps_every_compression_level() {
+        let FigureSeries::Training(cfgs) = figure("figWire").unwrap().series(Scale::Tiny)
+        else {
+            panic!()
+        };
+        // 3 compression levels × the 4-attack panel
+        assert_eq!(cfgs.len(), 12);
+        for comp in [Compression::None, Compression::F16, Compression::Q8] {
+            let matching: Vec<_> =
+                cfgs.iter().filter(|c| c.compression == comp).collect();
+            assert_eq!(matching.len(), 4, "{}", comp.name());
+            for c in matching {
+                assert!(c.name.starts_with(&format!("figWire/{}", comp.name())));
+            }
+        }
     }
 
     #[test]

@@ -209,6 +209,7 @@ use crate::runtime::{AggregateExec, Runtime};
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
 use crate::util::vclock::{serve_row, RoundSchedule, VClock};
+use crate::wire::codec as wire_codec;
 use anyhow::{anyhow, bail, Context, Result};
 use shard::{AggCtx, NodeShard, NodeState, ShardBackend, StepCtx};
 use std::time::Instant; // lint: wall-clock-exempt (reporting-only wall_secs)
@@ -564,6 +565,14 @@ pub struct Trainer {
     /// (coordinator→workers, workers→coordinator, peer-served) — all
     /// zero for in-process backends
     last_round_wire: (u64, u64, u64),
+    /// row-codec byte ledger for the last round: (raw, encoded) row
+    /// payload bytes that crossed the wire compressed — zero for
+    /// in-process backends, equal at `compression = none`
+    last_round_codec: (u64, u64),
+    /// row-codec delta reference for the coming round: the previous
+    /// round's digest mean as f32 (zeros before the first fold). Workers
+    /// track their own twin from the digest in the aggregate frames.
+    wire_ref: Vec<f32>,
     /// per-round digest of the honest population (phase 2 output)
     digest: HonestDigest,
     /// round-scoped honest↔honest distance memo for the in-process
@@ -679,6 +688,7 @@ impl Trainer {
                 d,
                 cfg.transport,
                 &cfg.socket_dir,
+                cfg.compression,
             )
             .with_context(|| {
                 format!(
@@ -730,6 +740,8 @@ impl Trainer {
             last_round_byz_max: 0,
             last_round_delivered: 0,
             last_round_wire: (0, 0, 0),
+            last_round_codec: (0, 0),
+            wire_ref: vec![0.0f32; d],
             digest: HonestDigest::new(d),
             dist_cache: DistCache::new(),
             dist_cache_on: true,
@@ -847,6 +859,8 @@ impl Trainer {
             hist.wire_coord_out_per_round.push(self.last_round_wire.0 as usize);
             hist.wire_coord_in_per_round.push(self.last_round_wire.1 as usize);
             hist.wire_peer_per_round.push(self.last_round_wire.2 as usize);
+            hist.wire_raw_bytes_per_round.push(self.last_round_codec.0);
+            hist.wire_encoded_bytes_per_round.push(self.last_round_codec.1);
             if sparse_on {
                 let (active, materialized, resident) = self.sparse_round_stats(round);
                 hist.active_per_round.push(active);
@@ -878,6 +892,13 @@ impl Trainer {
         // per-node PARTICIPATE coin the job dispatches check, folded
         // once here for the digest/loss/serve phases
         let active = self.compute_active(round);
+        // 0a. wire codec: install the round's delta reference (previous
+        // digest mean) on every backend before any Snapshot is decoded
+        if !self.cfg.compression.is_none() {
+            for backend in self.backends.iter_mut() {
+                backend.set_wire_ref(&self.wire_ref);
+            }
+        }
         // 0. async engine only: resolve the virtual-clock schedule and
         // ship each worker its staleness slice (None ⇒ synchronous)
         let sched = self.phase_async_begin(round)?;
@@ -891,6 +912,12 @@ impl Trainer {
         if let Some(sched) = sched.as_ref() {
             loss = self.phase_async_serve(sched, active.as_deref());
         }
+        // 1c. wire codec, in-process/virtual engines only: transform the
+        // published table to its decoded-bits twin (remote tables are
+        // already decoded — they came off the wire). Runs after the
+        // served-row policy so carried rows transform at serve time,
+        // mirroring the worker-side order
+        self.phase_wire_transform()?;
         // 2. fold the published rows into the global honest digest the
         // omniscient adversary conditions on (active rows only: resting
         // nodes publish no new information)
@@ -1125,6 +1152,30 @@ impl Trainer {
         }
     }
 
+    /// Phase 1c (in-process and virtual engines, `compression ≠ none`):
+    /// transform every published row to its decoded-bits twin — the bits
+    /// a remote consumer would decode off the wire — so a given
+    /// compression level is bit-identical across the whole (transport ×
+    /// procs × shards × threads × participation) grid. Remote backends
+    /// skip this: their table rows already came through the codec.
+    /// Virtual/participation sparse tables leave untouched rows empty;
+    /// nothing reads them, so transforming only the non-empty rows
+    /// matches the dense engines bit-for-bit.
+    fn phase_wire_transform(&mut self) -> Result<()> {
+        let comp = self.cfg.compression;
+        if comp.is_none() || !(self.local_backends || self.cfg.virtual_nodes) {
+            return Ok(());
+        }
+        let codec = wire_codec::RowCodec::new(comp, &self.wire_ref);
+        let mut scratch = Vec::new();
+        for row in self.tbl_halves.iter_mut() {
+            if !row.is_empty() {
+                wire_codec::transform_row_in_place(&codec, row, &mut scratch)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Phase 2: fold the half-step table into the global honest digest,
     /// in ascending honest-node order (per-shard f64 partial sums would
     /// make the result depend on the shard grouping — see `shard.rs`).
@@ -1140,7 +1191,12 @@ impl Trainer {
     /// the folds are row-for-row identical.
     fn phase_attack_context(&mut self, active: Option<&[bool]>) {
         use crate::attacks::AttackKind;
-        if self.cfg.b == 0 || self.cfg.attack == AttackKind::Dos {
+        // the row codec needs the digest mean as next round's delta
+        // reference even when no attack reads it, so the skip applies
+        // only at `compression = none`
+        if (self.cfg.b == 0 || self.cfg.attack == AttackKind::Dos)
+            && self.cfg.compression.is_none()
+        {
             return;
         }
         let with_std = self.cfg.attack == AttackKind::Alie;
@@ -1333,6 +1389,7 @@ impl Trainer {
     /// index order (identical for every grid point).
     fn phase_commit(&mut self) -> Result<()> {
         let mut wire = (0u64, 0u64, 0u64);
+        let mut codec_bytes = (0u64, 0u64);
         for backend in self.backends.iter_mut() {
             let (start, len) = (backend.start(), backend.len());
             backend.commit(&mut self.tbl_params[start..start + len])?;
@@ -1340,10 +1397,20 @@ impl Trainer {
             wire.0 += out;
             wire.1 += inn;
             wire.2 += peer;
+            let (raw, enc) = backend.take_codec_bytes();
+            codec_bytes.0 += raw;
+            codec_bytes.1 += enc;
         }
         self.last_round_wire = wire;
+        self.last_round_codec = codec_bytes;
         self.last_round_byz_max = self.tbl_byz_seen.iter().copied().max().unwrap_or(0);
         self.last_round_delivered = self.tbl_recv.iter().sum();
+        if !self.cfg.compression.is_none() {
+            // next round's delta reference: this round's digest mean.
+            // Workers derive the identical f32 bits from the digest in
+            // their aggregate frames, after their own commit
+            self.wire_ref = wire_codec::reference_from_mean(&self.digest.mean);
+        }
         Ok(())
     }
 

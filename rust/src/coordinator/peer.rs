@@ -25,6 +25,7 @@
 //! which follows its fetches. A request that still misses the published
 //! round is answered with `Deny` rather than blocking.
 
+use crate::wire::codec::{EncodedRows, RowCodec};
 use crate::wire::proto::{self, PeerEntry, PeerMsg};
 use crate::wire::transport::{Listener, SockAddr, SocketStream, SocketTransport, Transport};
 use anyhow::{bail, ensure, Context, Result};
@@ -40,6 +41,10 @@ struct Published {
     have: bool,
     round: u64,
     rows: Vec<Vec<f32>>,
+    /// the round's encoded row block when the run compresses — replies
+    /// gather cached per-row segments from it verbatim, so no row is
+    /// ever re-encoded (q8 is not FP-idempotent)
+    block: Option<EncodedRows>,
 }
 
 struct ServeShared {
@@ -80,10 +85,12 @@ impl RowServer {
         Ok(RowServer { shared })
     }
 
-    /// Publish this shard's half-step rows for `round`. Must happen
-    /// before the round's `Snapshot` is sent to the coordinator (the
-    /// lockstep argument above relies on it).
-    pub fn publish(&self, round: u64, rows: &[Vec<f32>]) {
+    /// Publish this shard's half-step rows for `round`, plus the round's
+    /// encoded block when the run compresses (`None` at `none` — replies
+    /// then encode the raw rows directly). Must happen before the
+    /// round's `Snapshot` is sent to the coordinator (the lockstep
+    /// argument above relies on it).
+    pub fn publish(&self, round: u64, rows: &[Vec<f32>], block: Option<EncodedRows>) {
         debug_assert_eq!(rows.len(), self.shared.len);
         // A poisoned lock means a serve thread panicked while reading;
         // publish overwrites the whole table, so recovery is sound.
@@ -102,6 +109,7 @@ impl RowServer {
             dst.clear();
             dst.extend_from_slice(src);
         }
+        st.block = block;
         st.have = true;
     }
 }
@@ -212,6 +220,14 @@ fn pull_reply_frame(
             ));
         }
     }
+    if let Some(block) = &st.block {
+        // compressed run: gather the cached encoded segments verbatim
+        let idx: Vec<usize> = rows.iter().map(|&hi| hi as usize - shared.start).collect();
+        return match block.gather(&idx) {
+            Ok(sub) => proto::encode_pull_reply_block(round, &sub),
+            Err(e) => proto::encode_peer_deny(&format!("worker {}: {e:#}", shared.worker)),
+        };
+    }
     let refs: Vec<&[f32]> = rows
         .iter()
         .map(|&hi| st.rows[hi as usize - shared.start].as_slice())
@@ -294,22 +310,25 @@ impl PeerClient {
     }
 
     /// Fetch the given rows (global honest indices owned by `owner`) of
-    /// round `round`'s table. Returns the rows in request order plus the
-    /// wire bytes this call consumed (requests + replies + the one-time
-    /// `Hello` on a fresh connection).
+    /// round `round`'s table, decoding the reply through `rc` (the same
+    /// codec + reference the owner encoded with; `none` reads raw f32).
+    /// Returns the decoded rows in request order plus the wire bytes
+    /// this call consumed (requests + replies + the one-time `Hello` on
+    /// a fresh connection).
     pub fn fetch(
         &mut self,
         round: u64,
         owner: usize,
         rows: &[u32],
         d: usize,
+        rc: &RowCodec<'_>,
     ) -> Result<(Vec<Vec<f32>>, u64)> {
         let (start, len, _) = self.entries[owner];
         let who = format!(
             "peer worker {owner} (honest nodes {start}..{}): pull for round {round}",
             start + len
         );
-        let result = self.fetch_inner(round, owner, rows, d);
+        let result = self.fetch_inner(round, owner, rows, d, rc);
         result.with_context(|| format!("{who} failed"))
     }
 
@@ -319,11 +338,12 @@ impl PeerClient {
         owner: usize,
         rows: &[u32],
         d: usize,
+        rc: &RowCodec<'_>,
     ) -> Result<(Vec<Vec<f32>>, u64)> {
         let conn = self.ensure_conn(owner)?;
         conn.transport.send(&proto::encode_pull_request(round, rows))?;
         let frame = conn.transport.recv()?;
-        let reply = proto::decode_peer(&frame)?;
+        let reply = proto::decode_peer_c(&frame, rc)?;
         let bytes_now = conn.transport.bytes_out() + conn.transport.bytes_in();
         let delta = bytes_now - conn.counted;
         conn.counted = bytes_now;

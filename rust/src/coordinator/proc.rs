@@ -95,6 +95,7 @@ use crate::coordinator::{ComputeEngine, PullSampler};
 use crate::testkit::chaos::{ChaosPlan, ChaosTransport};
 use crate::util::pool::WorkerPool;
 use crate::util::vclock::serve_row;
+use crate::wire::codec::{self, Compression, EncodedRows, RowCodec};
 use crate::wire::proto::{self, FromWorker, PeerEntry, PeerMsg, ToWorker};
 use crate::wire::transport::{Listener, PipeTransport, SockAddr, SocketTransport, Transport};
 use anyhow::{bail, ensure, Context, Result};
@@ -210,6 +211,15 @@ pub(crate) struct ProcessShard {
     counted_in: u64,
     /// peer-served bytes reported by the last `RoundDone`
     peer_bytes: u64,
+    /// row-block compression level this run's frames travel at
+    comp: Compression,
+    /// codec delta reference for the current round (installed by the
+    /// trainer via `set_wire_ref`; decodes the worker's `Snapshot`)
+    wire_ref: Vec<f32>,
+    /// codec ledgers since the last `take_codec_bytes`: raw vs encoded
+    /// row-payload bytes of this shard's compressed blocks
+    codec_raw: u64,
+    codec_enc: u64,
 }
 
 impl ProcessShard {
@@ -224,6 +234,7 @@ impl ProcessShard {
         d: usize,
         transport: TransportKind,
         socket_dir: &str,
+        comp: Compression,
     ) -> Result<Vec<ProcessShard>> {
         let mut shards = match transport {
             TransportKind::Pipe => Self::spawn_all_pipe(ranges, d)?,
@@ -232,6 +243,9 @@ impl ProcessShard {
                 Self::spawn_all_socket(ranges, d, socket_dir, tcp)?
             }
         };
+        for shard in shards.iter_mut() {
+            shard.comp = comp;
+        }
         for (index, shard) in shards.iter_mut().enumerate() {
             shard.send(&proto::encode_init(cfg_toml, index as u32, procs as u32))?;
         }
@@ -301,6 +315,10 @@ impl ProcessShard {
                 counted_out: 0,
                 counted_in: 0,
                 peer_bytes: 0,
+                comp: Compression::None, // spawn_all overwrites
+                wire_ref: Vec::new(),
+                codec_raw: 0,
+                codec_enc: 0,
             });
         }
         Ok(shards)
@@ -452,6 +470,10 @@ impl ProcessShard {
                 counted_out: 0,
                 counted_in: 0,
                 peer_bytes: 0,
+                comp: Compression::None, // spawn_all overwrites
+                wire_ref: Vec::new(),
+                codec_raw: 0,
+                codec_enc: 0,
             });
         }
         Ok(shards)
@@ -524,7 +546,13 @@ impl ProcessShard {
                 return Err(e.context(what));
             }
         };
-        let msg = match proto::decode_from_worker(&frame) {
+        // decode through the run's row codec: Snapshot blocks arrive
+        // compressed; every other reply (RoundDone rows stay raw f32)
+        // is unaffected, and a `none` codec is the legacy decode
+        let msg = match proto::decode_from_worker_c(
+            &frame,
+            &RowCodec::new(self.comp, &self.wire_ref),
+        ) {
             Ok(m) => m,
             Err(e) => {
                 let what = self.describe("decoding reply");
@@ -607,6 +635,9 @@ impl ShardBackend for ProcessShard {
                 for (out, row) in halves_out.iter_mut().zip(halves) {
                     *out = row;
                 }
+                // codec ledger: this Snapshot carried len rows of width d
+                self.codec_raw += codec::block_bytes(Compression::None, self.len, self.d);
+                self.codec_enc += codec::block_bytes(self.comp, self.len, self.d);
                 Ok(())
             }
             other => bail!(
@@ -639,6 +670,27 @@ impl ShardBackend for ProcessShard {
             lo + self.len
         );
         let slice = &rows[lo..lo + self.len];
+        // codec ledger: the distinct off-shard honest rows this worker
+        // will fetch as PullReply payloads. The worker dedups per owning
+        // peer; owners partition the honest range, so one global dedup
+        // counts the identical row set (byte-exact twin of the fetch loop
+        // in `WorkerShard::aggregate_commit_routed`)
+        let mut pulled: Vec<usize> = Vec::new();
+        for per in slice {
+            for &p in per {
+                if ctx.byz[p] {
+                    continue; // crafted worker-side, never travels
+                }
+                let hi = ctx.node_of[p];
+                if hi < self.start || hi >= self.start + self.len {
+                    pulled.push(hi);
+                }
+            }
+        }
+        pulled.sort_unstable();
+        pulled.dedup();
+        self.codec_raw += codec::block_bytes(Compression::None, pulled.len(), self.d);
+        self.codec_enc += codec::block_bytes(self.comp, pulled.len(), self.d);
         let as_u32: Vec<Vec<u32>> = slice
             .iter()
             .map(|per| per.iter().map(|&p| p as u32).collect())
@@ -740,6 +792,18 @@ impl ShardBackend for ProcessShard {
         delta
     }
 
+    fn set_wire_ref(&mut self, ref32: &[f32]) {
+        self.wire_ref.clear();
+        self.wire_ref.extend_from_slice(ref32);
+    }
+
+    fn take_codec_bytes(&mut self) -> (u64, u64) {
+        let delta = (self.codec_raw, self.codec_enc);
+        self.codec_raw = 0;
+        self.codec_enc = 0;
+        delta
+    }
+
     fn kill_for_test(&mut self) -> bool {
         // drop the connection outright (no drain — the peer is about to
         // die) so nothing blocks on a corpse
@@ -816,6 +880,15 @@ struct WorkerShard {
     /// [`crate::aggregation::DistCache`] contract, so per-worker caches
     /// cannot split results across the procs grid.
     dist_cache: crate::aggregation::DistCache,
+    /// codec delta reference this worker encodes against: the digest
+    /// mean of the last committed round as f32 (zeros before the first),
+    /// kept in lockstep with the coordinator's copy via the digest in
+    /// every aggregate frame
+    wire_ref: Vec<f32>,
+    /// the encoded block the half-step transform produced, parked until
+    /// the `HalfStep` reply publishes and ships it (rows are encoded
+    /// exactly once — q8 is not FP-idempotent)
+    pending_block: Option<EncodedRows>,
 }
 
 impl WorkerShard {
@@ -863,6 +936,8 @@ impl WorkerShard {
             cur_stale: vec![0u32; len],
             stale_round: None,
             dist_cache: crate::aggregation::DistCache::new(),
+            wire_ref: vec![0.0f32; d],
+            pending_block: None,
             cfg: world.cfg,
         })
     }
@@ -914,6 +989,15 @@ impl WorkerShard {
                     &self.shard.nodes[i].params,
                 );
             }
+        }
+        if !self.cfg.compression.is_none() {
+            // publish-point transform, AFTER the served-row policy so
+            // carried rows transform at serve time like the in-process
+            // path: encode every row once against the round's reference,
+            // keep the block for the Snapshot/RowServer, and overwrite
+            // the rows with the decoded bits everyone aggregates
+            let rc = RowCodec::new(self.cfg.compression, &self.wire_ref);
+            self.pending_block = Some(codec::transform_rows(&rc, &mut self.halves)?);
         }
         Ok(())
     }
@@ -993,6 +1077,12 @@ impl WorkerShard {
         )?;
         self.async_discard_stale();
         self.shard.commit_into(&mut self.params_scratch);
+        if !self.cfg.compression.is_none() {
+            // next round's delta reference: the digest the coordinator
+            // just shipped (its round-t fold) — the f32 twin of the
+            // coordinator's own update in its commit phase
+            self.wire_ref = codec::reference_from_mean(&digest.mean);
+        }
         Ok(())
     }
 
@@ -1057,7 +1147,10 @@ impl WorkerShard {
             }
             rows.sort_unstable();
             rows.dedup();
-            let (fetched, bytes) = client.fetch(round as u64, owner, &rows, self.d)?;
+            // the reply rows decode through the same codec the owner
+            // encoded with — both sides track the identical reference
+            let rc = RowCodec::new(self.cfg.compression, &self.wire_ref);
+            let (fetched, bytes) = client.fetch(round as u64, owner, &rows, self.d, &rc)?;
             peer_bytes += bytes;
             for (hi, row) in rows.iter().zip(fetched) {
                 table[*hi as usize] = row;
@@ -1094,6 +1187,9 @@ impl WorkerShard {
         )?;
         self.async_discard_stale();
         self.shard.commit_into(&mut self.params_scratch);
+        if !self.cfg.compression.is_none() {
+            self.wire_ref = codec::reference_from_mean(&digest.mean);
+        }
         Ok(peer_bytes)
     }
 }
@@ -1224,12 +1320,20 @@ fn run_worker_loop<T: Transport>(conn: &mut T, peer_listener: Option<Listener>) 
             }
             ToWorker::HalfStep { round } => match state.half_step(round as usize) {
                 Ok(()) => {
+                    // the half-step transform encoded the rows once; the
+                    // same cached block backs the Snapshot and every
+                    // PullReply served this round (None at `none`)
+                    let block = state.pending_block.take();
+                    let frame = match &block {
+                        Some(b) => proto::encode_snapshot_block(round, &state.losses, b),
+                        None => proto::encode_snapshot(round, &state.losses, &state.halves),
+                    };
                     if let Some((server, _)) = &peer_net {
                         // publish BEFORE the snapshot: the coordinator
                         // only routes peers here after seeing it
-                        server.publish(round, &state.halves);
+                        server.publish(round, &state.halves, block);
                     }
-                    conn.send(&proto::encode_snapshot(round, &state.losses, &state.halves))?;
+                    conn.send(&frame)?;
                 }
                 Err(e) => {
                     let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));

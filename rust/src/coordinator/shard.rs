@@ -208,6 +208,19 @@ pub(crate) trait ShardBackend: Send {
     fn take_wire_bytes(&mut self) -> (u64, u64, u64) {
         (0, 0, 0)
     }
+    /// Install the row-codec delta reference for the coming round (the
+    /// previous round's digest mean as f32; zeros before the first
+    /// fold). Remote backends keep it to decode `Snapshot` blocks;
+    /// in-process backends never see encoded bytes and ignore it.
+    fn set_wire_ref(&mut self, _ref32: &[f32]) {}
+    /// Drain this backend's row-codec byte ledgers since the last call:
+    /// `(raw_bytes, encoded_bytes)` of row payloads that crossed the
+    /// wire compressed (`Snapshot` always; `PullReply` on the socket
+    /// transport). Equal at `compression = none`; zeros for in-process
+    /// backends.
+    fn take_codec_bytes(&mut self) -> (u64, u64) {
+        (0, 0)
+    }
     /// Test hook: forcibly kill the backing worker process (remote
     /// backends only; returns false for in-process shards).
     fn kill_for_test(&mut self) -> bool {

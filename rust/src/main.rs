@@ -31,6 +31,9 @@ USAGE:
               [--procs N]     (shard worker processes, default 1; same results)
               [--transport pipe|socket|tcp]  (worker wire; same results.
                 socket/tcp = worker-served pulls, no O(h·d) table broadcast)
+              [--compression none|f16|q8]  (row-block wire codec; a modeled
+                knob — any fixed level is bit-identical across the
+                transport/procs/shards/threads grid)
               [--socket-dir DIR]  (unix-socket directory; default temp)
               [--scenario NAME]   (named [async] scenario: straggler_twopoint|
                 straggler_lognormal|crash_recover|partition_heal)
@@ -124,6 +127,7 @@ fn cmd_train(args: &Args) -> CmdResult {
         "procs",
         "transport",
         "socket-dir",
+        "compression",
         "scenario",
         "quorum",
         "deadline",
@@ -183,6 +187,10 @@ fn cmd_train(args: &Args) -> CmdResult {
     }
     if let Some(dir) = args.get("socket-dir") {
         cfg.socket_dir = dir.to_string();
+    }
+    if let Some(c) = args.get("compression") {
+        cfg.compression = rpel::config::Compression::parse(c)
+            .ok_or_else(|| format!("unknown compression '{c}' (none|f16|q8)"))?;
     }
     apply_async_flags(args, &mut cfg)?;
     let mut sparse_touched = false;

@@ -50,6 +50,18 @@ pub struct History {
     pub wire_coord_out_per_round: Vec<usize>,
     pub wire_coord_in_per_round: Vec<usize>,
     pub wire_peer_per_round: Vec<usize>,
+    /// Row-codec ledger (multi-process engine; all zeros for in-process
+    /// runs), per round: row-payload bytes of the blocks that travel at
+    /// the configured `[wire] compression` — `Snapshot` rows on both
+    /// transports plus worker-served `PullReply` rows on the socket
+    /// transport (block headers and frame overhead excluded). `raw` is
+    /// what the same rows would cost at 4 bytes/coordinate; the two are
+    /// equal at `compression = none`, and their ratio is the realized
+    /// compression factor (~2× f16, ~4·d/(d+4)× q8).
+    /// `rust/tests/message_accounting.rs` pins both byte-exact against
+    /// independent recomputation from the routing table.
+    pub wire_raw_bytes_per_round: Vec<u64>,
+    pub wire_encoded_bytes_per_round: Vec<u64>,
     /// Async-round ledgers (populated only when the `[async]` config is
     /// live; empty for synchronous runs). Per round: how many honest
     /// nodes made the quorum close (fresh), and the virtual time the
@@ -167,6 +179,24 @@ impl History {
         obj.insert(
             "wire_peer_per_round".into(),
             bytes_arr(&self.wire_peer_per_round),
+        );
+        obj.insert(
+            "wire_raw_bytes_per_round".into(),
+            Json::Arr(
+                self.wire_raw_bytes_per_round
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "wire_encoded_bytes_per_round".into(),
+            Json::Arr(
+                self.wire_encoded_bytes_per_round
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
         );
         obj.insert(
             "participation_per_round".into(),
@@ -373,14 +403,28 @@ mod tests {
         h.wire_coord_out_per_round = vec![640, 640, 640];
         h.wire_coord_in_per_round = vec![900, 900, 900];
         h.wire_peer_per_round = vec![128, 128, 128];
+        h.wire_raw_bytes_per_round = vec![4000, 4000, 4000];
+        h.wire_encoded_bytes_per_round = vec![1004, 1004, 1004];
         let parsed = crate::util::json::parse(&h.to_json().to_string_compact()).unwrap();
         for key in [
             "wire_coord_out_per_round",
             "wire_coord_in_per_round",
             "wire_peer_per_round",
+            "wire_raw_bytes_per_round",
+            "wire_encoded_bytes_per_round",
         ] {
             assert_eq!(parsed.get(key).unwrap().as_arr().unwrap().len(), 3, "{key}");
         }
+        assert_eq!(
+            parsed
+                .get("wire_encoded_bytes_per_round")
+                .unwrap()
+                .as_arr()
+                .unwrap()[0]
+                .as_f64()
+                .unwrap(),
+            1004.0
+        );
     }
 
     #[test]

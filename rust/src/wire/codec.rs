@@ -1,0 +1,645 @@
+//! `RowCodec` — the wire row-block compression layer (protocol v4).
+//!
+//! `Snapshot` and `PullReply` row blocks can travel at a configured
+//! `compression ∈ {none, f16, q8}` (`[wire] compression` in the TOML,
+//! `--compression` on the CLI). Each row is encoded as a **delta against
+//! the round's reference vector** — the previous round's
+//! [`crate::attacks::HonestDigest`] mean narrowed per-coordinate to f32
+//! (`mean[i] as f32`), all-zeros before the first fold — and the decode
+//! is part of the wire spec: every consumer aggregates the *decoded*
+//! bits, so compression is a **modeled accuracy knob, not FP noise**.
+//!
+//! Encoded layouts, per row of width `d` (stride in bytes):
+//!
+//! ```text
+//! none  [d × f32 LE]            stride 4d   (bit-identical to v3 blocks)
+//! f16   [d × u16 LE]            stride 2d   (IEEE binary16 bit patterns)
+//! q8    [f32 LE scale][d × i8]  stride 4+d  (symmetric, saturating)
+//! ```
+//!
+//! **f16**: `delta_i = row_i − ref_i` (one f32 subtract), converted to
+//! binary16 by deterministic round-to-nearest-even bit manipulation
+//! ([`f32_to_f16`]): overflow rounds to ±Inf (`0x7C00`/`0xFC00`), every
+//! NaN canonicalizes to the quiet pattern `0x7E00`, magnitudes below the
+//! binary16 subnormal floor round to ±0. Decode is
+//! `ref_i + f16_to_f32(bits)` — one f32 add.
+//!
+//! **q8**: per-row scale derivation `m = max |delta_i|` over the row's
+//! *finite* deltas (0 when none are finite), `scale = m / 127.0` (f32
+//! divide; a subnormal `m` may underflow `scale` to 0, which encodes the
+//! row as exactly the reference). Each delta quantizes to
+//! `k_i = round(delta_i / scale)` — round-half-away-from-zero, then
+//! saturated to `[−127, +127]` — with the non-finite saturation bits
+//! `NaN → 0`, `+Inf → +127`, `−Inf → −127`. Decode is
+//! `ref_i + (k_i as f32) · scale`.
+//!
+//! Neither encode nor decode ever re-encodes already-decoded bits:
+//! quantization is **not** FP-idempotent (`fl(fl(ref+x)−ref) ≠ x` in
+//! general), so producers encode **once** at the publish point via
+//! [`transform_rows`] — which returns the encoded block *and* overwrites
+//! the rows with the decoded bits everyone must aggregate — and serve
+//! cached per-row segments ([`EncodedRows::gather`]) verbatim thereafter.
+//! That single-encode discipline is what keeps a fixed compression level
+//! bit-identical across the whole (transport × procs × shards × threads
+//! × participation) grid, pinned in `rust/tests/determinism.rs`.
+//!
+//! The read side is as paranoid as the rest of the codec: block sizes go
+//! through `checked_mul` against the remaining buffer *before* any
+//! allocation, a zero-width or reference-width-mismatched header is an
+//! error, and decode never panics on any byte pattern (the `panic-path`
+//! and `unchecked-alloc` lint rules cover this module).
+
+use super::{Reader, Writer};
+use anyhow::{bail, Context, Result};
+
+/// Row-block compression level. `None` is the v3-compatible raw f32
+/// layout; `F16`/`Q8` are the delta codecs specified in the module docs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Compression {
+    #[default]
+    None,
+    F16,
+    Q8,
+}
+
+impl Compression {
+    /// Parse the config/CLI spelling (`none` / `f16` / `q8`).
+    pub fn parse(s: &str) -> Option<Compression> {
+        match s {
+            "none" => Some(Compression::None),
+            "f16" => Some(Compression::F16),
+            "q8" => Some(Compression::Q8),
+            _ => None,
+        }
+    }
+
+    /// The config/CLI spelling; inverse of [`Compression::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::F16 => "f16",
+            Compression::Q8 => "q8",
+        }
+    }
+
+    pub fn is_none(self) -> bool {
+        self == Compression::None
+    }
+
+    /// Encoded bytes per row of width `d` (see the layout table in the
+    /// module docs). `d` comes off a u32 header, so this cannot overflow
+    /// 64-bit usize; the *block* size `rows · stride` is the quantity
+    /// that must be (and is) checked against the buffer.
+    pub fn stride(self, d: usize) -> usize {
+        match self {
+            Compression::None => d.saturating_mul(4),
+            Compression::F16 => d.saturating_mul(2),
+            Compression::Q8 => d.saturating_add(4),
+        }
+    }
+}
+
+/// One round's codec context: the compression level plus the reference
+/// vector deltas are taken against (the previous round's digest mean as
+/// f32, zeros before the first fold). For `Compression::None` the
+/// reference is ignored and may be empty.
+#[derive(Clone, Copy, Debug)]
+pub struct RowCodec<'a> {
+    pub comp: Compression,
+    pub reference: &'a [f32],
+}
+
+impl<'a> RowCodec<'a> {
+    pub fn new(comp: Compression, reference: &'a [f32]) -> RowCodec<'a> {
+        RowCodec { comp, reference }
+    }
+
+    /// The v3-compatible no-compression codec.
+    pub fn none() -> RowCodec<'static> {
+        RowCodec {
+            comp: Compression::None,
+            reference: &[],
+        }
+    }
+
+    /// Reference coordinate `i`; 0.0 past the end (encode-side
+    /// robustness — the decode path validates the width instead).
+    fn ref_at(&self, i: usize) -> f32 {
+        self.reference.get(i).copied().unwrap_or(0.0)
+    }
+}
+
+/// Narrow a digest mean (f64) to the f32 reference vector of
+/// [`RowCodec`]. Both sides of every link derive the reference through
+/// this exact conversion, so the bits agree everywhere.
+pub fn reference_from_mean(mean: &[f64]) -> Vec<f32> {
+    mean.iter().map(|&x| x as f32).collect()
+}
+
+/// An encoded row block: `rows` rows of width `d`, stored as contiguous
+/// fixed-stride per-row segments. Producers cache this at the publish
+/// point and serve [`EncodedRows::gather`]ed segments verbatim — rows
+/// are never re-encoded (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EncodedRows {
+    pub comp: Compression,
+    pub rows: usize,
+    pub d: usize,
+    pub payload: Vec<u8>,
+}
+
+impl EncodedRows {
+    pub fn stride(&self) -> usize {
+        self.comp.stride(self.d)
+    }
+
+    /// The encoded segment of row `i`, or `None` out of range.
+    pub fn row_payload(&self, i: usize) -> Option<&[u8]> {
+        let s = self.stride();
+        let lo = i.checked_mul(s)?;
+        self.payload.get(lo..lo.checked_add(s)?)
+    }
+
+    /// Assemble a new block from the given row indices (a `PullReply`
+    /// serving rows it cached at publish time), in request order.
+    pub fn gather(&self, idx: &[usize]) -> Result<EncodedRows> {
+        let s = self.stride();
+        let mut payload = Vec::with_capacity(idx.len().saturating_mul(s));
+        for &i in idx {
+            let seg = self
+                .row_payload(i)
+                .with_context(|| format!("wire: gather of row {i} beyond {} cached", self.rows))?;
+            payload.extend_from_slice(seg);
+        }
+        Ok(EncodedRows {
+            comp: self.comp,
+            rows: idx.len(),
+            d: self.d,
+            payload,
+        })
+    }
+
+    /// Raw (decoded) size of the block in bytes: `rows · d · 4`.
+    pub fn raw_bytes(&self) -> u64 {
+        (self.rows as u64) * (self.d as u64) * 4
+    }
+
+    /// Encoded size of the block in bytes: `rows · stride`.
+    pub fn encoded_bytes(&self) -> u64 {
+        self.payload.len() as u64
+    }
+}
+
+/// Ledger helper: encoded bytes of a `rows × d` block at `comp`
+/// (`rows · stride`), without materializing it.
+pub fn block_bytes(comp: Compression, rows: usize, d: usize) -> u64 {
+    (rows as u64) * (comp.stride(d) as u64)
+}
+
+// ---------------------------------------------------------------------------
+// binary16 bit conversion (std has no stable f16): deterministic
+// round-to-nearest-even, canonical NaN, saturating overflow.
+// ---------------------------------------------------------------------------
+
+/// f16 bit patterns for the documented saturation cases.
+pub const F16_POS_INF: u16 = 0x7C00;
+pub const F16_NEG_INF: u16 = 0xFC00;
+pub const F16_NAN: u16 = 0x7E00;
+
+/// f32 → binary16 bits, round-to-nearest-even. Overflow saturates to
+/// ±Inf, every NaN canonicalizes to [`F16_NAN`], and magnitudes below
+/// the binary16 subnormal floor round to ±0.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN: Inf keeps its sign, NaN canonicalizes
+        return if man != 0 { F16_NAN } else { sign | F16_POS_INF };
+    }
+    // re-bias 127 → 15
+    let e = exp - 112;
+    if e >= 0x1F {
+        return sign | F16_POS_INF; // overflow → ±Inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // below half the smallest subnormal → ±0
+        }
+        // subnormal: shift the 24-bit significand (implicit bit set)
+        // into place, rounding the dropped bits to nearest-even
+        let man24 = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half = man24 >> shift;
+        let rem = man24 & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && (half & 1) == 1) {
+            half + 1
+        } else {
+            half
+        };
+        // a carry out of the mantissa lands in exponent 1 — still the
+        // correct encoding
+        return sign | rounded as u16;
+    }
+    // normal: drop 13 mantissa bits with round-to-nearest-even; a carry
+    // propagates into the exponent, and rounding max-finite up yields
+    // the Inf pattern 0x7C00 naturally
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1FFF;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        half + 1
+    } else {
+        half
+    };
+    sign | rounded as u16
+}
+
+/// binary16 bits → f32 (exact: every f16 value is representable).
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = ((bits >> 10) & 0x1F) as u32;
+    let man = (bits & 0x3FF) as u32;
+    let out = if exp == 0x1F {
+        // Inf / NaN (payload shifts up; 0x7E00 → canonical quiet f32 NaN)
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalize. value = man · 2^-24, top bit at p ≤ 9
+            let p = 31 - man.leading_zeros();
+            let exp32 = 103 + p; // (p − 24) + 127
+            sign | (exp32 << 23) | ((man << (23 - p)) & 0x007F_FFFF)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(out)
+}
+
+// ---------------------------------------------------------------------------
+// Row encode / decode
+// ---------------------------------------------------------------------------
+
+fn encode_row_into(codec: &RowCodec<'_>, row: &[f32], out: &mut Vec<u8>) {
+    match codec.comp {
+        Compression::None => {
+            for &x in row {
+                out.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+        }
+        Compression::F16 => {
+            for (i, &x) in row.iter().enumerate() {
+                let bits = f32_to_f16(x - codec.ref_at(i));
+                out.extend_from_slice(&bits.to_le_bytes());
+            }
+        }
+        Compression::Q8 => {
+            // per-row scale: max |delta| over the row's finite deltas
+            let mut m = 0f32;
+            for (i, &x) in row.iter().enumerate() {
+                let delta = x - codec.ref_at(i);
+                if delta.is_finite() {
+                    m = m.max(delta.abs());
+                }
+            }
+            let scale = if m == 0.0 { 0.0 } else { m / 127.0 };
+            out.extend_from_slice(&scale.to_bits().to_le_bytes());
+            for (i, &x) in row.iter().enumerate() {
+                let delta = x - codec.ref_at(i);
+                let k: i8 = if delta.is_nan() {
+                    0
+                } else if delta == f32::INFINITY {
+                    127
+                } else if delta == f32::NEG_INFINITY {
+                    -127
+                } else if scale == 0.0 {
+                    0
+                } else {
+                    // round half away from zero, then saturate (the max
+                    // element can land a hair above 127.0 in f32)
+                    (delta / scale).round().clamp(-127.0, 127.0) as i8
+                };
+                out.push(k as u8);
+            }
+        }
+    }
+}
+
+/// Decode one `stride`-sized segment into `out` (length `d`). `seg` is
+/// pre-validated by the callers ([`read_rows`] / [`transform_rows`]).
+fn decode_row_into(codec: &RowCodec<'_>, seg: &[u8], out: &mut [f32]) -> Result<()> {
+    match codec.comp {
+        Compression::None => {
+            for (x, b) in out.iter_mut().zip(seg.chunks_exact(4)) {
+                *x = f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+        }
+        Compression::F16 => {
+            for (i, (x, b)) in out.iter_mut().zip(seg.chunks_exact(2)).enumerate() {
+                *x = codec.ref_at(i) + f16_to_f32(u16::from_le_bytes([b[0], b[1]]));
+            }
+        }
+        Compression::Q8 => {
+            let (s, ks) = match seg.split_at_checked(4) {
+                Some(parts) => parts,
+                None => bail!("wire: q8 row segment shorter than its scale"),
+            };
+            let scale = f32::from_bits(u32::from_le_bytes([s[0], s[1], s[2], s[3]]));
+            for (i, (x, &k)) in out.iter_mut().zip(ks.iter()).enumerate() {
+                *x = codec.ref_at(i) + (k as i8 as f32) * scale;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Encode a rectangular row block. Every row must be width `d` =
+/// `rows[0].len()` (mirrors [`Writer::put_f32_rows`]'s contract).
+pub fn encode_rows<R: AsRef<[f32]>>(codec: &RowCodec<'_>, rows: &[R]) -> EncodedRows {
+    let d = rows.first().map(|r| r.as_ref().len()).unwrap_or(0);
+    let stride = codec.comp.stride(d);
+    let mut payload = Vec::with_capacity(rows.len().saturating_mul(stride));
+    for row in rows {
+        let row = row.as_ref();
+        debug_assert_eq!(row.len(), d, "ragged row block");
+        encode_row_into(codec, row, &mut payload);
+    }
+    EncodedRows {
+        comp: codec.comp,
+        rows: rows.len(),
+        d,
+        payload,
+    }
+}
+
+/// The publish-point transform: encode `rows` **once**, overwrite them
+/// in place with the decoded bits (the bits every consumer aggregates),
+/// and return the encoded block for caching/serving. Identity (and no
+/// block is materialized lazily — callers skip it) at `none`.
+pub fn transform_rows(codec: &RowCodec<'_>, rows: &mut [Vec<f32>]) -> Result<EncodedRows> {
+    let enc = encode_rows(codec, rows);
+    if codec.comp.is_none() {
+        return Ok(enc);
+    }
+    for (i, row) in rows.iter_mut().enumerate() {
+        let seg = enc
+            .row_payload(i)
+            .context("wire: transform lost a row segment")?;
+        decode_row_into(codec, seg, row)?;
+    }
+    Ok(enc)
+}
+
+/// In-process twin of [`transform_rows`] for a single row: encode once
+/// against `codec`, decode back in place. The trainer uses this on the
+/// non-empty rows of a (possibly sparse) published table so in-process
+/// and virtual runs aggregate the exact bits a remote consumer would
+/// decode off the wire. `scratch` is caller-owned to amortize the
+/// encode buffer across rows; no-op at `none`.
+pub fn transform_row_in_place(
+    codec: &RowCodec<'_>,
+    row: &mut [f32],
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
+    if codec.comp.is_none() {
+        return Ok(());
+    }
+    scratch.clear();
+    encode_row_into(codec, row, scratch);
+    decode_row_into(codec, scratch, row)
+}
+
+/// Write an encoded block with the standard row-block header:
+/// `[u32 rows][u32 d][rows · stride bytes]`. At `none` this is
+/// byte-identical to [`Writer::put_f32_rows`].
+pub fn put_block(w: &mut Writer, block: &EncodedRows) {
+    w.put_u32(block.rows as u32);
+    w.put_u32(block.d as u32);
+    w.put_raw(&block.payload);
+}
+
+/// Read and decode a row block at `codec`. For `none` this is exactly
+/// [`Reader::f32_rows`]; otherwise the block's width must match the
+/// reference vector, the byte size is `checked_mul`-bounded against the
+/// remaining buffer before any allocation, and truncated or oversized
+/// blocks error without allocating.
+pub fn read_rows(r: &mut Reader<'_>, codec: &RowCodec<'_>) -> Result<Vec<Vec<f32>>> {
+    if codec.comp.is_none() {
+        return r.f32_rows();
+    }
+    let rows = r.u32()? as usize;
+    let d = r.u32()? as usize;
+    if rows > 0 && d == 0 {
+        // see Reader::f32_rows: a zero-width header would sidestep the
+        // byte-level bound and allocate ~4G rows
+        bail!("wire: zero-width row block with {rows} rows");
+    }
+    if rows > 0 && d != codec.reference.len() {
+        bail!(
+            "wire: encoded row block width {d} != reference width {}",
+            codec.reference.len()
+        );
+    }
+    let stride = codec.comp.stride(d);
+    let total = rows
+        .checked_mul(stride)
+        .context("wire: row block size overflow")?;
+    let raw = r.take(total)?;
+    let mut out = Vec::with_capacity(rows);
+    for seg in raw.chunks_exact(stride) {
+        let mut row = vec![0f32; d];
+        decode_row_into(codec, seg, &mut row)?;
+        out.push(row);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt16(x: f32) -> f32 {
+        f16_to_f32(f32_to_f16(x))
+    }
+
+    #[test]
+    fn f16_bits_of_known_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.5), 0xC100);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF); // max finite
+        assert_eq!(f32_to_f16(65520.0), F16_POS_INF); // RNE boundary → Inf
+        assert_eq!(f32_to_f16(f32::INFINITY), F16_POS_INF);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), F16_NEG_INF);
+        assert_eq!(f32_to_f16(f32::NAN), F16_NAN);
+        assert_eq!(f32_to_f16(5.960_464_5e-8), 0x0001); // min subnormal
+        assert_eq!(f32_to_f16(2.980_232_2e-8), 0x0000); // half of it → even
+        assert_eq!(f32_to_f16(6.103_515_6e-5), 0x0400); // min normal
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even_ties() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1 + 2^-10:
+        // RNE picks the even mantissa (1.0)
+        assert_eq!(f32_to_f16(1.0 + f32::powi(2.0, -11)), 0x3C00);
+        // 1 + 3·2^-11 is halfway between odd 1+2^-10 and even 1+2^-9
+        assert_eq!(f32_to_f16(1.0 + 3.0 * f32::powi(2.0, -11)), 0x3C02);
+    }
+
+    #[test]
+    fn every_f16_value_round_trips_through_f32() {
+        for bits in 0..=u16::MAX {
+            let x = f16_to_f32(bits);
+            if x.is_nan() {
+                assert_eq!(f32_to_f16(x), F16_NAN, "bits={bits:#06x}");
+            } else {
+                assert_eq!(f32_to_f16(x), bits, "bits={bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_exact_values_survive_codec() {
+        let reference = [0.5f32, -3.0, 0.0, 1e4];
+        let codec = RowCodec::new(Compression::F16, &reference);
+        // deltas exactly representable in f16 → lossless round trip
+        let mut rows = vec![vec![0.5f32 + 0.25, -3.0 - 2.0, 6.0, 1e4]];
+        let want = rows.clone();
+        let enc = transform_rows(&codec, &mut rows).unwrap();
+        assert_eq!(rows, want);
+        assert_eq!(enc.encoded_bytes(), 8);
+        assert_eq!(enc.raw_bytes(), 16);
+    }
+
+    #[test]
+    fn q8_scale_and_saturation_bits() {
+        let reference = [0f32; 4];
+        let codec = RowCodec::new(Compression::Q8, &reference);
+        let enc = encode_rows(&codec, &[vec![0.0f32, 63.5, -127.0, 127.0]]);
+        // scale = 127/127 = 1.0; 63.5 rounds half away from zero → 64
+        assert_eq!(
+            enc.payload,
+            vec![0x00, 0x00, 0x80, 0x3F, 0, 64, 0x81, 0x7F]
+        );
+        let nf = encode_rows(&codec, &[vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 2.0]]);
+        // finite deltas = {2.0} → scale = 2/127; NaN→0, ±Inf→±127, 2.0→127
+        assert_eq!(&nf.payload[4..], &[0, 0x7F, 0x81, 0x7F]);
+        assert_eq!(
+            f32::from_bits(u32::from_le_bytes([
+                nf.payload[0],
+                nf.payload[1],
+                nf.payload[2],
+                nf.payload[3]
+            ])),
+            2.0f32 / 127.0
+        );
+    }
+
+    #[test]
+    fn q8_all_zero_or_nonfinite_rows_use_zero_scale() {
+        let reference = [1.0f32, 2.0];
+        let codec = RowCodec::new(Compression::Q8, &reference);
+        let mut rows = vec![vec![1.0f32, 2.0], vec![f32::NAN, f32::INFINITY]];
+        let enc = transform_rows(&codec, &mut rows).unwrap();
+        // zero-delta row decodes to exactly the reference
+        assert_eq!(rows[0], vec![1.0, 2.0]);
+        // non-finite row: scale 0 ⇒ NaN→ref, +Inf→ref (±127·0 = 0)
+        assert_eq!(rows[1], vec![1.0, 2.0]);
+        assert_eq!(enc.row_payload(1).unwrap(), &[0, 0, 0, 0, 0, 0x7F]);
+    }
+
+    #[test]
+    fn block_round_trips_through_wire_header() {
+        let reference = [0.25f32, -0.5, 3.0];
+        for comp in [Compression::None, Compression::F16, Compression::Q8] {
+            let codec = RowCodec::new(comp, &reference);
+            let mut rows = vec![
+                vec![1.0f32, -2.0, 3.5],
+                vec![0.25, -0.5, 3.0],
+                vec![-1e3, 0.0, 42.0],
+            ];
+            let enc = transform_rows(&codec, &mut rows).unwrap();
+            let mut w = Writer::new();
+            put_block(&mut w, &enc);
+            let buf = w.into_bytes();
+            let mut r = Reader::new(&buf);
+            let got = read_rows(&mut r, &codec).unwrap();
+            r.finish().unwrap();
+            // the wire decode reproduces the transform's decoded bits
+            assert_eq!(got, rows, "{comp:?}");
+        }
+    }
+
+    #[test]
+    fn per_row_transform_matches_block_transform() {
+        let reference = [0.1f32, -2.0, 7.5];
+        for comp in [Compression::None, Compression::F16, Compression::Q8] {
+            let codec = RowCodec::new(comp, &reference);
+            let mut block = vec![vec![1.0f32, -2.5, 9.0], vec![0.1, 1e3, -0.25]];
+            let mut single = block.clone();
+            transform_rows(&codec, &mut block).unwrap();
+            let mut scratch = Vec::new();
+            for row in &mut single {
+                transform_row_in_place(&codec, row, &mut scratch).unwrap();
+            }
+            assert_eq!(single, block, "{comp:?}");
+        }
+    }
+
+    #[test]
+    fn gather_serves_cached_segments_verbatim() {
+        let reference = [0f32; 2];
+        let codec = RowCodec::new(Compression::Q8, &reference);
+        let enc = encode_rows(
+            &codec,
+            &[vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]],
+        );
+        let sub = enc.gather(&[2, 0]).unwrap();
+        assert_eq!(sub.rows, 2);
+        assert_eq!(sub.row_payload(0).unwrap(), enc.row_payload(2).unwrap());
+        assert_eq!(sub.row_payload(1).unwrap(), enc.row_payload(0).unwrap());
+        assert!(enc.gather(&[3]).is_err());
+    }
+
+    #[test]
+    fn truncated_and_corrupt_blocks_error_not_panic() {
+        let reference = [0f32; 3];
+        for comp in [Compression::F16, Compression::Q8] {
+            let codec = RowCodec::new(comp, &reference);
+            let enc = encode_rows(&codec, &[vec![1.0f32, 2.0, 3.0]]);
+            let mut w = Writer::new();
+            put_block(&mut w, &enc);
+            let buf = w.into_bytes();
+            for cut in 0..buf.len() {
+                let mut r = Reader::new(&buf[..cut]);
+                assert!(read_rows(&mut r, &codec).is_err(), "{comp:?} cut={cut}");
+            }
+            // oversized claimed row count must error before allocating
+            let mut big = buf.clone();
+            big[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+            assert!(read_rows(&mut Reader::new(&big), &codec).is_err());
+            // zero-width and reference-width-mismatch headers rejected
+            let mut zw = buf.clone();
+            zw[4..8].copy_from_slice(&0u32.to_le_bytes());
+            assert!(read_rows(&mut Reader::new(&zw), &codec).is_err());
+            let mut wide = buf.clone();
+            wide[4..8].copy_from_slice(&7u32.to_le_bytes());
+            assert!(read_rows(&mut Reader::new(&wide), &codec).is_err());
+        }
+    }
+
+    #[test]
+    fn compression_parse_and_name_inverse() {
+        for comp in [Compression::None, Compression::F16, Compression::Q8] {
+            assert_eq!(Compression::parse(comp.name()), Some(comp));
+        }
+        assert_eq!(Compression::parse("gzip"), None);
+        assert_eq!(block_bytes(Compression::Q8, 5, 10), 70);
+        assert_eq!(block_bytes(Compression::F16, 5, 10), 100);
+        assert_eq!(block_bytes(Compression::None, 5, 10), 200);
+    }
+}

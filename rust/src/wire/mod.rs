@@ -1,4 +1,5 @@
-//! Length-prefixed binary wire format for the multi-process shard engine.
+//! Length-prefixed binary wire format for the multi-process shard engine
+//! (protocol **v4**).
 //!
 //! The coordinator and its `rpel shard-worker` processes exchange frames
 //! of `[u32 LE length][payload]` over a [`transport::Transport`] — the
@@ -15,6 +16,46 @@
 //! transport*; it is pinned by golden-vector and property tests in
 //! `rust/tests/wire_roundtrip.rs` and the (transport × procs × shards ×
 //! threads) grid in `rust/tests/determinism.rs`.
+//!
+//! ## v4 frame layout
+//!
+//! Every frame is `[u32 LE length][u8 tag][body]`; handshake frames
+//! (`Init` `0x01`, `InitOk` `0x81`, `PeerHello` `0x40`) carry
+//! [`proto::PROTOCOL_VERSION`] right after the tag and both sides verify
+//! it before anything else, so a version-skewed peer fails loudly at
+//! connect time. Row blocks — the `Snapshot` and `PullReply` bodies that
+//! dominate traffic — are `[u32 rows][u32 d][rows · stride bytes]`,
+//! where the per-row stride is set by the **compression level** from the
+//! `[wire]` config section (see [`codec`]):
+//!
+//! ```text
+//! none  [d × f32 LE]            stride 4d   (the v3 byte stream, exactly)
+//! f16   [d × u16 LE]            stride 2d   binary16 delta vs digest mean
+//! q8    [f32 LE scale][d × i8]  stride 4+d  saturating symmetric quantize
+//! ```
+//!
+//! The level is ambient from the shared config (shipped in `Init`), not
+//! a per-frame byte: at `none` every frame is byte-identical to protocol
+//! v3 except the version field itself. `Aggregate` and `RoundDone` row
+//! blocks always travel raw — they carry already-decoded or committed
+//! state, never freshly published rows.
+//!
+//! ## Compression is a modeled knob, not FP noise
+//!
+//! `f16`/`q8` rows are encoded **once** at the publish point as deltas
+//! against the round's reference (the previous round's digest mean as
+//! f32), with round-to-nearest-even f16 conversion and per-row-scale q8
+//! quantization specified bit-exactly in [`codec`]. The **decode is part
+//! of the wire spec**: the publisher overwrites its own rows with the
+//! decoded bits and every consumer — in-process shards, `rpel
+//! shard-worker`, `PeerClient`/`RowServer`, the virtual backend —
+//! aggregates those decoded bits on every path. Quantization therefore
+//! changes *the experiment* (a measurable accuracy-vs-bits trade-off,
+//! swept in `experiments`), never the agreement between two runs: a
+//! fixed level stays bit-identical across the whole (transport × procs ×
+//! shards × threads × participation) grid. Raw-vs-encoded traffic lands
+//! in [`crate::metrics::History`]'s `wire_raw_bytes_per_round` /
+//! `wire_encoded_bytes_per_round` ledgers.
 //!
 //! The two transports differ in **who ships the round tables**, not in
 //! the codec (see [`proto`] for the sequence diagrams):
@@ -37,6 +78,7 @@
 //! (short writes, split reads, mid-frame EOF, delayed and stale replies)
 //! is covered by [`crate::testkit::chaos`] + `rust/tests/transport_faults.rs`.
 
+pub mod codec;
 pub mod proto;
 pub mod transport;
 
@@ -90,6 +132,12 @@ impl Writer {
     /// IEEE-754 bit pattern, LE — bit-exact, never text.
     pub fn put_f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// Raw bytes, no length prefix — the caller frames them (the
+    /// [`codec`] row blocks carry their own `[rows][d]` header).
+    pub fn put_raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
     }
 
     /// `u32` length prefix + raw bytes.

@@ -7,11 +7,17 @@
 //! ```text
 //! coordinator → worker     worker → coordinator
 //! ------------------       --------------------
-//! Init                     InitOk | Failed        (handshake, once)
+//! Init                     InitOk | Failed        (handshake, once; both
+//!                                                  directions carry and
+//!                                                  verify PROTOCOL_VERSION
+//!                                                  = 4 before anything else)
 //! HalfStep{round}          Snapshot{losses,halves}  (phase 1: the shipped
-//!                                                    RoundDigest payload)
+//!                                                    RoundDigest payload;
+//!                                                    rows at the configured
+//!                                                    compression level)
 //! Aggregate{round,         RoundDone{byz_seen, received,
-//!   digest, halves}          peer_bytes, params}  (phases 3–5)
+//!   digest, halves}          peer_bytes, params}  (phases 3–5; both row
+//!                                                  blocks always raw f32)
 //! Shutdown (or EOF)        —                      (worker exits 0)
 //! ```
 //!
@@ -23,16 +29,18 @@
 //! ```text
 //! worker → coordinator      coordinator → worker     worker w → worker v
 //! --------------------      ------------------       -------------------
-//! PeerHello{worker,listen}                           (control connect)
-//!                           Init
+//! PeerHello{worker,listen}                           (control connect;
+//!                                                     version-checked, v4)
+//!                           Init                     (version-checked, v4)
 //! InitOk | Failed
 //!                           Peers{start,len,addr}*   (the address book)
 //!                           HalfStep{round}
-//! Snapshot{losses,halves}
+//! Snapshot{losses,halves}                            (compressed rows)
 //!                           AggregateRouted{round,
 //!                             digest, routes}        PeerHello{worker}
 //!                                                    PullRequest{round,rows}
 //!                                                    ← PullReply{round,rows}
+//!                                                      (compressed rows)
 //!                                                      | Deny{message}
 //! RoundDone{...}
 //!                           Shutdown (or EOF)
@@ -59,6 +67,7 @@
 //! peer-side) before the stream closes, so the coordinator surfaces the
 //! root cause rather than a bare broken pipe.
 
+use super::codec::{self, EncodedRows, RowCodec};
 use super::{Reader, Writer};
 use crate::attacks::HonestDigest;
 use anyhow::{bail, Result};
@@ -69,7 +78,11 @@ use anyhow::{bail, Result};
 /// `PullRequest`/`PullReply`; `RoundDone` gained `peer_bytes`.
 /// v3: asynchronous rounds — `AsyncRound` carries the virtual-clock
 /// staleness schedule ahead of each `HalfStep` when `[async]` is live.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// v4: row-block compression — `Snapshot`/`PullReply` row blocks travel
+/// at the configured `[wire] compression` level (`none`/`f16`/`q8`,
+/// ambient from the `Init` config; see [`super::codec`]). At `none`
+/// every frame is byte-identical to v3 except this version field.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 mod tag {
     pub const INIT: u8 = 0x01;
@@ -313,6 +326,29 @@ pub fn encode_snapshot<R: AsRef<[f32]>>(round: u64, losses: &[f64], halves: &[R]
     w.into_bytes()
 }
 
+/// `Snapshot` with a pre-encoded row block (compression on): the worker
+/// encodes its rows once at the publish point and this frames the cached
+/// block verbatim. Byte-identical to [`encode_snapshot`] at `none`.
+pub fn encode_snapshot_block(round: u64, losses: &[f64], block: &EncodedRows) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::SNAPSHOT);
+    w.put_u64(round);
+    w.put_f64s(losses);
+    codec::put_block(&mut w, block);
+    w.into_bytes()
+}
+
+/// `PullReply` from cached encoded segments (compression on; see
+/// [`encode_snapshot_block`]). Byte-identical to [`encode_pull_reply`]
+/// at `none`.
+pub fn encode_pull_reply_block(round: u64, block: &EncodedRows) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::PULL_REPLY);
+    w.put_u64(round);
+    codec::put_block(&mut w, block);
+    w.into_bytes()
+}
+
 pub fn encode_round_done<R: AsRef<[f32]>>(
     round: u64,
     byz_seen: &[u32],
@@ -431,7 +467,10 @@ pub fn encode_peer(msg: &PeerMsg) -> Vec<u8> {
     }
 }
 
-pub fn decode_peer(buf: &[u8]) -> Result<PeerMsg> {
+/// Decode a peer message at the round's [`RowCodec`]: `PullReply` row
+/// blocks are decoded against the codec's reference (the decode is part
+/// of the wire spec — the returned rows are the bits to aggregate).
+pub fn decode_peer_c(buf: &[u8], rc: &RowCodec<'_>) -> Result<PeerMsg> {
     let mut r = Reader::new(buf);
     let msg = match r.u8()? {
         tag::PEER_HELLO => {
@@ -452,7 +491,7 @@ pub fn decode_peer(buf: &[u8]) -> Result<PeerMsg> {
         },
         tag::PULL_REPLY => PeerMsg::PullReply {
             round: r.u64()?,
-            rows: r.f32_rows()?,
+            rows: codec::read_rows(&mut r, rc)?,
         },
         tag::PEER_DENY => PeerMsg::Deny {
             message: r.string()?,
@@ -461,6 +500,11 @@ pub fn decode_peer(buf: &[u8]) -> Result<PeerMsg> {
     };
     r.finish()?;
     Ok(msg)
+}
+
+/// [`decode_peer_c`] at `compression = none` (v3-compatible blocks).
+pub fn decode_peer(buf: &[u8]) -> Result<PeerMsg> {
+    decode_peer_c(buf, &RowCodec::none())
 }
 
 pub fn encode_failed(message: &str) -> Vec<u8> {
@@ -614,7 +658,11 @@ pub fn encode_from_worker(msg: &FromWorker) -> Vec<u8> {
     }
 }
 
-pub fn decode_from_worker(buf: &[u8]) -> Result<FromWorker> {
+/// Decode a worker message at the round's [`RowCodec`]: `Snapshot` row
+/// blocks are decoded against the codec's reference (the decode is part
+/// of the wire spec — the returned rows are the bits to aggregate).
+/// `RoundDone` params always travel raw.
+pub fn decode_from_worker_c(buf: &[u8], rc: &RowCodec<'_>) -> Result<FromWorker> {
     let mut r = Reader::new(buf);
     let msg = match r.u8()? {
         tag::INIT_OK => {
@@ -633,7 +681,7 @@ pub fn decode_from_worker(buf: &[u8]) -> Result<FromWorker> {
         tag::SNAPSHOT => FromWorker::Snapshot {
             round: r.u64()?,
             losses: r.f64s()?,
-            halves: r.f32_rows()?,
+            halves: codec::read_rows(&mut r, rc)?,
         },
         tag::ROUND_DONE => FromWorker::RoundDone {
             round: r.u64()?,
@@ -649,6 +697,12 @@ pub fn decode_from_worker(buf: &[u8]) -> Result<FromWorker> {
     };
     r.finish()?;
     Ok(msg)
+}
+
+/// [`decode_from_worker_c`] at `compression = none` (v3-compatible
+/// blocks).
+pub fn decode_from_worker(buf: &[u8]) -> Result<FromWorker> {
+    decode_from_worker_c(buf, &RowCodec::none())
 }
 
 #[cfg(test)]
@@ -786,6 +840,49 @@ mod tests {
         let n = buf.len();
         buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_to_worker(&buf).is_err());
+    }
+
+    #[test]
+    fn compressed_snapshot_and_pull_reply_round_trip() {
+        let reference = [0.5f32, -1.0, 2.0];
+        for comp in [codec::Compression::F16, codec::Compression::Q8] {
+            let rc = RowCodec::new(comp, &reference);
+            let mut rows = vec![vec![1.0f32, 2.0, 3.0], vec![0.5, -1.0, 2.0]];
+            let block = codec::transform_rows(&rc, &mut rows).unwrap();
+            let snap = encode_snapshot_block(9, &[0.5, 0.25], &block);
+            match decode_from_worker_c(&snap, &rc).unwrap() {
+                FromWorker::Snapshot {
+                    round,
+                    losses,
+                    halves,
+                } => {
+                    assert_eq!(round, 9);
+                    assert_eq!(losses, vec![0.5, 0.25]);
+                    // the wire decode reproduces the publish transform
+                    assert_eq!(halves, rows);
+                }
+                other => panic!("expected Snapshot, got {other:?}"),
+            }
+            let reply = encode_pull_reply_block(9, &block.gather(&[1, 0]).unwrap());
+            match decode_peer_c(&reply, &rc).unwrap() {
+                PeerMsg::PullReply { round, rows: got } => {
+                    assert_eq!(round, 9);
+                    assert_eq!(got, vec![rows[1].clone(), rows[0].clone()]);
+                }
+                other => panic!("expected PullReply, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn none_block_frames_are_byte_identical_to_legacy() {
+        let rows = vec![vec![1.0f32, -2.0], vec![0.0, 4.5]];
+        let block = codec::encode_rows(&RowCodec::none(), &rows);
+        assert_eq!(
+            encode_snapshot_block(3, &[1.0], &block),
+            encode_snapshot(3, &[1.0], &rows)
+        );
+        assert_eq!(encode_pull_reply_block(3, &block), encode_pull_reply(3, &rows));
     }
 
     #[test]

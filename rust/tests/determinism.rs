@@ -467,6 +467,106 @@ fn virtual_engine_matches_dense_under_partial_participation() {
 }
 
 #[test]
+fn compression_actually_changes_the_trajectory() {
+    // guards the grid comparisons below against being vacuous: if the
+    // publish-point transform were silently skipped everywhere, every
+    // compressed run would trivially equal the uncompressed one
+    use rpel::wire::codec::Compression;
+    let none = run_collect(&base_cfg());
+    let mut cfg = base_cfg();
+    cfg.compression = Compression::Q8;
+    let q8 = run_collect(&cfg);
+    assert_ne!(
+        none.0.train_loss, q8.0.train_loss,
+        "q8 quantization must be visible in the trajectory"
+    );
+}
+
+#[test]
+fn fixed_compression_is_bit_identical_across_the_grid() {
+    // the wire-diet tentpole guarantee: decode is part of the protocol —
+    // every consumer aggregates the decoded bits — so a fixed
+    // compression level is ONE deterministic trajectory however the
+    // honest nodes are spread over shards, threads, worker processes,
+    // and transports. Compression is a modeled accuracy knob, not FP
+    // noise.
+    use rpel::config::TransportKind;
+    use rpel::wire::codec::Compression;
+    enable_worker_bin();
+    for comp in [Compression::F16, Compression::Q8] {
+        let mut serial = base_cfg();
+        serial.compression = comp;
+        serial.shards = 1;
+        serial.threads = 1;
+        let reference = run_collect(&serial);
+
+        // in-process shard × thread grid
+        let mut cfg = serial.clone();
+        cfg.shards = 5;
+        cfg.threads = 4;
+        assert_bit_identical(
+            &format!("{} shards=5 threads=4 vs serial", comp.name()),
+            &reference,
+            &run_collect(&cfg),
+        );
+
+        // multi-process grid over every transport
+        for (transport, procs) in [
+            (TransportKind::Pipe, 2usize),
+            (TransportKind::Socket, 2),
+            (TransportKind::Tcp, 2),
+        ] {
+            let mut cfg = serial.clone();
+            cfg.procs = procs;
+            cfg.threads = 2;
+            cfg.transport = transport;
+            let got = run_collect(&cfg);
+            assert_bit_identical(
+                &format!("{} {transport:?} procs={procs} vs serial", comp.name()),
+                &reference,
+                &got,
+            );
+            // the codec ledger must show the diet (and the exact f16
+            // halving): raw counts 4 bytes/coord, f16 exactly 2, q8
+            // strictly fewer than raw
+            let raw: u64 = got.0.wire_raw_bytes_per_round.iter().sum();
+            let enc: u64 = got.0.wire_encoded_bytes_per_round.iter().sum();
+            assert!(raw > 0, "{}: raw ledger must be live", comp.name());
+            match comp {
+                Compression::F16 => assert_eq!(enc * 2, raw),
+                Compression::Q8 => assert!(enc < raw),
+                Compression::None => unreachable!(),
+            }
+        }
+    }
+}
+
+#[test]
+fn compression_grid_holds_under_partial_participation() {
+    // participation gates which rows move, not how they encode: the
+    // active-set coin is keyed on (seed, round, id), so q8 at p = 0.6
+    // must stay one trajectory across the engine layouts too
+    use rpel::config::TransportKind;
+    use rpel::wire::codec::Compression;
+    enable_worker_bin();
+    let mut serial = base_cfg();
+    serial.compression = Compression::Q8;
+    serial.participation = 0.6;
+    serial.shards = 1;
+    serial.threads = 1;
+    let reference = run_collect(&serial);
+    let mut cfg = serial.clone();
+    cfg.procs = 2;
+    cfg.threads = 2;
+    cfg.transport = TransportKind::Socket;
+    assert_bit_identical(
+        "q8 p=0.6 socket procs=2 vs serial",
+        &reference,
+        &run_collect(&cfg),
+    );
+}
+
+#[test]
 fn push_topology_is_thread_invariant_too() {
     use rpel::config::Topology;
     let mut serial = base_cfg();

@@ -33,6 +33,7 @@ use rpel::coordinator::Trainer;
 use rpel::data::TaskKind;
 use rpel::testkit::scenario::Scenario;
 use rpel::util::rng::{stream_tag, Rng};
+use rpel::wire::codec::RowCodec;
 use rpel::wire::proto::PeerEntry;
 use rpel::wire::transport::{Listener, SockAddr};
 use std::path::Path;
@@ -284,15 +285,15 @@ fn reset_conns_rehandshakes_and_replays_the_hello_bytes_exactly() {
     let listener = Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into())).unwrap();
     let addr = listener.local_addr().unwrap();
     let server = RowServer::spawn(listener, 1, 5, 2).unwrap();
-    server.publish(1, &[vec![1.0f32, 2.0], vec![3.0, 4.0]]);
+    server.publish(1, &[vec![1.0f32, 2.0], vec![3.0, 4.0]], None);
 
     let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
-    let (rows, d_first) = client.fetch(1, 1, &[5, 6], 2).unwrap();
+    let (rows, d_first) = client.fetch(1, 1, &[5, 6], 2, &RowCodec::none()).unwrap();
     assert_eq!(rows, vec![vec![1.0f32, 2.0], vec![3.0, 4.0]]);
 
     // warm fetch: the cached connection skips the Hello
-    server.publish(2, &[vec![5.0f32, 6.0], vec![7.0, 8.0]]);
-    let (_, d_warm) = client.fetch(2, 1, &[5, 6], 2).unwrap();
+    server.publish(2, &[vec![5.0f32, 6.0], vec![7.0, 8.0]], None);
+    let (_, d_warm) = client.fetch(2, 1, &[5, 6], 2, &RowCodec::none()).unwrap();
     assert!(
         d_warm < d_first,
         "warm fetch must not re-send the Hello ({d_warm} vs {d_first})"
@@ -301,7 +302,7 @@ fn reset_conns_rehandshakes_and_replays_the_hello_bytes_exactly() {
     // the rejoin path: reset, then the next fetch re-dials and
     // re-identifies — byte-for-byte the same cost as first contact
     client.reset_conns();
-    let (rows, d_rejoin) = client.fetch(2, 1, &[5, 6], 2).unwrap();
+    let (rows, d_rejoin) = client.fetch(2, 1, &[5, 6], 2, &RowCodec::none()).unwrap();
     assert_eq!(rows, vec![vec![5.0f32, 6.0], vec![7.0, 8.0]]);
     assert_eq!(
         d_rejoin, d_first,
@@ -322,10 +323,10 @@ fn restarted_worker_serves_pulls_again_after_reset_conns() {
     let listener = Listener::bind(&SockAddr::Unix(path.clone())).unwrap();
     let addr = listener.local_addr().unwrap();
     let server = RowServer::spawn(listener, 1, 5, 2).unwrap();
-    server.publish(1, &[vec![1.0f32], vec![2.0]]);
+    server.publish(1, &[vec![1.0f32], vec![2.0]], None);
 
     let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
-    let (rows, _) = client.fetch(1, 1, &[5], 1).unwrap();
+    let (rows, _) = client.fetch(1, 1, &[5], 1, &RowCodec::none()).unwrap();
     assert_eq!(rows, vec![vec![1.0f32]]);
 
     // crash: the first incarnation stops; a new one rebinds the same
@@ -334,17 +335,17 @@ fn restarted_worker_serves_pulls_again_after_reset_conns() {
     std::fs::remove_file(&path).unwrap();
     let listener = Listener::bind(&SockAddr::Unix(path.clone())).unwrap();
     let server = RowServer::spawn(listener, 1, 5, 2).unwrap();
-    server.publish(2, &[vec![9.0f32], vec![8.0]]);
+    server.publish(2, &[vec![9.0f32], vec![8.0]], None);
 
     // the cached connection still points at the dead incarnation, which
     // can only serve its stale table: a named denial, never wrong data
-    let err = format!("{:#}", client.fetch(2, 1, &[5], 1).unwrap_err());
+    let err = format!("{:#}", client.fetch(2, 1, &[5], 1, &RowCodec::none()).unwrap_err());
     assert!(err.contains("peer worker 1"), "{err}");
     assert!(err.contains("round 2"), "{err}");
 
     // rejoin: reset + refetch re-dials the new incarnation
     client.reset_conns();
-    let (rows, _) = client.fetch(2, 1, &[5], 1).unwrap();
+    let (rows, _) = client.fetch(2, 1, &[5], 1, &RowCodec::none()).unwrap();
     assert_eq!(rows, vec![vec![9.0f32]]);
 
     drop(client);

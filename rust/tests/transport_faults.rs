@@ -20,6 +20,7 @@ use rpel::coordinator::Trainer;
 use rpel::data::TaskKind;
 use rpel::testkit::chaos::{ChaosPlan, ChaosStream};
 use rpel::wire;
+use rpel::wire::codec::RowCodec;
 use rpel::wire::proto::{self, PeerEntry, PeerMsg};
 use rpel::wire::transport::{Listener, SockAddr, SocketStream, SocketTransport, Transport};
 use std::io::Write;
@@ -286,7 +287,7 @@ fn peer_killed_mid_pull_is_actionable_never_a_hang() {
         drop(stream); // killed mid-reply
     });
     let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
-    let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3).unwrap_err());
+    let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3, &RowCodec::none()).unwrap_err());
     assert!(err.contains("peer worker 1"), "{err}");
     assert!(err.contains("round 7"), "{err}");
     assert!(err.contains("honest nodes 5..10"), "{err}");
@@ -303,7 +304,7 @@ fn stale_pull_reply_is_rejected() {
             .unwrap();
     });
     let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
-    let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3).unwrap_err());
+    let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3, &RowCodec::none()).unwrap_err());
     assert!(err.contains("stale PullReply"), "{err}");
     assert!(err.contains("round 7"), "{err}");
 }
@@ -319,7 +320,7 @@ fn malformed_pull_reply_is_rejected() {
             .unwrap();
     });
     let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
-    let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3).unwrap_err());
+    let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3, &RowCodec::none()).unwrap_err());
     assert!(err.contains("malformed PullReply"), "{err}");
 }
 
@@ -339,7 +340,7 @@ fn row_server_serves_published_rounds_and_denies_everything_else() {
     let addr = listener.local_addr().unwrap();
     // worker 3 owns honest nodes 4..6
     let server = RowServer::spawn(listener, 3, 4, 2).unwrap();
-    server.publish(5, &[vec![1.0f32, 2.0], vec![3.0, 4.0]]);
+    server.publish(5, &[vec![1.0f32, 2.0], vec![3.0, 4.0]], None);
 
     let mut t = connect_hello(&addr);
 
@@ -373,7 +374,7 @@ fn row_server_serves_published_rounds_and_denies_everything_else() {
     }
 
     // a republish moves the served round forward
-    server.publish(6, &[vec![9.0f32, 9.0], vec![8.0, 8.0]]);
+    server.publish(6, &[vec![9.0f32, 9.0], vec![8.0, 8.0]], None);
     t.send(&proto::encode_pull_request(6, &[4])).unwrap();
     match proto::decode_peer(&t.recv().unwrap()).unwrap() {
         PeerMsg::PullReply { round, rows } => {
@@ -412,7 +413,7 @@ fn row_server_works_over_unix_sockets_too() {
     let listener = Listener::bind(&SockAddr::Unix(dir.join("serve.sock"))).unwrap();
     let addr = listener.local_addr().unwrap();
     let server = RowServer::spawn(listener, 0, 0, 1).unwrap();
-    server.publish(2, &[vec![7.5f32]]);
+    server.publish(2, &[vec![7.5f32]], None);
 
     let mut t = connect_hello(&addr);
     t.send(&proto::encode_pull_request(2, &[0])).unwrap();

@@ -8,6 +8,12 @@
 //! * **committed golden vectors**: the byte layout is pinned literally,
 //!   so an accidental codec change breaks loudly instead of silently
 //!   desyncing coordinator and workers;
+//! * **compressed row blocks** (protocol v4): f16/q8 Snapshot and
+//!   PullReply frames round-trip to the *decoded* bits (the bits every
+//!   consumer aggregates), gathered sub-blocks serve cached segments
+//!   verbatim, non-finite values saturate per the codec spec, and
+//!   `compression = none` framing is byte-identical to the legacy
+//!   encoders;
 //! * truncated or corrupt buffers — oversized row blocks, zero-width
 //!   rows, absurd route counts, wrong-version handshakes — decode to
 //!   errors, never panics.
@@ -15,6 +21,7 @@
 use rpel::attacks::HonestDigest;
 use rpel::testkit::{forall, Gen};
 use rpel::util::rng::Rng;
+use rpel::wire::codec::{self, Compression, RowCodec};
 use rpel::wire::proto::{self, FromWorker, PeerEntry, PeerMsg, ToWorker, WireDigest};
 
 fn bits32(rows: &[Vec<f32>]) -> Vec<Vec<u32>> {
@@ -311,10 +318,10 @@ fn golden_round_done() {
 #[test]
 fn golden_shutdown_and_init_ok() {
     assert_eq!(proto::encode_shutdown(), vec![0x04]);
-    // InitOk: tag, version 3, start=3, len=4, d=10
+    // InitOk: tag, version 4, start=3, len=4, d=10
     let expect: [u8; 29] = [
         0x81, // tag
-        0x03, 0x00, 0x00, 0x00, // protocol version 3
+        0x04, 0x00, 0x00, 0x00, // protocol version 4
         3, 0, 0, 0, 0, 0, 0, 0, // start
         4, 0, 0, 0, 0, 0, 0, 0, // len
         10, 0, 0, 0, 0, 0, 0, 0, // d
@@ -326,7 +333,7 @@ fn golden_shutdown_and_init_ok() {
 fn golden_peer_hello() {
     let expect: [u8; 14] = [
         0x40, // tag
-        0x03, 0x00, 0x00, 0x00, // protocol version 3
+        0x04, 0x00, 0x00, 0x00, // protocol version 4
         0x01, 0x00, 0x00, 0x00, // worker = 1
         0x01, 0x00, 0x00, 0x00, // 1-byte address
         b'u',
@@ -425,6 +432,210 @@ fn golden_aggregate_routed() {
             assert_eq!(routes, vec![vec![2, 0]]);
         }
         other => panic!("wrong message: {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compressed row blocks (protocol v4): golden vectors, decoded-bits
+// round-trips, saturation, and none ≡ legacy framing.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_snapshot_f16_block() {
+    // ref = [0.5, 0.5], row = [1.5, -1.5] → deltas [1.0, -2.0] →
+    // binary16 bits 0x3C00, 0xC000. Decoded rows are ref + f16(delta).
+    let reference = [0.5f32, 0.5];
+    let rc = RowCodec::new(Compression::F16, &reference);
+    let mut rows = vec![vec![1.5f32, -1.5]];
+    let block = codec::transform_rows(&rc, &mut rows).unwrap();
+    let expect: [u8; 33] = [
+        0x82, // tag
+        3, 0, 0, 0, 0, 0, 0, 0, // round echo = 3
+        0x01, 0x00, 0x00, 0x00, // 1 loss
+        0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xF0, 0x3F, // f64 1.0
+        0x01, 0x00, 0x00, 0x00, // 1 row
+        0x02, 0x00, 0x00, 0x00, // d = 2
+        0x00, 0x3C, // f16 delta 1.0
+        0x00, 0xC0, // f16 delta -2.0
+    ];
+    let buf = proto::encode_snapshot_block(3, &[1.0f64], &block);
+    assert_eq!(buf, expect);
+    // deltas are exactly representable, so the decoded bits recover the
+    // original row through the reference
+    assert_eq!(rows, vec![vec![1.5f32, -1.5]]);
+    match proto::decode_from_worker_c(&expect, &rc).unwrap() {
+        FromWorker::Snapshot { round, halves, .. } => {
+            assert_eq!(round, 3);
+            assert_eq!(bits32(&halves), bits32(&rows));
+        }
+        other => panic!("wrong message: {other:?}"),
+    }
+}
+
+#[test]
+fn golden_pull_reply_q8_block() {
+    // zero reference, row [0, 63.5, -127, 127] → m = 127, scale = 1.0,
+    // quanta [0, 64 (half-away), -127, 127].
+    let reference = [0.0f32; 4];
+    let rc = RowCodec::new(Compression::Q8, &reference);
+    let mut rows = vec![vec![0.0f32, 63.5, -127.0, 127.0]];
+    let block = codec::transform_rows(&rc, &mut rows).unwrap();
+    let expect: [u8; 25] = [
+        0x42, // tag
+        7, 0, 0, 0, 0, 0, 0, 0, // round echo = 7
+        0x01, 0x00, 0x00, 0x00, // 1 row
+        0x04, 0x00, 0x00, 0x00, // d = 4
+        0x00, 0x00, 0x80, 0x3F, // f32 scale 1.0
+        0x00, // k = 0
+        0x40, // k = 64 (63.5 rounds half away from zero)
+        0x81, // k = -127
+        0x7F, // k = +127
+    ];
+    let buf = proto::encode_pull_reply_block(7, &block);
+    assert_eq!(buf, expect);
+    assert_eq!(rows, vec![vec![0.0f32, 64.0, -127.0, 127.0]]);
+    match proto::decode_peer_c(&expect, &rc).unwrap() {
+        PeerMsg::PullReply { round, rows: r2 } => {
+            assert_eq!(round, 7);
+            assert_eq!(bits32(&rows), bits32(&r2));
+        }
+        other => panic!("wrong message: {other:?}"),
+    }
+}
+
+#[test]
+fn compressed_snapshot_roundtrip_hits_the_decoded_bits() {
+    // the wire contract under compression: the frame decodes to exactly
+    // the bits `transform_rows` left behind at the publish point — the
+    // bits every consumer aggregates
+    for (comp, seed) in [(Compression::F16, 0xF16), (Compression::Q8, 0x0508)] {
+        forall(200, seed, snapshot_gen(), |(losses, halves)| {
+            let d = halves[0].len();
+            let reference: Vec<f32> = (0..d).map(|i| i as f32 * 0.25 - 0.5).collect();
+            let rc = RowCodec::new(comp, &reference);
+            let mut decoded = halves.clone();
+            let block = codec::transform_rows(&rc, &mut decoded).unwrap();
+            let frame = proto::encode_snapshot_block(11, losses, &block);
+            match proto::decode_from_worker_c(&frame, &rc) {
+                Ok(FromWorker::Snapshot {
+                    round,
+                    losses: l2,
+                    halves: h2,
+                }) => {
+                    round == 11
+                        && bits64(losses) == bits64(&l2)
+                        && bits32(&decoded) == bits32(&h2)
+                }
+                _ => false,
+            }
+        });
+    }
+}
+
+#[test]
+fn compressed_pull_reply_serves_gathered_segments_verbatim() {
+    for (comp, seed) in [(Compression::F16, 0x6A01), (Compression::Q8, 0x6A02)] {
+        forall(200, seed, snapshot_gen(), |(_, halves)| {
+            let d = halves[0].len();
+            let reference: Vec<f32> = (0..d).map(|i| 0.125 * i as f32).collect();
+            let rc = RowCodec::new(comp, &reference);
+            let mut decoded = halves.clone();
+            let block = codec::transform_rows(&rc, &mut decoded).unwrap();
+            // pull every other row, reversed — exercises non-trivial order
+            let idx: Vec<usize> = (0..decoded.len()).step_by(2).rev().collect();
+            let sub = block.gather(&idx).unwrap();
+            let frame = proto::encode_pull_reply_block(17, &sub);
+            let want: Vec<Vec<u32>> = idx
+                .iter()
+                .map(|&i| decoded[i].iter().map(|x| x.to_bits()).collect())
+                .collect();
+            match proto::decode_peer_c(&frame, &rc) {
+                Ok(PeerMsg::PullReply { round, rows }) => {
+                    round == 17 && bits32(&rows) == want
+                }
+                _ => false,
+            }
+        });
+    }
+}
+
+#[test]
+fn non_finite_values_saturate_never_panic() {
+    // f16: NaN canonicalizes, ±Inf and overflow saturate to ±Inf
+    let reference = [0.0f32; 4];
+    let rc = RowCodec::new(Compression::F16, &reference);
+    let mut rows = vec![vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1e9f32]];
+    let block = codec::transform_rows(&rc, &mut rows).unwrap();
+    let r = &rows[0];
+    assert!(r[0].is_nan());
+    assert_eq!(r[1], f32::INFINITY);
+    assert_eq!(r[2], f32::NEG_INFINITY);
+    assert_eq!(r[3], f32::INFINITY); // 1e9 overflows binary16
+    let frame = proto::encode_snapshot_block(1, &[0.0], &block);
+    proto::decode_from_worker_c(&frame, &rc).unwrap();
+
+    // q8: NaN → reference, ±Inf saturate to ±127 quanta; the scale comes
+    // from the finite deltas only
+    let rc = RowCodec::new(Compression::Q8, &reference);
+    let mut rows = vec![vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 2.0f32]];
+    let block = codec::transform_rows(&rc, &mut rows).unwrap();
+    let scale = 2.0f32 / 127.0;
+    let r = &rows[0];
+    assert_eq!(r[0].to_bits(), 0.0f32.to_bits());
+    assert_eq!(r[1], 127.0 * scale);
+    assert_eq!(r[2], -127.0 * scale);
+    assert_eq!(r[3], 127.0 * scale);
+    let frame = proto::encode_pull_reply_block(1, &block);
+    proto::decode_peer_c(&frame, &rc).unwrap();
+}
+
+#[test]
+fn none_block_framing_matches_legacy_bytes_exactly() {
+    // the compression = none acceptance pin at the frame level: the
+    // block-based encoders reproduce the v3 byte streams bit for bit,
+    // and the none transform is the identity
+    let rows = vec![vec![0.5f32, -1.5], vec![2.0, 3.0]];
+    let rc = RowCodec::none();
+    let mut copy = rows.clone();
+    let block = codec::transform_rows(&rc, &mut copy).unwrap();
+    assert_eq!(bits32(&rows), bits32(&copy));
+    assert_eq!(
+        proto::encode_snapshot_block(4, &[1.0, 2.0], &block),
+        proto::encode_snapshot(4, &[1.0, 2.0], &rows)
+    );
+    assert_eq!(
+        proto::encode_pull_reply_block(4, &block),
+        proto::encode_pull_reply(4, &rows)
+    );
+}
+
+#[test]
+fn compressed_block_truncation_and_corruption_error_cleanly() {
+    let reference = [0.25f32, -0.25, 1.0];
+    for comp in [Compression::F16, Compression::Q8] {
+        let rc = RowCodec::new(comp, &reference);
+        let mut rows = vec![vec![1.0f32, 2.0, 3.0], vec![-1.0, -2.0, -3.0]];
+        let block = codec::transform_rows(&rc, &mut rows).unwrap();
+        let frame = proto::encode_pull_reply_block(2, &block);
+        proto::decode_peer_c(&frame, &rc).expect("full buffer decodes");
+        for cut in 0..frame.len() {
+            assert!(
+                proto::decode_peer_c(&frame[..cut], &rc).is_err(),
+                "{comp:?}: truncation at {cut} must error"
+            );
+        }
+        // oversized rows claim: must error on the byte bound, not allocate
+        let mut bad = frame.clone();
+        bad[9..13].copy_from_slice(&(1u32 << 31).to_le_bytes());
+        assert!(proto::decode_peer_c(&bad, &rc).is_err());
+        // zero-width header with a huge row count
+        let mut zw = frame.clone();
+        zw[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        zw[13..17].copy_from_slice(&0u32.to_le_bytes());
+        assert!(proto::decode_peer_c(&zw, &rc).is_err());
+        // block width disagreeing with the round's reference vector
+        let short = RowCodec::new(comp, &reference[..2]);
+        assert!(proto::decode_peer_c(&frame, &short).is_err());
     }
 }
 
