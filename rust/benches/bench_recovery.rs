@@ -1,0 +1,134 @@
+//! Crash-recovery benchmark: what does durability cost per round
+//! boundary?
+//!
+//! Times the durable-checkpoint path — `write_checkpoint` (serialize +
+//! checksum + atomic rename) and `read_checkpoint` (validate + decode)
+//! — on synthetic boundary states at n ∈ {64, 1024} honest nodes, and
+//! reports the file size alongside, since the checkpoint's byte
+//! footprint is the other half of the durability price.
+//!
+//! Emits `BENCH_recovery.json`; the CI `bench-smoke` job runs
+//! `BENCH_SMOKE=1` and uploads the measured file.
+//!
+//! Run: cargo bench --bench bench_recovery
+
+// Test/bench code may time things, read the environment, and build
+// scratch hash tables (clippy.toml's disallowed lists guard src only;
+// the rpel-lint pass likewise skips test code).
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
+use rpel::benchkit::{black_box, section, Bencher};
+use rpel::config::file::to_toml_str;
+use rpel::config::ExperimentConfig;
+use rpel::coordinator::checkpoint::{read_checkpoint, write_checkpoint, BoundaryState};
+use rpel::data::TaskKind;
+use rpel::metrics::History;
+use rpel::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Deterministic synthetic boundary state: h honest rows of width d,
+/// carried rows on the odd indices (the mixed dense/absent shape the
+/// sparse serializer sees in practice).
+fn synth_state(h: usize, d: usize) -> BoundaryState {
+    let wire_ref: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+    let params: Vec<Vec<f32>> = (0..h)
+        .map(|r| (0..d).map(|i| ((r * d + i) as f32 * 0.11).cos()).collect())
+        .collect();
+    let momentum: Vec<Vec<f32>> = (0..h)
+        .map(|r| (0..d).map(|i| ((r * d + i) as f32 * 0.07).sin() * 0.1).collect())
+        .collect();
+    let carried: Vec<Option<Vec<f32>>> = (0..h)
+        .map(|r| (r % 2 == 1).then(|| vec![0.5f32; d]))
+        .collect();
+    BoundaryState {
+        round: 5,
+        wire_ref,
+        params,
+        momentum,
+        carried,
+        vclock: None,
+    }
+}
+
+/// A few rounds of plausible ledger history, so the embedded `History`
+/// block is exercised too.
+fn synth_hist(rounds: usize) -> History {
+    let mut h = History::new("bench_recovery", 100);
+    for r in 0..rounds {
+        h.train_loss.push(1.0 / (r + 1) as f64);
+        h.observed_byz_max.push(0);
+        h.delivered_per_round.push(100);
+        h.worker_restarts_per_round.push(0);
+        h.peer_retries_per_round.push(0);
+        h.checkpoint_bytes_per_round.push(0);
+    }
+    h
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let b = if smoke {
+        Bencher {
+            warmup_iters: 1,
+            samples: 2,
+            iters_per_sample: 1,
+        }
+    } else {
+        Bencher {
+            warmup_iters: 2,
+            samples: 8,
+            iters_per_sample: 3,
+        }
+    };
+    let d = if smoke { 64usize } else { 256 };
+
+    let mut json_root: BTreeMap<String, Json> = BTreeMap::new();
+    json_root.insert("bench".into(), Json::Str("bench_recovery".into()));
+    json_root.insert(
+        "produced_by".into(),
+        Json::Str("rust/benches/bench_recovery".into()),
+    );
+    json_root.insert("units".into(), Json::Str("ns_per_op".into()));
+    json_root.insert("smoke".into(), Json::Bool(smoke));
+
+    let dir = std::env::temp_dir().join(format!("rpel-bench-recovery-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut timing = BTreeMap::new();
+    timing.insert("d".into(), Json::Num(d as f64));
+    for h in [64usize, 1024] {
+        section(&format!("checkpoint at n={h} honest nodes (d={d})"));
+        let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+        cfg.name = format!("bench_recovery_{h}");
+        cfg.n = h;
+        cfg.b = 0;
+        let toml = to_toml_str(&cfg);
+        let state = synth_state(h, d);
+        let hist = synth_hist(8);
+
+        let bytes = write_checkpoint(&dir, &toml, &state, &hist).unwrap();
+        let write = b.run(&format!("n={h} write_checkpoint"), || {
+            black_box(write_checkpoint(&dir, &toml, &state, &hist).unwrap())
+        });
+        println!("{}", write.report());
+        let read = b.run(&format!("n={h} read_checkpoint"), || {
+            black_box(read_checkpoint(&dir).unwrap())
+        });
+        println!("{}", read.report());
+        println!(
+            "  => n={h}: {bytes} bytes on disk ({:.1} bytes per model row)",
+            bytes as f64 / h as f64
+        );
+
+        timing.insert(format!("n{h}_write_ns"), Json::Num(write.mean_ns()));
+        timing.insert(format!("n{h}_read_ns"), Json::Num(read.mean_ns()));
+        timing.insert(format!("n{h}_bytes"), Json::Num(bytes as f64));
+    }
+    json_root.insert("timing".into(), Json::Obj(timing));
+
+    std::fs::remove_dir_all(&dir).ok();
+    match std::fs::write("BENCH_recovery.json", Json::Obj(json_root).to_string_compact()) {
+        Ok(()) => println!("\nwrote BENCH_recovery.json"),
+        Err(e) => println!("\ncould not write BENCH_recovery.json: {e}"),
+    }
+}

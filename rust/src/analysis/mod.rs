@@ -28,7 +28,7 @@
 //! | `wall-clock` | `coordinator/`, `aggregation/`, `sampling/` | No `Instant`/`SystemTime`: deterministic modules model time on `util::vclock`. Wall-clock reads change round closure across hosts. |
 //! | `hash-order` | `coordinator/`, `aggregation/`, `sampling/` | No `HashMap`/`HashSet`/`RandomState`: seeded hash tables iterate in nondeterministic order. Use `BTreeMap`/`BTreeSet`, or exempt-mark lookup-only tables whose iteration order is never observed. |
 //! | `ambient-rng` | `coordinator/`, `aggregation/`, `sampling/`, `wire/` | No `thread_rng`/`from_entropy`, `std::env` reads (`var`, `vars`, `var_os`, `temp_dir`, `current_exe`), or `process::id`: randomness comes from counter-keyed `util::rng` streams, configuration from flags. |
-//! | `panic-path` | `wire/`, `coordinator/proc.rs`, `coordinator/peer.rs` | No `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` on decode paths or in the shard-worker loop: malformed frames and peer failures must surface as named errors (`bail!`/`ensure!`/`context`), not kill the process. |
+//! | `panic-path` | `wire/`, `coordinator/proc.rs`, `coordinator/peer.rs`, `coordinator/checkpoint.rs` | No `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` on decode paths, in the shard-worker loop, or in checkpoint decode: malformed frames, peer failures, and corrupt checkpoint files must surface as named errors (`bail!`/`ensure!`/`context`), not kill the process. |
 //! | `unchecked-alloc` | `wire/` | Allocation sizing (`with_capacity`, `reserve`, `vec![…; n]`) fed by arithmetic must use `checked_*`/`saturating_*`: counts are attacker-supplied and the codec's 1 GiB frame cap depends on overflow-free size math. |
 //! | `f32-fold` | `aggregation/`, `coordinator/` | No ad-hoc f32 reductions (`sum::<f32>`, `product::<f32>`, `fold(0.0f32, …)`): f32 folds reassociate under vectorization; stage through the documented f64 kernels in `util::vecmath`. |
 //! | `global-state` | whole tree, except `mod perf` in `aggregation/mod.rs` | No `static mut` and no `static` of an interior-mutable type (atomics, locks, cells, once-types): process-global state breaks run isolation. Thread scratch belongs in `thread_local!` (always allowed); sanctioned perf counters live in `aggregation::perf`. |

@@ -244,7 +244,12 @@ pub fn default_rules() -> Vec<Rule> {
             severity: Severity::Deny,
             invariant: "decode paths and the worker loop return named errors \
                         (bail!/ensure!/context); a panic kills the whole shard",
-            include: &["wire/", "coordinator/proc.rs", "coordinator/peer.rs"],
+            include: &[
+                "wire/",
+                "coordinator/proc.rs",
+                "coordinator/peer.rs",
+                "coordinator/checkpoint.rs",
+            ],
             exclude_mods: &[],
             skip_macros: &[],
             matcher: Matcher::AnySeq(&[

@@ -43,7 +43,7 @@ use std::collections::BTreeMap;
 
 use super::toml::{parse, TomlValue};
 use super::{
-    AsyncCfg, Compression, EngineKind, ExperimentConfig, RuleChoice, StalePolicyKind,
+    AsyncCfg, Compression, EngineKind, ExperimentConfig, RecoveryCfg, RuleChoice, StalePolicyKind,
     StragglerKind, Topology, TransportKind,
 };
 use crate::aggregation::gossip::GossipRuleKind;
@@ -249,9 +249,34 @@ pub fn from_toml_str(text: &str) -> Result<ExperimentConfig, String> {
     }
 
     async_from_doc(&doc, &mut cfg.asyn)?;
+    recovery_from_doc(&doc, &mut cfg.recovery)?;
 
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Apply a `[recovery]` section onto `rec` (missing keys keep their
+/// current value).
+pub(crate) fn recovery_from_doc(doc: &Doc, rec: &mut RecoveryCfg) -> Result<(), String> {
+    if let Some(s) = get_str(doc, "recovery.checkpoint_dir")? {
+        rec.checkpoint_dir = s.to_string();
+    }
+    if let Some(v) = get_usize(doc, "recovery.checkpoint_every")? {
+        rec.checkpoint_every = v;
+    }
+    if let Some(v) = get_usize(doc, "recovery.handshake_timeout_secs")? {
+        rec.handshake_timeout_secs = v as u64;
+    }
+    if let Some(v) = get_usize(doc, "recovery.max_worker_restarts")? {
+        rec.max_worker_restarts = v;
+    }
+    if let Some(v) = get_usize(doc, "recovery.retry_attempts")? {
+        rec.retry_attempts = v;
+    }
+    if let Some(v) = get_usize(doc, "recovery.retry_backoff_ms")? {
+        rec.retry_backoff_ms = v as u64;
+    }
+    Ok(())
 }
 
 /// Apply an `[async]` section onto `asyn` (missing keys keep their
@@ -487,7 +512,34 @@ pub fn to_toml_str(cfg: &ExperimentConfig) -> String {
     if cfg.asyn != AsyncCfg::default() {
         async_to_toml(&mut out, &cfg.asyn);
     }
+
+    // [recovery] likewise: an all-default config keeps the worker Init
+    // frame byte-identical to the pre-recovery schema
+    if cfg.recovery != RecoveryCfg::default() {
+        recovery_to_toml(&mut out, &cfg.recovery);
+    }
     out
+}
+
+/// Append the `[recovery]` section. Every field is emitted so a reparse
+/// reproduces the value exactly.
+pub(crate) fn recovery_to_toml(out: &mut String, rec: &RecoveryCfg) {
+    out.push_str("\n[recovery]\n");
+    out.push_str(&format!(
+        "checkpoint_dir = \"{}\"\n",
+        toml_escape(&rec.checkpoint_dir)
+    ));
+    out.push_str(&format!("checkpoint_every = {}\n", rec.checkpoint_every));
+    out.push_str(&format!(
+        "handshake_timeout_secs = {}\n",
+        rec.handshake_timeout_secs
+    ));
+    out.push_str(&format!(
+        "max_worker_restarts = {}\n",
+        rec.max_worker_restarts
+    ));
+    out.push_str(&format!("retry_attempts = {}\n", rec.retry_attempts));
+    out.push_str(&format!("retry_backoff_ms = {}\n", rec.retry_backoff_ms));
 }
 
 /// Append the `[async]` section for `asyn`. Every field is emitted so a
@@ -726,6 +778,35 @@ mod tests {
         );
     }
 
+    #[test]
+    fn recovery_keys_parsed_with_quiet_default() {
+        let cfg = from_toml_str(
+            "task = \"tiny\"\n[recovery]\ncheckpoint_dir = \"ck\"\ncheckpoint_every = 3\n\
+             handshake_timeout_secs = 5\nmax_worker_restarts = 0\nretry_attempts = 1\n\
+             retry_backoff_ms = 0",
+        )
+        .unwrap();
+        assert_eq!(cfg.recovery.checkpoint_dir, "ck");
+        assert_eq!(cfg.recovery.checkpoint_every, 3);
+        assert_eq!(cfg.recovery.handshake_timeout_secs, 5);
+        assert_eq!(cfg.recovery.max_worker_restarts, 0);
+        assert_eq!(cfg.recovery.retry_attempts, 1);
+        assert_eq!(cfg.recovery.retry_backoff_ms, 0);
+
+        // an all-default config must not grow a [recovery] section on
+        // serialization (worker Init frames stay byte-identical to the
+        // pre-recovery schema)
+        let plain = from_toml_str("task = \"tiny\"").unwrap();
+        assert_eq!(plain.recovery, crate::config::RecoveryCfg::default());
+        assert!(!to_toml_str(&plain).contains("[recovery]"));
+
+        // validation runs on parsed values: a zero handshake deadline is
+        // rejected with the exact bound
+        let err = from_toml_str("task = \"tiny\"\n[recovery]\nhandshake_timeout_secs = 0")
+            .unwrap_err();
+        assert_eq!(err, "recovery.handshake_timeout_secs must be >= 1, got 0");
+    }
+
     /// `to_toml_str` is what the coordinator ships to every shard-worker
     /// process: a parse of the output must reproduce the config
     /// field-for-field, or workers would silently build a different world.
@@ -780,6 +861,14 @@ mod tests {
         wire_cfg.procs = 2;
         wire_cfg.transport = TransportKind::Socket;
 
+        let mut recovery_cfg = crate::config::ExperimentConfig::default_for(TaskKind::Tiny);
+        recovery_cfg.recovery.checkpoint_dir = "/tmp/rpel \"ckpt\"".into();
+        recovery_cfg.recovery.checkpoint_every = 5;
+        recovery_cfg.recovery.handshake_timeout_secs = 7;
+        recovery_cfg.recovery.max_worker_restarts = 1;
+        recovery_cfg.recovery.retry_attempts = 4;
+        recovery_cfg.recovery.retry_backoff_ms = 25;
+
         for cfg in [
             presets::quickstart_config(),
             from_toml_str(FULL).unwrap(),
@@ -788,6 +877,7 @@ mod tests {
             async_cfg,
             sparse_cfg,
             wire_cfg,
+            recovery_cfg,
         ] {
             let text = to_toml_str(&cfg);
             let back = from_toml_str(&text)

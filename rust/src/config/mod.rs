@@ -12,6 +12,79 @@ use crate::data::TaskKind;
 pub use crate::util::vclock::{AsyncCfg, StalePolicyKind, StragglerKind};
 pub use crate::wire::codec::Compression;
 
+/// Crash-recovery knobs (the `[recovery]` TOML section): durable round
+/// checkpoints, supervised shard-worker restart, and the deterministic
+/// retry/backoff policy on the peer-pull path. The default value keeps
+/// checkpointing off but restart supervision on — a crashed worker is
+/// respawned (up to `max_worker_restarts` times per worker) instead of
+/// aborting the run. Every knob is *modeled*: attempt budgets and
+/// backoff schedules come from here, never from wall-clock reads, so a
+/// recovered run stays bit-identical to an unfaulted one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoveryCfg {
+    /// Directory for durable round checkpoints (`--checkpoint-dir`).
+    /// Empty = checkpointing off.
+    pub checkpoint_dir: String,
+    /// Write a checkpoint every k rounds (`--checkpoint-every`, >= 1).
+    pub checkpoint_every: usize,
+    /// Coordinator-side deadline (seconds) for a spawned shard worker to
+    /// connect and complete its handshake — and, when restart
+    /// supervision is on, the per-phase socket read deadline that turns
+    /// a *hung* worker into a detectable fault. Was a hard-coded 60s.
+    pub handshake_timeout_secs: u64,
+    /// Times one crashed/hung shard worker is respawned before the old
+    /// named error surfaces. 0 = restart supervision off (a worker death
+    /// aborts the run, pre-recovery behavior, and no per-round state
+    /// sync traffic is exchanged).
+    pub max_worker_restarts: usize,
+    /// Attempt budget for peer pulls and peer dials (>= 1). 1 = a single
+    /// try, no retry (pre-recovery behavior).
+    pub retry_attempts: usize,
+    /// Base of the deterministic backoff schedule: attempt k (0-based)
+    /// sleeps `retry_backoff_ms << k` milliseconds before retrying. The
+    /// schedule is a pure function of the config — no clock reads on the
+    /// retry decision path.
+    pub retry_backoff_ms: u64,
+}
+
+impl Default for RecoveryCfg {
+    fn default() -> Self {
+        RecoveryCfg {
+            checkpoint_dir: String::new(),
+            checkpoint_every: 1,
+            handshake_timeout_secs: 60,
+            max_worker_restarts: 2,
+            retry_attempts: 3,
+            retry_backoff_ms: 10,
+        }
+    }
+}
+
+impl RecoveryCfg {
+    /// Whether any per-round recovery machinery (worker state sync) runs.
+    pub fn supervised(&self) -> bool {
+        self.max_worker_restarts > 0
+    }
+
+    /// Whether durable checkpoints are written.
+    pub fn checkpointing(&self) -> bool {
+        !self.checkpoint_dir.is_empty()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.checkpoint_every == 0 {
+            return Err("recovery.checkpoint_every must be >= 1, got 0".into());
+        }
+        if self.handshake_timeout_secs == 0 {
+            return Err("recovery.handshake_timeout_secs must be >= 1, got 0".into());
+        }
+        if self.retry_attempts == 0 {
+            return Err("recovery.retry_attempts must be >= 1, got 0".into());
+        }
+        Ok(())
+    }
+}
+
 /// How nodes exchange models.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Topology {
@@ -213,6 +286,11 @@ pub struct ExperimentConfig {
     /// In-process only (`procs = 1`), epidemic pull topology.
     /// See [`crate::coordinator::vnode`].
     pub virtual_nodes: bool,
+    /// Crash-recovery knobs (`[recovery]` in TOML): durable round
+    /// checkpoints, supervised shard-worker restart, and the
+    /// deterministic peer-pull retry policy.
+    /// See [`crate::coordinator::checkpoint`].
+    pub recovery: RecoveryCfg,
 }
 
 impl ExperimentConfig {
@@ -250,6 +328,7 @@ impl ExperimentConfig {
             participation: 1.0,
             compression: Compression::None,
             virtual_nodes: false,
+            recovery: RecoveryCfg::default(),
         }
     }
 
@@ -402,6 +481,7 @@ impl ExperimentConfig {
                 );
             }
         }
+        self.recovery.validate()?;
         Ok(())
     }
 }
@@ -573,6 +653,18 @@ mod tests {
                     c.rule = RuleChoice::Gossip(GossipRuleKind::CsPlus);
                 },
                 "edges=10 below spanning-tree minimum 19",
+            ),
+            (
+                |c| c.recovery.checkpoint_every = 0,
+                "recovery.checkpoint_every must be >= 1, got 0",
+            ),
+            (
+                |c| c.recovery.handshake_timeout_secs = 0,
+                "recovery.handshake_timeout_secs must be >= 1, got 0",
+            ),
+            (
+                |c| c.recovery.retry_attempts = 0,
+                "recovery.retry_attempts must be >= 1, got 0",
             ),
         ];
         for (i, (mutate, want)) in cases.iter().enumerate() {

@@ -1,0 +1,402 @@
+//! Durable round checkpoints: crash-recoverable snapshots of a round
+//! boundary, written atomically every `recovery.checkpoint_every`
+//! rounds (`--checkpoint-dir`), resumed with `rpel train --resume`.
+//!
+//! A checkpoint captures everything the trainer needs to continue a run
+//! at a round boundary such that the resumed trajectory is **bit-for-bit
+//! identical** to the straight-through run on every (transport × procs ×
+//! shards × threads × compression × participation) grid point: the
+//! committed-params mirror, per-node momentum, the async carried rows,
+//! the wire codec's delta reference, the virtual-clock state, and the
+//! metric history so far. Data-shard cursors and RNG positions are
+//! deliberately NOT stored — they are pure functions of
+//! `(config, completed-round count)` and the resume path fast-forwards
+//! them (see `NodeShard::install_resume` / `VirtualShard::install_resume`).
+//!
+//! # File format (`checkpoint.bin`, version 1)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic "RPELCKPT"
+//! 8       4     version      u32 LE  (this build reads 1)
+//! 12      8     payload_len  u64 LE
+//! 20      8     checksum     u64 LE  (FNV-1a-64 over the payload bytes)
+//! 28      …     payload      (wire Writer encoding, little-endian):
+//!                 config      len-prefixed TOML string (the full
+//!                             experiment config — resume rebuilds the
+//!                             identical world from it)
+//!                 round       u64   completed rounds (boundary)
+//!                 h           u32   honest count
+//!                 d           u32   model dimension
+//!                 wire_ref    f32-row block, exactly 1 row of width d
+//!                 params      f32-row block, h rows of width d
+//!                 momentum    f32-row block, h rows of width d
+//!                 carried     sparse f32-row block, h slots of width d
+//!                 vclock      u8 presence; if 1: u64s down_until,
+//!                             u64s last_fresh (length h each)
+//!                 history     History::encode_wire (everything except
+//!                             wall_secs, which is reporting-only)
+//! ```
+//!
+//! Writes go to `checkpoint.bin.tmp` and are renamed into place, so a
+//! crash mid-write never corrupts the previous checkpoint. Reads verify
+//! magic, version, length and checksum before touching the payload, and
+//! every decode failure surfaces as a named error — a truncated or
+//! bit-flipped file is reported, never misinterpreted. All row decodes
+//! go through the `crate::wire` reader, whose allocations are bounded
+//! by checked size math against the actual byte count present.
+
+use crate::config::{file as config_file, ExperimentConfig};
+use crate::metrics::History;
+use crate::wire::{Reader, Writer};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// File name inside the checkpoint directory.
+pub const CHECKPOINT_FILE: &str = "checkpoint.bin";
+/// Format version this build writes and reads.
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 8] = b"RPELCKPT";
+const HEADER_LEN: usize = 8 + 4 + 8 + 8;
+
+/// The trainer's state at a round boundary: exactly what must survive a
+/// crash for the continuation to be bit-identical. `round` counts
+/// completed rounds (the boundary index); all row vectors are in
+/// ascending honest order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoundaryState {
+    /// completed rounds (resume re-enters the loop at this round index)
+    pub round: u64,
+    /// the row codec's delta reference for the coming round
+    pub wire_ref: Vec<f32>,
+    /// committed params mirror, h rows
+    pub params: Vec<Vec<f32>>,
+    /// per-node momentum, h rows (zeros for never-active nodes)
+    pub momentum: Vec<Vec<f32>>,
+    /// async engine: last fresh served row per node
+    pub carried: Vec<Option<Vec<f32>>>,
+    /// virtual clock `(down_until, last_fresh)` (None ⇒ synchronous run)
+    pub vclock: Option<(Vec<u64>, Vec<u64>)>,
+}
+
+/// A decoded checkpoint: the embedded config, the boundary state, and
+/// the metric history up to the boundary.
+pub struct ResumeState {
+    pub cfg: ExperimentConfig,
+    pub state: BoundaryState,
+    pub hist: History,
+}
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty for corruption
+/// detection (this is an integrity check, not an authenticity one).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Encode a complete checkpoint file (header + payload) to bytes.
+pub fn encode_checkpoint(cfg_toml: &str, state: &BoundaryState, hist: &History) -> Vec<u8> {
+    let h = state.params.len();
+    let d = state.wire_ref.len();
+    let mut w = Writer::new();
+    w.put_str(cfg_toml);
+    w.put_u64(state.round);
+    w.put_u32(h as u32);
+    w.put_u32(d as u32);
+    w.put_f32_rows(&[state.wire_ref.as_slice()]);
+    w.put_f32_rows(&state.params);
+    w.put_f32_rows(&state.momentum);
+    w.put_opt_f32_rows(&state.carried);
+    match &state.vclock {
+        Some((down_until, last_fresh)) => {
+            w.put_u8(1);
+            w.put_u64s(down_until);
+            w.put_u64s(last_fresh);
+        }
+        None => w.put_u8(0),
+    }
+    hist.encode_wire(&mut w);
+    let payload = w.into_bytes();
+    let mut out = Vec::with_capacity(HEADER_LEN.saturating_add(payload.len()));
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&CHECKPOINT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Decode and fully validate a checkpoint file. Every failure mode —
+/// truncation, bit flips, a different format version, shape mismatches
+/// between the embedded config and the state rows — is a named error.
+pub fn decode_checkpoint(bytes: &[u8]) -> Result<ResumeState> {
+    ensure!(
+        bytes.len() >= HEADER_LEN,
+        "checkpoint: file too short for the {HEADER_LEN}-byte header ({} bytes)",
+        bytes.len()
+    );
+    ensure!(
+        &bytes[..8] == MAGIC,
+        "checkpoint: bad magic (not an RPEL checkpoint file)"
+    );
+    let version = le_u32(&bytes[8..12]);
+    ensure!(
+        version == CHECKPOINT_VERSION,
+        "checkpoint: unsupported format version {version} (this build reads {CHECKPOINT_VERSION})"
+    );
+    let payload_len = le_u64(&bytes[12..20]);
+    let stored_sum = le_u64(&bytes[20..28]);
+    let body = &bytes[HEADER_LEN..];
+    ensure!(
+        payload_len == body.len() as u64,
+        "checkpoint: payload length {payload_len} does not match the {} bytes after the \
+         header — truncated or corrupt file",
+        body.len()
+    );
+    let got_sum = fnv1a64(body);
+    ensure!(
+        got_sum == stored_sum,
+        "checkpoint: checksum mismatch (stored {stored_sum:#018x}, computed {got_sum:#018x}) \
+         — truncated or corrupt file"
+    );
+
+    let mut r = Reader::new(body);
+    let toml = r.string().context("checkpoint: malformed embedded config")?;
+    let cfg = config_file::from_toml_str(&toml)
+        .map_err(|e| anyhow::anyhow!("checkpoint: embedded config does not parse: {e}"))?;
+    let round = r.u64().context("checkpoint: malformed round counter")?;
+    let h = r.u32().context("checkpoint: malformed honest count")? as usize;
+    let d = r.u32().context("checkpoint: malformed model dimension")? as usize;
+    ensure!(
+        h == cfg.honest(),
+        "checkpoint: state holds {h} honest node(s) but the embedded config has {}",
+        cfg.honest()
+    );
+    ensure!(
+        round <= cfg.rounds as u64,
+        "checkpoint: boundary round {round} exceeds the embedded config's {} round(s)",
+        cfg.rounds
+    );
+    let mut wire_ref_rows = r
+        .f32_rows()
+        .context("checkpoint: malformed wire reference")?;
+    ensure!(
+        wire_ref_rows.len() == 1 && wire_ref_rows[0].len() == d,
+        "checkpoint: wire reference block holds {} row(s) (expected 1 of width {d})",
+        wire_ref_rows.len()
+    );
+    let wire_ref = match wire_ref_rows.pop() {
+        Some(row) => row,
+        None => bail!("checkpoint: wire reference block is empty"),
+    };
+    let params = r.f32_rows().context("checkpoint: malformed params rows")?;
+    let momentum = r.f32_rows().context("checkpoint: malformed momentum rows")?;
+    let carried = r
+        .opt_f32_rows()
+        .context("checkpoint: malformed carried rows")?;
+    for (what, n) in [("params", params.len()), ("momentum", momentum.len()), ("carried", carried.len())] {
+        ensure!(
+            n == h,
+            "checkpoint: {what} block holds {n} row(s), expected {h}"
+        );
+    }
+    for row in params.iter().chain(momentum.iter()) {
+        ensure!(
+            row.len() == d,
+            "checkpoint: state row width {} does not match model dimension {d}",
+            row.len()
+        );
+    }
+    for row in carried.iter().flatten() {
+        ensure!(
+            row.len() == d,
+            "checkpoint: carried row width {} does not match model dimension {d}",
+            row.len()
+        );
+    }
+    let vclock = match r.u8().context("checkpoint: malformed vclock presence flag")? {
+        0 => None,
+        1 => {
+            let down_until = r.u64s().context("checkpoint: malformed vclock down_until")?;
+            let last_fresh = r.u64s().context("checkpoint: malformed vclock last_fresh")?;
+            ensure!(
+                down_until.len() == h && last_fresh.len() == h,
+                "checkpoint: vclock state holds {}/{} entries, expected {h} each",
+                down_until.len(),
+                last_fresh.len()
+            );
+            Some((down_until, last_fresh))
+        }
+        other => bail!("checkpoint: vclock presence flag is {other} (expected 0 or 1)"),
+    };
+    let hist = History::decode_wire(&mut r).context("checkpoint: malformed history")?;
+    r.finish().context("checkpoint: trailing bytes after payload")?;
+    Ok(ResumeState {
+        cfg,
+        state: BoundaryState {
+            round,
+            wire_ref,
+            params,
+            momentum,
+            carried,
+            vclock,
+        },
+        hist,
+    })
+}
+
+/// Path of the checkpoint file inside `dir`.
+pub fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join(CHECKPOINT_FILE)
+}
+
+/// Write a checkpoint atomically (`checkpoint.bin.tmp` + rename) and
+/// return the file size in bytes. A crash at any point leaves either
+/// the previous checkpoint or the new one — never a torn file.
+pub fn write_checkpoint(
+    dir: &Path,
+    cfg_toml: &str,
+    state: &BoundaryState,
+    hist: &History,
+) -> Result<u64> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("checkpoint: creating directory {}", dir.display()))?;
+    let bytes = encode_checkpoint(cfg_toml, state, hist);
+    let tmp = dir.join("checkpoint.bin.tmp");
+    let path = checkpoint_path(dir);
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("checkpoint: writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path).with_context(|| {
+        format!(
+            "checkpoint: renaming {} into place as {}",
+            tmp.display(),
+            path.display()
+        )
+    })?;
+    Ok(bytes.len() as u64)
+}
+
+/// Read and validate the checkpoint in `dir`.
+pub fn read_checkpoint(dir: &Path) -> Result<ResumeState> {
+    let path = checkpoint_path(dir);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("checkpoint: reading {}", path.display()))?;
+    decode_checkpoint(&bytes).with_context(|| format!("checkpoint: loading {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state_for(h: usize, d: usize) -> BoundaryState {
+        BoundaryState {
+            round: 3,
+            wire_ref: (0..d).map(|j| j as f32 * 0.5 - 1.0).collect(),
+            params: (0..h).map(|i| vec![i as f32 + 0.25; d]).collect(),
+            momentum: (0..h).map(|i| vec![-(i as f32) * 0.125; d]).collect(),
+            carried: (0..h)
+                .map(|i| (i % 2 == 1).then(|| vec![9.0 - i as f32; d]))
+                .collect(),
+            vclock: Some(((0..h as u64).collect(), (0..h as u64).rev().collect())),
+        }
+    }
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = crate::config::presets::quickstart_config();
+        cfg.rounds = 12;
+        cfg
+    }
+
+    #[test]
+    fn roundtrips_bit_for_bit() {
+        let cfg = tiny_cfg();
+        let toml = config_file::to_toml_str(&cfg);
+        let state = state_for(cfg.honest(), 4);
+        let mut hist = History::new("ckpt/test", 42);
+        hist.train_loss = vec![1.5, 1.25, 1.0];
+        hist.checkpoint_bytes_per_round = vec![0, 0, 4096];
+        let bytes = encode_checkpoint(&toml, &state, &hist);
+        let back = decode_checkpoint(&bytes).unwrap();
+        assert_eq!(back.state, state);
+        assert_eq!(back.hist, hist);
+        assert_eq!(back.cfg, cfg);
+        // encoding is deterministic: same inputs, same bytes
+        assert_eq!(bytes, encode_checkpoint(&toml, &state, &hist));
+    }
+
+    #[test]
+    fn rejects_shape_mismatch_against_embedded_config() {
+        let cfg = tiny_cfg();
+        let toml = config_file::to_toml_str(&cfg);
+        let wrong = state_for(2, 4); // quickstart honest() is 7
+        let bytes = encode_checkpoint(&toml, &wrong, &History::new("x", 1));
+        let err = format!("{:#}", decode_checkpoint(&bytes).unwrap_err());
+        assert!(err.contains("2 honest node(s)"), "{err}");
+    }
+
+    #[test]
+    fn header_faults_are_named() {
+        let cfg = tiny_cfg();
+        let toml = config_file::to_toml_str(&cfg);
+        let bytes =
+            encode_checkpoint(&toml, &state_for(cfg.honest(), 4), &History::new("x", 1));
+        // short file
+        let err = format!("{:#}", decode_checkpoint(&bytes[..10]).unwrap_err());
+        assert!(err.contains("too short"), "{err}");
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        let err = format!("{:#}", decode_checkpoint(&bad).unwrap_err());
+        assert!(err.contains("bad magic"), "{err}");
+        // wrong version
+        let mut bad = bytes.clone();
+        bad[8] = 9;
+        let err = format!("{:#}", decode_checkpoint(&bad).unwrap_err());
+        assert!(err.contains("unsupported format version 9"), "{err}");
+        // truncated payload
+        let err =
+            format!("{:#}", decode_checkpoint(&bytes[..bytes.len() - 1]).unwrap_err());
+        assert!(err.contains("does not match"), "{err}");
+        // flipped payload bit
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        let err = format!("{:#}", decode_checkpoint(&bad).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn atomic_write_and_read_back() {
+        let cfg = tiny_cfg();
+        let toml = config_file::to_toml_str(&cfg);
+        let state = state_for(cfg.honest(), 3);
+        let dir = std::env::temp_dir().join(format!("rpel_ckpt_unit_{}", std::process::id()));
+        let bytes = write_checkpoint(&dir, &toml, &state, &History::new("x", 1)).unwrap();
+        assert!(bytes > HEADER_LEN as u64);
+        assert!(!dir.join("checkpoint.bin.tmp").exists(), "tmp renamed away");
+        let back = read_checkpoint(&dir).unwrap();
+        assert_eq!(back.state, state);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // published FNV-1a-64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -187,7 +187,52 @@
 //! ledgers expose it per round. Dense and virtual engines are pinned
 //! bit-identical at every participation level by
 //! `rust/tests/determinism.rs` and `rust/tests/sparse_engine.rs`.
+//!
+//! # Crash recovery (the `[recovery]` config section)
+//!
+//! Three layers, all deterministic — a recovered run is bit-identical
+//! to an unfaulted one because every recovery decision is modeled
+//! (attempt budgets, the counter-keyed round randomness, boundary-state
+//! mirrors), never measured:
+//!
+//! * **Durable round checkpoints** ([`checkpoint`]) — with
+//!   `checkpoint_dir` set, every `checkpoint_every`-th round boundary is
+//!   snapshotted (committed params, momentum, carried rows, codec
+//!   reference, virtual clock, history) and written atomically
+//!   (tmp-file + rename, FNV-checksummed — the format spec lives in the
+//!   [`checkpoint`] module docs). `rpel train --resume DIR` rebuilds the
+//!   world from the embedded config, installs the boundary state into
+//!   whichever backend hosts it, fast-forwards data cursors by the
+//!   completed-round count, and re-enters the round loop — the
+//!   continuation is bit-for-bit the straight-through run.
+//! * **Supervised worker restart** ([`proc::Supervisor`]) — with
+//!   `max_worker_restarts > 0`, a multi-process run survives worker
+//!   crashes. The recovery state machine, driven from
+//!   `round_with_recovery`:
+//!
+//!   ```text
+//!   round(t) ──Ok──▶ promote mirror (boundary t+1) ──▶ next round
+//!      │Err
+//!      ▼
+//!   probe workers ──none down / budget spent──▶ surface the error
+//!      │ ≥1 down, all within budget
+//!      ▼
+//!   drain survivors to the boundary (GetState barrier) ──▶ respawn
+//!   dead workers (fresh incarnation, Init carries the mirror's
+//!   boundary slice) ──▶ re-broadcast peer book ──▶ absorb recovery
+//!   bytes ──▶ roll tables back to the mirror ──▶ re-drive round(t)
+//!   ```
+//!
+//!   The re-driven round is bit-identical to an unfaulted one: round
+//!   randomness is keyed `(seed, round, node, tag)`, the mirror IS the
+//!   boundary state, and recovery traffic never lands in the ledgers.
+//! * **Retry/timeout/backoff on the peer-pull path** ([`peer`],
+//!   [`crate::wire::transport::RetryPolicy`]) — socket-transport pulls
+//!   retry within a deterministic attempt budget; exhaustion surfaces
+//!   as an error naming the peer, round and attempt count, never a
+//!   hang.
 
+pub mod checkpoint;
 pub mod engine;
 pub mod peer;
 pub mod proc;
@@ -210,8 +255,10 @@ use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
 use crate::util::vclock::{serve_row, RoundSchedule, VClock};
 use crate::wire::codec as wire_codec;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::wire::proto;
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use shard::{AggCtx, NodeShard, NodeState, ShardBackend, StepCtx};
+use std::path::Path;
 use std::time::Instant; // lint: wall-clock-exempt (reporting-only wall_secs)
 
 /// Which aggregation backend executes step 4.
@@ -606,6 +653,20 @@ pub struct Trainer {
     last_round_participation: u32,
     last_round_vclose: f64,
     last_round_stale: Vec<u32>,
+    /// multi-process supervision (`recovery.max_worker_restarts > 0`):
+    /// everything a mid-run respawn needs (None ⇒ crashes are fatal)
+    supervisor: Option<proc::Supervisor>,
+    /// supervised runs only: the last completed round boundary's full
+    /// state — what a respawned worker resumes from and what the round
+    /// tables roll back to before a failed round is re-driven
+    mirror: Option<checkpoint::BoundaryState>,
+    /// recovery ledgers for the last round: worker respawns consumed and
+    /// peer-pull retry attempts spent
+    last_round_restarts: u32,
+    last_round_retries: u32,
+    /// test hook: `(round, shard)` kills scheduled by
+    /// [`Self::chaos_kill_at`], consumed just before the round is driven
+    chaos_kills: Vec<(usize, usize)>,
 }
 
 impl Trainer {
@@ -613,6 +674,21 @@ impl Trainer {
     /// (spawning `rpel shard-worker` processes when `procs > 1`),
     /// topology, b̂ resolution (Algorithm 2 when unset).
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
+        Self::from_config_with_resume(cfg, None)
+    }
+
+    /// [`Self::from_config`] continuing from a checkpoint's boundary
+    /// state: committed params / momentum / carried rows are installed
+    /// into whichever backend hosts them (worker `Init` frames on the
+    /// process path, [`NodeShard::install_resume`] /
+    /// [`vnode::VirtualShard::install_resume`] in-process), data-shard
+    /// cursors are fast-forwarded by the completed-round count, and the
+    /// codec reference + virtual clock pick up mid-run. The caller
+    /// re-enters the round loop at the boundary via [`Self::run_from`].
+    pub(crate) fn from_config_with_resume(
+        cfg: &ExperimentConfig,
+        resume: Option<&checkpoint::BoundaryState>,
+    ) -> Result<Trainer> {
         let virtual_nodes = cfg.virtual_nodes;
         let local_backends = cfg.procs <= 1 && !virtual_nodes;
         let World {
@@ -642,13 +718,39 @@ impl Trainer {
         };
         let h = cfg.honest();
         debug_assert!(!local_backends || nodes.len() == h);
+        if let Some(rs) = resume {
+            ensure!(
+                rs.params.len() == h && rs.momentum.len() == h && rs.carried.len() == h,
+                "resume state holds {} node(s) but this config has {h}",
+                rs.params.len()
+            );
+            ensure!(
+                rs.wire_ref.len() == d,
+                "resume codec reference has width {} but the model dimension is {d}",
+                rs.wire_ref.len()
+            );
+            ensure!(
+                rs.params.iter().chain(rs.momentum.iter()).all(|r| r.len() == d)
+                    && rs.carried.iter().flatten().all(|r| r.len() == d),
+                "resume state rows do not match the model dimension {d}"
+            );
+            ensure!(
+                rs.round as usize <= cfg.rounds,
+                "resume boundary round {} exceeds the configured {} round(s)",
+                rs.round,
+                cfg.rounds
+            );
+        }
         // committed-params mirror starts at the init params (identical
         // for every node: init is a function of the experiment seed
-        // only). The virtual backend keeps the mirror EMPTY — committed
-        // params are recipes there, materialized on read by
-        // `committed_params` — which is most of the memory diet.
+        // only) — or at the checkpointed boundary rows on resume. The
+        // virtual backend keeps the mirror EMPTY — committed params are
+        // recipes there, materialized on read by `committed_params` —
+        // which is most of the memory diet.
         let tbl_params: Vec<Vec<f32>> = if virtual_nodes {
             vec![Vec::new(); h]
+        } else if let Some(rs) = resume {
+            rs.params.clone()
         } else if local_backends {
             nodes.iter().map(|node| node.params.clone()).collect()
         } else {
@@ -656,11 +758,12 @@ impl Trainer {
             vec![row; h]
         };
 
+        let mut supervisor = None;
         let backends: Vec<Box<dyn ShardBackend>> = if virtual_nodes {
             let seeds = vseeds.expect("virtual build returns seeds");
             let init = engine.init_params(cfg.seed as i32)?;
             let vsampler = sampler.expect("validated: virtual_nodes needs epidemic topology");
-            vec![Box::new(vnode::VirtualShard::new(
+            let mut vs = vnode::VirtualShard::new(
                 seeds,
                 init,
                 cfg.seed,
@@ -669,11 +772,23 @@ impl Trainer {
                 vsampler,
                 byz.clone(),
                 node_of.clone(),
-            )) as Box<dyn ShardBackend>]
+            );
+            if let Some(rs) = resume {
+                vs.install_resume(
+                    &rs.params,
+                    &rs.momentum,
+                    &rs.carried,
+                    rs.round,
+                    engine.local_steps(),
+                    engine.batch(),
+                );
+            }
+            vec![Box::new(vs) as Box<dyn ShardBackend>]
         } else if !local_backends {
             // multi-process engine: one worker process per contiguous
             // range; each rebuilds the identical world from the shipped
-            // config
+            // config (and, on resume, installs its slice of the
+            // checkpointed boundary state from its `Init` frame)
             let parts = cfg.procs.clamp(1, h.max(1));
             if parts < cfg.procs {
                 log::info!("procs {} clamped to honest count {parts}", cfg.procs);
@@ -681,7 +796,20 @@ impl Trainer {
             drop(nodes);
             let toml = crate::config::file::to_toml_str(&cfg);
             let ranges = shard::partition_ranges(h, parts);
-            proc::ProcessShard::spawn_all(
+            let frames: Vec<proto::WireResume> = match resume {
+                None => Vec::new(),
+                Some(rs) => ranges
+                    .iter()
+                    .map(|&(start, len)| proto::WireResume {
+                        round: rs.round,
+                        wire_ref: rs.wire_ref.clone(),
+                        params: rs.params[start..start + len].to_vec(),
+                        momentum: rs.momentum[start..start + len].to_vec(),
+                        carried: rs.carried[start..start + len].to_vec(),
+                    })
+                    .collect(),
+            };
+            let (workers, sup) = proc::ProcessShard::spawn_all(
                 &toml,
                 &ranges,
                 parts,
@@ -689,13 +817,17 @@ impl Trainer {
                 cfg.transport,
                 &cfg.socket_dir,
                 cfg.compression,
+                &cfg.recovery,
+                &frames,
             )
             .with_context(|| {
                 format!(
                     "starting {parts} shard workers (transport {})",
                     cfg.transport.name()
                 )
-            })?
+            })?;
+            supervisor = sup.supervised().then_some(sup);
+            workers
                 .into_iter()
                 .map(|worker| Box::new(worker) as Box<dyn ShardBackend>)
                 .collect()
@@ -708,13 +840,58 @@ impl Trainer {
                 .iter()
                 .map(|&(start, len)| {
                     let shard_nodes: Vec<NodeState> = node_iter.by_ref().take(len).collect();
-                    Box::new(NodeShard::new(start, shard_nodes, d)) as Box<dyn ShardBackend>
+                    let mut ns = NodeShard::new(start, shard_nodes, d);
+                    if let Some(rs) = resume {
+                        ns.install_resume(
+                            &rs.params[start..start + len],
+                            &rs.momentum[start..start + len],
+                            rs.round,
+                            cfg.seed,
+                            cfg.participation,
+                            engine.local_steps(),
+                            engine.batch(),
+                        );
+                    }
+                    Box::new(ns) as Box<dyn ShardBackend>
                 })
                 .collect()
         };
 
         let pool = WorkerPool::new(cfg.threads);
         let honest_ids: Vec<usize> = (0..cfg.n).filter(|&id| !byz[id]).collect();
+        let wire_ref = match resume {
+            Some(rs) => rs.wire_ref.clone(),
+            None => vec![0.0f32; d],
+        };
+        let carried: Vec<Option<Vec<f32>>> = match resume {
+            Some(rs) => rs.carried.clone(),
+            None => vec![None; h],
+        };
+        let mut vclock = cfg
+            .asyn
+            .is_enabled()
+            .then(|| VClock::new(&cfg.asyn, cfg.seed, h));
+        if let (Some(vc), Some(rs)) = (vclock.as_mut(), resume) {
+            if let Some((down, fresh)) = rs.vclock.as_ref() {
+                vc.restore(down.clone(), fresh.clone())
+                    .map_err(|e| anyhow!("resume: {e}"))?;
+            }
+        }
+        // supervised runs keep a boundary mirror from round 0 on: the
+        // starting state IS the first boundary (init params or the
+        // resumed checkpoint), so a crash in the very first driven
+        // round already has somewhere to roll back to
+        let mirror = supervisor.is_some().then(|| checkpoint::BoundaryState {
+            round: resume.map_or(0, |rs| rs.round),
+            wire_ref: wire_ref.clone(),
+            params: tbl_params.clone(),
+            momentum: match resume {
+                Some(rs) => rs.momentum.clone(),
+                None => vec![vec![0.0f32; d]; h],
+            },
+            carried: carried.clone(),
+            vclock: vclock.as_ref().map(|v| v.state()),
+        });
         log::info!(
             "trainer '{}': n={} b={} b̂={bhat} rule={} engine={} d={d} shards={} procs={} threads={}",
             cfg.name,
@@ -741,7 +918,7 @@ impl Trainer {
             last_round_delivered: 0,
             last_round_wire: (0, 0, 0),
             last_round_codec: (0, 0),
-            wire_ref: vec![0.0f32; d],
+            wire_ref,
             digest: HonestDigest::new(d),
             dist_cache: DistCache::new(),
             dist_cache_on: true,
@@ -759,14 +936,16 @@ impl Trainer {
             tbl_losses: vec![0.0f64; h],
             tbl_byz_seen: vec![0usize; h],
             tbl_recv: vec![0usize; h],
-            vclock: cfg
-                .asyn
-                .is_enabled()
-                .then(|| VClock::new(&cfg.asyn, cfg.seed, h)),
-            carried: vec![None; h],
+            vclock,
+            carried,
             last_round_participation: 0,
             last_round_vclose: 0.0,
             last_round_stale: Vec::new(),
+            supervisor,
+            mirror,
+            last_round_restarts: 0,
+            last_round_retries: 0,
+            chaos_kills: Vec::new(),
             engine,
             agg,
             attack,
@@ -837,20 +1016,40 @@ impl Trainer {
         }
     }
 
+    /// Test hook: schedule the idx-th shard's backing worker process to
+    /// be killed right before `round` is driven — the crash-recovery
+    /// suite uses it to prove a supervised run re-drives the round to a
+    /// bit-identical trajectory, and an unsupervised one fails with the
+    /// named error.
+    #[doc(hidden)]
+    pub fn chaos_kill_at(&mut self, round: usize, shard: usize) {
+        self.chaos_kills.push((round, shard));
+    }
+
     /// Run the full training; returns the metric history.
     pub fn run(&mut self) -> Result<History> {
+        let hist = History::new(&self.cfg.name, self.cfg.messages_per_round());
+        self.run_from(hist, 0)
+    }
+
+    /// The round loop from `start` (0 for a fresh run; a checkpoint's
+    /// boundary round on resume), appending to an existing history —
+    /// the resume path re-enters here with the checkpointed `History`,
+    /// so the finished ledgers are the straight-through run's entry for
+    /// entry (`wall_secs` and `checkpoint_bytes_per_round` excepted:
+    /// both are reporting-only and fault-profile-dependent).
+    pub(crate) fn run_from(&mut self, mut hist: History, start: usize) -> Result<History> {
         #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now(); // lint: wall-clock-exempt (reporting only)
-        let mut hist = History::new(&self.cfg.name, self.cfg.messages_per_round());
         let async_on = self.vclock.is_some();
-        if async_on {
+        if async_on && hist.staleness_hist.is_empty() {
             // bucket k counts node-rounds served at staleness k; the last
             // bucket (max_staleness + 1) is the params-fallback regime
             hist.staleness_hist = vec![0u64; self.cfg.asyn.max_staleness + 2];
         }
         let sparse_on = self.cfg.virtual_nodes || self.cfg.participation < 1.0;
-        for round in 0..self.cfg.rounds {
-            let loss = self.round(round)?;
+        for round in start..self.cfg.rounds {
+            let loss = self.round_with_recovery(round)?;
             hist.train_loss.push(loss);
             hist.observed_byz_max.push(self.last_round_byz_max);
             hist.total_messages += self.cfg.messages_per_round();
@@ -874,13 +1073,206 @@ impl Trainer {
                     hist.staleness_hist[st as usize] += 1;
                 }
             }
+            hist.worker_restarts_per_round.push(self.last_round_restarts);
+            hist.peer_retries_per_round.push(self.last_round_retries);
+            // filled below once the (optional) checkpoint write reports
+            // its size — the file embeds the history with 0 here, so a
+            // resumed ledger differs from the straight-through one only
+            // in this reporting-only column
+            hist.checkpoint_bytes_per_round.push(0);
             let last = round + 1 == self.cfg.rounds;
             if last || (round + 1) % self.cfg.eval_every == 0 {
                 hist.evals.push(self.evaluate(round + 1)?);
             }
+            self.promote_mirror(round)?;
+            if let Some(bytes) = self.maybe_checkpoint(round, &hist)? {
+                if let Some(slot) = hist.checkpoint_bytes_per_round.last_mut() {
+                    *slot = bytes;
+                }
+            }
         }
         hist.wall_secs = t0.elapsed().as_secs_f64();
         Ok(hist)
+    }
+
+    /// [`Self::round`] wrapped in the supervised-recovery loop: when a
+    /// round fails and the [`proc::Supervisor`] can respawn every dead
+    /// worker within budget, the round tables roll back to the
+    /// boundary mirror and the SAME round is re-driven — bit-identical
+    /// to an unfaulted round, because all round randomness is
+    /// counter-keyed and recovery traffic is absorbed from the byte
+    /// ledgers. Unsupervised runs (in-process, virtual, or
+    /// `max_worker_restarts = 0`) pass errors straight through. The
+    /// loop is bounded: every iteration consumes restart budget, and an
+    /// unrecoverable failure (nothing down, or budget spent) returns
+    /// the original error.
+    fn round_with_recovery(&mut self, round: usize) -> Result<f64> {
+        for i in 0..self.chaos_kills.len() {
+            if self.chaos_kills[i].0 == round {
+                let shard = self.chaos_kills[i].1;
+                self.kill_shard_worker(shard);
+            }
+        }
+        self.chaos_kills.retain(|&(r, _)| r != round);
+        let before = self.supervisor.as_ref().map_or(0, |s| s.total_restarts());
+        let mut result = self.round(round);
+        loop {
+            match result {
+                Ok(loss) => {
+                    let after =
+                        self.supervisor.as_ref().map_or(0, |s| s.total_restarts());
+                    self.last_round_restarts = (after - before) as u32;
+                    return Ok(loss);
+                }
+                Err(err) => {
+                    if !self.try_recover_backends()? {
+                        return Err(err);
+                    }
+                    self.rollback_to_mirror();
+                    result = self.round(round);
+                }
+            }
+        }
+    }
+
+    /// Probe-and-respawn pass after a failed round. `Ok(true)` ⇒ at
+    /// least one dead worker was respawned at the mirror boundary and
+    /// the round can be re-driven; `Ok(false)` ⇒ not recoverable here
+    /// (no supervisor or mirror, nothing actually down, or restart
+    /// budget spent) — the caller surfaces its original error.
+    fn try_recover_backends(&mut self) -> Result<bool> {
+        let Some(sup) = self.supervisor.as_mut() else {
+            return Ok(false);
+        };
+        let Some(mirror) = self.mirror.as_ref() else {
+            return Ok(false);
+        };
+        sup.try_recover(&mut self.backends, mirror.round, &mut |start, len| {
+            proto::WireResume {
+                round: mirror.round,
+                wire_ref: mirror.wire_ref.clone(),
+                params: mirror.params[start..start + len].to_vec(),
+                momentum: mirror.momentum[start..start + len].to_vec(),
+                carried: mirror.carried[start..start + len].to_vec(),
+            }
+        })
+    }
+
+    /// Reset the trainer-side round state to the boundary mirror before
+    /// re-driving a failed round: the committed-params mirror rows, the
+    /// codec delta reference, and the virtual clock. Everything else is
+    /// either recomputed by the round from scratch (digest, half-step
+    /// table, per-node ledgers, distance memo) or worker-owned state
+    /// the drain/respawn already restored.
+    fn rollback_to_mirror(&mut self) {
+        let Some(mirror) = self.mirror.as_ref() else { return };
+        for (row, src) in self.tbl_params.iter_mut().zip(mirror.params.iter()) {
+            row.clone_from(src);
+        }
+        self.wire_ref.clone_from(&mirror.wire_ref);
+        if let (Some(vc), Some((down, fresh))) =
+            (self.vclock.as_mut(), mirror.vclock.as_ref())
+        {
+            // shapes came from this clock's own `state()`; a mismatch is
+            // impossible, so the error arm is dead
+            let _ = vc.restore(down.clone(), fresh.clone());
+        }
+    }
+
+    /// Snapshot the boundary state after `round` completed: every
+    /// backend's committed rows, momentum and carried rows, plus the
+    /// codec reference and the virtual clock. Remote shards answer a
+    /// `GetState` barrier (whose traffic is then absorbed from the byte
+    /// ledgers); the virtual backend exports from its recipes; dense
+    /// in-process shards clone node state directly.
+    fn capture_state(&mut self, round: usize) -> Result<checkpoint::BoundaryState> {
+        let boundary = round as u64 + 1;
+        let mut params: Vec<Vec<f32>> = Vec::with_capacity(self.h);
+        let mut momentum: Vec<Vec<f32>> = Vec::with_capacity(self.h);
+        let mut carried: Vec<Option<Vec<f32>>> = Vec::with_capacity(self.h);
+        for backend in self.backends.iter_mut() {
+            let (start, len) = (backend.start(), backend.len());
+            if let Some(shard) = backend.as_process() {
+                let (p, m, c) = shard.sync_state(boundary)?;
+                shard.reset_wire_marks();
+                params.extend(p);
+                momentum.extend(m);
+                carried.extend(c);
+            } else if let Some(v) = backend.as_virtual() {
+                let (p, m, c) = v.export_state();
+                params.extend(p);
+                momentum.extend(m);
+                carried.extend(c);
+            } else {
+                let shard = backend
+                    .as_node_shard()
+                    .expect("in-process backends are NodeShards");
+                for node in &shard.nodes {
+                    params.push(node.params.clone());
+                    momentum.push(node.momentum.clone());
+                }
+                carried.extend(self.carried[start..start + len].iter().cloned());
+            }
+        }
+        Ok(checkpoint::BoundaryState {
+            round: boundary,
+            wire_ref: self.wire_ref.clone(),
+            params,
+            momentum,
+            carried,
+            vclock: self.vclock.as_ref().map(|v| v.state()),
+        })
+    }
+
+    /// Refresh the supervised-recovery mirror at a completed round
+    /// boundary. Unsupervised runs keep no mirror: rollback can never
+    /// be needed, and the per-round snapshot would be pure overhead.
+    fn promote_mirror(&mut self, round: usize) -> Result<()> {
+        if self.supervisor.is_none() {
+            return Ok(());
+        }
+        self.mirror = Some(self.capture_state(round)?);
+        Ok(())
+    }
+
+    /// Write the durable checkpoint at this round boundary when
+    /// configured (`recovery.checkpoint_dir` set, boundary on the
+    /// `checkpoint_every` cadence); returns the file size for the
+    /// `checkpoint_bytes_per_round` ledger. The supervised path reuses
+    /// the just-promoted mirror; otherwise the boundary state is
+    /// captured transiently for the write.
+    fn maybe_checkpoint(&mut self, round: usize, hist: &History) -> Result<Option<u64>> {
+        if !self.cfg.recovery.checkpointing()
+            || (round + 1) % self.cfg.recovery.checkpoint_every != 0
+        {
+            return Ok(None);
+        }
+        let boundary = round as u64 + 1;
+        let transient = match self.mirror.as_ref() {
+            Some(m) if m.round == boundary => None,
+            _ => Some(self.capture_state(round)?),
+        };
+        let state = match transient.as_ref() {
+            Some(s) => s,
+            None => self
+                .mirror
+                .as_ref()
+                .context("internal: mirror vanished between promote and checkpoint")?,
+        };
+        let toml = crate::config::file::to_toml_str(&self.cfg);
+        let bytes = checkpoint::write_checkpoint(
+            Path::new(&self.cfg.recovery.checkpoint_dir),
+            &toml,
+            state,
+            hist,
+        )
+        .with_context(|| {
+            format!(
+                "writing round-{boundary} checkpoint to {}",
+                self.cfg.recovery.checkpoint_dir
+            )
+        })?;
+        Ok(Some(bytes))
     }
 
     /// Execute one synchronous round; returns the mean honest train loss.
@@ -1390,6 +1782,7 @@ impl Trainer {
     fn phase_commit(&mut self) -> Result<()> {
         let mut wire = (0u64, 0u64, 0u64);
         let mut codec_bytes = (0u64, 0u64);
+        let mut retries = 0u32;
         for backend in self.backends.iter_mut() {
             let (start, len) = (backend.start(), backend.len());
             backend.commit(&mut self.tbl_params[start..start + len])?;
@@ -1400,9 +1793,11 @@ impl Trainer {
             let (raw, enc) = backend.take_codec_bytes();
             codec_bytes.0 += raw;
             codec_bytes.1 += enc;
+            retries += backend.take_retries();
         }
         self.last_round_wire = wire;
         self.last_round_codec = codec_bytes;
+        self.last_round_retries = retries;
         self.last_round_byz_max = self.tbl_byz_seen.iter().copied().max().unwrap_or(0);
         self.last_round_delivered = self.tbl_recv.iter().sum();
         if !self.cfg.compression.is_none() {

@@ -17,6 +17,14 @@
 //!   honest range, and the round — a dead peer surfaces as an actionable
 //!   error on the puller, never a hang.
 //!
+//! Transient pull faults ride the `[recovery]` [`RetryPolicy`]: a failed
+//! fetch (dial refused, reset mid-reply) drops the cached connection and
+//! re-dials from scratch up to `retry_attempts` times with deterministic
+//! backoff, and the retries a round consumed travel back to the
+//! coordinator in `RoundDone.retries` for the `peer_retries_per_round`
+//! ledger. Exhaustion surfaces the old named error — peer, honest range,
+//! round — now also quoting the attempt budget.
+//!
 //! Lockstep makes the serving side race-free without condvars: a peer
 //! can only request round t after the coordinator saw *every* worker's
 //! round-t `Snapshot`, and every worker publishes its rows before
@@ -27,7 +35,9 @@
 
 use crate::wire::codec::{EncodedRows, RowCodec};
 use crate::wire::proto::{self, PeerEntry, PeerMsg};
-use crate::wire::transport::{Listener, SockAddr, SocketStream, SocketTransport, Transport};
+use crate::wire::transport::{
+    Listener, RetryPolicy, SockAddr, SocketStream, SocketTransport, Transport,
+};
 use anyhow::{bail, ensure, Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -244,6 +254,18 @@ struct PeerConn {
 /// The fetching half: persistent outbound connections to owning peers.
 pub struct PeerClient {
     me: usize,
+    /// this worker's restart generation — travels in every `Hello` so a
+    /// supervisor can tell a respawned worker's traffic from its
+    /// predecessor's
+    incarnation: u32,
+    /// bounded-retry schedule for dial + fetch faults
+    retry: RetryPolicy,
+    /// retries consumed since the last [`PeerClient::take_retries`]
+    retries: u32,
+    /// absorb every first `Hello` per peer instead of counting it — set
+    /// on clients rebuilt after a respawn or re-broadcast, whose
+    /// unfaulted twin counted those hellos in an earlier round already
+    absorb_hellos: bool,
     /// per worker: (start, len, listener address)
     entries: Vec<(usize, usize, SockAddr)>,
     conns: Vec<Option<PeerConn>>,
@@ -251,7 +273,12 @@ pub struct PeerClient {
 
 impl PeerClient {
     /// Build from the coordinator's `Peers` address book.
-    pub fn new(me: usize, book: &[PeerEntry]) -> Result<PeerClient> {
+    pub fn new(
+        me: usize,
+        incarnation: u32,
+        retry: RetryPolicy,
+        book: &[PeerEntry],
+    ) -> Result<PeerClient> {
         let mut entries = Vec::with_capacity(book.len());
         for e in book {
             entries.push((
@@ -262,7 +289,30 @@ impl PeerClient {
             ));
         }
         let conns = (0..entries.len()).map(|_| None).collect();
-        Ok(PeerClient { me, entries, conns })
+        Ok(PeerClient {
+            me,
+            incarnation,
+            retry,
+            retries: 0,
+            absorb_hellos: false,
+            entries,
+            conns,
+        })
+    }
+
+    /// When on, the one-time `Hello` of every fresh connection is
+    /// recovery traffic: its bytes are absorbed rather than reported in
+    /// the fetch delta. Used for clients rebuilt mid-run (respawned
+    /// worker, re-broadcast address book) so faulted runs keep the
+    /// unfaulted runs' byte ledgers.
+    pub fn set_absorb_hellos(&mut self, on: bool) {
+        self.absorb_hellos = on;
+    }
+
+    /// Drain the retry counter (called once per round; the count ships
+    /// in that round's `RoundDone`).
+    pub fn take_retries(&mut self) -> u32 {
+        std::mem::take(&mut self.retries)
     }
 
     /// The worker owning global honest index `hi`.
@@ -298,7 +348,11 @@ impl PeerClient {
     fn ensure_conn(&mut self, owner: usize) -> Result<&mut PeerConn> {
         if self.conns[owner].is_none() {
             let mut transport = SocketTransport::connect(&self.entries[owner].2)?;
-            transport.send(&proto::encode_peer_hello(self.me as u32, ""))?;
+            transport.send(&proto::encode_peer_hello(
+                self.me as u32,
+                self.incarnation,
+                "",
+            ))?;
             self.conns[owner] = Some(PeerConn {
                 transport,
                 counted: 0,
@@ -315,6 +369,13 @@ impl PeerClient {
     /// Returns the decoded rows in request order plus the wire bytes
     /// this call consumed (requests + replies + the one-time `Hello` on
     /// a fresh connection).
+    ///
+    /// A failed attempt drops the cached connection (it may be half-dead
+    /// with a frame in flight) and the [`RetryPolicy`] re-dials from
+    /// scratch. Ledger bytes stay fault-independent: when a retry
+    /// replaces a connection that already existed, the replacement
+    /// `Hello`'s bytes are absorbed rather than counted, so a fetch that
+    /// needed a retry reports the same delta as one that did not.
     pub fn fetch(
         &mut self,
         round: u64,
@@ -328,8 +389,20 @@ impl PeerClient {
             "peer worker {owner} (honest nodes {start}..{}): pull for round {round}",
             start + len
         );
-        let result = self.fetch_inner(round, owner, rows, d, rc);
-        result.with_context(|| format!("{who} failed"))
+        let had_conn = self.conns[owner].is_some();
+        let absorb_all = self.absorb_hellos;
+        let retry = self.retry;
+        let mut used = 0u32;
+        let result = retry.run(&who, |attempt| {
+            if attempt > 0 {
+                used += 1;
+                self.conns[owner] = None;
+            }
+            let absorb = absorb_all || (attempt > 0 && had_conn);
+            self.fetch_inner(round, owner, rows, d, rc, absorb)
+        });
+        self.retries += used;
+        result
     }
 
     fn fetch_inner(
@@ -339,8 +412,15 @@ impl PeerClient {
         rows: &[u32],
         d: usize,
         rc: &RowCodec<'_>,
+        absorb_hello: bool,
     ) -> Result<(Vec<Vec<f32>>, u64)> {
+        let fresh = self.conns[owner].is_none();
         let conn = self.ensure_conn(owner)?;
+        if fresh && absorb_hello {
+            // the unfaulted run counted this peer's Hello long ago; the
+            // respawned connection's copy is recovery traffic
+            conn.counted = conn.transport.bytes_out() + conn.transport.bytes_in();
+        }
         conn.transport.send(&proto::encode_pull_request(round, rows))?;
         let frame = conn.transport.recv()?;
         let reply = proto::decode_peer_c(&frame, rc)?;

@@ -19,13 +19,15 @@
 //! coordinator                         worker
 //! -----------                         ------
 //! spawn(shard-worker) ──────────────▶ (stdin/stdout pipes)
-//! Init{config,worker,procs} ────────▶ build world, keep own range
-//! ◀──────────────────────── InitOk{start,len,d}
+//! Init{config,worker,procs,resume} ─▶ build world, keep own range,
+//! ◀──────────────────────── InitOk{start,len,d}   install resume state
 //! per round t:
 //!   HalfStep{t} ────────────────────▶ phase 1 on owned nodes
 //!   ◀───────────────── Snapshot{t, losses, halves}
 //!   Aggregate{t, digest, halves[h]} ▶ pull/craft/aggregate/commit
-//!   ◀──────── RoundDone{t, byz, recv, 0, params}
+//!   ◀──────── RoundDone{t, byz, recv, 0, 0, params}
+//!   GetState{t} ────────────────────▶ (supervised runs only)
+//!   ◀──────── State{t, params, momentum, carried}
 //! Shutdown (or EOF) ────────────────▶ exit 0
 //! ```
 //!
@@ -42,9 +44,9 @@
 //! -----------                         --------
 //! bind coordinator.sock
 //! spawn(shard-worker --transport socket
-//!       --connect … --worker w)
-//! ◀──────────── connect + PeerHello{w, listen}   (worker binds its own
-//! Init{config,w,procs} ─────────────▶             pull listener first)
+//!       --connect … --worker w --incarnation k)
+//! ◀──────── connect + PeerHello{w, k, listen}    (worker binds its own
+//! Init{config,w,procs,resume} ──────▶             pull listener first)
 //! ◀──────────────────────── InitOk{start,len,d}
 //! Peers{(start,len,addr)*} ─────────▶ start RowServer, build PeerClient
 //! per round t:
@@ -53,7 +55,9 @@
 //!   AggregateRouted{t, digest,        fetch referenced off-shard rows
 //!     routes} ──────────────────────▶   from peers (PullRequest/Reply),
 //!                                       craft vs digest, aggregate
-//!   ◀── RoundDone{t, byz, recv, peer_bytes, params}
+//!   ◀── RoundDone{t, byz, recv, peer_bytes, retries, params}
+//!   GetState{t} ────────────────────▶ (supervised runs only)
+//!   ◀──────── State{t, params, momentum, carried}
 //! Shutdown (or EOF) ────────────────▶ exit 0
 //! ```
 //!
@@ -78,26 +82,65 @@
 //! (params restored, DoS/receive counters zeroed) before `RoundDone`.
 //! See [`super`] module docs for the full round-close sequence.
 //!
-//! A worker that dies mid-round surfaces as an actionable error on the
-//! coordinator (EOF / connection reset with the worker's exit status),
-//! and a peer that dies mid-pull surfaces on the *pulling* worker (which
-//! forwards it as `Failed`) — never a hang: every read is a blocking
-//! read on a stream whose write end dies with the peer, and
-//! [`ProcessShard`]'s `Drop` half-closes then drains so a worker blocked
-//! mid-write can always finish and observe EOF.
+//! # Crash recovery (supervised restart)
+//!
+//! With `recovery.max_worker_restarts > 0` (the default), a worker that
+//! dies or hangs mid-round no longer aborts the run. The trainer keeps a
+//! **boundary mirror** of every remote shard's state — committed params,
+//! momentum, async carry — refreshed by a `GetState`/`State` exchange at
+//! the end of each round and promoted atomically only when the whole
+//! round succeeded, so on any mid-round failure the mirror still holds
+//! the start-of-round boundary. [`Supervisor::try_recover`] then:
+//!
+//! 1. **detects** — `is_down` probes the control stream (`io_failed` on
+//!    any transport/decode error; a semantic `Failed` reply is *not* a
+//!    crash) and the child's exit status; on the socket transport a
+//!    per-reply read timeout of `recovery.handshake_timeout_secs` turns
+//!    hangs into io errors (pipes detect death via EOF only);
+//! 2. **drains** — survivors get `GetState{t}` and are read until the
+//!    `State` reply, discarding whatever an aborted phase left queued
+//!    (request/reply ordering makes `State` the last frame in flight);
+//! 3. **respawns** — each dead worker restarts with a bumped
+//!    incarnation; its `PeerHello` must echo it, so stale connections
+//!    are rejected, and its `Init` carries the mirror as a resume state;
+//! 4. **re-drives** — the address book is re-broadcast (a respawned
+//!    TCP listener moves), recovery traffic is absorbed from the wire
+//!    ledgers, the trainer rolls its own tables back to the mirror
+//!    boundary, and the failed round re-runs from its phase boundary.
+//!
+//! Survivors make the re-driven round idempotent by caching the encoded
+//! `Snapshot` and `RoundDone` frames per round and re-serving the exact
+//! bytes on a duplicate request — nothing recomputes, the data-RNG
+//! cursor never double-advances, and the trajectory stays bit-identical
+//! to an unfaulted run. A worker whose *peer pull* fails (its peer died)
+//! reports `Failed` but stays alive: no state mutates before the fetch
+//! phase completes, so the drain barrier can re-align it. Once a
+//! worker's respawn budget is exhausted, recovery declines and the
+//! original named error surfaces.
+//!
+//! Without supervision (`max_worker_restarts = 0`), a worker that dies
+//! mid-round surfaces as an actionable error on the coordinator (EOF /
+//! connection reset with the worker's exit status), and a peer that dies
+//! mid-pull surfaces on the *pulling* worker (which forwards it as
+//! `Failed`) — never a hang: every read is a blocking read on a stream
+//! whose write end dies with the peer, and [`ProcessShard`]'s `Drop`
+//! half-closes then drains so a worker blocked mid-write can always
+//! finish and observe EOF.
 
 use super::peer::{PeerClient, RowServer};
 use super::shard::{self, AggCtx, NodeShard, NodeState, ShardBackend, StepCtx};
 use super::{build_world, AggBackend};
 use crate::attacks::{Attack, AttackKind};
-use crate::config::{file as config_file, ExperimentConfig, TransportKind};
+use crate::config::{file as config_file, ExperimentConfig, RecoveryCfg, TransportKind};
 use crate::coordinator::{ComputeEngine, PullSampler};
 use crate::testkit::chaos::{ChaosPlan, ChaosTransport};
 use crate::util::pool::WorkerPool;
 use crate::util::vclock::serve_row;
 use crate::wire::codec::{self, Compression, EncodedRows, RowCodec};
 use crate::wire::proto::{self, FromWorker, PeerEntry, PeerMsg, ToWorker};
-use crate::wire::transport::{Listener, PipeTransport, SockAddr, SocketTransport, Transport};
+use crate::wire::transport::{
+    Listener, PipeTransport, RetryPolicy, SockAddr, SocketTransport, Transport,
+};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::PathBuf;
@@ -159,6 +202,7 @@ fn reply_name(msg: &FromWorker) -> &'static str {
         FromWorker::InitOk { .. } => "InitOk",
         FromWorker::Snapshot { .. } => "Snapshot",
         FromWorker::RoundDone { .. } => "RoundDone",
+        FromWorker::State { .. } => "State",
         FromWorker::Failed { .. } => "Failed",
     }
 }
@@ -171,6 +215,7 @@ fn request_name(msg: &ToWorker) -> &'static str {
         ToWorker::Peers { .. } => "Peers",
         ToWorker::AggregateRouted { .. } => "AggregateRouted",
         ToWorker::AsyncRound { .. } => "AsyncRound",
+        ToWorker::GetState { .. } => "GetState",
         ToWorker::Shutdown => "Shutdown",
     }
 }
@@ -183,9 +228,6 @@ impl Drop for SockDirGuard {
         let _ = std::fs::remove_dir_all(&self.0);
     }
 }
-
-/// How long the coordinator waits for every spawned worker to dial in.
-const CONNECT_DEADLINE: Duration = Duration::from_secs(60);
 
 /// Coordinator-side handle to one `rpel shard-worker` process owning the
 /// honest range `[start, start + len)`, over either transport.
@@ -220,13 +262,26 @@ pub(crate) struct ProcessShard {
     /// row-payload bytes of this shard's compressed blocks
     codec_raw: u64,
     codec_enc: u64,
+    /// true after any transport or frame-decode error on the control
+    /// stream: the channel is unusable and only a respawn re-syncs it
+    /// (a semantic `Failed` reply does NOT set this)
+    io_failed: bool,
+    /// how many times this worker slot has been (re)spawned; the
+    /// respawn handshake rejects hellos that don't echo it
+    incarnation: u32,
+    /// peer-pull retries reported by `RoundDone` since the last
+    /// `take_retries` (the `peer_retries_per_round` ledger source)
+    retries: u32,
 }
 
 impl ProcessShard {
     /// Spawn every worker process and run all handshakes: each `Init` is
     /// sent before any `InitOk` is awaited, so the workers build their
     /// worlds **concurrently** instead of serializing behind one blocking
-    /// handshake per process.
+    /// handshake per process. `resume` is either empty (fresh start) or
+    /// one boundary-state slice per shard (checkpoint resume). Returns
+    /// the shards plus the [`Supervisor`] holding everything a mid-run
+    /// respawn needs.
     pub fn spawn_all(
         cfg_toml: &str,
         ranges: &[(usize, usize)],
@@ -235,19 +290,30 @@ impl ProcessShard {
         transport: TransportKind,
         socket_dir: &str,
         comp: Compression,
-    ) -> Result<Vec<ProcessShard>> {
-        let mut shards = match transport {
-            TransportKind::Pipe => Self::spawn_all_pipe(ranges, d)?,
+        recovery: &RecoveryCfg,
+        resume: &[proto::WireResume],
+    ) -> Result<(Vec<ProcessShard>, Supervisor)> {
+        ensure!(
+            resume.is_empty() || resume.len() == ranges.len(),
+            "internal: {} resume slices for {} shard workers",
+            resume.len(),
+            ranges.len()
+        );
+        let timeout = Duration::from_secs(recovery.handshake_timeout_secs.max(1));
+        let (mut shards, listener, coord_addr) = match transport {
+            TransportKind::Pipe => (Self::spawn_all_pipe(ranges, d)?, None, String::new()),
             TransportKind::Socket | TransportKind::Tcp => {
                 let tcp = transport == TransportKind::Tcp || !cfg!(unix);
-                Self::spawn_all_socket(ranges, d, socket_dir, tcp)?
+                Self::spawn_all_socket(ranges, d, socket_dir, tcp, timeout, recovery.supervised())?
             }
         };
         for shard in shards.iter_mut() {
             shard.comp = comp;
         }
+        let fresh = proto::WireResume::default();
         for (index, shard) in shards.iter_mut().enumerate() {
-            shard.send(&proto::encode_init(cfg_toml, index as u32, procs as u32))?;
+            let res = resume.get(index).unwrap_or(&fresh);
+            shard.send(&proto::encode_init(cfg_toml, index as u32, procs as u32, res))?;
         }
         for shard in shards.iter_mut() {
             shard.finish_handshake()?;
@@ -255,15 +321,7 @@ impl ProcessShard {
         if transport.is_socket() {
             // the address book completes the socket handshake: every
             // worker learns which peer serves which honest range
-            let book: Vec<PeerEntry> = shards
-                .iter()
-                .map(|s| PeerEntry {
-                    start: s.start as u64,
-                    len: s.len as u64,
-                    addr: s.listen_addr.clone(),
-                })
-                .collect();
-            let frame = proto::encode_peers(&book);
+            let frame = proto::encode_peers(&peer_book(&shards));
             for shard in shards.iter_mut() {
                 shard.send(&frame)?;
             }
@@ -273,7 +331,17 @@ impl ProcessShard {
         for shard in shards.iter_mut() {
             shard.reset_wire_marks();
         }
-        Ok(shards)
+        let supervisor = Supervisor {
+            cfg_toml: cfg_toml.to_string(),
+            procs,
+            transport,
+            timeout,
+            max_restarts: recovery.max_worker_restarts,
+            listener,
+            coord_addr,
+            restarts: vec![0usize; ranges.len()],
+        };
+        Ok((shards, supervisor))
     }
 
     /// Pipe path: one child per range with piped stdin/stdout.
@@ -319,6 +387,9 @@ impl ProcessShard {
                 wire_ref: Vec::new(),
                 codec_raw: 0,
                 codec_enc: 0,
+                io_failed: false,
+                incarnation: 0,
+                retries: 0,
             });
         }
         Ok(shards)
@@ -326,15 +397,19 @@ impl ProcessShard {
 
     /// Socket path: bind the coordinator listener, spawn the children
     /// with `--connect`, and accept + identify every control connection
-    /// under a deadline — a worker that dies before dialing in surfaces
-    /// as an error naming it, never a hang.
+    /// under the configured handshake deadline — a worker that dies
+    /// before dialing in surfaces as an error naming it, never a hang.
+    /// The listener stays open (returned for the supervisor) so crashed
+    /// workers can dial back in mid-run.
     #[allow(clippy::disallowed_methods)] // temp_dir/pid/Instant are exempt-marked spawn plumbing
     fn spawn_all_socket(
         ranges: &[(usize, usize)],
         d: usize,
         socket_dir: &str,
         tcp: bool,
-    ) -> Result<Vec<ProcessShard>> {
+        timeout: Duration,
+        supervised: bool,
+    ) -> Result<(Vec<ProcessShard>, Option<Listener>, String)> {
         static DIR_SEQ: AtomicU64 = AtomicU64::new(0); // lint: global-state-exempt (socket-dir uniquifier; never observable in results)
         let (listener, guard) = if tcp {
             (Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into()))?, None)
@@ -379,7 +454,7 @@ impl ProcessShard {
         // accept + identify: PeerHello carries the worker index and the
         // address of the worker's own pull listener
         listener.set_nonblocking(true)?;
-        let deadline = Instant::now() + CONNECT_DEADLINE; // lint: wall-clock-exempt
+        let deadline = Instant::now() + timeout; // lint: wall-clock-exempt
         let mut conns: Vec<Option<SocketTransport>> = (0..ranges.len()).map(|_| None).collect();
         let mut listens: Vec<String> = vec![String::new(); ranges.len()];
         let accept_result = (|| -> Result<()> {
@@ -399,12 +474,24 @@ impl ProcessShard {
                         let frame = t
                             .recv()
                             .context("reading PeerHello from a connecting shard worker")?;
-                        t.set_read_timeout(None)?;
+                        // supervised runs keep a per-reply read timeout on
+                        // the control stream: a hung worker turns into an
+                        // io error the recovery pass can act on
+                        t.set_read_timeout(if supervised { Some(timeout) } else { None })?;
                         match proto::decode_peer(&frame).context("decoding PeerHello")? {
-                            PeerMsg::Hello { worker, listen } => {
+                            PeerMsg::Hello {
+                                worker,
+                                incarnation,
+                                listen,
+                            } => {
                                 let w = worker as usize;
                                 ensure!(w < ranges.len(), "shard worker index {w} out of range");
                                 ensure!(conns[w].is_none(), "shard worker {w} connected twice");
+                                ensure!(
+                                    incarnation == 0,
+                                    "shard worker {w} connected with stale incarnation \
+                                     {incarnation} (expected 0 at spawn)"
+                                );
                                 listens[w] = listen;
                                 conns[w] = Some(t);
                                 accepted += 1;
@@ -426,8 +513,10 @@ impl ProcessShard {
                         }
                         ensure!(
                             Instant::now() < deadline, // lint: wall-clock-exempt
-                            "timed out waiting for {} shard workers to connect at {coord_addr}",
-                            ranges.len() - accepted
+                            "timed out waiting for {} shard workers to connect at \
+                             {coord_addr} (recovery.handshake_timeout_secs = {})",
+                            ranges.len() - accepted,
+                            timeout.as_secs()
                         );
                         std::thread::sleep(Duration::from_millis(5));
                     }
@@ -474,9 +563,12 @@ impl ProcessShard {
                 wire_ref: Vec::new(),
                 codec_raw: 0,
                 codec_enc: 0,
+                io_failed: false,
+                incarnation: 0,
+                retries: 0,
             });
         }
-        Ok(shards)
+        Ok((shards, Some(listener), coord_addr))
     }
 
     /// Await `InitOk` and verify the worker independently derived the
@@ -528,13 +620,17 @@ impl ProcessShard {
         match result {
             Ok(()) => Ok(()),
             Err(e) => {
+                self.io_failed = true;
                 let what = self.describe("sending request");
                 Err(e.context(what))
             }
         }
     }
 
-    fn recv(&mut self) -> Result<FromWorker> {
+    /// Receive and decode one reply, marking the stream failed on any
+    /// transport or framing error (a respawn is then the only re-sync).
+    /// A semantic `Failed` reply passes through — the worker is alive.
+    fn recv_raw(&mut self) -> Result<FromWorker> {
         let frame = match self.conn.as_mut() {
             Some(conn) => conn.recv(),
             None => Err(anyhow::anyhow!("worker connection already closed")),
@@ -542,6 +638,7 @@ impl ProcessShard {
         let frame = match frame {
             Ok(f) => f,
             Err(e) => {
+                self.io_failed = true;
                 let what = self.describe("awaiting reply");
                 return Err(e.context(what));
             }
@@ -549,16 +646,18 @@ impl ProcessShard {
         // decode through the run's row codec: Snapshot blocks arrive
         // compressed; every other reply (RoundDone rows stay raw f32)
         // is unaffected, and a `none` codec is the legacy decode
-        let msg = match proto::decode_from_worker_c(
-            &frame,
-            &RowCodec::new(self.comp, &self.wire_ref),
-        ) {
-            Ok(m) => m,
+        match proto::decode_from_worker_c(&frame, &RowCodec::new(self.comp, &self.wire_ref)) {
+            Ok(m) => Ok(m),
             Err(e) => {
+                self.io_failed = true;
                 let what = self.describe("decoding reply");
-                return Err(e.context(what));
+                Err(e.context(what))
             }
-        };
+        }
+    }
+
+    fn recv(&mut self) -> Result<FromWorker> {
+        let msg = self.recv_raw()?;
         if let FromWorker::Failed { message } = &msg {
             bail!(
                 "shard worker {} (honest nodes {}..{}) reported: {message}",
@@ -570,13 +669,365 @@ impl ProcessShard {
         Ok(msg)
     }
 
-    /// Forget all traffic so far (handshakes are not ledger traffic).
-    fn reset_wire_marks(&mut self) {
+    /// Forget all traffic so far (handshakes and recovery sync are not
+    /// ledger traffic). Also zeroes the codec/peer/retry counters an
+    /// aborted round attempt may have accrued without a draining
+    /// `commit`, so a re-driven round's ledgers match an unfaulted one.
+    pub(crate) fn reset_wire_marks(&mut self) {
         if let Some(conn) = &self.conn {
             self.counted_out = conn.bytes_out();
             self.counted_in = conn.bytes_in();
         }
         self.peer_bytes = 0;
+        self.codec_raw = 0;
+        self.codec_enc = 0;
+        self.retries = 0;
+    }
+
+    /// Liveness probe for the recovery pass: true when the control
+    /// stream has failed or the worker process has exited.
+    pub(crate) fn is_down(&mut self) -> bool {
+        if self.io_failed || self.conn.is_none() {
+            return true;
+        }
+        matches!(self.child.try_wait(), Ok(Some(_)))
+    }
+
+    /// End-of-round state sync and drain barrier: request the worker's
+    /// boundary state and read until the matching `State` reply,
+    /// discarding anything an aborted phase left queued ahead of it
+    /// (request/reply ordering makes `State` the last frame in flight —
+    /// including a parked semantic `Failed`, which is exactly why a
+    /// worker stays alive after a peer-pull failure). Sync traffic is
+    /// recovery bookkeeping: callers absorb it via `reset_wire_marks`.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn sync_state(
+        &mut self,
+        round: u64,
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Option<Vec<f32>>>)> {
+        self.send(&proto::encode_get_state(round))?;
+        loop {
+            match self.recv_raw()? {
+                FromWorker::State {
+                    round: got,
+                    params,
+                    momentum,
+                    carried,
+                } => {
+                    ensure!(
+                        got == round,
+                        "shard worker {}: State for round {got} (expected {round})",
+                        self.index
+                    );
+                    ensure!(
+                        params.len() == self.len
+                            && momentum.len() == self.len
+                            && carried.len() == self.len
+                            && params.iter().chain(&momentum).all(|r| r.len() == self.d)
+                            && carried.iter().flatten().all(|r| r.len() == self.d),
+                        "shard worker {}: malformed State ({} params, {} momentum, {} \
+                         carried; expected {} of width {})",
+                        self.index,
+                        params.len(),
+                        momentum.len(),
+                        carried.len(),
+                        self.len,
+                        self.d
+                    );
+                    return Ok((params, momentum, carried));
+                }
+                // stale reply from an aborted phase: drain and keep reading
+                _stale => continue,
+            }
+        }
+    }
+
+    /// Bring a crashed or hung worker back: kill and reap whatever is
+    /// left, spawn a fresh process under the **next incarnation**, replay
+    /// the `Init` handshake with the supervisor's boundary-state resume,
+    /// and absorb the respawn traffic from the wire ledgers.
+    pub(crate) fn respawn(
+        &mut self,
+        sup: &mut Supervisor,
+        resume: &proto::WireResume,
+    ) -> Result<()> {
+        self.conn = None;
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        self.io_failed = false;
+        self.pending_params.clear();
+        self.peer_bytes = 0;
+        self.retries = 0;
+        self.incarnation += 1;
+        sup.restarts[self.index] += 1;
+        let bin = worker_binary()?;
+        match sup.transport {
+            TransportKind::Pipe => {
+                let mut child = Command::new(&bin)
+                    .arg("shard-worker")
+                    .stdin(Stdio::piped())
+                    .stdout(Stdio::piped())
+                    .spawn()
+                    .with_context(|| {
+                        format!("respawning shard worker {} from {}", self.index, bin.display())
+                    })?;
+                let stdin = BufWriter::new(child.stdin.take().with_context(|| {
+                    format!("respawned shard worker {}: stdin not piped", self.index)
+                })?);
+                let stdout = BufReader::new(child.stdout.take().with_context(|| {
+                    format!("respawned shard worker {}: stdout not piped", self.index)
+                })?);
+                self.child = child;
+                self.conn = Some(Box::new(PipeTransport::new(stdout, stdin)));
+            }
+            TransportKind::Socket | TransportKind::Tcp => {
+                self.respawn_socket(sup, &bin)?;
+            }
+        }
+        self.send(&proto::encode_init(
+            &sup.cfg_toml,
+            self.index as u32,
+            sup.procs as u32,
+            resume,
+        ))?;
+        self.finish_handshake()?;
+        self.reset_wire_marks();
+        Ok(())
+    }
+
+    /// Socket half of [`Self::respawn`]: spawn with `--incarnation`,
+    /// accept on the supervisor's (still open) listener under the
+    /// handshake deadline, and reject hellos that don't echo the new
+    /// incarnation — stale traffic from the previous life can never be
+    /// mistaken for the respawned worker.
+    #[allow(clippy::disallowed_methods)] // Instant is exempt-marked spawn plumbing
+    fn respawn_socket(&mut self, sup: &mut Supervisor, bin: &PathBuf) -> Result<()> {
+        let listener = sup
+            .listener
+            .as_ref()
+            .context("internal: socket supervisor without a control listener")?;
+        let child = Command::new(bin)
+            .arg("shard-worker")
+            .arg("--transport")
+            .arg("socket")
+            .arg("--connect")
+            .arg(&sup.coord_addr)
+            .arg("--worker")
+            .arg(self.index.to_string())
+            .arg("--incarnation")
+            .arg(self.incarnation.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .spawn()
+            .with_context(|| {
+                format!("respawning shard worker {} from {}", self.index, bin.display())
+            })?;
+        self.child = child;
+        let deadline = Instant::now() + sup.timeout; // lint: wall-clock-exempt
+        let conn = loop {
+            match listener.accept() {
+                Ok(stream) => {
+                    stream.set_nonblocking(false)?;
+                    let mut t = SocketTransport::from_stream(stream)?;
+                    let remaining = deadline
+                        .saturating_duration_since(Instant::now()) // lint: wall-clock-exempt
+                        .max(Duration::from_millis(10));
+                    t.set_read_timeout(Some(remaining))?;
+                    let frame = t
+                        .recv()
+                        .context("reading PeerHello from a respawned shard worker")?;
+                    match proto::decode_peer(&frame).context("decoding PeerHello")? {
+                        PeerMsg::Hello {
+                            worker,
+                            incarnation,
+                            listen,
+                        } if worker as usize == self.index
+                            && incarnation == self.incarnation =>
+                        {
+                            t.set_read_timeout(Some(sup.timeout))?;
+                            self.listen_addr = listen;
+                            break t;
+                        }
+                        PeerMsg::Hello {
+                            worker,
+                            incarnation,
+                            ..
+                        } => {
+                            // stale connection from a previous incarnation
+                            // (or a sibling's corpse): drop it, keep waiting
+                            log::warn!(
+                                "respawn of shard worker {}: rejecting hello from \
+                                 worker {worker} incarnation {incarnation}",
+                                self.index
+                            );
+                        }
+                        other => {
+                            bail!("expected PeerHello on the coordinator socket, got {other:?}")
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if let Some(status) = self.child.try_wait()? {
+                        bail!(
+                            "respawned shard worker {} exited before connecting: {status}",
+                            self.index
+                        );
+                    }
+                    ensure!(
+                        Instant::now() < deadline, // lint: wall-clock-exempt
+                        "timed out waiting for respawned shard worker {} to connect at \
+                         {} (recovery.handshake_timeout_secs = {})",
+                        self.index,
+                        sup.coord_addr,
+                        sup.timeout.as_secs()
+                    );
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e).context("accepting a respawned shard worker"),
+            }
+        };
+        self.conn = Some(Box::new(conn));
+        Ok(())
+    }
+}
+
+/// The socket address book: which worker serves which honest range.
+fn peer_book(shards: &[ProcessShard]) -> Vec<PeerEntry> {
+    shards
+        .iter()
+        .map(|s| PeerEntry {
+            start: s.start as u64,
+            len: s.len as u64,
+            addr: s.listen_addr.clone(),
+        })
+        .collect()
+}
+
+/// Everything a mid-run worker respawn needs, created by
+/// [`ProcessShard::spawn_all`] and held by the trainer for the lifetime
+/// of the run. `max_restarts == 0` disables supervision: the first
+/// worker failure surfaces as an error, exactly as before.
+pub(crate) struct Supervisor {
+    cfg_toml: String,
+    procs: usize,
+    transport: TransportKind,
+    /// handshake deadline and (supervised socket runs) per-reply read
+    /// timeout: `recovery.handshake_timeout_secs`
+    timeout: Duration,
+    max_restarts: usize,
+    /// socket transport: the coordinator's control listener, kept open
+    /// so respawned workers can dial back in
+    listener: Option<Listener>,
+    coord_addr: String,
+    /// per-worker respawn counts (== each worker's current incarnation)
+    restarts: Vec<usize>,
+}
+
+impl Supervisor {
+    pub(crate) fn supervised(&self) -> bool {
+        self.max_restarts > 0
+    }
+
+    /// Total respawns so far — the `worker_restarts_per_round` ledger
+    /// reads the per-round delta of this.
+    pub(crate) fn total_restarts(&self) -> usize {
+        self.restarts.iter().sum()
+    }
+
+    /// The recovery pass, run after a round fails. Probes every remote
+    /// shard; when at least one is down and every down worker has
+    /// restart budget left: drains the survivors to the `boundary`
+    /// round, respawns the dead with `resume_of(start, len)` boundary
+    /// state, re-broadcasts the peer address book (a respawned TCP
+    /// listener moves), and absorbs all recovery traffic from the wire
+    /// ledgers. Returns false — leaving the caller's original error to
+    /// surface — when nothing is down (a semantic failure, not a crash)
+    /// or a down worker is out of budget.
+    pub(crate) fn try_recover(
+        &mut self,
+        backends: &mut [Box<dyn ShardBackend>],
+        boundary: u64,
+        resume_of: &mut dyn FnMut(usize, usize) -> proto::WireResume,
+    ) -> Result<bool> {
+        if !self.supervised() {
+            return Ok(false);
+        }
+        let mut down = vec![false; backends.len()];
+        for (i, backend) in backends.iter_mut().enumerate() {
+            if let Some(shard) = backend.as_process() {
+                down[i] = shard.is_down();
+            }
+        }
+        if !down.iter().any(|&x| x) {
+            return Ok(false);
+        }
+        // drain survivors first: a worker that reported a failed peer
+        // pull is idle in its loop with stale frames queued; the
+        // GetState/State barrier re-aligns its stream to the boundary.
+        // A survivor that io-fails during the drain joins the down set.
+        for (i, backend) in backends.iter_mut().enumerate() {
+            if down[i] {
+                continue;
+            }
+            let Some(shard) = backend.as_process() else {
+                continue;
+            };
+            if shard.sync_state(boundary).is_err() {
+                if !shard.is_down() {
+                    return Ok(false); // semantic sync failure: surface the original error
+                }
+                down[i] = true;
+            }
+        }
+        // budget check covers every down worker before any respawn, so a
+        // declined recovery leaves nothing half-restarted
+        for (i, backend) in backends.iter_mut().enumerate() {
+            if !down[i] {
+                continue;
+            }
+            if let Some(shard) = backend.as_process() {
+                if self.restarts[shard.index] >= self.max_restarts {
+                    return Ok(false);
+                }
+            }
+        }
+        for (i, backend) in backends.iter_mut().enumerate() {
+            if !down[i] {
+                continue;
+            }
+            if let Some(shard) = backend.as_process() {
+                let resume = resume_of(shard.start, shard.len);
+                shard.respawn(self, &resume)?;
+            }
+        }
+        if self.transport.is_socket() {
+            // the respawned workers' listener addresses replaced the dead
+            // ones': every worker rebuilds its fetch client from the new
+            // book (the respawned worker is also waiting on this frame to
+            // finish its handshake)
+            let mut entries = Vec::with_capacity(backends.len());
+            for backend in backends.iter_mut() {
+                if let Some(shard) = backend.as_process() {
+                    entries.push(PeerEntry {
+                        start: shard.start as u64,
+                        len: shard.len as u64,
+                        addr: shard.listen_addr.clone(),
+                    });
+                }
+            }
+            let frame = proto::encode_peers(&entries);
+            for backend in backends.iter_mut() {
+                if let Some(shard) = backend.as_process() {
+                    shard.send(&frame)?;
+                }
+            }
+        }
+        for backend in backends.iter_mut() {
+            if let Some(shard) = backend.as_process() {
+                shard.reset_wire_marks();
+            }
+        }
+        Ok(true)
     }
 }
 
@@ -728,6 +1179,7 @@ impl ShardBackend for ProcessShard {
                 byz_seen,
                 received,
                 peer_bytes,
+                retries,
                 params,
             } => {
                 ensure!(
@@ -757,6 +1209,7 @@ impl ShardBackend for ProcessShard {
                     *out = *v as usize;
                 }
                 self.peer_bytes += peer_bytes;
+                self.retries += retries;
                 self.pending_params = params;
                 Ok(())
             }
@@ -802,6 +1255,14 @@ impl ShardBackend for ProcessShard {
         self.codec_raw = 0;
         self.codec_enc = 0;
         delta
+    }
+
+    fn take_retries(&mut self) -> u32 {
+        std::mem::take(&mut self.retries)
+    }
+
+    fn as_process(&mut self) -> Option<&mut ProcessShard> {
+        Some(self)
     }
 
     fn kill_for_test(&mut self) -> bool {
@@ -940,6 +1401,52 @@ impl WorkerShard {
             pending_block: None,
             cfg: world.cfg,
         })
+    }
+
+    /// Resume-at-boundary install (supervised respawn or checkpoint
+    /// resume): overwrite the owned nodes' committed state, restore the
+    /// async carry and the codec delta reference, and replay the
+    /// data-RNG cursor through the first `resume.round` rounds so the
+    /// next batch draw is bit-identical to a straight-through run.
+    fn install_resume(&mut self, resume: &proto::WireResume) -> Result<()> {
+        if resume.is_fresh() {
+            return Ok(());
+        }
+        let len = self.shard.shard_len();
+        ensure!(
+            resume.params.len() == len
+                && resume.momentum.len() == len
+                && resume.carried.len() == len,
+            "resume state has {} params / {} momentum / {} carried rows, expected {len}",
+            resume.params.len(),
+            resume.momentum.len(),
+            resume.carried.len()
+        );
+        ensure!(
+            resume
+                .params
+                .iter()
+                .chain(&resume.momentum)
+                .chain(resume.carried.iter().flatten())
+                .all(|r| r.len() == self.d)
+                && (resume.wire_ref.is_empty() || resume.wire_ref.len() == self.d),
+            "resume state row width mismatch (d = {})",
+            self.d
+        );
+        self.shard.install_resume(
+            &resume.params,
+            &resume.momentum,
+            resume.round,
+            self.cfg.seed,
+            self.cfg.participation,
+            self.engine.local_steps(),
+            self.engine.batch(),
+        );
+        self.carried = resume.carried.clone();
+        if !resume.wire_ref.is_empty() {
+            self.wire_ref.copy_from_slice(&resume.wire_ref);
+        }
+        Ok(())
     }
 
     fn half_step(&mut self, round: usize) -> Result<()> {
@@ -1201,14 +1708,18 @@ impl WorkerShard {
 /// coordinator sees the root cause.
 pub fn run_worker<R: Read + Send, W: Write + Send>(input: R, output: W) -> Result<()> {
     let mut conn = PipeTransport::new(BufReader::new(input), BufWriter::new(output));
-    run_worker_loop(&mut conn, None)
+    run_worker_loop(&mut conn, None, 0)
 }
 
 /// The `rpel shard-worker` entry for the socket transport: bind our own
-/// pull listener, dial the coordinator, identify with `PeerHello`, then
-/// speak the same request/reply protocol on the control connection while
-/// the listener serves peers' `PullRequest`s.
-pub fn run_worker_socket(connect: &str, worker: usize) -> Result<()> {
+/// pull listener, dial the coordinator, identify with `PeerHello`
+/// (echoing the `--incarnation` the supervisor spawned us under — a
+/// respawned worker's hello is rejected unless it matches), then speak
+/// the same request/reply protocol on the control connection while the
+/// listener serves peers' `PullRequest`s. A respawned worker re-binds
+/// the same `worker-{w}.sock` name ([`Listener::bind`] removes the dead
+/// incarnation's stale file first).
+pub fn run_worker_socket(connect: &str, worker: usize, incarnation: u32) -> Result<()> {
     let coord = SockAddr::parse(connect)
         .with_context(|| format!("shard worker {worker}: bad --connect address"))?;
     let listen_at = match &coord {
@@ -1225,25 +1736,38 @@ pub fn run_worker_socket(connect: &str, worker: usize) -> Result<()> {
     let listen = listener.local_addr()?;
     let mut conn = SocketTransport::connect(&coord)
         .with_context(|| format!("shard worker {worker}: connecting to coordinator at {coord}"))?;
-    conn.send(&proto::encode_peer_hello(worker as u32, &listen.to_string()))?;
-    run_worker_loop(&mut conn, Some(listener))
+    conn.send(&proto::encode_peer_hello(
+        worker as u32,
+        incarnation,
+        &listen.to_string(),
+    ))?;
+    run_worker_loop(&mut conn, Some(listener), incarnation)
 }
 
 /// The shared worker loop. `peer_listener` is `Some` on the socket
 /// transport, where the `Peers` address book is expected right after the
-/// `Init`/`InitOk` handshake and pull serving starts.
-fn run_worker_loop<T: Transport>(conn: &mut T, peer_listener: Option<Listener>) -> Result<()> {
+/// `Init`/`InitOk` handshake and pull serving starts. `incarnation` is
+/// nonzero when this process is a supervised respawn; its `Init` then
+/// carries the boundary state to resume from, and its first fetch
+/// hellos are absorbed from the byte ledgers (reconnects are recovery
+/// traffic, not round traffic).
+fn run_worker_loop<T: Transport>(
+    conn: &mut T,
+    peer_listener: Option<Listener>,
+    incarnation: u32,
+) -> Result<()> {
     let Some(first) = conn.recv_opt().context("shard worker: reading handshake")? else {
         return Ok(()); // closed before Init: nothing to do
     };
-    let (cfg, index, procs) =
+    let (cfg, index, procs, resume) =
         match proto::decode_to_worker(&first).context("shard worker: decoding handshake")? {
             ToWorker::Init {
                 config_toml,
                 worker,
                 procs,
+                resume,
             } => match config_file::from_toml_str(&config_toml) {
-                Ok(cfg) => (cfg, worker as usize, procs as usize),
+                Ok(cfg) => (cfg, worker as usize, procs as usize, resume),
                 Err(e) => {
                     let _ = conn.send(&proto::encode_failed(&format!("bad config: {e}")));
                     bail!("shard worker: bad config: {e}");
@@ -1258,6 +1782,10 @@ fn run_worker_loop<T: Transport>(conn: &mut T, peer_listener: Option<Listener>) 
             return Err(e);
         }
     };
+    if let Err(e) = state.install_resume(&resume) {
+        let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
+        return Err(e);
+    }
     conn.send(&proto::encode_init_ok(
         state.shard.start as u64,
         state.shard.shard_len() as u64,
@@ -1277,19 +1805,30 @@ fn run_worker_loop<T: Transport>(conn: &mut T, peer_listener: Option<Listener>) 
             return Ok(()); // torn down before the first round
         };
         match proto::decode_to_worker(&frame)? {
-            ToWorker::Peers { peers } => match build_peer_net(&state, index, &peers, listener) {
-                Ok(net) => peer_net = Some(net),
-                Err(e) => {
-                    let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
-                    return Err(e);
+            ToWorker::Peers { peers } => {
+                match build_peer_net(&state, index, incarnation, &peers, listener) {
+                    Ok(net) => peer_net = Some(net),
+                    Err(e) => {
+                        let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
+                        return Err(e);
+                    }
                 }
-            },
+            }
             other => bail!(
                 "shard worker: expected Peers after InitOk, got {}",
                 request_name(&other)
             ),
         }
     }
+
+    // Idempotent re-serve caches: a supervised re-drive of round t must
+    // not recompute — the data-RNG draw in `half_step` is the only
+    // hidden stream advance, and q8 encoding is not FP-idempotent — so a
+    // duplicate request is answered with the exact cached reply bytes
+    // (and the cached block republished to the RowServer for peers).
+    let mut served_half: Option<(u64, Vec<u8>)> = None;
+    let mut served_block: Option<EncodedRows> = None;
+    let mut served_done: Option<(u64, Vec<u8>)> = None;
 
     loop {
         let Some(frame) = conn.recv_opt()? else {
@@ -1298,11 +1837,44 @@ fn run_worker_loop<T: Transport>(conn: &mut T, peer_listener: Option<Listener>) 
         match proto::decode_to_worker(&frame)? {
             ToWorker::Shutdown => return Ok(()),
             ToWorker::Init { .. } => bail!("shard worker: duplicate Init"),
-            ToWorker::Peers { .. } if peer_net.is_some() => {
-                bail!("shard worker: duplicate Peers")
-            }
-            ToWorker::Peers { .. } => {
-                bail!("shard worker: Peers on the pipe transport (no pull listener)")
+            ToWorker::Peers { peers } => match &mut peer_net {
+                Some((_, client)) => {
+                    // recovery re-broadcast after a peer respawn: rebuild
+                    // the fetch client against the new address book (its
+                    // reconnect hellos are absorbed — recovery traffic),
+                    // keep the existing RowServer serving
+                    match make_peer_client(&state, index, incarnation, true, &peers) {
+                        Ok(new_client) => *client = new_client,
+                        Err(e) => {
+                            let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
+                            return Err(e);
+                        }
+                    }
+                }
+                None => bail!("shard worker: Peers on the pipe transport (no pull listener)"),
+            },
+            ToWorker::GetState { round } => {
+                // boundary-state sync / drain barrier: ship the committed
+                // state; the reply is also the last frame in flight, so
+                // the coordinator can re-align an aborted round behind it
+                let params: Vec<&[f32]> = state
+                    .shard
+                    .nodes
+                    .iter()
+                    .map(|n| n.params.as_slice())
+                    .collect();
+                let momentum: Vec<&[f32]> = state
+                    .shard
+                    .nodes
+                    .iter()
+                    .map(|n| n.momentum.as_slice())
+                    .collect();
+                conn.send(&proto::encode_state(
+                    round,
+                    &params,
+                    &momentum,
+                    &state.carried,
+                ))?;
             }
             ToWorker::AsyncRound { round, stale } => {
                 // fire-and-forget schedule ahead of HalfStep — no reply
@@ -1318,54 +1890,90 @@ fn run_worker_loop<T: Transport>(conn: &mut T, peer_listener: Option<Listener>) 
                 state.cur_stale = stale;
                 state.stale_round = Some(round);
             }
-            ToWorker::HalfStep { round } => match state.half_step(round as usize) {
-                Ok(()) => {
-                    // the half-step transform encoded the rows once; the
-                    // same cached block backs the Snapshot and every
-                    // PullReply served this round (None at `none`)
-                    let block = state.pending_block.take();
-                    let frame = match &block {
-                        Some(b) => proto::encode_snapshot_block(round, &state.losses, b),
-                        None => proto::encode_snapshot(round, &state.losses, &state.halves),
-                    };
-                    if let Some((server, _)) = &peer_net {
-                        // publish BEFORE the snapshot: the coordinator
-                        // only routes peers here after seeing it
-                        server.publish(round, &state.halves, block);
+            ToWorker::HalfStep { round } => {
+                if let Some((r, frame)) = &served_half {
+                    if *r == round {
+                        // re-drive of a round this incarnation already
+                        // computed: republish and replay the cached bytes
+                        if let Some((server, _)) = &peer_net {
+                            server.publish(round, &state.halves, served_block.clone());
+                        }
+                        let frame = frame.clone();
+                        conn.send(&frame)?;
+                        continue;
                     }
-                    conn.send(&frame)?;
                 }
-                Err(e) => {
-                    let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
-                    return Err(e);
+                match state.half_step(round as usize) {
+                    Ok(()) => {
+                        // the half-step transform encoded the rows once;
+                        // the same cached block backs the Snapshot and
+                        // every PullReply served this round (None at
+                        // `none`)
+                        let block = state.pending_block.take();
+                        let frame = match &block {
+                            Some(b) => proto::encode_snapshot_block(round, &state.losses, b),
+                            None => proto::encode_snapshot(round, &state.losses, &state.halves),
+                        };
+                        if let Some((server, _)) = &peer_net {
+                            // publish BEFORE the snapshot: the coordinator
+                            // only routes peers here after seeing it
+                            server.publish(round, &state.halves, block.clone());
+                        }
+                        conn.send(&frame)?;
+                        served_half = Some((round, frame));
+                        served_block = block;
+                    }
+                    Err(e) => {
+                        let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
+                        return Err(e);
+                    }
                 }
-            },
+            }
             ToWorker::Aggregate {
                 round,
                 digest,
                 halves,
-            } => match state.aggregate_commit(round as usize, digest, &halves) {
-                Ok(()) => {
-                    let byz: Vec<u32> = state.byz_seen.iter().map(|&x| x as u32).collect();
-                    let recv: Vec<u32> = state.received.iter().map(|&x| x as u32).collect();
-                    conn.send(&proto::encode_round_done(
-                        round,
-                        &byz,
-                        &recv,
-                        0,
-                        &state.params_scratch,
-                    ))?;
+            } => {
+                if let Some((r, frame)) = &served_done {
+                    if *r == round {
+                        let frame = frame.clone();
+                        conn.send(&frame)?;
+                        continue;
+                    }
                 }
-                Err(e) => {
-                    let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
-                    return Err(e);
+                match state.aggregate_commit(round as usize, digest, &halves) {
+                    Ok(()) => {
+                        let byz: Vec<u32> = state.byz_seen.iter().map(|&x| x as u32).collect();
+                        let recv: Vec<u32> = state.received.iter().map(|&x| x as u32).collect();
+                        let frame = proto::encode_round_done(
+                            round,
+                            &byz,
+                            &recv,
+                            0,
+                            0,
+                            &state.params_scratch,
+                        );
+                        conn.send(&frame)?;
+                        served_done = Some((round, frame));
+                    }
+                    Err(e) => {
+                        let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
+                        return Err(e);
+                    }
                 }
-            },
+            }
             ToWorker::AggregateRouted {
                 round,
                 digest,
                 routes,
             } => {
+                if let Some((r, frame)) = &served_done {
+                    if *r == round {
+                        let frame = frame.clone();
+                        conn.send(&frame)?;
+                        continue;
+                    }
+                }
                 let result = match &mut peer_net {
                     Some((_, client)) => {
                         state.aggregate_commit_routed(round as usize, digest, &routes, client)
@@ -1376,20 +1984,33 @@ fn run_worker_loop<T: Transport>(conn: &mut T, peer_listener: Option<Listener>) 
                 };
                 match result {
                     Ok(peer_bytes) => {
+                        let retries = match &mut peer_net {
+                            Some((_, client)) => client.take_retries(),
+                            None => 0,
+                        };
                         let byz: Vec<u32> = state.byz_seen.iter().map(|&x| x as u32).collect();
                         let recv: Vec<u32> =
                             state.received.iter().map(|&x| x as u32).collect();
-                        conn.send(&proto::encode_round_done(
+                        let frame = proto::encode_round_done(
                             round,
                             &byz,
                             &recv,
                             peer_bytes,
+                            retries,
                             &state.params_scratch,
-                        ))?;
+                        );
+                        conn.send(&frame)?;
+                        served_done = Some((round, frame));
                     }
                     Err(e) => {
-                        let _ = conn.send(&proto::encode_failed(&format!("{e:#}")));
-                        return Err(e);
+                        // A failed peer pull (the peer died) is
+                        // recoverable: nothing mutated before the fetch
+                        // phase completed, so report Failed and stay
+                        // alive — the supervisor's drain barrier
+                        // re-aligns this stream before the re-drive.
+                        // Without supervision the coordinator surfaces
+                        // the report and tears us down via Shutdown/EOF.
+                        conn.send(&proto::encode_failed(&format!("{e:#}")))?;
                     }
                 }
             }
@@ -1397,15 +2018,26 @@ fn run_worker_loop<T: Transport>(conn: &mut T, peer_listener: Option<Listener>) 
     }
 }
 
-/// Validate the coordinator's address book against the locally derived
-/// partition, then start serving.
-fn build_peer_net(
+/// Build the peer fetch client from the coordinator's address book,
+/// validating it against the locally derived partition. `absorb` marks
+/// every lazy connect's hello as non-ledger traffic — set on respawned
+/// incarnations and recovery rebuilds, whose reconnects have no
+/// unfaulted-run counterpart.
+fn make_peer_client(
     state: &WorkerShard,
     index: usize,
+    incarnation: u32,
+    absorb: bool,
     book: &[PeerEntry],
-    listener: Listener,
-) -> Result<(RowServer, PeerClient)> {
-    let client = PeerClient::new(index, book)?;
+) -> Result<PeerClient> {
+    let retry = RetryPolicy {
+        attempts: state.cfg.recovery.retry_attempts,
+        backoff_ms: state.cfg.recovery.retry_backoff_ms,
+    };
+    let mut client = PeerClient::new(index, incarnation, retry, book)?;
+    if absorb {
+        client.set_absorb_hellos(true);
+    }
     ensure!(
         index < client.peer_count(),
         "peer book has {} entries, but this is worker {index}",
@@ -1419,6 +2051,19 @@ fn build_peer_net(
         state.shard.start,
         state.shard.shard_len()
     );
+    Ok(client)
+}
+
+/// Validate the coordinator's address book against the locally derived
+/// partition, then start serving.
+fn build_peer_net(
+    state: &WorkerShard,
+    index: usize,
+    incarnation: u32,
+    book: &[PeerEntry],
+    listener: Listener,
+) -> Result<(RowServer, PeerClient)> {
+    let client = make_peer_client(state, index, incarnation, incarnation > 0, book)?;
     let server = RowServer::spawn(
         listener,
         index,

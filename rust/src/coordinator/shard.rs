@@ -221,6 +221,18 @@ pub(crate) trait ShardBackend: Send {
     fn take_codec_bytes(&mut self) -> (u64, u64) {
         (0, 0)
     }
+    /// Drain the worker-side peer-pull retry counter accumulated since
+    /// the last call (routed socket backends only; zero elsewhere). Fed
+    /// by `RoundDone.retries` into the `peer_retries_per_round` ledger.
+    fn take_retries(&mut self) -> u32 {
+        0
+    }
+    /// Downcast to the multi-process backend, when this backend is one.
+    /// The recovery supervisor uses it to probe worker liveness, sync
+    /// the boundary-state mirror, and respawn crashed workers.
+    fn as_process(&mut self) -> Option<&mut super::proc::ProcessShard> {
+        None
+    }
     /// Test hook: forcibly kill the backing worker process (remote
     /// backends only; returns false for in-process shards).
     fn kill_for_test(&mut self) -> bool {
@@ -579,6 +591,37 @@ pub(crate) fn run_agg_jobs(
 }
 
 impl NodeShard {
+    /// Resume support: overwrite every owned node's state with
+    /// checkpointed rows, then replay the data-RNG cursor through the
+    /// first `rounds` rounds. The batch stream is the only hidden
+    /// per-node state a checkpoint does not carry; each round in which
+    /// the node was active consumed exactly one `next_batches` call, so
+    /// re-drawing (and discarding) those batches leaves the cursor
+    /// bit-identical to a straight-through run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn install_resume(
+        &mut self,
+        params: &[Vec<f32>],
+        momentum: &[Vec<f32>],
+        rounds: u64,
+        seed: u64,
+        participation: f64,
+        local_steps: usize,
+        batch: usize,
+    ) {
+        debug_assert_eq!(params.len(), self.nodes.len());
+        debug_assert_eq!(momentum.len(), self.nodes.len());
+        for (node, (p, m)) in self.nodes.iter_mut().zip(params.iter().zip(momentum)) {
+            node.params.copy_from_slice(p);
+            node.momentum.copy_from_slice(m);
+            for t in 0..rounds {
+                if super::vnode::is_active(seed, t as usize, node.id, participation) {
+                    let _ = node.shard.next_batches(local_steps, batch);
+                }
+            }
+        }
+    }
+
     /// Phase 5: synchronous swap — commit the aggregated next models and
     /// refresh the coordinator's committed-params mirror rows.
     pub fn commit_into(&mut self, params_out: &mut [Vec<f32>]) {

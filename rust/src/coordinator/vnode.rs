@@ -299,6 +299,81 @@ impl VirtualShard {
         &self.live
     }
 
+    /// Export the full committed state for a round-boundary checkpoint:
+    /// per-node committed params (materialized from the recipe), parked
+    /// momentum (zeros for never-active nodes — bit-identical to what
+    /// `materialize` would hand out), and the async carried rows. The
+    /// data shards' cursor/RNG state is deliberately NOT exported: it is
+    /// a pure function of `(seeds, active-round history)` and
+    /// [`VirtualShard::install_resume`] replays it.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn export_state(&self) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Option<Vec<f32>>>) {
+        let params: Vec<Vec<f32>> = (0..self.h).map(|hi| self.committed_row(hi)).collect();
+        let momentum: Vec<Vec<f32>> = (0..self.h)
+            .map(|hi| match &self.momentum[hi] {
+                Some(m) => m.to_vec(),
+                None => vec![0.0f32; self.d],
+            })
+            .collect();
+        (params, momentum, self.carried.to_vec())
+    }
+
+    /// Restore a checkpointed boundary: install committed params (as the
+    /// node's arena row when the bits moved off the shared init row),
+    /// parked momentum (collapsed back to "never active" when all bits
+    /// are +0.0 — `materialize` hands out the same zeros either way),
+    /// and carried rows; then replay each node's data-shard history —
+    /// first-touch sample plus one `next_batches` draw per active round
+    /// in `0..rounds` — so batch cursors land exactly where the
+    /// straight-through run left them. Never-active nodes stay pure
+    /// recipe: no arena row, no shard, zero resident cost.
+    pub(crate) fn install_resume(
+        &mut self,
+        params: &[Vec<f32>],
+        momentum: &[Vec<f32>],
+        carried: &[Option<Vec<f32>>],
+        rounds: u64,
+        local_steps: usize,
+        batch: usize,
+    ) {
+        debug_assert_eq!(params.len(), self.h);
+        debug_assert_eq!(momentum.len(), self.h);
+        debug_assert_eq!(carried.len(), self.h);
+        for hi in 0..self.h {
+            let bits: Vec<u32> = params[hi].iter().map(|x| x.to_bits()).collect();
+            self.logs[hi].clear();
+            self.base[hi] = if bits == self.init_bits {
+                None
+            } else {
+                Some(bits.into_boxed_slice())
+            };
+            self.momentum[hi] = if momentum[hi].iter().all(|x| x.to_bits() == 0) {
+                None
+            } else {
+                Some(momentum[hi].clone().into_boxed_slice())
+            };
+            self.carried[hi] = carried[hi].clone();
+            let active_rounds: Vec<u64> = (0..rounds)
+                .filter(|&t| {
+                    is_active(self.seed, t as usize, self.seeds.ids[hi], self.participation)
+                })
+                .collect();
+            self.shards[hi] = if active_rounds.is_empty() {
+                None
+            } else {
+                let labels: Vec<i32> =
+                    self.seeds.labels_of(hi).iter().map(|&c| c as i32).collect();
+                let mut drng = self.seeds.data_rngs[hi].clone();
+                let data = self.seeds.task.sample_labels(&labels, &mut drng);
+                let mut shard = Shard::new(data, self.seeds.node_rngs[hi].clone());
+                for _ in &active_rounds {
+                    let _ = shard.next_batches(local_steps, batch);
+                }
+                Some(shard)
+            };
+        }
+    }
+
     /// Resident-byte accounting plus the round's active/materialized
     /// counts. Honest about every store the backend holds onto; the
     /// trainer adds the round-table rows it owns itself.

@@ -6,7 +6,7 @@
 
 use crate::config::presets::{EafScenario, Figure, FigureSeries, Scale};
 use crate::config::{EngineKind, ExperimentConfig, TransportKind};
-use crate::coordinator::Trainer;
+use crate::coordinator::{checkpoint, Trainer};
 use crate::metrics::{write_histories, History};
 use crate::sampling::EafSimulator;
 use crate::util::rng::Rng;
@@ -40,6 +40,29 @@ pub fn run_training(cfg: &ExperimentConfig) -> Result<History> {
     let hist = trainer
         .run()
         .with_context(|| format!("running '{}'", cfg.name))?;
+    println!("  {}", hist.report_line());
+    Ok(hist)
+}
+
+/// Resume a checkpointed run (`rpel train --resume DIR`): load the
+/// durable checkpoint, rebuild the world from its embedded config,
+/// install the boundary state, and continue the round loop from the
+/// boundary. The returned history is bit-identical to the
+/// straight-through run's on every trajectory ledger (`wall_secs` and
+/// `checkpoint_bytes_per_round` are reporting-only and excluded from
+/// that guarantee).
+pub fn resume_training(dir: &str) -> Result<History> {
+    let resumed = checkpoint::read_checkpoint(std::path::Path::new(dir))?;
+    let boundary = resumed.state.round as usize;
+    println!(
+        "  resuming '{}' from round {boundary}/{} ({dir})",
+        resumed.cfg.name, resumed.cfg.rounds
+    );
+    let mut trainer = Trainer::from_config_with_resume(&resumed.cfg, Some(&resumed.state))
+        .with_context(|| format!("rebuilding '{}' from {dir}", resumed.cfg.name))?;
+    let hist = trainer
+        .run_from(resumed.hist, boundary)
+        .with_context(|| format!("resuming '{}'", resumed.cfg.name))?;
     println!("  {}", hist.report_line());
     Ok(hist)
 }

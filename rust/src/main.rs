@@ -48,6 +48,16 @@ USAGE:
               [--virtual-nodes]    (sparse backend: committed state as
                 seed + delta log, lazy per-round materialization;
                 procs = 1, epidemic pull only)
+              [--checkpoint-dir DIR]  (durable round checkpoints: atomic
+                checksummed boundary snapshots; resume is bit-identical
+                to the straight-through run)
+              [--checkpoint-every K]  (checkpoint cadence in rounds;
+                default 1)
+              [--max-worker-restarts N]  (supervised worker respawn
+                budget per worker, procs > 1; 0 = crashes are fatal)
+  rpel train  --resume <checkpoint-dir>   [--out results]
+              (continue a checkpointed run; the config is embedded in
+               the checkpoint, so no --config/--preset is needed)
   rpel figure --id <fig1L|fig1R|...|fig21|all> [--scale tiny|paper]
               [--engine hlo|native] [--out results] [--threads N] [--shards N]
               [--procs N] [--transport pipe|socket|tcp]
@@ -139,7 +149,18 @@ fn cmd_train(args: &Args) -> CmdResult {
         "down-rounds",
         "participation",
         "virtual-nodes",
+        "checkpoint-dir",
+        "checkpoint-every",
+        "max-worker-restarts",
+        "resume",
     ])?;
+    if let Some(dir) = args.get("resume") {
+        let hist = experiments::resume_training(dir)?;
+        let out = args.get_or("out", "results");
+        let paths = write_histories(&format!("{out}/train"), &[hist])?;
+        println!("wrote {}", paths.join(", "));
+        return Ok(());
+    }
     let mut cfg = if let Some(path) = args.get("config") {
         config_file::load(path)?
     } else if let Some(preset) = args.get("preset") {
@@ -193,6 +214,22 @@ fn cmd_train(args: &Args) -> CmdResult {
             .ok_or_else(|| format!("unknown compression '{c}' (none|f16|q8)"))?;
     }
     apply_async_flags(args, &mut cfg)?;
+    let mut recovery_touched = false;
+    if let Some(dir) = args.get("checkpoint-dir") {
+        cfg.recovery.checkpoint_dir = dir.to_string();
+        recovery_touched = true;
+    }
+    if let Some(k) = args.get_usize("checkpoint-every")? {
+        cfg.recovery.checkpoint_every = k;
+        recovery_touched = true;
+    }
+    if let Some(n) = args.get_usize("max-worker-restarts")? {
+        cfg.recovery.max_worker_restarts = n;
+        recovery_touched = true;
+    }
+    if recovery_touched {
+        cfg.validate()?;
+    }
     let mut sparse_touched = false;
     if let Some(p) = args.get_f64("participation")? {
         cfg.participation = p;
@@ -465,7 +502,7 @@ fn cmd_lint(args: &Args) -> CmdResult {
 /// sequence diagrams. Spawned by `Trainer` when `--procs N > 1`; not
 /// intended for manual use.
 fn cmd_shard_worker(args: &Args) -> CmdResult {
-    args.check_known(&["transport", "connect", "worker"])?;
+    args.check_known(&["transport", "connect", "worker", "incarnation"])?;
     let result = match args.get_or("transport", "pipe") {
         "pipe" => rpel::coordinator::proc::run_worker(std::io::stdin(), std::io::stdout()),
         "socket" | "tcp" => {
@@ -475,7 +512,10 @@ fn cmd_shard_worker(args: &Args) -> CmdResult {
             let worker = args
                 .get_usize("worker")?
                 .ok_or("shard-worker --transport socket needs --worker")?;
-            rpel::coordinator::proc::run_worker_socket(connect, worker)
+            // respawned workers carry their restart generation so the
+            // coordinator can tell a fresh hello from a stale one
+            let incarnation = args.get_usize("incarnation")?.unwrap_or(0) as u32;
+            rpel::coordinator::proc::run_worker_socket(connect, worker, incarnation)
         }
         other => return Err(format!("unknown shard-worker transport '{other}'").into()),
     };

@@ -5,7 +5,7 @@ use crate::util::json::Json;
 use std::collections::BTreeMap;
 
 /// One evaluation snapshot.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct EvalPoint {
     pub round: usize,
     /// mean test accuracy over honest nodes
@@ -17,7 +17,7 @@ pub struct EvalPoint {
 }
 
 /// Full history of one training run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct History {
     pub name: String,
     /// mean honest training loss per round
@@ -89,6 +89,18 @@ pub struct History {
     pub active_per_round: Vec<u32>,
     pub materialized_per_round: Vec<u32>,
     pub resident_bytes_per_round: Vec<u64>,
+    /// Crash-recovery ledgers (populated only when the `[recovery]`
+    /// machinery acts; all zeros on an unfaulted run). Per round: shard
+    /// workers respawned by the supervisor, extra peer-pull/dial attempts
+    /// consumed by the deterministic retry policy (0 = every pull
+    /// succeeded first try), and bytes of the durable checkpoint written
+    /// after the round (0 = no checkpoint this round). Recovery traffic
+    /// is deliberately *not* folded into the wire ledgers above — those
+    /// stay byte-exact against their routing-table recomputation; these
+    /// measure the recovery tax separately.
+    pub worker_restarts_per_round: Vec<u32>,
+    pub peer_retries_per_round: Vec<u32>,
+    pub checkpoint_bytes_per_round: Vec<u64>,
     /// wall-clock seconds of the run (perf bookkeeping)
     pub wall_secs: f64,
 }
@@ -252,6 +264,33 @@ impl History {
                     .collect(),
             ),
         );
+        obj.insert(
+            "worker_restarts_per_round".into(),
+            Json::Arr(
+                self.worker_restarts_per_round
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "peer_retries_per_round".into(),
+            Json::Arr(
+                self.peer_retries_per_round
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "checkpoint_bytes_per_round".into(),
+            Json::Arr(
+                self.checkpoint_bytes_per_round
+                    .iter()
+                    .map(|&x| Json::Num(x as f64))
+                    .collect(),
+            ),
+        );
         obj.insert("wall_secs".into(), Json::Num(self.wall_secs));
         obj.insert(
             "train_loss".into(),
@@ -274,6 +313,89 @@ impl History {
             ),
         );
         Json::Obj(obj)
+    }
+
+    /// Serialize every field except `wall_secs` into a wire payload for
+    /// the durable checkpoint (see [`crate::coordinator::checkpoint`]).
+    /// `wall_secs` is the one field that is *not* a deterministic
+    /// function of the run — resume-vs-straight-through bit-equality is
+    /// defined over everything else, so the clock reading stays out of
+    /// the durable state entirely (a resumed run reports its own).
+    pub fn encode_wire(&self, w: &mut crate::wire::Writer) {
+        w.put_str(&self.name);
+        w.put_f64s(&self.train_loss);
+        let byz: Vec<u64> = self.observed_byz_max.iter().map(|&x| x as u64).collect();
+        w.put_u64s(&byz);
+        w.put_u32(self.evals.len() as u32);
+        for e in &self.evals {
+            w.put_u64(e.round as u64);
+            w.put_f64(e.avg_acc);
+            w.put_f64(e.worst_acc);
+            w.put_f64(e.avg_loss);
+        }
+        w.put_u64(self.messages_per_round as u64);
+        w.put_u64(self.total_messages as u64);
+        let delivered: Vec<u64> = self.delivered_per_round.iter().map(|&x| x as u64).collect();
+        w.put_u64s(&delivered);
+        w.put_u64(self.total_delivered as u64);
+        for ledger in [
+            &self.wire_coord_out_per_round,
+            &self.wire_coord_in_per_round,
+            &self.wire_peer_per_round,
+        ] {
+            let xs: Vec<u64> = ledger.iter().map(|&x| x as u64).collect();
+            w.put_u64s(&xs);
+        }
+        w.put_u64s(&self.wire_raw_bytes_per_round);
+        w.put_u64s(&self.wire_encoded_bytes_per_round);
+        w.put_u32s(&self.participation_per_round);
+        w.put_f64s(&self.virtual_close_per_round);
+        w.put_u64s(&self.staleness_hist);
+        w.put_u32s(&self.active_per_round);
+        w.put_u32s(&self.materialized_per_round);
+        w.put_u64s(&self.resident_bytes_per_round);
+        w.put_u32s(&self.worker_restarts_per_round);
+        w.put_u32s(&self.peer_retries_per_round);
+        w.put_u64s(&self.checkpoint_bytes_per_round);
+    }
+
+    /// Inverse of [`History::encode_wire`]; the decoded history has
+    /// `wall_secs = 0`.
+    pub fn decode_wire(r: &mut crate::wire::Reader) -> anyhow::Result<History> {
+        let mut h = History {
+            name: r.string()?,
+            train_loss: r.f64s()?,
+            ..Default::default()
+        };
+        h.observed_byz_max = r.u64s()?.into_iter().map(|x| x as usize).collect();
+        let n_evals = r.u32()? as usize;
+        for _ in 0..n_evals {
+            h.evals.push(EvalPoint {
+                round: r.u64()? as usize,
+                avg_acc: r.f64()?,
+                worst_acc: r.f64()?,
+                avg_loss: r.f64()?,
+            });
+        }
+        h.messages_per_round = r.u64()? as usize;
+        h.total_messages = r.u64()? as usize;
+        h.delivered_per_round = r.u64s()?.into_iter().map(|x| x as usize).collect();
+        h.total_delivered = r.u64()? as usize;
+        h.wire_coord_out_per_round = r.u64s()?.into_iter().map(|x| x as usize).collect();
+        h.wire_coord_in_per_round = r.u64s()?.into_iter().map(|x| x as usize).collect();
+        h.wire_peer_per_round = r.u64s()?.into_iter().map(|x| x as usize).collect();
+        h.wire_raw_bytes_per_round = r.u64s()?;
+        h.wire_encoded_bytes_per_round = r.u64s()?;
+        h.participation_per_round = r.u32s()?;
+        h.virtual_close_per_round = r.f64s()?;
+        h.staleness_hist = r.u64s()?;
+        h.active_per_round = r.u32s()?;
+        h.materialized_per_round = r.u32s()?;
+        h.resident_bytes_per_round = r.u64s()?;
+        h.worker_restarts_per_round = r.u32s()?;
+        h.peer_retries_per_round = r.u32s()?;
+        h.checkpoint_bytes_per_round = r.u64s()?;
+        Ok(h)
     }
 
     /// One line in the paper-style series report. A history with no
@@ -492,6 +614,70 @@ mod tests {
                 .unwrap(),
             4096.0
         );
+    }
+
+    #[test]
+    fn recovery_ledgers_exported() {
+        let mut h = sample();
+        h.worker_restarts_per_round = vec![0, 1, 0];
+        h.peer_retries_per_round = vec![0, 2, 0];
+        h.checkpoint_bytes_per_round = vec![0, 8192, 0];
+        let parsed = crate::util::json::parse(&h.to_json().to_string_compact()).unwrap();
+        assert_eq!(
+            parsed
+                .get("worker_restarts_per_round")
+                .unwrap()
+                .as_arr()
+                .unwrap()[1]
+                .as_f64()
+                .unwrap(),
+            1.0
+        );
+        assert_eq!(
+            parsed.get("peer_retries_per_round").unwrap().as_arr().unwrap()[1]
+                .as_f64()
+                .unwrap(),
+            2.0
+        );
+        assert_eq!(
+            parsed
+                .get("checkpoint_bytes_per_round")
+                .unwrap()
+                .as_arr()
+                .unwrap()[1]
+                .as_f64()
+                .unwrap(),
+            8192.0
+        );
+    }
+
+    #[test]
+    fn wire_serde_round_trips_everything_but_wall_secs() {
+        let mut h = sample();
+        h.observed_byz_max = vec![2, 3, 1];
+        h.wire_coord_out_per_round = vec![640, 640, 640];
+        h.wire_raw_bytes_per_round = vec![4000, 4000, 4000];
+        h.wire_encoded_bytes_per_round = vec![1004, 1004, 1004];
+        h.participation_per_round = vec![6, 7, 5];
+        h.virtual_close_per_round = vec![1.0, 4.0, 1.0];
+        h.staleness_hist = vec![18, 2, 1];
+        h.active_per_round = vec![4, 6, 5];
+        h.resident_bytes_per_round = vec![4096, 5120, 5120];
+        h.worker_restarts_per_round = vec![0, 1, 0];
+        h.peer_retries_per_round = vec![0, 2, 0];
+        h.checkpoint_bytes_per_round = vec![0, 8192, 0];
+        h.wall_secs = 12.5;
+        let mut w = crate::wire::Writer::new();
+        h.encode_wire(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::wire::Reader::new(&bytes);
+        let back = History::decode_wire(&mut r).unwrap();
+        r.finish().unwrap();
+        // wall_secs is deliberately not durable state
+        assert_eq!(back.wall_secs, 0.0);
+        let mut want = h.clone();
+        want.wall_secs = 0.0;
+        assert_eq!(back, want);
     }
 
     #[test]

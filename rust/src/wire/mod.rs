@@ -1,5 +1,5 @@
 //! Length-prefixed binary wire format for the multi-process shard engine
-//! (protocol **v4**).
+//! (protocol **v5**).
 //!
 //! The coordinator and its `rpel shard-worker` processes exchange frames
 //! of `[u32 LE length][payload]` over a [`transport::Transport`] — the
@@ -17,7 +17,7 @@
 //! `rust/tests/wire_roundtrip.rs` and the (transport × procs × shards ×
 //! threads) grid in `rust/tests/determinism.rs`.
 //!
-//! ## v4 frame layout
+//! ## v5 frame layout
 //!
 //! Every frame is `[u32 LE length][u8 tag][body]`; handshake frames
 //! (`Init` `0x01`, `InitOk` `0x81`, `PeerHello` `0x40`) carry
@@ -167,6 +167,27 @@ impl Writer {
         }
     }
 
+    /// `u32` count + per-element LE `u64`s (checkpoint ledgers, vclock
+    /// state).
+    pub fn put_u64s(&mut self, v: &[u64]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_u64(x);
+        }
+    }
+
+    /// Sparse f32 row set: `[u32 n][n · u8 present][f32 row block of the
+    /// present rows]`. Carries per-node optional state (async carry rows,
+    /// virtual-node momentum) where absent ≠ all-zeros.
+    pub fn put_opt_f32_rows(&mut self, rows: &[Option<Vec<f32>>]) {
+        self.put_u32(rows.len() as u32);
+        for row in rows {
+            self.put_u8(row.is_some() as u8);
+        }
+        let present: Vec<&[f32]> = rows.iter().flatten().map(|r| r.as_slice()).collect();
+        self.put_f32_rows(&present);
+    }
+
     /// Rectangular f32 row block: `[u32 rows][u32 d][rows·d f32]`.
     /// Every row must have the same length.
     pub fn put_f32_rows<R: AsRef<[f32]>>(&mut self, rows: &[R]) {
@@ -259,6 +280,38 @@ impl<'a> Reader<'a> {
                     b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
                 ]))
             })
+            .collect())
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(8).context("wire: u64 count overflow")?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|b| {
+                u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+            })
+            .collect())
+    }
+
+    /// Inverse of [`Writer::put_opt_f32_rows`]. The presence flags are
+    /// bounds-checked before allocation and must agree with the row count
+    /// of the trailing block.
+    pub fn opt_f32_rows(&mut self) -> Result<Vec<Option<Vec<f32>>>> {
+        let n = self.u32()? as usize;
+        let flags = self.take(n)?.to_vec();
+        let present = self.f32_rows()?;
+        let want = flags.iter().filter(|&&f| f != 0).count();
+        if present.len() != want {
+            bail!(
+                "wire: sparse row set carries {} rows but flags mark {want} present",
+                present.len()
+            );
+        }
+        let mut rows = present.into_iter();
+        Ok(flags
+            .into_iter()
+            .map(|f| if f != 0 { rows.next() } else { None })
             .collect())
     }
 

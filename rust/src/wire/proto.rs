@@ -10,7 +10,9 @@
 //! Init                     InitOk | Failed        (handshake, once; both
 //!                                                  directions carry and
 //!                                                  verify PROTOCOL_VERSION
-//!                                                  = 4 before anything else)
+//!                                                  = 5 before anything else;
+//!                                                  Init may carry a resume
+//!                                                  payload — see below)
 //! HalfStep{round}          Snapshot{losses,halves}  (phase 1: the shipped
 //!                                                    RoundDigest payload;
 //!                                                    rows at the configured
@@ -19,6 +21,11 @@
 //!   digest, halves}          peer_bytes, params}  (phases 3–5; both row
 //!                                                  blocks always raw f32)
 //! Shutdown (or EOF)        —                      (worker exits 0)
+//! GetState{round}          State{params, momentum,
+//!                            carried}             (recovery state sync; sent
+//!                                                  only when checkpointing
+//!                                                  or restart supervision
+//!                                                  is live)
 //! ```
 //!
 //! On the **socket** transport each worker additionally binds its own
@@ -29,9 +36,11 @@
 //! ```text
 //! worker → coordinator      coordinator → worker     worker w → worker v
 //! --------------------      ------------------       -------------------
-//! PeerHello{worker,listen}                           (control connect;
-//!                                                     version-checked, v4)
-//!                           Init                     (version-checked, v4)
+//! PeerHello{worker,                                  (control connect;
+//!   incarnation, listen}                              version-checked, v5;
+//!                                                     incarnation > 0 marks
+//!                                                     a supervised respawn)
+//!                           Init                     (version-checked, v5)
 //! InitOk | Failed
 //!                           Peers{start,len,addr}*   (the address book)
 //!                           HalfStep{round}
@@ -82,7 +91,15 @@ use anyhow::{bail, Result};
 /// at the configured `[wire] compression` level (`none`/`f16`/`q8`,
 /// ambient from the `Init` config; see [`super::codec`]). At `none`
 /// every frame is byte-identical to v3 except this version field.
-pub const PROTOCOL_VERSION: u32 = 4;
+/// v5: crash recovery — `Init` carries a resume payload (`resume_round`
+/// + the shard's committed params/momentum/carried rows + the
+/// compression delta reference; all empty on a fresh start), `PeerHello`
+/// carries the worker's incarnation number (0 = first spawn) so stale
+/// peers are identified after a supervised respawn, `RoundDone` reports
+/// the peer-pull retry count, and the `GetState`/`State` pair syncs
+/// worker state to the coordinator for durable checkpoints and restart
+/// mirrors. See [`crate::coordinator::checkpoint`].
+pub const PROTOCOL_VERSION: u32 = 5;
 
 mod tag {
     pub const INIT: u8 = 0x01;
@@ -92,6 +109,7 @@ mod tag {
     pub const PEERS: u8 = 0x05;
     pub const AGGREGATE_ROUTED: u8 = 0x06;
     pub const ASYNC_ROUND: u8 = 0x07;
+    pub const GET_STATE: u8 = 0x08;
     pub const PEER_HELLO: u8 = 0x40;
     pub const PULL_REQUEST: u8 = 0x41;
     pub const PULL_REPLY: u8 = 0x42;
@@ -99,18 +117,87 @@ mod tag {
     pub const INIT_OK: u8 = 0x81;
     pub const SNAPSHOT: u8 = 0x82;
     pub const ROUND_DONE: u8 = 0x83;
+    pub const STATE: u8 = 0x84;
     pub const FAILED: u8 = 0xFF;
+}
+
+/// The resume payload an `Init` may carry (v5): the boundary state a
+/// respawned or checkpoint-resumed worker installs before its first
+/// round. `round` is the number of *completed* rounds; the worker
+/// replays its data-RNG cursor deterministically through rounds
+/// `0..round` (one `next_batches` per PARTICIPATE-active round — the
+/// only stateful draw on the shard path), so nothing about the RNG needs
+/// to travel. The default value (`round = 0`, everything empty) is a
+/// fresh start and costs a handful of bytes on the wire.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireResume {
+    /// Rounds completed at the boundary this state captures.
+    pub round: u64,
+    /// Compression delta reference (previous round's digest mean as f32);
+    /// empty at `compression = none` or round 0.
+    pub wire_ref: Vec<f32>,
+    /// Committed params rows for the shard's honest range, ascending.
+    pub params: Vec<Vec<f32>>,
+    /// Momentum rows, same shape as `params`. Momentum is the one piece
+    /// of worker state the coordinator cannot recompute, which is why it
+    /// travels here and in `State`.
+    pub momentum: Vec<Vec<f32>>,
+    /// Async carry rows (`None` = nothing carried for that node).
+    pub carried: Vec<Option<Vec<f32>>>,
+}
+
+impl WireResume {
+    /// True for the default payload: a fresh (non-resumed) start.
+    pub fn is_fresh(&self) -> bool {
+        self.round == 0 && self.params.is_empty()
+    }
+}
+
+fn put_resume(w: &mut Writer, res: &WireResume) {
+    w.put_u64(res.round);
+    w.put_u32(res.wire_ref.len() as u32);
+    for &x in &res.wire_ref {
+        w.put_f32(x);
+    }
+    w.put_f32_rows(&res.params);
+    w.put_f32_rows(&res.momentum);
+    w.put_opt_f32_rows(&res.carried);
+}
+
+fn read_resume(r: &mut Reader<'_>) -> Result<WireResume> {
+    let round = r.u64()?;
+    let n = r.u32()? as usize;
+    if n > r.remaining() / 4 {
+        bail!(
+            "wire: resume reference claims {n} coords with only {} bytes left",
+            r.remaining()
+        );
+    }
+    let mut wire_ref = Vec::with_capacity(n);
+    for _ in 0..n {
+        wire_ref.push(r.f32()?);
+    }
+    Ok(WireResume {
+        round,
+        wire_ref,
+        params: r.f32_rows()?,
+        momentum: r.f32_rows()?,
+        carried: r.opt_f32_rows()?,
+    })
 }
 
 /// Coordinator → worker.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ToWorker {
     /// Handshake: the full experiment config (TOML text), this worker's
-    /// index, and the total process-shard count it partitions against.
+    /// index, the total process-shard count it partitions against, and
+    /// the resume payload (fresh default on a first spawn; the boundary
+    /// state to install on a checkpoint resume or supervised respawn).
     Init {
         config_toml: String,
         worker: u32,
         procs: u32,
+        resume: WireResume,
     },
     /// Run phase 1 (local half-steps) for round `round`.
     HalfStep { round: u64 },
@@ -145,6 +232,13 @@ pub enum ToWorker {
         digest: WireDigest,
         routes: Vec<Vec<u32>>,
     },
+    /// Recovery state sync: report the boundary state after `round`
+    /// completed rounds (checkpointing / restart supervision only). The
+    /// worker answers with `State` from its current committed state;
+    /// any earlier queued reply frames precede it on the stream, which
+    /// is what lets the coordinator use the exchange as a drain barrier
+    /// before re-driving a failed round.
+    GetState { round: u64 },
     /// Orderly exit (EOF on stdin means the same).
     Shutdown,
 }
@@ -166,8 +260,15 @@ pub enum PeerMsg {
     /// Connection opener, both on the coordinator control socket and on
     /// peer pull connections: identifies the dialing worker (and, on the
     /// control socket, the listener address it serves pulls on).
-    /// Version-checked like `Init`.
-    Hello { worker: u32, listen: String },
+    /// Version-checked like `Init`. `incarnation` counts supervised
+    /// respawns of the worker (0 = first spawn): the coordinator's
+    /// respawn accept verifies it, so a zombie from a previous
+    /// incarnation can never complete the handshake.
+    Hello {
+        worker: u32,
+        incarnation: u32,
+        listen: String,
+    },
     /// Fetch the given honest rows (global honest indices, owned by the
     /// serving worker) of round `round`'s half-step table.
     PullRequest { round: u64, rows: Vec<u32> },
@@ -203,9 +304,26 @@ pub enum FromWorker {
         byz_seen: Vec<u32>,
         received: Vec<u32>,
         peer_bytes: u64,
+        /// Extra peer-pull/dial attempts the retry policy consumed this
+        /// round (0 = every pull succeeded first try) — the worker-side
+        /// half of the `peer_retries_per_round` ledger.
+        retries: u32,
         params: Vec<Vec<f32>>,
     },
-    /// Terminal worker-side error, shipped before exiting.
+    /// Recovery state sync reply (see [`ToWorker::GetState`]): the
+    /// worker's boundary state after `round` completed rounds, in the
+    /// same shape as [`WireResume`] minus the delta reference (the
+    /// coordinator owns the digest and derives it).
+    State {
+        round: u64,
+        params: Vec<Vec<f32>>,
+        momentum: Vec<Vec<f32>>,
+        carried: Vec<Option<Vec<f32>>>,
+    },
+    /// Terminal worker-side error, shipped before exiting. Not always
+    /// fatal to the *run*: the supervisor treats a `Failed` during the
+    /// aggregate phase as a round abort and re-drives the round if the
+    /// restart budget allows.
     Failed { message: String },
 }
 
@@ -259,13 +377,36 @@ fn read_digest(r: &mut Reader<'_>) -> Result<WireDigest> {
 // the enum encoders below delegate to these).
 // ---------------------------------------------------------------------------
 
-pub fn encode_init(config_toml: &str, worker: u32, procs: u32) -> Vec<u8> {
+pub fn encode_init(config_toml: &str, worker: u32, procs: u32, resume: &WireResume) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_u8(tag::INIT);
     w.put_u32(PROTOCOL_VERSION);
     w.put_u32(worker);
     w.put_u32(procs);
     w.put_str(config_toml);
+    put_resume(&mut w, resume);
+    w.into_bytes()
+}
+
+pub fn encode_get_state(round: u64) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::GET_STATE);
+    w.put_u64(round);
+    w.into_bytes()
+}
+
+pub fn encode_state<R: AsRef<[f32]>>(
+    round: u64,
+    params: &[R],
+    momentum: &[R],
+    carried: &[Option<Vec<f32>>],
+) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(tag::STATE);
+    w.put_u64(round);
+    w.put_f32_rows(params);
+    w.put_f32_rows(momentum);
+    w.put_opt_f32_rows(carried);
     w.into_bytes()
 }
 
@@ -354,6 +495,7 @@ pub fn encode_round_done<R: AsRef<[f32]>>(
     byz_seen: &[u32],
     received: &[u32],
     peer_bytes: u64,
+    retries: u32,
     params: &[R],
 ) -> Vec<u8> {
     let mut w = Writer::new();
@@ -362,6 +504,7 @@ pub fn encode_round_done<R: AsRef<[f32]>>(
     w.put_u32s(byz_seen);
     w.put_u32s(received);
     w.put_u64(peer_bytes);
+    w.put_u32(retries);
     w.put_f32_rows(params);
     w.into_bytes()
 }
@@ -426,11 +569,12 @@ pub fn encode_aggregate_routed(
 
 // --- peer protocol (worker ↔ worker pull serving) --------------------------
 
-pub fn encode_peer_hello(worker: u32, listen: &str) -> Vec<u8> {
+pub fn encode_peer_hello(worker: u32, incarnation: u32, listen: &str) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_u8(tag::PEER_HELLO);
     w.put_u32(PROTOCOL_VERSION);
     w.put_u32(worker);
+    w.put_u32(incarnation);
     w.put_str(listen);
     w.into_bytes()
 }
@@ -460,7 +604,11 @@ pub fn encode_peer_deny(message: &str) -> Vec<u8> {
 
 pub fn encode_peer(msg: &PeerMsg) -> Vec<u8> {
     match msg {
-        PeerMsg::Hello { worker, listen } => encode_peer_hello(*worker, listen),
+        PeerMsg::Hello {
+            worker,
+            incarnation,
+            listen,
+        } => encode_peer_hello(*worker, *incarnation, listen),
         PeerMsg::PullRequest { round, rows } => encode_pull_request(*round, rows),
         PeerMsg::PullReply { round, rows } => encode_pull_reply(*round, rows),
         PeerMsg::Deny { message } => encode_peer_deny(message),
@@ -482,6 +630,7 @@ pub fn decode_peer_c(buf: &[u8], rc: &RowCodec<'_>) -> Result<PeerMsg> {
             }
             PeerMsg::Hello {
                 worker: r.u32()?,
+                incarnation: r.u32()?,
                 listen: r.string()?,
             }
         }
@@ -525,7 +674,8 @@ pub fn encode_to_worker(msg: &ToWorker) -> Vec<u8> {
             config_toml,
             worker,
             procs,
-        } => encode_init(config_toml, *worker, *procs),
+            resume,
+        } => encode_init(config_toml, *worker, *procs, resume),
         ToWorker::HalfStep { round } => encode_half_step(*round),
         ToWorker::AsyncRound { round, stale } => encode_async_round(*round, stale),
         ToWorker::Aggregate {
@@ -565,6 +715,7 @@ pub fn encode_to_worker(msg: &ToWorker) -> Vec<u8> {
             put_routes(&mut w, routes);
             w.into_bytes()
         }
+        ToWorker::GetState { round } => encode_get_state(*round),
         ToWorker::Shutdown => encode_shutdown(),
     }
 }
@@ -582,10 +733,12 @@ pub fn decode_to_worker(buf: &[u8]) -> Result<ToWorker> {
             let worker = r.u32()?;
             let procs = r.u32()?;
             let config_toml = r.string()?;
+            let resume = read_resume(&mut r)?;
             ToWorker::Init {
                 config_toml,
                 worker,
                 procs,
+                resume,
             }
         }
         tag::HALF_STEP => ToWorker::HalfStep { round: r.u64()? },
@@ -632,6 +785,7 @@ pub fn decode_to_worker(buf: &[u8]) -> Result<ToWorker> {
                 routes,
             }
         }
+        tag::GET_STATE => ToWorker::GetState { round: r.u64()? },
         tag::SHUTDOWN => ToWorker::Shutdown,
         other => bail!("wire: unknown coordinator message tag {other:#04x}"),
     };
@@ -652,8 +806,15 @@ pub fn encode_from_worker(msg: &FromWorker) -> Vec<u8> {
             byz_seen,
             received,
             peer_bytes,
+            retries,
             params,
-        } => encode_round_done(*round, byz_seen, received, *peer_bytes, params),
+        } => encode_round_done(*round, byz_seen, received, *peer_bytes, *retries, params),
+        FromWorker::State {
+            round,
+            params,
+            momentum,
+            carried,
+        } => encode_state(*round, params, momentum, carried),
         FromWorker::Failed { message } => encode_failed(message),
     }
 }
@@ -688,7 +849,14 @@ pub fn decode_from_worker_c(buf: &[u8], rc: &RowCodec<'_>) -> Result<FromWorker>
             byz_seen: r.u32s()?,
             received: r.u32s()?,
             peer_bytes: r.u64()?,
+            retries: r.u32()?,
             params: r.f32_rows()?,
+        },
+        tag::STATE => FromWorker::State {
+            round: r.u64()?,
+            params: r.f32_rows()?,
+            momentum: r.f32_rows()?,
+            carried: r.opt_f32_rows()?,
         },
         tag::FAILED => FromWorker::Failed {
             message: r.string()?,
@@ -716,8 +884,22 @@ mod tests {
                 config_toml: "task = \"tiny\"".into(),
                 worker: 1,
                 procs: 3,
+                resume: WireResume::default(),
+            },
+            ToWorker::Init {
+                config_toml: "task = \"tiny\"".into(),
+                worker: 0,
+                procs: 2,
+                resume: WireResume {
+                    round: 17,
+                    wire_ref: vec![0.5, -1.25],
+                    params: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+                    momentum: vec![vec![0.1, 0.2], vec![-0.0, 0.4]],
+                    carried: vec![None, Some(vec![9.0, 8.0])],
+                },
             },
             ToWorker::HalfStep { round: 42 },
+            ToWorker::GetState { round: 42 },
             ToWorker::AsyncRound {
                 round: 42,
                 stale: vec![0, 3, 1, 0],
@@ -782,7 +964,14 @@ mod tests {
                 byz_seen: vec![0, 2],
                 received: vec![6, 6],
                 peer_bytes: 12345,
+                retries: 2,
                 params: vec![vec![9.0f32, 8.0], vec![7.0, 6.0]],
+            },
+            FromWorker::State {
+                round: 12,
+                params: vec![vec![9.0f32, 8.0], vec![7.0, 6.0]],
+                momentum: vec![vec![0.5f32, 0.0], vec![-1.0, 2.0]],
+                carried: vec![Some(vec![1.0, -1.0]), None],
             },
             FromWorker::Failed {
                 message: "boom".into(),
@@ -799,6 +988,7 @@ mod tests {
         let msgs = [
             PeerMsg::Hello {
                 worker: 2,
+                incarnation: 3,
                 listen: "unix:/tmp/w2.sock".into(),
             },
             PeerMsg::PullRequest {
@@ -821,10 +1011,40 @@ mod tests {
 
     #[test]
     fn peer_hello_version_mismatch_detected() {
-        let mut buf = encode_peer_hello(1, "unix:/x");
+        let mut buf = encode_peer_hello(1, 0, "unix:/x");
         buf[1] ^= 0x10;
         let err = decode_peer(&buf).unwrap_err().to_string();
         assert!(err.contains("version mismatch"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_resume_counts_bounded() {
+        // an absurd delta-reference count in Init must not allocate: the
+        // count is bounds-checked against the remaining payload. A fresh
+        // resume payload is the 40-byte tail [round u64][ref n u32]
+        // [params rows,d][momentum rows,d][carried n u32][present rows,d],
+        // so the ref count sits at tail_start + 8.
+        let mut corrupt = encode_init("task = \"tiny\"", 0, 1, &WireResume::default());
+        let tail = corrupt.len() - 40;
+        corrupt[tail + 8..tail + 12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_to_worker(&corrupt).unwrap_err().to_string();
+        assert!(err.contains("resume reference"), "{err}");
+
+        // a flags/row-count mismatch in the sparse carried set is named:
+        // flip the second presence flag on, so the flags claim 2 rows
+        // while the block carries 1. The carried set is the frame tail
+        // [n u32=2][flag][flag][rows=1][d=2][2·f32], putting the second
+        // flag 17 bytes from the end.
+        let res = WireResume {
+            carried: vec![Some(vec![1.0f32, 2.0]), None],
+            ..WireResume::default()
+        };
+        let mut buf = encode_init("task = \"tiny\"", 0, 1, &res);
+        let flag2 = buf.len() - 17;
+        assert_eq!(buf[flag2], 0);
+        buf[flag2] = 1;
+        let err = decode_to_worker(&buf).unwrap_err().to_string();
+        assert!(err.contains("flags mark 2 present"), "{err}");
     }
 
     #[test]
@@ -900,7 +1120,7 @@ mod tests {
 
     #[test]
     fn version_mismatch_detected() {
-        let mut buf = encode_init("x", 0, 1);
+        let mut buf = encode_init("x", 0, 1, &WireResume::default());
         buf[1] ^= 0x40; // corrupt the version field
         assert!(decode_to_worker(&buf).is_err());
     }

@@ -21,6 +21,11 @@
 //! mid-write (a reply larger than the kernel buffer, aimed at a
 //! coordinator that already gave up on the round) is unblocked and
 //! observes EOF instead of deadlocking the reap.
+//!
+//! Transient faults are absorbed by [`RetryPolicy`]: a bounded,
+//! configuration-driven retry schedule whose decisions never read a
+//! clock, so what a run computes is identical whether or not a dial or
+//! fetch had to be retried along the way.
 
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -28,6 +33,66 @@ use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
+
+/// Deterministic bounded-retry schedule for transient transport faults
+/// (refused dials, resets, timed-out reads on a supervised socket).
+///
+/// The decision path reads no clocks: the attempt budget and the
+/// backoff schedule come from `[recovery]` configuration, so whether a
+/// retry happens — and which error finally surfaces — depends only on
+/// how many times the operation failed, never on elapsed wall time.
+/// Sleeping between attempts is allowed (it changes *when* things
+/// happen, not *what* happens); reading time to decide is not.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total tries, including the first. Values below 1 behave as 1, so
+    /// a zeroed policy still runs the operation exactly once.
+    pub attempts: usize,
+    /// Base backoff: try `k+1` follows failed try `k` (0-based) after
+    /// `backoff_ms · 2^k` milliseconds (exponent capped, saturating).
+    pub backoff_ms: u64,
+}
+
+impl RetryPolicy {
+    /// A single try with no waiting — the pre-recovery behavior, used
+    /// where a higher layer (supervised restart) owns fault handling.
+    pub fn once() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 1,
+            backoff_ms: 0,
+        }
+    }
+
+    /// The pause after failed attempt `attempt` (0-based).
+    pub fn backoff(&self, attempt: usize) -> std::time::Duration {
+        let factor = 1u64 << attempt.min(16);
+        std::time::Duration::from_millis(self.backoff_ms.saturating_mul(factor))
+    }
+
+    /// Run `op` (which receives the 0-based attempt index) until it
+    /// succeeds or the budget is spent, sleeping the backoff between
+    /// tries. On exhaustion the *last* error surfaces, wrapped with
+    /// `what` and the attempt count so the failure names what was being
+    /// retried and how hard.
+    pub fn run<T>(&self, what: &str, mut op: impl FnMut(usize) -> Result<T>) -> Result<T> {
+        let budget = self.attempts.max(1);
+        let mut attempt = 0;
+        loop {
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    attempt += 1;
+                    if attempt >= budget {
+                        return Err(
+                            e.context(format!("{what}: giving up after {budget} attempt(s)"))
+                        );
+                    }
+                    std::thread::sleep(self.backoff(attempt - 1));
+                }
+            }
+        }
+    }
+}
 
 /// One frame in, one frame out, with byte accounting.
 pub trait Transport: Send {
@@ -463,6 +528,70 @@ mod tests {
         server.join().unwrap();
         assert!(!path.exists(), "listener drop removes the socket file");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retry_policy_schedule_is_deterministic() {
+        let p = RetryPolicy {
+            attempts: 3,
+            backoff_ms: 1,
+        };
+        assert_eq!(p.backoff(0), std::time::Duration::from_millis(1));
+        assert_eq!(p.backoff(1), std::time::Duration::from_millis(2));
+        assert_eq!(p.backoff(5), std::time::Duration::from_millis(32));
+        // exponent cap + saturation: absurd attempt counts never overflow
+        let big = RetryPolicy {
+            attempts: 3,
+            backoff_ms: u64::MAX,
+        };
+        assert_eq!(big.backoff(400), big.backoff(16));
+        assert_eq!(RetryPolicy::once().backoff(9), std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn retry_policy_budget_and_final_error() {
+        let p = RetryPolicy {
+            attempts: 3,
+            backoff_ms: 0,
+        };
+        // succeeds on the final allowed attempt
+        let mut calls = 0;
+        let out = p
+            .run("op", |attempt| {
+                calls += 1;
+                if attempt < 2 {
+                    bail!("transient")
+                }
+                Ok(attempt)
+            })
+            .unwrap();
+        assert_eq!((out, calls), (2, 3));
+
+        // exhaustion surfaces the last error, naming the op + budget
+        let err: anyhow::Error = p
+            .run("pull from peer 3 (round 7)", |_| -> Result<()> {
+                bail!("connection refused")
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("pull from peer 3 (round 7): giving up after 3 attempt(s)"),
+            "{msg}"
+        );
+        assert!(msg.contains("connection refused"), "{msg}");
+
+        // a zeroed budget still tries exactly once
+        let mut tries = 0;
+        let r: Result<()> = RetryPolicy {
+            attempts: 0,
+            backoff_ms: 0,
+        }
+        .run("z", |_| {
+            tries += 1;
+            bail!("nope")
+        });
+        assert!(format!("{:#}", r.unwrap_err()).contains("after 1 attempt(s)"));
+        assert_eq!(tries, 1);
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! Durable-checkpoint acceptance pins: resume-at-round-k must replay
+//! the remaining rounds **bit-for-bit** against the straight-through
+//! run on every trajectory ledger, across the (transport × procs ×
+//! compression) grid plus the virtual sparse backend. Only the two
+//! reporting-only columns — `wall_secs` and `checkpoint_bytes_per_round`
+//! — are excluded from the equality. A corrupt checkpoint file must
+//! fail resume with a named error, never a hang or a garbage run.
+//!
+//! The mid-run boundary state is obtained honestly: a truncated twin of
+//! the config (same physics, `rounds = k`, checkpointing on) runs to
+//! completion, and the full config is then grafted onto its final
+//! checkpoint — by determinism the truncated run's boundary state IS
+//! the straight-through run's state at round k.
+
+use rpel::config::file::to_toml_str;
+use rpel::config::{presets, Compression, ExperimentConfig, Topology, TransportKind};
+use rpel::coordinator::checkpoint::{
+    decode_checkpoint, encode_checkpoint, fnv1a64, read_checkpoint, write_checkpoint,
+    BoundaryState, CHECKPOINT_VERSION,
+};
+use rpel::coordinator::Trainer;
+use rpel::data::TaskKind;
+use rpel::experiments;
+use rpel::metrics::History;
+use std::path::PathBuf;
+
+fn enable_worker_bin() {
+    rpel::coordinator::proc::set_worker_bin(env!("CARGO_BIN_EXE_rpel"));
+}
+
+fn base_cfg(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(TaskKind::Tiny);
+    cfg.name = name.into();
+    cfg.n = 10;
+    cfg.b = 2;
+    cfg.topology = Topology::Epidemic { s: 5 };
+    cfg.bhat = Some(2);
+    cfg.rounds = 6;
+    cfg.batch = 8;
+    cfg.samples_per_node = 32;
+    cfg.test_samples = 64;
+    cfg.eval_every = 3;
+    cfg.threads = 1;
+    cfg
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rpel-ckpt-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The pin, for one grid point: straight-through vs checkpoint-at-3 +
+/// resume. `cfg` must NOT have checkpointing on (the reference run and
+/// the resumed tail both run checkpoint-free).
+fn resume_equals_straight_through(cfg: &ExperimentConfig, tag: &str) {
+    const CUT: usize = 3;
+    let dir = scratch_dir(tag);
+
+    let reference = Trainer::from_config(cfg)
+        .unwrap_or_else(|e| panic!("{tag}: trainer builds: {e:#}"))
+        .run()
+        .unwrap_or_else(|e| panic!("{tag}: reference run: {e:#}"));
+
+    // truncated twin: identical physics for rounds 0..CUT, with a
+    // durable checkpoint at every boundary — the last one lands at CUT
+    let mut partial = cfg.clone();
+    partial.rounds = CUT;
+    partial.recovery.checkpoint_dir = dir.to_str().unwrap().to_string();
+    partial.recovery.checkpoint_every = 1;
+    let partial_hist = Trainer::from_config(&partial).unwrap().run().unwrap();
+    assert!(
+        partial_hist.checkpoint_bytes_per_round.iter().all(|&b| b > 0),
+        "{tag}: every boundary must have written a checkpoint"
+    );
+
+    // graft the full-run config onto the boundary state and resume
+    let saved = read_checkpoint(&dir).unwrap();
+    assert_eq!(saved.state.round, CUT as u64, "{tag}");
+    write_checkpoint(&dir, &to_toml_str(cfg), &saved.state, &saved.hist).unwrap();
+    let resumed = experiments::resume_training(dir.to_str().unwrap())
+        .unwrap_or_else(|e| panic!("{tag}: resume: {e:#}"));
+
+    let mut a = reference.clone();
+    let mut b = resumed;
+    a.wall_secs = 0.0;
+    b.wall_secs = 0.0;
+    a.checkpoint_bytes_per_round.clear();
+    b.checkpoint_bytes_per_round.clear();
+    assert_eq!(a, b, "{tag}: resumed trajectory must equal straight-through");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Golden pin of the checkpoint file envelope: magic, version, LE
+/// payload length, and the FNV-1a-64 checksum over the payload — plus
+/// the payload's leading bytes (the length-prefixed embedded config).
+/// The encoding must also be byte-deterministic.
+#[test]
+fn golden_checkpoint_envelope() {
+    let state = BoundaryState {
+        round: 1,
+        wire_ref: vec![0.5f32],
+        params: vec![vec![1.0f32]],
+        momentum: vec![vec![-1.0f32]],
+        carried: vec![None],
+        vclock: None,
+    };
+    let hist = History::new("g", 1);
+    // encode_checkpoint embeds the config string verbatim — the envelope
+    // is checkable without a parseable config
+    let bytes = encode_checkpoint("x", &state, &hist);
+    assert_eq!(&bytes[..8], b"RPELCKPT");
+    assert_eq!(bytes[8..12], CHECKPOINT_VERSION.to_le_bytes());
+    let payload = &bytes[28..];
+    assert_eq!(bytes[12..20], (payload.len() as u64).to_le_bytes());
+    assert_eq!(bytes[20..28], fnv1a64(payload).to_le_bytes());
+    // payload leads with the len-prefixed config string, then the round
+    assert_eq!(&payload[..5], &[0x01, 0x00, 0x00, 0x00, b'x']);
+    assert_eq!(payload[5..13], 1u64.to_le_bytes());
+    assert_eq!(bytes, encode_checkpoint("x", &state, &hist));
+}
+
+/// Forall-style round-trip over the shape grid: model width × carried
+/// pattern × vclock presence, all at the embedded config's honest
+/// count. Decode must reproduce every field exactly.
+#[test]
+fn checkpoint_roundtrips_across_shape_grid() {
+    let cfg = presets::quickstart_config();
+    let toml = to_toml_str(&cfg);
+    let h = cfg.honest();
+    for d in [1usize, 3, 8] {
+        for carried_mode in 0..3 {
+            for vclock_on in [false, true] {
+                let state = BoundaryState {
+                    round: 2,
+                    wire_ref: (0..d).map(|j| j as f32 * 0.25).collect(),
+                    params: (0..h).map(|i| vec![i as f32; d]).collect(),
+                    momentum: (0..h).map(|i| vec![-(i as f32) * 0.5; d]).collect(),
+                    carried: (0..h)
+                        .map(|i| match carried_mode {
+                            0 => None,
+                            1 => Some(vec![7.0f32; d]),
+                            _ => (i % 2 == 0).then(|| vec![i as f32 * 0.1; d]),
+                        })
+                        .collect(),
+                    vclock: vclock_on.then(|| {
+                        ((0..h as u64).collect(), (0..h as u64).map(|x| x * 2).collect())
+                    }),
+                };
+                let mut hist = History::new("grid", 9);
+                hist.train_loss = vec![0.5; 2];
+                hist.peer_retries_per_round = vec![1, 0];
+                let bytes = encode_checkpoint(&toml, &state, &hist);
+                let back = decode_checkpoint(&bytes)
+                    .unwrap_or_else(|e| panic!("d={d} mode={carried_mode}: {e:#}"));
+                assert_eq!(back.state, state, "d={d} mode={carried_mode}");
+                assert_eq!(back.hist, hist);
+                assert_eq!(back.cfg, cfg);
+            }
+        }
+    }
+}
+
+#[test]
+fn resume_matches_in_process_none() {
+    let mut cfg = base_cfg("ckpt_inproc_none");
+    cfg.shards = 2;
+    resume_equals_straight_through(&cfg, "inproc-none");
+}
+
+#[test]
+fn resume_matches_in_process_q8() {
+    let mut cfg = base_cfg("ckpt_inproc_q8");
+    cfg.shards = 2;
+    cfg.compression = Compression::Q8;
+    resume_equals_straight_through(&cfg, "inproc-q8");
+}
+
+#[test]
+fn resume_matches_pipe_procs2_none() {
+    enable_worker_bin();
+    let mut cfg = base_cfg("ckpt_pipe_none");
+    cfg.procs = 2;
+    resume_equals_straight_through(&cfg, "pipe-none");
+}
+
+#[test]
+fn resume_matches_pipe_procs2_q8() {
+    enable_worker_bin();
+    let mut cfg = base_cfg("ckpt_pipe_q8");
+    cfg.procs = 2;
+    cfg.compression = Compression::Q8;
+    resume_equals_straight_through(&cfg, "pipe-q8");
+}
+
+#[test]
+fn resume_matches_socket_procs2_none() {
+    enable_worker_bin();
+    let mut cfg = base_cfg("ckpt_socket_none");
+    cfg.procs = 2;
+    cfg.transport = TransportKind::Socket;
+    resume_equals_straight_through(&cfg, "socket-none");
+}
+
+#[test]
+fn resume_matches_socket_procs2_q8() {
+    enable_worker_bin();
+    let mut cfg = base_cfg("ckpt_socket_q8");
+    cfg.procs = 2;
+    cfg.transport = TransportKind::Socket;
+    cfg.compression = Compression::Q8;
+    resume_equals_straight_through(&cfg, "socket-q8");
+}
+
+#[test]
+fn resume_matches_virtual_backend() {
+    let mut cfg = base_cfg("ckpt_virtual");
+    cfg.virtual_nodes = true;
+    cfg.participation = 0.8;
+    resume_equals_straight_through(&cfg, "virtual");
+}
+
+/// File-level fault coverage through the real CLI entry path: a
+/// flipped payload byte must fail `resume_training` with the checksum
+/// named; a truncated file with the length named. Never a hang, never
+/// a silently wrong run.
+#[test]
+fn corrupt_checkpoint_fails_resume_with_named_error() {
+    let dir = scratch_dir("corrupt");
+    let mut cfg = base_cfg("ckpt_corrupt");
+    cfg.shards = 2;
+    cfg.rounds = 2;
+    cfg.recovery.checkpoint_dir = dir.to_str().unwrap().to_string();
+    cfg.recovery.checkpoint_every = 1;
+    Trainer::from_config(&cfg).unwrap().run().unwrap();
+
+    let path = dir.join("checkpoint.bin");
+    let clean = std::fs::read(&path).unwrap();
+
+    let mut flipped = clean.clone();
+    *flipped.last_mut().unwrap() ^= 0x01;
+    std::fs::write(&path, &flipped).unwrap();
+    let err = format!(
+        "{:#}",
+        experiments::resume_training(dir.to_str().unwrap()).unwrap_err()
+    );
+    assert!(err.contains("checksum mismatch"), "{err}");
+
+    std::fs::write(&path, &clean[..clean.len() - 1]).unwrap();
+    let err = format!(
+        "{:#}",
+        experiments::resume_training(dir.to_str().unwrap()).unwrap_err()
+    );
+    assert!(err.contains("does not match"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -292,7 +292,7 @@ fn socket_wire_ledger_matches_routing_table_recomputation() {
             expect_in +=
                 4 + proto::encode_snapshot(round as u64, &vec![0.0f64; len], &rows).len();
             expect_in += 4
-                + proto::encode_round_done(round as u64, &vec![0; len], &vec![0; len], 0, &rows)
+                + proto::encode_round_done(round as u64, &vec![0; len], &vec![0; len], 0, 0, &rows)
                     .len();
 
             // peer-served: per owner, the sorted unique off-shard honest
@@ -321,7 +321,7 @@ fn socket_wire_ledger_matches_routing_table_recomputation() {
                 rows_idx.sort_unstable();
                 rows_idx.dedup();
                 if connected.insert((w, owner)) {
-                    expect_peer += 4 + proto::encode_peer_hello(w as u32, "").len();
+                    expect_peer += 4 + proto::encode_peer_hello(w as u32, 0, "").len();
                 }
                 expect_peer += 4 + proto::encode_pull_request(round as u64, &rows_idx).len();
                 let reply_rows: Vec<Vec<f32>> = vec![zero_row.clone(); rows_idx.len()];

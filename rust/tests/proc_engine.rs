@@ -96,6 +96,107 @@ fn killed_socket_worker_surfaces_actionable_error_not_a_hang() {
     drop(t); // teardown with a corpse in the pool must not deadlock
 }
 
+/// Tentpole part 2 end-to-end (pipe transport): a shard worker killed
+/// mid-run is respawned by the supervisor at the last completed round
+/// boundary and the failed round is re-driven. The finished trajectory
+/// must be bit-identical to the unfaulted run on every ledger except
+/// the restart counter itself (and wall time, which is reporting-only).
+#[test]
+fn supervised_restart_replays_trajectory_bit_identically() {
+    enable_worker_bin();
+    let mut cfg = proc_cfg();
+    cfg.name = "proc_recovery_pipe".into();
+    cfg.rounds = 6;
+    let reference = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert!(
+        reference.worker_restarts_per_round.iter().all(|&r| r == 0),
+        "unfaulted run must consume no restarts"
+    );
+
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.chaos_kill_at(3, 1);
+    let faulted = t.run().expect("supervised run recovers from the kill");
+    assert_eq!(
+        faulted.worker_restarts_per_round[3], 1,
+        "exactly one respawn, charged to the faulted round"
+    );
+
+    let mut a = reference.clone();
+    let mut b = faulted;
+    a.wall_secs = 0.0;
+    b.wall_secs = 0.0;
+    a.worker_restarts_per_round.clear();
+    b.worker_restarts_per_round.clear();
+    assert_eq!(a, b, "recovered trajectory must match the unfaulted run");
+}
+
+/// Same contract over sockets, where a respawn also moves the worker's
+/// peer listener: the supervisor re-broadcasts the address book, the
+/// survivor rebuilds its fetch client, and the re-driven round's pulls
+/// land on the fresh incarnation.
+#[test]
+fn supervised_socket_restart_replays_trajectory_bit_identically() {
+    enable_worker_bin();
+    let mut cfg = proc_cfg();
+    cfg.name = "proc_recovery_socket".into();
+    cfg.transport = TransportKind::Socket;
+    cfg.rounds = 6;
+    let reference = Trainer::from_config(&cfg).unwrap().run().unwrap();
+
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.chaos_kill_at(2, 0);
+    let faulted = t.run().expect("supervised socket run recovers from the kill");
+    assert_eq!(faulted.worker_restarts_per_round[2], 1);
+
+    let mut a = reference.clone();
+    let mut b = faulted;
+    a.wall_secs = 0.0;
+    b.wall_secs = 0.0;
+    a.worker_restarts_per_round.clear();
+    b.worker_restarts_per_round.clear();
+    assert_eq!(a, b, "recovered trajectory must match the unfaulted run");
+}
+
+/// Restart budget exhaustion: the supervisor declines the respawn and
+/// the run fails with the pre-recovery named error — never a hang.
+#[test]
+fn restart_budget_exhaustion_surfaces_named_error_not_a_hang() {
+    enable_worker_bin();
+    let mut cfg = proc_cfg();
+    cfg.name = "proc_budget".into();
+    cfg.rounds = 10;
+    cfg.recovery.max_worker_restarts = 1;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.chaos_kill_at(2, 1);
+    t.chaos_kill_at(4, 1); // second kill exceeds the budget of 1
+    let err = t.run().expect_err("second kill must exhaust the budget");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("shard worker 1"),
+        "budget exhaustion should surface the named worker error: {msg}"
+    );
+}
+
+/// `max_worker_restarts = 0` pins the pre-recovery contract inside the
+/// full run loop: no supervision, no state-sync traffic, and the first
+/// worker death is fatal with the named error.
+#[test]
+fn unsupervised_run_fails_fast_on_worker_death() {
+    enable_worker_bin();
+    let mut cfg = proc_cfg();
+    cfg.name = "proc_unsupervised".into();
+    cfg.rounds = 10;
+    cfg.recovery.max_worker_restarts = 0;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.chaos_kill_at(1, 0);
+    let err = t.run().expect_err("unsupervised worker death must be fatal");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("shard worker 0"),
+        "error should name the dead worker: {msg}"
+    );
+}
+
 #[test]
 fn socket_trainer_tears_down_cleanly_mid_run() {
     // Drop with live workers (socket transport): Shutdown frames, a
@@ -152,7 +253,7 @@ fn real_socket_peer_pull_to_killed_worker_returns_failed() {
         let stream = listener.accept().unwrap();
         let mut t = SocketTransport::from_stream(stream).unwrap();
         match proto::decode_peer(&t.recv().unwrap()).unwrap() {
-            PeerMsg::Hello { worker, listen } => {
+            PeerMsg::Hello { worker, listen, .. } => {
                 let w = worker as usize;
                 listens[w] = listen;
                 conns[w] = Some(t);
@@ -163,8 +264,9 @@ fn real_socket_peer_pull_to_killed_worker_returns_failed() {
     let mut w0 = conns[0].take().unwrap();
     let mut w1 = conns[1].take().unwrap();
 
-    w0.send(&proto::encode_init(CFG, 0, 2)).unwrap();
-    w1.send(&proto::encode_init(CFG, 1, 2)).unwrap();
+    let fresh = proto::WireResume::default();
+    w0.send(&proto::encode_init(CFG, 0, 2, &fresh)).unwrap();
+    w1.send(&proto::encode_init(CFG, 1, 2, &fresh)).unwrap();
     let init_ok = |t: &mut SocketTransport| match proto::decode_from_worker(&t.recv().unwrap())
         .unwrap()
     {
@@ -323,7 +425,12 @@ fn worker_reports_bad_config_instead_of_dying_silently() {
     let mut stdin = child.stdin.take().unwrap();
     wire::write_frame(
         &mut stdin,
-        &proto::encode_init("task = \"not_a_task\"", 0, 2),
+        &proto::encode_init(
+            "task = \"not_a_task\"",
+            0,
+            2,
+            &proto::WireResume::default(),
+        ),
     )
     .unwrap();
     stdin.flush().unwrap();

@@ -35,7 +35,7 @@ use rpel::testkit::scenario::Scenario;
 use rpel::util::rng::{stream_tag, Rng};
 use rpel::wire::codec::RowCodec;
 use rpel::wire::proto::PeerEntry;
-use rpel::wire::transport::{Listener, SockAddr};
+use rpel::wire::transport::{Listener, RetryPolicy, SockAddr};
 use std::path::Path;
 
 fn base_cfg() -> ExperimentConfig {
@@ -287,7 +287,8 @@ fn reset_conns_rehandshakes_and_replays_the_hello_bytes_exactly() {
     let server = RowServer::spawn(listener, 1, 5, 2).unwrap();
     server.publish(1, &[vec![1.0f32, 2.0], vec![3.0, 4.0]], None);
 
-    let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
+    let mut client =
+        PeerClient::new(0, 0, RetryPolicy::once(), &two_worker_book(&addr)).unwrap();
     let (rows, d_first) = client.fetch(1, 1, &[5, 6], 2, &RowCodec::none()).unwrap();
     assert_eq!(rows, vec![vec![1.0f32, 2.0], vec![3.0, 4.0]]);
 
@@ -325,7 +326,8 @@ fn restarted_worker_serves_pulls_again_after_reset_conns() {
     let server = RowServer::spawn(listener, 1, 5, 2).unwrap();
     server.publish(1, &[vec![1.0f32], vec![2.0]], None);
 
-    let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
+    let mut client =
+        PeerClient::new(0, 0, RetryPolicy::once(), &two_worker_book(&addr)).unwrap();
     let (rows, _) = client.fetch(1, 1, &[5], 1, &RowCodec::none()).unwrap();
     assert_eq!(rows, vec![vec![1.0f32]]);
 

@@ -22,7 +22,9 @@ use rpel::testkit::chaos::{ChaosPlan, ChaosStream};
 use rpel::wire;
 use rpel::wire::codec::RowCodec;
 use rpel::wire::proto::{self, PeerEntry, PeerMsg};
-use rpel::wire::transport::{Listener, SockAddr, SocketStream, SocketTransport, Transport};
+use rpel::wire::transport::{
+    Listener, RetryPolicy, SockAddr, SocketStream, SocketTransport, Transport,
+};
 use std::io::Write;
 use std::time::Duration;
 
@@ -62,7 +64,7 @@ fn tcp_pair() -> (SocketStream, SocketStream) {
 
 #[test]
 fn protocol_frames_survive_split_reads_and_short_writes_on_pipes() {
-    let original = proto::encode_init("task = \"tiny\"", 1, 2);
+    let original = proto::encode_init("task = \"tiny\"", 1, 2, &proto::WireResume::default());
     let mut stream_bytes = Vec::new();
     {
         let mut chaotic = ChaosStream::new(&mut stream_bytes, 11).short_writes();
@@ -114,7 +116,11 @@ fn peer_dying_mid_frame_on_socket_is_an_error_not_a_hang() {
 fn worker_loop_surfaces_mid_frame_eof_after_handshake() {
     // script: a valid Init frame, then a frame cut off mid-body
     let mut input = Vec::new();
-    wire::write_frame(&mut input, &proto::encode_init("task = \"tiny\"", 0, 2)).unwrap();
+    wire::write_frame(
+        &mut input,
+        &proto::encode_init("task = \"tiny\"", 0, 2, &proto::WireResume::default()),
+    )
+    .unwrap();
     input.extend_from_slice(&50u32.to_le_bytes());
     input.extend_from_slice(&[0u8; 10]); // 40 bytes short
     let mut output = Vec::new();
@@ -136,7 +142,11 @@ fn worker_loop_survives_chaotic_byte_stream() {
     // the same script delivered through split reads must behave
     // identically (framing is below the protocol, faults and all)
     let mut input = Vec::new();
-    wire::write_frame(&mut input, &proto::encode_init("task = \"tiny\"", 0, 2)).unwrap();
+    wire::write_frame(
+        &mut input,
+        &proto::encode_init("task = \"tiny\"", 0, 2, &proto::WireResume::default()),
+    )
+    .unwrap();
     wire::write_frame(&mut input, &proto::encode_shutdown()).unwrap();
     let mut output = Vec::new();
     run_worker(
@@ -286,7 +296,8 @@ fn peer_killed_mid_pull_is_actionable_never_a_hang() {
         stream.flush().unwrap();
         drop(stream); // killed mid-reply
     });
-    let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
+    let mut client =
+        PeerClient::new(0, 0, RetryPolicy::once(), &two_worker_book(&addr)).unwrap();
     let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3, &RowCodec::none()).unwrap_err());
     assert!(err.contains("peer worker 1"), "{err}");
     assert!(err.contains("round 7"), "{err}");
@@ -303,7 +314,8 @@ fn stale_pull_reply_is_rejected() {
         t.send(&proto::encode_pull_reply(6, &[vec![0.0f32; 3], vec![0.0f32; 3]]))
             .unwrap();
     });
-    let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
+    let mut client =
+        PeerClient::new(0, 0, RetryPolicy::once(), &two_worker_book(&addr)).unwrap();
     let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3, &RowCodec::none()).unwrap_err());
     assert!(err.contains("stale PullReply"), "{err}");
     assert!(err.contains("round 7"), "{err}");
@@ -319,9 +331,81 @@ fn malformed_pull_reply_is_rejected() {
         t.send(&proto::encode_pull_reply(7, &[vec![0.0f32; 2], vec![0.0f32; 2]]))
             .unwrap();
     });
-    let mut client = PeerClient::new(0, &two_worker_book(&addr)).unwrap();
+    let mut client =
+        PeerClient::new(0, 0, RetryPolicy::once(), &two_worker_book(&addr)).unwrap();
     let err = format!("{:#}", client.fetch(7, 1, &[5, 6], 3, &RowCodec::none()).unwrap_err());
     assert!(err.contains("malformed PullReply"), "{err}");
+}
+
+/// The retry satellite, success path: the first pull dies mid-reply,
+/// the policy re-dials from scratch, and the second attempt is served —
+/// the caller sees clean rows plus one consumed retry in the ledger.
+#[test]
+fn pull_retry_redials_and_succeeds_within_budget() {
+    let listener = Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into())).unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        // attempt 1: header promises a reply, the body never comes
+        let mut s1 = listener.accept().unwrap();
+        s1.set_nonblocking(false).unwrap();
+        let _hello = wire::read_frame(&mut s1).unwrap();
+        let _request = wire::read_frame(&mut s1).unwrap();
+        s1.write_all(&1000u32.to_le_bytes()).unwrap();
+        s1.flush().unwrap();
+        drop(s1);
+        // attempt 2: the re-dialed connection is served correctly
+        let stream = listener.accept().unwrap();
+        stream.set_nonblocking(false).unwrap();
+        let mut t = SocketTransport::from_stream(stream).unwrap();
+        let _hello = t.recv().unwrap();
+        let _request = t.recv().unwrap();
+        t.send(&proto::encode_pull_reply(7, &[vec![1.5f32; 3], vec![-2.5f32; 3]]))
+            .unwrap();
+    });
+    let retry = RetryPolicy {
+        attempts: 3,
+        backoff_ms: 0,
+    };
+    let mut client = PeerClient::new(0, 0, retry, &two_worker_book(&addr)).unwrap();
+    let (rows, bytes) = client.fetch(7, 1, &[5, 6], 3, &RowCodec::none()).unwrap();
+    assert_eq!(rows, vec![vec![1.5f32; 3], vec![-2.5f32; 3]]);
+    assert!(bytes > 0);
+    assert_eq!(client.take_retries(), 1, "exactly one retry consumed");
+    assert_eq!(client.take_retries(), 0, "take_retries drains the counter");
+}
+
+/// The retry satellite, exhaustion path: every attempt dies mid-reply;
+/// the surfaced error names the peer, the round, and how hard the
+/// policy tried — and the call returns (never hangs) once the budget
+/// is spent.
+#[test]
+fn pull_retry_budget_exhaustion_names_peer_round_and_attempts() {
+    let listener = Listener::bind(&SockAddr::Tcp("127.0.0.1:0".into())).unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for _ in 0..2 {
+            let mut s = listener.accept().unwrap();
+            s.set_nonblocking(false).unwrap();
+            let _hello = wire::read_frame(&mut s);
+            let _request = wire::read_frame(&mut s);
+            let _ = s.write_all(&1000u32.to_le_bytes());
+            let _ = s.flush();
+            drop(s);
+        }
+    });
+    let retry = RetryPolicy {
+        attempts: 2,
+        backoff_ms: 0,
+    };
+    let mut client = PeerClient::new(0, 0, retry, &two_worker_book(&addr)).unwrap();
+    let err = format!(
+        "{:#}",
+        client.fetch(7, 1, &[5, 6], 3, &RowCodec::none()).unwrap_err()
+    );
+    assert!(err.contains("peer worker 1"), "{err}");
+    assert!(err.contains("round 7"), "{err}");
+    assert!(err.contains("2 attempt"), "should name the spent budget: {err}");
+    assert_eq!(client.take_retries(), 1, "the failed re-dial still counts");
 }
 
 // ---------------------------------------------------------------------------
@@ -330,7 +414,7 @@ fn malformed_pull_reply_is_rejected() {
 
 fn connect_hello(addr: &SockAddr) -> SocketTransport {
     let mut t = SocketTransport::connect(addr).unwrap();
-    t.send(&proto::encode_peer_hello(9, "")).unwrap();
+    t.send(&proto::encode_peer_hello(9, 0, "")).unwrap();
     t
 }
 
@@ -392,7 +476,7 @@ fn row_server_rejects_wrong_version_handshake() {
     let _server = RowServer::spawn(listener, 0, 0, 1).unwrap();
 
     let mut t = SocketTransport::connect(&addr).unwrap();
-    let mut bad_hello = proto::encode_peer_hello(1, "x");
+    let mut bad_hello = proto::encode_peer_hello(1, 0, "x");
     bad_hello[1] ^= 0x7F; // corrupt the version field
     t.send(&bad_hello).unwrap();
     match proto::decode_peer(&t.recv().unwrap()).unwrap() {

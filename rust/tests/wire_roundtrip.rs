@@ -110,20 +110,85 @@ fn round_done_encode_decode_is_identity() {
         let byz: Vec<u32> = (0..n as u32).collect();
         let recv: Vec<u32> = (0..n as u32).map(|x| x * 3 + 1).collect();
         let peer_bytes = n as u64 * 1017;
-        let buf = proto::encode_round_done(9, &byz, &recv, peer_bytes, params);
+        let retries = n as u32 % 5;
+        let buf = proto::encode_round_done(9, &byz, &recv, peer_bytes, retries, params);
         match proto::decode_from_worker(&buf) {
             Ok(FromWorker::RoundDone {
                 round,
                 byz_seen,
                 received,
                 peer_bytes: pb,
+                retries: rt,
                 params: p2,
             }) => {
                 round == 9
                     && byz_seen == byz
                     && received == recv
                     && pb == peer_bytes
+                    && rt == retries
                     && bits32(params) == bits32(&p2)
+            }
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn state_encode_decode_is_identity() {
+    // the recovery drain barrier: params + momentum + sparse carried rows
+    forall(200, 0x57A7E, snapshot_gen(), |(_, rows)| {
+        let momentum: Vec<Vec<f32>> = rows
+            .iter()
+            .map(|r| r.iter().map(|x| -x * 0.5).collect())
+            .collect();
+        let carried: Vec<Option<Vec<f32>>> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (i % 2 == 0).then(|| r.clone()))
+            .collect();
+        let buf = proto::encode_state(13, rows, &momentum, &carried);
+        match proto::decode_from_worker(&buf) {
+            Ok(FromWorker::State {
+                round,
+                params: p2,
+                momentum: m2,
+                carried: c2,
+            }) => {
+                round == 13
+                    && bits32(rows) == bits32(&p2)
+                    && bits32(&momentum) == bits32(&m2)
+                    && carried == c2
+            }
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn init_resume_encode_decode_is_identity() {
+    // a worker Init carrying checkpoint boundary state must round-trip
+    // bit-for-bit — it is the resume path's only channel into a worker
+    forall(200, 0x2E5E, snapshot_gen(), |(_, rows)| {
+        let resume = proto::WireResume {
+            round: 6,
+            wire_ref: rows[0].clone(),
+            params: rows.clone(),
+            momentum: rows.iter().map(|r| r.iter().map(|x| x * 2.0).collect()).collect(),
+            carried: rows.iter().map(|r| Some(r.clone())).collect(),
+        };
+        let buf = proto::encode_init("task = \"tiny\"", 1, 2, &resume);
+        match proto::decode_to_worker(&buf) {
+            Ok(ToWorker::Init {
+                worker: 1,
+                procs: 2,
+                resume: r2,
+                ..
+            }) => {
+                r2.round == resume.round
+                    && bits32(&[r2.wire_ref.clone()]) == bits32(&[resume.wire_ref.clone()])
+                    && bits32(&resume.params) == bits32(&r2.params)
+                    && bits32(&resume.momentum) == bits32(&r2.momentum)
+                    && resume.carried == r2.carried
             }
             _ => false,
         }
@@ -299,7 +364,7 @@ fn golden_aggregate() {
 
 #[test]
 fn golden_round_done() {
-    let expect: [u8; 45] = [
+    let expect: [u8; 49] = [
         0x83, // tag
         5, 0, 0, 0, 0, 0, 0, 0, // round echo = 5
         0x01, 0x00, 0x00, 0x00, // 1 byz count
@@ -307,21 +372,53 @@ fn golden_round_done() {
         0x01, 0x00, 0x00, 0x00, // 1 recv count
         0x06, 0x00, 0x00, 0x00, // received[0] = 6
         7, 0, 0, 0, 0, 0, 0, 0, // peer_bytes = 7
+        0x02, 0x00, 0x00, 0x00, // retries = 2
         0x01, 0x00, 0x00, 0x00, // 1 row
         0x01, 0x00, 0x00, 0x00, // d = 1
         0x00, 0x00, 0x20, 0x40, // f32 2.5
     ];
-    let buf = proto::encode_round_done(5, &[1], &[6], 7, &[vec![2.5f32]]);
+    let buf = proto::encode_round_done(5, &[1], &[6], 7, 2, &[vec![2.5f32]]);
+    assert_eq!(buf, expect);
+}
+
+#[test]
+fn golden_get_state() {
+    let expect: [u8; 9] = [0x08, 4, 0, 0, 0, 0, 0, 0, 0];
+    assert_eq!(proto::encode_get_state(4), expect);
+    assert_eq!(
+        proto::decode_to_worker(&expect).unwrap(),
+        ToWorker::GetState { round: 4 }
+    );
+}
+
+#[test]
+fn golden_state() {
+    // round 4; params = [[0.5]], momentum = [[-1.0]], carried = [None]
+    let expect: [u8; 46] = [
+        0x84, // tag
+        4, 0, 0, 0, 0, 0, 0, 0, // round = 4
+        0x01, 0x00, 0x00, 0x00, // 1 params row
+        0x01, 0x00, 0x00, 0x00, // d = 1
+        0x00, 0x00, 0x00, 0x3F, // f32 0.5
+        0x01, 0x00, 0x00, 0x00, // 1 momentum row
+        0x01, 0x00, 0x00, 0x00, // d = 1
+        0x00, 0x00, 0x80, 0xBF, // f32 -1.0
+        0x01, 0x00, 0x00, 0x00, // 1 carried slot
+        0x00, // slot 0 absent
+        0x00, 0x00, 0x00, 0x00, // 0 present rows
+        0x00, 0x00, 0x00, 0x00, // d = 0 (no rows)
+    ];
+    let buf = proto::encode_state(4, &[vec![0.5f32]], &[vec![-1.0f32]], &[None]);
     assert_eq!(buf, expect);
 }
 
 #[test]
 fn golden_shutdown_and_init_ok() {
     assert_eq!(proto::encode_shutdown(), vec![0x04]);
-    // InitOk: tag, version 4, start=3, len=4, d=10
+    // InitOk: tag, version 5, start=3, len=4, d=10
     let expect: [u8; 29] = [
         0x81, // tag
-        0x04, 0x00, 0x00, 0x00, // protocol version 4
+        0x05, 0x00, 0x00, 0x00, // protocol version 5
         3, 0, 0, 0, 0, 0, 0, 0, // start
         4, 0, 0, 0, 0, 0, 0, 0, // len
         10, 0, 0, 0, 0, 0, 0, 0, // d
@@ -331,18 +428,20 @@ fn golden_shutdown_and_init_ok() {
 
 #[test]
 fn golden_peer_hello() {
-    let expect: [u8; 14] = [
+    let expect: [u8; 18] = [
         0x40, // tag
-        0x04, 0x00, 0x00, 0x00, // protocol version 4
+        0x05, 0x00, 0x00, 0x00, // protocol version 5
         0x01, 0x00, 0x00, 0x00, // worker = 1
+        0x02, 0x00, 0x00, 0x00, // incarnation = 2 (second respawn)
         0x01, 0x00, 0x00, 0x00, // 1-byte address
         b'u',
     ];
-    assert_eq!(proto::encode_peer_hello(1, "u"), expect);
+    assert_eq!(proto::encode_peer_hello(1, 2, "u"), expect);
     assert_eq!(
         proto::decode_peer(&expect).unwrap(),
         PeerMsg::Hello {
             worker: 1,
+            incarnation: 2,
             listen: "u".into()
         }
     );
@@ -647,8 +746,17 @@ fn every_truncation_of_every_message_errors_cleanly() {
         std: vec![0.1, 0.2],
         prev_mean: vec![-0.5, -1.5],
     };
+    let resume = proto::WireResume {
+        round: 3,
+        wire_ref: vec![0.5, -0.5],
+        params: vec![vec![1.0f32, 2.0]],
+        momentum: vec![vec![-1.0f32, -2.0]],
+        carried: vec![Some(vec![0.25f32, 0.75]), None],
+    };
     let to_worker = [
-        proto::encode_init("task = \"tiny\"", 0, 2),
+        proto::encode_init("task = \"tiny\"", 0, 2, &proto::WireResume::default()),
+        proto::encode_init("task = \"tiny\"", 0, 2, &resume),
+        proto::encode_get_state(7),
         proto::encode_half_step(9),
         proto::encode_async_round(9, &[0, 1, 3]),
         proto::encode_aggregate(1, &digest, &[vec![1.0f32, 2.0], vec![3.0, 4.0]]),
@@ -679,7 +787,13 @@ fn every_truncation_of_every_message_errors_cleanly() {
     let from_worker = [
         proto::encode_init_ok(0, 5, 3),
         proto::encode_snapshot(2, &[1.0, 2.0], &[vec![0.5f32], vec![1.5f32]]),
-        proto::encode_round_done(2, &[0, 1], &[5, 5], 99, &[vec![1.0f32], vec![2.0f32]]),
+        proto::encode_round_done(2, &[0, 1], &[5, 5], 99, 4, &[vec![1.0f32], vec![2.0f32]]),
+        proto::encode_state(
+            3,
+            &[vec![1.0f32], vec![2.0f32]],
+            &[vec![-1.0f32], vec![-2.0f32]],
+            &[Some(vec![0.5f32]), None],
+        ),
         proto::encode_failed("boom"),
     ];
     for buf in &from_worker {
@@ -692,7 +806,7 @@ fn every_truncation_of_every_message_errors_cleanly() {
         }
     }
     let peer = [
-        proto::encode_peer_hello(3, "unix:/tmp/w3.sock"),
+        proto::encode_peer_hello(3, 1, "unix:/tmp/w3.sock"),
         proto::encode_pull_request(6, &[1, 2, 3]),
         proto::encode_pull_reply(6, &[vec![1.0f32, 2.0], vec![3.0, 4.0]]),
         proto::encode_peer_deny("nope"),
